@@ -1,0 +1,68 @@
+//! E10 — end-to-end validation: online STDP clustering through the full
+//! stack (Rust coordinator -> PJRT -> JAX column -> Pallas RNL kernel).
+//!
+//! Trains a 64-input, 16-neuron TNN column for a few hundred steps on the
+//! synthetic clustered time-series workload, logging purity convergence
+//! and PJRT latency. Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example clustering`
+
+use catwalk::coordinator::TnnHandle;
+use catwalk::tnn::workload::ClusteredSeries;
+use catwalk::tnn::{purity, GrfEncoder, WorkloadConfig};
+use std::time::Instant;
+
+fn main() -> catwalk::Result<()> {
+    let n = 64;
+    let steps = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(1500);
+    // threshold scales with expected simultaneous response mass (see E8)
+    let theta = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12.0);
+    let handle = TnnHandle::open("artifacts", n, theta, 42)?;
+    println!(
+        "PJRT column up: n={} c={} batch={} t_max={}",
+        handle.n, handle.c, handle.b, handle.t_max
+    );
+
+    let fields = 8;
+    let mut enc = GrfEncoder::new(n / fields, fields, 0.0, 1.0);
+    // keep the volley in the sparse regime the paper's k = 2 assumes
+    // (E8: with ~10% line activity the top-2 clip almost never engages)
+    enc.cutoff = 0.60;
+    let mut series = ClusteredSeries::new(WorkloadConfig {
+        dims: n / fields,
+        seed: 42,
+        ..Default::default()
+    });
+
+    let t0 = Instant::now();
+    let mut final_purity = 0.0;
+    for step in 0..steps {
+        let samples = series.next_batch(handle.b);
+        let volleys: Vec<Vec<f32>> = samples.iter().map(|(_, s)| enc.encode(s)).collect();
+        let results = handle.learn(volleys)?;
+        if step % 25 == 0 || step + 1 == steps {
+            let assignments: Vec<(usize, Option<usize>)> = samples
+                .iter()
+                .zip(&results)
+                .map(|((label, _), r)| (*label, r.winner))
+                .collect();
+            let p = purity(&assignments, 4, handle.c);
+            let fired = results.iter().filter(|r| r.winner.is_some()).count();
+            final_purity = p;
+            println!(
+                "step {step:>4}  purity {:.3}  firing {:.2}  throughput {:.0} volleys/s",
+                p,
+                fired as f64 / handle.b as f64,
+                ((step + 1) * handle.b) as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    println!("\nPJRT metrics:\n{}", handle.metrics.render());
+    println!("final purity after {steps} steps: {final_purity:.3}");
+    assert!(
+        final_purity > 0.6,
+        "clustering should converge (purity {final_purity})"
+    );
+    println!("OK: full L3->L2->L1 stack converges on the clustering workload");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Design-space exploration: sweep all four dendrite designs across
+//! n in {16, 32, 64} in parallel on the thread pool, printing synthesis
+//! and P&R cost per point plus the derived headline ratios.
+//!
+//! Run: `cargo run --release --example dse`
+
+use catwalk::coordinator::dse::{paper_grid, sweep};
+use catwalk::experiments::activity::StimulusConfig;
+use catwalk::neuron::DendriteKind;
+use catwalk::report::{ratio, Table};
+use std::time::Instant;
+
+fn main() -> catwalk::Result<()> {
+    let stim = StimulusConfig {
+        windows: 128,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let results = sweep(&paper_grid(), &stim, 0)?;
+    println!(
+        "swept {} design points in {:?} across {} threads",
+        results.len(),
+        t0.elapsed(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+
+    let mut t = Table::new(
+        "DSE: all paper design points",
+        &["design", "n", "synth area", "synth uW", "pnr area", "pnr uW", "depth"],
+    );
+    for r in &results {
+        t.row(vec![
+            r.point.kind.label().into(),
+            r.point.n.to_string(),
+            format!("{:.2}", r.synthesis.area_um2),
+            format!("{:.2}", r.synthesis.total_uw()),
+            format!("{:.2}", r.pnr.area_um2),
+            format!("{:.2}", r.pnr.total_uw()),
+            r.pnr.logic_depth.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Derived headline ratios per n.
+    for n in [16usize, 32, 64] {
+        let base = results
+            .iter()
+            .find(|r| r.point.n == n && r.point.kind == DendriteKind::PcCompact)
+            .unwrap();
+        let cat = results
+            .iter()
+            .find(|r| r.point.n == n && r.point.kind == DendriteKind::TopkPc)
+            .unwrap();
+        println!(
+            "n={n:>2}: Catwalk vs compact PC -> {} area, {} power",
+            ratio(base.pnr.area_um2, cat.pnr.area_um2),
+            ratio(base.pnr.total_uw(), cat.pnr.total_uw()),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Quickstart: build a Catwalk neuron, inspect its cost, push a spike
+//! volley through the gate-level netlist, and compare it with the
+//! baseline SRM0-RNL neuron.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use catwalk::experiments::activity::{measure_neuron, StimulusConfig};
+use catwalk::neuron::stimulus::GAMMA_LEN;
+use catwalk::neuron::{DendriteKind, NeuronConfig, NeuronDesign};
+use catwalk::power::Estimator;
+use catwalk::report::ratio;
+use catwalk::sim::Simulator;
+use catwalk::topk::TopkSelector;
+
+fn main() -> catwalk::Result<()> {
+    // 1. The paper's headline device: 64-input neuron, top-2 dendrite.
+    let cfg = NeuronConfig {
+        n_inputs: 64,
+        k: 2,
+        ..Default::default()
+    };
+    let catwalk = NeuronDesign::build(DendriteKind::TopkPc, &cfg)?;
+    let baseline = NeuronDesign::build(DendriteKind::PcCompact, &cfg)?;
+
+    let sel = TopkSelector::catwalk(64, 2)?;
+    let st = sel.stats();
+    println!("Catwalk top-2 selector for n=64:");
+    println!(
+        "  source network {} CS units -> {} mandatory, {} half (Algorithm 1)",
+        st.total, st.mandatory, st.half
+    );
+    println!(
+        "  selector+1-FA-PC dendrite: {} gates vs the baseline 63-FA PC: {} gate-eq",
+        sel.gate_count() + 5,
+        63 * 5
+    );
+    println!(
+        "  (whole-neuron gate-eq: catwalk {}, baseline {})\n",
+        catwalk.netlist.stats().gate_equivalents(),
+        baseline.netlist.stats().gate_equivalents()
+    );
+
+    // 2. Simulate a volley through the real netlist: three early spikes.
+    let mut sim = Simulator::new(&catwalk.netlist);
+    let threshold = 6;
+    sim.step(&catwalk.pack_inputs(&vec![false; 64], threshold, true)); // reset
+    println!("volley: lines 3, 17, 40 pulse from t=1/2/3 (widths 5/4/3), threshold {threshold}");
+    let mut fired_at = None;
+    for t in 0..GAMMA_LEN {
+        let mut pulses = vec![false; 64];
+        pulses[3] = (1..6).contains(&t);
+        pulses[17] = (2..6).contains(&t);
+        pulses[40] = (3..6).contains(&t);
+        let out = sim.step(&catwalk.pack_inputs(&pulses, threshold, false));
+        if out[0] && fired_at.is_none() {
+            fired_at = Some(t);
+        }
+    }
+    println!("axon fired at cycle {:?} (8-cycle output pulse)\n", fired_at);
+
+    // 3. Synthesis + P&R comparison under realistic activity.
+    let stim = StimulusConfig {
+        windows: 96,
+        ..Default::default()
+    };
+    let est = Estimator::pnr();
+    let rc = est.evaluate(&catwalk.netlist, Some(&measure_neuron(&catwalk, &stim)));
+    let rb = est.evaluate(&baseline.netlist, Some(&measure_neuron(&baseline, &stim)));
+    println!("P&R estimate @ 400 MHz (64-lane activity simulation):");
+    println!(
+        "  PC compact [7]   : {:>7.2} um^2  {:>7.2} uW",
+        rb.area_um2,
+        rb.total_uw()
+    );
+    println!(
+        "  Catwalk (top-2)  : {:>7.2} um^2  {:>7.2} uW",
+        rc.area_um2,
+        rc.total_uw()
+    );
+    println!(
+        "  improvement      : {} area, {} power (paper: 1.39x / 1.86x)",
+        ratio(rb.area_um2, rc.area_um2),
+        ratio(rb.total_uw(), rc.total_uw())
+    );
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Serving demo: boots the TCP daemon on an ephemeral port, drives it
+//! with concurrent clients through the dynamic batcher, prints the
+//! latency/throughput numbers, then shuts down cleanly.
+//! Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use catwalk::coordinator::pool::par_map;
+use catwalk::coordinator::{BatcherConfig, TnnHandle};
+use catwalk::server::{Client, Server};
+use catwalk::tnn::workload::ClusteredSeries;
+use catwalk::tnn::{GrfEncoder, WorkloadConfig};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> catwalk::Result<()> {
+    let n = 64;
+    let handle = TnnHandle::open("artifacts", n, 6.0, 7)?;
+    let metrics = handle.metrics.clone();
+    let server = Arc::new(Server::new(handle, BatcherConfig::default()));
+    let stop = server.stop_handle();
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |p| {
+                    let _ = port_tx.send(p);
+                })
+                .unwrap()
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    println!("daemon up on {addr}");
+
+    let conns = 8;
+    let per_conn = 64;
+    let t0 = Instant::now();
+    let lats = par_map(conns, (0..conns).collect::<Vec<_>>(), |ci| {
+        let mut client = Client::connect(&addr).expect("connect");
+        let enc = GrfEncoder::new(n / 8, 8, 0.0, 1.0);
+        let mut series = ClusteredSeries::new(WorkloadConfig {
+            dims: n / 8,
+            seed: ci as u64,
+            ..Default::default()
+        });
+        let mut out = Vec::new();
+        for _ in 0..per_conn {
+            let (_, s) = series.next_sample();
+            let t = Instant::now();
+            client.infer(&enc.encode(&s)).expect("infer");
+            out.push(t.elapsed());
+        }
+        let _ = client.quit();
+        out
+    });
+    let wall = t0.elapsed();
+    let mut all: Vec<_> = lats.into_iter().flatten().collect();
+    all.sort();
+    let total = all.len();
+    println!(
+        "{total} requests / {conns} connections in {wall:?} -> {:.0} req/s",
+        total as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "client latency p50 {:?} p95 {:?} max {:?}",
+        all[total / 2],
+        all[total * 95 / 100],
+        all[total - 1]
+    );
+    println!("\nserver metrics:\n{}", metrics.render());
+
+    stop.store(true, Ordering::Release);
+    srv.join().unwrap();
+    println!("daemon stopped cleanly");
+    Ok(())
+}

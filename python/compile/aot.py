@@ -1,0 +1,129 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, per column configuration (n inputs, C columns, batch B):
+
+* ``tnn_forward_n{n}_c{c}_b{b}.hlo.txt``  — column_forward (k_clip = 2)
+* ``tnn_train_n{n}_c{c}_b{b}.hlo.txt``    — train_step (fwd + STDP)
+* ``topk_eval_n{n}_k2_b{b}.hlo.txt``      — standalone top-k network
+* ``manifest.json``                        — shapes/dtypes for the Rust
+  runtime (rust/src/runtime reads this to validate literals).
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python
+never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import T_MAX, column_forward, topk_eval, train_step
+
+# The column configurations the experiments and examples use.
+CONFIGS = [
+    {"n": 16, "c": 8, "b": 64},
+    {"n": 32, "c": 12, "b": 64},
+    {"n": 64, "c": 16, "b": 64},
+]
+K = 2
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_all(outdir: str) -> dict:
+    manifest = {"t_max": T_MAX, "k": K, "entries": []}
+
+    for cfg in CONFIGS:
+        n, c, b = cfg["n"], cfg["c"], cfg["b"]
+
+        fwd = jax.jit(partial(column_forward, k_clip=K))
+        path = f"tnn_forward_n{n}_c{c}_b{b}.hlo.txt"
+        text = to_hlo_text(fwd.lower(f32(b, n), f32(c, n), f32(1, 1)))
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": f"tnn_forward_n{n}_c{c}_b{b}",
+                "file": path,
+                "inputs": [[b, n], [c, n], [1, 1]],
+                "outputs": [[b, c], [b, c]],
+                "kind": "forward",
+                "n": n,
+                "c": c,
+                "b": b,
+            }
+        )
+
+        tr = jax.jit(partial(train_step, k_clip=K))
+        path = f"tnn_train_n{n}_c{c}_b{b}.hlo.txt"
+        text = to_hlo_text(tr.lower(f32(c, n), f32(b, n), f32(1, 1)))
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": f"tnn_train_n{n}_c{c}_b{b}",
+                "file": path,
+                "inputs": [[c, n], [b, n], [1, 1]],
+                "outputs": [[c, n], [b, c], [b, c]],
+                "kind": "train",
+                "n": n,
+                "c": c,
+                "b": b,
+            }
+        )
+
+        tk = jax.jit(partial(topk_eval, k=K))
+        path = f"topk_eval_n{n}_k{K}_b{b}.hlo.txt"
+        text = to_hlo_text(tk.lower(f32(b, n, T_MAX)))
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": f"topk_eval_n{n}_k{K}_b{b}",
+                "file": path,
+                "inputs": [[b, n, T_MAX]],
+                "outputs": [[b, K, T_MAX]],
+                "kind": "topk",
+                "n": n,
+                "c": K,
+                "b": b,
+            }
+        )
+
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = lower_all(args.outdir)
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} HLO artifacts to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Compare-and-swap network construction for the Pallas top-k kernel.
+
+This mirrors `rust/src/topk/mod.rs` (`tournament_network` + Algorithm-1
+pruning): the compile path must be self-contained in Python so that
+`make artifacts` never depends on a prior Rust build. Cross-language
+conformance is pinned two ways:
+
+* pytest checks the kernel against the pure-jnp oracle (`ref.py`);
+* the Rust integration suite executes the AOT'd kernel through PJRT and
+  compares it against the gate-level netlist simulation of the same
+  selector.
+
+Orientation matches the hardware: comparator ``(top, bot)`` with
+``top < bot`` sends the OR (max / earlier-rising pulse) to ``bot``; after
+the network, the k selected lanes are the *bottom* k (``n-k .. n-1``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Literal, Tuple
+
+UnitKind = Literal["full", "max", "min"]
+
+
+@dataclass(frozen=True)
+class Unit:
+    top: int
+    bot: int
+    kind: UnitKind
+
+
+def _optimal_sorter(n: int) -> List[Tuple[int, int]]:
+    """Best-known sorting networks for tiny n (see rust sorters::optimal)."""
+    if n == 2:
+        return [(0, 1)]
+    if n == 4:
+        return [(0, 1), (2, 3), (0, 2), (1, 3), (1, 2)]
+    if n == 8:
+        return [
+            (0, 1), (2, 3), (4, 5), (6, 7),
+            (0, 2), (1, 3), (4, 6), (5, 7),
+            (1, 2), (5, 6),
+            (0, 4), (1, 5), (2, 6), (3, 7),
+            (2, 4), (3, 5),
+            (1, 2), (3, 4), (5, 6),
+        ]
+    return _odd_even_sorter(n)
+
+
+def _odd_even_sorter(n: int) -> List[Tuple[int, int]]:
+    out: List[Tuple[int, int]] = []
+
+    def sort(lo: int, m: int) -> None:
+        if m <= 1:
+            return
+        h = m // 2
+        sort(lo, h)
+        sort(lo + h, h)
+        merge(lo, m, 1)
+
+    def merge(lo: int, m: int, r: int) -> None:
+        step = r * 2
+        if step < m:
+            merge(lo, m, step)
+            merge(lo + r, m, step)
+            i = lo + r
+            while i + r < lo + m:
+                out.append((i, i + r))
+                i += step
+        else:
+            out.append((lo, lo + r))
+
+    sort(0, n)
+    return out
+
+
+def _odd_even_merge_pairs(n: int) -> List[Tuple[int, int]]:
+    out: List[Tuple[int, int]] = []
+
+    def rec(lo: int, m: int, r: int) -> None:
+        step = r * 2
+        if step < m:
+            rec(lo, m, step)
+            rec(lo + r, m, step)
+            i = lo + r
+            while i + r < lo + m:
+                out.append((i, i + r))
+                i += step
+        else:
+            out.append((lo, lo + r))
+
+    rec(0, n, 1)
+    return out
+
+
+def tournament_network(n: int, k: int) -> List[Tuple[int, int]]:
+    """Odd-even-merge tournament selection network (unpruned)."""
+    if n & (n - 1) or k & (k - 1) or not (1 <= k <= n) or n < 2:
+        raise ValueError(f"need powers of two with 1 <= k <= n, got n={n} k={k}")
+    out: List[Tuple[int, int]] = []
+
+    def rec(lo: int, size: int) -> None:
+        if size == k:
+            if k >= 2:
+                for a, b in _optimal_sorter(k):
+                    out.append((lo + a, lo + b))
+            return
+        half = size // 2
+        rec(lo, half)
+        rec(lo + half, half)
+
+        def phys(v: int) -> int:
+            return lo + half - k + v if v < k else lo + size - k + (v - k)
+
+        for a, b in _odd_even_merge_pairs(2 * k):
+            out.append((phys(a), phys(b)))
+
+    rec(0, n)
+    return out
+
+
+def prune(comparators: List[Tuple[int, int]], n: int, k: int) -> List[Unit]:
+    """Algorithm 1: backward liveness + half-unit analysis."""
+    live = [False] * n
+    for lane in range(n - k, n):
+        live[lane] = True
+    mandatory: List[Tuple[int, int]] = []
+    for t, b in reversed(comparators):
+        if live[t] or live[b]:
+            mandatory.append((t, b))
+            live[t] = True
+            live[b] = True
+    mandatory.reverse()
+
+    units: List[Unit] = []
+    for idx, (t, b) in enumerate(mandatory):
+        top_used = t >= n - k
+        bot_used = b >= n - k
+        for lt, lb in mandatory[idx + 1:]:
+            if t in (lt, lb):
+                top_used = True
+            if b in (lt, lb):
+                bot_used = True
+            if top_used and bot_used:
+                break
+        kind: UnitKind = (
+            "full" if (top_used and bot_used) else ("max" if bot_used else "min")
+        )
+        units.append(Unit(t, b, kind))
+    return units
+
+
+def catwalk_schedule(n: int, k: int) -> List[Unit]:
+    """The selector the Catwalk dendrite instantiates (rust
+    ``TopkSelector::catwalk``)."""
+    return prune(tournament_network(n, k), n, k)
+
+
+def gate_count(units: List[Unit]) -> int:
+    return sum(2 if u.kind == "full" else 1 for u in units)

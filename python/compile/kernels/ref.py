@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signals of the compile path: every kernel
+in this package must match its reference bit-for-bit (top-k) or exactly
+in integer arithmetic (RNL column) under the pytest + hypothesis sweeps
+in ``python/tests/``.
+
+Shapes and conventions (shared with the kernels and the Rust runtime):
+
+* waveforms: ``[B, n, T]`` float32 in {0.0, 1.0}; lane = dendrite input,
+  T = clock cycles of one gamma window.
+* spike times: ``[B, n]`` float32; a value ``>= t_max`` means "no spike"
+  (the temporal-code infinity of paper Fig. 2a).
+* weights: ``[C, n]`` float32 in ``[0, 7]`` (3-bit RNL response widths).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def topk_wave_ref(waves: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-cycle top-k selection oracle.
+
+    A compare-and-swap network applied bitwise per cycle sorts each
+    cycle's bit column, so tap ``j`` (j = 0 is the highest kept lane,
+    j = k-1 the bottom lane) carries a 1 iff at least ``k - j`` lanes are
+    high that cycle.
+
+    waves: [B, n, T] in {0,1} -> [B, k, T].
+    """
+    count = jnp.sum(waves, axis=1, keepdims=True)  # [B, 1, T]
+    need = jnp.arange(k, 0, -1, dtype=waves.dtype).reshape(1, k, 1)
+    return (count >= need).astype(waves.dtype)
+
+
+def rnl_column_ref(
+    spike_times: jnp.ndarray,
+    weights: jnp.ndarray,
+    theta: jnp.ndarray,
+    t_max: int,
+    k_clip: int | None = None,
+) -> jnp.ndarray:
+    """SRM0-RNL column forward oracle.
+
+    For every (batch b, column c): per cycle t the response count is
+    ``sum_i [t >= s_bi and t < s_bi + w_ci]``, optionally clipped at
+    ``k_clip`` (the Catwalk dendrite); the membrane potential is the
+    running sum; the output spike time is the first t where it reaches
+    ``theta``, else ``t_max`` (= no spike).
+
+    spike_times: [B, n]; weights: [C, n]; theta: scalar array.
+    Returns [B, C] float32 spike times in ``0..=t_max``.
+    """
+    s = spike_times[:, None, :, None]  # [B,1,n,1]
+    w = weights[None, :, :, None]  # [1,C,n,1]
+    t = jnp.arange(t_max, dtype=spike_times.dtype)  # [T]
+    active = (t >= s) & (t < s + w)  # [B,C,n,T]
+    count = jnp.sum(active.astype(spike_times.dtype), axis=2)  # [B,C,T]
+    if k_clip is not None:
+        count = jnp.minimum(count, float(k_clip))
+    pot = jnp.cumsum(count, axis=-1)  # [B,C,T]
+    fired = pot >= theta  # [B,C,T]
+    # first firing cycle, t_max if none
+    t_idx = jnp.arange(t_max, dtype=spike_times.dtype)
+    times = jnp.where(fired, t_idx, float(t_max))
+    return jnp.min(times, axis=-1)
+
+
+def wta_ref(out_times: jnp.ndarray, t_max: int) -> jnp.ndarray:
+    """1-winner-take-all oracle: one-hot of the earliest-spiking column
+    (lowest index breaks ties); all-zero row when no column spiked.
+
+    out_times: [B, C] -> [B, C] float32 mask.
+    """
+    winner = jnp.argmin(out_times, axis=-1)  # [B]
+    any_spike = jnp.min(out_times, axis=-1) < t_max  # [B]
+    onehot = jnp.zeros_like(out_times).at[jnp.arange(out_times.shape[0]), winner].set(1.0)
+    return onehot * any_spike[:, None].astype(out_times.dtype)
+
+
+def stdp_ref(
+    weights: jnp.ndarray,
+    in_times: jnp.ndarray,
+    out_times: jnp.ndarray,
+    winner_mask: jnp.ndarray,
+    t_max: int,
+    w_max: float = 7.0,
+    mu_capture: float = 0.30,
+    mu_backoff: float = 0.20,
+    mu_search: float = 0.02,
+) -> jnp.ndarray:
+    """Expected-value TNN STDP oracle (Smith-style rules, winner-gated).
+
+    For the winner column y with output time t_y and each input x with
+    time t_x (>= t_max means silent):
+
+    * x spiked and t_x <= t_y  -> capture: w += mu_capture * (w_max - w)
+    * x spiked and t_x >  t_y  -> backoff: w -= mu_backoff * w
+    * x silent and y fired     -> backoff: w -= mu_backoff * w
+    * x spiked and y silent    -> search:  w += mu_search * (w_max - w)
+
+    Updates are averaged over the batch; non-winner columns are untouched.
+    weights [C,n], in_times [B,n], out_times [B,C], winner_mask [B,C].
+    """
+    x_spk = (in_times < t_max)[:, None, :]  # [B,1,n]
+    y_spk = (out_times < t_max)[:, :, None]  # [B,C,1]
+    t_x = in_times[:, None, :]
+    t_y = out_times[:, :, None]
+    w = weights[None, :, :]  # [1,C,n]
+
+    capture = x_spk & y_spk & (t_x <= t_y)
+    backoff = (x_spk & y_spk & (t_x > t_y)) | (~x_spk & y_spk)
+    search = x_spk & ~y_spk
+
+    delta = (
+        capture.astype(w.dtype) * mu_capture * (w_max - w)
+        - backoff.astype(w.dtype) * mu_backoff * w
+        + search.astype(w.dtype) * mu_search * (w_max - w)
+    )  # [B,C,n]
+    # Winner-gated; when no column fired at all, every column searches
+    # (otherwise a silent network could never become responsive).
+    no_spike_row = (jnp.min(out_times, axis=-1) >= t_max).astype(w.dtype)[:, None]
+    gate = jnp.clip(winner_mask + no_spike_row, 0.0, 1.0)
+    gated = delta * gate[:, :, None]
+    batch = jnp.mean(gated, axis=0)  # [C,n]
+    return jnp.clip(weights + batch, 0.0, w_max)

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: batched SRM0-RNL column forward pass.
+
+Computes, for a batch of input volleys against every neuron (column cell)
+of a TNN column, the membrane-potential integration of the ramp-no-leak
+response (paper Eq. 1) and the first threshold crossing — the functional
+hot loop of the TNN workload that motivates the paper's k = 2 choice.
+
+One grid step owns a ``[block_b, n]`` tile of spike times and the whole
+``[C, n]`` weight matrix (columns are small: C <= 32, n <= 64, so the
+weights stay resident in VMEM across the batch sweep). Time is a static
+Python loop of ``t_max`` (= 16) iterations of elementwise compare +
+masked accumulate — on a real TPU this is a fully unrolled VPU schedule
+with zero HBM traffic after the initial tile loads.
+
+The optional ``k_clip`` reproduces the Catwalk dendrite: the per-cycle
+response count is clamped at k before accumulation (the clipping
+semantics of DESIGN.md §1.1); ``k_clip=None`` is the un-clipped
+baseline dendrite.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rnl_kernel_body(s_ref, w_ref, theta_ref, o_ref, *, t_max: int, k_clip):
+    s = s_ref[...]  # [block_b, n]
+    w = w_ref[...]  # [C, n]
+    theta = theta_ref[0, 0]
+    bb = s.shape[0]
+    c = w.shape[0]
+    pot = jnp.zeros((bb, c), dtype=s.dtype)
+    out = jnp.full((bb, c), float(t_max), dtype=s.dtype)
+    s_e = s[:, None, :]  # [bb,1,n]
+    w_e = w[None, :, :]  # [1,C,n]
+    for t in range(t_max):
+        active = (t >= s_e) & (t < s_e + w_e)  # [bb,C,n]
+        count = jnp.sum(active.astype(s.dtype), axis=-1)  # [bb,C]
+        if k_clip is not None:
+            count = jnp.minimum(count, float(k_clip))
+        pot = pot + count
+        newly = (pot >= theta) & (out >= float(t_max))
+        out = jnp.where(newly, float(t), out)
+    o_ref[...] = out
+
+
+def rnl_column(
+    spike_times: jnp.ndarray,
+    weights: jnp.ndarray,
+    theta: jnp.ndarray,
+    *,
+    t_max: int = 16,
+    k_clip: int | None = None,
+    block_b: int = 64,
+) -> jnp.ndarray:
+    """First-crossing spike times of an RNL column.
+
+    spike_times: [B, n] (>= t_max means silent), weights: [C, n],
+    theta: [1, 1]. Returns [B, C] float32 times in ``0..=t_max``.
+    """
+    b, n = spike_times.shape
+    c, n2 = weights.shape
+    if n != n2:
+        raise ValueError(f"inputs {n} != weight fan-in {n2}")
+    if b % block_b:
+        raise ValueError(f"batch {b} not a multiple of block {block_b}")
+    body = partial(_rnl_kernel_body, t_max=t_max, k_clip=k_clip)
+    return pl.pallas_call(
+        body,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((c, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), spike_times.dtype),
+        interpret=True,
+    )(spike_times, weights, theta)

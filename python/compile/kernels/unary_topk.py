@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: unary top-k over batched temporal waveforms.
+
+The kernel evaluates the Catwalk selection network (compare-and-swap
+units from :mod:`.networks`) bitwise per clock cycle on a batch of
+waveforms — the data-parallel form of the paper's dendrite hardware.
+AND/OR on {0,1}-valued float lanes become ``minimum``/``maximum`` on the
+VPU; the unit list is a compile-time constant, so the network unrolls
+into a fixed elementwise schedule with no gather/scatter.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the batch;
+one block of ``[block_b, n, T]`` float32 sits in VMEM (e.g. 256×64×16×4 B
+= 1 MiB), lanes live along the sublane dimension, and each comparator
+layer is a pair of vector min/max ops. ``interpret=True`` everywhere —
+the CPU PJRT plugin cannot execute Mosaic custom-calls; real-TPU numbers
+are estimated from the BlockSpec footprint in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .networks import Unit, catwalk_schedule
+
+
+def _topk_kernel_body(x_ref, o_ref, *, units: List[Unit], n: int, k: int):
+    x = x_ref[...]  # [block_b, n, T]
+    lanes = [x[:, i, :] for i in range(n)]
+    for u in units:
+        a = lanes[u.top]
+        b = lanes[u.bot]
+        if u.kind in ("full", "min"):
+            mn = jnp.minimum(a, b)
+        if u.kind in ("full", "max"):
+            mx = jnp.maximum(a, b)
+        if u.kind in ("full", "min"):
+            lanes[u.top] = mn
+        if u.kind in ("full", "max"):
+            lanes[u.bot] = mx
+    out = jnp.stack([lanes[n - k + j] for j in range(k)], axis=1)  # [block_b,k,T]
+    o_ref[...] = out
+
+
+def unary_topk(waves: jnp.ndarray, k: int, *, block_b: int = 64) -> jnp.ndarray:
+    """Apply the Catwalk top-k selection network per cycle.
+
+    waves: [B, n, T] float32 in {0,1}; B must be a multiple of
+    ``block_b`` (pad upstream). Returns [B, k, T]: tap j carries a 1 in a
+    cycle iff at least k-j lanes were high (taps ascend toward the
+    bottom lane).
+    """
+    b, n, t = waves.shape
+    if b % block_b:
+        raise ValueError(f"batch {b} not a multiple of block {block_b}")
+    units = catwalk_schedule(n, k)
+    body = partial(_topk_kernel_body, units=units, n=n, k=k)
+    return pl.pallas_call(
+        body,
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec((block_b, n, t), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b, k, t), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k, t), waves.dtype),
+        interpret=True,
+    )(waves)
+
+
+def times_to_waves(spike_times: jnp.ndarray, widths: jnp.ndarray, t_max: int) -> jnp.ndarray:
+    """Expand (start, width) pulse descriptors to waveforms.
+
+    spike_times/widths: [B, n] -> [B, n, t_max] float32. A start >= t_max
+    yields an all-zero lane (no spike).
+    """
+    t = jnp.arange(t_max, dtype=spike_times.dtype)
+    s = spike_times[..., None]
+    w = widths[..., None]
+    return ((t >= s) & (t < s + w)).astype(spike_times.dtype)

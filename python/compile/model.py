@@ -1,0 +1,115 @@
+"""L2: the TNN column model — forward pass + STDP update in JAX.
+
+Composes the L1 Pallas kernels (:mod:`.kernels.rnl_column`,
+:mod:`.kernels.unary_topk`) into the functions the Rust coordinator
+executes through PJRT:
+
+* :func:`column_forward` — batched RNL first-crossing spike times with
+  the Catwalk k-clip, plus the 1-WTA winner mask.
+* :func:`train_step` — forward + Smith-style STDP weight update
+  (winner-gated, expected-value form); this is the online-learning step
+  the end-to-end clustering example drives for a few hundred steps.
+* :func:`topk_eval` — the standalone unary top-k network over waveforms,
+  exported for runtime conformance benches against the gate-level
+  simulator.
+
+Everything here is lowered ONCE by ``compile/aot.py`` to HLO text under
+``artifacts/``; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+
+from .kernels.rnl_column import rnl_column
+from .kernels.unary_topk import unary_topk
+
+T_MAX = 16
+W_MAX = 7.0
+
+
+def wta(out_times: jnp.ndarray, t_max: int = T_MAX) -> jnp.ndarray:
+    """1-WTA one-hot mask of the earliest-spiking column per batch row
+    (ties -> lowest index; all-zero when nothing spiked)."""
+    winner = jnp.argmin(out_times, axis=-1)
+    any_spike = jnp.min(out_times, axis=-1) < t_max
+    onehot = (
+        jnp.zeros_like(out_times)
+        .at[jnp.arange(out_times.shape[0]), winner]
+        .set(1.0)
+    )
+    return onehot * any_spike[:, None].astype(out_times.dtype)
+
+
+def column_forward(
+    spike_times: jnp.ndarray,
+    weights: jnp.ndarray,
+    theta: jnp.ndarray,
+    *,
+    k_clip: int | None = 2,
+    t_max: int = T_MAX,
+):
+    """Forward pass: (out_times [B,C], winner_mask [B,C])."""
+    out_times = rnl_column(spike_times, weights, theta, t_max=t_max, k_clip=k_clip)
+    return out_times, wta(out_times, t_max)
+
+
+def stdp_update(
+    weights: jnp.ndarray,
+    in_times: jnp.ndarray,
+    out_times: jnp.ndarray,
+    winner_mask: jnp.ndarray,
+    *,
+    t_max: int = T_MAX,
+    w_max: float = W_MAX,
+    mu_capture: float = 0.30,
+    mu_backoff: float = 0.20,
+    mu_search: float = 0.02,
+) -> jnp.ndarray:
+    """Winner-gated expected-value STDP (see kernels/ref.py:stdp_ref for
+    the rule table; this is the jitted production form)."""
+    x_spk = (in_times < t_max)[:, None, :]
+    y_spk = (out_times < t_max)[:, :, None]
+    t_x = in_times[:, None, :]
+    t_y = out_times[:, :, None]
+    w = weights[None, :, :]
+
+    capture = x_spk & y_spk & (t_x <= t_y)
+    backoff = (x_spk & y_spk & (t_x > t_y)) | (~x_spk & y_spk)
+    search = x_spk & ~y_spk
+
+    delta = (
+        capture.astype(w.dtype) * mu_capture * (w_max - w)
+        - backoff.astype(w.dtype) * mu_backoff * w
+        + search.astype(w.dtype) * mu_search * (w_max - w)
+    )
+    no_spike_row = (jnp.min(out_times, axis=-1) >= t_max).astype(w.dtype)[:, None]
+    gate = jnp.clip(winner_mask + no_spike_row, 0.0, 1.0)
+    batch = jnp.mean(delta * gate[:, :, None], axis=0)
+    return jnp.clip(weights + batch, 0.0, w_max)
+
+
+def train_step(
+    weights: jnp.ndarray,
+    spike_times: jnp.ndarray,
+    theta: jnp.ndarray,
+    *,
+    k_clip: int | None = 2,
+    t_max: int = T_MAX,
+):
+    """One online-learning step: forward + STDP.
+
+    Returns (new_weights [C,n], out_times [B,C], winner_mask [B,C]).
+    """
+    out_times, mask = column_forward(
+        spike_times, weights, theta, k_clip=k_clip, t_max=t_max
+    )
+    new_w = stdp_update(weights, spike_times, out_times, mask, t_max=t_max)
+    return new_w, out_times, mask
+
+
+def topk_eval(waves: jnp.ndarray, *, k: int = 2) -> jnp.ndarray:
+    """Standalone unary top-k network evaluation (conformance target)."""
+    return unary_topk(waves, k)

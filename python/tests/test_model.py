@@ -1,0 +1,121 @@
+"""L2 model tests: WTA, STDP, train_step dynamics, AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import stdp_ref, wta_ref
+from compile.model import T_MAX, W_MAX, column_forward, stdp_update, train_step, wta
+
+
+def test_wta_matches_ref_and_semantics():
+    t = jnp.asarray(
+        [
+            [3.0, 1.0, 5.0],
+            [16.0, 16.0, 16.0],  # nothing spiked
+            [2.0, 2.0, 7.0],  # tie -> lowest index
+        ]
+    )
+    m = wta(t, 16)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(wta_ref(t, 16)))
+    np.testing.assert_array_equal(
+        np.asarray(m),
+        np.array([[0, 1, 0], [0, 0, 0], [1, 0, 0]], np.float32),
+    )
+
+
+def test_stdp_update_matches_ref():
+    rng = np.random.default_rng(5)
+    c, n, b = 6, 16, 32
+    w = jnp.asarray(rng.uniform(0, W_MAX, (c, n)).astype(np.float32))
+    t_in = jnp.asarray(
+        np.where(rng.random((b, n)) < 0.3, rng.integers(0, 8, (b, n)), T_MAX).astype(
+            np.float32
+        )
+    )
+    t_out = jnp.asarray(
+        np.where(rng.random((b, c)) < 0.5, rng.integers(0, 16, (b, c)), T_MAX).astype(
+            np.float32
+        )
+    )
+    mask = wta(t_out, T_MAX)
+    got = stdp_update(w, t_in, t_out, mask)
+    want = stdp_ref(w, t_in, t_out, mask, T_MAX)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_stdp_capture_increases_winner_weights():
+    # single column, inputs spiking before output -> capture dominates.
+    w = jnp.full((1, 4), 3.0)
+    t_in = jnp.zeros((64, 4))
+    t_out = jnp.full((64, 1), 5.0)
+    mask = jnp.ones((64, 1))
+    new_w = stdp_update(w, t_in, t_out, mask)
+    assert np.all(np.asarray(new_w) > 3.0)
+
+
+def test_stdp_bounds_respected():
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.uniform(0, W_MAX, (4, 8)).astype(np.float32))
+    for _ in range(20):
+        t_in = jnp.asarray(rng.integers(0, T_MAX + 1, (16, 8)).astype(np.float32))
+        t_out = jnp.asarray(rng.integers(0, T_MAX + 1, (16, 4)).astype(np.float32))
+        w = stdp_update(w, t_in, t_out, wta(t_out, T_MAX))
+        arr = np.asarray(w)
+        assert arr.min() >= 0.0 and arr.max() <= W_MAX
+
+
+def test_train_step_learns_two_clusters():
+    """Miniature end-to-end sanity: STDP + WTA separates two spike
+    patterns onto different columns (the unsupervised-clustering behaviour
+    TNN papers rely on)."""
+    rng = np.random.default_rng(42)
+    n, c, b = 16, 4, 64
+    w = jnp.asarray(rng.uniform(2.0, 5.0, (c, n)).astype(np.float32))
+    theta = jnp.asarray([[6.0]])
+
+    def make_batch():
+        # cluster A: early spikes on inputs 0..7; cluster B: on 8..15
+        s = np.full((b, n), float(T_MAX), np.float32)
+        labels = rng.integers(0, 2, b)
+        for i, lab in enumerate(labels):
+            lanes = np.arange(0, 8) if lab == 0 else np.arange(8, 16)
+            chosen = rng.choice(lanes, 4, replace=False)
+            s[i, chosen] = rng.integers(0, 3, 4)
+        return jnp.asarray(s), labels
+
+    for _ in range(60):
+        s, _ = make_batch()
+        w, _, _ = train_step(w, s, theta)
+
+    s, labels = make_batch()
+    _, mask = column_forward(s, w, theta)
+    winners = np.asarray(mask).argmax(axis=1)
+    fired = np.asarray(mask).sum(axis=1) > 0
+    # purity: each label maps to a dominant column
+    purity_num = 0
+    for lab in (0, 1):
+        sel = fired & (labels == lab)
+        if sel.sum() == 0:
+            continue
+        counts = np.bincount(winners[sel], minlength=4)
+        purity_num += counts.max()
+    purity = purity_num / max(fired.sum(), 1)
+    assert fired.mean() > 0.5, f"too few firings: {fired.mean()}"
+    assert purity > 0.8, f"purity {purity}"
+
+
+@pytest.mark.parametrize("n,c,b", [(16, 8, 64)])
+def test_aot_lowering_produces_hlo_text(tmp_path, n, c, b):
+    from functools import partial
+
+    from compile.aot import f32, to_hlo_text
+
+    fwd = jax.jit(partial(column_forward, k_clip=2))
+    text = to_hlo_text(fwd.lower(f32(b, n), f32(c, n), f32(1, 1)))
+    assert "HloModule" in text
+    assert "f32[64,16]" in text.replace(" ", "")
+    p = tmp_path / "fwd.hlo.txt"
+    p.write_text(text)
+    assert p.stat().st_size > 1000

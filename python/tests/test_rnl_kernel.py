@@ -1,0 +1,79 @@
+"""Pallas RNL column kernel vs pure-jnp oracle + behavioral cross-checks."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import rnl_column_ref
+from compile.kernels.rnl_column import rnl_column
+
+T = 16
+
+
+def random_problem(rng, b, c, n, silent_p=0.3):
+    s = rng.integers(0, 8, size=(b, n)).astype(np.float32)
+    silent = rng.random((b, n)) < silent_p
+    s[silent] = float(T)  # no spike
+    w = rng.integers(0, 8, size=(c, n)).astype(np.float32)
+    theta = np.asarray([[float(rng.integers(1, 12))]], np.float32)
+    return jnp.asarray(s), jnp.asarray(w), jnp.asarray(theta)
+
+
+@pytest.mark.parametrize("n,c", [(16, 8), (32, 12), (64, 16)])
+@pytest.mark.parametrize("k_clip", [None, 2])
+def test_kernel_matches_ref(n, c, k_clip):
+    rng = np.random.default_rng(n + (0 if k_clip is None else 1))
+    s, w, theta = random_problem(rng, 64, c, n)
+    got = rnl_column(s, w, theta, t_max=T, k_clip=k_clip)
+    want = rnl_column_ref(s, w, theta, T, k_clip)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_exp=st.integers(2, 6),
+    c=st.integers(1, 12),
+    theta=st.integers(1, 31),
+    k_clip=st.sampled_from([None, 1, 2, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_hypothesis(n_exp, c, theta, k_clip, seed):
+    n = 1 << n_exp
+    rng = np.random.default_rng(seed)
+    s, w, _ = random_problem(rng, 64, c, n)
+    th = jnp.asarray([[float(theta)]], jnp.float32)
+    got = rnl_column(s, w, th, t_max=T, k_clip=k_clip)
+    want = rnl_column_ref(s, w, th, T, k_clip)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_known_single_input_case():
+    # one input spikes at t=1 with weight 3, theta=3 -> potential ramps
+    # 1,2,3 over t=1..3 -> crossing at t=3 (matches the rust behavioral
+    # reference rnl_first_crossing test).
+    s = jnp.full((64, 1), 16.0).at[0, 0].set(1.0)
+    w = jnp.asarray([[3.0]])
+    theta = jnp.asarray([[3.0]])
+    out = rnl_column(s, w, theta, t_max=T)
+    assert float(out[0, 0]) == 3.0
+    assert float(out[1, 0]) == float(T)  # silent row never fires
+
+
+def test_clipping_delays_or_prevents_firing():
+    # four simultaneous pulses, theta=8: unclipped fires at t=1
+    # (4+4 >= 8); k=2 clip fires at t=3 (2,4,6,8).
+    s = jnp.zeros((64, 4))
+    w = jnp.full((1, 4), 7.0)
+    theta = jnp.asarray([[8.0]])
+    unclipped = rnl_column(s, w, theta, t_max=T, k_clip=None)
+    clipped = rnl_column(s, w, theta, t_max=T, k_clip=2)
+    assert float(unclipped[0, 0]) == 1.0
+    assert float(clipped[0, 0]) == 3.0
+
+
+def test_shape_validation():
+    with pytest.raises(ValueError):
+        rnl_column(jnp.zeros((64, 8)), jnp.zeros((4, 16)), jnp.zeros((1, 1)))
+    with pytest.raises(ValueError):
+        rnl_column(jnp.zeros((33, 8)), jnp.zeros((4, 8)), jnp.zeros((1, 1)), block_b=32)

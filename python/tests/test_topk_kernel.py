@@ -1,0 +1,103 @@
+"""Pallas unary top-k kernel vs pure-jnp oracle — the L1 correctness gate."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.networks import (
+    catwalk_schedule,
+    gate_count,
+    prune,
+    tournament_network,
+)
+from compile.kernels.ref import topk_wave_ref
+from compile.kernels.unary_topk import times_to_waves, unary_topk
+
+T = 16
+
+
+def random_waves(rng, b, n, t, p):
+    return (rng.random((b, n, t)) < p).astype(np.float32)
+
+
+@pytest.mark.parametrize("n,k", [(4, 2), (8, 2), (8, 4), (16, 2), (32, 2), (64, 2), (16, 4)])
+def test_kernel_matches_ref(n, k):
+    rng = np.random.default_rng(n * 100 + k)
+    for p in (0.05, 0.3, 0.8):
+        waves = random_waves(rng, 64, n, T, p)
+        got = unary_topk(jnp.asarray(waves), k)
+        want = topk_wave_ref(jnp.asarray(waves), k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_exp=st.integers(2, 6),
+    k_exp=st.integers(0, 2),
+    p=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_hypothesis(n_exp, k_exp, p, seed):
+    n = 1 << n_exp
+    k = min(1 << k_exp, n)
+    rng = np.random.default_rng(seed)
+    waves = random_waves(rng, 64, n, 8, p)
+    got = unary_topk(jnp.asarray(waves), k, block_b=64)
+    want = topk_wave_ref(jnp.asarray(waves), k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batch_must_be_block_multiple():
+    with pytest.raises(ValueError):
+        unary_topk(jnp.zeros((17, 8, 4)), 2, block_b=16)
+
+
+def test_times_to_waves_layout():
+    s = jnp.asarray([[2.0, 99.0]])
+    w = jnp.asarray([[3.0, 3.0]])
+    waves = times_to_waves(s, w, 8)
+    assert waves.shape == (1, 2, 8)
+    np.testing.assert_array_equal(
+        np.asarray(waves[0, 0]), np.array([0, 0, 1, 1, 1, 0, 0, 0], np.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(waves[0, 1]), np.zeros(8, np.float32))
+
+
+class TestNetworks:
+    """Schedule construction mirrors the Rust topk module."""
+
+    @pytest.mark.parametrize("n,k", [(4, 2), (8, 2), (16, 2), (16, 4), (32, 2), (64, 2)])
+    def test_selection_zero_one(self, n, k):
+        units = catwalk_schedule(n, k)
+        rng = np.random.default_rng(7)
+        for _ in range(300):
+            bits = rng.random(n) < rng.choice([0.06, 0.5])
+            lanes = bits.astype(np.int32).tolist()
+            for u in units:
+                a, b = lanes[u.top], lanes[u.bot]
+                if u.kind in ("full", "min"):
+                    lanes[u.top] = min(a, b)
+                if u.kind in ("full", "max"):
+                    lanes[u.bot] = max(a, b)
+            taps = lanes[n - k:]
+            assert sum(taps) == min(int(bits.sum()), k)
+            assert all(taps[i] <= taps[i + 1] for i in range(k - 1))
+
+    def test_gate_counts_match_rust(self):
+        # pinned against rust `TopkSelector::catwalk` (see scratch data in
+        # EXPERIMENTS.md): n=16 -> 44 gates, n=32 -> 92, n=64 -> 188.
+        assert gate_count(catwalk_schedule(16, 2)) == 44
+        assert gate_count(catwalk_schedule(32, 2)) == 92
+        assert gate_count(catwalk_schedule(64, 2)) == 188
+
+    def test_prune_rejects_nothing_when_k_equals_n(self):
+        net = tournament_network(8, 8)
+        units = prune(net, 8, 8)
+        assert len(units) == len(net)
+
+    def test_bad_params(self):
+        with pytest.raises(ValueError):
+            tournament_network(12, 2)
+        with pytest.raises(ValueError):
+            tournament_network(16, 3)

@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig. 5 (top-k pruning of 8-input sorters) and time
+//! the pruning pass itself across every sorter/size pair.
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::experiments::figures::fig5;
+use catwalk::sorters::{CsNetwork, SorterKind};
+use catwalk::topk::TopkSelector;
+
+fn main() {
+    bench_header("Fig. 5 — unary top-k pruning (E1)");
+    let t = fig5().expect("fig5");
+    print!("{}", t.render());
+
+    let r = bench("fig5 table generation", 2, 20, || fig5().unwrap());
+    println!("{}", r.report());
+
+    for kind in SorterKind::ALL {
+        for n in [16usize, 64, 256] {
+            let sorter = CsNetwork::sorter(kind, n).unwrap();
+            let r = bench(
+                &format!("Algorithm 1 prune {} n={n} k=2", kind.name()),
+                5,
+                50,
+                || TopkSelector::prune(&sorter, 2).unwrap(),
+            );
+            println!("{}", r.report());
+        }
+    }
+}

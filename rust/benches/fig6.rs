@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig. 6a/6b (gate-count analysis) and time the
+//! selector construction across the full (n, k) sweep.
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::experiments::figures::{fig6a, fig6b, merge_flavor_ablation};
+use catwalk::topk::TopkSelector;
+
+fn main() {
+    bench_header("Fig. 6 — gate count analysis (E2/E3)");
+    print!("{}", fig6a().expect("fig6a").render());
+    print!("{}", fig6b().expect("fig6b").render());
+    print!("{}", merge_flavor_ablation().expect("ablation").render());
+
+    let r = bench("fig6a+fig6b generation", 2, 20, || {
+        (fig6a().unwrap(), fig6b().unwrap())
+    });
+    println!("{}", r.report());
+
+    for n in [64usize, 256] {
+        let r = bench(&format!("catwalk selector build n={n} k=2"), 5, 50, || {
+            TopkSelector::catwalk(n, 2).unwrap()
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 7 (synthesis of unary top-k) and time one
+//! activity-simulation unit (the hot path of E4).
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::experiments::activity::{measure_lines, StimulusConfig};
+use catwalk::experiments::figures::fig7;
+use catwalk::topk::TopkSelector;
+
+fn main() {
+    let stim = StimulusConfig {
+        windows: 96,
+        ..Default::default()
+    };
+    bench_header("Fig. 7 — unary top-k synthesis (E4)");
+    print!("{}", fig7(&stim).expect("fig7").render());
+
+    let sel = TopkSelector::catwalk(64, 2).unwrap();
+    let nl = sel.to_netlist("topk64").unwrap();
+    let quick = StimulusConfig {
+        windows: 32,
+        ..Default::default()
+    };
+    let r = bench("activity sim topk n=64 (32 windows x 64 lanes)", 2, 15, || {
+        measure_lines(&nl, 64, &quick)
+    });
+    println!("{}", r.report());
+    let lane_cycles = 32 * 17 * 64;
+    println!(
+        "  -> {:.2} M lane-cycles/s",
+        r.throughput(lane_cycles) / 1e6
+    );
+}

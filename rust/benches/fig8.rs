@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 8 (dendrite synthesis area/power, 4 designs).
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::experiments::activity::StimulusConfig;
+use catwalk::experiments::figures::fig8;
+
+fn main() {
+    let stim = StimulusConfig {
+        windows: 96,
+        ..Default::default()
+    };
+    bench_header("Fig. 8 — dendrite synthesis (E5)");
+    print!("{}", fig8(&stim).expect("fig8").render());
+
+    let quick = StimulusConfig {
+        windows: 24,
+        ..Default::default()
+    };
+    let r = bench("fig8 full regeneration (24 windows)", 1, 8, || {
+        fig8(&quick).unwrap()
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 9 (full-neuron synthesis area/power).
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::experiments::activity::StimulusConfig;
+use catwalk::experiments::figures::fig9;
+
+fn main() {
+    let stim = StimulusConfig {
+        windows: 96,
+        ..Default::default()
+    };
+    bench_header("Fig. 9 — full neuron synthesis (E6)");
+    print!("{}", fig9(&stim).expect("fig9").render());
+
+    let quick = StimulusConfig {
+        windows: 24,
+        ..Default::default()
+    };
+    let r = bench("fig9 full regeneration (24 windows)", 1, 8, || {
+        fig9(&quick).unwrap()
+    });
+    println!("{}", r.report());
+}

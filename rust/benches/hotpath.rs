@@ -1,0 +1,94 @@
+//! Hot-path micro-benchmarks: the gate-level simulator (scalar vs
+//! 64-lane), selector bit evaluation, behavioral neuron stepping, and the
+//! DSE sweep — the numbers EXPERIMENTS.md §Perf tracks.
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::coordinator::dse::{paper_grid, sweep};
+use catwalk::experiments::activity::StimulusConfig;
+use catwalk::neuron::behavior::BehavioralNeuron;
+use catwalk::neuron::{DendriteKind, NeuronConfig, NeuronDesign};
+use catwalk::rng::Xoshiro256;
+use catwalk::sim::{Simulator, Simulator64};
+use catwalk::topk::TopkSelector;
+
+fn main() {
+    bench_header("hot paths");
+    let cfg = NeuronConfig {
+        n_inputs: 64,
+        k: 2,
+        ..Default::default()
+    };
+    let design = NeuronDesign::build(DendriteKind::PcCompact, &cfg).unwrap();
+    let nl = &design.netlist;
+    let n_cells = nl.cells.len();
+    let mut rng = Xoshiro256::new(1);
+
+    // scalar simulator
+    let inputs: Vec<Vec<bool>> = (0..512)
+        .map(|_| (0..nl.primary_inputs.len()).map(|_| rng.gen_bool(0.2)).collect())
+        .collect();
+    let r = bench("Simulator (scalar) 512 cycles, n=64 neuron", 3, 30, || {
+        let mut sim = Simulator::new(nl);
+        for i in &inputs {
+            sim.step(i);
+        }
+        sim.activity().cycles
+    });
+    println!("{}", r.report());
+    println!(
+        "  -> {:.2} M cell-evals/s",
+        r.throughput(512 * n_cells as u64) / 1e6
+    );
+
+    // 64-lane simulator
+    let words: Vec<Vec<u64>> = (0..512)
+        .map(|_| (0..nl.primary_inputs.len()).map(|_| rng.next_u64()).collect())
+        .collect();
+    let r64 = bench("Simulator64 512 cycles x 64 lanes, n=64 neuron", 3, 30, || {
+        let mut sim = Simulator64::new(nl);
+        for w in &words {
+            sim.step(w);
+        }
+        sim.activity().cycles
+    });
+    println!("{}", r64.report());
+    println!(
+        "  -> {:.2} M lane-cell-evals/s ({:.1}x over scalar)",
+        r64.throughput(512 * 64 * n_cells as u64) / 1e6,
+        r64.throughput(512 * 64 * n_cells as u64) / r.throughput(512 * n_cells as u64)
+    );
+
+    // selector bit evaluation (the software model of the dendrite)
+    let sel = TopkSelector::catwalk(64, 2).unwrap();
+    let bits: Vec<Vec<bool>> = (0..1024)
+        .map(|_| (0..64).map(|_| rng.gen_bool(0.1)).collect())
+        .collect();
+    let r = bench("TopkSelector::apply_bits 1024 vectors n=64", 3, 50, || {
+        bits.iter().map(|b| sel.apply_bits(b).len()).sum::<usize>()
+    });
+    println!("{}", r.report());
+
+    // behavioral neuron
+    let pulses: Vec<Vec<bool>> = (0..4096)
+        .map(|_| (0..64).map(|_| rng.gen_bool(0.1)).collect())
+        .collect();
+    let r = bench("BehavioralNeuron 4096 steps n=64", 3, 50, || {
+        let mut b = BehavioralNeuron::new(DendriteKind::TopkPc, &cfg);
+        let mut fired = 0u32;
+        for p in &pulses {
+            fired += b.step(p, 6, false) as u32;
+        }
+        fired
+    });
+    println!("{}", r.report());
+
+    // end-to-end DSE sweep (the parallel experiment driver)
+    let stim = StimulusConfig {
+        windows: 16,
+        ..Default::default()
+    };
+    let r = bench("DSE paper grid (12 points, 16 windows)", 1, 5, || {
+        sweep(&paper_grid(), &stim, 0).unwrap().len()
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,92 @@
+//! PJRT runtime benches: forward/train execution latency per column
+//! configuration, batcher throughput under concurrent load (the serving
+//! numbers of E10). Skips if `make artifacts` has not run.
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::coordinator::pool::par_map;
+use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
+use catwalk::rng::Xoshiro256;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP runtime_pjrt bench: run `make artifacts` first");
+        return;
+    }
+    bench_header("PJRT runtime (E10 serving numbers)");
+
+    for n in [16usize, 32, 64] {
+        let handle = TnnHandle::open("artifacts", n, 6.0, 1).unwrap();
+        let mut rng = Xoshiro256::new(n as u64);
+        let volleys: Vec<Vec<f32>> = (0..handle.b)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        if rng.gen_bool(0.3) {
+                            rng.gen_range(8) as f32
+                        } else {
+                            16.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let r = bench(
+            &format!("forward batch={} n={n} c={}", handle.b, handle.c),
+            3,
+            30,
+            || handle.infer(volleys.clone()).unwrap().len(),
+        );
+        println!("{}", r.report());
+        println!(
+            "  -> {:.0} volleys/s",
+            r.throughput(handle.b as u64)
+        );
+        let r = bench(
+            &format!("train   batch={} n={n} c={}", handle.b, handle.c),
+            3,
+            30,
+            || handle.learn(volleys.clone()).unwrap().len(),
+        );
+        println!("{}", r.report());
+    }
+
+    // batcher throughput: 8 client threads hammering single volleys
+    let handle = TnnHandle::open("artifacts", 64, 6.0, 2).unwrap();
+    let batcher = Arc::new(DynamicBatcher::start(
+        handle.clone(),
+        BatcherConfig::default(),
+    ));
+    let t0 = Instant::now();
+    let reqs = 8 * 128;
+    par_map(8, (0..8).collect::<Vec<_>>(), |tid| {
+        let mut rng = Xoshiro256::new(tid as u64);
+        for _ in 0..128 {
+            let v: Vec<f32> = (0..64)
+                .map(|_| {
+                    if rng.gen_bool(0.2) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        16.0
+                    }
+                })
+                .collect();
+            batcher.submit(v).unwrap();
+        }
+    });
+    let wall = t0.elapsed();
+    println!(
+        "batcher: {reqs} single-volley requests via 8 threads in {wall:?} -> {:.0} req/s",
+        reqs as f64 / wall.as_secs_f64()
+    );
+    if let Some(s) = handle.metrics.summary("request_latency") {
+        println!(
+            "  request latency p50<={}us p95<={}us p99<={}us (batches: {})",
+            s.p50_us,
+            s.p95_us,
+            s.p99_us,
+            handle.metrics.counter("batches")
+        );
+    }
+}

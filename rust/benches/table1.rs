@@ -1,0 +1,25 @@
+//! Bench: regenerate Table I (P&R results) plus the headline ratios, and
+//! time the full end-to-end experiment.
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::experiments::activity::StimulusConfig;
+use catwalk::experiments::figures::{headline_ratios, table1};
+
+fn main() {
+    let stim = StimulusConfig {
+        windows: 128,
+        ..Default::default()
+    };
+    bench_header("Table I — place-and-route (E7)");
+    print!("{}", table1(&stim).expect("table1").render());
+    print!("{}", headline_ratios(&stim).expect("headline").render());
+
+    let quick = StimulusConfig {
+        windows: 24,
+        ..Default::default()
+    };
+    let r = bench("table1 full regeneration (24 windows)", 1, 5, || {
+        table1(&quick).unwrap()
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,120 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with median/mean/min/max and a
+//! simple throughput report, used by all `rust/benches/*.rs` targets
+//! (`harness = false`). Deliberately minimal: monotonic clock, black-box
+//! value sink, no statistical machinery beyond what the experiment
+//! reports need.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+    pub fn max(&self) -> Duration {
+        *self.samples.iter().max().unwrap()
+    }
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    /// Pretty one-liner like `name  median 1.234ms  (min 1.1ms, max 2ms, n=20)`.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>10}  min {:>10}  max {:>10}  n={}",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.min()),
+            fmt_duration(self.max()),
+            self.samples.len()
+        )
+    }
+
+    /// items/second at the median sample.
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.median().as_secs_f64()
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `samples` measured iterations.
+/// The closure's return value is black-boxed so the work is not DCE'd.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        black_box(f());
+        out.push(t0.elapsed());
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples: out,
+    }
+}
+
+/// Standard header printed by every bench binary.
+pub fn bench_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.min() <= r.median() && r.median() <= r.max());
+        assert!(r.median() > Duration::ZERO);
+    }
+
+    #[test]
+    fn fmt_durations() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let r = bench("t", 0, 3, || std::thread::sleep(Duration::from_micros(100)));
+        assert!(r.throughput(1000) > 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `repro <subcommand> [--flag value] [--bool-flag]` with typed
+//! accessors and an auto-generated usage block. Every experiment driver
+//! binds its knobs through this.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (element 0 = program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().skip(1);
+        let subcommand = it.next().unwrap_or_default();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let mut pending: Option<String> = None;
+        for arg in it {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some(prev) = pending.take() {
+                    switches.push(prev);
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    pending = Some(name.to_string());
+                }
+            } else if let Some(name) = pending.take() {
+                flags.insert(name, arg);
+            } else {
+                return Err(Error::Usage(format!("unexpected positional `{arg}`")));
+            }
+        }
+        if let Some(prev) = pending.take() {
+            switches.push(prev);
+        }
+        Ok(Args {
+            subcommand,
+            flags,
+            switches,
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Usage(format!("--{name} `{v}`: {e}"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Usage(format!("--{name} `{v}`: {e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Usage(format!("--{name} `{v}`: {e}"))),
+        }
+    }
+
+    pub fn get_string(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("repro".to_string())
+            .chain(s.split_whitespace().map(|x| x.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(argv("fig7 --windows 64 --sparsity=0.01 --csv")).unwrap();
+        assert_eq!(a.subcommand, "fig7");
+        assert_eq!(a.get_usize("windows", 0).unwrap(), 64);
+        assert_eq!(a.get_f64("sparsity", 0.0).unwrap(), 0.01);
+        assert!(a.switch("csv"));
+        assert!(!a.switch("json"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv("table1")).unwrap();
+        assert_eq!(a.get_usize("windows", 192).unwrap(), 192);
+        assert_eq!(a.get_string("addr", "127.0.0.1:7070"), "127.0.0.1:7070");
+    }
+
+    #[test]
+    fn rejects_bad_values_and_positionals() {
+        let a = Args::parse(argv("fig7 --windows abc")).unwrap();
+        assert!(a.get_usize("windows", 1).is_err());
+        assert!(Args::parse(argv("fig7 stray")).is_err());
+    }
+
+    #[test]
+    fn trailing_switch_works() {
+        let a = Args::parse(argv("serve --learn")).unwrap();
+        assert!(a.switch("learn"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Dynamic batcher: vLLM-style request grouping for the TNN service.
+//!
+//! Requests (single volleys) arrive from many client threads; a dedicated
+//! batching thread drains the queue and fires a PJRT execution when
+//! either `max_batch` requests are pending or the oldest request has
+//! waited `flush_after` — the standard latency/throughput trade the
+//! serving papers tune. Results are delivered through per-request
+//! one-shot channels.
+
+use crate::coordinator::service::{TnnHandle, VolleyResult};
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// max requests per execution (must be <= artifact batch size)
+    pub max_batch: usize,
+    /// flush the queue when the oldest request has waited this long
+    pub flush_after: Duration,
+    /// learning mode: route batches through `learn` instead of `infer`
+    pub learn: bool,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            flush_after: Duration::from_millis(2),
+            learn: false,
+        }
+    }
+}
+
+struct Pending {
+    volley: Vec<f32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<VolleyResult>>,
+}
+
+struct Queue {
+    pending: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// The batcher front-end; `Clone` to share across client threads.
+pub struct DynamicBatcher {
+    service: TnnHandle,
+    cfg: BatcherConfig,
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    stop: Arc<AtomicBool>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl DynamicBatcher {
+    pub fn start(service: TnnHandle, cfg: BatcherConfig) -> DynamicBatcher {
+        assert!(cfg.max_batch >= 1 && cfg.max_batch <= service.b);
+        let queue = Arc::new((
+            Mutex::new(Queue {
+                pending: VecDeque::new(),
+                closed: false,
+            }),
+            Condvar::new(),
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let service = service.clone();
+            let queue = queue.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("catwalk-batcher".into())
+                .spawn(move || batch_loop(service, cfg, queue, stop))
+                .expect("spawn batcher")
+        };
+        DynamicBatcher {
+            service,
+            cfg,
+            queue,
+            stop,
+            worker: Some(worker),
+        }
+    }
+
+    pub fn service(&self) -> &TnnHandle {
+        &self.service
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg
+    }
+
+    /// Submit one volley and block for its result.
+    pub fn submit(&self, volley: Vec<f32>) -> Result<VolleyResult> {
+        let (tx, rx): (_, Receiver<Result<VolleyResult>>) = sync_channel(1);
+        {
+            let (lock, cv) = &*self.queue;
+            let mut q = lock.lock().unwrap();
+            if q.closed {
+                return Err(Error::Coordinator("batcher is shut down".into()));
+            }
+            q.pending.push_back(Pending {
+                volley,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            self.service.metrics.incr("requests", 1);
+            cv.notify_one();
+        }
+        rx.recv()
+            .map_err(|_| Error::Coordinator("batcher dropped request".into()))?
+    }
+
+    /// Graceful shutdown: flush remaining requests, then join the worker.
+    pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        {
+            let (lock, cv) = &*self.queue;
+            let mut q = lock.lock().unwrap();
+            q.closed = true;
+            cv.notify_all();
+        }
+        self.stop.store(true, Ordering::Release);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for DynamicBatcher {
+    fn drop(&mut self) {
+        if self.worker.is_some() {
+            self.do_shutdown();
+        }
+    }
+}
+
+fn batch_loop(
+    service: TnnHandle,
+    cfg: BatcherConfig,
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    stop: Arc<AtomicBool>,
+) {
+    let (lock, cv) = &*queue;
+    loop {
+        // collect a batch
+        let batch: Vec<Pending> = {
+            let mut q = lock.lock().unwrap();
+            loop {
+                if q.pending.len() >= cfg.max_batch {
+                    break;
+                }
+                if !q.pending.is_empty() {
+                    let oldest = q.pending.front().unwrap().enqueued;
+                    let waited = oldest.elapsed();
+                    if waited >= cfg.flush_after {
+                        break;
+                    }
+                    let (guard, _timeout) = cv
+                        .wait_timeout(q, cfg.flush_after - waited)
+                        .unwrap();
+                    q = guard;
+                    continue;
+                }
+                if q.closed && q.pending.is_empty() {
+                    return;
+                }
+                if stop.load(Ordering::Acquire) && q.pending.is_empty() {
+                    return;
+                }
+                let (guard, _) = cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+            let take = q.pending.len().min(cfg.max_batch);
+            q.pending.drain(..take).collect()
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        service.metrics.incr("batches", 1);
+        service
+            .metrics
+            .incr("batched_requests", batch.len() as u64);
+        let volleys: Vec<Vec<f32>> = batch.iter().map(|p| p.volley.clone()).collect();
+        let t0 = Instant::now();
+        let result = if cfg.learn {
+            service.learn(volleys)
+        } else {
+            service.infer(volleys)
+        };
+        service.metrics.record("batch_exec", t0.elapsed());
+        match result {
+            Ok(results) => {
+                for (p, r) in batch.into_iter().zip(results) {
+                    service.metrics.record("request_latency", p.enqueued.elapsed());
+                    let _ = p.reply.send(Ok(r));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for p in batch {
+                    let _ = p
+                        .reply
+                        .send(Err(Error::Coordinator(format!("batch failed: {msg}"))));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end batcher tests (needing PJRT artifacts) live in
+    // rust/tests/runtime_roundtrip.rs; the config invariants are here.
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = BatcherConfig::default();
+        assert!(c.max_batch <= 64);
+        assert!(c.flush_after < Duration::from_millis(100));
+        assert!(!c.learn);
+    }
+}

@@ -1,0 +1,95 @@
+//! Design-space exploration: sweep neuron configurations in parallel.
+//!
+//! Each point builds a netlist, simulates the sparse-volley stimulus for
+//! switching activity, and evaluates the synthesis + P&R estimators —
+//! the inner loop of every figure/table experiment, parallelised over
+//! the pool ([`crate::coordinator::pool::par_map`]).
+
+use crate::coordinator::pool::par_map;
+use crate::error::Result;
+use crate::experiments::activity::{measure_neuron, StimulusConfig};
+use crate::neuron::{DendriteKind, NeuronConfig, NeuronDesign};
+use crate::power::{Estimator, PowerReport};
+
+/// One sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct DsePoint {
+    pub kind: DendriteKind,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// One evaluated result.
+#[derive(Clone, Debug)]
+pub struct DseResult {
+    pub point: DsePoint,
+    pub synthesis: PowerReport,
+    pub pnr: PowerReport,
+}
+
+/// Evaluate every point in parallel (threads = 0 -> all cores).
+pub fn sweep(points: &[DsePoint], stim: &StimulusConfig, threads: usize) -> Result<Vec<DseResult>> {
+    let results = par_map(threads, points.to_vec(), |p| -> Result<DseResult> {
+        let cfg = NeuronConfig {
+            n_inputs: p.n,
+            k: p.k,
+            ..Default::default()
+        };
+        let design = NeuronDesign::build(p.kind, &cfg)?;
+        let activity = measure_neuron(&design, stim);
+        Ok(DseResult {
+            point: p,
+            synthesis: Estimator::synthesis().evaluate(&design.netlist, Some(&activity)),
+            pnr: Estimator::pnr().evaluate(&design.netlist, Some(&activity)),
+        })
+    });
+    results.into_iter().collect()
+}
+
+/// The paper's full grid (4 designs x n in {16,32,64}, k = 2).
+pub fn paper_grid() -> Vec<DsePoint> {
+    let mut out = Vec::new();
+    for n in [16usize, 32, 64] {
+        for kind in DendriteKind::ALL {
+            out.push(DsePoint { kind, n, k: 2 });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_small_grid() {
+        let points = vec![
+            DsePoint {
+                kind: DendriteKind::PcCompact,
+                n: 16,
+                k: 2,
+            },
+            DsePoint {
+                kind: DendriteKind::TopkPc,
+                n: 16,
+                k: 2,
+            },
+        ];
+        let stim = StimulusConfig {
+            windows: 16,
+            ..Default::default()
+        };
+        let res = sweep(&points, &stim, 2).unwrap();
+        assert_eq!(res.len(), 2);
+        for r in &res {
+            assert!(r.pnr.area_um2 > r.synthesis.area_um2 * 1.2);
+            assert!(r.pnr.dynamic_uw > 0.0);
+        }
+    }
+
+    #[test]
+    fn paper_grid_is_full() {
+        let g = paper_grid();
+        assert_eq!(g.len(), 12);
+    }
+}

@@ -1,0 +1,192 @@
+//! Lightweight metrics registry: counters + latency histograms.
+//!
+//! Shared by the batcher, the TNN service and the TCP server; the
+//! `repro serve` status line and the serving bench read \[`Summary`\]
+//! snapshots. Histograms use fixed log-spaced buckets (1 µs .. ~67 s),
+//! which is plenty for p50/p95/p99 readouts.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+const BUCKETS: usize = 27; // 1us * 2^i
+
+/// One latency histogram.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    total: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Upper bound (µs) of the bucket containing quantile `q`.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let want = ((self.total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= want {
+                return 1u64 << i;
+            }
+        }
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.total as f64
+        }
+    }
+}
+
+/// Snapshot of one metric family.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// Registry of named counters and histograms.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<HashMap<String, u64>>,
+    histograms: Mutex<HashMap<String, Histogram>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn record(&self, name: &str, d: Duration) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .record(d);
+    }
+
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        let h = self.histograms.lock().unwrap();
+        let h = h.get(name)?;
+        Some(Summary {
+            count: h.total,
+            mean_us: h.mean_us(),
+            p50_us: h.quantile_us(0.50),
+            p95_us: h.quantile_us(0.95),
+            p99_us: h.quantile_us(0.99),
+            max_us: h.max_us,
+        })
+    }
+
+    /// Render all metrics as a human-readable block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap();
+        let mut names: Vec<_> = counters.keys().collect();
+        names.sort();
+        for name in names {
+            out.push_str(&format!("{name}: {}\n", counters[name]));
+        }
+        drop(counters);
+        let hists = self.histograms.lock().unwrap();
+        let mut names: Vec<_> = hists.keys().cloned().collect();
+        names.sort();
+        for name in names {
+            let h = &hists[&name];
+            out.push_str(&format!(
+                "{name}: n={} mean={:.1}us p50<={}us p95<={}us p99<={}us max={}us\n",
+                h.total,
+                h.mean_us(),
+                h.quantile_us(0.50),
+                h.quantile_us(0.95),
+                h.quantile_us(0.99),
+                h.max_us
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("req", 1);
+        m.incr("req", 2);
+        assert_eq!(m.counter("req"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let m = Metrics::new();
+        for us in [10u64, 20, 50, 100, 1000, 5000] {
+            m.record("lat", Duration::from_micros(us));
+        }
+        let s = m.summary("lat").unwrap();
+        assert_eq!(s.count, 6);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
+        assert!(s.max_us >= 5000);
+        assert!(s.mean_us > 100.0);
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let m = Metrics::new();
+        m.incr("batches", 4);
+        m.record("exec", Duration::from_millis(2));
+        let r = m.render();
+        assert!(r.contains("batches: 4"));
+        assert!(r.contains("exec: n=1"));
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

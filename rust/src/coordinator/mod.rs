@@ -1,0 +1,28 @@
+//! L3 coordinator: the serving/experiment framework.
+//!
+//! The paper's system contribution is a hardware block, so the
+//! coordinator plays two roles (DESIGN.md §2):
+//!
+//! 1. **Experiment orchestration** — a work-stealing-free but sharded
+//!    thread pool ([`pool`]) fans gate-level simulation jobs (every
+//!    figure/table is thousands of volley simulations × design points)
+//!    across cores; [`dse`] exposes the design-space sweep API.
+//! 2. **TNN serving** — a vLLM-style front-end: [`TnnHandle`] owns the
+//!    PJRT executables and the column weight state; [`DynamicBatcher`]
+//!    groups concurrent volley requests into fixed-batch executions
+//!    (the AOT artifacts are compiled for B = 64) with a flush timeout,
+//!    and [`metrics`] records queue/latency/throughput statistics.
+//!
+//! Tokio is not available offline; the pool + channel machinery here is
+//! deliberately small and fully tested (see DESIGN.md §5).
+
+pub mod batcher;
+pub mod dse;
+pub mod metrics;
+pub mod pool;
+pub mod service;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::{Metrics, Summary};
+pub use pool::ThreadPool;
+pub use service::{TnnHandle, VolleyResult};

@@ -1,0 +1,222 @@
+//! Fixed-size thread pool + structured parallel map.
+//!
+//! `submit` enqueues boxed jobs on an MPMC channel (a Mutex-guarded
+//! VecDeque with a Condvar — adequate for jobs that run micro- to
+//! milliseconds); `par_map` is a convenience for the experiment drivers:
+//! it splits a Vec of inputs across the pool and preserves order.
+
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    idle: Condvar,
+}
+
+/// Fixed worker pool; dropping joins all workers.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` workers (defaults to available parallelism when 0).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            threads
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            idle: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("catwalk-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job. Fails after shutdown.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(Error::Coordinator("pool is shut down".into()));
+        }
+        self.shared.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.shared.queue.lock().unwrap().push_back(Box::new(job));
+        self.shared.available.notify_one();
+        Ok(())
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let guard = self.shared.queue.lock().unwrap();
+        let _unused = self
+            .shared
+            .idle
+            .wait_while(guard, |_| self.shared.in_flight.load(Ordering::Acquire) > 0)
+            .unwrap();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not kill the worker: catch and continue
+        // (failure injection tests rely on this).
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if shared.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Take the queue lock before notifying so a waiter cannot
+            // check the predicate and park between our decrement and the
+            // notification (classic lost-wakeup guard).
+            let _guard = shared.queue.lock().unwrap();
+            shared.idle.notify_all();
+        }
+    }
+}
+
+/// Order-preserving parallel map over `inputs` using scoped threads (no
+/// pool needed; used by the experiment drivers where each item is
+/// seconds of simulation).
+pub fn par_map<T: Send, R: Send>(
+    threads: usize,
+    inputs: Vec<T>,
+    f: impl Fn(T) -> R + Sync,
+) -> Vec<R> {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    };
+    let n = inputs.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = inputs.into_iter().enumerate().collect();
+    let work = Mutex::new(work);
+    let slots_mx = Mutex::new(&mut slots);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.max(1)) {
+            s.spawn(|| loop {
+                let item = work.lock().unwrap().pop();
+                match item {
+                    Some((idx, input)) => {
+                        let r = f(input);
+                        slots_mx.lock().unwrap()[idx] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("all slots filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..200 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn survives_panicking_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..50 {
+            let c = counter.clone();
+            pool.submit(move || {
+                if i % 5 == 0 {
+                    panic!("injected failure");
+                }
+                c.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn rejects_after_shutdown() {
+        let shared;
+        {
+            let pool = ThreadPool::new(1);
+            shared = pool.shared.clone();
+            pool.wait_idle();
+        }
+        assert!(shared.shutdown.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let inputs: Vec<usize> = (0..500).collect();
+        let out = par_map(8, inputs, |x| x * x);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_single() {
+        assert!(par_map(4, Vec::<usize>::new(), |x| x).is_empty());
+        assert_eq!(par_map(4, vec![7usize], |x| x + 1), vec![8]);
+    }
+}

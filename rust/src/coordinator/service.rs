@@ -1,0 +1,308 @@
+//! TnnService + TnnHandle: the PJRT-backed TNN column.
+//!
+//! The `xla` crate's PJRT types are `!Send` (they hold `Rc` internals),
+//! so all PJRT interaction is confined to one dedicated **engine
+//! thread**: [`TnnHandle::open`] reads the manifest on the caller's
+//! thread (pure JSON), then spawns the engine which opens the PJRT
+//! client, compiles the artifacts and serves requests over an mpsc
+//! channel. [`TnnHandle`] is the `Send + Sync + Clone` face the batcher,
+//! the TCP server and the examples use.
+
+use crate::coordinator::metrics::Metrics;
+use crate::error::{Error, Result};
+use crate::rng::Xoshiro256;
+use crate::runtime::{Executable, Manifest, Runtime, Tensor};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Result for one volley.
+#[derive(Clone, Debug)]
+pub struct VolleyResult {
+    /// per-column first-crossing times (t_max = silent)
+    pub times: Vec<f32>,
+    /// WTA winner, if any column fired
+    pub winner: Option<usize>,
+}
+
+/// Engine-thread-private service (owns the `!Send` PJRT state).
+struct TnnService {
+    n: usize,
+    c: usize,
+    b: usize,
+    t_max: usize,
+    forward: Arc<Executable>,
+    train: Arc<Executable>,
+    weights: Tensor,
+    theta: f32,
+    metrics: Arc<Metrics>,
+}
+
+impl TnnService {
+    fn open(
+        dir: &Path,
+        n: usize,
+        theta: f32,
+        seed: u64,
+        metrics: Arc<Metrics>,
+    ) -> Result<TnnService> {
+        let rt = Runtime::open(dir)?;
+        let entry = rt
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.kind == "forward" && e.n == n)
+            .ok_or_else(|| Error::Runtime(format!("no forward artifact for n={n}")))?
+            .clone();
+        let (c, b) = (entry.c, entry.b);
+        let forward = rt.load(&entry.name)?;
+        let train = rt.load(&format!("tnn_train_n{n}_c{c}_b{b}"))?;
+        let mut rng = Xoshiro256::new(seed);
+        let w: Vec<f32> = (0..c * n)
+            .map(|_| 2.0 + 3.0 * rng.gen_f64() as f32)
+            .collect();
+        Ok(TnnService {
+            n,
+            c,
+            b,
+            t_max: rt.manifest().t_max,
+            forward,
+            train,
+            weights: Tensor::new(vec![c, n], w)?,
+            theta,
+            metrics,
+        })
+    }
+
+    fn pack(&self, volleys: &[Vec<f32>]) -> Result<Tensor> {
+        if volleys.len() > self.b {
+            return Err(Error::Coordinator(format!(
+                "batch {} exceeds artifact batch {}",
+                volleys.len(),
+                self.b
+            )));
+        }
+        let mut data = vec![self.t_max as f32; self.b * self.n];
+        for (r, v) in volleys.iter().enumerate() {
+            if v.len() != self.n {
+                return Err(Error::Coordinator(format!(
+                    "volley width {} != n {}",
+                    v.len(),
+                    self.n
+                )));
+            }
+            data[r * self.n..(r + 1) * self.n].copy_from_slice(v);
+        }
+        Tensor::new(vec![self.b, self.n], data)
+    }
+
+    fn unpack(&self, times: &Tensor, mask: &Tensor, rows: usize) -> Vec<VolleyResult> {
+        (0..rows)
+            .map(|r| {
+                let t: Vec<f32> = (0..self.c).map(|c| times.at2(r, c)).collect();
+                let winner = (0..self.c).find(|&c| mask.at2(r, c) > 0.5);
+                VolleyResult { times: t, winner }
+            })
+            .collect()
+    }
+
+    fn infer(&self, volleys: &[Vec<f32>]) -> Result<Vec<VolleyResult>> {
+        let t0 = Instant::now();
+        let spikes = self.pack(volleys)?;
+        let out = self
+            .forward
+            .run(&[spikes, self.weights.clone(), Tensor::scalar(self.theta)])?;
+        let res = self.unpack(&out[0], &out[1], volleys.len());
+        self.metrics.record("pjrt_forward", t0.elapsed());
+        self.metrics.incr("volleys_inferred", volleys.len() as u64);
+        Ok(res)
+    }
+
+    fn learn(&mut self, volleys: &[Vec<f32>]) -> Result<Vec<VolleyResult>> {
+        let t0 = Instant::now();
+        let spikes = self.pack(volleys)?;
+        let out = self.train.run(&[
+            self.weights.clone(),
+            spikes,
+            Tensor::scalar(self.theta),
+        ])?;
+        self.weights = out[0].clone();
+        let res = self.unpack(&out[1], &out[2], volleys.len());
+        self.metrics.record("pjrt_train", t0.elapsed());
+        self.metrics.incr("volleys_learned", volleys.len() as u64);
+        Ok(res)
+    }
+}
+
+enum EngineMsg {
+    Infer(Vec<Vec<f32>>, SyncSender<Result<Vec<VolleyResult>>>),
+    Learn(Vec<Vec<f32>>, SyncSender<Result<Vec<VolleyResult>>>),
+    GetWeights(SyncSender<Tensor>),
+    SetWeights(Tensor, SyncSender<Result<()>>),
+    Shutdown,
+}
+
+struct EngineShared {
+    tx: Sender<EngineMsg>,
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// `Send + Sync + Clone` handle to the engine thread.
+#[derive(Clone)]
+pub struct TnnHandle {
+    shared: Arc<EngineShared>,
+    pub metrics: Arc<Metrics>,
+    pub n: usize,
+    pub c: usize,
+    pub b: usize,
+    pub t_max: usize,
+}
+
+impl TnnHandle {
+    /// Read the manifest (pure), spawn the engine thread, wait for the
+    /// PJRT compile to finish, return the handle.
+    pub fn open(dir: impl AsRef<Path>, n: usize, theta: f32, seed: u64) -> Result<TnnHandle> {
+        let dir: PathBuf = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            return Err(Error::Runtime(format!(
+                "{} not found — run `make artifacts` first",
+                manifest_path.display()
+            )));
+        }
+        let manifest = Manifest::parse_file(&manifest_path)?;
+        let entry = manifest
+            .entries
+            .iter()
+            .find(|e| e.kind == "forward" && e.n == n)
+            .ok_or_else(|| Error::Runtime(format!("no forward artifact for n={n}")))?
+            .clone();
+        let metrics = Arc::new(Metrics::new());
+
+        let (tx, rx): (Sender<EngineMsg>, Receiver<EngineMsg>) = mpsc::channel();
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let engine_metrics = metrics.clone();
+        let join = std::thread::Builder::new()
+            .name("catwalk-pjrt-engine".into())
+            .spawn(move || {
+                let mut service = match TnnService::open(&dir, n, theta, seed, engine_metrics) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        EngineMsg::Infer(v, reply) => {
+                            let _ = reply.send(service.infer(&v));
+                        }
+                        EngineMsg::Learn(v, reply) => {
+                            let _ = reply.send(service.learn(&v));
+                        }
+                        EngineMsg::GetWeights(reply) => {
+                            let _ = reply.send(service.weights.clone());
+                        }
+                        EngineMsg::SetWeights(w, reply) => {
+                            let r = if w.shape == vec![service.c, service.n] {
+                                service.weights = w;
+                                Ok(())
+                            } else {
+                                Err(Error::Runtime(format!(
+                                    "weights shape {:?} != [{}, {}]",
+                                    w.shape, service.c, service.n
+                                )))
+                            };
+                            let _ = reply.send(r);
+                        }
+                        EngineMsg::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn engine: {e}")))?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("engine died during startup".into()))??;
+
+        Ok(TnnHandle {
+            shared: Arc::new(EngineShared {
+                tx,
+                join: Mutex::new(Some(join)),
+            }),
+            metrics,
+            n,
+            c: entry.c,
+            b: entry.b,
+            t_max: manifest.t_max,
+        })
+    }
+
+    fn call<T>(
+        &self,
+        make: impl FnOnce(SyncSender<T>) -> EngineMsg,
+    ) -> Result<T> {
+        let (tx, rx) = sync_channel(1);
+        self.shared
+            .tx
+            .send(make(tx))
+            .map_err(|_| Error::Coordinator("engine is shut down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("engine dropped request".into()))
+    }
+
+    /// Inference for up to `b` volleys (one PJRT execution).
+    pub fn infer(&self, volleys: Vec<Vec<f32>>) -> Result<Vec<VolleyResult>> {
+        self.call(|tx| EngineMsg::Infer(volleys, tx))?
+    }
+
+    /// One online-learning step over up to `b` volleys; updates weights.
+    pub fn learn(&self, volleys: Vec<Vec<f32>>) -> Result<Vec<VolleyResult>> {
+        self.call(|tx| EngineMsg::Learn(volleys, tx))?
+    }
+
+    pub fn weights(&self) -> Result<Tensor> {
+        self.call(EngineMsg::GetWeights)
+    }
+
+    pub fn set_weights(&self, w: Tensor) -> Result<()> {
+        self.call(|tx| EngineMsg::SetWeights(w, tx))?
+    }
+}
+
+impl Drop for EngineShared {
+    fn drop(&mut self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_artifacts_fails_with_hint() {
+        match TnnHandle::open("/no-such-dir", 16, 6.0, 1) {
+            Err(e) => assert!(e.to_string().contains("make artifacts"), "{e}"),
+            Ok(_) => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn volley_result_shape() {
+        let v = VolleyResult {
+            times: vec![1.0, 16.0],
+            winner: Some(0),
+        };
+        assert_eq!(v.times.len(), 2);
+        assert_eq!(v.winner, Some(0));
+    }
+}

@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the catwalk library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A netlist was structurally invalid (dangling net, combinational
+    /// cycle, arity mismatch, ...).
+    #[error("netlist error: {0}")]
+    Netlist(String),
+
+    /// A sorting/selection network failed verification or was requested
+    /// with unsupported parameters.
+    #[error("sorter error: {0}")]
+    Sorter(String),
+
+    /// Invalid neuron / dendrite configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// The PJRT runtime failed (artifact missing, compile error, shape
+    /// mismatch, ...).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator-level failure (queue closed, worker panicked, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Serving front-end failure.
+    #[error("server error: {0}")]
+    Server(String),
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors bubbled up from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,186 @@
+//! E9 — the accuracy validation the paper defers.
+//!
+//! §III closes with: "Given the high neuronal sparsity within actual
+//! workloads, Catwalk should not cause significant accuracy concerns.
+//! More experimental work is needed to validate this." This module does
+//! that work: it trains the native TNN column with STDP on the clustered
+//! time-series workload under different dendrite clips k (and without
+//! clipping), in **two activity regimes**, and reports clustering
+//! purity, firing rate and clip rate.
+//!
+//! Headline finding (recorded in EXPERIMENTS.md): under biological
+//! sparsity (sparse GRF encoding, ~5 % line activity) k = 2 matches the
+//! unclipped dendrite; when activity rises past ~10 % the clip engages
+//! on most volleys and purity degrades — i.e. the paper's accuracy claim
+//! holds exactly as far as its sparsity assumption does.
+
+use crate::error::Result;
+use crate::report::Table;
+use crate::tnn::workload::ClusteredSeries;
+use crate::tnn::{purity, Column, GrfEncoder, StdpRule, WorkloadConfig};
+
+/// One ablation measurement.
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    pub k_clip: Option<u32>,
+    pub purity: f64,
+    pub firing_rate: f64,
+    /// fraction of evaluation volleys where the clip engaged
+    pub clip_rate: f64,
+}
+
+/// Activity regime of the encoded workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// GRF cutoff 0.60 — ~5 % line activity, the paper's assumption.
+    Sparse,
+    /// GRF cutoff 0.25 — ~14 % line activity, past the paper's range.
+    Dense,
+}
+
+impl Regime {
+    pub fn cutoff(self) -> f32 {
+        match self {
+            Regime::Sparse => 0.60,
+            Regime::Dense => 0.25,
+        }
+    }
+    pub fn label(self) -> &'static str {
+        match self {
+            Regime::Sparse => "sparse (~5% lines)",
+            Regime::Dense => "dense (~14% lines)",
+        }
+    }
+}
+
+/// Train + evaluate one configuration.
+pub fn run_point(
+    k_clip: Option<u32>,
+    regime: Regime,
+    steps: usize,
+    eval: usize,
+    seed: u64,
+) -> Result<AblationPoint> {
+    let cfg = WorkloadConfig {
+        seed,
+        ..Default::default()
+    };
+    let mut series = ClusteredSeries::new(cfg.clone());
+    let mut enc = GrfEncoder::new(cfg.dims, 8, 0.0, 1.0);
+    enc.cutoff = regime.cutoff();
+    let n = enc.n_lines();
+    let c = 8;
+    let theta = match regime {
+        Regime::Sparse => 5.0,
+        Regime::Dense => 6.0,
+    };
+    let mut col = Column::new(n, c, theta, k_clip, seed ^ 0xAB1E);
+    let rule = StdpRule::default();
+
+    for _ in 0..steps {
+        let (_, sample) = series.next_sample();
+        let spikes = enc.encode(&sample);
+        let out = col.forward(&spikes);
+        rule.apply(&mut col, &spikes, &out.times, out.winner);
+    }
+
+    let mut assignments = Vec::with_capacity(eval);
+    let mut fired = 0usize;
+    let mut clipped = 0usize;
+    for _ in 0..eval {
+        let (label, sample) = series.next_sample();
+        let spikes = enc.encode(&sample);
+        let out = col.forward(&spikes);
+        if out.winner.is_some() {
+            fired += 1;
+        }
+        if let Some(k) = k_clip {
+            if col.max_overlap(&spikes) > k {
+                clipped += 1;
+            }
+        }
+        assignments.push((label, out.winner));
+    }
+    Ok(AblationPoint {
+        k_clip,
+        purity: purity(&assignments, cfg.clusters, c),
+        firing_rate: fired as f64 / eval as f64,
+        clip_rate: clipped as f64 / eval as f64,
+    })
+}
+
+/// E9 driver: purity vs k across both activity regimes.
+pub fn ablate_k(steps: usize, eval: usize, seed: u64) -> Result<Table> {
+    let mut t = Table::new(
+        "E9 — clustering accuracy vs dendrite clip k (STDP online learning)",
+        &["regime", "k", "purity", "firing rate", "clip rate"],
+    );
+    for regime in [Regime::Sparse, Regime::Dense] {
+        for k_clip in [None, Some(8), Some(4), Some(2), Some(1)] {
+            let p = run_point(k_clip, regime, steps, eval, seed)?;
+            t.row(vec![
+                regime.label().into(),
+                match k_clip {
+                    None => "unclipped".into(),
+                    Some(k) => k.to_string(),
+                },
+                format!("{:.3}", p.purity),
+                format!("{:.3}", p.firing_rate),
+                format!("{:.3}", p.clip_rate),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learning_reaches_reasonable_purity() {
+        let p = run_point(None, Regime::Sparse, 800, 300, 11).unwrap();
+        assert!(p.firing_rate > 0.5, "firing {:?}", p);
+        assert!(p.purity > 0.6, "purity {:?}", p);
+    }
+
+    #[test]
+    fn k2_close_to_unclipped_in_sparse_regime() {
+        // The paper's central accuracy claim, under its own sparsity
+        // assumption.
+        let base = run_point(None, Regime::Sparse, 800, 300, 13).unwrap();
+        let k2 = run_point(Some(2), Regime::Sparse, 800, 300, 13).unwrap();
+        assert!(
+            k2.purity >= base.purity - 0.20,
+            "k=2 purity {} vs unclipped {}",
+            k2.purity,
+            base.purity
+        );
+        // clipping is driven by simultaneous *pulse overlap*, which is
+        // larger than spike-count sparsity suggests (pulses are up to 7
+        // cycles wide) — the honest boundary of the paper's claim; see
+        // EXPERIMENTS.md E9.
+        assert!(k2.clip_rate < 0.6, "sparse-regime clip rate: {}", k2.clip_rate);
+    }
+
+    #[test]
+    fn dense_regime_clips_k2_heavily() {
+        // The boundary of the claim: past ~10% activity the clip engages
+        // on most volleys.
+        let k2 = run_point(Some(2), Regime::Dense, 300, 300, 17).unwrap();
+        assert!(k2.clip_rate > 0.5, "clip rate {}", k2.clip_rate);
+    }
+
+    #[test]
+    fn k1_clips_more_than_k4() {
+        let k1 = run_point(Some(1), Regime::Sparse, 300, 300, 17).unwrap();
+        let k4 = run_point(Some(4), Regime::Sparse, 300, 300, 17).unwrap();
+        assert!(k1.clip_rate >= k4.clip_rate);
+    }
+
+    #[test]
+    fn table_renders_ten_rows() {
+        let t = ablate_k(120, 80, 3).unwrap();
+        assert_eq!(t.rows.len(), 10);
+    }
+}

@@ -1,0 +1,190 @@
+//! Shared switching-activity measurement for the power experiments.
+//!
+//! Drives 64 independent sparse-volley streams through a netlist with the
+//! bit-parallel simulator ([`crate::sim::Simulator64`]) and returns the
+//! accumulated per-net toggle counts. The stimulus regime implements the
+//! paper's sparsity argument: per gamma window each input line pulses
+//! with probability [`StimulusConfig::sparsity`] (default 5 %), start in
+//! the first half of the window, width = 3-bit response weight.
+
+use crate::neuron::stimulus::{VolleyGen, GAMMA_LEN};
+use crate::neuron::{NeuronDesign, ACC_WIDTH};
+use crate::netlist::Netlist;
+use crate::sim::{Activity, Simulator64};
+
+/// Stimulus parameters shared by E4–E7.
+#[derive(Clone, Copy, Debug)]
+pub struct StimulusConfig {
+    /// per-line pulse probability per gamma window
+    pub sparsity: f64,
+    /// gamma windows simulated (per lane; 64 lanes run in parallel)
+    pub windows: usize,
+    /// soma threshold driven on the threshold bus
+    pub threshold: u32,
+    pub seed: u64,
+}
+
+impl Default for StimulusConfig {
+    fn default() -> Self {
+        StimulusConfig {
+            sparsity: 0.20,
+            windows: 192,
+            threshold: 6,
+            seed: 0xCA7,
+        }
+    }
+}
+
+/// Per-PI pulse-wave generator state: 64 independent volley streams.
+struct LaneStreams {
+    gens: Vec<VolleyGen>,
+    /// current volley of each lane
+    current: Vec<crate::neuron::stimulus::Volley>,
+}
+
+impl LaneStreams {
+    fn new(n: usize, cfg: &StimulusConfig) -> LaneStreams {
+        let mut gens: Vec<VolleyGen> = (0..64)
+            .map(|l| VolleyGen::new(n, cfg.sparsity, cfg.seed ^ (l as u64 * 0x9E37_79B9)))
+            .collect();
+        let current = gens.iter_mut().map(|g| g.next_volley()).collect();
+        LaneStreams { gens, current }
+    }
+
+    fn next_window(&mut self) {
+        for (g, c) in self.gens.iter_mut().zip(self.current.iter_mut()) {
+            *c = g.next_volley();
+        }
+    }
+
+    /// PI words for the n pulse lines at cycle `t` of the window.
+    fn pulse_words(&self, n: usize, t: usize) -> Vec<u64> {
+        let mut words = vec![0u64; n];
+        for (lane, v) in self.current.iter().enumerate() {
+            for &(i, s, w) in &v.pulses {
+                if t >= s && t < s + w {
+                    words[i] |= 1 << lane;
+                }
+            }
+        }
+        words
+    }
+}
+
+/// Measure a *neuron* netlist (pulse lines + threshold bus + reset PI).
+pub fn measure_neuron(design: &NeuronDesign, cfg: &StimulusConfig) -> Activity {
+    let n = design.n_pulse_inputs;
+    let nl = &design.netlist;
+    let mut sim = Simulator64::new(nl);
+    let mut streams = LaneStreams::new(n, cfg);
+    let thr_words: Vec<u64> = (0..ACC_WIDTH)
+        .map(|b| {
+            if (cfg.threshold >> b) & 1 == 1 {
+                u64::MAX
+            } else {
+                0
+            }
+        })
+        .collect();
+    for _ in 0..cfg.windows {
+        // reset cycle at the gamma boundary
+        let mut pi = vec![0u64; n];
+        pi.extend_from_slice(&thr_words);
+        pi.push(u64::MAX);
+        sim.step(&pi);
+        for t in 0..GAMMA_LEN {
+            let mut pi = streams.pulse_words(n, t);
+            pi.extend_from_slice(&thr_words);
+            pi.push(0);
+            sim.step(&pi);
+        }
+        streams.next_window();
+    }
+    sim.activity().clone()
+}
+
+/// Measure a *combinational* netlist whose PIs are exactly n pulse lines
+/// (standalone sorters / selectors / PCs — Figs. 7 and 8).
+pub fn measure_lines(nl: &Netlist, n: usize, cfg: &StimulusConfig) -> Activity {
+    assert_eq!(nl.primary_inputs.len(), n);
+    let mut sim = Simulator64::new(nl);
+    let mut streams = LaneStreams::new(n, cfg);
+    for _ in 0..cfg.windows {
+        for t in 0..GAMMA_LEN {
+            let pi = streams.pulse_words(n, t);
+            sim.step(&pi);
+        }
+        streams.next_window();
+    }
+    sim.activity().clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neuron::{DendriteKind, NeuronConfig};
+
+    #[test]
+    fn neuron_activity_is_nonzero_and_bounded() {
+        let cfg = NeuronConfig {
+            n_inputs: 16,
+            k: 2,
+            ..Default::default()
+        };
+        let d = NeuronDesign::build(DendriteKind::PcCompact, &cfg).unwrap();
+        let act = measure_neuron(
+            &d,
+            &StimulusConfig {
+                windows: 32,
+                ..Default::default()
+            },
+        );
+        assert_eq!(act.cycles, 32 * (GAMMA_LEN as u64 + 1) * 64);
+        let rate = act.mean_toggle_rate();
+        assert!(rate > 0.0 && rate < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn sparser_stimulus_toggles_less() {
+        let cfg = NeuronConfig {
+            n_inputs: 32,
+            k: 2,
+            ..Default::default()
+        };
+        let d = NeuronDesign::build(DendriteKind::PcCompact, &cfg).unwrap();
+        let lo = measure_neuron(
+            &d,
+            &StimulusConfig {
+                sparsity: 0.01,
+                windows: 64,
+                ..Default::default()
+            },
+        );
+        let hi = measure_neuron(
+            &d,
+            &StimulusConfig {
+                sparsity: 0.30,
+                windows: 64,
+                ..Default::default()
+            },
+        );
+        let sum = |a: &Activity| a.net_toggles.iter().sum::<u64>();
+        assert!(sum(&hi) > sum(&lo) * 2, "hi={} lo={}", sum(&hi), sum(&lo));
+    }
+
+    #[test]
+    fn lines_measurement_matches_pi_count() {
+        use crate::topk::TopkSelector;
+        let sel = TopkSelector::catwalk(16, 2).unwrap();
+        let nl = sel.to_netlist("t").unwrap();
+        let act = measure_lines(
+            &nl,
+            16,
+            &StimulusConfig {
+                windows: 16,
+                ..Default::default()
+            },
+        );
+        assert!(act.cycles > 0);
+    }
+}

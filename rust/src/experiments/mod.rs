@@ -1,0 +1,15 @@
+//! Experiment drivers — one per table/figure of the paper.
+//!
+//! Every driver returns [`crate::report::Table`]s whose rows mirror what
+//! the paper plots, so `repro figN` on the CLI, the bench binaries, and
+//! EXPERIMENTS.md all share a single implementation. See DESIGN.md §4
+//! for the experiment index (E1–E10).
+
+pub mod ablation;
+pub mod activity;
+pub mod figures;
+pub mod sparsity;
+
+pub use ablation::ablate_k;
+pub use figures::{fig5, fig6a, fig6b, fig7, fig8, fig9, table1};
+pub use sparsity::sparsity_study;

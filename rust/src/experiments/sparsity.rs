@@ -1,0 +1,166 @@
+//! E8 — the sparsity study behind the paper's k = 2 choice.
+//!
+//! The paper's §III argument: biologically only 0.1–10 % of neurons spike
+//! per compute cycle, so a k = 2 selector rarely clips. We measure this
+//! on (a) synthetic volleys across the sparsity range and (b) the actual
+//! GRF-encoded TNN workload, reporting the distribution of *simultaneous
+//! pulse overlap* — the quantity that decides whether the Catwalk
+//! dendrite's count ever clips.
+
+use crate::error::Result;
+use crate::neuron::stimulus::{VolleyGen, GAMMA_LEN};
+use crate::report::Table;
+use crate::rng::Xoshiro256;
+use crate::tnn::{Column, GrfEncoder, WorkloadConfig};
+use crate::tnn::workload::ClusteredSeries;
+
+/// Overlap distribution for one configuration.
+#[derive(Clone, Debug)]
+pub struct OverlapStats {
+    /// histogram of max simultaneous overlap per volley (index = overlap)
+    pub hist: Vec<u64>,
+    pub volleys: u64,
+}
+
+impl OverlapStats {
+    /// P(overlap > k): the clip probability for a top-k dendrite.
+    pub fn clip_probability(&self, k: usize) -> f64 {
+        let over: u64 = self.hist.iter().skip(k + 1).sum();
+        over as f64 / self.volleys.max(1) as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        let total: u64 = self
+            .hist
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| i as u64 * c)
+            .sum();
+        total as f64 / self.volleys.max(1) as f64
+    }
+}
+
+/// Synthetic volleys at a given sparsity.
+pub fn synthetic_overlap(n: usize, sparsity: f64, volleys: usize, seed: u64) -> OverlapStats {
+    let mut gen = VolleyGen::new(n, sparsity, seed);
+    let mut hist = vec![0u64; n + 1];
+    for _ in 0..volleys {
+        let v = gen.next_volley();
+        hist[v.max_overlap(GAMMA_LEN)] += 1;
+    }
+    OverlapStats {
+        hist,
+        volleys: volleys as u64,
+    }
+}
+
+/// GRF-encoded workload overlap through a real column's weights.
+pub fn workload_overlap(volleys: usize, seed: u64) -> OverlapStats {
+    let mut series = ClusteredSeries::new(WorkloadConfig {
+        seed,
+        ..Default::default()
+    });
+    let enc = GrfEncoder::new(4, 16, 0.0, 1.0);
+    let n = enc.n_lines();
+    let col = Column::new(n, 16, 8.0, None, seed ^ 0xF00D);
+    let mut hist = vec![0u64; n + 1];
+    for _ in 0..volleys {
+        let (_, sample) = series.next_sample();
+        let spikes = enc.encode(&sample);
+        hist[col.max_overlap(&spikes) as usize] += 1;
+    }
+    OverlapStats {
+        hist,
+        volleys: volleys as u64,
+    }
+}
+
+/// E8 driver: table of clip probabilities across the biological sparsity
+/// range plus the real workload row.
+pub fn sparsity_study(volleys: usize, seed: u64) -> Result<Table> {
+    let mut t = Table::new(
+        "E8 — simultaneous-overlap statistics (clip probability of top-k)",
+        &["stimulus", "n", "mean overlap", "P(>k=1)", "P(>k=2)", "P(>k=4)"],
+    );
+    for n in [16usize, 32, 64] {
+        for sparsity in [0.001, 0.01, 0.05, 0.10] {
+            let st = synthetic_overlap(n, sparsity, volleys, seed);
+            t.row(vec![
+                format!("synthetic p={sparsity}"),
+                n.to_string(),
+                format!("{:.3}", st.mean()),
+                format!("{:.4}", st.clip_probability(1)),
+                format!("{:.4}", st.clip_probability(2)),
+                format!("{:.4}", st.clip_probability(4)),
+            ]);
+        }
+    }
+    let wl = workload_overlap(volleys, seed ^ 0x51AB);
+    t.row(vec![
+        "GRF workload".into(),
+        "64".into(),
+        format!("{:.3}", wl.mean()),
+        format!("{:.4}", wl.clip_probability(1)),
+        format!("{:.4}", wl.clip_probability(2)),
+        format!("{:.4}", wl.clip_probability(4)),
+    ]);
+    Ok(t)
+}
+
+/// Mean spiking-line fraction of the GRF workload (the paper's
+/// "0.1%–10% of neurons fire" check).
+pub fn workload_activity(samples: usize, seed: u64) -> f64 {
+    let mut series = ClusteredSeries::new(WorkloadConfig {
+        seed,
+        ..Default::default()
+    });
+    let enc = GrfEncoder::new(4, 16, 0.0, 1.0);
+    let mut rng = Xoshiro256::new(seed);
+    let _ = &mut rng;
+    let mut acc = 0.0;
+    for _ in 0..samples {
+        let (_, s) = series.next_sample();
+        acc += enc.activity(&s);
+    }
+    acc / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_stimulus_rarely_clips_k2() {
+        let st = synthetic_overlap(64, 0.01, 4000, 1);
+        assert!(st.clip_probability(2) < 0.02, "{}", st.clip_probability(2));
+        assert!(st.mean() < 1.0);
+    }
+
+    #[test]
+    fn dense_stimulus_clips_often() {
+        let st = synthetic_overlap(64, 0.30, 2000, 2);
+        assert!(st.clip_probability(2) > 0.5, "{}", st.clip_probability(2));
+    }
+
+    #[test]
+    fn clip_probability_monotone_in_k() {
+        let st = synthetic_overlap(32, 0.10, 3000, 3);
+        assert!(st.clip_probability(1) >= st.clip_probability(2));
+        assert!(st.clip_probability(2) >= st.clip_probability(4));
+    }
+
+    #[test]
+    fn workload_activity_in_biological_range() {
+        let a = workload_activity(300, 5);
+        // paper §III: 0.1%..10%; GRF encoding sits inside (we allow a bit
+        // of slack above since our encoder is small).
+        assert!(a > 0.001 && a < 0.35, "activity={a}");
+    }
+
+    #[test]
+    fn study_table_renders() {
+        let t = sparsity_study(500, 7).unwrap();
+        assert_eq!(t.rows.len(), 13);
+        assert!(t.render().contains("GRF workload"));
+    }
+}

@@ -1,0 +1,57 @@
+//! # Catwalk — unary top-k ramp-no-leak neurons for temporal neural networks
+//!
+//! Full-system reproduction of *"Catwalk: Unary Top-K for Efficient
+//! Ramp-No-Leak Neuron Design for Temporal Neural Networks"* (ISVLSI 2025).
+//!
+//! The crate is organised in three strata (see `DESIGN.md`):
+//!
+//! 1. **Hardware substrate** — a gate-level netlist IR ([`netlist`]), a
+//!    NanGate45-calibrated cell cost library ([`cells`]), a cycle-accurate
+//!    levelized logic simulator with switching-activity capture ([`sim`]),
+//!    and synthesis / place-and-route estimators ([`power`]). These stand
+//!    in for the paper's Synopsys DC + Cadence Innovus flow.
+//! 2. **The paper's contribution** — unary sorting networks ([`sorters`]),
+//!    the top-k pruning algorithm ([`topk`], Algorithm 1 of the paper),
+//!    parallel counters ([`pc`]), and the assembled SRM0-RNL / Catwalk
+//!    neurons ([`neuron`]). The TNN functional layer (columns, STDP, WTA,
+//!    temporal encoders) lives in [`tnn`].
+//! 3. **The L3 coordinator** — a PJRT runtime bridge ([`runtime`]) that
+//!    executes the AOT-compiled JAX/Pallas artifacts, a thread-pool DSE
+//!    scheduler and dynamic volley batcher ([`coordinator`]), a TCP
+//!    serving front-end ([`server`]), experiment drivers for every figure
+//!    and table in the paper ([`experiments`]), and report renderers
+//!    ([`report`]).
+//!
+//! The public API a downstream user touches first:
+//!
+//! ```no_run
+//! use catwalk::neuron::{NeuronConfig, DendriteKind, NeuronDesign};
+//! use catwalk::power::PnrEstimator;
+//!
+//! let cfg = NeuronConfig { n_inputs: 64, k: 2, ..Default::default() };
+//! let catwalk = NeuronDesign::build(DendriteKind::TopkPc, &cfg).unwrap();
+//! let report = PnrEstimator::default().evaluate(&catwalk.netlist, None);
+//! println!("area = {:.2} um^2, leakage = {:.2} uW", report.area_um2, report.leakage_uw);
+//! ```
+
+pub mod bench_util;
+pub mod cells;
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod netlist;
+pub mod neuron;
+pub mod pc;
+pub mod power;
+pub mod quickprop;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod sorters;
+pub mod tnn;
+pub mod topk;
+
+pub use error::{Error, Result};

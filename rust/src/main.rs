@@ -1,0 +1,285 @@
+//! `repro` — the launcher for every experiment, the serving daemon and
+//! the load generator.
+//!
+//! ```text
+//! repro fig5|fig6a|fig6b|fig7|fig8|fig9|table1 [--csv] [--windows N] [--sparsity P]
+//! repro headline            # abstract's 1.39x/1.86x comparison
+//! repro ablation-flavors    # selector-construction ablation
+//! repro sparsity            # E8 sparsity study
+//! repro ablate-k            # E9 accuracy ablation
+//! repro dse                 # parallel design-space sweep
+//! repro cluster             # E10 end-to-end STDP clustering via PJRT
+//! repro serve [--addr A]    # TCP serving daemon over the batcher
+//! repro client [--addr A]   # load generator against a daemon
+//! repro all                 # every figure/table, EXPERIMENTS.md-ready
+//! ```
+
+use catwalk::cli::Args;
+use catwalk::coordinator::dse;
+use catwalk::coordinator::{BatcherConfig, TnnHandle};
+use catwalk::error::{Error, Result};
+use catwalk::experiments::activity::StimulusConfig;
+use catwalk::experiments::figures;
+use catwalk::experiments::{ablate_k, sparsity_study};
+use catwalk::report::Table;
+use catwalk::server::{Client, Server};
+use catwalk::tnn::workload::ClusteredSeries;
+use catwalk::tnn::{GrfEncoder, WorkloadConfig};
+use std::time::Instant;
+
+fn main() {
+    let args = match Args::parse(std::env::args()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT]";
+
+fn emit(t: &Table, csv: bool) {
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+}
+
+fn stim_from(args: &Args) -> Result<StimulusConfig> {
+    let d = StimulusConfig::default();
+    Ok(StimulusConfig {
+        sparsity: args.get_f64("sparsity", d.sparsity)?,
+        windows: args.get_usize("windows", d.windows)?,
+        threshold: args.get_usize("threshold", d.threshold as usize)? as u32,
+        seed: args.get_u64("seed", d.seed)?,
+    })
+}
+
+fn run(args: &Args) -> Result<()> {
+    let csv = args.switch("csv");
+    match args.subcommand.as_str() {
+        "fig5" => emit(&figures::fig5()?, csv),
+        "fig6a" => emit(&figures::fig6a()?, csv),
+        "fig6b" => emit(&figures::fig6b()?, csv),
+        "fig7" => emit(&figures::fig7(&stim_from(args)?)?, csv),
+        "fig8" => emit(&figures::fig8(&stim_from(args)?)?, csv),
+        "fig9" => emit(&figures::fig9(&stim_from(args)?)?, csv),
+        "table1" => emit(&figures::table1(&stim_from(args)?)?, csv),
+        "headline" => emit(&figures::headline_ratios(&stim_from(args)?)?, csv),
+        "ablation-flavors" => emit(&figures::merge_flavor_ablation()?, csv),
+        "sparsity" => emit(
+            &sparsity_study(
+                args.get_usize("volleys", 5000)?,
+                args.get_u64("seed", 1)?,
+            )?,
+            csv,
+        ),
+        "ablate-k" => emit(
+            &ablate_k(
+                args.get_usize("steps", 800)?,
+                args.get_usize("eval", 400)?,
+                args.get_u64("seed", 11)?,
+            )?,
+            csv,
+        ),
+        "dse" => cmd_dse(args, csv)?,
+        "cluster" => cmd_cluster(args)?,
+        "serve" => cmd_serve(args)?,
+        "client" => cmd_client(args)?,
+        "export-verilog" => cmd_export_verilog(args)?,
+        "all" => cmd_all(args, csv)?,
+        "" => {
+            println!("{USAGE}");
+        }
+        other => return Err(Error::Usage(format!("unknown subcommand `{other}`\n{USAGE}"))),
+    }
+    Ok(())
+}
+
+fn cmd_all(args: &Args, csv: bool) -> Result<()> {
+    let stim = stim_from(args)?;
+    emit(&figures::fig5()?, csv);
+    emit(&figures::fig6a()?, csv);
+    emit(&figures::fig6b()?, csv);
+    emit(&figures::fig7(&stim)?, csv);
+    emit(&figures::fig8(&stim)?, csv);
+    emit(&figures::fig9(&stim)?, csv);
+    emit(&figures::table1(&stim)?, csv);
+    emit(&figures::headline_ratios(&stim)?, csv);
+    emit(&figures::merge_flavor_ablation()?, csv);
+    emit(&sparsity_study(5000, 1)?, csv);
+    emit(&ablate_k(800, 400, 11)?, csv);
+    Ok(())
+}
+
+fn cmd_dse(args: &Args, csv: bool) -> Result<()> {
+    let stim = stim_from(args)?;
+    let threads = args.get_usize("threads", 0)?;
+    let t0 = Instant::now();
+    let results = dse::sweep(&dse::paper_grid(), &stim, threads)?;
+    let mut t = Table::new(
+        format!("DSE sweep ({} points in {:?})", results.len(), t0.elapsed()),
+        &["design", "n", "k", "synth area", "synth uW", "pnr area", "pnr uW"],
+    );
+    for r in &results {
+        t.row(vec![
+            r.point.kind.label().into(),
+            r.point.n.to_string(),
+            r.point.k.to_string(),
+            format!("{:.2}", r.synthesis.area_um2),
+            format!("{:.2}", r.synthesis.total_uw()),
+            format!("{:.2}", r.pnr.area_um2),
+            format!("{:.2}", r.pnr.total_uw()),
+        ]);
+    }
+    emit(&t, csv);
+    Ok(())
+}
+
+/// E10: end-to-end online STDP clustering through L3 -> PJRT -> L2 -> L1.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let artifacts = args.get_string("artifacts", "artifacts");
+    let steps = args.get_usize("steps", 1500)?;
+    let n = args.get_usize("n", 64)?;
+    let seed = args.get_u64("seed", 42)?;
+    let theta = args.get_f64("theta", 12.0)? as f32;
+    let service = TnnHandle::open(&artifacts, n, theta, seed)?;
+    println!(
+        "column: n={} c={} batch={} (artifact tnn_train_n{n}_c{}_b{})",
+        service.n, service.c, service.b, service.c, service.b
+    );
+
+    // GRF-encoded clustered workload sized to the column input width.
+    let fields = 8;
+    let dims = n / fields;
+    let mut enc = GrfEncoder::new(dims, fields, 0.0, 1.0);
+    // stay in the sparse regime the paper's k = 2 dendrite assumes (E8)
+    enc.cutoff = 0.60;
+    let mut series = ClusteredSeries::new(WorkloadConfig {
+        dims,
+        seed,
+        ..Default::default()
+    });
+
+    let batch = service.b;
+    let t0 = Instant::now();
+    let mut purity_log = Vec::new();
+    for step in 0..steps {
+        let samples = series.next_batch(batch);
+        let volleys: Vec<Vec<f32>> = samples.iter().map(|(_, s)| enc.encode(s)).collect();
+        let results = service.learn(volleys)?;
+        if step % 25 == 0 || step + 1 == steps {
+            let assignments: Vec<(usize, Option<usize>)> = samples
+                .iter()
+                .zip(&results)
+                .map(|((label, _), r)| (*label, r.winner))
+                .collect();
+            let p = catwalk::tnn::purity(&assignments, 4, service.c);
+            let fired = results.iter().filter(|r| r.winner.is_some()).count();
+            purity_log.push((step, p));
+            println!(
+                "step {step:>4}  purity {:.3}  firing {:.2}  ({:.1} volleys/s)",
+                p,
+                fired as f64 / batch as f64,
+                ((step + 1) * batch) as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    println!("\nmetrics:\n{}", service.metrics.render());
+    let final_purity = purity_log.last().map(|&(_, p)| p).unwrap_or(0.0);
+    println!("final purity: {final_purity:.3}");
+    if final_purity < 0.6 {
+        return Err(Error::Coordinator(format!(
+            "clustering did not converge (purity {final_purity:.3})"
+        )));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get_string("artifacts", "artifacts");
+    let addr = args.get_string("addr", "127.0.0.1:7070");
+    let n = args.get_usize("n", 64)?;
+    let service = TnnHandle::open(&artifacts, n, 6.0, 7)?;
+    let server = Server::new(service, BatcherConfig::default());
+    println!("serving TNN column (n={n}) on {addr} — protocol: INFER/LEARN/STATS/QUIT");
+    server.serve(&addr, |port| println!("bound on port {port}"))
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_string("addr", "127.0.0.1:7070");
+    let n = args.get_usize("n", 64)?;
+    let requests = args.get_usize("requests", 512)?;
+    let conns = args.get_usize("connections", 8)?;
+    let t0 = Instant::now();
+    let per_conn = requests / conns;
+    let latencies: Vec<Vec<std::time::Duration>> =
+        catwalk::coordinator::pool::par_map(conns, (0..conns).collect(), |ci| {
+            let mut client = Client::connect(&addr).expect("connect");
+            let enc = GrfEncoder::new(n / 8, 8, 0.0, 1.0);
+            let mut series = ClusteredSeries::new(WorkloadConfig {
+                dims: n / 8,
+                seed: ci as u64,
+                ..Default::default()
+            });
+            let mut lats = Vec::with_capacity(per_conn);
+            for _ in 0..per_conn {
+                let (_, s) = series.next_sample();
+                let v = enc.encode(&s);
+                let t = Instant::now();
+                client.infer(&v).expect("infer");
+                lats.push(t.elapsed());
+            }
+            let _ = client.quit();
+            lats
+        });
+    let mut all: Vec<std::time::Duration> = latencies.into_iter().flatten().collect();
+    all.sort();
+    let total = all.len();
+    let wall = t0.elapsed();
+    println!(
+        "{total} requests over {conns} connections in {wall:?} -> {:.1} req/s",
+        total as f64 / wall.as_secs_f64()
+    );
+    if total > 0 {
+        println!(
+            "latency p50 {:?}  p95 {:?}  p99 {:?}  max {:?}",
+            all[total / 2],
+            all[total * 95 / 100],
+            all[(total * 99 / 100).min(total - 1)],
+            all[total - 1]
+        );
+    }
+    Ok(())
+}
+
+/// Export any of the paper's designs as structural Verilog (NanGate45
+/// cell names), e.g. `repro export-verilog --design topk --n 64 --k 2`.
+fn cmd_export_verilog(args: &Args) -> Result<()> {
+    use catwalk::neuron::{DendriteKind, NeuronConfig, NeuronDesign};
+    use catwalk::netlist::verilog::to_verilog;
+    let n = args.get_usize("n", 64)?;
+    let k = args.get_usize("k", 2)?;
+    let design = args.get_string("design", "topk");
+    let kind = match design.as_str() {
+        "topk" => DendriteKind::TopkPc,
+        "sorting" => DendriteKind::SortingPc,
+        "pc-compact" => DendriteKind::PcCompact,
+        "pc-conventional" => DendriteKind::PcConventional,
+        other => return Err(Error::Usage(format!("unknown --design `{other}`"))),
+    };
+    let cfg = NeuronConfig {
+        n_inputs: n,
+        k,
+        ..Default::default()
+    };
+    let d = NeuronDesign::build(kind, &cfg)?;
+    print!("{}", to_verilog(&d.netlist, &d.netlist.name.clone()));
+    Ok(())
+}

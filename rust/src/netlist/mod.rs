@@ -1,0 +1,617 @@
+//! Gate-level netlist intermediate representation.
+//!
+//! A [`Netlist`] is a flat list of standard cells ([`crate::cells::CellKind`])
+//! connected by integer net ids, plus primary inputs/outputs. It is the
+//! common artifact every generator in this crate produces (sorting
+//! networks, parallel counters, full neurons) and every analysis consumes
+//! (area/power estimation in [`crate::power`], functional + activity
+//! simulation in [`crate::sim`]).
+//!
+//! The IR deliberately mirrors what a technology-mapped synthesis netlist
+//! looks like, so cell statistics translate directly into the paper's
+//! synthesis-result figures.
+
+use crate::cells::{gate_equivalents, CellKind};
+
+pub mod verilog;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Identifier of a single wire.
+pub type NetId = u32;
+
+/// A constant-zero driver is modelled as a special net tied low; builders
+/// request it via [`NetlistBuilder::const_zero`].
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub kind: CellKind,
+    /// `kind.n_inputs()` nets.
+    pub inputs: Vec<NetId>,
+    /// `kind.n_outputs()` nets.
+    pub outputs: Vec<NetId>,
+}
+
+/// An immutable, validated gate-level netlist.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub name: String,
+    pub n_nets: u32,
+    pub cells: Vec<Cell>,
+    pub primary_inputs: Vec<NetId>,
+    pub primary_outputs: Vec<NetId>,
+    /// Nets tied to constant 0 (no driver cell).
+    pub const_zero: Option<NetId>,
+    /// Topological order of combinational cell indices (DFFs excluded);
+    /// computed by [`Netlist::validate`].
+    topo: Vec<u32>,
+    /// Indices of sequential cells.
+    seq: Vec<u32>,
+}
+
+/// Aggregate cell statistics, the raw material for the paper's
+/// "gate count" figures.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CellStats {
+    pub counts: HashMap<CellKind, usize>,
+}
+
+impl CellStats {
+    pub fn total_cells(&self) -> usize {
+        self.counts.values().sum()
+    }
+    /// 2-input-gate equivalents (paper Fig. 6 convention).
+    pub fn gate_equivalents(&self) -> usize {
+        self.counts
+            .iter()
+            .map(|(k, n)| gate_equivalents(*k) * n)
+            .sum()
+    }
+    pub fn count(&self, kind: CellKind) -> usize {
+        self.counts.get(&kind).copied().unwrap_or(0)
+    }
+}
+
+impl Netlist {
+    /// Number of combinational cells in topological order.
+    pub fn topo_order(&self) -> &[u32] {
+        &self.topo
+    }
+
+    /// Indices of sequential (DFF) cells.
+    pub fn sequential_cells(&self) -> &[u32] {
+        &self.seq
+    }
+
+    pub fn stats(&self) -> CellStats {
+        let mut s = CellStats::default();
+        for c in &self.cells {
+            *s.counts.entry(c.kind).or_insert(0) += 1;
+        }
+        s
+    }
+
+    /// Levelize: recompute `topo` and `seq`; verify the combinational part
+    /// is acyclic, arities are consistent, and every net has exactly one
+    /// driver (primary input, cell output, or the constant net).
+    pub fn validate(&mut self) -> Result<()> {
+        let n_nets = self.n_nets as usize;
+        let mut driver: Vec<i64> = vec![-1; n_nets]; // -2 = PI/const, >=0 = cell idx
+        for &pi in &self.primary_inputs {
+            let d = &mut driver[pi as usize];
+            if *d != -1 {
+                return Err(Error::Netlist(format!("net {pi} multiply driven (PI)")));
+            }
+            *d = -2;
+        }
+        if let Some(z) = self.const_zero {
+            let d = &mut driver[z as usize];
+            if *d != -1 {
+                return Err(Error::Netlist("const-zero net multiply driven".into()));
+            }
+            *d = -2;
+        }
+        for (idx, c) in self.cells.iter().enumerate() {
+            if c.inputs.len() != c.kind.n_inputs() || c.outputs.len() != c.kind.n_outputs() {
+                return Err(Error::Netlist(format!(
+                    "cell {idx} ({:?}) arity mismatch",
+                    c.kind
+                )));
+            }
+            for &o in &c.outputs {
+                if o as usize >= n_nets {
+                    return Err(Error::Netlist(format!("cell {idx} drives unknown net {o}")));
+                }
+                let d = &mut driver[o as usize];
+                if *d != -1 {
+                    return Err(Error::Netlist(format!("net {o} multiply driven")));
+                }
+                *d = idx as i64;
+            }
+        }
+        for (idx, c) in self.cells.iter().enumerate() {
+            for &i in &c.inputs {
+                if i as usize >= n_nets || driver[i as usize] == -1 {
+                    return Err(Error::Netlist(format!(
+                        "cell {idx} reads undriven net {i}"
+                    )));
+                }
+            }
+        }
+        for &po in &self.primary_outputs {
+            if po as usize >= n_nets || driver[po as usize] == -1 {
+                return Err(Error::Netlist(format!("primary output {po} undriven")));
+            }
+        }
+
+        // Kahn topological sort over combinational cells. DFF outputs are
+        // sources (state), DFF inputs are sinks.
+        let mut indeg: Vec<u32> = vec![0; self.cells.len()];
+        let mut users: Vec<Vec<u32>> = vec![Vec::new(); n_nets]; // net -> comb cells reading it
+        for (idx, c) in self.cells.iter().enumerate() {
+            if c.kind.is_sequential() {
+                continue;
+            }
+            for &i in &c.inputs {
+                users[i as usize].push(idx as u32);
+            }
+        }
+        for (idx, c) in self.cells.iter().enumerate() {
+            if c.kind.is_sequential() {
+                continue;
+            }
+            let mut d = 0;
+            for &i in &c.inputs {
+                let drv = driver[i as usize];
+                if drv >= 0 && !self.cells[drv as usize].kind.is_sequential() {
+                    d += 1;
+                }
+            }
+            indeg[idx] = d;
+        }
+        let mut queue: Vec<u32> = (0..self.cells.len() as u32)
+            .filter(|&i| !self.cells[i as usize].kind.is_sequential() && indeg[i as usize] == 0)
+            .collect();
+        let mut topo = Vec::with_capacity(self.cells.len());
+        let mut head = 0;
+        while head < queue.len() {
+            let idx = queue[head];
+            head += 1;
+            topo.push(idx);
+            for &o in &self.cells[idx as usize].outputs {
+                for &u in &users[o as usize] {
+                    indeg[u as usize] -= 1;
+                    if indeg[u as usize] == 0 {
+                        queue.push(u);
+                    }
+                }
+            }
+        }
+        let n_comb = self
+            .cells
+            .iter()
+            .filter(|c| !c.kind.is_sequential())
+            .count();
+        if topo.len() != n_comb {
+            return Err(Error::Netlist(format!(
+                "combinational cycle: levelized {} of {} cells",
+                topo.len(),
+                n_comb
+            )));
+        }
+        self.topo = topo;
+        self.seq = (0..self.cells.len() as u32)
+            .filter(|&i| self.cells[i as usize].kind.is_sequential())
+            .collect();
+        Ok(())
+    }
+
+    /// Combinational depth in cell levels (critical path proxy used by the
+    /// timing sanity checks: all designs must close 400 MHz).
+    pub fn logic_depth(&self) -> usize {
+        let mut level: Vec<usize> = vec![0; self.n_nets as usize];
+        let mut max = 0;
+        for &ci in &self.topo {
+            let c = &self.cells[ci as usize];
+            let l = c
+                .inputs
+                .iter()
+                .map(|&i| level[i as usize])
+                .max()
+                .unwrap_or(0)
+                + 1;
+            for &o in &c.outputs {
+                level[o as usize] = l;
+            }
+            max = max.max(l);
+        }
+        max
+    }
+
+    /// Fanout of each net (number of cell input pins + PO pins it feeds);
+    /// the P&R estimator derives wire capacitance from this.
+    pub fn fanouts(&self) -> Vec<u32> {
+        let mut f = vec![0u32; self.n_nets as usize];
+        for c in &self.cells {
+            for &i in &c.inputs {
+                f[i as usize] += 1;
+            }
+        }
+        for &po in &self.primary_outputs {
+            f[po as usize] += 1;
+        }
+        f
+    }
+}
+
+/// Incremental netlist construction.
+pub struct NetlistBuilder {
+    name: String,
+    pub(crate) n_nets: u32,
+    pub(crate) cells: Vec<Cell>,
+    primary_inputs: Vec<NetId>,
+    primary_outputs: Vec<NetId>,
+    const_zero: Option<NetId>,
+}
+
+impl NetlistBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            n_nets: 0,
+            cells: Vec::new(),
+            primary_inputs: Vec::new(),
+            primary_outputs: Vec::new(),
+            const_zero: None,
+        }
+    }
+
+    fn fresh(&mut self) -> NetId {
+        let id = self.n_nets;
+        self.n_nets += 1;
+        id
+    }
+
+    /// Allocate a net with no driver yet; the caller promises to drive it
+    /// later (e.g. register feedback loops) via [`NetlistBuilder::connect_buf`].
+    pub fn alloc_net(&mut self) -> NetId {
+        self.fresh()
+    }
+
+    /// Drive the pre-allocated net `dst` with the value of `src` through a
+    /// buffer cell. Used to close register feedback loops.
+    pub fn connect_buf(&mut self, src: NetId, dst: NetId) {
+        self.cells.push(Cell {
+            kind: CellKind::Buf,
+            inputs: vec![src],
+            outputs: vec![dst],
+        });
+    }
+
+    pub fn input(&mut self) -> NetId {
+        let id = self.fresh();
+        self.primary_inputs.push(id);
+        id
+    }
+
+    pub fn inputs(&mut self, n: usize) -> Vec<NetId> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    pub fn mark_output(&mut self, net: NetId) {
+        self.primary_outputs.push(net);
+    }
+
+    /// The shared constant-0 net (created on first use).
+    pub fn const_zero(&mut self) -> NetId {
+        if let Some(z) = self.const_zero {
+            return z;
+        }
+        let z = self.fresh();
+        self.const_zero = Some(z);
+        z
+    }
+
+    fn cell1(&mut self, kind: CellKind, inputs: Vec<NetId>) -> NetId {
+        let out = self.fresh();
+        self.cells.push(Cell {
+            kind,
+            inputs,
+            outputs: vec![out],
+        });
+        out
+    }
+
+    pub fn inv(&mut self, a: NetId) -> NetId {
+        self.cell1(CellKind::Inv, vec![a])
+    }
+    pub fn buf(&mut self, a: NetId) -> NetId {
+        self.cell1(CellKind::Buf, vec![a])
+    }
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.cell1(CellKind::And2, vec![a, b])
+    }
+    pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.cell1(CellKind::Or2, vec![a, b])
+    }
+    pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.cell1(CellKind::Nand2, vec![a, b])
+    }
+    pub fn nor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.cell1(CellKind::Nor2, vec![a, b])
+    }
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.cell1(CellKind::Xor2, vec![a, b])
+    }
+    pub fn xnor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.cell1(CellKind::Xnor2, vec![a, b])
+    }
+    pub fn mux2(&mut self, a: NetId, b: NetId, s: NetId) -> NetId {
+        self.cell1(CellKind::Mux2, vec![a, b, s])
+    }
+
+    /// Half adder -> (sum, carry).
+    pub fn ha(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        let s = self.fresh();
+        let c = self.fresh();
+        self.cells.push(Cell {
+            kind: CellKind::Ha,
+            inputs: vec![a, b],
+            outputs: vec![s, c],
+        });
+        (s, c)
+    }
+
+    /// Full adder -> (sum, cout).
+    pub fn fa(&mut self, a: NetId, b: NetId, cin: NetId) -> (NetId, NetId) {
+        let s = self.fresh();
+        let c = self.fresh();
+        self.cells.push(Cell {
+            kind: CellKind::Fa,
+            inputs: vec![a, b, cin],
+            outputs: vec![s, c],
+        });
+        (s, c)
+    }
+
+    /// D flip-flop -> q.
+    pub fn dff(&mut self, d: NetId) -> NetId {
+        let q = self.fresh();
+        self.cells.push(Cell {
+            kind: CellKind::Dff,
+            inputs: vec![d],
+            outputs: vec![q],
+        });
+        q
+    }
+
+    /// Ripple-carry adder over little-endian buses (same width); returns
+    /// (sum bits, carry out).
+    pub fn ripple_add(&mut self, a: &[NetId], b: &[NetId], cin: Option<NetId>) -> (Vec<NetId>, NetId) {
+        assert_eq!(a.len(), b.len());
+        let mut carry = match cin {
+            Some(c) => c,
+            None => self.const_zero(),
+        };
+        let mut sum = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let (s, c) = self.fa(a[i], b[i], carry);
+            sum.push(s);
+            carry = c;
+        }
+        (sum, carry)
+    }
+
+    /// a >= b over equal-width little-endian unsigned buses.
+    ///
+    /// Implemented as the carry-out of `a + ~b + 1` computed with
+    /// XNOR/majority logic via full adders (standard comparator mapping).
+    pub fn ge(&mut self, a: &[NetId], b: &[NetId]) -> NetId {
+        assert_eq!(a.len(), b.len());
+        let mut carry = {
+            // carry-in = 1: emulate with HA on (a0, !b0): sum discarded
+            let nb = self.inv(b[0]);
+            // a0 + !b0 + 1 : use FA with constant-1? Avoid constant-1 nets:
+            // carry(a0, !b0, 1) = a0 | !b0
+            self.or2(a[0], nb)
+        };
+        for i in 1..a.len() {
+            let nb = self.inv(b[i]);
+            // carry_out = majority(a, !b, carry)
+            let ab = self.and2(a[i], nb);
+            let x = self.xor2(a[i], nb);
+            let xc = self.and2(x, carry);
+            carry = self.or2(ab, xc);
+        }
+        carry
+    }
+
+    pub fn build(self) -> Result<Netlist> {
+        let mut nl = Netlist {
+            name: self.name,
+            n_nets: self.n_nets,
+            cells: self.cells,
+            primary_inputs: self.primary_inputs,
+            primary_outputs: self.primary_outputs,
+            const_zero: self.const_zero,
+            topo: Vec::new(),
+            seq: Vec::new(),
+        };
+        nl.validate()?;
+        Ok(nl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+
+    #[test]
+    fn build_and_validate_simple() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.input();
+        let y = b.input();
+        let z = b.and2(x, y);
+        b.mark_output(z);
+        let nl = b.build().unwrap();
+        assert_eq!(nl.cells.len(), 1);
+        assert_eq!(nl.topo_order().len(), 1);
+        assert_eq!(nl.logic_depth(), 1);
+    }
+
+    #[test]
+    fn rejects_undriven_input() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.input();
+        // Manually add a cell reading a bogus net.
+        let out = b.and2(x, x);
+        b.cells.push(Cell {
+            kind: CellKind::Inv,
+            inputs: vec![9999],
+            outputs: vec![out + 1],
+        });
+        b.n_nets = out + 2;
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn rejects_combinational_cycle() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.input();
+        // cell0: and(x, n3) -> n2 ; cell1: inv(n2) -> n3  => cycle
+        let n2 = b.fresh();
+        let n3 = b.fresh();
+        b.cells.push(Cell {
+            kind: CellKind::And2,
+            inputs: vec![x, n3],
+            outputs: vec![n2],
+        });
+        b.cells.push(Cell {
+            kind: CellKind::Inv,
+            inputs: vec![n2],
+            outputs: vec![n3],
+        });
+        b.mark_output(n3);
+        let err = b.build().unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn dff_breaks_cycles() {
+        // q = dff(!q) — a divide-by-two toggler; legal because the DFF
+        // breaks the loop.
+        let mut b = NetlistBuilder::new("t");
+        let d = b.fresh();
+        let q = b.fresh();
+        b.cells.push(Cell {
+            kind: CellKind::Dff,
+            inputs: vec![d],
+            outputs: vec![q],
+        });
+        b.cells.push(Cell {
+            kind: CellKind::Inv,
+            inputs: vec![q],
+            outputs: vec![d],
+        });
+        b.mark_output(q);
+        let nl = b.build().unwrap();
+        assert_eq!(nl.sequential_cells().len(), 1);
+
+        let mut sim = Simulator::new(&nl);
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            let out = sim.step(&[]);
+            seen.push(out[0]);
+        }
+        assert_eq!(seen, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn ripple_add_is_correct() {
+        let w = 4;
+        let mut b = NetlistBuilder::new("adder");
+        let a = b.inputs(w);
+        let bb = b.inputs(w);
+        let (s, c) = b.ripple_add(&a, &bb, None);
+        for bit in s {
+            b.mark_output(bit);
+        }
+        b.mark_output(c);
+        let nl = b.build().unwrap();
+        let mut sim = Simulator::new(&nl);
+        for x in 0..16u32 {
+            for y in 0..16u32 {
+                let mut inp = Vec::new();
+                for i in 0..w {
+                    inp.push((x >> i) & 1 == 1);
+                }
+                for i in 0..w {
+                    inp.push((y >> i) & 1 == 1);
+                }
+                let out = sim.step(&inp);
+                let got: u32 = out
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| (b as u32) << i)
+                    .sum();
+                assert_eq!(got, x + y, "{x}+{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn ge_comparator_is_correct() {
+        let w = 5;
+        let mut b = NetlistBuilder::new("ge");
+        let a = b.inputs(w);
+        let bb = b.inputs(w);
+        let ge = b.ge(&a, &bb);
+        b.mark_output(ge);
+        let nl = b.build().unwrap();
+        let mut sim = Simulator::new(&nl);
+        for x in 0..32u32 {
+            for y in 0..32u32 {
+                let mut inp = Vec::new();
+                for i in 0..w {
+                    inp.push((x >> i) & 1 == 1);
+                }
+                for i in 0..w {
+                    inp.push((y >> i) & 1 == 1);
+                }
+                let out = sim.step(&inp);
+                assert_eq!(out[0], x >= y, "{x}>={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_and_gate_equivalents() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.input();
+        let y = b.input();
+        let a = b.and2(x, y);
+        let o = b.or2(x, y);
+        let (_, _) = b.fa(a, o, x);
+        b.mark_output(a);
+        let nl = b.build().unwrap();
+        let st = nl.stats();
+        assert_eq!(st.count(CellKind::And2), 1);
+        assert_eq!(st.count(CellKind::Fa), 1);
+        assert_eq!(st.gate_equivalents(), 1 + 1 + 5);
+        assert_eq!(st.total_cells(), 3);
+    }
+
+    #[test]
+    fn fanout_counts_pins() {
+        let mut b = NetlistBuilder::new("t");
+        let x = b.input();
+        let i1 = b.inv(x);
+        let i2 = b.inv(x);
+        let a = b.and2(i1, i2);
+        b.mark_output(a);
+        let nl = b.build().unwrap();
+        let f = nl.fanouts();
+        assert_eq!(f[x as usize], 2);
+        assert_eq!(f[a as usize], 1);
+    }
+}

@@ -1,0 +1,492 @@
+//! SRM0-RNL neuron designs — the devices the paper evaluates.
+//!
+//! A neuron (paper Figs. 1/2/4) is dendrite → soma → axon:
+//!
+//! * **dendrite**: every cycle, counts how many of the `n` input lines
+//!   carry a response pulse. Four variants (paper Figs. 8/9, Table I):
+//!   - `PcConventional` — adder-tree popcount over all n lines,
+//!   - `PcCompact` — CSA popcount over all n lines (baseline from [7]),
+//!   - `SortingPc` — the pre-Catwalk unary-sorting baseline
+//!     ([`crate::topk::TopkSelector::sorting_baseline`]): bitonic-
+//!     structured selection tapped at the bottom k lanes + a k-input PC;
+//!     CS units stay full 2-gate macros,
+//!   - `TopkPc` — **Catwalk** ([`crate::topk::TopkSelector::catwalk`]):
+//!     Algorithm-1-pruned selection network (half gates removed) + the
+//!     same k-input PC.
+//! * **soma**: 5-bit saturating accumulator of the per-cycle counts and a
+//!   5-bit ≥-threshold comparator ("identical 5-bit accumulation and
+//!   threshold implementation", Fig. 9).
+//! * **axon**: fires an 8-cycle output pulse via a 3-bit down-counter
+//!   (Fig. 4a); while the pulse runs the neuron is refractory; firing
+//!   clears the accumulator.
+//!
+//! Primary inputs: `n` pulse lines, a 5-bit threshold bus, and a `reset`
+//! line (gamma-cycle boundary). Primary output: the axon line.
+//!
+//! The module also carries the cycle-exact behavioral golden model
+//! ([`behavior::BehavioralNeuron`]) the netlists are verified against,
+//! and the sparse-volley stimulus generator ([`stimulus`]) used by every
+//! power experiment.
+
+pub mod behavior;
+pub mod stimulus;
+
+use crate::error::{Error, Result};
+use crate::netlist::{NetId, Netlist, NetlistBuilder};
+use crate::pc::{build_pc, PcKind};
+use crate::sorters::SorterKind;
+use crate::topk::TopkSelector;
+
+/// Accumulator/threshold width used throughout the paper's Fig. 9.
+pub const ACC_WIDTH: usize = 5;
+/// Axon pulse length in cycles (3-bit counter, Fig. 4a).
+pub const AXON_PULSE: usize = 8;
+
+/// The four dendrite organisations the paper compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DendriteKind {
+    PcConventional,
+    PcCompact,
+    SortingPc,
+    TopkPc,
+}
+
+impl DendriteKind {
+    pub const ALL: [DendriteKind; 4] = [
+        DendriteKind::PcConventional,
+        DendriteKind::PcCompact,
+        DendriteKind::SortingPc,
+        DendriteKind::TopkPc,
+    ];
+
+    /// Row label as in Table I.
+    pub fn label(self) -> &'static str {
+        match self {
+            DendriteKind::PcConventional => "PC conventional",
+            DendriteKind::PcCompact => "PC compact [7]",
+            DendriteKind::SortingPc => "Sorting PC",
+            DendriteKind::TopkPc => "Top-k PC (Catwalk)",
+        }
+    }
+
+    /// Does this dendrite clip the per-cycle count at k?
+    pub fn clips(self) -> bool {
+        matches!(self, DendriteKind::SortingPc | DendriteKind::TopkPc)
+    }
+}
+
+/// Build-time parameters of one neuron instance.
+#[derive(Clone, Copy, Debug)]
+pub struct NeuronConfig {
+    pub n_inputs: usize,
+    /// top-k width for the selector-based dendrites (ignored by the PC
+    /// dendrites).
+    pub k: usize,
+    /// Source network for the `TopkPc` dendrite (paper: optimal).
+    pub topk_sorter: SorterKind,
+    /// Source network for the `SortingPc` dendrite (paper: bitonic).
+    pub sorting_sorter: SorterKind,
+    /// PC construction used wherever a popcount is needed.
+    pub pc: PcKind,
+}
+
+impl Default for NeuronConfig {
+    fn default() -> Self {
+        Self {
+            n_inputs: 16,
+            k: 2,
+            topk_sorter: SorterKind::Optimal,
+            sorting_sorter: SorterKind::Bitonic,
+            pc: PcKind::Compact,
+        }
+    }
+}
+
+/// A fully assembled neuron netlist plus its interface map.
+#[derive(Clone, Debug)]
+pub struct NeuronDesign {
+    pub kind: DendriteKind,
+    pub config: NeuronConfig,
+    pub netlist: Netlist,
+    /// Count of primary inputs that are pulse lines (the first
+    /// `n_inputs` PIs); then `ACC_WIDTH` threshold bits; then reset.
+    pub n_pulse_inputs: usize,
+}
+
+impl NeuronDesign {
+    /// Assemble the netlist for `kind` under `cfg`.
+    pub fn build(kind: DendriteKind, cfg: &NeuronConfig) -> Result<NeuronDesign> {
+        let n = cfg.n_inputs;
+        if n < 2 || !n.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "n_inputs must be a power of two >= 2, got {n}"
+            )));
+        }
+        if kind.clips() && (cfg.k == 0 || cfg.k > n) {
+            return Err(Error::Config(format!("k must be in 1..=n, got {}", cfg.k)));
+        }
+        let mut b = NetlistBuilder::new(format!(
+            "neuron_{}_n{}_k{}",
+            match kind {
+                DendriteKind::PcConventional => "pcconv",
+                DendriteKind::PcCompact => "pccompact",
+                DendriteKind::SortingPc => "sorting",
+                DendriteKind::TopkPc => "topk",
+            },
+            n,
+            if kind.clips() { cfg.k } else { n }
+        ));
+        let pulses = b.inputs(n);
+        let threshold = b.inputs(ACC_WIDTH);
+        let reset = b.input();
+
+        // ---- dendrite ----
+        let count = build_dendrite(&mut b, kind, cfg, &pulses)?;
+
+        // ---- soma ----
+        let fire = build_soma(&mut b, &count, &threshold, reset);
+
+        // ---- axon ----
+        let axon_out = build_axon(&mut b, fire, reset);
+        b.mark_output(axon_out);
+
+        Ok(NeuronDesign {
+            kind,
+            config: *cfg,
+            netlist: b.build()?,
+            n_pulse_inputs: n,
+        })
+    }
+
+    /// Pack pulse lines + threshold + reset into the PI vector layout the
+    /// netlist expects.
+    pub fn pack_inputs(&self, pulses: &[bool], threshold: u32, reset: bool) -> Vec<bool> {
+        assert_eq!(pulses.len(), self.n_pulse_inputs);
+        let mut v = Vec::with_capacity(self.n_pulse_inputs + ACC_WIDTH + 1);
+        v.extend_from_slice(pulses);
+        for i in 0..ACC_WIDTH {
+            v.push((threshold >> i) & 1 == 1);
+        }
+        v.push(reset);
+        v
+    }
+}
+
+/// Dendrite: produce the per-cycle count bus.
+fn build_dendrite(
+    b: &mut NetlistBuilder,
+    kind: DendriteKind,
+    cfg: &NeuronConfig,
+    pulses: &[NetId],
+) -> Result<Vec<NetId>> {
+    let n = cfg.n_inputs;
+    match kind {
+        DendriteKind::PcConventional => Ok(build_pc(b, PcKind::Conventional, pulses)),
+        DendriteKind::PcCompact => Ok(build_pc(b, PcKind::Compact, pulses)),
+        DendriteKind::SortingPc | DendriteKind::TopkPc => {
+            let sel = if kind == DendriteKind::SortingPc {
+                TopkSelector::sorting_baseline(n, cfg.k)?
+            } else {
+                TopkSelector::catwalk(n, cfg.k)?
+            };
+            // Inline the selector gates into the neuron builder.
+            let mut lanes = pulses.to_vec();
+            for u in &sel.units {
+                let a = lanes[u.cs.top as usize];
+                let o = lanes[u.cs.bot as usize];
+                match u.kind {
+                    crate::topk::UnitKind::Full => {
+                        lanes[u.cs.top as usize] = b.and2(a, o);
+                        lanes[u.cs.bot as usize] = b.or2(a, o);
+                    }
+                    crate::topk::UnitKind::HalfMax => {
+                        lanes[u.cs.bot as usize] = b.or2(a, o);
+                    }
+                    crate::topk::UnitKind::HalfMin => {
+                        lanes[u.cs.top as usize] = b.and2(a, o);
+                    }
+                }
+            }
+            let taps: Vec<NetId> = lanes[n - cfg.k..].to_vec();
+            Ok(build_pc(b, cfg.pc, &taps))
+        }
+    }
+}
+
+/// Soma: 5-bit saturating accumulate + threshold, clear on fire/reset.
+/// Returns the combinational `fire` net.
+fn build_soma(
+    b: &mut NetlistBuilder,
+    count: &[NetId],
+    threshold: &[NetId],
+    reset: NetId,
+) -> NetId {
+    let zero = b.const_zero();
+    // Accumulator register.
+    // Build DFFs lazily with a feedback pattern: allocate D nets first.
+    let d_nets: Vec<NetId> = (0..ACC_WIDTH).map(|_| b.alloc_net()).collect();
+    let q_nets: Vec<NetId> = d_nets.iter().map(|&d| b.dff(d)).collect();
+
+    // count, clipped to ACC_WIDTH with overflow detection.
+    let mut cbits: Vec<NetId> = count.to_vec();
+    let mut ovf = zero;
+    while cbits.len() > ACC_WIDTH {
+        let msb = cbits.pop().unwrap();
+        ovf = b.or2(ovf, msb);
+    }
+    while cbits.len() < ACC_WIDTH {
+        cbits.push(zero);
+    }
+
+    // sum = ACC + count
+    let (sum, carry) = b.ripple_add(&q_nets, &cbits, None);
+    let sat = b.or2(carry, ovf);
+    // saturated sum: bit | sat
+    let sum_sat: Vec<NetId> = sum.iter().map(|&s| b.or2(s, sat)).collect();
+
+    // fire = (sum_sat >= threshold) & !refractory; refractory handled by
+    // the axon (fire is masked there); here fire also clears ACC.
+    let ge = b.ge(&sum_sat, threshold);
+    // suppress firing while threshold == 0 volleys during reset
+    let nreset = b.inv(reset);
+    let fire = b.and2(ge, nreset);
+
+    // ACC_next = (fire | reset) ? 0 : sum_sat
+    let clear = b.or2(fire, reset);
+    let nclear = b.inv(clear);
+    for i in 0..ACC_WIDTH {
+        let v = b.and2(sum_sat[i], nclear);
+        // route v into the pre-allocated D net
+        b.connect_buf(v, d_nets[i]);
+    }
+    fire
+}
+
+/// Axon: 3-bit down-counter producing an `AXON_PULSE`-cycle output pulse;
+/// masks re-firing while active (refractory).
+fn build_axon(b: &mut NetlistBuilder, fire: NetId, reset: NetId) -> NetId {
+    let w = 3;
+    let d_nets: Vec<NetId> = (0..w).map(|_| b.alloc_net()).collect();
+    let q: Vec<NetId> = d_nets.iter().map(|&d| b.dff(d)).collect();
+
+    // active = q != 0
+    let q01 = b.or2(q[0], q[1]);
+    let active = b.or2(q01, q[2]);
+
+    // gate fire by !active (refractory) and !reset
+    let nactive = b.inv(active);
+    let fire_ok = b.and2(fire, nactive);
+
+    // decremented value (q - 1), valid when active:
+    // bit0' = !q0; borrow0 = !q0
+    // bit1' = q1 ^ borrow0 ; borrow1 = !q1 & borrow0
+    // bit2' = q2 ^ borrow1
+    let nq0 = b.inv(q[0]);
+    let dec0 = nq0;
+    let borrow0 = nq0;
+    let dec1 = b.xor2(q[1], borrow0);
+    let nq1 = b.inv(q[1]);
+    let borrow1 = b.and2(nq1, borrow0);
+    let dec2 = b.xor2(q[2], borrow1);
+
+    // next = fire_ok ? 7 : (active ? dec : 0); then reset forces 0.
+    // load 7 = all ones.
+    let hold0 = b.and2(dec0, active);
+    let hold1 = b.and2(dec1, active);
+    let hold2 = b.and2(dec2, active);
+    let n0 = b.or2(hold0, fire_ok);
+    let n1 = b.or2(hold1, fire_ok);
+    let n2 = b.or2(hold2, fire_ok);
+    let nreset = b.inv(reset);
+    let f0 = b.and2(n0, nreset);
+    let f1 = b.and2(n1, nreset);
+    let f2 = b.and2(n2, nreset);
+    b.connect_buf(f0, d_nets[0]);
+    b.connect_buf(f1, d_nets[1]);
+    b.connect_buf(f2, d_nets[2]);
+
+    // output pulse: high on the firing cycle and while the counter runs
+    b.or2(fire_ok, active)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::behavior::BehavioralNeuron;
+    use super::stimulus::{Volley, VolleyGen};
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::sim::Simulator;
+
+    fn roundtrip(kind: DendriteKind, n: usize, k: usize, seed: u64) {
+        let cfg = NeuronConfig {
+            n_inputs: n,
+            k,
+            ..Default::default()
+        };
+        let design = NeuronDesign::build(kind, &cfg).unwrap();
+        let mut sim = Simulator::new(&design.netlist);
+        let mut gold = BehavioralNeuron::new(kind, &cfg);
+        let mut gen = VolleyGen::new(n, 0.15, seed);
+        let threshold = 6u32;
+        for _ in 0..40 {
+            let volley: Volley = gen.next_volley();
+            // reset pulse at gamma boundary
+            let inputs = design.pack_inputs(&vec![false; n], threshold, true);
+            let hw = sim.step(&inputs)[0];
+            let bm = gold.step(&vec![false; n], threshold, true);
+            assert_eq!(hw, bm, "reset cycle");
+            for t in 0..gen.gamma_len() {
+                let pulses = volley.pulse_bits(t);
+                let inputs = design.pack_inputs(&pulses, threshold, false);
+                let hw = sim.step(&inputs)[0];
+                let bm = gold.step(&pulses, threshold, false);
+                assert_eq!(hw, bm, "{kind:?} n={n} k={k} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_matches_behavior_pc_conventional() {
+        roundtrip(DendriteKind::PcConventional, 16, 2, 1);
+    }
+
+    #[test]
+    fn netlist_matches_behavior_pc_compact() {
+        roundtrip(DendriteKind::PcCompact, 16, 2, 2);
+        roundtrip(DendriteKind::PcCompact, 32, 2, 3);
+    }
+
+    #[test]
+    fn netlist_matches_behavior_sorting() {
+        roundtrip(DendriteKind::SortingPc, 16, 2, 4);
+    }
+
+    #[test]
+    fn netlist_matches_behavior_topk() {
+        roundtrip(DendriteKind::TopkPc, 16, 2, 5);
+        roundtrip(DendriteKind::TopkPc, 32, 2, 6);
+        roundtrip(DendriteKind::TopkPc, 64, 2, 7);
+    }
+
+    #[test]
+    fn all_designs_agree_when_sparse() {
+        // With at most k simultaneous pulses, all four designs are
+        // functionally identical (the clipping never engages).
+        let n = 16;
+        let cfg = NeuronConfig {
+            n_inputs: n,
+            k: 2,
+            ..Default::default()
+        };
+        let designs: Vec<NeuronDesign> = DendriteKind::ALL
+            .iter()
+            .map(|&kd| NeuronDesign::build(kd, &cfg).unwrap())
+            .collect();
+        let mut sims: Vec<Simulator> = designs.iter().map(|d| Simulator::new(&d.netlist)).collect();
+        let mut rng = Xoshiro256::new(11);
+        let threshold = 5;
+        for _ in 0..60 {
+            // pick at most 2 active inputs with non-overlap-free pulses
+            let active = rng.sample_indices(n, 2);
+            let starts: Vec<usize> = (0..2).map(|_| rng.gen_range(8)).collect();
+            let widths: Vec<usize> = (0..2).map(|_| 1 + rng.gen_range(7)).collect();
+            // reset all
+            for (d, sim) in designs.iter().zip(sims.iter_mut()) {
+                sim.step(&d.pack_inputs(&vec![false; n], threshold, true));
+            }
+            for t in 0..16 {
+                let mut pulses = vec![false; n];
+                for i in 0..2 {
+                    if t >= starts[i] && t < starts[i] + widths[i] {
+                        pulses[active[i]] = true;
+                    }
+                }
+                let outs: Vec<bool> = designs
+                    .iter()
+                    .zip(sims.iter_mut())
+                    .map(|(d, sim)| sim.step(&d.pack_inputs(&pulses, threshold, false))[0])
+                    .collect();
+                assert!(
+                    outs.windows(2).all(|w| w[0] == w[1]),
+                    "designs diverge at t={t}: {outs:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axon_pulse_is_eight_cycles() {
+        let cfg = NeuronConfig {
+            n_inputs: 16,
+            k: 2,
+            ..Default::default()
+        };
+        let d = NeuronDesign::build(DendriteKind::PcCompact, &cfg).unwrap();
+        let mut sim = Simulator::new(&d.netlist);
+        // threshold 1: a single 1-cycle pulse fires the neuron.
+        sim.step(&d.pack_inputs(&vec![false; 16], 1, true));
+        let mut pulses = vec![false; 16];
+        pulses[3] = true;
+        let mut high = 0;
+        let o = sim.step(&d.pack_inputs(&pulses, 1, false));
+        if o[0] {
+            high += 1;
+        }
+        for _ in 0..20 {
+            let o = sim.step(&d.pack_inputs(&vec![false; 16], 1, false));
+            if o[0] {
+                high += 1;
+            }
+        }
+        assert_eq!(high, AXON_PULSE, "axon pulse length");
+    }
+
+    #[test]
+    fn catwalk_smaller_than_compact_pc() {
+        for n in [16usize, 32, 64] {
+            let cfg = NeuronConfig {
+                n_inputs: n,
+                k: 2,
+                ..Default::default()
+            };
+            let compact = NeuronDesign::build(DendriteKind::PcCompact, &cfg).unwrap();
+            let catwalk = NeuronDesign::build(DendriteKind::TopkPc, &cfg).unwrap();
+            let a = compact.netlist.stats().gate_equivalents();
+            let b = catwalk.netlist.stats().gate_equivalents();
+            assert!(b < a, "n={n}: catwalk {b} !< compact {a}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let cfg = NeuronConfig {
+            n_inputs: 12,
+            ..Default::default()
+        };
+        assert!(NeuronDesign::build(DendriteKind::PcCompact, &cfg).is_err());
+        let cfg = NeuronConfig {
+            n_inputs: 16,
+            k: 0,
+            ..Default::default()
+        };
+        assert!(NeuronDesign::build(DendriteKind::TopkPc, &cfg).is_err());
+    }
+
+    #[test]
+    fn timing_closes_400mhz_proxy() {
+        // Logic depth sanity: every design must stay under ~40 levels
+        // (a comfortable 400 MHz at 45 nm, ~60 ps/level budget).
+        for kind in DendriteKind::ALL {
+            for n in [16usize, 32, 64] {
+                let cfg = NeuronConfig {
+                    n_inputs: n,
+                    k: 2,
+                    ..Default::default()
+                };
+                let d = NeuronDesign::build(kind, &cfg).unwrap();
+                let depth = d.netlist.logic_depth();
+                assert!(depth <= 64, "{kind:?} n={n}: depth {depth}");
+            }
+        }
+    }
+}

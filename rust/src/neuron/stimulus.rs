@@ -1,0 +1,139 @@
+//! Sparse spike-volley stimulus generation.
+//!
+//! The paper's power numbers depend on realistic activity: biologically,
+//! only 0.1–10 % of neurons spike in a compute cycle [10, 11, 20 in the
+//! paper]. This module generates dendrite stimuli in that regime: per
+//! gamma cycle, each of the `n` input lines independently carries a
+//! response pulse with probability `sparsity`; an active line's pulse
+//! starts uniformly within the gamma window and lasts `weight ∈ 1..=7`
+//! cycles (3-bit weights, the RNL response of Eq. 1).
+//!
+//! The same generator drives (a) activity simulation for the synthesis /
+//! P&R power experiments (E4–E7) and (b) the sparsity study (E8).
+
+use crate::rng::Xoshiro256;
+
+/// Gamma-cycle length in clock cycles (3-bit temporal code: spikes land
+/// in 0..8, pulses can run past into the 2nd half of the window).
+pub const GAMMA_LEN: usize = 16;
+
+/// One volley: the set of active lines with their pulse start/width.
+#[derive(Clone, Debug, Default)]
+pub struct Volley {
+    pub n: usize,
+    /// (line index, start cycle, width)
+    pub pulses: Vec<(usize, usize, usize)>,
+}
+
+impl Volley {
+    /// Line levels at cycle `t` within the gamma window.
+    pub fn pulse_bits(&self, t: usize) -> Vec<bool> {
+        let mut bits = vec![false; self.n];
+        for &(i, s, w) in &self.pulses {
+            if t >= s && t < s + w {
+                bits[i] = true;
+            }
+        }
+        bits
+    }
+
+    /// Maximum number of simultaneously-high lines over the window —
+    /// the quantity that decides whether top-k clips.
+    pub fn max_overlap(&self, t_len: usize) -> usize {
+        (0..t_len)
+            .map(|t| self.pulse_bits(t).iter().filter(|&&b| b).count())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Random volley source with a fixed sparsity.
+#[derive(Clone, Debug)]
+pub struct VolleyGen {
+    pub n: usize,
+    pub sparsity: f64,
+    rng: Xoshiro256,
+}
+
+impl VolleyGen {
+    pub fn new(n: usize, sparsity: f64, seed: u64) -> Self {
+        Self {
+            n,
+            sparsity,
+            rng: Xoshiro256::new(seed),
+        }
+    }
+
+    pub fn gamma_len(&self) -> usize {
+        GAMMA_LEN
+    }
+
+    pub fn next_volley(&mut self) -> Volley {
+        let mut pulses = Vec::new();
+        for i in 0..self.n {
+            if self.rng.gen_bool(self.sparsity) {
+                let start = self.rng.gen_range(8);
+                let width = 1 + self.rng.gen_range(7);
+                pulses.push((i, start, width));
+            }
+        }
+        Volley { n: self.n, pulses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparsity_controls_active_count() {
+        let mut g = VolleyGen::new(64, 0.05, 1);
+        let total: usize = (0..2000).map(|_| g.next_volley().pulses.len()).sum();
+        let mean = total as f64 / 2000.0;
+        assert!((mean - 3.2).abs() < 0.4, "mean={mean}");
+    }
+
+    #[test]
+    fn pulses_within_window() {
+        let mut g = VolleyGen::new(32, 0.2, 2);
+        for _ in 0..200 {
+            let v = g.next_volley();
+            for &(i, s, w) in &v.pulses {
+                assert!(i < 32);
+                assert!(s < 8);
+                assert!((1..=7).contains(&w));
+                assert!(s + w <= GAMMA_LEN - 1, "pulse must end inside window");
+            }
+        }
+    }
+
+    #[test]
+    fn pulse_bits_match_spec() {
+        let v = Volley {
+            n: 4,
+            pulses: vec![(1, 2, 3)],
+        };
+        assert_eq!(v.pulse_bits(1), vec![false; 4]);
+        assert_eq!(v.pulse_bits(2)[1], true);
+        assert_eq!(v.pulse_bits(4)[1], true);
+        assert_eq!(v.pulse_bits(5)[1], false);
+    }
+
+    #[test]
+    fn max_overlap_counts_simultaneous() {
+        let v = Volley {
+            n: 4,
+            pulses: vec![(0, 1, 4), (1, 3, 4), (2, 3, 1)],
+        };
+        assert_eq!(v.max_overlap(GAMMA_LEN), 3); // at t=3 all three high
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = VolleyGen::new(16, 0.1, 9);
+        let mut b = VolleyGen::new(16, 0.1, 9);
+        for _ in 0..50 {
+            assert_eq!(a.next_volley().pulses, b.next_volley().pulses);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Parallel counters (population counters).
+//!
+//! The dendrite of an SRM0-RNL neuron accumulates, every clock cycle, the
+//! number of input lines currently carrying a response pulse — a popcount
+//! of `n` bits. The paper compares two constructions:
+//!
+//! * **Compact PC** (`compact_pc`, the baseline from [7], Fig. 4a):
+//!   carry-save reduction — repeatedly feed triples of equal-weight wires
+//!   into full adders (pairs into half adders when no triple remains)
+//!   until each weight has one wire. Uses the classic "n − 1 adder units
+//!   for n inputs" budget the paper quotes.
+//! * **Conventional PC** (`conventional_pc`): a binary tree of ripple-
+//!   carry adders — pairs of 1-bit values add into 2-bit values, pairs of
+//!   those into 3-bit, etc. Structurally more cells for the same function
+//!   (paper Fig. 8 finds it similar at small n, worse at large n).
+//!
+//! Both emit little-endian sum buses of width `ceil(log2(n+1))`.
+
+use crate::error::Result;
+use crate::netlist::{NetId, Netlist, NetlistBuilder};
+
+/// Width of the popcount result bus for `n` inputs.
+pub fn count_width(n: usize) -> usize {
+    let mut w = 0;
+    while (1usize << w) < n + 1 {
+        w += 1;
+    }
+    w.max(1)
+}
+
+/// Flavor of parallel counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PcKind {
+    /// Full-adder-only CSA reduction — the design of [7] the paper quotes
+    /// as "n − 1 full adders for n inputs" (two-wire columns pad a
+    /// constant-zero third input, as the TNN7 macro does).
+    Compact,
+    /// Ripple-adder tree.
+    Conventional,
+    /// HA-optimized CSA reduction (two-wire columns use a half adder) —
+    /// not in the paper; kept as an ablation of how much the [7] baseline
+    /// leaves on the table (see DESIGN.md ablations).
+    Csa,
+}
+
+impl PcKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PcKind::Compact => "compact",
+            PcKind::Conventional => "conventional",
+            PcKind::Csa => "csa",
+        }
+    }
+}
+
+/// Append a popcount of `inputs` to an existing builder; returns the
+/// little-endian sum bus. This is the composable form the neuron
+/// assembler uses.
+pub fn build_pc(b: &mut NetlistBuilder, kind: PcKind, inputs: &[NetId]) -> Vec<NetId> {
+    match kind {
+        PcKind::Compact => build_csa(b, inputs, false),
+        PcKind::Csa => build_csa(b, inputs, true),
+        PcKind::Conventional => build_conventional(b, inputs),
+    }
+}
+
+/// Carry-save-adder reduction popcount. With `use_ha`, two-wire columns
+/// reduce through a half adder; otherwise through a full adder with a
+/// constant-zero third input (the [7] "n − 1 full adders" structure).
+fn build_csa(b: &mut NetlistBuilder, inputs: &[NetId], use_ha: bool) -> Vec<NetId> {
+    if inputs.is_empty() {
+        return vec![b.const_zero()];
+    }
+    if inputs.len() == 1 {
+        return vec![inputs[0]];
+    }
+    let width = count_width(inputs.len());
+    // columns[w] = wires of weight 2^w
+    let mut columns: Vec<Vec<NetId>> = vec![Vec::new(); width + 1];
+    columns[0] = inputs.to_vec();
+    for w in 0..width {
+        while columns[w].len() >= 3 {
+            let a = columns[w].pop().unwrap();
+            let x = columns[w].pop().unwrap();
+            let y = columns[w].pop().unwrap();
+            let (s, c) = b.fa(a, x, y);
+            columns[w].push(s);
+            columns[w + 1].push(c);
+            // keep s at the back so freshly produced sums reduce last
+            columns[w].rotate_right(1);
+        }
+        if columns[w].len() == 2 {
+            let a = columns[w].pop().unwrap();
+            let x = columns[w].pop().unwrap();
+            let (s, c) = if use_ha {
+                b.ha(a, x)
+            } else {
+                let z = b.const_zero();
+                b.fa(a, x, z)
+            };
+            columns[w].push(s);
+            columns[w + 1].push(c);
+        }
+        debug_assert!(columns[w].len() <= 1);
+    }
+    let mut out: Vec<NetId> = Vec::with_capacity(width);
+    for w in 0..width {
+        if let Some(&wire) = columns[w].first() {
+            out.push(wire);
+        } else {
+            let z = b.const_zero();
+            out.push(z);
+        }
+    }
+    debug_assert!(columns[width].is_empty(), "popcount overflowed bus");
+    out
+}
+
+/// Adder-tree popcount: binary tree of ripple-carry adders.
+fn build_conventional(b: &mut NetlistBuilder, inputs: &[NetId]) -> Vec<NetId> {
+    if inputs.is_empty() {
+        return vec![b.const_zero()];
+    }
+    // Level 0: each input is a 1-bit bus.
+    let mut buses: Vec<Vec<NetId>> = inputs.iter().map(|&i| vec![i]).collect();
+    while buses.len() > 1 {
+        let mut next = Vec::with_capacity(buses.len().div_ceil(2));
+        let mut it = buses.into_iter();
+        while let (Some(a), b_opt) = (it.next(), it.next()) {
+            match b_opt {
+                Some(bb) => {
+                    // widen to equal width, add, append carry as MSB
+                    let w = a.len().max(bb.len());
+                    let z = b.const_zero();
+                    let mut aa = a.clone();
+                    let mut bbb = bb.clone();
+                    aa.resize(w, z);
+                    bbb.resize(w, z);
+                    let (mut sum, carry) = b.ripple_add(&aa, &bbb, None);
+                    sum.push(carry);
+                    next.push(sum);
+                }
+                None => next.push(a),
+            }
+        }
+        buses = next;
+    }
+    let mut out = buses.pop().unwrap();
+    out.truncate(count_width(inputs.len()));
+    out
+}
+
+/// Standalone PC netlist (for the dendrite-only experiments, Figs. 6b/8).
+pub fn pc_netlist(kind: PcKind, n: usize) -> Result<Netlist> {
+    let mut b = NetlistBuilder::new(format!("pc_{}_{n}", kind.name()));
+    let ins = b.inputs(n);
+    let sum = build_pc(&mut b, kind, &ins);
+    for s in sum {
+        b.mark_output(s);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::CellKind;
+    use crate::rng::Xoshiro256;
+    use crate::sim::Simulator;
+
+    fn check_popcount(kind: PcKind, n: usize) {
+        let nl = pc_netlist(kind, n).unwrap();
+        let mut sim = Simulator::new(&nl);
+        let mut rng = Xoshiro256::new(n as u64 * 7 + 1);
+        let trials = if n <= 12 { 1 << n } else { 2000 };
+        for t in 0..trials {
+            let bits: Vec<bool> = if n <= 12 {
+                (0..n).map(|i| (t >> i) & 1 == 1).collect()
+            } else {
+                (0..n).map(|_| rng.gen_bool(0.4)).collect()
+            };
+            let expect = bits.iter().filter(|&&b| b).count() as u32;
+            let out = sim.step(&bits);
+            let got: u32 = out
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| (b as u32) << i)
+                .sum();
+            assert_eq!(got, expect, "{kind:?} n={n} bits={bits:?}");
+        }
+    }
+
+    #[test]
+    fn compact_pc_counts_correctly() {
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 15, 16, 31, 32, 64] {
+            check_popcount(PcKind::Compact, n);
+        }
+    }
+
+    #[test]
+    fn conventional_pc_counts_correctly() {
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 15, 16, 31, 32, 64] {
+            check_popcount(PcKind::Conventional, n);
+        }
+    }
+
+    #[test]
+    fn compact_pc_adder_budget_matches_paper() {
+        // paper quotes [7]: "n-1 full adders for n inputs".
+        for n in [4usize, 8, 16, 32, 64] {
+            let nl = pc_netlist(PcKind::Compact, n).unwrap();
+            let st = nl.stats();
+            let fa = st.count(CellKind::Fa);
+            assert_eq!(st.count(CellKind::Ha), 0, "n={n}");
+            assert_eq!(fa, n - 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn csa_pc_counts_and_is_smaller() {
+        for n in [16usize, 32, 64] {
+            check_popcount(PcKind::Csa, n);
+            let csa = pc_netlist(PcKind::Csa, n).unwrap();
+            let compact = pc_netlist(PcKind::Compact, n).unwrap();
+            assert!(
+                csa.stats().gate_equivalents() < compact.stats().gate_equivalents(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn conventional_not_smaller_than_compact() {
+        for n in [16usize, 32, 64] {
+            let comp = pc_netlist(PcKind::Compact, n).unwrap();
+            let conv = pc_netlist(PcKind::Conventional, n).unwrap();
+            assert!(
+                conv.stats().gate_equivalents() >= comp.stats().gate_equivalents(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn count_width_values() {
+        assert_eq!(count_width(1), 1);
+        assert_eq!(count_width(2), 2);
+        assert_eq!(count_width(3), 2);
+        assert_eq!(count_width(4), 3);
+        assert_eq!(count_width(15), 4);
+        assert_eq!(count_width(16), 5);
+        assert_eq!(count_width(64), 7);
+    }
+
+    #[test]
+    fn k2_pc_is_single_adder_unit() {
+        // paper Fig. 4b: "with k=2, the PC for top-k is just one full
+        // adder".
+        let nl = pc_netlist(PcKind::Compact, 2).unwrap();
+        let st = nl.stats();
+        assert_eq!(st.count(CellKind::Fa) + st.count(CellKind::Ha), 1);
+        assert_eq!(st.count(CellKind::Fa), 1);
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not available in the offline registry, so the crate ships
+//! a small stand-in: seeded generators plus a `forall` runner with
+//! greedy input shrinking for the common container shapes. It is used by
+//! the test suites of [`crate::sorters`], [`crate::topk`],
+//! [`crate::coordinator`] and friends.
+//!
+//! Design goals: determinism (explicit seeds), useful failure output
+//! (the failing case is printed after shrinking), zero dependencies.
+
+use crate::rng::Xoshiro256;
+
+/// Number of cases `forall` runs by default.
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator of random values of type `T`.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Xoshiro256) -> T;
+    /// Candidate smaller versions of a failing input, tried in order.
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Generator from a closure (no shrinking).
+pub struct FnGen<F>(pub F);
+
+impl<T, F: Fn(&mut Xoshiro256) -> T> Gen<T> for FnGen<F> {
+    fn generate(&self, rng: &mut Xoshiro256) -> T {
+        (self.0)(rng)
+    }
+}
+
+/// Uniform usize in `[lo, hi]` inclusive, shrinking toward `lo`.
+pub struct UsizeRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen<usize> for UsizeRange {
+    fn generate(&self, rng: &mut Xoshiro256) -> usize {
+        self.lo + rng.gen_range(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *value > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*value - self.lo) / 2);
+            out.push(*value - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vector of `u64` bitmask words (for 0-1-principle style tests),
+/// shrinking by clearing bits and truncating.
+pub struct BitsGen {
+    pub len: usize,
+}
+
+impl Gen<Vec<bool>> for BitsGen {
+    fn generate(&self, rng: &mut Xoshiro256) -> Vec<bool> {
+        (0..self.len).map(|_| rng.gen_bool(0.5)).collect()
+    }
+    fn shrink(&self, value: &Vec<bool>) -> Vec<Vec<bool>> {
+        let mut out = Vec::new();
+        for i in 0..value.len() {
+            if value[i] {
+                let mut v = value.clone();
+                v[i] = false;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Result of a property check.
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<String>,
+}
+
+/// Run `prop` against `cases` random inputs drawn from `gen`; on failure,
+/// greedily shrink and panic with the minimal counter-example.
+pub fn forall<T: Clone + std::fmt::Debug, G: Gen<T>>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Xoshiro256::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            // Greedy shrink loop.
+            let mut current = input;
+            'outer: loop {
+                for cand in gen.shrink(&current) {
+                    if !prop(&cand) {
+                        current = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}); minimal counter-example: {current:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but with [`DEFAULT_CASES`].
+pub fn forall_default<T: Clone + std::fmt::Debug, G: Gen<T>>(
+    seed: u64,
+    gen: &G,
+    prop: impl Fn(&T) -> bool,
+) {
+    forall(seed, DEFAULT_CASES, gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(1, 64, &UsizeRange { lo: 0, hi: 100 }, |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counter-example")]
+    fn failing_property_panics() {
+        forall(2, 64, &UsizeRange { lo: 0, hi: 100 }, |&x| x < 90);
+    }
+
+    #[test]
+    fn shrinks_toward_lo() {
+        // Property "x < 50" fails for x >= 50; shrinker should land near 50.
+        let gen = UsizeRange { lo: 0, hi: 1000 };
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 256, &gen, |&x| x < 50);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrunk value must still violate (>= 50) and be <= any random
+        // failing draw; greedy halving lands within [50, 100).
+        let v: usize = msg
+            .rsplit(' ')
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .expect("counter-example parse");
+        assert!((50..100).contains(&v), "shrunk to {v}");
+    }
+
+    #[test]
+    fn bits_gen_shrinks_by_clearing() {
+        let gen = BitsGen { len: 8 };
+        let v = vec![true, false, true, false, false, false, false, false];
+        let shrunk = gen.shrink(&v);
+        assert_eq!(shrunk.len(), 2);
+        for s in shrunk {
+            assert!(s.iter().filter(|&&b| b).count() < 2);
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! Parser for `artifacts/manifest.json`.
+//!
+//! The manifest is machine-written by `python/compile/aot.py` with a
+//! fixed, flat schema, so a small recursive-descent JSON parser (serde is
+//! unavailable offline) is sufficient and keeps the runtime
+//! dependency-free. The parser handles the full JSON grammar minus
+//! floating-point exotica the manifest never contains.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub n: usize,
+    pub c: usize,
+    pub b: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub t_max: usize,
+    pub k: usize,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    pub fn parse_file(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let value = JsonValue::parse(text)?;
+        let obj = value.as_obj("manifest")?;
+        let t_max = obj.get_num("t_max")? as usize;
+        let k = obj.get_num("k")? as usize;
+        let mut entries = Vec::new();
+        for e in obj.get_arr("entries")? {
+            let eo = e.as_obj("entry")?;
+            entries.push(Entry {
+                name: eo.get_str("name")?,
+                file: eo.get_str("file")?,
+                kind: eo.get_str("kind")?,
+                inputs: eo.get_shapes("inputs")?,
+                outputs: eo.get_shapes("outputs")?,
+                n: eo.get_num("n")? as usize,
+                c: eo.get_num("c")? as usize,
+                b: eo.get_num("b")? as usize,
+            });
+        }
+        Ok(Manifest { t_max, k, entries })
+    }
+}
+
+/// Minimal JSON value.
+#[derive(Clone, Debug)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(HashMap<String, JsonValue>),
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl JsonValue {
+    pub fn parse(text: &str) -> Result<JsonValue> {
+        let mut p = Parser {
+            s: text.as_bytes(),
+            i: 0,
+        };
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.s.len() {
+            return Err(Error::Runtime(format!(
+                "trailing JSON at byte {} of {}",
+                p.i,
+                p.s.len()
+            )));
+        }
+        Ok(v)
+    }
+
+    fn as_obj(&self, what: &str) -> Result<&HashMap<String, JsonValue>> {
+        match self {
+            JsonValue::Obj(m) => Ok(m),
+            _ => Err(Error::Runtime(format!("{what}: expected object"))),
+        }
+    }
+}
+
+trait ObjExt {
+    fn get(&self, k: &str) -> Result<&JsonValue>;
+    fn get_num(&self, k: &str) -> Result<f64>;
+    fn get_str(&self, k: &str) -> Result<String>;
+    fn get_arr(&self, k: &str) -> Result<&Vec<JsonValue>>;
+    fn get_shapes(&self, k: &str) -> Result<Vec<Vec<usize>>>;
+}
+
+impl ObjExt for HashMap<String, JsonValue> {
+    fn get(&self, k: &str) -> Result<&JsonValue> {
+        HashMap::get(self, k).ok_or_else(|| Error::Runtime(format!("manifest key `{k}` missing")))
+    }
+    fn get_num(&self, k: &str) -> Result<f64> {
+        match ObjExt::get(self, k)? {
+            JsonValue::Num(n) => Ok(*n),
+            _ => Err(Error::Runtime(format!("`{k}` not a number"))),
+        }
+    }
+    fn get_str(&self, k: &str) -> Result<String> {
+        match ObjExt::get(self, k)? {
+            JsonValue::Str(s) => Ok(s.clone()),
+            _ => Err(Error::Runtime(format!("`{k}` not a string"))),
+        }
+    }
+    fn get_arr(&self, k: &str) -> Result<&Vec<JsonValue>> {
+        match ObjExt::get(self, k)? {
+            JsonValue::Arr(a) => Ok(a),
+            _ => Err(Error::Runtime(format!("`{k}` not an array"))),
+        }
+    }
+    fn get_shapes(&self, k: &str) -> Result<Vec<Vec<usize>>> {
+        let mut out = Vec::new();
+        for shape in self.get_arr(k)? {
+            let dims = match shape {
+                JsonValue::Arr(a) => a,
+                _ => return Err(Error::Runtime(format!("`{k}` shape not an array"))),
+            };
+            let mut s = Vec::new();
+            for d in dims {
+                match d {
+                    JsonValue::Num(n) => s.push(*n as usize),
+                    _ => return Err(Error::Runtime(format!("`{k}` dim not a number"))),
+                }
+            }
+            out.push(s);
+        }
+        Ok(out)
+    }
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.s.len() && matches!(self.s[self.i], b' ' | b'\n' | b'\r' | b'\t') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(Error::Runtime(format!(
+                "JSON: expected `{}` at byte {}",
+                c as char, self.i
+            )))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.lit("true", JsonValue::Bool(true)),
+            Some(b'f') => self.lit("false", JsonValue::Bool(false)),
+            Some(b'n') => self.lit("null", JsonValue::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(Error::Runtime(format!(
+                "JSON: unexpected {other:?} at byte {}",
+                self.i
+            ))),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: JsonValue) -> Result<JsonValue> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(Error::Runtime(format!("JSON: bad literal at {}", self.i)))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i])
+            .map_err(|_| Error::Runtime("JSON: bad number utf8".into()))?;
+        text.parse::<f64>()
+            .map(JsonValue::Num)
+            .map_err(|e| Error::Runtime(format!("JSON: bad number `{text}`: {e}")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(Error::Runtime("JSON: unterminated string".into())),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'u') => {
+                            let hex = std::str::from_utf8(&self.s[self.i + 1..self.i + 5])
+                                .map_err(|_| Error::Runtime("JSON: bad \\u".into()))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| Error::Runtime("JSON: bad \\u".into()))?;
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            self.i += 4;
+                        }
+                        other => {
+                            return Err(Error::Runtime(format!("JSON: bad escape {other:?}")))
+                        }
+                    }
+                    self.i += 1;
+                }
+                Some(c) => {
+                    // copy raw UTF-8 bytes through
+                    let start = self.i;
+                    let len = utf8_len(c);
+                    self.i += len;
+                    out.push_str(
+                        std::str::from_utf8(&self.s[start..self.i])
+                            .map_err(|_| Error::Runtime("JSON: bad utf8".into()))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(JsonValue::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Arr(out));
+                }
+                other => return Err(Error::Runtime(format!("JSON: array wants , or ] got {other:?}"))),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut out = HashMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(JsonValue::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            out.insert(key, val);
+            self.ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Obj(out));
+                }
+                other => return Err(Error::Runtime(format!("JSON: object wants , or }} got {other:?}"))),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "t_max": 16,
+ "k": 2,
+ "entries": [
+  {
+   "name": "tnn_forward_n16_c8_b64",
+   "file": "tnn_forward_n16_c8_b64.hlo.txt",
+   "inputs": [[64, 16], [8, 16], [1, 1]],
+   "outputs": [[64, 8], [64, 8]],
+   "kind": "forward",
+   "n": 16, "c": 8, "b": 64
+  }
+ ]
+}"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.t_max, 16);
+        assert_eq!(m.k, 2);
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.name, "tnn_forward_n16_c8_b64");
+        assert_eq!(e.inputs, vec![vec![64, 16], vec![8, 16], vec![1, 1]]);
+        assert_eq!(e.outputs.len(), 2);
+        assert_eq!(e.kind, "forward");
+        assert_eq!((e.n, e.c, e.b), (16, 8, 64));
+    }
+
+    #[test]
+    fn parses_escapes_and_nested() {
+        let v = JsonValue::parse(r#"{"a": "x\n\"y\"", "b": [1, -2.5, true, null]}"#).unwrap();
+        let o = v.as_obj("t").unwrap();
+        match o.get("a").unwrap() {
+            JsonValue::Str(s) => assert_eq!(s, "x\n\"y\""),
+            _ => panic!(),
+        }
+        match o.get("b").unwrap() {
+            JsonValue::Arr(a) => assert_eq!(a.len(), 4),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(JsonValue::parse("{").is_err());
+        assert!(JsonValue::parse("[1,]").is_err());
+        assert!(JsonValue::parse("{\"a\" 1}").is_err());
+        assert!(JsonValue::parse("123 45").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = std::path::Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::parse_file(p).unwrap();
+            assert!(m.entries.len() >= 9);
+            assert!(m.entries.iter().any(|e| e.kind == "topk"));
+        }
+    }
+}

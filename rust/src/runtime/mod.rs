@@ -1,0 +1,227 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the L3 hot path.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`). One
+//! [`Executable`] per artifact; the [`Runtime`] caches them by name and
+//! validates shapes against `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`). Python never runs here — the artifacts are
+//! the only thing crossing the language boundary.
+
+pub mod manifest;
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+pub use manifest::{Entry, Manifest};
+
+/// A compiled PJRT executable plus its manifest entry.
+pub struct Executable {
+    pub entry: Entry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Host-side f32 tensor (row-major) used on the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Runtime(format!(
+                "shape {shape:?} wants {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![1, 1],
+            data: vec![v],
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor { shape: dims, data })
+    }
+
+    /// Row-major element access for 2-D tensors.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+}
+
+impl Executable {
+    /// Execute with shape validation; returns one [`Tensor`] per output
+    /// in manifest order (the AOT side lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            if t.shape != *spec {
+                return Err(Error::Runtime(format!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    self.entry.name, t.shape, spec
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in &tuple {
+            out.push(Tensor::from_literal(lit)?);
+        }
+        if out.len() != self.entry.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                self.entry.name,
+                self.entry.outputs.len(),
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+/// Artifact loader + executable cache. `Clone` shares the cache.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`), reading its
+    /// manifest. Fails with a build hint when artifacts are missing.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            return Err(Error::Runtime(format!(
+                "{} not found — run `make artifacts` first",
+                manifest_path.display()
+            )));
+        }
+        let manifest = Manifest::parse_file(&manifest_path)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            inner: Arc::new(RuntimeInner {
+                client,
+                dir,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Load (or fetch cached) a compiled executable by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.inner.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .inner
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Runtime(format!("artifact `{name}` not in manifest")))?
+            .clone();
+        let path = self.inner.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.inner.client.compile(&comp)?;
+        let executable = Arc::new(Executable { entry, exe });
+        self.inner
+            .cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Names of all artifacts of a given kind ("forward"/"train"/"topk").
+    pub fn names_of_kind(&self, kind: &str) -> Vec<String> {
+        self.inner
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let t = Tensor::zeros(vec![4, 2]);
+        assert_eq!(t.data.len(), 8);
+        assert_eq!(t.at2(3, 1), 0.0);
+    }
+
+    #[test]
+    fn open_missing_dir_gives_hint() {
+        match Runtime::open("/nonexistent-artifacts") {
+            Err(e) => assert!(e.to_string().contains("make artifacts"), "{e}"),
+            Ok(_) => panic!("expected failure"),
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! TCP serving front-end + client load generator.
+//!
+//! A newline-delimited text protocol over the dynamic batcher (the
+//! "serve batched requests, report latency/throughput" half of the E10
+//! end-to-end validation):
+//!
+//! ```text
+//! -> INFER 1,3,16,16,0,...        (n comma-separated spike times)
+//! <- OK winner=2 times=4,16,2,...
+//! -> LEARN 1,3,16,...
+//! <- OK winner=0 times=...
+//! -> STATS
+//! <- ... metrics block ... (terminated by a blank line)
+//! -> QUIT
+//! ```
+//!
+//! One thread per connection (bounded by the listener accept loop);
+//! batching happens in the shared [`DynamicBatcher`], so concurrent
+//! clients coalesce into full PJRT batches.
+
+use crate::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Serving daemon state.
+pub struct Server {
+    infer: Arc<DynamicBatcher>,
+    learn: Arc<DynamicBatcher>,
+    service: TnnHandle,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(service: TnnHandle, cfg: BatcherConfig) -> Server {
+        let infer = Arc::new(DynamicBatcher::start(service.clone(), cfg));
+        let learn = Arc::new(DynamicBatcher::start(
+            service.clone(),
+            BatcherConfig { learn: true, ..cfg },
+        ));
+        Server {
+            infer,
+            learn,
+            service,
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Handle for shutting the accept loop down from another thread.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Bind and serve until the stop flag is set. Returns the bound port
+    /// through `on_bound` (port 0 = ephemeral).
+    pub fn serve(&self, addr: &str, on_bound: impl FnOnce(u16)) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        on_bound(listener.local_addr()?.port());
+        let mut workers = Vec::new();
+        while !self.stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let infer = self.infer.clone();
+                    let learn = self.learn.clone();
+                    let service = self.service.clone();
+                    let stop = self.stop.clone();
+                    workers.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, infer, learn, service, stop);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    infer: Arc<DynamicBatcher>,
+    learn: Arc<DynamicBatcher>,
+    service: TnnHandle,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let line = line.trim();
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let reply = match parse_command(line, service.n) {
+            Ok(Command::Quit) => {
+                writeln!(out, "BYE")?;
+                return Ok(());
+            }
+            Ok(Command::Stats) => {
+                format!("{}\n", service.metrics.render())
+            }
+            Ok(Command::Infer(v)) => respond(infer.submit(v)),
+            Ok(Command::Learn(v)) => respond(learn.submit(v)),
+            Err(e) => format!("ERR {e}\n"),
+        };
+        out.write_all(reply.as_bytes())?;
+        out.flush()?;
+    }
+}
+
+fn respond(result: Result<crate::coordinator::VolleyResult>) -> String {
+    match result {
+        Ok(r) => {
+            let times: Vec<String> = r.times.iter().map(|t| format!("{t}")).collect();
+            format!(
+                "OK winner={} times={}\n",
+                r.winner.map(|w| w as i64).unwrap_or(-1),
+                times.join(",")
+            )
+        }
+        Err(e) => format!("ERR {e}\n"),
+    }
+}
+
+enum Command {
+    Infer(Vec<f32>),
+    Learn(Vec<f32>),
+    Stats,
+    Quit,
+}
+
+fn parse_command(line: &str, n: usize) -> Result<Command> {
+    let mut parts = line.splitn(2, ' ');
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "QUIT" => Ok(Command::Quit),
+        "STATS" => Ok(Command::Stats),
+        "INFER" | "LEARN" => {
+            let rest = parts
+                .next()
+                .ok_or_else(|| Error::Server("missing volley payload".into()))?;
+            let volley: Vec<f32> = rest
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f32>()
+                        .map_err(|e| Error::Server(format!("bad spike time `{s}`: {e}")))
+                })
+                .collect::<Result<_>>()?;
+            if volley.len() != n {
+                return Err(Error::Server(format!(
+                    "volley has {} lines, column wants {n}",
+                    volley.len()
+                )));
+            }
+            if verb == "INFER" {
+                Ok(Command::Infer(volley))
+            } else {
+                Ok(Command::Learn(volley))
+            }
+        }
+        other => Err(Error::Server(format!("unknown verb `{other}`"))),
+    }
+}
+
+/// Minimal blocking client for the load generator and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<String> {
+        writeln!(self.writer, "{line}")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Ok(reply.trim().to_string())
+    }
+
+    pub fn infer(&mut self, volley: &[f32]) -> Result<(i64, Vec<f32>)> {
+        let payload: Vec<String> = volley.iter().map(|t| format!("{t}")).collect();
+        let reply = self.roundtrip(&format!("INFER {}", payload.join(",")))?;
+        parse_ok(&reply)
+    }
+
+    pub fn learn(&mut self, volley: &[f32]) -> Result<(i64, Vec<f32>)> {
+        let payload: Vec<String> = volley.iter().map(|t| format!("{t}")).collect();
+        let reply = self.roundtrip(&format!("LEARN {}", payload.join(",")))?;
+        parse_ok(&reply)
+    }
+
+    pub fn quit(&mut self) -> Result<()> {
+        let _ = self.roundtrip("QUIT")?;
+        Ok(())
+    }
+}
+
+fn parse_ok(reply: &str) -> Result<(i64, Vec<f32>)> {
+    if !reply.starts_with("OK ") {
+        return Err(Error::Server(format!("server said: {reply}")));
+    }
+    let mut winner = -1i64;
+    let mut times = Vec::new();
+    for field in reply[3..].split(' ') {
+        if let Some(w) = field.strip_prefix("winner=") {
+            winner = w
+                .parse()
+                .map_err(|e| Error::Server(format!("bad winner: {e}")))?;
+        } else if let Some(ts) = field.strip_prefix("times=") {
+            times = ts
+                .split(',')
+                .map(|s| {
+                    s.parse::<f32>()
+                        .map_err(|e| Error::Server(format!("bad time: {e}")))
+                })
+                .collect::<Result<_>>()?;
+        }
+    }
+    Ok((winner, times))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_commands() {
+        assert!(matches!(parse_command("QUIT", 4), Ok(Command::Quit)));
+        assert!(matches!(parse_command("STATS", 4), Ok(Command::Stats)));
+        match parse_command("INFER 1,2,3,16", 4) {
+            Ok(Command::Infer(v)) => assert_eq!(v, vec![1.0, 2.0, 3.0, 16.0]),
+            other => panic!("{:?}", other.is_ok()),
+        }
+        assert!(parse_command("INFER 1,2", 4).is_err());
+        assert!(parse_command("INFER 1,x,3,4", 4).is_err());
+        assert!(parse_command("NOPE", 4).is_err());
+        assert!(parse_command("INFER", 4).is_err());
+    }
+
+    #[test]
+    fn parse_ok_replies() {
+        let (w, t) = parse_ok("OK winner=2 times=1,16,3").unwrap();
+        assert_eq!(w, 2);
+        assert_eq!(t, vec![1.0, 16.0, 3.0]);
+        let (w, _) = parse_ok("OK winner=-1 times=16").unwrap();
+        assert_eq!(w, -1);
+        assert!(parse_ok("ERR nope").is_err());
+    }
+}

@@ -1,0 +1,473 @@
+//! Cycle-accurate, levelized gate-level simulation with switching-activity
+//! capture.
+//!
+//! This is the stand-in for the paper's post-synthesis power flow: the
+//! stimulus (sparse spike volleys) is run through the *actual mapped
+//! netlist*, per-net toggle counts are recorded, and the P&R estimator in
+//! [`crate::power`] converts activity into dynamic power. Functional
+//! verification (netlist vs behavioral golden model) uses the same engine.
+//!
+//! Semantics per [`Simulator::step`]:
+//! 1. apply primary-input values,
+//! 2. settle combinational logic in topological order,
+//! 3. sample primary outputs (flip-flops still hold the *old* state),
+//! 4. clock edge: every DFF captures its D input.
+//!
+//! Toggles are counted on every net transition (combinational glitching is
+//! not modelled — a zero-delay model, the same simplification RTL power
+//! tools apply in "toggle count" mode).
+
+pub mod vcd;
+
+use crate::netlist::{NetId, Netlist};
+
+/// Per-net switching activity accumulated over a run.
+#[derive(Clone, Debug)]
+pub struct Activity {
+    /// Toggle count per net id.
+    pub net_toggles: Vec<u64>,
+    /// Number of clock cycles simulated.
+    pub cycles: u64,
+}
+
+impl Activity {
+    pub fn new(n_nets: u32) -> Self {
+        Self {
+            net_toggles: vec![0; n_nets as usize],
+            cycles: 0,
+        }
+    }
+
+    /// Mean toggle rate (toggles per net per cycle) — a quick activity
+    /// health metric used by tests and reports.
+    pub fn mean_toggle_rate(&self) -> f64 {
+        if self.cycles == 0 || self.net_toggles.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.net_toggles.iter().sum();
+        total as f64 / (self.cycles as f64 * self.net_toggles.len() as f64)
+    }
+
+    pub fn merge(&mut self, other: &Activity) {
+        assert_eq!(self.net_toggles.len(), other.net_toggles.len());
+        for (a, b) in self.net_toggles.iter_mut().zip(&other.net_toggles) {
+            *a += b;
+        }
+        self.cycles += other.cycles;
+    }
+}
+
+/// Scalar (one-stimulus-at-a-time) simulator.
+///
+/// The hot path of every synthesis-power experiment; a 64-way bit-parallel
+/// variant ([`Simulator64`]) exists for throughput (see EXPERIMENTS.md
+/// §Perf for the measured speedup); both are kept because the scalar
+/// engine is the readable reference the parallel one is verified against.
+pub struct Simulator<'a> {
+    nl: &'a Netlist,
+    values: Vec<bool>,
+    /// staged DFF next-state (parallel to nl.sequential_cells()).
+    staged: Vec<bool>,
+    activity: Activity,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(nl: &'a Netlist) -> Self {
+        Self {
+            nl,
+            values: vec![false; nl.n_nets as usize],
+            staged: vec![false; nl.sequential_cells().len()],
+            activity: Activity::new(nl.n_nets),
+        }
+    }
+
+    /// Reset all state (nets and flops) to zero without clearing activity.
+    pub fn reset_state(&mut self) {
+        self.values.iter_mut().for_each(|v| *v = false);
+        self.staged.iter_mut().for_each(|v| *v = false);
+    }
+
+    pub fn activity(&self) -> &Activity {
+        &self.activity
+    }
+
+    pub fn take_activity(&mut self) -> Activity {
+        std::mem::replace(&mut self.activity, Activity::new(self.nl.n_nets))
+    }
+
+    /// Current value of a net (after the last step's combinational settle).
+    pub fn net(&self, id: NetId) -> bool {
+        self.values[id as usize]
+    }
+
+    /// Advance one clock cycle; returns primary-output values sampled
+    /// before the clock edge.
+    pub fn step(&mut self, pi_values: &[bool]) -> Vec<bool> {
+        let nl = self.nl;
+        assert_eq!(
+            pi_values.len(),
+            nl.primary_inputs.len(),
+            "primary input arity"
+        );
+        // 1. apply inputs
+        for (i, &pi) in nl.primary_inputs.iter().enumerate() {
+            let idx = pi as usize;
+            if self.values[idx] != pi_values[i] {
+                self.activity.net_toggles[idx] += 1;
+                self.values[idx] = pi_values[i];
+            }
+        }
+        // 2. combinational settle
+        let mut inbuf = [false; 3];
+        for &ci in nl.topo_order() {
+            let cell = &nl.cells[ci as usize];
+            for (j, &inp) in cell.inputs.iter().enumerate() {
+                inbuf[j] = self.values[inp as usize];
+            }
+            let out = cell.kind.eval(&inbuf[..cell.inputs.len()]);
+            for (j, &o) in cell.outputs.iter().enumerate() {
+                let idx = o as usize;
+                if self.values[idx] != out[j] {
+                    self.activity.net_toggles[idx] += 1;
+                    self.values[idx] = out[j];
+                }
+            }
+        }
+        // 3. sample outputs
+        let outputs = nl
+            .primary_outputs
+            .iter()
+            .map(|&po| self.values[po as usize])
+            .collect();
+        // 4. clock edge
+        for (si, &ci) in nl.sequential_cells().iter().enumerate() {
+            let cell = &nl.cells[ci as usize];
+            self.staged[si] = self.values[cell.inputs[0] as usize];
+        }
+        for (si, &ci) in nl.sequential_cells().iter().enumerate() {
+            let cell = &nl.cells[ci as usize];
+            let q = cell.outputs[0] as usize;
+            if self.values[q] != self.staged[si] {
+                self.activity.net_toggles[q] += 1;
+                self.values[q] = self.staged[si];
+            }
+        }
+        self.activity.cycles += 1;
+        outputs
+    }
+
+    /// Run a whole stimulus (outer: cycles, inner: PI values); returns PO
+    /// trace.
+    pub fn run(&mut self, stimulus: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        stimulus.iter().map(|s| self.step(s)).collect()
+    }
+}
+
+/// 64-way bit-parallel simulator: evaluates the netlist on 64 independent
+/// stimuli at once, one bit-lane each. Toggle counts are exact (popcount
+/// of XOR against the previous word). This is the production engine for
+/// the power experiments; `Simulator` is the reference it is verified
+/// against (see tests).
+pub struct Simulator64<'a> {
+    nl: &'a Netlist,
+    values: Vec<u64>,
+    staged: Vec<u64>,
+    activity: Activity,
+    /// cycles counted per lane-step (each step advances all 64 lanes one
+    /// cycle; `activity.cycles` counts lane-cycles = steps * 64).
+    pub lanes: u32,
+    /// Flattened topological "program" (structure-of-arrays): one entry
+    /// per combinational cell, avoiding the `Vec<Cell>` pointer chase in
+    /// the inner loop (EXPERIMENTS.md §Perf change #5).
+    prog: Vec<ProgOp>,
+}
+
+/// One compiled combinational operation.
+#[derive(Clone, Copy)]
+struct ProgOp {
+    kind: crate::cells::CellKind,
+    in0: u32,
+    in1: u32,
+    in2: u32,
+    out0: u32,
+    /// second output net + 1; 0 = none.
+    out1: u32,
+}
+
+impl<'a> Simulator64<'a> {
+    pub fn new(nl: &'a Netlist) -> Self {
+        let prog = nl
+            .topo_order()
+            .iter()
+            .map(|&ci| {
+                let c = &nl.cells[ci as usize];
+                ProgOp {
+                    kind: c.kind,
+                    in0: c.inputs[0],
+                    in1: c.inputs.get(1).copied().unwrap_or(0),
+                    in2: c.inputs.get(2).copied().unwrap_or(0),
+                    out0: c.outputs[0],
+                    out1: c.outputs.get(1).map(|&o| o + 1).unwrap_or(0),
+                }
+            })
+            .collect();
+        Self {
+            nl,
+            values: vec![0; nl.n_nets as usize],
+            staged: vec![0; nl.sequential_cells().len()],
+            activity: Activity::new(nl.n_nets),
+            lanes: 64,
+            prog,
+        }
+    }
+
+    pub fn reset_state(&mut self) {
+        self.values.iter_mut().for_each(|v| *v = 0);
+        self.staged.iter_mut().for_each(|v| *v = 0);
+    }
+
+    pub fn activity(&self) -> &Activity {
+        &self.activity
+    }
+
+    #[inline]
+    fn eval_word(kind: crate::cells::CellKind, a: u64, b: u64, c: u64) -> [u64; 2] {
+        use crate::cells::CellKind::*;
+        match kind {
+            Inv => [!a, 0],
+            Buf | Dff => [a, 0],
+            And2 => [a & b, 0],
+            Or2 => [a | b, 0],
+            Nand2 => [!(a & b), 0],
+            Nor2 => [!(a | b), 0],
+            Xor2 => [a ^ b, 0],
+            Xnor2 => [!(a ^ b), 0],
+            Mux2 => [(a & !c) | (b & c), 0],
+            Ha => [a ^ b, a & b],
+            Fa => [a ^ b ^ c, (a & b) | (c & (a ^ b))],
+        }
+    }
+
+    /// Advance one cycle on all 64 lanes. `pi_words[i]` carries the value
+    /// of primary input `i` across lanes (bit `l` = lane `l`). Returns PO
+    /// words sampled before the clock edge.
+    pub fn step(&mut self, pi_words: &[u64]) -> Vec<u64> {
+        let nl = self.nl;
+        assert_eq!(pi_words.len(), nl.primary_inputs.len());
+        for (i, &pi) in nl.primary_inputs.iter().enumerate() {
+            let idx = pi as usize;
+            let diff = self.values[idx] ^ pi_words[i];
+            if diff != 0 {
+                self.activity.net_toggles[idx] += diff.count_ones() as u64;
+                self.values[idx] = pi_words[i];
+            }
+        }
+        for op in &self.prog {
+            let a = self.values[op.in0 as usize];
+            let b = self.values[op.in1 as usize];
+            let c = self.values[op.in2 as usize];
+            let out = Self::eval_word(op.kind, a, b, c);
+            let idx = op.out0 as usize;
+            let diff = self.values[idx] ^ out[0];
+            if diff != 0 {
+                self.activity.net_toggles[idx] += diff.count_ones() as u64;
+                self.values[idx] = out[0];
+            }
+            if op.out1 != 0 {
+                let idx = (op.out1 - 1) as usize;
+                let diff = self.values[idx] ^ out[1];
+                if diff != 0 {
+                    self.activity.net_toggles[idx] += diff.count_ones() as u64;
+                    self.values[idx] = out[1];
+                }
+            }
+        }
+        let outputs = nl
+            .primary_outputs
+            .iter()
+            .map(|&po| self.values[po as usize])
+            .collect();
+        for (si, &ci) in nl.sequential_cells().iter().enumerate() {
+            let cell = &nl.cells[ci as usize];
+            self.staged[si] = self.values[cell.inputs[0] as usize];
+        }
+        for (si, &ci) in nl.sequential_cells().iter().enumerate() {
+            let cell = &nl.cells[ci as usize];
+            let q = cell.outputs[0] as usize;
+            let diff = self.values[q] ^ self.staged[si];
+            if diff != 0 {
+                self.activity.net_toggles[q] += diff.count_ones() as u64;
+                self.values[q] = self.staged[si];
+            }
+        }
+        self.activity.cycles += self.lanes as u64;
+        outputs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::NetlistBuilder;
+    use crate::rng::Xoshiro256;
+
+    fn xor_tree() -> crate::netlist::Netlist {
+        let mut b = NetlistBuilder::new("xt");
+        let ins = b.inputs(8);
+        let mut nets = ins;
+        while nets.len() > 1 {
+            let mut next = Vec::new();
+            for pair in nets.chunks(2) {
+                next.push(b.xor2(pair[0], pair[1]));
+            }
+            nets = next;
+        }
+        b.mark_output(nets[0]);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn combinational_function() {
+        let nl = xor_tree();
+        let mut sim = Simulator::new(&nl);
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..200 {
+            let inp: Vec<bool> = (0..8).map(|_| rng.gen_bool(0.5)).collect();
+            let expect = inp.iter().fold(false, |a, &b| a ^ b);
+            assert_eq!(sim.step(&inp)[0], expect);
+        }
+    }
+
+    #[test]
+    fn toggle_counting_exact_on_known_sequence() {
+        // Single inverter: input 0 -> 1 -> 1 -> 0. Input net toggles twice,
+        // output toggles twice (init 0 -> settles to 1 on first step).
+        let mut b = NetlistBuilder::new("inv");
+        let x = b.input();
+        let y = b.inv(x);
+        b.mark_output(y);
+        let nl = b.build().unwrap();
+        let mut sim = Simulator::new(&nl);
+        sim.step(&[false]); // y: 0->1 (one toggle)
+        sim.step(&[true]); // x: 0->1, y: 1->0
+        sim.step(&[true]); // no change
+        sim.step(&[false]); // x: 1->0, y: 0->1
+        let a = sim.activity();
+        assert_eq!(a.cycles, 4);
+        assert_eq!(a.net_toggles[x as usize], 2);
+        assert_eq!(a.net_toggles[y as usize], 3);
+    }
+
+    #[test]
+    fn sim64_matches_scalar() {
+        let nl = xor_tree();
+        let mut rng = Xoshiro256::new(7);
+        // Build 64 random stimuli of 32 cycles.
+        let stimuli: Vec<Vec<Vec<bool>>> = (0..64)
+            .map(|_| {
+                (0..32)
+                    .map(|_| (0..8).map(|_| rng.gen_bool(0.3)).collect())
+                    .collect()
+            })
+            .collect();
+
+        // Scalar reference, activities summed over lanes.
+        let mut ref_act = Activity::new(nl.n_nets);
+        let mut ref_out = Vec::new();
+        for lane in &stimuli {
+            let mut sim = Simulator::new(&nl);
+            let outs = sim.run(lane);
+            ref_out.push(outs);
+            ref_act.merge(sim.activity());
+        }
+
+        // 64-lane run.
+        let mut sim64 = Simulator64::new(&nl);
+        let mut outs64: Vec<Vec<u64>> = Vec::new();
+        for t in 0..32 {
+            let words: Vec<u64> = (0..8)
+                .map(|i| {
+                    let mut w = 0u64;
+                    for (l, lane) in stimuli.iter().enumerate() {
+                        if lane[t][i] {
+                            w |= 1 << l;
+                        }
+                    }
+                    w
+                })
+                .collect();
+            outs64.push(sim64.step(&words));
+        }
+
+        // outputs agree
+        for (l, lane_out) in ref_out.iter().enumerate() {
+            for t in 0..32 {
+                let bit = (outs64[t][0] >> l) & 1 == 1;
+                assert_eq!(lane_out[t][0], bit, "lane {l} t {t}");
+            }
+        }
+        // activity agrees exactly
+        assert_eq!(ref_act.cycles, sim64.activity().cycles);
+        assert_eq!(ref_act.net_toggles, sim64.activity().net_toggles);
+    }
+
+    #[test]
+    fn sequential_counter_counts() {
+        // 3-bit ripple counter out of DFFs + HAs: q += 1 per cycle.
+        let mut b = NetlistBuilder::new("ctr");
+        // bit0: q0' = q0 ^ 1 -> implement with INV; carry = q0
+        // Use HA(q, carry_in) chain with carry_in(0)=1 via inverter trick:
+        // simpler: q0 toggles every cycle, q1 toggles when q0==1, etc.
+        let d0 = b.alloc_net();
+        let q0 = b.alloc_net();
+        b.cells.push(crate::netlist::Cell {
+            kind: crate::cells::CellKind::Dff,
+            inputs: vec![d0],
+            outputs: vec![q0],
+        });
+        let nq0 = b.inv(q0);
+        // d0 = !q0
+        b.cells.push(crate::netlist::Cell {
+            kind: crate::cells::CellKind::Buf,
+            inputs: vec![nq0],
+            outputs: vec![d0],
+        });
+        let d1 = b.alloc_net();
+        let q1 = b.alloc_net();
+        b.cells.push(crate::netlist::Cell {
+            kind: crate::cells::CellKind::Dff,
+            inputs: vec![d1],
+            outputs: vec![q1],
+        });
+        let x1 = b.xor2(q1, q0);
+        b.cells.push(crate::netlist::Cell {
+            kind: crate::cells::CellKind::Buf,
+            inputs: vec![x1],
+            outputs: vec![d1],
+        });
+        b.mark_output(q0);
+        b.mark_output(q1);
+        let nl = b.build().unwrap();
+        let mut sim = Simulator::new(&nl);
+        let mut counts = Vec::new();
+        for _ in 0..4 {
+            let o = sim.step(&[]);
+            counts.push((o[0] as u8) + 2 * (o[1] as u8));
+        }
+        assert_eq!(counts, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn activity_mean_rate_sane() {
+        let nl = xor_tree();
+        let mut sim = Simulator::new(&nl);
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..1000 {
+            let inp: Vec<bool> = (0..8).map(|_| rng.gen_bool(0.5)).collect();
+            sim.step(&inp);
+        }
+        let r = sim.activity().mean_toggle_rate();
+        // XOR trees switch a lot under random stimulus.
+        assert!(r > 0.2 && r < 0.7, "rate={r}");
+    }
+}

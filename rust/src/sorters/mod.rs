@@ -1,0 +1,481 @@
+//! Unary sorting networks (compare-and-swap networks).
+//!
+//! A compare-and-swap (CS) network sorts by a fixed sequence of
+//! comparators. On temporal-coded unary data a comparator is just an
+//! AND/OR gate pair (paper Fig. 3): applied bitwise per clock cycle, the
+//! OR output carries the earlier-rising (larger-magnitude) signal toward
+//! the *bottom* lane and the AND output the later-rising one toward the
+//! *top* lane. Because each comparator preserves the multiset of bits per
+//! cycle, the per-cycle popcount across lanes is invariant — the property
+//! Catwalk's dendrite exploits (DESIGN.md §1.1).
+//!
+//! Generators provided:
+//! * [`bitonic`] — the classic bitonic network (paper's "bitonic").
+//! * [`odd_even`] — Batcher's odd-even merge network; within a few % of
+//!   the best-known ("optimal") sizes and provably correct at every `n`
+//!   we evaluate. The paper uses Dobbelaere's optimal networks, which are
+//!   only published on the web — see DESIGN.md §5 for the substitution.
+//! * [`optimal`] — best-known networks, hard-coded for n ∈ {2..8}
+//!   (verified exhaustively by the test suite via the zero-one principle);
+//!   falls back to [`odd_even`] for larger n.
+//!
+//! All generators emit comparators `(i, j)` with `i < j`: lane `j`
+//! receives the max (OR), lane `i` the min (AND); a fully sorted output
+//! therefore has ascending bit-values from lane 0 down to lane n-1, i.e.
+//! the "top-k largest" live in the bottom k lanes, matching Fig. 5.
+
+use crate::error::{Error, Result};
+use crate::netlist::{Netlist, NetlistBuilder};
+
+/// One compare-and-swap unit between lanes `top < bot`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Comparator {
+    pub top: u16,
+    pub bot: u16,
+}
+
+impl Comparator {
+    pub fn new(a: usize, b: usize) -> Self {
+        assert!(a != b);
+        let (top, bot) = if a < b { (a, b) } else { (b, a) };
+        Self {
+            top: top as u16,
+            bot: bot as u16,
+        }
+    }
+}
+
+/// Which construction a network came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SorterKind {
+    Bitonic,
+    OddEven,
+    Optimal,
+}
+
+impl SorterKind {
+    pub const ALL: [SorterKind; 3] = [SorterKind::Bitonic, SorterKind::OddEven, SorterKind::Optimal];
+    pub fn name(self) -> &'static str {
+        match self {
+            SorterKind::Bitonic => "bitonic",
+            SorterKind::OddEven => "odd-even",
+            SorterKind::Optimal => "optimal",
+        }
+    }
+}
+
+/// A compare-and-swap network over `n` lanes.
+#[derive(Clone, Debug)]
+pub struct CsNetwork {
+    pub n: usize,
+    pub comparators: Vec<Comparator>,
+    pub kind: SorterKind,
+}
+
+impl CsNetwork {
+    /// Build a sorting network of the requested kind. `n` must be a power
+    /// of two in `2..=256` (the paper evaluates 4..64).
+    pub fn sorter(kind: SorterKind, n: usize) -> Result<CsNetwork> {
+        if !n.is_power_of_two() || !(2..=256).contains(&n) {
+            return Err(Error::Sorter(format!(
+                "n must be a power of two in 2..=256, got {n}"
+            )));
+        }
+        let comparators = match kind {
+            SorterKind::Bitonic => bitonic(n),
+            SorterKind::OddEven => odd_even(n),
+            SorterKind::Optimal => optimal(n),
+        };
+        Ok(CsNetwork {
+            n,
+            comparators,
+            kind,
+        })
+    }
+
+    /// Apply the network to one bit-vector (one clock cycle of temporal
+    /// signals). `true` sinks toward higher lane indices.
+    pub fn apply_bits(&self, bits: &mut [bool]) {
+        debug_assert_eq!(bits.len(), self.n);
+        for c in &self.comparators {
+            let a = bits[c.top as usize];
+            let b = bits[c.bot as usize];
+            bits[c.top as usize] = a & b;
+            bits[c.bot as usize] = a | b;
+        }
+    }
+
+    /// Apply to integer keys (used by tests / behavioral models): max
+    /// moves toward the bottom lane, mirroring the bit semantics.
+    pub fn apply_keys<T: Ord + Copy>(&self, keys: &mut [T]) {
+        debug_assert_eq!(keys.len(), self.n);
+        for c in &self.comparators {
+            let a = keys[c.top as usize];
+            let b = keys[c.bot as usize];
+            keys[c.top as usize] = a.min(b);
+            keys[c.bot as usize] = a.max(b);
+        }
+    }
+
+    /// Zero-one-principle verification: exhaustive for `n <= max_exhaustive`
+    /// (the principle makes bit vectors sufficient), randomized otherwise.
+    pub fn verify_sorter(&self, max_exhaustive: usize) -> Result<()> {
+        if self.n <= max_exhaustive {
+            for pattern in 0u64..(1u64 << self.n) {
+                let mut bits: Vec<bool> = (0..self.n).map(|i| (pattern >> i) & 1 == 1).collect();
+                self.apply_bits(&mut bits);
+                if bits.windows(2).any(|w| w[0] & !w[1]) {
+                    return Err(Error::Sorter(format!(
+                        "{} n={} fails zero-one pattern {pattern:#x}",
+                        self.kind.name(),
+                        self.n
+                    )));
+                }
+            }
+        } else {
+            let mut rng = crate::rng::Xoshiro256::new(0xC5C5_0000 + self.n as u64);
+            for _ in 0..20_000 {
+                let mut bits: Vec<bool> = (0..self.n).map(|_| rng.gen_bool(0.5)).collect();
+                self.apply_bits(&mut bits);
+                if bits.windows(2).any(|w| w[0] & !w[1]) {
+                    return Err(Error::Sorter(format!(
+                        "{} n={} fails randomized zero-one check",
+                        self.kind.name(),
+                        self.n
+                    )));
+                }
+            }
+            // plus all single-one and single-zero patterns (the classic
+            // adversarial cases)
+            for i in 0..self.n {
+                for inv in [false, true] {
+                    let mut bits: Vec<bool> = (0..self.n).map(|j| (j == i) ^ inv).collect();
+                    self.apply_bits(&mut bits);
+                    if bits.windows(2).any(|w| w[0] & !w[1]) {
+                        return Err(Error::Sorter(format!(
+                            "{} n={} fails unit pattern {i} inv={inv}",
+                            self.kind.name(),
+                            self.n
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Emit a gate-level netlist: one AND2 + one OR2 per comparator
+    /// (paper Fig. 3b). Outputs are all `n` sorted lanes.
+    pub fn to_netlist(&self, name: &str) -> Result<Netlist> {
+        let mut b = NetlistBuilder::new(name);
+        let mut lanes = b.inputs(self.n);
+        for c in &self.comparators {
+            let a = lanes[c.top as usize];
+            let o = lanes[c.bot as usize];
+            lanes[c.top as usize] = b.and2(a, o);
+            lanes[c.bot as usize] = b.or2(a, o);
+        }
+        for &l in &lanes {
+            b.mark_output(l);
+        }
+        b.build()
+    }
+
+    pub fn size(&self) -> usize {
+        self.comparators.len()
+    }
+
+    /// Depth in comparator layers (two comparators can share a layer if
+    /// they touch disjoint lanes, greedily packed in list order).
+    pub fn depth(&self) -> usize {
+        let mut lane_depth = vec![0usize; self.n];
+        let mut max = 0;
+        for c in &self.comparators {
+            let d = lane_depth[c.top as usize].max(lane_depth[c.bot as usize]) + 1;
+            lane_depth[c.top as usize] = d;
+            lane_depth[c.bot as usize] = d;
+            max = max.max(d);
+        }
+        max
+    }
+
+    /// Greedy layering: partition the comparator list into maximal
+    /// lane-disjoint layers preserving order. Used by the Pallas kernel
+    /// schedule exporter and the report renderers.
+    pub fn layers(&self) -> Vec<Vec<Comparator>> {
+        let mut layers: Vec<Vec<Comparator>> = Vec::new();
+        let mut lane_layer = vec![0usize; self.n];
+        for &c in &self.comparators {
+            let l = lane_layer[c.top as usize].max(lane_layer[c.bot as usize]);
+            if l == layers.len() {
+                layers.push(Vec::new());
+            }
+            layers[l].push(c);
+            lane_layer[c.top as usize] = l + 1;
+            lane_layer[c.bot as usize] = l + 1;
+        }
+        layers
+    }
+}
+
+/// Bitonic sorting network for power-of-two `n` (ascending toward bottom).
+///
+/// This is the "all comparators point the same direction" formulation
+/// (Knuth 5.3.4): sort both halves ascending, merge with the triangle
+/// pattern (lane `lo+i` against lane `lo+n-1-i`), then recursive clean-up
+/// half-merges. Every comparator is min-top/max-bot, which is what the
+/// unary AND/OR mapping requires.
+pub fn bitonic(n: usize) -> Vec<Comparator> {
+    let mut out = Vec::new();
+    bitonic_sort_rec(0, n, &mut out);
+    out
+}
+
+fn bitonic_sort_rec(lo: usize, n: usize, out: &mut Vec<Comparator>) {
+    if n <= 1 {
+        return;
+    }
+    let half = n / 2;
+    bitonic_sort_rec(lo, half, out);
+    bitonic_sort_rec(lo + half, n - half, out);
+    // triangle merge
+    for i in 0..half {
+        out.push(Comparator::new(lo + i, lo + n - 1 - i));
+    }
+    bitonic_clean(lo, half, out);
+    bitonic_clean(lo + half, n - half, out);
+}
+
+fn bitonic_clean(lo: usize, n: usize, out: &mut Vec<Comparator>) {
+    if n <= 1 {
+        return;
+    }
+    let half = n / 2;
+    for i in 0..half {
+        out.push(Comparator::new(lo + i, lo + i + half));
+    }
+    bitonic_clean(lo, half, out);
+    bitonic_clean(lo + half, n - half, out);
+}
+
+/// Batcher odd-even merge sorting network for power-of-two `n`.
+pub fn odd_even(n: usize) -> Vec<Comparator> {
+    let mut out = Vec::new();
+    odd_even_sort(0, n, &mut out);
+    out
+}
+
+fn odd_even_sort(lo: usize, n: usize, out: &mut Vec<Comparator>) {
+    if n <= 1 {
+        return;
+    }
+    let m = n / 2;
+    odd_even_sort(lo, m, out);
+    odd_even_sort(lo + m, m, out);
+    odd_even_merge(lo, n, 1, out);
+}
+
+fn odd_even_merge(lo: usize, n: usize, r: usize, out: &mut Vec<Comparator>) {
+    let m = r * 2;
+    if m < n {
+        odd_even_merge(lo, n, m, out);
+        odd_even_merge(lo + r, n, m, out);
+        let mut i = lo + r;
+        while i + r < lo + n {
+            out.push(Comparator::new(i, i + r));
+            i += m;
+        }
+    } else {
+        out.push(Comparator::new(lo, lo + r));
+    }
+}
+
+/// Best-known ("optimal") sorting networks, hard-coded for small `n`
+/// (sizes 1, 5, 19 for n = 2, 4, 8 — matching the counts the paper cites
+/// from Dobbelaere's list); larger n fall back to Batcher odd-even (see
+/// DESIGN.md §5).
+pub fn optimal(n: usize) -> Vec<Comparator> {
+    let pairs: &[(usize, usize)] = match n {
+        2 => &[(0, 1)],
+        4 => &[(0, 1), (2, 3), (0, 2), (1, 3), (1, 2)],
+        8 => &[
+            // 19-comparator network (Batcher's odd-even merge for n=8 is
+            // known optimal in size).
+            (0, 1),
+            (2, 3),
+            (4, 5),
+            (6, 7),
+            (0, 2),
+            (1, 3),
+            (4, 6),
+            (5, 7),
+            (1, 2),
+            (5, 6),
+            (0, 4),
+            (1, 5),
+            (2, 6),
+            (3, 7),
+            (2, 4),
+            (3, 5),
+            (1, 2),
+            (3, 4),
+            (5, 6),
+        ],
+        _ => return odd_even(n),
+    };
+    pairs.iter().map(|&(a, b)| Comparator::new(a, b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quickprop::{forall, BitsGen};
+    use crate::rng::Xoshiro256;
+    use crate::sim::Simulator;
+
+    #[test]
+    fn sizes_match_known_counts() {
+        assert_eq!(optimal(2).len(), 1);
+        assert_eq!(optimal(4).len(), 5);
+        assert_eq!(optimal(8).len(), 19);
+        // Batcher odd-even sizes: n(log n)(log n - 1)/4 + n - 1
+        assert_eq!(odd_even(4).len(), 5);
+        assert_eq!(odd_even(8).len(), 19);
+        assert_eq!(odd_even(16).len(), 63);
+        assert_eq!(odd_even(32).len(), 191);
+        assert_eq!(odd_even(64).len(), 543);
+        // Bitonic sizes: n log n (log n + 1) / 4
+        assert_eq!(bitonic(4).len(), 6);
+        assert_eq!(bitonic(8).len(), 24);
+        assert_eq!(bitonic(16).len(), 80);
+        assert_eq!(bitonic(32).len(), 240);
+        assert_eq!(bitonic(64).len(), 672);
+    }
+
+    #[test]
+    fn all_networks_sort_exhaustive_small() {
+        for kind in SorterKind::ALL {
+            for n in [2usize, 4, 8, 16] {
+                let net = CsNetwork::sorter(kind, n).unwrap();
+                net.verify_sorter(16)
+                    .unwrap_or_else(|e| panic!("{kind:?} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn large_networks_sort_randomized() {
+        for kind in SorterKind::ALL {
+            for n in [32usize, 64] {
+                let net = CsNetwork::sorter(kind, n).unwrap();
+                net.verify_sorter(16)
+                    .unwrap_or_else(|e| panic!("{kind:?} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_n() {
+        assert!(CsNetwork::sorter(SorterKind::Bitonic, 3).is_err());
+        assert!(CsNetwork::sorter(SorterKind::Bitonic, 0).is_err());
+        assert!(CsNetwork::sorter(SorterKind::Bitonic, 512).is_err());
+    }
+
+    #[test]
+    fn keys_sorted_ascending_toward_bottom() {
+        let net = CsNetwork::sorter(SorterKind::Optimal, 8).unwrap();
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..500 {
+            let mut keys: Vec<u32> = (0..8).map(|_| rng.next_u32() % 100).collect();
+            let mut expect = keys.clone();
+            expect.sort_unstable();
+            net.apply_keys(&mut keys);
+            assert_eq!(keys, expect);
+        }
+    }
+
+    #[test]
+    fn property_popcount_preserved() {
+        // The Catwalk-critical invariant: any CS network preserves the
+        // number of 1s in a bit vector.
+        for kind in SorterKind::ALL {
+            let net = CsNetwork::sorter(kind, 16).unwrap();
+            forall(11, 512, &BitsGen { len: 16 }, |bits| {
+                let ones = bits.iter().filter(|&&b| b).count();
+                let mut sorted = bits.clone();
+                net.apply_bits(&mut sorted);
+                sorted.iter().filter(|&&b| b).count() == ones
+            });
+        }
+    }
+
+    #[test]
+    fn netlist_matches_bit_model() {
+        for kind in SorterKind::ALL {
+            let net = CsNetwork::sorter(kind, 8).unwrap();
+            let nl = net.to_netlist("sorter8").unwrap();
+            let mut sim = Simulator::new(&nl);
+            let mut rng = Xoshiro256::new(17);
+            for _ in 0..300 {
+                let bits: Vec<bool> = (0..8).map(|_| rng.gen_bool(0.4)).collect();
+                let mut expect = bits.clone();
+                net.apply_bits(&mut expect);
+                let got = sim.step(&bits);
+                assert_eq!(got, expect, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_gate_count_is_two_per_comparator() {
+        let net = CsNetwork::sorter(SorterKind::OddEven, 16).unwrap();
+        let nl = net.to_netlist("s").unwrap();
+        assert_eq!(nl.cells.len(), 2 * net.size());
+    }
+
+    #[test]
+    fn layers_partition_and_are_disjoint() {
+        let net = CsNetwork::sorter(SorterKind::Bitonic, 16).unwrap();
+        let layers = net.layers();
+        let total: usize = layers.iter().map(|l| l.len()).sum();
+        assert_eq!(total, net.size());
+        for layer in &layers {
+            let mut seen = std::collections::HashSet::new();
+            for c in layer {
+                assert!(seen.insert(c.top));
+                assert!(seen.insert(c.bot));
+            }
+        }
+        assert_eq!(layers.len(), net.depth());
+    }
+
+    #[test]
+    fn temporal_monotone_signals_sort_rise_times() {
+        // End-to-end temporal semantics: feed step signals (rise at time
+        // t_i, stay high); output lane j must rise at the j-th largest
+        // rise-time... i.e. sorted descending magnitude toward bottom =
+        // ascending rise time toward bottom.
+        let net = CsNetwork::sorter(SorterKind::OddEven, 8).unwrap();
+        let nl = net.to_netlist("s8").unwrap();
+        let mut rng = Xoshiro256::new(23);
+        let t_max = 12usize;
+        for _ in 0..100 {
+            let rise: Vec<usize> = (0..8).map(|_| rng.gen_range(t_max + 1)).collect();
+            let mut sim = Simulator::new(&nl);
+            let mut out_rise = vec![usize::MAX; 8];
+            for t in 0..t_max + 1 {
+                let bits: Vec<bool> = rise.iter().map(|&r| t >= r).collect();
+                let out = sim.step(&bits);
+                for (j, &o) in out.iter().enumerate() {
+                    if o && out_rise[j] == usize::MAX {
+                        out_rise[j] = t;
+                    }
+                }
+            }
+            let mut expect = rise.clone();
+            expect.sort_unstable_by(|a, b| b.cmp(a)); // descending rise time toward top
+            let got: Vec<usize> = out_rise.to_vec();
+            assert_eq!(got, expect, "rise={rise:?}");
+        }
+    }
+}

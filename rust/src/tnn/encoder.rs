@@ -1,0 +1,122 @@
+//! Gaussian-receptive-field (GRF) temporal encoding.
+//!
+//! Standard TNN front-end (Smith [13]; Chaudhari [1]): each analog input
+//! dimension is covered by `m` overlapping Gaussian fields; a sample
+//! excites each field by its Gaussian response, and the response maps
+//! *inversely* to spike time — strong excitation spikes early, weak
+//! excitation late or not at all. The result is exactly the sparse
+//! temporal volley regime the paper's sparsity argument (§III) relies
+//! on: per sample only the few fields near the value spike early, the
+//! rest are silent.
+
+use super::T_MAX;
+
+/// GRF bank over `dims` input dimensions with `fields` Gaussians each;
+/// output volley has `dims * fields` lines.
+#[derive(Clone, Debug)]
+pub struct GrfEncoder {
+    pub dims: usize,
+    pub fields: usize,
+    pub lo: f32,
+    pub hi: f32,
+    /// responses below this never spike (controls sparsity).
+    pub cutoff: f32,
+}
+
+impl GrfEncoder {
+    pub fn new(dims: usize, fields: usize, lo: f32, hi: f32) -> GrfEncoder {
+        GrfEncoder {
+            dims,
+            fields,
+            lo,
+            hi,
+            cutoff: 0.25,
+        }
+    }
+
+    pub fn n_lines(&self) -> usize {
+        self.dims * self.fields
+    }
+
+    fn centers(&self) -> Vec<f32> {
+        let m = self.fields as f32;
+        (0..self.fields)
+            .map(|j| self.lo + (self.hi - self.lo) * (j as f32 + 0.5) / m)
+            .collect()
+    }
+
+    fn sigma(&self) -> f32 {
+        // the usual beta=1.5 overlap rule
+        (self.hi - self.lo) / (1.5 * self.fields as f32)
+    }
+
+    /// Encode one sample vector into spike times (`T_MAX` = silent).
+    pub fn encode(&self, sample: &[f32]) -> Vec<f32> {
+        assert_eq!(sample.len(), self.dims);
+        let centers = self.centers();
+        let sigma = self.sigma();
+        let mut out = Vec::with_capacity(self.n_lines());
+        for &x in sample {
+            for &c in &centers {
+                let z = (x - c) / sigma;
+                let resp = (-0.5 * z * z).exp(); // (0, 1]
+                if resp < self.cutoff {
+                    out.push(T_MAX as f32);
+                } else {
+                    // resp 1.0 -> t = 0; resp cutoff -> t = 7 (3-bit code)
+                    let t = ((1.0 - resp) / (1.0 - self.cutoff) * 7.0).round();
+                    out.push(t.clamp(0.0, 7.0));
+                }
+            }
+        }
+        out
+    }
+
+    /// Fraction of lines spiking for a sample (sparsity instrument).
+    pub fn activity(&self, sample: &[f32]) -> f64 {
+        let v = self.encode(sample);
+        v.iter().filter(|&&t| t < T_MAX as f32).count() as f64 / v.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_count_and_range() {
+        let e = GrfEncoder::new(2, 8, 0.0, 1.0);
+        assert_eq!(e.n_lines(), 16);
+        let v = e.encode(&[0.3, 0.9]);
+        assert_eq!(v.len(), 16);
+        for &t in &v {
+            assert!((0.0..=T_MAX as f32).contains(&t));
+        }
+    }
+
+    #[test]
+    fn nearest_field_spikes_earliest() {
+        let e = GrfEncoder::new(1, 8, 0.0, 1.0);
+        let v = e.encode(&[0.5]);
+        // centers at 1/16, 3/16, ..: 0.5 sits between fields 3 and 4
+        let min_t = v.iter().cloned().fold(f32::MAX, f32::min);
+        let argmin = v.iter().position(|&t| t == min_t).unwrap();
+        assert!(argmin == 3 || argmin == 4, "argmin={argmin} v={v:?}");
+        assert!(min_t <= 3.0);
+    }
+
+    #[test]
+    fn encoding_is_sparse() {
+        let e = GrfEncoder::new(4, 16, 0.0, 1.0);
+        let act = e.activity(&[0.1, 0.4, 0.6, 0.9]);
+        // GRF volleys are sparse: only fields near each value spike.
+        assert!(act < 0.35, "activity={act}");
+        assert!(act > 0.02, "activity={act}");
+    }
+
+    #[test]
+    fn distinct_samples_give_distinct_volleys() {
+        let e = GrfEncoder::new(1, 8, 0.0, 1.0);
+        assert_ne!(e.encode(&[0.1]), e.encode(&[0.9]));
+    }
+}

@@ -1,0 +1,227 @@
+//! TNN functional layer: temporal encoding, columns, WTA, STDP, workloads.
+//!
+//! The paper's neuron lives inside a temporal neural network column
+//! (Smith [12, 13]; Nair [7]): Gaussian-receptive-field encoders turn
+//! analog samples into spike-time volleys, a column of SRM0-RNL neurons
+//! integrates them, 1-WTA lateral inhibition picks a winner, and the
+//! STDP rule moves the winner's weights — unsupervised clustering with
+//! online learning.
+//!
+//! Two execution paths exist and are cross-checked:
+//! * **native** ([`Column`]): behavioral neurons in Rust — used by the
+//!   gate-level experiments and as the conformance reference;
+//! * **PJRT** ([`crate::coordinator::TnnHandle`]): the AOT-compiled
+//!   JAX/Pallas artifacts — the production inference/learning path.
+//!
+//! The sparsity instrumentation here backs experiment E8 (the paper's
+//! 0.1–10 % claim motivating k = 2) and the E9 accuracy ablation.
+
+pub mod encoder;
+pub mod stdp;
+pub mod workload;
+
+use crate::rng::Xoshiro256;
+
+pub use encoder::GrfEncoder;
+pub use stdp::{StdpParams, StdpRule};
+pub use workload::{ClusteredSeries, WorkloadConfig};
+
+/// Time base shared with the Python side (`model.T_MAX`).
+pub const T_MAX: u32 = 16;
+/// Weight ceiling (3-bit RNL responses).
+pub const W_MAX: f32 = 7.0;
+
+/// A volley of input spike times; `>= T_MAX` = silent line.
+pub type SpikeTimes = Vec<f32>;
+
+/// A TNN column of `c` RNL neurons over `n` inputs (native path).
+#[derive(Clone, Debug)]
+pub struct Column {
+    pub n: usize,
+    pub c: usize,
+    pub theta: f32,
+    /// Catwalk clip (None = unclipped baseline dendrite).
+    pub k_clip: Option<u32>,
+    /// weights[c][i]
+    pub weights: Vec<Vec<f32>>,
+}
+
+/// Result of one column evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnOutput {
+    /// first-crossing time per neuron (T_MAX = silent)
+    pub times: Vec<f32>,
+    /// 1-WTA winner (earliest spike, lowest index breaks ties)
+    pub winner: Option<usize>,
+}
+
+impl Column {
+    pub fn new(n: usize, c: usize, theta: f32, k_clip: Option<u32>, seed: u64) -> Column {
+        let mut rng = Xoshiro256::new(seed);
+        let weights = (0..c)
+            .map(|_| (0..n).map(|_| 2.0 + 3.0 * rng.gen_f64() as f32).collect())
+            .collect();
+        Column {
+            n,
+            c,
+            theta,
+            k_clip,
+            weights,
+        }
+    }
+
+    /// RNL forward pass for one volley (mirrors `rnl_column_ref`).
+    pub fn forward(&self, spikes: &SpikeTimes) -> ColumnOutput {
+        assert_eq!(spikes.len(), self.n);
+        let mut times = vec![T_MAX as f32; self.c];
+        for (ci, w) in self.weights.iter().enumerate() {
+            let mut pot = 0f32;
+            'time: for t in 0..T_MAX {
+                let tf = t as f32;
+                let mut count = 0f32;
+                for (i, &s) in spikes.iter().enumerate() {
+                    if tf >= s && tf < s + w[i] {
+                        count += 1.0;
+                    }
+                }
+                if let Some(k) = self.k_clip {
+                    count = count.min(k as f32);
+                }
+                pot += count;
+                if pot >= self.theta {
+                    times[ci] = tf;
+                    break 'time;
+                }
+            }
+        }
+        let winner = wta(&times);
+        ColumnOutput { times, winner }
+    }
+
+    /// Measure the instantaneous input-line activity this volley induces:
+    /// returns the maximum simultaneous pulse overlap across the gamma
+    /// window for neuron 0's weights (experiment E8's k-sufficiency
+    /// metric).
+    pub fn max_overlap(&self, spikes: &SpikeTimes) -> u32 {
+        let w = &self.weights[0];
+        (0..T_MAX)
+            .map(|t| {
+                let tf = t as f32;
+                spikes
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, &s)| tf >= s && tf < s + w[*i])
+                    .count() as u32
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// 1-WTA over spike times; `None` when nothing fired.
+pub fn wta(times: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &t) in times.iter().enumerate() {
+        if t < T_MAX as f32 {
+            match best {
+                Some((_, bt)) if bt <= t => {}
+                _ => best = Some((i, t)),
+            }
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Clustering-quality metric: purity of winner assignments vs true labels.
+pub fn purity(assignments: &[(usize, Option<usize>)], n_clusters: usize, n_columns: usize) -> f64 {
+    let mut counts = vec![vec![0usize; n_clusters]; n_columns];
+    let mut total = 0usize;
+    for &(label, winner) in assignments {
+        if let Some(wi) = winner {
+            counts[wi][label] += 1;
+            total += 1;
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    let dominant: usize = counts.iter().map(|row| row.iter().max().unwrap()).sum();
+    dominant as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neuron::behavior::rnl_first_crossing;
+
+    #[test]
+    fn forward_matches_rnl_reference() {
+        let mut rng = Xoshiro256::new(3);
+        let col = Column::new(16, 4, 6.0, None, 7);
+        for _ in 0..200 {
+            let spikes: SpikeTimes = (0..16)
+                .map(|_| {
+                    if rng.gen_bool(0.3) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        T_MAX as f32
+                    }
+                })
+                .collect();
+            let _ = col.forward(&spikes);
+            for ci in 0..4 {
+                let st: Vec<Option<u32>> = spikes
+                    .iter()
+                    .map(|&s| if s < T_MAX as f32 { Some(s as u32) } else { None })
+                    .collect();
+                let wt: Vec<u32> = col.weights[ci].iter().map(|&w| w as u32).collect();
+                // behavior reference uses integer weights; rebuild a column
+                // with floored weights for exact comparison
+                let mut col2 = col.clone();
+                col2.weights[ci] = wt.iter().map(|&w| w as f32).collect();
+                let expect = rnl_first_crossing(&st, &wt, 6, T_MAX);
+                let got = col2.forward(&spikes).times[ci];
+                match expect {
+                    Some(t) => assert_eq!(got, t as f32),
+                    None => assert_eq!(got, T_MAX as f32),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wta_picks_earliest_lowest_index() {
+        assert_eq!(wta(&[5.0, 2.0, 9.0]), Some(1));
+        assert_eq!(wta(&[2.0, 2.0, 1.5]), Some(2));
+        assert_eq!(wta(&[3.0, 3.0, 16.0]), Some(0));
+        assert_eq!(wta(&[16.0, 16.0]), None);
+    }
+
+    #[test]
+    fn purity_metric() {
+        // two perfect columns
+        let a = vec![(0, Some(0)), (0, Some(0)), (1, Some(1)), (1, Some(1))];
+        assert_eq!(purity(&a, 2, 2), 1.0);
+        // random-ish
+        let b = vec![(0, Some(0)), (1, Some(0)), (0, Some(1)), (1, Some(1))];
+        assert_eq!(purity(&b, 2, 2), 0.5);
+        // no winners
+        assert_eq!(purity(&[(0, None)], 2, 2), 0.0);
+    }
+
+    #[test]
+    fn clip_reduces_or_preserves_potential() {
+        let col_unclipped = Column::new(8, 1, 100.0, None, 1);
+        let mut col_clipped = col_unclipped.clone();
+        col_clipped.k_clip = Some(2);
+        // all 8 lines spike at t=0
+        let spikes = vec![0.0; 8];
+        // with theta unreachable both stay silent, but overlap metric shows
+        // clipping pressure
+        assert!(col_unclipped.max_overlap(&spikes) >= 2);
+        let o1 = col_unclipped.forward(&spikes);
+        let o2 = col_clipped.forward(&spikes);
+        assert_eq!(o1.times, vec![16.0]);
+        assert_eq!(o2.times, vec![16.0]);
+    }
+}

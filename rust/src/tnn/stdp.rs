@@ -1,0 +1,135 @@
+//! Smith-style TNN STDP (native path).
+//!
+//! Expected-value form of the classic TNN local learning rule (Smith
+//! [13]; the same rule table as `python/compile/kernels/ref.py::stdp_ref`,
+//! kept numerically identical so the native and PJRT learning paths can
+//! be cross-checked):
+//!
+//! | input x | output y | condition   | update                          |
+//! |---------|----------|-------------|---------------------------------|
+//! | spike   | spike    | t_x <= t_y  | w += mu_capture * (w_max - w)   |
+//! | spike   | spike    | t_x >  t_y  | w -= mu_backoff * w             |
+//! | silent  | spike    |             | w -= mu_backoff * w             |
+//! | spike   | silent   |             | w += mu_search * (w_max - w)    |
+//!
+//! Updates apply to the WTA winner column only; when no column fires the
+//! search term applies to every column (otherwise a dead network stays
+//! dead).
+
+use super::{Column, T_MAX, W_MAX};
+
+/// Learning-rate bundle.
+#[derive(Clone, Copy, Debug)]
+pub struct StdpParams {
+    pub mu_capture: f32,
+    pub mu_backoff: f32,
+    pub mu_search: f32,
+    pub w_max: f32,
+}
+
+impl Default for StdpParams {
+    fn default() -> Self {
+        StdpParams {
+            mu_capture: 0.30,
+            mu_backoff: 0.20,
+            mu_search: 0.02,
+            w_max: W_MAX,
+        }
+    }
+}
+
+/// Stateless rule application.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StdpRule {
+    pub params: StdpParams,
+}
+
+impl StdpRule {
+    /// Apply one volley's update to `col` given the forward result.
+    pub fn apply(&self, col: &mut Column, spikes: &[f32], times: &[f32], winner: Option<usize>) {
+        let p = self.params;
+        let t_inf = T_MAX as f32;
+        let targets: Vec<usize> = match winner {
+            Some(w) => vec![w],
+            // nothing fired: search applies to all columns
+            None => (0..col.c).collect(),
+        };
+        for ci in targets {
+            let t_y = times[ci];
+            let y_spk = t_y < t_inf;
+            for (i, &t_x) in spikes.iter().enumerate() {
+                let w = &mut col.weights[ci][i];
+                let x_spk = t_x < t_inf;
+                let delta = if x_spk && y_spk && t_x <= t_y {
+                    p.mu_capture * (p.w_max - *w)
+                } else if (x_spk && y_spk && t_x > t_y) || (!x_spk && y_spk) {
+                    -p.mu_backoff * *w
+                } else if x_spk && !y_spk {
+                    p.mu_search * (p.w_max - *w)
+                } else {
+                    0.0
+                };
+                *w = (*w + delta).clamp(0.0, p.w_max);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col() -> Column {
+        Column::new(4, 2, 3.0, Some(2), 5)
+    }
+
+    #[test]
+    fn capture_raises_winner_weights() {
+        let mut c = col();
+        let before = c.weights[0].clone();
+        let spikes = vec![0.0, 0.0, 16.0, 16.0];
+        let times = vec![2.0, 16.0];
+        StdpRule::default().apply(&mut c, &spikes, &times, Some(0));
+        assert!(c.weights[0][0] > before[0]);
+        assert!(c.weights[0][1] > before[1]);
+        // silent inputs on a firing winner back off
+        assert!(c.weights[0][2] < before[2]);
+        // loser column untouched
+        assert_eq!(c.weights[1], col().weights[1]);
+    }
+
+    #[test]
+    fn late_input_backs_off() {
+        let mut c = col();
+        let before = c.weights[0][0];
+        StdpRule::default().apply(&mut c, &[5.0, 16.0, 16.0, 16.0], &[2.0, 16.0], Some(0));
+        assert!(c.weights[0][0] < before);
+    }
+
+    #[test]
+    fn search_when_nothing_fires() {
+        let mut c = col();
+        let before: Vec<Vec<f32>> = c.weights.clone();
+        StdpRule::default().apply(&mut c, &[1.0, 16.0, 16.0, 16.0], &[16.0, 16.0], None);
+        for ci in 0..2 {
+            assert!(c.weights[ci][0] > before[ci][0], "search must raise");
+            assert_eq!(c.weights[ci][1], before[ci][1], "silent x, silent y: no-op");
+        }
+    }
+
+    #[test]
+    fn weights_stay_bounded() {
+        let mut c = col();
+        let r = StdpRule::default();
+        for step in 0..500 {
+            let spikes = vec![(step % 8) as f32, 16.0, 0.0, 16.0];
+            let out = c.forward(&spikes);
+            r.apply(&mut c, &spikes, &out.times, out.winner);
+            for row in &c.weights {
+                for &w in row {
+                    assert!((0.0..=W_MAX).contains(&w));
+                }
+            }
+        }
+    }
+}

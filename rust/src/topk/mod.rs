@@ -1,0 +1,595 @@
+//! Unary top-k selectors — the paper's Algorithm 1.
+//!
+//! A top-k selector is obtained by *pruning* a sorting network: only the
+//! comparators that can influence the bottom `k` output lanes are kept
+//! ("mandatory", black in the paper's Fig. 5); among those, comparators
+//! with one output that nothing downstream consumes degrade to *half
+//! units* (blue crosses / dashed gates in Fig. 4b) — a lone AND or OR
+//! gate instead of the pair.
+//!
+//! The paper's pseudocode is not executable as printed (see DESIGN.md
+//! §1.3); [`prune`] implements the evident intent as a backward liveness
+//! pass followed by a forward use analysis, and
+//! [`TopkSelector::verify`] checks every pruned network against the
+//! zero-one selection principle.
+
+use crate::error::{Error, Result};
+use crate::netlist::{Netlist, NetlistBuilder};
+use crate::sorters::{Comparator, CsNetwork, SorterKind};
+
+/// Which gate of a kept comparator survives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnitKind {
+    /// Both outputs used: AND + OR (2 gates).
+    Full,
+    /// Only the max (bottom/OR) output used: OR gate alone.
+    HalfMax,
+    /// Only the min (top/AND) output used: AND gate alone.
+    HalfMin,
+}
+
+/// One surviving unit of the selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Unit {
+    pub cs: Comparator,
+    pub kind: UnitKind,
+}
+
+/// A pruned unary top-k selection network.
+#[derive(Clone, Debug)]
+pub struct TopkSelector {
+    pub n: usize,
+    pub k: usize,
+    /// Source sorter the selector was pruned from.
+    pub source: SorterKind,
+    /// Surviving units in execution order.
+    pub units: Vec<Unit>,
+    /// Comparator count of the unpruned source network ("x" in Fig. 5).
+    pub source_size: usize,
+}
+
+/// Counters matching the paper's Fig. 5 annotation `x/y/z`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Total comparators in the source sorter (x).
+    pub total: usize,
+    /// Mandatory comparators kept (y).
+    pub mandatory: usize,
+    /// Among the mandatory, units needing only one gate (z).
+    pub half: usize,
+}
+
+/// Merge network used inside the tournament construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeFlavor {
+    /// Batcher odd-even merge (the size-efficient structure; stands in
+    /// for merges pruned from *optimal* sorters — see DESIGN.md §5).
+    OddEven,
+    /// Bitonic triangle merge (the paper's "sorting"-derived structure).
+    Bitonic,
+}
+
+/// Build a top-k *selection network* by binary tournament: recursively
+/// select the top-k of each half, then merge the two sorted k-lists and
+/// keep the top k (paper §IV-B's "directly selecting the top k without
+/// full sorting" — the direction the paper leaves as future work, which
+/// we use as the stand-in for pruning the true optimal sorters that are
+/// not publicly retrievable offline; for n = 8, where the real optimal
+/// sorter is available, pruned-optimal and tournament sizes agree within
+/// a few gates).
+///
+/// Returns the *unpruned* comparator list (the global Algorithm-1 pass
+/// in [`TopkSelector::prune`] then removes the merge internals that
+/// cannot reach the taps and marks half units). `n`, `k` must be powers
+/// of two with `k <= n`.
+pub fn tournament_network(n: usize, k: usize, flavor: MergeFlavor) -> Result<CsNetwork> {
+    if !n.is_power_of_two() || !k.is_power_of_two() || k > n || n < 2 || k < 1 {
+        return Err(Error::Sorter(format!(
+            "tournament requires powers of two with k <= n, got n={n} k={k}"
+        )));
+    }
+    let mut cs: Vec<Comparator> = Vec::new();
+    tournament_rec(0, n, k, flavor, &mut cs);
+    Ok(CsNetwork {
+        n,
+        comparators: cs,
+        kind: match flavor {
+            MergeFlavor::OddEven => SorterKind::Optimal,
+            MergeFlavor::Bitonic => SorterKind::Bitonic,
+        },
+    })
+}
+
+fn tournament_rec(lo: usize, size: usize, k: usize, flavor: MergeFlavor, out: &mut Vec<Comparator>) {
+    if size == k {
+        // base: fully sort the k lanes (ascending toward the top of range)
+        let base = match flavor {
+            MergeFlavor::OddEven => crate::sorters::optimal(k.max(2)),
+            MergeFlavor::Bitonic => crate::sorters::bitonic(k.max(2)),
+        };
+        if k >= 2 {
+            for c in base {
+                out.push(Comparator::new(lo + c.top as usize, lo + c.bot as usize));
+            }
+        }
+        return;
+    }
+    let half = size / 2;
+    tournament_rec(lo, half, k, flavor, out);
+    tournament_rec(lo + half, half, k, flavor, out);
+    // Merge the two sorted k-lists living in the top-k lanes of each
+    // half range. Virtual lanes 0..k = left list (ascending), k..2k =
+    // right list (ascending); merge writes the overall top-k into the
+    // upper virtual half, which maps to the top-k lanes of the full
+    // range — exactly where the parent expects them.
+    let phys = |v: usize| -> usize {
+        if v < k {
+            lo + half - k + v
+        } else {
+            lo + size - k + (v - k)
+        }
+    };
+    let mut merge: Vec<(usize, usize)> = Vec::new();
+    match flavor {
+        MergeFlavor::OddEven => odd_even_merge_pairs(2 * k, &mut merge),
+        MergeFlavor::Bitonic => bitonic_merge_pairs(2 * k, &mut merge),
+    }
+    for (a, b) in merge {
+        out.push(Comparator::new(phys(a), phys(b)));
+    }
+}
+
+/// Batcher odd-even merge pattern for a 2k range whose halves are sorted.
+fn odd_even_merge_pairs(n: usize, out: &mut Vec<(usize, usize)>) {
+    fn rec(lo: usize, n: usize, r: usize, out: &mut Vec<(usize, usize)>) {
+        let m = r * 2;
+        if m < n {
+            rec(lo, n, m, out);
+            rec(lo + r, n, m, out);
+            let mut i = lo + r;
+            while i + r < lo + n {
+                out.push((i, i + r));
+                i += m;
+            }
+        } else {
+            out.push((lo, lo + r));
+        }
+    }
+    rec(0, n, 1, out);
+}
+
+/// Bitonic triangle merge pattern for a 2k range whose halves are sorted
+/// ascending (same-direction formulation as [`crate::sorters::bitonic`]).
+fn bitonic_merge_pairs(n: usize, out: &mut Vec<(usize, usize)>) {
+    let half = n / 2;
+    for i in 0..half {
+        out.push((i, n - 1 - i));
+    }
+    fn clean(lo: usize, n: usize, out: &mut Vec<(usize, usize)>) {
+        if n <= 1 {
+            return;
+        }
+        let half = n / 2;
+        for i in 0..half {
+            out.push((lo + i, lo + i + half));
+        }
+        clean(lo, half, out);
+        clean(lo + half, n - half, out);
+    }
+    clean(0, half, out);
+    clean(half, n - half, out);
+}
+
+impl TopkSelector {
+    /// The Catwalk selector: tournament construction with odd-even
+    /// merges, globally pruned with half-unit removal (Algorithm 1 in
+    /// full). This is what the `TopkPc` dendrite instantiates.
+    pub fn catwalk(n: usize, k: usize) -> Result<TopkSelector> {
+        let net = tournament_network(n, k, MergeFlavor::OddEven)?;
+        Self::prune(&net, k)
+    }
+
+    /// The pre-Catwalk "unary sorting" baseline (paper's "Sorting PC"):
+    /// bitonic-structured tournament, pruned of unreachable comparators
+    /// (what synthesis dead-code removal does to untapped lanes) but with
+    /// compare-and-swap units kept as full 2-gate macros — the half-gate
+    /// optimization is precisely the part of Algorithm 1 this baseline
+    /// predates.
+    pub fn sorting_baseline(n: usize, k: usize) -> Result<TopkSelector> {
+        let net = tournament_network(n, k, MergeFlavor::Bitonic)?;
+        let mut sel = Self::prune(&net, k)?;
+        for u in &mut sel.units {
+            u.kind = UnitKind::Full;
+        }
+        Ok(sel)
+    }
+
+    /// Algorithm 1: prune `sorter` down to its bottom-k outputs.
+    pub fn prune(sorter: &CsNetwork, k: usize) -> Result<TopkSelector> {
+        let n = sorter.n;
+        if k == 0 || k > n {
+            return Err(Error::Sorter(format!("k must be in 1..=n, got k={k}, n={n}")));
+        }
+        // Backward liveness: lanes whose *current* value can still reach a
+        // top-k output. Start from the output taps (bottom k lanes) and
+        // walk the comparator list in reverse; any comparator touching a
+        // live lane is mandatory and makes both its lanes live upstream.
+        let mut live = vec![false; n];
+        for lane in (n - k)..n {
+            live[lane] = true;
+        }
+        let mut mandatory_rev: Vec<Comparator> = Vec::new();
+        for &c in sorter.comparators.iter().rev() {
+            let (t, b) = (c.top as usize, c.bot as usize);
+            if live[t] || live[b] {
+                mandatory_rev.push(c);
+                live[t] = true;
+                live[b] = true;
+            }
+        }
+        mandatory_rev.reverse();
+        let mandatory = mandatory_rev;
+
+        // Forward use analysis: for each mandatory comparator, check
+        // whether each of its two outputs is consumed by a *later*
+        // mandatory comparator or is one of the k output taps. An output
+        // consumed by nothing means the corresponding gate is dropped
+        // (half unit). An output tap on the bottom-k lanes always counts
+        // as a use of the last writer of that lane.
+        let mut units = Vec::with_capacity(mandatory.len());
+        for (idx, &c) in mandatory.iter().enumerate() {
+            let (t, b) = (c.top as usize, c.bot as usize);
+            let mut top_used = false;
+            let mut bot_used = false;
+            for later in &mandatory[idx + 1..] {
+                let (lt, lb) = (later.top as usize, later.bot as usize);
+                // A later comparator reading lane t consumes our top output
+                // only if no intermediate comparator rewrote lane t; since
+                // we scan in order and stop at the first rewrite, track it:
+                if lt == t || lb == t {
+                    top_used = true;
+                }
+                if lt == b || lb == b {
+                    bot_used = true;
+                }
+                // Stop tracking a lane once rewritten by the later comparator
+                // (its own read already counted as the use).
+                if (lt == t || lb == t) && (lt == b || lb == b) {
+                    break;
+                }
+                if top_used && bot_used {
+                    break;
+                }
+            }
+            // Refine: the scan above counts a read; but once a later
+            // comparator *writes* the lane, further comparators read the
+            // new value, not ours. Reads and writes coincide for CS units
+            // (each touched lane is read then written), so the first
+            // toucher is the unique consumer — the loop's first match is
+            // correct, and `break` on both-touched is an optimization.
+            if t >= n - k {
+                top_used = true;
+            }
+            if b >= n - k {
+                bot_used = true;
+            }
+            let kind = match (top_used, bot_used) {
+                (true, true) => UnitKind::Full,
+                (false, true) => UnitKind::HalfMax,
+                (true, false) => UnitKind::HalfMin,
+                (false, false) => {
+                    // cannot happen: a mandatory comparator was reachable
+                    // from a live lane.
+                    return Err(Error::Sorter(
+                        "pruning invariant violated: dead mandatory comparator".into(),
+                    ));
+                }
+            };
+            units.push(Unit { cs: c, kind });
+        }
+
+        Ok(TopkSelector {
+            n,
+            k,
+            source: sorter.kind,
+            units,
+            source_size: sorter.size(),
+        })
+    }
+
+    /// Build the top-k selector for `(kind, n, k)` directly.
+    pub fn build(kind: SorterKind, n: usize, k: usize) -> Result<TopkSelector> {
+        let sorter = CsNetwork::sorter(kind, n)?;
+        Self::prune(&sorter, k)
+    }
+
+    pub fn stats(&self) -> PruneStats {
+        PruneStats {
+            total: self.source_size,
+            mandatory: self.units.len(),
+            half: self
+                .units
+                .iter()
+                .filter(|u| u.kind != UnitKind::Full)
+                .count(),
+        }
+    }
+
+    /// Gate count after pruning (paper Fig. 6a "effective gates"):
+    /// 2 per full unit, 1 per half unit.
+    pub fn gate_count(&self) -> usize {
+        self.units
+            .iter()
+            .map(|u| if u.kind == UnitKind::Full { 2 } else { 1 })
+            .sum()
+    }
+
+    /// Gates removed by the half-unit optimization alone (the solid-color
+    /// top segment in Fig. 6a).
+    pub fn half_gates_removed(&self) -> usize {
+        self.stats().half
+    }
+
+    /// Apply one cycle of bits; returns the k selected lanes
+    /// (bottom-k, ascending lane order). Lanes whose value is dropped by
+    /// half units carry garbage — only the k taps are meaningful.
+    pub fn apply_bits(&self, bits: &[bool]) -> Vec<bool> {
+        debug_assert_eq!(bits.len(), self.n);
+        let mut lanes = bits.to_vec();
+        for u in &self.units {
+            let a = lanes[u.cs.top as usize];
+            let b = lanes[u.cs.bot as usize];
+            match u.kind {
+                UnitKind::Full => {
+                    lanes[u.cs.top as usize] = a & b;
+                    lanes[u.cs.bot as usize] = a | b;
+                }
+                UnitKind::HalfMax => {
+                    lanes[u.cs.bot as usize] = a | b;
+                }
+                UnitKind::HalfMin => {
+                    lanes[u.cs.top as usize] = a & b;
+                }
+            }
+        }
+        lanes[self.n - self.k..].to_vec()
+    }
+
+    /// Zero-one selection principle: for every 0-1 input, the k taps must
+    /// carry `min(k, ones)` ones arranged ascending (all 1s at the
+    /// bottom). Exhaustive for n ≤ `max_exhaustive`, randomized +
+    /// structured otherwise.
+    pub fn verify(&self, max_exhaustive: usize) -> Result<()> {
+        let check = |bits: &[bool], sel: &Self| -> Result<()> {
+            let ones = bits.iter().filter(|&&b| b).count();
+            let out = sel.apply_bits(bits);
+            let out_ones = out.iter().filter(|&&b| b).count();
+            if out_ones != ones.min(sel.k) {
+                return Err(Error::Sorter(format!(
+                    "top-{} of n={} from {:?}: {} ones in, {} at taps",
+                    sel.k,
+                    sel.n,
+                    sel.source,
+                    ones,
+                    out_ones
+                )));
+            }
+            if out.windows(2).any(|w| w[0] & !w[1]) {
+                return Err(Error::Sorter(format!(
+                    "top-{} taps not sorted for input {bits:?}",
+                    sel.k
+                )));
+            }
+            Ok(())
+        };
+        if self.n <= max_exhaustive {
+            for pattern in 0u64..(1u64 << self.n) {
+                let bits: Vec<bool> = (0..self.n).map(|i| (pattern >> i) & 1 == 1).collect();
+                check(&bits, self)?;
+            }
+        } else {
+            let mut rng = crate::rng::Xoshiro256::new(0x70_9C + (self.n * 131 + self.k) as u64);
+            for _ in 0..20_000 {
+                // biased sparse patterns — the regime the design targets —
+                // plus dense ones
+                let p = if rng.gen_bool(0.5) { 0.05 } else { 0.5 };
+                let bits: Vec<bool> = (0..self.n).map(|_| rng.gen_bool(p)).collect();
+                check(&bits, self)?;
+            }
+            for i in 0..self.n {
+                for inv in [false, true] {
+                    let bits: Vec<bool> = (0..self.n).map(|j| (j == i) ^ inv).collect();
+                    check(&bits, self)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Emit the gate-level netlist (AND/OR per unit kind). Outputs: the k
+    /// bottom lanes, top-to-bottom.
+    pub fn to_netlist(&self, name: &str) -> Result<Netlist> {
+        let mut b = NetlistBuilder::new(name);
+        let mut lanes = b.inputs(self.n);
+        for u in &self.units {
+            let a = lanes[u.cs.top as usize];
+            let o = lanes[u.cs.bot as usize];
+            match u.kind {
+                UnitKind::Full => {
+                    lanes[u.cs.top as usize] = b.and2(a, o);
+                    lanes[u.cs.bot as usize] = b.or2(a, o);
+                }
+                UnitKind::HalfMax => {
+                    lanes[u.cs.bot as usize] = b.or2(a, o);
+                }
+                UnitKind::HalfMin => {
+                    lanes[u.cs.top as usize] = b.and2(a, o);
+                }
+            }
+        }
+        for lane in (self.n - self.k)..self.n {
+            b.mark_output(lanes[lane]);
+        }
+        b.build()
+    }
+
+    /// Export the unit schedule for the Pallas kernel compiler
+    /// (`python/compile/kernels/unary_topk.py` consumes this JSON).
+    pub fn to_schedule_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{{\"n\": {}, \"k\": {}, \"source\": \"{}\", \"units\": [",
+            self.n,
+            self.k,
+            self.source.name()
+        ));
+        for (i, u) in self.units.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let kind = match u.kind {
+                UnitKind::Full => "full",
+                UnitKind::HalfMax => "max",
+                UnitKind::HalfMin => "min",
+            };
+            s.push_str(&format!(
+                "[{}, {}, \"{}\"]",
+                u.cs.top, u.cs.bot, kind
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quickprop::{forall, BitsGen};
+
+    #[test]
+    fn fig5_counts_for_n8() {
+        // Paper Fig. 5: pruning an 8-input bitonic and optimal sorter for
+        // top-2 and top-4. We assert the structural relationships the
+        // paper reports: bitonic has 24 total, optimal 19; pruning keeps
+        // far fewer; top-4 keeps more than top-2; half units exist.
+        let bitonic = CsNetwork::sorter(SorterKind::Bitonic, 8).unwrap();
+        let optimal = CsNetwork::sorter(SorterKind::Optimal, 8).unwrap();
+        let b2 = TopkSelector::prune(&bitonic, 2).unwrap().stats();
+        let b4 = TopkSelector::prune(&bitonic, 4).unwrap().stats();
+        let o2 = TopkSelector::prune(&optimal, 2).unwrap().stats();
+        let o4 = TopkSelector::prune(&optimal, 4).unwrap().stats();
+        assert_eq!(b2.total, 24);
+        assert_eq!(o2.total, 19);
+        assert!(b2.mandatory < b2.total);
+        assert!(o2.mandatory < o2.total);
+        assert!(b4.mandatory > b2.mandatory);
+        assert!(o4.mandatory > o2.mandatory);
+        assert!(b2.half > 0 && o2.half > 0);
+    }
+
+    #[test]
+    fn pruned_selectors_verify_exhaustively() {
+        for kind in SorterKind::ALL {
+            for n in [4usize, 8, 16] {
+                for k in [1usize, 2, 4].iter().copied().filter(|&k| k <= n) {
+                    let sel = TopkSelector::build(kind, n, k).unwrap();
+                    sel.verify(16)
+                        .unwrap_or_else(|e| panic!("{kind:?} n={n} k={k}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_selectors_verify_randomized_large() {
+        for kind in SorterKind::ALL {
+            for n in [32usize, 64] {
+                for k in [2usize, 4] {
+                    let sel = TopkSelector::build(kind, n, k).unwrap();
+                    sel.verify(16)
+                        .unwrap_or_else(|e| panic!("{kind:?} n={n} k={k}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_equals_n_keeps_everything() {
+        let sorter = CsNetwork::sorter(SorterKind::OddEven, 16).unwrap();
+        let sel = TopkSelector::prune(&sorter, 16).unwrap();
+        let st = sel.stats();
+        assert_eq!(st.mandatory, st.total);
+        // A full sorter has every output used, but the last layer of
+        // comparators feeding two taps are all Full by definition here.
+        assert_eq!(sel.gate_count(), 2 * st.total - st.half);
+    }
+
+    #[test]
+    fn monotone_gate_count_in_k() {
+        for kind in SorterKind::ALL {
+            let sorter = CsNetwork::sorter(kind, 32).unwrap();
+            let mut prev = 0;
+            for k in [1usize, 2, 4, 8, 16, 32] {
+                let g = TopkSelector::prune(&sorter, k).unwrap().gate_count();
+                assert!(g >= prev, "{kind:?} k={k}: {g} < {prev}");
+                prev = g;
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let sorter = CsNetwork::sorter(SorterKind::Bitonic, 8).unwrap();
+        assert!(TopkSelector::prune(&sorter, 0).is_err());
+        assert!(TopkSelector::prune(&sorter, 9).is_err());
+    }
+
+    #[test]
+    fn netlist_matches_bit_model() {
+        use crate::rng::Xoshiro256;
+        use crate::sim::Simulator;
+        let sel = TopkSelector::build(SorterKind::Optimal, 8, 2).unwrap();
+        let nl = sel.to_netlist("top2").unwrap();
+        let mut sim = Simulator::new(&nl);
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..500 {
+            let bits: Vec<bool> = (0..8).map(|_| rng.gen_bool(0.3)).collect();
+            let expect = sel.apply_bits(&bits);
+            assert_eq!(sim.step(&bits), expect);
+        }
+    }
+
+    #[test]
+    fn netlist_cell_count_equals_gate_count() {
+        for (n, k) in [(16usize, 2usize), (32, 2), (64, 2), (16, 4)] {
+            let sel = TopkSelector::build(SorterKind::OddEven, n, k).unwrap();
+            let nl = sel.to_netlist("t").unwrap();
+            assert_eq!(nl.cells.len(), sel.gate_count());
+        }
+    }
+
+    #[test]
+    fn property_selection_preserves_clipped_popcount() {
+        // THE dendrite-equivalence invariant: popcount(taps) ==
+        // min(popcount(input), k) for every input, every cycle.
+        for kind in SorterKind::ALL {
+            let sel = TopkSelector::build(kind, 16, 2).unwrap();
+            forall(29, 1024, &BitsGen { len: 16 }, |bits| {
+                let ones = bits.iter().filter(|&&b| b).count();
+                let out = sel.apply_bits(bits);
+                out.iter().filter(|&&b| b).count() == ones.min(2)
+            });
+        }
+    }
+
+    #[test]
+    fn schedule_json_wellformed() {
+        let sel = TopkSelector::build(SorterKind::Optimal, 8, 2).unwrap();
+        let j = sel.to_schedule_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"n\": 8"));
+        assert!(j.contains("\"k\": 2"));
+        assert!(j.contains("full") || j.contains("max"));
+    }
+}

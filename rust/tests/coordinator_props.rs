@@ -1,0 +1,169 @@
+//! Property tests on coordinator/CLI/report invariants (no PJRT needed).
+
+use catwalk::cli::Args;
+use catwalk::coordinator::pool::{par_map, ThreadPool};
+use catwalk::coordinator::Metrics;
+use catwalk::quickprop::{forall, FnGen, UsizeRange};
+use catwalk::report::{Json, Table};
+use catwalk::rng::Xoshiro256;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// par_map(f) == map(f) for arbitrary input sizes and thread counts.
+#[test]
+fn prop_par_map_equals_sequential_map() {
+    forall(
+        1,
+        64,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let len = rng.gen_range(200);
+            let threads = 1 + rng.gen_range(12);
+            let xs: Vec<u64> = (0..len).map(|_| rng.next_u64() % 1000).collect();
+            (threads, xs)
+        }),
+        |(threads, xs)| {
+            let expect: Vec<u64> = xs.iter().map(|x| x * 3 + 1).collect();
+            let got = par_map(*threads, xs.clone(), |x| x * 3 + 1);
+            got == expect
+        },
+    );
+}
+
+/// Every submitted pool job runs exactly once regardless of job count /
+/// thread count / interleaved panics.
+#[test]
+fn prop_pool_runs_each_job_once() {
+    forall(
+        2,
+        24,
+        &FnGen(|rng: &mut Xoshiro256| {
+            (1 + rng.gen_range(8), rng.gen_range(150))
+        }),
+        |&(threads, jobs)| {
+            let pool = ThreadPool::new(threads);
+            let counter = Arc::new(AtomicU64::new(0));
+            for i in 0..jobs {
+                let c = counter.clone();
+                pool.submit(move || {
+                    if i % 17 == 3 {
+                        panic!("injected");
+                    }
+                    c.fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
+            }
+            pool.wait_idle();
+            let expected = (0..jobs).filter(|i| i % 17 != 3).count() as u64;
+            counter.load(Ordering::Relaxed) == expected
+        },
+    );
+}
+
+/// Histogram quantiles are monotone in q for arbitrary samples.
+#[test]
+fn prop_metrics_quantiles_monotone() {
+    forall(
+        3,
+        128,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let n = 1 + rng.gen_range(200);
+            (0..n)
+                .map(|_| rng.gen_range(1_000_000) as u64)
+                .collect::<Vec<u64>>()
+        }),
+        |samples| {
+            let m = Metrics::new();
+            for &us in samples {
+                m.record("x", Duration::from_micros(us));
+            }
+            let s = m.summary("x").unwrap();
+            s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.count == samples.len() as u64
+        },
+    );
+}
+
+/// CLI round-trip: any (name, value) pair survives parsing in both
+/// `--k v` and `--k=v` forms.
+#[test]
+fn prop_cli_roundtrip() {
+    forall(
+        4,
+        128,
+        &UsizeRange { lo: 0, hi: 1_000_000 },
+        |&v| {
+            let a = Args::parse(vec![
+                "repro".into(),
+                "x".into(),
+                "--val".into(),
+                v.to_string(),
+            ])
+            .unwrap();
+            let b = Args::parse(vec!["repro".into(), "x".into(), format!("--val={v}")]).unwrap();
+            a.get_usize("val", 0).unwrap() == v && b.get_usize("val", 0).unwrap() == v
+        },
+    );
+}
+
+/// JSON writer always emits parseable JSON (checked against the runtime's
+/// own manifest parser).
+#[test]
+fn prop_json_writer_parses_back() {
+    use catwalk::runtime::manifest::JsonValue;
+    forall(
+        5,
+        256,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let n = rng.gen_range(8);
+            let mut kvs = Vec::new();
+            for i in 0..n {
+                let v = match rng.gen_range(4) {
+                    0 => Json::Num(rng.gen_range(1000) as f64),
+                    1 => Json::Str(format!("s{}\"quote\\slash\n", rng.next_u32())),
+                    2 => Json::Bool(rng.gen_bool(0.5)),
+                    _ => Json::Arr(vec![Json::Num(1.5), Json::Null]),
+                };
+                kvs.push((format!("k{i}"), v));
+            }
+            Json::Obj(kvs).render()
+        }),
+        |text| JsonValue::parse(text).is_ok(),
+    );
+}
+
+/// Table CSV never changes row/column counts.
+#[test]
+fn prop_table_csv_rectangular() {
+    forall(
+        6,
+        128,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let cols = 1 + rng.gen_range(5);
+            let rows = rng.gen_range(20);
+            (cols, rows)
+        }),
+        |&(cols, rows)| {
+            let names: Vec<String> = (0..cols).map(|c| format!("c{c}")).collect();
+            let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let mut t = Table::new("t", &name_refs);
+            for r in 0..rows {
+                t.row((0..cols).map(|c| format!("{r},{c}")).collect());
+            }
+            let csv = t.to_csv();
+            csv.lines().count() == rows + 1
+                && csv.lines().all(|l| {
+                    // cells containing commas are quoted; count unquoted commas
+                    let mut in_q = false;
+                    let mut commas = 0;
+                    for ch in l.chars() {
+                        match ch {
+                            '"' => in_q = !in_q,
+                            ',' if !in_q => commas += 1,
+                            _ => {}
+                        }
+                    }
+                    commas == cols - 1
+                })
+        },
+    );
+}

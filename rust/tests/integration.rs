@@ -1,0 +1,169 @@
+//! Cross-module integration tests: netlists vs behavioral models vs
+//! selector semantics, end to end through the hardware substrate.
+
+use catwalk::experiments::activity::{measure_neuron, StimulusConfig};
+use catwalk::neuron::behavior::BehavioralNeuron;
+use catwalk::neuron::stimulus::{VolleyGen, GAMMA_LEN};
+use catwalk::neuron::{DendriteKind, NeuronConfig, NeuronDesign};
+use catwalk::power::Estimator;
+use catwalk::rng::Xoshiro256;
+use catwalk::sim::{Simulator, Simulator64};
+use catwalk::sorters::{CsNetwork, SorterKind};
+use catwalk::topk::TopkSelector;
+
+/// Every design at every paper size matches its behavioral golden model
+/// cycle-for-cycle across many random volleys.
+#[test]
+fn all_designs_match_golden_model_at_all_sizes() {
+    for kind in DendriteKind::ALL {
+        for n in [16usize, 32, 64] {
+            let cfg = NeuronConfig {
+                n_inputs: n,
+                k: 2,
+                ..Default::default()
+            };
+            let design = NeuronDesign::build(kind, &cfg).unwrap();
+            let mut sim = Simulator::new(&design.netlist);
+            let mut gold = BehavioralNeuron::new(kind, &cfg);
+            let mut gen = VolleyGen::new(n, 0.12, n as u64 * 31 + kind as u64);
+            for _ in 0..15 {
+                let volley = gen.next_volley();
+                let hw = sim.step(&design.pack_inputs(&vec![false; n], 6, true))[0];
+                let bm = gold.step(&vec![false; n], 6, true);
+                assert_eq!(hw, bm);
+                for t in 0..GAMMA_LEN {
+                    let pulses = volley.pulse_bits(t);
+                    let hw = sim.step(&design.pack_inputs(&pulses, 6, false))[0];
+                    let bm = gold.step(&pulses, 6, false);
+                    assert_eq!(hw, bm, "{kind:?} n={n} t={t}");
+                }
+            }
+        }
+    }
+}
+
+/// The Catwalk functional equivalence: under <= k simultaneous pulses the
+/// TopkPc neuron output is bit-identical to the full-PC neuron output.
+#[test]
+fn catwalk_equals_full_pc_when_not_clipping() {
+    let n = 32;
+    let cfg = NeuronConfig {
+        n_inputs: n,
+        k: 2,
+        ..Default::default()
+    };
+    let pc = NeuronDesign::build(DendriteKind::PcCompact, &cfg).unwrap();
+    let tk = NeuronDesign::build(DendriteKind::TopkPc, &cfg).unwrap();
+    let mut sim_pc = Simulator::new(&pc.netlist);
+    let mut sim_tk = Simulator::new(&tk.netlist);
+    let mut rng = Xoshiro256::new(77);
+    for _ in 0..50 {
+        sim_pc.step(&pc.pack_inputs(&vec![false; n], 5, true));
+        sim_tk.step(&tk.pack_inputs(&vec![false; n], 5, true));
+        // two non-overlapping-in-count pulses
+        let lanes = rng.sample_indices(n, 2);
+        let s0 = rng.gen_range(8);
+        let s1 = rng.gen_range(8);
+        let w0 = 1 + rng.gen_range(7);
+        let w1 = 1 + rng.gen_range(7);
+        for t in 0..GAMMA_LEN {
+            let mut pulses = vec![false; n];
+            pulses[lanes[0]] = t >= s0 && t < s0 + w0;
+            pulses[lanes[1]] = t >= s1 && t < s1 + w1;
+            let a = sim_pc.step(&pc.pack_inputs(&pulses, 5, false))[0];
+            let b = sim_tk.step(&tk.pack_inputs(&pulses, 5, false))[0];
+            assert_eq!(a, b);
+        }
+    }
+}
+
+/// Gate-level selector networks match the pure comparator model under the
+/// bit-parallel simulator too (64 stimuli at once).
+#[test]
+fn selector_netlist_matches_model_in_simulator64() {
+    let sel = TopkSelector::catwalk(16, 2).unwrap();
+    let nl = sel.to_netlist("sel").unwrap();
+    let mut sim = Simulator64::new(&nl);
+    let mut rng = Xoshiro256::new(3);
+    for _ in 0..64 {
+        // build 64 lanes of random inputs
+        let lane_bits: Vec<Vec<bool>> = (0..64)
+            .map(|_| (0..16).map(|_| rng.gen_bool(0.2)).collect())
+            .collect();
+        let words: Vec<u64> = (0..16)
+            .map(|i| {
+                let mut w = 0u64;
+                for (l, bits) in lane_bits.iter().enumerate() {
+                    if bits[i] {
+                        w |= 1 << l;
+                    }
+                }
+                w
+            })
+            .collect();
+        let out = sim.step(&words);
+        for (l, bits) in lane_bits.iter().enumerate() {
+            let expect = sel.apply_bits(bits);
+            for (j, &e) in expect.iter().enumerate() {
+                assert_eq!((out[j] >> l) & 1 == 1, e, "lane {l} tap {j}");
+            }
+        }
+    }
+}
+
+/// Power ordering invariant at any sparsity: catwalk total <= compact
+/// total for all paper sizes (the headline claim).
+#[test]
+fn power_ordering_invariant_across_sparsities() {
+    let est = Estimator::pnr();
+    for sparsity in [0.02, 0.10, 0.30] {
+        let stim = StimulusConfig {
+            sparsity,
+            windows: 24,
+            ..Default::default()
+        };
+        for n in [16usize, 64] {
+            let cfg = NeuronConfig {
+                n_inputs: n,
+                k: 2,
+                ..Default::default()
+            };
+            let pc = NeuronDesign::build(DendriteKind::PcCompact, &cfg).unwrap();
+            let tk = NeuronDesign::build(DendriteKind::TopkPc, &cfg).unwrap();
+            let rp = est.evaluate(&pc.netlist, Some(&measure_neuron(&pc, &stim)));
+            let rt = est.evaluate(&tk.netlist, Some(&measure_neuron(&tk, &stim)));
+            assert!(
+                rt.total_uw() < rp.total_uw(),
+                "sparsity {sparsity} n={n}: catwalk {} !< compact {}",
+                rt.total_uw(),
+                rp.total_uw()
+            );
+        }
+    }
+}
+
+/// Selection works pruned from *any* verified sorter, not just the
+/// tournament (Algorithm 1 is source-agnostic).
+#[test]
+fn pruning_any_source_gives_valid_selector() {
+    for kind in SorterKind::ALL {
+        for n in [8usize, 16, 32] {
+            let sorter = CsNetwork::sorter(kind, n).unwrap();
+            for k in [1usize, 2, 4] {
+                let sel = TopkSelector::prune(&sorter, k).unwrap();
+                sel.verify(12).unwrap();
+            }
+        }
+    }
+}
+
+/// Paper Fig. 6a claim: effective gate count of the selector grows
+/// monotonically with k and meets full sorting at k = n.
+#[test]
+fn selector_cost_meets_sorting_at_k_equals_n() {
+    let n = 16;
+    let full = TopkSelector::catwalk(n, n).unwrap();
+    let sorter = CsNetwork::sorter(SorterKind::OddEven, n).unwrap();
+    // tournament with k == n degenerates to the full odd-even sorter
+    assert_eq!(full.stats().total, sorter.size());
+}

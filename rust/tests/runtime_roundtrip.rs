@@ -1,0 +1,260 @@
+//! PJRT round-trip and cross-language conformance tests.
+//!
+//! These need `artifacts/` (run `make artifacts` first); they skip with a
+//! notice when artifacts are absent so plain `cargo test` stays green in
+//! a fresh checkout.
+
+use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
+use catwalk::rng::Xoshiro256;
+use catwalk::runtime::{Runtime, Tensor};
+use catwalk::server::{Client, Server};
+use catwalk::sim::Simulator;
+use catwalk::tnn::Column;
+use catwalk::topk::TopkSelector;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+/// The AOT'd Pallas top-k kernel and the gate-level netlist of the same
+/// selector agree bit-for-bit — the strongest L1-vs-hardware conformance
+/// signal in the repo.
+#[test]
+fn pjrt_topk_kernel_matches_gate_level_netlist() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).unwrap();
+    let t_max = rt.manifest().t_max;
+    for n in [16usize, 32, 64] {
+        let exe = rt.load(&format!("topk_eval_n{n}_k2_b64")).unwrap();
+        let sel = TopkSelector::catwalk(n, 2).unwrap();
+        let nl = sel.to_netlist("sel").unwrap();
+        let mut rng = Xoshiro256::new(n as u64);
+
+        // 64 random waveforms [b, n, t]
+        let mut data = vec![0f32; 64 * n * t_max];
+        let mut waves = vec![vec![vec![false; t_max]; n]; 64];
+        for (b, wave) in waves.iter_mut().enumerate() {
+            for (i, lane) in wave.iter_mut().enumerate() {
+                // temporal pulses (realistic) + pure noise (adversarial)
+                if rng.gen_bool(0.3) {
+                    let s = rng.gen_range(8);
+                    let w = 1 + rng.gen_range(7);
+                    for (t, v) in lane.iter_mut().enumerate() {
+                        *v = t >= s && t < s + w;
+                    }
+                }
+                if rng.gen_bool(0.2) {
+                    for v in lane.iter_mut() {
+                        *v ^= rng.gen_bool(0.3);
+                    }
+                }
+                for (t, &v) in lane.iter().enumerate() {
+                    data[(b * n + i) * t_max + t] = v as u32 as f32;
+                }
+            }
+        }
+        let out = exe
+            .run(&[Tensor::new(vec![64, n, t_max], data).unwrap()])
+            .unwrap();
+        let taps = &out[0]; // [64, 2, t_max]
+
+        for (b, wave) in waves.iter().enumerate() {
+            let mut sim = Simulator::new(&nl);
+            for t in 0..t_max {
+                let bits: Vec<bool> = (0..n).map(|i| wave[i][t]).collect();
+                let hw = sim.step(&bits);
+                for j in 0..2 {
+                    let kernel = taps.data[(b * 2 + j) * t_max + t] > 0.5;
+                    assert_eq!(hw[j], kernel, "n={n} b={b} tap={j} t={t}");
+                }
+            }
+        }
+    }
+}
+
+/// PJRT column forward equals the native Rust behavioral column when both
+/// use identical weights — L2/L3 conformance.
+#[test]
+fn pjrt_forward_matches_native_column() {
+    let Some(dir) = artifacts_dir() else { return };
+    let n = 16;
+    let handle = TnnHandle::open(dir, n, 6.0, 9).unwrap();
+    // mirror the weights into a native column
+    let w = handle.weights().unwrap();
+    let mut native = Column::new(n, handle.c, 6.0, Some(2), 0);
+    for c in 0..handle.c {
+        for i in 0..n {
+            native.weights[c][i] = w.at2(c, i);
+        }
+    }
+    let mut rng = Xoshiro256::new(5);
+    let volleys: Vec<Vec<f32>> = (0..32)
+        .map(|_| {
+            (0..n)
+                .map(|_| {
+                    if rng.gen_bool(0.35) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        16.0
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let pjrt = handle.infer(volleys.clone()).unwrap();
+    for (v, r) in volleys.iter().zip(&pjrt) {
+        let nat = native.forward(v);
+        assert_eq!(r.times, nat.times, "volley {v:?}");
+        assert_eq!(r.winner, nat.winner);
+    }
+}
+
+/// STDP learning through PJRT moves weights and stays bounded.
+#[test]
+fn pjrt_learn_updates_weights_within_bounds() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = TnnHandle::open(dir, 16, 4.0, 3).unwrap();
+    let w0 = handle.weights().unwrap();
+    let mut rng = Xoshiro256::new(8);
+    for _ in 0..5 {
+        let volleys: Vec<Vec<f32>> = (0..handle.b)
+            .map(|_| {
+                (0..16)
+                    .map(|_| {
+                        if rng.gen_bool(0.4) {
+                            rng.gen_range(6) as f32
+                        } else {
+                            16.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        handle.learn(volleys).unwrap();
+    }
+    let w1 = handle.weights().unwrap();
+    assert_ne!(w0.data, w1.data, "weights must move");
+    for &w in &w1.data {
+        assert!((0.0..=7.0).contains(&w), "weight {w} out of bounds");
+    }
+}
+
+/// Dynamic batcher under concurrency: every request gets exactly one
+/// result, batches actually form, latency is recorded.
+#[test]
+fn batcher_under_concurrent_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = TnnHandle::open(dir, 16, 6.0, 1).unwrap();
+    let metrics = handle.metrics.clone();
+    let batcher = Arc::new(DynamicBatcher::start(
+        handle,
+        BatcherConfig {
+            max_batch: 32,
+            flush_after: std::time::Duration::from_millis(3),
+            learn: false,
+        },
+    ));
+    let n_threads = 8;
+    let per_thread = 40;
+    let results = catwalk::coordinator::pool::par_map(
+        n_threads,
+        (0..n_threads).collect::<Vec<_>>(),
+        |tid| {
+            let mut rng = Xoshiro256::new(tid as u64);
+            let mut ok = 0;
+            for _ in 0..per_thread {
+                let volley: Vec<f32> = (0..16)
+                    .map(|_| {
+                        if rng.gen_bool(0.3) {
+                            rng.gen_range(8) as f32
+                        } else {
+                            16.0
+                        }
+                    })
+                    .collect();
+                let r = batcher.submit(volley).unwrap();
+                assert_eq!(r.times.len(), 8);
+                ok += 1;
+            }
+            ok
+        },
+    );
+    let total: usize = results.iter().sum();
+    assert_eq!(total, n_threads * per_thread);
+    assert_eq!(metrics.counter("requests"), total as u64);
+    assert_eq!(metrics.counter("batched_requests"), total as u64);
+    let batches = metrics.counter("batches");
+    assert!(batches > 0 && batches < total as u64, "batches={batches}");
+    assert!(metrics.summary("request_latency").unwrap().count == total as u64);
+}
+
+/// Rejects malformed volleys without poisoning the batcher.
+#[test]
+fn batcher_rejects_bad_width_then_recovers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = TnnHandle::open(dir, 16, 6.0, 2).unwrap();
+    let batcher = DynamicBatcher::start(handle, BatcherConfig::default());
+    let err = batcher.submit(vec![1.0; 3]).unwrap_err();
+    assert!(err.to_string().contains("width"), "{err}");
+    // still serves good requests afterwards
+    let ok = batcher.submit(vec![16.0; 16]).unwrap();
+    assert_eq!(ok.times.len(), 8);
+}
+
+/// Full TCP serving loop: server + concurrent clients + stats + shutdown.
+#[test]
+fn tcp_server_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = TnnHandle::open(dir, 16, 6.0, 4).unwrap();
+    let server = Arc::new(Server::new(handle, BatcherConfig::default()));
+    let stop = server.stop_handle();
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let port = port_rx.recv().unwrap();
+    let addr = format!("127.0.0.1:{port}");
+
+    let oks = catwalk::coordinator::pool::par_map(4, (0..4).collect::<Vec<_>>(), |tid| {
+        let mut client = Client::connect(&addr).unwrap();
+        let mut rng = Xoshiro256::new(tid as u64 + 100);
+        let mut ok = 0;
+        for _ in 0..20 {
+            let volley: Vec<f32> = (0..16)
+                .map(|_| {
+                    if rng.gen_bool(0.4) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        16.0
+                    }
+                })
+                .collect();
+            let (winner, times) = client.infer(&volley).unwrap();
+            assert_eq!(times.len(), 8);
+            assert!(winner >= -1 && winner < 8);
+            ok += 1;
+        }
+        // learning path through TCP too
+        let (_, times) = client.learn(&vec![0.0; 16]).unwrap();
+        assert_eq!(times.len(), 8);
+        client.quit().unwrap();
+        ok
+    });
+    assert_eq!(oks.iter().sum::<usize>(), 80);
+
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    srv.join().unwrap();
+}
