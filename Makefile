@@ -1,0 +1,45 @@
+# Local entry points mirroring .github/workflows/ci.yml — keep the two in
+# lockstep so local runs and CI always exercise the same commands.
+
+.PHONY: build test bench lint fmt check python-test artifacts all clean
+
+all: lint build test bench
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# benches must at least compile; `make bench-run` executes them
+bench:
+	cargo bench --no-run
+
+bench-run:
+	cargo bench
+
+# fmt is advisory (leading `-`) until the tree has been formatted once —
+# see ROADMAP.md; keep in lockstep with the CI Format step.
+lint:
+	-cargo fmt --all --check
+	cargo clippy --all-targets -- -D warnings
+	cargo clippy --all-targets --features xla -- -D warnings
+
+fmt:
+	cargo fmt --all
+
+check:
+	cargo check --all-targets
+	cargo check --all-targets --features xla
+
+python-test:
+	python3 -m pytest python/tests -q
+
+# AOT-lower the JAX/Pallas kernels to HLO-text artifacts for the PJRT
+# backend (the native backend needs none of this).
+artifacts:
+	cd python && python3 -m compile.aot --outdir ../artifacts
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -4,3 +4,69 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))
+
+# Hermetic fallback for `hypothesis`: offline runners don't ship it, so a
+# tiny deterministic stand-in (seeded sampling, no shrinking) keeps the
+# property tests runnable everywhere. When the real package is installed
+# (e.g. in CI) it is used untouched.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on environment
+    import functools
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rnd):
+            return self._sample(rnd)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rnd: rnd.choice(elements))
+
+    class _Settings:
+        def __init__(self, max_examples=100, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._stub_max_examples = self.max_examples
+            return fn
+
+    def _given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_stub_max_examples", 20)
+                rnd = random.Random(0xC47)
+                for _ in range(n):
+                    drawn = {k: s.sample(rnd) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest must not resolve the drawn parameters as fixtures:
+            # hide the original signature wraps() exposed.
+            wrapper.__dict__.pop("__wrapped__", None)
+            if hasattr(wrapper, "__signature__"):
+                del wrapper.__signature__
+            return wrapper
+
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,9 +1,11 @@
 //! E10 — end-to-end validation: online STDP clustering through the full
-//! stack (Rust coordinator -> PJRT -> JAX column -> Pallas RNL kernel).
+//! stack (Rust coordinator -> execution backend -> RNL column kernels).
 //!
 //! Trains a 64-input, 16-neuron TNN column for a few hundred steps on the
 //! synthetic clustered time-series workload, logging purity convergence
-//! and PJRT latency. Requires `make artifacts`.
+//! and execution latency. Runs on the native backend out of the box;
+//! a build with `--features xla` (against real xla-rs, see DESIGN.md §3)
+//! plus `make artifacts` and `CATWALK_BACKEND=xla` switches to PJRT.
 //!
 //! Run: `cargo run --release --example clustering`
 
@@ -19,8 +21,8 @@ fn main() -> catwalk::Result<()> {
     let theta = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12.0);
     let handle = TnnHandle::open("artifacts", n, theta, 42)?;
     println!(
-        "PJRT column up: n={} c={} batch={} t_max={}",
-        handle.n, handle.c, handle.b, handle.t_max
+        "{} column up: n={} c={} batch={} t_max={}",
+        handle.backend, handle.n, handle.c, handle.b, handle.t_max
     );
 
     let fields = 8;
@@ -57,7 +59,7 @@ fn main() -> catwalk::Result<()> {
             );
         }
     }
-    println!("\nPJRT metrics:\n{}", handle.metrics.render());
+    println!("\nbackend metrics:\n{}", handle.metrics.render());
     println!("final purity after {steps} steps: {final_purity:.3}");
     assert!(
         final_purity > 0.6,

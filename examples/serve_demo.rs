@@ -1,7 +1,10 @@
 //! Serving demo: boots the TCP daemon on an ephemeral port, drives it
 //! with concurrent clients through the dynamic batcher, prints the
 //! latency/throughput numbers, then shuts down cleanly.
-//! Requires `make artifacts`.
+//!
+//! Runs on the native backend out of the box; a build with
+//! `--features xla` (against real xla-rs, see DESIGN.md §3) plus
+//! `make artifacts` and `CATWALK_BACKEND=xla` switches to PJRT.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
@@ -17,6 +20,7 @@ use std::time::Instant;
 fn main() -> catwalk::Result<()> {
     let n = 64;
     let handle = TnnHandle::open("artifacts", n, 6.0, 7)?;
+    println!("backend: {}", handle.backend);
     let metrics = handle.metrics.clone();
     let server = Arc::new(Server::new(handle, BatcherConfig::default()));
     let stop = server.stop_handle();

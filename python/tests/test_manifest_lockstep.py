@@ -1,0 +1,49 @@
+"""Cross-language lockstep gate: the Rust native backend's built-in
+manifest constants must match what the AOT pipeline generates.
+
+The Rust side cannot regenerate artifacts in CI, so this test (which CI
+always runs) parses the constants straight out of the Rust sources and
+compares them to ``aot.CONFIGS``/``aot.K``/``model.T_MAX``. If you
+change either side, change both — the native fallback and the PJRT
+artifacts must describe identical column configurations.
+"""
+
+import os
+import re
+
+from compile import aot
+from compile.model import T_MAX
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+def _read(path):
+    with open(os.path.join(REPO, path)) as f:
+        return f.read()
+
+
+def test_default_configs_match_aot():
+    src = _read("rust/src/runtime/manifest.rs")
+    m = re.search(
+        r"DEFAULT_CONFIGS:\s*\[\(usize,\s*usize,\s*usize\);\s*(\d+)\]\s*=\s*\[(.*?)\];",
+        src,
+        re.S,
+    )
+    assert m, "DEFAULT_CONFIGS not found in rust/src/runtime/manifest.rs"
+    count = int(m.group(1))
+    triples = re.findall(r"\((\d+)\s*,\s*(\d+)\s*,\s*(\d+)\)", m.group(2))
+    rust_configs = [{"n": int(n), "c": int(c), "b": int(b)} for n, c, b in triples]
+    assert len(rust_configs) == count
+    assert rust_configs == aot.CONFIGS, (
+        f"rust DEFAULT_CONFIGS {rust_configs} != aot.CONFIGS {aot.CONFIGS}"
+    )
+
+
+def test_k_and_t_max_match():
+    manifest_src = _read("rust/src/runtime/manifest.rs")
+    k = re.search(r"const K:\s*usize\s*=\s*(\d+);", manifest_src)
+    assert k and int(k.group(1)) == aot.K
+
+    tnn_src = _read("rust/src/tnn/mod.rs")
+    t = re.search(r"pub const T_MAX:\s*u32\s*=\s*(\d+);", tnn_src)
+    assert t and int(t.group(1)) == T_MAX

@@ -1,6 +1,8 @@
-//! PJRT runtime benches: forward/train execution latency per column
+//! Runtime backend benches: forward/train execution latency per column
 //! configuration, batcher throughput under concurrent load (the serving
-//! numbers of E10). Skips if `make artifacts` has not run.
+//! numbers of E10). Runs on the native backend out of the box; a build
+//! with `--features xla` (against real xla-rs, see DESIGN.md §3) plus
+//! `make artifacts` and `CATWALK_BACKEND=xla` measures the PJRT path.
 
 use catwalk::bench_util::{bench, bench_header};
 use catwalk::coordinator::pool::par_map;
@@ -10,14 +12,13 @@ use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP runtime_pjrt bench: run `make artifacts` first");
-        return;
-    }
-    bench_header("PJRT runtime (E10 serving numbers)");
+    bench_header("runtime backend (E10 serving numbers)");
 
     for n in [16usize, 32, 64] {
         let handle = TnnHandle::open("artifacts", n, 6.0, 1).unwrap();
+        if n == 16 {
+            println!("backend: {}", handle.backend);
+        }
         let mut rng = Xoshiro256::new(n as u64);
         let volleys: Vec<Vec<f32>> = (0..handle.b)
             .map(|_| {

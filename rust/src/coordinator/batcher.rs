@@ -1,7 +1,7 @@
 //! Dynamic batcher: vLLM-style request grouping for the TNN service.
 //!
 //! Requests (single volleys) arrive from many client threads; a dedicated
-//! batching thread drains the queue and fires a PJRT execution when
+//! batching thread drains the queue and fires a backend execution when
 //! either `max_batch` requests are pending or the oldest request has
 //! waited `flush_after` — the standard latency/throughput trade the
 //! serving papers tune. Results are delivered through per-request

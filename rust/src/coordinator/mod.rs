@@ -8,10 +8,11 @@
 //!    figure/table is thousands of volley simulations × design points)
 //!    across cores; [`dse`] exposes the design-space sweep API.
 //! 2. **TNN serving** — a vLLM-style front-end: [`TnnHandle`] owns the
-//!    PJRT executables and the column weight state; [`DynamicBatcher`]
+//!    backend executables (native interpreter by default, PJRT under
+//!    `--features xla`) and the column weight state; [`DynamicBatcher`]
 //!    groups concurrent volley requests into fixed-batch executions
-//!    (the AOT artifacts are compiled for B = 64) with a flush timeout,
-//!    and [`metrics`] records queue/latency/throughput statistics.
+//!    (the column kernels run at B = 64) with a flush timeout, and
+//!    [`metrics`] records queue/latency/throughput statistics.
 //!
 //! Tokio is not available offline; the pool + channel machinery here is
 //! deliberately small and fully tested (see DESIGN.md §5).

@@ -1,17 +1,20 @@
-//! TnnService + TnnHandle: the PJRT-backed TNN column.
+//! TnnService + TnnHandle: the backend-executed TNN column.
 //!
-//! The `xla` crate's PJRT types are `!Send` (they hold `Rc` internals),
-//! so all PJRT interaction is confined to one dedicated **engine
-//! thread**: [`TnnHandle::open`] reads the manifest on the caller's
-//! thread (pure JSON), then spawns the engine which opens the PJRT
-//! client, compiles the artifacts and serves requests over an mpsc
-//! channel. [`TnnHandle`] is the `Send + Sync + Clone` face the batcher,
-//! the TCP server and the examples use.
+//! All kernel execution is confined to one dedicated **engine thread**:
+//! [`TnnHandle::open`] resolves the manifest on the caller's thread (pure
+//! JSON, or the built-in native fallback), then spawns the engine which
+//! instantiates the [`crate::runtime::Backend`] selected by
+//! `CATWALK_BACKEND`, loads the forward/train kernels and serves requests
+//! over an mpsc channel. The thread confinement exists because the `xla`
+//! backend's PJRT types are `!Send` (they hold `Rc` internals); the
+//! native interpreter shares the architecture so both paths exercise the
+//! same machinery. [`TnnHandle`] is the `Send + Sync + Clone` face the
+//! batcher, the TCP server and the examples use.
 
 use crate::coordinator::metrics::Metrics;
 use crate::error::{Error, Result};
 use crate::rng::Xoshiro256;
-use crate::runtime::{Executable, Manifest, Runtime, Tensor};
+use crate::runtime::{BackendKind, Entry, Executable, Manifest, Runtime, Tensor};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
@@ -27,12 +30,14 @@ pub struct VolleyResult {
     pub winner: Option<usize>,
 }
 
-/// Engine-thread-private service (owns the `!Send` PJRT state).
+/// Engine-thread-private service (owns the possibly-`!Send` backend
+/// state).
 struct TnnService {
     n: usize,
     c: usize,
     b: usize,
     t_max: usize,
+    backend: &'static str,
     forward: Arc<Executable>,
     train: Arc<Executable>,
     weights: Tensor,
@@ -41,22 +46,19 @@ struct TnnService {
 }
 
 impl TnnService {
+    /// `entry` is the forward-kind manifest entry resolved once by
+    /// [`TnnHandle::open`], so handle and engine always agree on it.
     fn open(
         dir: &Path,
-        n: usize,
+        kind: BackendKind,
+        manifest: Manifest,
+        entry: Entry,
         theta: f32,
         seed: u64,
         metrics: Arc<Metrics>,
     ) -> Result<TnnService> {
-        let rt = Runtime::open(dir)?;
-        let entry = rt
-            .manifest()
-            .entries
-            .iter()
-            .find(|e| e.kind == "forward" && e.n == n)
-            .ok_or_else(|| Error::Runtime(format!("no forward artifact for n={n}")))?
-            .clone();
-        let (c, b) = (entry.c, entry.b);
+        let rt = Runtime::from_manifest(dir, kind, manifest)?;
+        let (n, c, b) = (entry.n, entry.c, entry.b);
         let forward = rt.load(&entry.name)?;
         let train = rt.load(&format!("tnn_train_n{n}_c{c}_b{b}"))?;
         let mut rng = Xoshiro256::new(seed);
@@ -68,6 +70,7 @@ impl TnnService {
             c,
             b,
             t_max: rt.manifest().t_max,
+            backend: rt.backend_name(),
             forward,
             train,
             weights: Tensor::new(vec![c, n], w)?,
@@ -115,7 +118,7 @@ impl TnnService {
             .forward
             .run(&[spikes, self.weights.clone(), Tensor::scalar(self.theta)])?;
         let res = self.unpack(&out[0], &out[1], volleys.len());
-        self.metrics.record("pjrt_forward", t0.elapsed());
+        self.metrics.record("forward_exec", t0.elapsed());
         self.metrics.incr("volleys_inferred", volleys.len() as u64);
         Ok(res)
     }
@@ -130,7 +133,7 @@ impl TnnService {
         ])?;
         self.weights = out[0].clone();
         let res = self.unpack(&out[1], &out[2], volleys.len());
-        self.metrics.record("pjrt_train", t0.elapsed());
+        self.metrics.record("train_exec", t0.elapsed());
         self.metrics.incr("volleys_learned", volleys.len() as u64);
         Ok(res)
     }
@@ -154,6 +157,8 @@ struct EngineShared {
 pub struct TnnHandle {
     shared: Arc<EngineShared>,
     pub metrics: Arc<Metrics>,
+    /// Name of the executing backend (`"native"` / `"xla"`).
+    pub backend: &'static str,
     pub n: usize,
     pub c: usize,
     pub b: usize,
@@ -161,18 +166,13 @@ pub struct TnnHandle {
 }
 
 impl TnnHandle {
-    /// Read the manifest (pure), spawn the engine thread, wait for the
-    /// PJRT compile to finish, return the handle.
+    /// Resolve the manifest (pure JSON, or the native fallback), spawn
+    /// the engine thread, wait for the backend to load the kernels,
+    /// return the handle.
     pub fn open(dir: impl AsRef<Path>, n: usize, theta: f32, seed: u64) -> Result<TnnHandle> {
         let dir: PathBuf = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        if !manifest_path.exists() {
-            return Err(Error::Runtime(format!(
-                "{} not found — run `make artifacts` first",
-                manifest_path.display()
-            )));
-        }
-        let manifest = Manifest::parse_file(&manifest_path)?;
+        let kind = BackendKind::from_env()?;
+        let manifest = Manifest::load_or_default(&dir, kind.requires_artifacts())?;
         let entry = manifest
             .entries
             .iter()
@@ -182,14 +182,24 @@ impl TnnHandle {
         let metrics = Arc::new(Metrics::new());
 
         let (tx, rx): (Sender<EngineMsg>, Receiver<EngineMsg>) = mpsc::channel();
-        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let (ready_tx, ready_rx) = sync_channel::<Result<&'static str>>(1);
         let engine_metrics = metrics.clone();
+        let engine_manifest = manifest.clone();
+        let engine_entry = entry.clone();
         let join = std::thread::Builder::new()
-            .name("catwalk-pjrt-engine".into())
+            .name("catwalk-engine".into())
             .spawn(move || {
-                let mut service = match TnnService::open(&dir, n, theta, seed, engine_metrics) {
+                let mut service = match TnnService::open(
+                    &dir,
+                    kind,
+                    engine_manifest,
+                    engine_entry,
+                    theta,
+                    seed,
+                    engine_metrics,
+                ) {
                     Ok(s) => {
-                        let _ = ready_tx.send(Ok(()));
+                        let _ = ready_tx.send(Ok(s.backend));
                         s
                     }
                     Err(e) => {
@@ -226,7 +236,7 @@ impl TnnHandle {
             })
             .map_err(|e| Error::Coordinator(format!("spawn engine: {e}")))?;
 
-        ready_rx
+        let backend = ready_rx
             .recv()
             .map_err(|_| Error::Coordinator("engine died during startup".into()))??;
 
@@ -236,6 +246,7 @@ impl TnnHandle {
                 join: Mutex::new(Some(join)),
             }),
             metrics,
+            backend,
             n,
             c: entry.c,
             b: entry.b,
@@ -288,10 +299,37 @@ impl Drop for EngineShared {
 mod tests {
     use super::*;
 
+    /// True unless the environment explicitly routes to a non-native
+    /// backend (e.g. a PJRT conformance run with CATWALK_BACKEND=xla).
+    fn native_env() -> bool {
+        matches!(BackendKind::from_env(), Ok(BackendKind::Native))
+    }
+
     #[test]
-    fn open_missing_artifacts_fails_with_hint() {
-        match TnnHandle::open("/no-such-dir", 16, 6.0, 1) {
-            Err(e) => assert!(e.to_string().contains("make artifacts"), "{e}"),
+    fn open_without_artifacts_uses_native_backend() {
+        if !native_env() {
+            return;
+        }
+        let handle = TnnHandle::open("/no-such-dir", 16, 6.0, 1).unwrap();
+        assert_eq!(handle.backend, "native");
+        assert_eq!((handle.n, handle.c, handle.b, handle.t_max), (16, 8, 64, 16));
+        // an all-silent volley produces no winner and all-t_max times
+        let res = handle.infer(vec![vec![16.0; 16]]).unwrap();
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].winner, None);
+        assert!(res[0].times.iter().all(|&t| t == 16.0));
+        // a dense early volley drives at least one column over threshold
+        let res = handle.infer(vec![vec![0.0; 16]]).unwrap();
+        assert!(res[0].winner.is_some());
+    }
+
+    #[test]
+    fn open_rejects_unknown_column_width() {
+        if !native_env() {
+            return;
+        }
+        match TnnHandle::open("/no-such-dir", 17, 6.0, 1) {
+            Err(e) => assert!(e.to_string().contains("no forward artifact"), "{e}"),
             Ok(_) => panic!("expected failure"),
         }
     }

@@ -1,52 +1,103 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the default
+//! build must resolve with zero external dependencies so the hermetic CI
+//! runner never touches a registry.
+
+use std::fmt;
 
 /// Convenience alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All error conditions surfaced by the catwalk library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A netlist was structurally invalid (dangling net, combinational
     /// cycle, arity mismatch, ...).
-    #[error("netlist error: {0}")]
     Netlist(String),
 
     /// A sorting/selection network failed verification or was requested
     /// with unsupported parameters.
-    #[error("sorter error: {0}")]
     Sorter(String),
 
     /// Invalid neuron / dendrite configuration.
-    #[error("config error: {0}")]
     Config(String),
 
-    /// The PJRT runtime failed (artifact missing, compile error, shape
-    /// mismatch, ...).
-    #[error("runtime error: {0}")]
+    /// The execution runtime failed (artifact missing, compile error,
+    /// shape mismatch, ...).
     Runtime(String),
 
     /// Coordinator-level failure (queue closed, worker panicked, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Serving front-end failure.
-    #[error("server error: {0}")]
     Server(String),
 
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Usage(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// I/O failure.
+    Io(std::io::Error),
 
-    /// Errors bubbled up from the `xla` crate.
-    #[error("xla error: {0}")]
+    /// Errors bubbled up from the `xla` crate (PJRT backend).
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Netlist(m) => write!(f, "netlist error: {m}"),
+            Error::Sorter(m) => write!(f, "sorter error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Server(m) => write!(f, "server error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(
+            Error::Runtime("boom".into()).to_string(),
+            "runtime error: boom"
+        );
+        assert_eq!(Error::Server("x".into()).to_string(), "server error: x");
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let e: Error = std::io::Error::other("nope").into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("nope"));
     }
 }

@@ -15,12 +15,13 @@
 //!    parallel counters ([`pc`]), and the assembled SRM0-RNL / Catwalk
 //!    neurons ([`neuron`]). The TNN functional layer (columns, STDP, WTA,
 //!    temporal encoders) lives in [`tnn`].
-//! 3. **The L3 coordinator** — a PJRT runtime bridge ([`runtime`]) that
-//!    executes the AOT-compiled JAX/Pallas artifacts, a thread-pool DSE
-//!    scheduler and dynamic volley batcher ([`coordinator`]), a TCP
-//!    serving front-end ([`server`]), experiment drivers for every figure
-//!    and table in the paper ([`experiments`]), and report renderers
-//!    ([`report`]).
+//! 3. **The L3 coordinator** — a pluggable execution runtime
+//!    ([`runtime`]) with a pure-Rust native interpreter (default) and a
+//!    PJRT/XLA path (`--features xla`) for the AOT-compiled JAX/Pallas
+//!    artifacts, a thread-pool DSE scheduler and dynamic volley batcher
+//!    ([`coordinator`]), a TCP serving front-end ([`server`]), experiment
+//!    drivers for every figure and table in the paper ([`experiments`]),
+//!    and report renderers ([`report`]).
 //!
 //! The public API a downstream user touches first:
 //!

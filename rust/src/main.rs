@@ -151,8 +151,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let theta = args.get_f64("theta", 12.0)? as f32;
     let service = TnnHandle::open(&artifacts, n, theta, seed)?;
     println!(
-        "column: n={} c={} batch={} (artifact tnn_train_n{n}_c{}_b{})",
-        service.n, service.c, service.b, service.c, service.b
+        "column: n={} c={} batch={} backend={} (kernel tnn_train_n{n}_c{}_b{})",
+        service.n, service.c, service.b, service.backend, service.c, service.b
     );
 
     // GRF-encoded clustered workload sized to the column input width.
@@ -207,8 +207,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_string("addr", "127.0.0.1:7070");
     let n = args.get_usize("n", 64)?;
     let service = TnnHandle::open(&artifacts, n, 6.0, 7)?;
+    println!(
+        "serving TNN column (n={n}, backend={}) on {addr} — protocol: INFER/LEARN/STATS/QUIT",
+        service.backend
+    );
     let server = Server::new(service, BatcherConfig::default());
-    println!("serving TNN column (n={n}) on {addr} — protocol: INFER/LEARN/STATS/QUIT");
     server.serve(&addr, |port| println!("bound on port {port}"))
 }
 

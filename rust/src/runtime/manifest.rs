@@ -31,10 +31,82 @@ pub struct Manifest {
     pub entries: Vec<Entry>,
 }
 
+/// The column configurations `python/compile/aot.py` lowers (n, c, b) —
+/// kept in lockstep with `aot.py::CONFIGS`.
+pub const DEFAULT_CONFIGS: [(usize, usize, usize); 3] = [(16, 8, 64), (32, 12, 64), (64, 16, 64)];
+
 impl Manifest {
     pub fn parse_file(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)?;
         Self::parse(&text)
+    }
+
+    /// The manifest `aot.py` would write, synthesized without artifacts.
+    ///
+    /// The native backend interprets kernels straight from the entry
+    /// metadata, so a fresh checkout (no `make artifacts`) can still run
+    /// the full serving stack with the standard column configurations.
+    pub fn default_native() -> Manifest {
+        // time base shared with the TNN layer and python model.T_MAX;
+        // K = 2 is the paper's clip (aot.py::K).
+        const T_MAX: usize = crate::tnn::T_MAX as usize;
+        const K: usize = 2;
+        let mut entries = Vec::new();
+        for &(n, c, b) in &DEFAULT_CONFIGS {
+            entries.push(Entry {
+                name: format!("tnn_forward_n{n}_c{c}_b{b}"),
+                file: format!("tnn_forward_n{n}_c{c}_b{b}.hlo.txt"),
+                kind: "forward".into(),
+                inputs: vec![vec![b, n], vec![c, n], vec![1, 1]],
+                outputs: vec![vec![b, c], vec![b, c]],
+                n,
+                c,
+                b,
+            });
+            entries.push(Entry {
+                name: format!("tnn_train_n{n}_c{c}_b{b}"),
+                file: format!("tnn_train_n{n}_c{c}_b{b}.hlo.txt"),
+                kind: "train".into(),
+                inputs: vec![vec![c, n], vec![b, n], vec![1, 1]],
+                outputs: vec![vec![c, n], vec![b, c], vec![b, c]],
+                n,
+                c,
+                b,
+            });
+            entries.push(Entry {
+                name: format!("topk_eval_n{n}_k{K}_b{b}"),
+                file: format!("topk_eval_n{n}_k{K}_b{b}.hlo.txt"),
+                kind: "topk".into(),
+                inputs: vec![vec![b, n, T_MAX]],
+                outputs: vec![vec![b, K, T_MAX]],
+                n,
+                c: K,
+                b,
+            });
+        }
+        Manifest {
+            t_max: T_MAX,
+            k: K,
+            entries,
+        }
+    }
+
+    /// Parse `dir/manifest.json` when present; otherwise fall back to
+    /// [`Manifest::default_native`] (`require_file = false`, native
+    /// backend) or fail with a build hint (`require_file = true`,
+    /// artifact-backed backends).
+    pub fn load_or_default(dir: &Path, require_file: bool) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        if path.exists() {
+            Self::parse_file(&path)
+        } else if require_file {
+            Err(Error::Runtime(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )))
+        } else {
+            Ok(Self::default_native())
+        }
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
@@ -386,12 +458,57 @@ mod tests {
     }
 
     #[test]
+    fn default_native_mirrors_aot_configs() {
+        let m = Manifest::default_native();
+        assert_eq!(m.t_max, 16);
+        assert_eq!(m.k, 2);
+        assert_eq!(m.entries.len(), 9);
+        for kind in ["forward", "train", "topk"] {
+            assert_eq!(m.entries.iter().filter(|e| e.kind == kind).count(), 3);
+        }
+        let e = m
+            .entries
+            .iter()
+            .find(|e| e.name == "tnn_forward_n32_c12_b64")
+            .unwrap();
+        assert_eq!(e.inputs, vec![vec![64, 32], vec![12, 32], vec![1, 1]]);
+        assert_eq!(e.outputs, vec![vec![64, 12], vec![64, 12]]);
+        // shape layout matches what aot.py writes for the same entry
+        // (cross-checked by `parses_sample_manifest` above).
+    }
+
+    #[test]
+    fn load_or_default_fallback_and_hint() {
+        let dir = std::path::Path::new("/nonexistent-artifacts");
+        let m = Manifest::load_or_default(dir, false).unwrap();
+        assert_eq!(m.entries.len(), 9);
+        let err = Manifest::load_or_default(dir, true).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
     fn parses_real_manifest_if_present() {
         let p = std::path::Path::new("artifacts/manifest.json");
         if p.exists() {
             let m = Manifest::parse_file(p).unwrap();
             assert!(m.entries.len() >= 9);
             assert!(m.entries.iter().any(|e| e.kind == "topk"));
+            // Lockstep gate: the built-in native fallback must describe
+            // exactly what aot.py generated (same t_max/k and, for every
+            // fallback entry, an identical artifact entry).
+            let d = Manifest::default_native();
+            assert_eq!((m.t_max, m.k), (d.t_max, d.k));
+            for de in &d.entries {
+                let re = m
+                    .entries
+                    .iter()
+                    .find(|e| e.name == de.name)
+                    .unwrap_or_else(|| panic!("artifact manifest missing `{}`", de.name));
+                assert_eq!(re.kind, de.kind, "{}", de.name);
+                assert_eq!(re.inputs, de.inputs, "{}", de.name);
+                assert_eq!(re.outputs, de.outputs, "{}", de.name);
+                assert_eq!((re.n, re.c, re.b), (de.n, de.c, de.b), "{}", de.name);
+            }
         }
     }
 }

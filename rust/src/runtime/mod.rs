@@ -1,14 +1,29 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the L3 hot path.
+//! Execution runtime: run the AOT manifest's TNN kernels through a
+//! pluggable backend.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`). One
-//! [`Executable`] per artifact; the [`Runtime`] caches them by name and
-//! validates shapes against `artifacts/manifest.json` (written by
-//! `python/compile/aot.py`). Python never runs here — the artifacts are
-//! the only thing crossing the language boundary.
+//! The L3 hot path talks to a [`Runtime`] that resolves manifest entries
+//! (`artifacts/manifest.json`, written by `python/compile/aot.py`) into
+//! [`Executable`]s. *How* an entry executes is a [`Backend`] decision:
+//!
+//! * [`NativeBackend`] (default) — a pure-Rust interpreter of the
+//!   RNL-column forward, STDP train and unary top-k kernels, ported from
+//!   `python/compile/kernels/ref.py`. Needs no artifacts on disk: when
+//!   `manifest.json` is absent it synthesizes the standard column
+//!   configurations, so a fresh checkout serves traffic immediately.
+//! * [`xla_backend::XlaBackend`] (`--features xla`) — compiles the AOT
+//!   HLO-text artifacts through PJRT (`PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`). Python
+//!   never runs here — the artifacts are the only thing crossing the
+//!   language boundary.
+//!
+//! Select at runtime with `CATWALK_BACKEND=native|xla` (default
+//! `native`). Shape validation against the manifest happens once in
+//! [`Executable::run`], so backends only see well-formed inputs.
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla_backend;
 
 use crate::error::{Error, Result};
 use std::collections::HashMap;
@@ -16,12 +31,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 pub use manifest::{Entry, Manifest};
-
-/// A compiled PJRT executable plus its manifest entry.
-pub struct Executable {
-    pub entry: Entry,
-    exe: xla::PjRtLoadedExecutable,
-}
+pub use native::NativeBackend;
 
 /// Host-side f32 tensor (row-major) used on the runtime boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,18 +67,6 @@ impl Tensor {
         }
     }
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>()?;
-        Ok(Tensor { shape: dims, data })
-    }
-
     /// Row-major element access for 2-D tensors.
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         debug_assert_eq!(self.shape.len(), 2);
@@ -76,9 +74,99 @@ impl Tensor {
     }
 }
 
+/// A compiled/instantiated kernel produced by a [`Backend`].
+///
+/// `execute` receives inputs already validated against the manifest entry
+/// (count and shapes) by [`Executable::run`]; implementations may index
+/// them positionally.
+pub trait Kernel {
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution backend: turns manifest entries into runnable kernels.
+///
+/// Deliberately *not* `Send`: the PJRT client types are `!Send`, so the
+/// coordinator confines whichever backend it opens to a dedicated engine
+/// thread (see `coordinator::service`).
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Compile or instantiate the kernel for one manifest entry. `dir` is
+    /// the artifact directory (unused by backends that need no files).
+    fn load(&self, dir: &Path, entry: &Entry, manifest: &Manifest) -> Result<Box<dyn Kernel>>;
+}
+
+/// Which backend [`Runtime::open`] instantiates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust kernel interpreter (default; no artifacts required).
+    Native,
+    /// PJRT/XLA execution of the AOT HLO artifacts.
+    #[cfg(feature = "xla")]
+    Xla,
+}
+
+impl BackendKind {
+    /// Resolve from `CATWALK_BACKEND` (`native` | `xla`); unset means
+    /// [`BackendKind::Native`]. Asking for `xla` in a build without the
+    /// `xla` feature is an error rather than a silent fallback, and so is
+    /// a malformed (non-unicode) value.
+    pub fn from_env() -> Result<BackendKind> {
+        match std::env::var("CATWALK_BACKEND") {
+            Err(std::env::VarError::NotPresent) => Ok(BackendKind::Native),
+            Err(std::env::VarError::NotUnicode(_)) => Err(Error::Runtime(
+                "CATWALK_BACKEND is set to a non-unicode value".into(),
+            )),
+            Ok(v) => match v.as_str() {
+                "" | "native" => Ok(BackendKind::Native),
+                "xla" => Self::xla_kind(),
+                other => Err(Error::Runtime(format!(
+                    "unknown CATWALK_BACKEND `{other}` (expected `native` or `xla`)"
+                ))),
+            },
+        }
+    }
+
+    fn xla_kind() -> Result<BackendKind> {
+        #[cfg(feature = "xla")]
+        {
+            Ok(BackendKind::Xla)
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            Err(Error::Runtime(
+                "CATWALK_BACKEND=xla but the binary was built without the `xla` feature".into(),
+            ))
+        }
+    }
+
+    /// Whether this backend needs `manifest.json` + kernel files on disk.
+    pub fn requires_artifacts(self) -> bool {
+        match self {
+            BackendKind::Native => false,
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => true,
+        }
+    }
+
+    fn instantiate(self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendKind::Native => Ok(Box::new(NativeBackend)),
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => Ok(Box::new(xla_backend::XlaBackend::new()?)),
+        }
+    }
+}
+
+/// A loaded kernel plus its manifest entry; validates shapes on entry.
+pub struct Executable {
+    pub entry: Entry,
+    kernel: Box<dyn Kernel>,
+}
+
 impl Executable {
     /// Execute with shape validation; returns one [`Tensor`] per output
-    /// in manifest order (the AOT side lowers with `return_tuple=True`).
+    /// in manifest order.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         if inputs.len() != self.entry.inputs.len() {
             return Err(Error::Runtime(format!(
@@ -96,16 +184,7 @@ impl Executable {
                 )));
             }
         }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let tuple = result.to_tuple()?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for lit in &tuple {
-            out.push(Tensor::from_literal(lit)?);
-        }
+        let out = self.kernel.execute(inputs)?;
         if out.len() != self.entry.outputs.len() {
             return Err(Error::Runtime(format!(
                 "{}: expected {} outputs, got {}",
@@ -125,30 +204,42 @@ pub struct Runtime {
 }
 
 struct RuntimeInner {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     dir: PathBuf,
     manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (default `artifacts/`), reading its
-    /// manifest. Fails with a build hint when artifacts are missing.
+    /// Open the artifact directory (default `artifacts/`) with the
+    /// backend selected by `CATWALK_BACKEND`. The native backend tolerates
+    /// a missing directory (built-in manifest); artifact-backed backends
+    /// fail with a build hint.
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        Self::open_with(dir, BackendKind::from_env()?)
+    }
+
+    /// Open with an explicit backend choice.
+    pub fn open_with(dir: impl AsRef<Path>, kind: BackendKind) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        if !manifest_path.exists() {
-            return Err(Error::Runtime(format!(
-                "{} not found — run `make artifacts` first",
-                manifest_path.display()
-            )));
-        }
-        let manifest = Manifest::parse_file(&manifest_path)?;
-        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load_or_default(&dir, kind.requires_artifacts())?;
+        Self::from_manifest(dir, kind, manifest)
+    }
+
+    /// Open from an already-resolved manifest — avoids re-reading
+    /// `manifest.json` when the caller has parsed it (the coordinator
+    /// resolves it once on the caller thread and hands it to the engine
+    /// thread, so both always see the same entries).
+    pub fn from_manifest(
+        dir: impl AsRef<Path>,
+        kind: BackendKind,
+        manifest: Manifest,
+    ) -> Result<Runtime> {
+        let backend = kind.instantiate()?;
         Ok(Runtime {
             inner: Arc::new(RuntimeInner {
-                client,
-                dir,
+                backend,
+                dir: dir.as_ref().to_path_buf(),
                 manifest,
                 cache: Mutex::new(HashMap::new()),
             }),
@@ -159,11 +250,12 @@ impl Runtime {
         &self.inner.manifest
     }
 
-    pub fn platform(&self) -> String {
-        self.inner.client.platform_name()
+    /// Name of the executing backend (`"native"` / `"xla"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.backend.name()
     }
 
-    /// Load (or fetch cached) a compiled executable by manifest name.
+    /// Load (or fetch cached) an executable by manifest name.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.inner.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
@@ -176,14 +268,11 @@ impl Runtime {
             .find(|e| e.name == name)
             .ok_or_else(|| Error::Runtime(format!("artifact `{name}` not in manifest")))?
             .clone();
-        let path = self.inner.dir.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.inner.client.compile(&comp)?;
-        let executable = Arc::new(Executable { entry, exe });
+        let kernel = self
+            .inner
+            .backend
+            .load(&self.inner.dir, &entry, &self.inner.manifest)?;
+        let executable = Arc::new(Executable { entry, kernel });
         self.inner
             .cache
             .lock()
@@ -218,10 +307,54 @@ mod tests {
     }
 
     #[test]
-    fn open_missing_dir_gives_hint() {
-        match Runtime::open("/nonexistent-artifacts") {
-            Err(e) => assert!(e.to_string().contains("make artifacts"), "{e}"),
-            Ok(_) => panic!("expected failure"),
+    fn native_open_missing_dir_uses_builtin_manifest() {
+        let rt = Runtime::open_with("/nonexistent-artifacts", BackendKind::Native).unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert_eq!(rt.manifest().t_max, 16);
+        assert_eq!(rt.names_of_kind("forward").len(), 3);
+        let exe = rt.load("tnn_forward_n16_c8_b64").unwrap();
+        // all-silent batch: every column stays at t_max, no winner
+        let out = exe
+            .run(&[
+                Tensor::new(vec![64, 16], vec![16.0; 64 * 16]).unwrap(),
+                Tensor::zeros(vec![8, 16]),
+                Tensor::scalar(6.0),
+            ])
+            .unwrap();
+        assert_eq!(out[0].shape, vec![64, 8]);
+        assert!(out[0].data.iter().all(|&t| t == 16.0));
+        assert!(out[1].data.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn executable_rejects_bad_shapes() {
+        let rt = Runtime::open_with("/nonexistent-artifacts", BackendKind::Native).unwrap();
+        let exe = rt.load("tnn_forward_n16_c8_b64").unwrap();
+        let err = exe.run(&[Tensor::zeros(vec![64, 16])]).unwrap_err();
+        assert!(err.to_string().contains("expected 3 inputs"), "{err}");
+        let err = exe
+            .run(&[
+                Tensor::zeros(vec![64, 8]),
+                Tensor::zeros(vec![8, 16]),
+                Tensor::scalar(6.0),
+            ])
+            .unwrap_err();
+        assert!(err.to_string().contains("input 0 shape"), "{err}");
+    }
+
+    #[test]
+    fn unknown_artifact_name_is_an_error() {
+        let rt = Runtime::open_with("/nonexistent-artifacts", BackendKind::Native).unwrap();
+        let err = rt.load("no_such_kernel").unwrap_err();
+        assert!(err.to_string().contains("not in manifest"), "{err}");
+    }
+
+    #[test]
+    fn default_backend_kind_is_native() {
+        if std::env::var("CATWALK_BACKEND").is_ok() {
+            return; // respect an explicit override (PJRT conformance runs)
         }
+        assert_eq!(BackendKind::from_env().unwrap(), BackendKind::Native);
+        assert!(!BackendKind::Native.requires_artifacts());
     }
 }

@@ -1,0 +1,425 @@
+//! Native execution backend: a pure-Rust interpreter of the AOT
+//! manifest's kernels.
+//!
+//! Ports `python/compile/kernels/ref.py` (the pure-jnp oracles the Pallas
+//! kernels are verified against) operation for operation:
+//!
+//! * `"forward"` → [`rnl_forward`] + [`wta_mask`] — batched SRM0-RNL
+//!   first-crossing times with the Catwalk k-clip (k from the manifest,
+//!   mirroring `aot.py` which lowers `column_forward` with `k_clip = K`),
+//!   then the 1-WTA winner mask.
+//! * `"train"` → forward + [`stdp_update`] — the winner-gated
+//!   expected-value STDP step, batch-averaged exactly like
+//!   `model.py::stdp_update` (learning rates from
+//!   [`StdpParams::default`], which the native [`crate::tnn::stdp`] rule
+//!   shares).
+//! * `"topk"` → [`topk_taps`] — the per-cycle top-k counting oracle; the
+//!   gate-level selection network is proven equivalent to it in
+//!   `rust/tests/runtime_roundtrip.rs`.
+//!
+//! This is the default backend: it needs nothing on disk, so the whole
+//! serving stack (coordinator, batcher, TCP server, experiment drivers)
+//! runs and is tested on every commit without libxla.
+
+use super::{Backend, Entry, Kernel, Manifest, Tensor};
+use crate::error::{Error, Result};
+use crate::tnn::stdp::StdpParams;
+use std::path::Path;
+
+/// Zero-state backend handle; all kernel state lives in the manifest.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load(&self, _dir: &Path, entry: &Entry, manifest: &Manifest) -> Result<Box<dyn Kernel>> {
+        let t_max = manifest.t_max;
+        match entry.kind.as_str() {
+            "forward" => Ok(Box::new(ForwardKernel {
+                t_max,
+                k_clip: Some(manifest.k as f32),
+            })),
+            "train" => Ok(Box::new(TrainKernel {
+                t_max,
+                k_clip: Some(manifest.k as f32),
+                params: StdpParams::default(),
+            })),
+            "topk" => Ok(Box::new(TopkKernel { k: entry.c })),
+            other => Err(Error::Runtime(format!(
+                "native backend: unknown kernel kind `{other}` for `{}`",
+                entry.name
+            ))),
+        }
+    }
+}
+
+struct ForwardKernel {
+    t_max: usize,
+    k_clip: Option<f32>,
+}
+
+impl Kernel for ForwardKernel {
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let times = rnl_forward(
+            &inputs[0],
+            &inputs[1],
+            inputs[2].data[0],
+            self.t_max,
+            self.k_clip,
+        );
+        let mask = wta_mask(&times, self.t_max);
+        Ok(vec![times, mask])
+    }
+}
+
+struct TrainKernel {
+    t_max: usize,
+    k_clip: Option<f32>,
+    params: StdpParams,
+}
+
+impl Kernel for TrainKernel {
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let (weights, spikes, theta) = (&inputs[0], &inputs[1], inputs[2].data[0]);
+        let times = rnl_forward(spikes, weights, theta, self.t_max, self.k_clip);
+        let mask = wta_mask(&times, self.t_max);
+        let new_w = stdp_update(weights, spikes, &times, &mask, self.t_max, &self.params);
+        Ok(vec![new_w, times, mask])
+    }
+}
+
+struct TopkKernel {
+    k: usize,
+}
+
+impl Kernel for TopkKernel {
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Ok(vec![topk_taps(&inputs[0], self.k)])
+    }
+}
+
+/// SRM0-RNL column forward pass (mirrors `ref.py::rnl_column_ref`).
+///
+/// `spikes` `[B, n]` (`>= t_max` = silent), `weights` `[C, n]`; returns
+/// first-crossing times `[B, C]` in `0..=t_max` (`t_max` = no spike). The
+/// per-cycle response count is optionally clipped at `k_clip` (the
+/// Catwalk dendrite) before accumulating into the membrane potential.
+pub fn rnl_forward(
+    spikes: &Tensor,
+    weights: &Tensor,
+    theta: f32,
+    t_max: usize,
+    k_clip: Option<f32>,
+) -> Tensor {
+    let (b, n) = (spikes.shape[0], spikes.shape[1]);
+    let c = weights.shape[0];
+    let mut out = Tensor::zeros(vec![b, c]);
+    for bi in 0..b {
+        let volley = &spikes.data[bi * n..(bi + 1) * n];
+        // Padded/silent rows (the batcher pads to the manifest batch with
+        // all-t_max volleys) accumulate zero every cycle: skip the
+        // O(c * t_max * n) scan. With theta <= 0 a zero potential still
+        // crosses at t = 0, so that case takes the general path.
+        if theta > 0.0 && volley.iter().all(|&s| s >= t_max as f32) {
+            for ci in 0..c {
+                out.data[bi * c + ci] = t_max as f32;
+            }
+            continue;
+        }
+        for ci in 0..c {
+            let w = &weights.data[ci * n..(ci + 1) * n];
+            let mut pot = 0f32;
+            let mut time = t_max as f32;
+            for t in 0..t_max {
+                let tf = t as f32;
+                let mut count = 0f32;
+                for (&s, &wi) in volley.iter().zip(w) {
+                    if tf >= s && tf < s + wi {
+                        count += 1.0;
+                    }
+                }
+                if let Some(k) = k_clip {
+                    count = count.min(k);
+                }
+                pot += count;
+                if pot >= theta {
+                    time = tf;
+                    break;
+                }
+            }
+            out.data[bi * c + ci] = time;
+        }
+    }
+    out
+}
+
+/// 1-WTA one-hot mask of the earliest-spiking column per batch row
+/// (ties → lowest index; all-zero row when nothing spiked). Mirrors
+/// `model.py::wta`.
+pub fn wta_mask(times: &Tensor, t_max: usize) -> Tensor {
+    let (b, c) = (times.shape[0], times.shape[1]);
+    let mut mask = Tensor::zeros(vec![b, c]);
+    for bi in 0..b {
+        let row = &times.data[bi * c..(bi + 1) * c];
+        let mut best = 0usize;
+        for (i, &t) in row.iter().enumerate() {
+            if t < row[best] {
+                best = i;
+            }
+        }
+        if row[best] < t_max as f32 {
+            mask.data[bi * c + best] = 1.0;
+        }
+    }
+    mask
+}
+
+/// Winner-gated expected-value STDP, batch-averaged (mirrors
+/// `model.py::stdp_update` / `ref.py::stdp_ref`): per-sample deltas are
+/// gated to the WTA winner (or to every column when the whole row stayed
+/// silent — otherwise a dead network could never become responsive),
+/// averaged over the batch, then clipped into `[0, w_max]`.
+pub fn stdp_update(
+    weights: &Tensor,
+    in_times: &Tensor,
+    out_times: &Tensor,
+    winner_mask: &Tensor,
+    t_max: usize,
+    p: &StdpParams,
+) -> Tensor {
+    let (c, n) = (weights.shape[0], weights.shape[1]);
+    let b = in_times.shape[0];
+    let t_inf = t_max as f32;
+    let mut acc = vec![0f32; c * n];
+    for bi in 0..b {
+        let x_times = &in_times.data[bi * n..(bi + 1) * n];
+        let y_times = &out_times.data[bi * c..(bi + 1) * c];
+        let row_silent = y_times.iter().all(|&t| t >= t_inf);
+        for ci in 0..c {
+            let gate = (winner_mask.data[bi * c + ci] + if row_silent { 1.0 } else { 0.0 })
+                .clamp(0.0, 1.0);
+            if gate <= 0.0 {
+                continue;
+            }
+            let t_y = y_times[ci];
+            let y_spk = t_y < t_inf;
+            for (i, &t_x) in x_times.iter().enumerate() {
+                let w = weights.data[ci * n + i];
+                let x_spk = t_x < t_inf;
+                let delta = if x_spk && y_spk && t_x <= t_y {
+                    p.mu_capture * (p.w_max - w)
+                } else if (x_spk && y_spk && t_x > t_y) || (!x_spk && y_spk) {
+                    -p.mu_backoff * w
+                } else if x_spk && !y_spk {
+                    p.mu_search * (p.w_max - w)
+                } else {
+                    0.0
+                };
+                acc[ci * n + i] += gate * delta;
+            }
+        }
+    }
+    let inv_b = 1.0 / b as f32;
+    let mut out = weights.clone();
+    for (w, a) in out.data.iter_mut().zip(&acc) {
+        *w = (*w + a * inv_b).clamp(0.0, p.w_max);
+    }
+    out
+}
+
+/// Per-cycle unary top-k taps (mirrors `ref.py::topk_wave_ref`): tap `j`
+/// carries a 1 in a cycle iff at least `k - j` lanes are high that cycle
+/// — the counting characterization the gate-level selection network is
+/// verified against.
+pub fn topk_taps(waves: &Tensor, k: usize) -> Tensor {
+    let (b, n, t) = (waves.shape[0], waves.shape[1], waves.shape[2]);
+    let mut out = Tensor::zeros(vec![b, k, t]);
+    for bi in 0..b {
+        for ti in 0..t {
+            let mut count = 0usize;
+            for i in 0..n {
+                if waves.data[(bi * n + i) * t + ti] > 0.5 {
+                    count += 1;
+                }
+            }
+            for j in 0..k {
+                if count >= k - j {
+                    out.data[(bi * k + j) * t + ti] = 1.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neuron::behavior::rnl_first_crossing;
+    use crate::rng::Xoshiro256;
+    use crate::tnn::stdp::StdpRule;
+    use crate::tnn::{Column, T_MAX};
+    use crate::topk::TopkSelector;
+
+    const TM: usize = T_MAX as usize;
+
+    fn random_spikes(rng: &mut Xoshiro256, n: usize, p: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if rng.gen_bool(p) {
+                    rng.gen_range(8) as f32
+                } else {
+                    TM as f32
+                }
+            })
+            .collect()
+    }
+
+    /// Unclipped native forward equals the behavioral golden model
+    /// `rnl_first_crossing` on random integer problems.
+    #[test]
+    fn rnl_forward_matches_behavior_reference() {
+        let mut rng = Xoshiro256::new(11);
+        for _ in 0..50 {
+            let (b, c, n) = (4, 3, 16);
+            let spikes: Vec<f32> = (0..b * n)
+                .map(|_| {
+                    if rng.gen_bool(0.4) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        TM as f32
+                    }
+                })
+                .collect();
+            let weights: Vec<f32> = (0..c * n).map(|_| rng.gen_range(8) as f32).collect();
+            let theta = 1 + rng.gen_range(11) as u32;
+            let times = rnl_forward(
+                &Tensor::new(vec![b, n], spikes.clone()).unwrap(),
+                &Tensor::new(vec![c, n], weights.clone()).unwrap(),
+                theta as f32,
+                TM,
+                None,
+            );
+            for bi in 0..b {
+                let st: Vec<Option<u32>> = spikes[bi * n..(bi + 1) * n]
+                    .iter()
+                    .map(|&s| if s < TM as f32 { Some(s as u32) } else { None })
+                    .collect();
+                for ci in 0..c {
+                    let wt: Vec<u32> = weights[ci * n..(ci + 1) * n]
+                        .iter()
+                        .map(|&w| w as u32)
+                        .collect();
+                    let expect = rnl_first_crossing(&st, &wt, theta, TM as u32);
+                    let got = times.at2(bi, ci);
+                    match expect {
+                        Some(t) => assert_eq!(got, t as f32),
+                        None => assert_eq!(got, TM as f32),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Clipped native forward equals the native TNN column with the same
+    /// weights and clip.
+    #[test]
+    fn rnl_forward_matches_tnn_column_with_clip() {
+        let mut rng = Xoshiro256::new(21);
+        let col = Column::new(16, 4, 6.0, Some(2), 9);
+        let weights: Vec<f32> = col.weights.iter().flatten().copied().collect();
+        let wt = Tensor::new(vec![4, 16], weights).unwrap();
+        for _ in 0..100 {
+            let volley = random_spikes(&mut rng, 16, 0.5);
+            let times = rnl_forward(
+                &Tensor::new(vec![1, 16], volley.clone()).unwrap(),
+                &wt,
+                6.0,
+                TM,
+                Some(2.0),
+            );
+            let mask = wta_mask(&times, TM);
+            let expect = col.forward(&volley);
+            for ci in 0..4 {
+                assert_eq!(times.at2(0, ci), expect.times[ci], "volley {volley:?}");
+            }
+            let winner = (0..4).find(|&ci| mask.at2(0, ci) > 0.5);
+            assert_eq!(winner, expect.winner);
+        }
+    }
+
+    #[test]
+    fn wta_mask_ties_and_silence() {
+        let t = Tensor::new(vec![3, 3], vec![5.0, 2.0, 9.0, 2.0, 2.0, 1.5, 16.0, 16.0, 16.0])
+            .unwrap();
+        let m = wta_mask(&t, 16);
+        assert_eq!(m.data[0..3], [0.0, 1.0, 0.0]);
+        assert_eq!(m.data[3..6], [0.0, 0.0, 1.0]);
+        assert_eq!(m.data[6..9], [0.0, 0.0, 0.0]);
+        // tie -> lowest index
+        let t = Tensor::new(vec![1, 3], vec![3.0, 3.0, 16.0]).unwrap();
+        assert_eq!(wta_mask(&t, 16).data, vec![1.0, 0.0, 0.0]);
+    }
+
+    /// With batch = 1 the batched expected-value update degenerates to
+    /// the per-volley native STDP rule (`tnn::stdp::StdpRule`).
+    #[test]
+    fn stdp_update_matches_per_volley_rule_at_batch_one() {
+        let mut rng = Xoshiro256::new(33);
+        for case in 0..100 {
+            let (c, n) = (3, 8);
+            let mut col = Column::new(n, c, 5.0, Some(2), case);
+            let volley = random_spikes(&mut rng, n, 0.5);
+            let out = col.forward(&volley);
+            let weights: Vec<f32> = col.weights.iter().flatten().copied().collect();
+            let wt = Tensor::new(vec![c, n], weights).unwrap();
+            let times = Tensor::new(vec![1, c], out.times.clone()).unwrap();
+            let mask = wta_mask(&times, TM);
+            let batched = stdp_update(
+                &wt,
+                &Tensor::new(vec![1, n], volley.clone()).unwrap(),
+                &times,
+                &mask,
+                TM,
+                &StdpParams::default(),
+            );
+            StdpRule::default().apply(&mut col, &volley, &out.times, out.winner);
+            for ci in 0..c {
+                for i in 0..n {
+                    let a = batched.at2(ci, i);
+                    let b = col.weights[ci][i];
+                    assert!((a - b).abs() < 1e-5, "case {case} w[{ci}][{i}]: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    /// The counting oracle agrees with the pruned gate-level selection
+    /// network model on random bit columns.
+    #[test]
+    fn topk_taps_match_selection_network() {
+        let (n, k) = (16, 2);
+        let sel = TopkSelector::catwalk(n, k).unwrap();
+        let mut rng = Xoshiro256::new(44);
+        for _ in 0..20 {
+            let bits: Vec<Vec<bool>> = (0..TM)
+                .map(|_| (0..n).map(|_| rng.gen_bool(0.25)).collect())
+                .collect();
+            let mut data = vec![0f32; n * TM];
+            for (t, col) in bits.iter().enumerate() {
+                for (i, &v) in col.iter().enumerate() {
+                    data[i * TM + t] = v as u32 as f32;
+                }
+            }
+            let taps = topk_taps(&Tensor::new(vec![1, n, TM], data).unwrap(), k);
+            for (t, col) in bits.iter().enumerate() {
+                let expect = sel.apply_bits(col);
+                for (j, &e) in expect.iter().enumerate() {
+                    assert_eq!(taps.data[j * TM + t] > 0.5, e, "t={t} tap={j}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! PJRT/XLA execution backend (`--features xla`).
+//!
+//! Compiles the AOT HLO-text artifacts written by `python/compile/aot.py`
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`). The AOT side lowers with `return_tuple=True`, so one
+//! execution returns a tuple literal that unpacks into the manifest's
+//! output tensors.
+//!
+//! In the hermetic workspace the `xla` crate resolves to the local
+//! `rust/xla-stub` API stub, which keeps this module compiling on every
+//! commit while every constructor reports "unavailable" at runtime. To
+//! execute for real, point the `xla` path dependency at an `xla-rs`
+//! checkout with libxla installed (see DESIGN.md §Backends).
+
+use super::{Backend, Entry, Kernel, Manifest, Tensor};
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// PJRT-backed [`Backend`]; owns the (`!Send`) client.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+}
+
+impl XlaBackend {
+    pub fn new() -> Result<XlaBackend> {
+        Ok(XlaBackend {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn load(&self, dir: &Path, entry: &Entry, _manifest: &Manifest) -> Result<Box<dyn Kernel>> {
+        let path = dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Box::new(XlaKernel { exe }))
+    }
+}
+
+struct XlaKernel {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Kernel for XlaKernel {
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in &tuple {
+            out.push(from_literal(lit)?);
+        }
+        Ok(out)
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(dims, data)
+}

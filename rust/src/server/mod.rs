@@ -16,7 +16,7 @@
 //!
 //! One thread per connection (bounded by the listener accept loop);
 //! batching happens in the shared [`DynamicBatcher`], so concurrent
-//! clients coalesce into full PJRT batches.
+//! clients coalesce into full backend batches.
 
 use crate::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
 use crate::error::{Error, Result};

@@ -167,3 +167,43 @@ fn selector_cost_meets_sorting_at_k_equals_n() {
     // tournament with k == n degenerates to the full odd-even sorter
     assert_eq!(full.stats().total, sorter.size());
 }
+
+/// The L3 serving stack runs end-to-end on the default (native) backend
+/// with no artifacts on disk: online STDP learning over the clustered
+/// workload keeps weights bounded, moves them, and leaves the column
+/// responsive.
+#[test]
+fn serving_stack_end_to_end_on_default_backend() {
+    use catwalk::coordinator::TnnHandle;
+    use catwalk::tnn::workload::ClusteredSeries;
+    use catwalk::tnn::{GrfEncoder, WorkloadConfig};
+
+    let n = 32;
+    let handle = TnnHandle::open("artifacts", n, 6.0, 12).unwrap();
+    assert_eq!((handle.n, handle.c, handle.b), (32, 12, 64));
+
+    let fields = 8;
+    let mut enc = GrfEncoder::new(n / fields, fields, 0.0, 1.0);
+    enc.cutoff = 0.60;
+    let mut series = ClusteredSeries::new(WorkloadConfig {
+        dims: n / fields,
+        seed: 12,
+        ..Default::default()
+    });
+
+    let w0 = handle.weights().unwrap();
+    let mut fired_last = 0usize;
+    for _ in 0..40 {
+        let samples = series.next_batch(handle.b);
+        let volleys: Vec<Vec<f32>> = samples.iter().map(|(_, s)| enc.encode(s)).collect();
+        let results = handle.learn(volleys).unwrap();
+        fired_last = results.iter().filter(|r| r.winner.is_some()).count();
+    }
+    let w1 = handle.weights().unwrap();
+    assert_ne!(w0.data, w1.data, "STDP must move weights");
+    for &w in &w1.data {
+        assert!((0.0..=7.0).contains(&w), "weight {w} out of bounds");
+    }
+    assert!(fired_last > 0, "column must stay responsive after training");
+    assert!(handle.metrics.counter("volleys_learned") >= 40 * 64);
+}
