@@ -18,10 +18,8 @@ bench:
 bench-run:
 	cargo bench
 
-# fmt is advisory (leading `-`) until the tree has been formatted once —
-# see ROADMAP.md; keep in lockstep with the CI Format step.
 lint:
-	-cargo fmt --all --check
+	cargo fmt --all --check
 	cargo clippy --all-targets -- -D warnings
 	cargo clippy --all-targets --features xla -- -D warnings
 

@@ -17,6 +17,7 @@ Shapes and conventions (shared with the kernels and the Rust runtime):
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def topk_wave_ref(waves: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -65,6 +66,70 @@ def rnl_column_ref(
     t_idx = jnp.arange(t_max, dtype=spike_times.dtype)
     times = jnp.where(fired, t_idx, float(t_max))
     return jnp.min(times, axis=-1)
+
+
+def dense_to_sparse(spike_times, t_max: int) -> list[list[tuple[int, float]]]:
+    """Dense ``[B, n]`` spike times -> per-row sorted ``(line, time)``
+    lists holding only the spiking lines (``time < t_max``; NaN counts as
+    silent). The canonical sparse form of ``rust/src/volley``.
+    """
+    s = np.asarray(spike_times, np.float32)
+    return [
+        [(int(i), float(t)) for i, t in enumerate(row) if t < t_max]
+        for row in s
+    ]
+
+
+def sparse_to_dense(spike_lists, n: int, t_max: int) -> np.ndarray:
+    """Per-row ``(line, time)`` lists -> canonical dense ``[B, n]``
+    float32 spike times (silent lines = exactly ``t_max``)."""
+    out = np.full((len(spike_lists), n), float(t_max), np.float32)
+    for b, row in enumerate(spike_lists):
+        for i, t in row:
+            if not 0 <= i < n:
+                raise ValueError(f"line {i} out of range (n = {n})")
+            out[b, i] = t
+    return out
+
+
+def rnl_column_sparse_ref(
+    spike_lists,
+    n: int,
+    weights,
+    theta,
+    t_max: int,
+    k_clip: int | None = None,
+) -> np.ndarray:
+    """Sparsity-aware SRM0-RNL column forward: iterates only the spiking
+    lines of each volley, mirroring ``runtime::native::rnl_forward_sparse``
+    in the Rust serving stack.
+
+    Must agree exactly with :func:`rnl_column_ref` on the canonical dense
+    form of the same volleys — the per-cycle count is a sum of ones over
+    exactly the lines whose ramp is active, so clipping and the running
+    potential see identical values.
+
+    spike_lists: per-row ``(line, time)`` lists (see :func:`dense_to_sparse`);
+    weights: ``[C, n]``; theta: scalar (python float or any 1-element
+    array). Returns ``[B, C]`` float32 first-crossing times.
+    """
+    w = np.asarray(weights, np.float32)
+    th = float(np.asarray(theta, np.float32).reshape(-1)[0])
+    c = w.shape[0]
+    out = np.full((len(spike_lists), c), float(t_max), np.float32)
+    for b, row in enumerate(spike_lists):
+        active = [(i, t) for i, t in row if t < t_max]
+        for ci in range(c):
+            pot = np.float32(0.0)
+            for t in range(t_max):
+                count = sum(1 for i, s in active if s <= t < s + w[ci, i])
+                if k_clip is not None:
+                    count = min(count, k_clip)
+                pot += np.float32(count)
+                if pot >= th:
+                    out[b, ci] = float(t)
+                    break
+    return out
 
 
 def wta_ref(out_times: jnp.ndarray, t_max: int) -> jnp.ndarray:

@@ -1,0 +1,93 @@
+"""Sparse volley reference vs the dense oracle (cross-language parity).
+
+``rnl_column_sparse_ref`` is the Python twin of the Rust serving stack's
+``runtime::native::rnl_forward_sparse``: both iterate only the spiking
+lines and both must be exactly equal to the dense oracle, so the two
+languages share one conformance story.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    dense_to_sparse,
+    rnl_column_ref,
+    rnl_column_sparse_ref,
+    sparse_to_dense,
+)
+
+T = 16
+
+
+def random_dense(rng, b, n, density):
+    s = np.full((b, n), float(T), np.float32)
+    mask = rng.random((b, n)) < density
+    s[mask] = rng.integers(0, 8, size=(b, n)).astype(np.float32)[mask]
+    return s
+
+
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.1, 0.25, 0.5, 1.0])
+@pytest.mark.parametrize("k_clip", [None, 2])
+def test_sparse_ref_matches_dense_ref(density, k_clip):
+    rng = np.random.default_rng(int(density * 100) + (0 if k_clip is None else 1))
+    b, c, n = 16, 8, 32
+    s = random_dense(rng, b, n, density)
+    w = rng.integers(0, 8, size=(c, n)).astype(np.float32)
+    theta = float(rng.integers(1, 12))
+    want = rnl_column_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(theta), T, k_clip)
+    got = rnl_column_sparse_ref(dense_to_sparse(s, T), n, w, theta, T, k_clip)
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+def test_roundtrip_lossless_on_canonical_volleys():
+    rng = np.random.default_rng(7)
+    s = random_dense(rng, 8, 24, 0.3)
+    np.testing.assert_array_equal(sparse_to_dense(dense_to_sparse(s, T), 24, T), s)
+
+
+def test_roundtrip_corners():
+    silent = np.full((2, 8), float(T), np.float32)
+    assert dense_to_sparse(silent, T) == [[], []]
+    np.testing.assert_array_equal(sparse_to_dense([[], []], 8, T), silent)
+
+    full = np.tile(np.arange(8, dtype=np.float32) % 8, (2, 1))
+    lists = dense_to_sparse(full, T)
+    assert all(len(row) == 8 for row in lists)
+    np.testing.assert_array_equal(sparse_to_dense(lists, 8, T), full)
+
+
+def test_non_canonical_silence_normalizes():
+    # values >= t_max (and NaN) are silent; round-trip canonicalizes them
+    s = np.asarray([[2.0, 20.0, np.nan, 16.0]], np.float32)
+    lists = dense_to_sparse(s, T)
+    assert lists == [[(0, 2.0)]]
+    np.testing.assert_array_equal(
+        sparse_to_dense(lists, 4, T),
+        np.asarray([[2.0, 16.0, 16.0, 16.0]], np.float32),
+    )
+
+
+def test_sparse_to_dense_rejects_bad_lines():
+    with pytest.raises(ValueError):
+        sparse_to_dense([[(9, 1.0)]], 8, T)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_exp=st.integers(2, 6),
+    c=st.integers(1, 8),
+    theta=st.integers(1, 20),
+    k_clip=st.sampled_from([None, 1, 2, 4]),
+    density_pct=st.integers(0, 100),
+    seed=st.integers(0, 2**31),
+)
+def test_sparse_ref_matches_dense_ref_hypothesis(n_exp, c, theta, k_clip, density_pct, seed):
+    n = 1 << n_exp
+    rng = np.random.default_rng(seed)
+    s = random_dense(rng, 8, n, density_pct / 100.0)
+    w = rng.integers(0, 8, size=(c, n)).astype(np.float32)
+    want = rnl_column_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(float(theta)), T, k_clip)
+    got = rnl_column_sparse_ref(dense_to_sparse(s, T), n, w, float(theta), T, k_clip)
+    np.testing.assert_array_equal(got, np.asarray(want))

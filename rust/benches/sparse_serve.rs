@@ -1,0 +1,107 @@
+//! Sparse-volley serving bench: dense sweep vs spiking-lines-only kernel
+//! at biological line activity, plus the end-to-end batcher path driven
+//! with sparse volleys — the speedup EXPERIMENTS.md §Serving records.
+//!
+//! Run: `cargo bench --bench sparse_serve`
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::coordinator::pool::par_map;
+use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
+use catwalk::rng::Xoshiro256;
+use catwalk::runtime::native::{rnl_forward, rnl_forward_auto, rnl_forward_sparse};
+use catwalk::runtime::Tensor;
+use catwalk::volley::SpikeVolley;
+use std::sync::Arc;
+
+const T_MAX: usize = 16;
+
+fn random_batch(rng: &mut Xoshiro256, b: usize, n: usize, density: f64) -> Tensor {
+    let data: Vec<f32> = (0..b * n)
+        .map(|_| {
+            if rng.gen_bool(density) {
+                rng.gen_range(8) as f32
+            } else {
+                T_MAX as f32
+            }
+        })
+        .collect();
+    Tensor::new(vec![b, n], data).unwrap()
+}
+
+fn main() {
+    bench_header("sparse spike-volley serving");
+    let (b, c, n) = (64, 16, 64);
+    let mut rng = Xoshiro256::new(5);
+    let weights: Vec<f32> = (0..c * n).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
+    let wt = Tensor::new(vec![c, n], weights).unwrap();
+    let theta = 8.0;
+
+    // kernel-level: dense sweep vs sparse evaluation across densities
+    for density in [0.05, 0.10, 0.25, 0.50] {
+        let spikes = random_batch(&mut rng, b, n, density);
+        let dense = bench(
+            &format!("rnl_forward (dense)    density={density:.2}"),
+            3,
+            30,
+            || rnl_forward(&spikes, &wt, theta, T_MAX, Some(2.0)).data[0],
+        );
+        let sparse = bench(
+            &format!("rnl_forward_sparse     density={density:.2}"),
+            3,
+            30,
+            || rnl_forward_sparse(&spikes, &wt, theta, T_MAX, Some(2.0)).data[0],
+        );
+        let auto = bench(
+            &format!("rnl_forward_auto       density={density:.2}"),
+            3,
+            30,
+            || rnl_forward_auto(&spikes, &wt, theta, T_MAX, Some(2.0)).data[0],
+        );
+        println!("{}", dense.report());
+        println!("{}", sparse.report());
+        println!("{}", auto.report());
+        println!(
+            "  -> sparse {:.2}x vs dense ({:.2} vs {:.2} Mvolley/s)",
+            dense.median().as_secs_f64() / sparse.median().as_secs_f64(),
+            sparse.throughput(b as u64) / 1e6,
+            dense.throughput(b as u64) / 1e6
+        );
+    }
+
+    // end-to-end: concurrent sparse submissions through the batcher at
+    // ~5% line activity (the paper's biological operating point)
+    let handle = TnnHandle::open("artifacts", n, theta, 7).unwrap();
+    let metrics = handle.metrics.clone();
+    let batcher = Arc::new(DynamicBatcher::start(handle, BatcherConfig::default()));
+    let threads = 8;
+    let per_thread = 200;
+    let r = bench("batcher 8x200 sparse volleys, 5% activity", 1, 5, || {
+        let done: usize = par_map(threads, (0..threads).collect::<Vec<_>>(), |tid| {
+            let mut rng = Xoshiro256::new(tid as u64 + 1);
+            for _ in 0..per_thread {
+                let spikes: Vec<(usize, f32)> = rng
+                    .sample_indices(n, 3)
+                    .into_iter()
+                    .map(|i| (i, rng.gen_range(8) as f32))
+                    .collect();
+                let v = SpikeVolley::sparse(n, spikes, T_MAX).unwrap();
+                batcher.submit(v).unwrap();
+            }
+            per_thread
+        })
+        .iter()
+        .sum();
+        done
+    });
+    println!("{}", r.report());
+    println!(
+        "  -> {:.0} volleys/s through the batcher",
+        r.throughput((threads * per_thread) as u64)
+    );
+    println!(
+        "  -> rows: sparse={} dense={} silent-skipped={}",
+        metrics.counter("rows_sparse_path"),
+        metrics.counter("rows_dense_path"),
+        metrics.counter("rows_silent_skipped")
+    );
+}

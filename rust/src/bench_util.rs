@@ -66,7 +66,12 @@ pub fn fmt_duration(d: Duration) -> String {
 
 /// Run `f` with `warmup` unmeasured and `samples` measured iterations.
 /// The closure's return value is black-boxed so the work is not DCE'd.
-pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
     for _ in 0..warmup {
         black_box(f());
     }

@@ -9,6 +9,7 @@
 
 use crate::coordinator::service::{TnnHandle, VolleyResult};
 use crate::error::{Error, Result};
+use crate::volley::SpikeVolley;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -38,7 +39,7 @@ impl Default for BatcherConfig {
 }
 
 struct Pending {
-    volley: Vec<f32>,
+    volley: SpikeVolley,
     enqueued: Instant,
     reply: SyncSender<Result<VolleyResult>>,
 }
@@ -48,13 +49,14 @@ struct Queue {
     closed: bool,
 }
 
-/// The batcher front-end; `Clone` to share across client threads.
+/// The batcher front-end; share it across client threads behind an
+/// `Arc` (see [`DynamicBatcher::shutdown`]).
 pub struct DynamicBatcher {
     service: TnnHandle,
     cfg: BatcherConfig,
     queue: Arc<(Mutex<Queue>, Condvar)>,
     stop: Arc<AtomicBool>,
-    worker: Option<JoinHandle<()>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl DynamicBatcher {
@@ -82,7 +84,7 @@ impl DynamicBatcher {
             cfg,
             queue,
             stop,
-            worker: Some(worker),
+            worker: Mutex::new(Some(worker)),
         }
     }
 
@@ -94,8 +96,10 @@ impl DynamicBatcher {
         self.cfg
     }
 
-    /// Submit one volley and block for its result.
-    pub fn submit(&self, volley: Vec<f32>) -> Result<VolleyResult> {
+    /// Submit one volley (dense `Vec<f32>` or sparse [`SpikeVolley`])
+    /// and block for its result.
+    pub fn submit(&self, volley: impl Into<SpikeVolley>) -> Result<VolleyResult> {
+        let volley = volley.into();
         let (tx, rx): (_, Receiver<Result<VolleyResult>>) = sync_channel(1);
         {
             let (lock, cv) = &*self.queue;
@@ -103,24 +107,32 @@ impl DynamicBatcher {
             if q.closed {
                 return Err(Error::Coordinator("batcher is shut down".into()));
             }
+            self.service.metrics.incr("requests", 1);
+            self.service.metrics.incr(
+                if volley.is_sparse() {
+                    "requests_sparse"
+                } else {
+                    "requests_dense"
+                },
+                1,
+            );
             q.pending.push_back(Pending {
                 volley,
                 enqueued: Instant::now(),
                 reply: tx,
             });
-            self.service.metrics.incr("requests", 1);
             cv.notify_one();
         }
         rx.recv()
             .map_err(|_| Error::Coordinator("batcher dropped request".into()))?
     }
 
-    /// Graceful shutdown: flush remaining requests, then join the worker.
-    pub fn shutdown(mut self) {
-        self.do_shutdown();
-    }
-
-    fn do_shutdown(&mut self) {
+    /// Graceful shutdown: close the queue (new submissions are
+    /// rejected), flush the requests already enqueued, then join the
+    /// worker. Idempotent, and callable through a shared reference so an
+    /// `Arc`-shared batcher can be drained while clients still hold
+    /// clones.
+    pub fn shutdown(&self) {
         {
             let (lock, cv) = &*self.queue;
             let mut q = lock.lock().unwrap();
@@ -128,7 +140,7 @@ impl DynamicBatcher {
             cv.notify_all();
         }
         self.stop.store(true, Ordering::Release);
-        if let Some(w) = self.worker.take() {
+        if let Some(w) = self.worker.lock().unwrap().take() {
             let _ = w.join();
         }
     }
@@ -136,9 +148,7 @@ impl DynamicBatcher {
 
 impl Drop for DynamicBatcher {
     fn drop(&mut self) {
-        if self.worker.is_some() {
-            self.do_shutdown();
-        }
+        self.shutdown();
     }
 }
 
@@ -158,14 +168,18 @@ fn batch_loop(
                     break;
                 }
                 if !q.pending.is_empty() {
+                    // A closing queue flushes immediately: nothing new can
+                    // join the batch, so waiting out the flush timer only
+                    // delays shutdown.
+                    if q.closed {
+                        break;
+                    }
                     let oldest = q.pending.front().unwrap().enqueued;
                     let waited = oldest.elapsed();
                     if waited >= cfg.flush_after {
                         break;
                     }
-                    let (guard, _timeout) = cv
-                        .wait_timeout(q, cfg.flush_after - waited)
-                        .unwrap();
+                    let (guard, _timeout) = cv.wait_timeout(q, cfg.flush_after - waited).unwrap();
                     q = guard;
                     continue;
                 }
@@ -185,10 +199,15 @@ fn batch_loop(
             continue;
         }
         service.metrics.incr("batches", 1);
-        service
-            .metrics
-            .incr("batched_requests", batch.len() as u64);
-        let volleys: Vec<Vec<f32>> = batch.iter().map(|p| p.volley.clone()).collect();
+        service.metrics.incr("batched_requests", batch.len() as u64);
+        // Move the payloads into the execution — no per-volley clone;
+        // replies stay index-aligned with the results.
+        let mut volleys = Vec::with_capacity(batch.len());
+        let mut waiters = Vec::with_capacity(batch.len());
+        for p in batch {
+            volleys.push(p.volley);
+            waiters.push((p.enqueued, p.reply));
+        }
         let t0 = Instant::now();
         let result = if cfg.learn {
             service.learn(volleys)
@@ -198,17 +217,15 @@ fn batch_loop(
         service.metrics.record("batch_exec", t0.elapsed());
         match result {
             Ok(results) => {
-                for (p, r) in batch.into_iter().zip(results) {
-                    service.metrics.record("request_latency", p.enqueued.elapsed());
-                    let _ = p.reply.send(Ok(r));
+                for ((enqueued, reply), r) in waiters.into_iter().zip(results) {
+                    service.metrics.record("request_latency", enqueued.elapsed());
+                    let _ = reply.send(Ok(r));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
-                for p in batch {
-                    let _ = p
-                        .reply
-                        .send(Err(Error::Coordinator(format!("batch failed: {msg}"))));
+                for (_, reply) in waiters {
+                    let _ = reply.send(Err(Error::Coordinator(format!("batch failed: {msg}"))));
                 }
             }
         }

@@ -10,9 +10,11 @@
 //! 2. **TNN serving** — a vLLM-style front-end: [`TnnHandle`] owns the
 //!    backend executables (native interpreter by default, PJRT under
 //!    `--features xla`) and the column weight state; [`DynamicBatcher`]
-//!    groups concurrent volley requests into fixed-batch executions
-//!    (the column kernels run at B = 64) with a flush timeout, and
-//!    [`metrics`] records queue/latency/throughput statistics.
+//!    groups concurrent volley requests (dense or sparse
+//!    [`crate::volley::SpikeVolley`]s, mixed freely) into fixed-batch
+//!    executions (the column kernels run at B = 64) with a flush
+//!    timeout, and [`metrics`] records queue/latency/throughput and
+//!    volley-sparsity statistics.
 //!
 //! Tokio is not available offline; the pool + channel machinery here is
 //! deliberately small and fully tested (see DESIGN.md §5).

@@ -14,7 +14,9 @@
 use crate::coordinator::metrics::Metrics;
 use crate::error::{Error, Result};
 use crate::rng::Xoshiro256;
+use crate::runtime::native::{row_path, RowPath};
 use crate::runtime::{BackendKind, Entry, Executable, Manifest, Runtime, Tensor};
+use crate::volley::SpikeVolley;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
@@ -79,7 +81,7 @@ impl TnnService {
         })
     }
 
-    fn pack(&self, volleys: &[Vec<f32>]) -> Result<Tensor> {
+    fn pack(&self, volleys: &[SpikeVolley]) -> Result<Tensor> {
         if volleys.len() > self.b {
             return Err(Error::Coordinator(format!(
                 "batch {} exceeds artifact batch {}",
@@ -89,16 +91,42 @@ impl TnnService {
         }
         let mut data = vec![self.t_max as f32; self.b * self.n];
         for (r, v) in volleys.iter().enumerate() {
-            if v.len() != self.n {
+            if v.n() != self.n {
                 return Err(Error::Coordinator(format!(
                     "volley width {} != n {}",
-                    v.len(),
+                    v.n(),
                     self.n
                 )));
             }
-            data[r * self.n..(r + 1) * self.n].copy_from_slice(v);
+            v.fill_row(&mut data[r * self.n..(r + 1) * self.n]);
         }
         Tensor::new(vec![self.b, self.n], data)
+    }
+
+    /// Per-batch sparsity accounting, surfaced through `STATS`: line
+    /// activity always; plus, on the native backend, which evaluation
+    /// path each row takes — decided by the kernel's own
+    /// [`row_path`] so the counters cannot drift from what it executes.
+    fn record_sparsity(&self, volleys: &[SpikeVolley]) {
+        let mut active = 0u64;
+        let (mut silent, mut sparse, mut dense) = (0u64, 0u64, 0u64);
+        for v in volleys {
+            let st = v.stats(self.t_max);
+            active += st.active as u64;
+            match row_path(st.active, self.n, self.theta) {
+                RowPath::SilentSkip => silent += 1,
+                RowPath::Sparse => sparse += 1,
+                RowPath::Dense => dense += 1,
+            }
+        }
+        self.metrics.incr("lines_total", (volleys.len() * self.n) as u64);
+        self.metrics.incr("lines_active", active);
+        // only the native interpreter has a sparse path to report on
+        if self.backend == "native" {
+            self.metrics.incr("rows_silent_skipped", silent);
+            self.metrics.incr("rows_sparse_path", sparse);
+            self.metrics.incr("rows_dense_path", dense);
+        }
     }
 
     fn unpack(&self, times: &Tensor, mask: &Tensor, rows: usize) -> Vec<VolleyResult> {
@@ -111,9 +139,10 @@ impl TnnService {
             .collect()
     }
 
-    fn infer(&self, volleys: &[Vec<f32>]) -> Result<Vec<VolleyResult>> {
+    fn infer(&self, volleys: &[SpikeVolley]) -> Result<Vec<VolleyResult>> {
         let t0 = Instant::now();
         let spikes = self.pack(volleys)?;
+        self.record_sparsity(volleys);
         let out = self
             .forward
             .run(&[spikes, self.weights.clone(), Tensor::scalar(self.theta)])?;
@@ -123,9 +152,10 @@ impl TnnService {
         Ok(res)
     }
 
-    fn learn(&mut self, volleys: &[Vec<f32>]) -> Result<Vec<VolleyResult>> {
+    fn learn(&mut self, volleys: &[SpikeVolley]) -> Result<Vec<VolleyResult>> {
         let t0 = Instant::now();
         let spikes = self.pack(volleys)?;
+        self.record_sparsity(volleys);
         let out = self.train.run(&[
             self.weights.clone(),
             spikes,
@@ -140,8 +170,8 @@ impl TnnService {
 }
 
 enum EngineMsg {
-    Infer(Vec<Vec<f32>>, SyncSender<Result<Vec<VolleyResult>>>),
-    Learn(Vec<Vec<f32>>, SyncSender<Result<Vec<VolleyResult>>>),
+    Infer(Vec<SpikeVolley>, SyncSender<Result<Vec<VolleyResult>>>),
+    Learn(Vec<SpikeVolley>, SyncSender<Result<Vec<VolleyResult>>>),
     GetWeights(SyncSender<Tensor>),
     SetWeights(Tensor, SyncSender<Result<()>>),
     Shutdown,
@@ -267,13 +297,17 @@ impl TnnHandle {
             .map_err(|_| Error::Coordinator("engine dropped request".into()))
     }
 
-    /// Inference for up to `b` volleys (one PJRT execution).
-    pub fn infer(&self, volleys: Vec<Vec<f32>>) -> Result<Vec<VolleyResult>> {
+    /// Inference for up to `b` volleys (one backend execution). Accepts
+    /// anything convertible to [`SpikeVolley`] — dense `Vec<f32>` rows
+    /// and sparse volleys mix freely within one batch.
+    pub fn infer<V: Into<SpikeVolley>>(&self, volleys: Vec<V>) -> Result<Vec<VolleyResult>> {
+        let volleys: Vec<SpikeVolley> = volleys.into_iter().map(Into::into).collect();
         self.call(|tx| EngineMsg::Infer(volleys, tx))?
     }
 
     /// One online-learning step over up to `b` volleys; updates weights.
-    pub fn learn(&self, volleys: Vec<Vec<f32>>) -> Result<Vec<VolleyResult>> {
+    pub fn learn<V: Into<SpikeVolley>>(&self, volleys: Vec<V>) -> Result<Vec<VolleyResult>> {
+        let volleys: Vec<SpikeVolley> = volleys.into_iter().map(Into::into).collect();
         self.call(|tx| EngineMsg::Learn(volleys, tx))?
     }
 
@@ -332,6 +366,50 @@ mod tests {
             Err(e) => assert!(e.to_string().contains("no forward artifact"), "{e}"),
             Ok(_) => panic!("expected failure"),
         }
+    }
+
+    /// Sparse volleys produce exactly the same results as their dense
+    /// twins through the full engine path, and the sparsity counters
+    /// surface in the metrics registry.
+    #[test]
+    fn sparse_and_dense_volleys_agree_through_engine() {
+        if !native_env() {
+            return;
+        }
+        let handle = TnnHandle::open("/no-such-dir", 16, 6.0, 5).unwrap();
+        let mut rng = Xoshiro256::new(123);
+        let volleys: Vec<Vec<f32>> = (0..24)
+            .map(|_| {
+                (0..16)
+                    .map(|_| {
+                        if rng.gen_bool(0.1) {
+                            rng.gen_range(8) as f32
+                        } else {
+                            16.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let dense_res = handle.infer(volleys.clone()).unwrap();
+        let sparse: Vec<SpikeVolley> = volleys
+            .iter()
+            .map(|v| SpikeVolley::dense(v.clone()).to_sparse(handle.t_max))
+            .collect();
+        assert!(sparse.iter().all(|v| v.is_sparse()));
+        let sparse_res = handle.infer(sparse).unwrap();
+        for (d, s) in dense_res.iter().zip(&sparse_res) {
+            assert_eq!(d.times, s.times);
+            assert_eq!(d.winner, s.winner);
+        }
+        assert_eq!(handle.metrics.counter("lines_total"), 2 * 24 * 16);
+        assert!(handle.metrics.counter("lines_active") > 0);
+        assert!(
+            handle.metrics.counter("rows_sparse_path")
+                + handle.metrics.counter("rows_dense_path")
+                + handle.metrics.counter("rows_silent_skipped")
+                == 2 * 24
+        );
     }
 
     #[test]

@@ -33,6 +33,10 @@ pub enum Error {
     /// Serving front-end failure.
     Server(String),
 
+    /// Malformed spike volley (bad line index, duplicate line, codec
+    /// grammar violation, ...).
+    Volley(String),
+
     /// CLI usage error.
     Usage(String),
 
@@ -52,6 +56,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Server(m) => write!(f, "server error: {m}"),
+            Error::Volley(m) => write!(f, "volley error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),

@@ -310,7 +310,13 @@ pub fn headline_ratios(stim: &StimulusConfig) -> Result<Table> {
 pub fn merge_flavor_ablation() -> Result<Table> {
     let mut t = Table::new(
         "Ablation — selector construction (gates, k = 2)",
-        &["n", "odd-even tournament", "bitonic tournament", "pruned odd-even sorter", "pruned bitonic sorter"],
+        &[
+            "n",
+            "odd-even tournament",
+            "bitonic tournament",
+            "pruned odd-even sorter",
+            "pruned bitonic sorter",
+        ],
     );
     for n in [16usize, 32, 64] {
         let tour_oe = TopkSelector::prune(&tournament_network(n, 2, MergeFlavor::OddEven)?, 2)?;
@@ -413,10 +419,13 @@ mod tests {
             let comp_a = get("PC compact [7]", 5);
             assert!(cat_a < comp_a, "n={n} area");
             // leakage roughly flat (within 2x across designs)
-            let leaks: Vec<f64> = ["PC conventional", "PC compact [7]", "Sorting PC", "Top-k PC (Catwalk)"]
-                .iter()
-                .map(|l| get(l, 2))
-                .collect();
+            let designs = [
+                "PC conventional",
+                "PC compact [7]",
+                "Sorting PC",
+                "Top-k PC (Catwalk)",
+            ];
+            let leaks: Vec<f64> = designs.iter().map(|l| get(l, 2)).collect();
             let max = leaks.iter().cloned().fold(0.0f64, f64::max);
             let min = leaks.iter().cloned().fold(f64::MAX, f64::min);
             assert!(max / min < 2.2, "n={n} leakage spread {min}..{max}");

@@ -18,10 +18,11 @@
 //! 3. **The L3 coordinator** — a pluggable execution runtime
 //!    ([`runtime`]) with a pure-Rust native interpreter (default) and a
 //!    PJRT/XLA path (`--features xla`) for the AOT-compiled JAX/Pallas
-//!    artifacts, a thread-pool DSE scheduler and dynamic volley batcher
-//!    ([`coordinator`]), a TCP serving front-end ([`server`]), experiment
-//!    drivers for every figure and table in the paper ([`experiments`]),
-//!    and report renderers ([`report`]).
+//!    artifacts, first-class sparse spike volleys ([`volley`]) with a
+//!    density-aware kernel cutover, a thread-pool DSE scheduler and
+//!    dynamic volley batcher ([`coordinator`]), a TCP serving front-end
+//!    ([`server`]), experiment drivers for every figure and table in the
+//!    paper ([`experiments`]), and report renderers ([`report`]).
 //!
 //! The public API a downstream user touches first:
 //!
@@ -54,5 +55,7 @@ pub mod sim;
 pub mod sorters;
 pub mod tnn;
 pub mod topk;
+pub mod volley;
 
 pub use error::{Error, Result};
+pub use volley::SpikeVolley;

@@ -386,7 +386,12 @@ impl NetlistBuilder {
 
     /// Ripple-carry adder over little-endian buses (same width); returns
     /// (sum bits, carry out).
-    pub fn ripple_add(&mut self, a: &[NetId], b: &[NetId], cin: Option<NetId>) -> (Vec<NetId>, NetId) {
+    pub fn ripple_add(
+        &mut self,
+        a: &[NetId],
+        b: &[NetId],
+        cin: Option<NetId>,
+    ) -> (Vec<NetId>, NetId) {
         assert_eq!(a.len(), b.len());
         let mut carry = match cin {
             Some(c) => c,

@@ -260,7 +260,12 @@ mod tests {
             sim2.step(&v);
         }
         let busy = Estimator::pnr().evaluate(&nl, Some(sim2.activity()));
-        assert!(busy.dynamic_uw > quiet.dynamic_uw * 3.0, "busy={} quiet={}", busy.dynamic_uw, quiet.dynamic_uw);
+        assert!(
+            busy.dynamic_uw > quiet.dynamic_uw * 3.0,
+            "busy={} quiet={}",
+            busy.dynamic_uw,
+            quiet.dynamic_uw
+        );
         // Leakage is activity-independent.
         assert!((busy.leakage_uw - quiet.leakage_uw).abs() < 1e-12);
     }

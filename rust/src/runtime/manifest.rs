@@ -358,7 +358,11 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(JsonValue::Arr(out));
                 }
-                other => return Err(Error::Runtime(format!("JSON: array wants , or ] got {other:?}"))),
+                other => {
+                    return Err(Error::Runtime(format!(
+                        "JSON: array wants , or ] got {other:?}"
+                    )))
+                }
             }
         }
     }
@@ -387,7 +391,11 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(JsonValue::Obj(out));
                 }
-                other => return Err(Error::Runtime(format!("JSON: object wants , or }} got {other:?}"))),
+                other => {
+                    return Err(Error::Runtime(format!(
+                        "JSON: object wants , or }} got {other:?}"
+                    )))
+                }
             }
         }
     }

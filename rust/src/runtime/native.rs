@@ -4,10 +4,14 @@
 //! Ports `python/compile/kernels/ref.py` (the pure-jnp oracles the Pallas
 //! kernels are verified against) operation for operation:
 //!
-//! * `"forward"` → [`rnl_forward`] + [`wta_mask`] — batched SRM0-RNL
+//! * `"forward"` → [`rnl_forward_auto`] + [`wta_mask`] — batched SRM0-RNL
 //!   first-crossing times with the Catwalk k-clip (k from the manifest,
 //!   mirroring `aot.py` which lowers `column_forward` with `k_clip = K`),
-//!   then the 1-WTA winner mask.
+//!   then the 1-WTA winner mask. Rows at or below
+//!   [`SPARSE_DENSITY_CUTOVER`] line activity are evaluated by
+//!   [`rnl_forward_sparse`]'s spiking-lines-only loop — the software
+//!   analogue of the Catwalk relocation — bit-identical to the dense
+//!   sweep [`rnl_forward`].
 //! * `"train"` → forward + [`stdp_update`] — the winner-gated
 //!   expected-value STDP step, batch-averaged exactly like
 //!   `model.py::stdp_update` (learning rates from
@@ -62,7 +66,7 @@ struct ForwardKernel {
 
 impl Kernel for ForwardKernel {
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let times = rnl_forward(
+        let times = rnl_forward_auto(
             &inputs[0],
             &inputs[1],
             inputs[2].data[0],
@@ -83,7 +87,7 @@ struct TrainKernel {
 impl Kernel for TrainKernel {
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let (weights, spikes, theta) = (&inputs[0], &inputs[1], inputs[2].data[0]);
-        let times = rnl_forward(spikes, weights, theta, self.t_max, self.k_clip);
+        let times = rnl_forward_auto(spikes, weights, theta, self.t_max, self.k_clip);
         let mask = wta_mask(&times, self.t_max);
         let new_w = stdp_update(weights, spikes, &times, &mask, self.t_max, &self.params);
         Ok(vec![new_w, times, mask])
@@ -130,26 +134,182 @@ pub fn rnl_forward(
         }
         for ci in 0..c {
             let w = &weights.data[ci * n..(ci + 1) * n];
-            let mut pot = 0f32;
-            let mut time = t_max as f32;
-            for t in 0..t_max {
-                let tf = t as f32;
-                let mut count = 0f32;
-                for (&s, &wi) in volley.iter().zip(w) {
-                    if tf >= s && tf < s + wi {
-                        count += 1.0;
-                    }
-                }
-                if let Some(k) = k_clip {
-                    count = count.min(k);
-                }
-                pot += count;
-                if pot >= theta {
-                    time = tf;
-                    break;
+            out.data[bi * c + ci] = first_crossing_dense(volley, w, theta, t_max, k_clip);
+        }
+    }
+    out
+}
+
+/// Line density at or below which the sparse row evaluation beats the
+/// dense sweep (per-row decision in [`rnl_forward_auto`]). At the
+/// biological ~5–20% activity the paper targets, volleys fall well under
+/// this; a dense request (or an adversarially busy one) falls back to the
+/// dense sweep.
+pub const SPARSE_DENSITY_CUTOVER: f32 = 0.25;
+
+/// Which evaluation [`rnl_forward_auto`] applies to one batch row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowPath {
+    /// No spiking line and `theta > 0`: the row can never cross, skip it.
+    SilentSkip,
+    /// At or below [`SPARSE_DENSITY_CUTOVER`]: iterate spiking lines only.
+    Sparse,
+    /// Busier than the cutover: full dense sweep.
+    Dense,
+}
+
+/// The per-row path decision, shared with the serving metrics
+/// (`coordinator::service`) so `STATS` counters cannot drift from what
+/// the kernel actually executes.
+pub fn row_path(active: usize, n: usize, theta: f32) -> RowPath {
+    if active == 0 && theta > 0.0 {
+        RowPath::SilentSkip
+    } else if (active as f32) <= SPARSE_DENSITY_CUTOVER * n as f32 {
+        RowPath::Sparse
+    } else {
+        RowPath::Dense
+    }
+}
+
+/// One column's first-crossing time over a dense volley row — the inner
+/// loop of [`rnl_forward`], kept as the bit-exact reference the sparse
+/// evaluation is conformance-gated against.
+#[inline]
+fn first_crossing_dense(
+    volley: &[f32],
+    w: &[f32],
+    theta: f32,
+    t_max: usize,
+    k_clip: Option<f32>,
+) -> f32 {
+    let mut pot = 0f32;
+    for t in 0..t_max {
+        let tf = t as f32;
+        let mut count = 0f32;
+        for (&s, &wi) in volley.iter().zip(w) {
+            if tf >= s && tf < s + wi {
+                count += 1.0;
+            }
+        }
+        if let Some(k) = k_clip {
+            count = count.min(k);
+        }
+        pot += count;
+        if pot >= theta {
+            return tf;
+        }
+    }
+    t_max as f32
+}
+
+/// One column's first-crossing time iterating only the spiking lines.
+///
+/// Bit-identical to [`first_crossing_dense`]: the per-cycle count is a
+/// sum of ones (exact in f32 far beyond any n here) over exactly the
+/// lines whose ramp is active, so count, clip, and running potential take
+/// identical values in either evaluation order.
+#[inline]
+fn first_crossing_sparse(
+    active: &[(usize, f32)],
+    w: &[f32],
+    theta: f32,
+    t_max: usize,
+    k_clip: Option<f32>,
+) -> f32 {
+    let mut pot = 0f32;
+    for t in 0..t_max {
+        let tf = t as f32;
+        let mut count = 0f32;
+        for &(line, s) in active {
+            if tf >= s && tf < s + w[line] {
+                count += 1.0;
+            }
+        }
+        if let Some(k) = k_clip {
+            count = count.min(k);
+        }
+        pot += count;
+        if pot >= theta {
+            return tf;
+        }
+    }
+    t_max as f32
+}
+
+/// Spiking lines of one dense volley row, sorted by line (silent = `>=
+/// t_max` or NaN, matching [`crate::volley::SpikeVolley`] semantics).
+fn row_spike_list(volley: &[f32], t_max: usize) -> Vec<(usize, f32)> {
+    volley
+        .iter()
+        .enumerate()
+        .filter(|&(_, &s)| s < t_max as f32)
+        .map(|(i, &s)| (i, s))
+        .collect()
+}
+
+/// Sparsity-aware RNL forward: every row is evaluated by iterating only
+/// its spiking lines — O(C · t_max · nnz) instead of O(C · t_max · n).
+/// Output is bit-identical to [`rnl_forward`] (see
+/// `rust/tests/runtime_roundtrip.rs` for the conformance gate).
+pub fn rnl_forward_sparse(
+    spikes: &Tensor,
+    weights: &Tensor,
+    theta: f32,
+    t_max: usize,
+    k_clip: Option<f32>,
+) -> Tensor {
+    let (b, n) = (spikes.shape[0], spikes.shape[1]);
+    let c = weights.shape[0];
+    let mut out = Tensor::zeros(vec![b, c]);
+    for bi in 0..b {
+        let active = row_spike_list(&spikes.data[bi * n..(bi + 1) * n], t_max);
+        for ci in 0..c {
+            let w = &weights.data[ci * n..(ci + 1) * n];
+            out.data[bi * c + ci] = first_crossing_sparse(&active, w, theta, t_max, k_clip);
+        }
+    }
+    out
+}
+
+/// RNL forward with an automatic per-row density cutover: silent rows are
+/// skipped outright, rows at or below [`SPARSE_DENSITY_CUTOVER`] take the
+/// sparse evaluation, busier rows take the dense sweep. This is what the
+/// native forward/train kernels execute; all three paths are bit-exact
+/// equals of each other.
+pub fn rnl_forward_auto(
+    spikes: &Tensor,
+    weights: &Tensor,
+    theta: f32,
+    t_max: usize,
+    k_clip: Option<f32>,
+) -> Tensor {
+    let (b, n) = (spikes.shape[0], spikes.shape[1]);
+    let c = weights.shape[0];
+    let mut out = Tensor::zeros(vec![b, c]);
+    for bi in 0..b {
+        let volley = &spikes.data[bi * n..(bi + 1) * n];
+        let active_count = volley.iter().filter(|&&s| s < t_max as f32).count();
+        match row_path(active_count, n, theta) {
+            RowPath::SilentSkip => {
+                for ci in 0..c {
+                    out.data[bi * c + ci] = t_max as f32;
                 }
             }
-            out.data[bi * c + ci] = time;
+            RowPath::Sparse => {
+                // the spike list is only materialized on rows that use it
+                let active = row_spike_list(volley, t_max);
+                for ci in 0..c {
+                    let w = &weights.data[ci * n..(ci + 1) * n];
+                    out.data[bi * c + ci] =
+                        first_crossing_sparse(&active, w, theta, t_max, k_clip);
+                }
+            }
+            RowPath::Dense => {
+                for ci in 0..c {
+                    let w = &weights.data[ci * n..(ci + 1) * n];
+                    out.data[bi * c + ci] = first_crossing_dense(volley, w, theta, t_max, k_clip);
+                }
+            }
         }
     }
     out
@@ -347,6 +507,39 @@ mod tests {
             }
             let winner = (0..4).find(|&ci| mask.at2(0, ci) > 0.5);
             assert_eq!(winner, expect.winner);
+        }
+    }
+
+    /// The sparse and auto evaluations are bit-identical to the dense
+    /// sweep across the whole density range, fractional spike times and
+    /// weights included, clipped and unclipped.
+    #[test]
+    fn sparse_and_auto_match_dense_bitwise() {
+        let mut rng = Xoshiro256::new(77);
+        for &density in &[0.0, 0.05, 0.1, 0.25, 0.5, 1.0] {
+            for _ in 0..20 {
+                let (b, c, n) = (6, 5, 32);
+                let spikes: Vec<f32> = (0..b * n)
+                    .map(|_| {
+                        if rng.gen_bool(density) {
+                            (rng.gen_f64() * 8.0) as f32
+                        } else {
+                            TM as f32
+                        }
+                    })
+                    .collect();
+                let weights: Vec<f32> = (0..c * n).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
+                let theta = 1.0 + rng.gen_range(10) as f32;
+                let st = Tensor::new(vec![b, n], spikes).unwrap();
+                let wt = Tensor::new(vec![c, n], weights).unwrap();
+                for k_clip in [None, Some(2.0)] {
+                    let dense = rnl_forward(&st, &wt, theta, TM, k_clip);
+                    let sparse = rnl_forward_sparse(&st, &wt, theta, TM, k_clip);
+                    let auto = rnl_forward_auto(&st, &wt, theta, TM, k_clip);
+                    assert_eq!(dense.data, sparse.data, "density {density} clip {k_clip:?}");
+                    assert_eq!(dense.data, auto.data, "density {density} clip {k_clip:?}");
+                }
+            }
         }
     }
 

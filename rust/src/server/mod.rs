@@ -7,12 +7,22 @@
 //! ```text
 //! -> INFER 1,3,16,16,0,...        (n comma-separated spike times)
 //! <- OK winner=2 times=4,16,2,...
+//! -> SPARSE 0:1,4:3               (spiking lines only, line:time; "-" = all silent)
+//! <- OK winner=2 spikes=0:4,2:2   (columns that fired, column:time)
 //! -> LEARN 1,3,16,...
 //! <- OK winner=0 times=...
+//! -> SLEARN 0:1,4:3               (sparse-encoded LEARN)
+//! <- OK winner=0 spikes=...
 //! -> STATS
 //! <- ... metrics block ... (terminated by a blank line)
 //! -> QUIT
 //! ```
+//!
+//! `SPARSE`/`SLEARN` carry only the spiking lines (volley grammar in
+//! [`crate::volley`]) — at the ~5–20% line activity of real TNN volleys
+//! the payload is a fraction of the dense encoding, and the reply lists
+//! only the columns that fired. Both encodings hit the same batcher and
+//! kernels and may be mixed freely on one connection.
 //!
 //! One thread per connection (bounded by the listener accept loop);
 //! batching happens in the shared [`DynamicBatcher`], so concurrent
@@ -20,6 +30,7 @@
 
 use crate::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
 use crate::error::{Error, Result};
+use crate::volley::{self, SpikeVolley};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -103,7 +114,7 @@ fn handle_conn(
         if stop.load(Ordering::Acquire) {
             return Ok(());
         }
-        let reply = match parse_command(line, service.n) {
+        let reply = match parse_command(line, service.n, service.t_max) {
             Ok(Command::Quit) => {
                 writeln!(out, "BYE")?;
                 return Ok(());
@@ -111,8 +122,8 @@ fn handle_conn(
             Ok(Command::Stats) => {
                 format!("{}\n", service.metrics.render())
             }
-            Ok(Command::Infer(v)) => respond(infer.submit(v)),
-            Ok(Command::Learn(v)) => respond(learn.submit(v)),
+            Ok(Command::Infer(v, wire)) => respond(infer.submit(v), wire, service.t_max),
+            Ok(Command::Learn(v, wire)) => respond(learn.submit(v), wire, service.t_max),
             Err(e) => format!("ERR {e}\n"),
         };
         out.write_all(reply.as_bytes())?;
@@ -120,28 +131,42 @@ fn handle_conn(
     }
 }
 
-fn respond(result: Result<crate::coordinator::VolleyResult>) -> String {
+/// Which encoding a request arrived in — replies mirror it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Wire {
+    Dense,
+    Sparse,
+}
+
+fn respond(result: Result<crate::coordinator::VolleyResult>, wire: Wire, t_max: usize) -> String {
     match result {
         Ok(r) => {
-            let times: Vec<String> = r.times.iter().map(|t| format!("{t}")).collect();
-            format!(
-                "OK winner={} times={}\n",
-                r.winner.map(|w| w as i64).unwrap_or(-1),
-                times.join(",")
-            )
+            let winner = r.winner.map(|w| w as i64).unwrap_or(-1);
+            match wire {
+                Wire::Dense => {
+                    let times: Vec<String> = r.times.iter().map(|t| format!("{t}")).collect();
+                    format!("OK winner={winner} times={}\n", times.join(","))
+                }
+                Wire::Sparse => {
+                    // the volley codec owns the "which columns fired"
+                    // filter (silence = >= t_max or NaN, one definition)
+                    let spikes = SpikeVolley::dense(r.times).encode_sparse(t_max);
+                    format!("OK winner={winner} spikes={spikes}\n")
+                }
+            }
         }
         Err(e) => format!("ERR {e}\n"),
     }
 }
 
 enum Command {
-    Infer(Vec<f32>),
-    Learn(Vec<f32>),
+    Infer(SpikeVolley, Wire),
+    Learn(SpikeVolley, Wire),
     Stats,
     Quit,
 }
 
-fn parse_command(line: &str, n: usize) -> Result<Command> {
+fn parse_command(line: &str, n: usize, t_max: usize) -> Result<Command> {
     let mut parts = line.splitn(2, ' ');
     let verb = parts.next().unwrap_or("");
     match verb {
@@ -166,9 +191,19 @@ fn parse_command(line: &str, n: usize) -> Result<Command> {
                 )));
             }
             if verb == "INFER" {
-                Ok(Command::Infer(volley))
+                Ok(Command::Infer(SpikeVolley::dense(volley), Wire::Dense))
             } else {
-                Ok(Command::Learn(volley))
+                Ok(Command::Learn(SpikeVolley::dense(volley), Wire::Dense))
+            }
+        }
+        // Sparse encodings: payload lists only the spiking lines; an
+        // absent payload (bare `SPARSE`) is the all-silent volley.
+        "SPARSE" | "SLEARN" => {
+            let volley = SpikeVolley::parse_sparse(parts.next().unwrap_or("-"), n, t_max)?;
+            if verb == "SPARSE" {
+                Ok(Command::Infer(volley, Wire::Sparse))
+            } else {
+                Ok(Command::Learn(volley, Wire::Sparse))
             }
         }
         other => Err(Error::Server(format!("unknown verb `{other}`"))),
@@ -210,6 +245,20 @@ impl Client {
         parse_ok(&reply)
     }
 
+    /// Sparse-encoded inference: send only the spiking `(line, time)`
+    /// pairs, receive the `(column, time)` pairs of the columns that
+    /// fired.
+    pub fn infer_sparse(&mut self, spikes: &[(usize, f32)]) -> Result<(i64, Vec<(usize, f32)>)> {
+        let reply = self.roundtrip(&format!("SPARSE {}", volley::encode_pairs(spikes)))?;
+        parse_ok_sparse(&reply)
+    }
+
+    /// Sparse-encoded learning step (`SLEARN`).
+    pub fn learn_sparse(&mut self, spikes: &[(usize, f32)]) -> Result<(i64, Vec<(usize, f32)>)> {
+        let reply = self.roundtrip(&format!("SLEARN {}", volley::encode_pairs(spikes)))?;
+        parse_ok_sparse(&reply)
+    }
+
     pub fn quit(&mut self) -> Result<()> {
         let _ = self.roundtrip("QUIT")?;
         Ok(())
@@ -240,22 +289,70 @@ fn parse_ok(reply: &str) -> Result<(i64, Vec<f32>)> {
     Ok((winner, times))
 }
 
+fn parse_ok_sparse(reply: &str) -> Result<(i64, Vec<(usize, f32)>)> {
+    if !reply.starts_with("OK ") {
+        return Err(Error::Server(format!("server said: {reply}")));
+    }
+    let mut winner = -1i64;
+    let mut spikes = Vec::new();
+    for field in reply[3..].split(' ') {
+        if let Some(w) = field.strip_prefix("winner=") {
+            winner = w
+                .parse()
+                .map_err(|e| Error::Server(format!("bad winner: {e}")))?;
+        } else if let Some(ts) = field.strip_prefix("spikes=") {
+            spikes = volley::parse_pairs(ts)?;
+        }
+    }
+    Ok((winner, spikes))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    const TM: usize = 16;
+
     #[test]
     fn parse_commands() {
-        assert!(matches!(parse_command("QUIT", 4), Ok(Command::Quit)));
-        assert!(matches!(parse_command("STATS", 4), Ok(Command::Stats)));
-        match parse_command("INFER 1,2,3,16", 4) {
-            Ok(Command::Infer(v)) => assert_eq!(v, vec![1.0, 2.0, 3.0, 16.0]),
+        assert!(matches!(parse_command("QUIT", 4, TM), Ok(Command::Quit)));
+        assert!(matches!(parse_command("STATS", 4, TM), Ok(Command::Stats)));
+        match parse_command("INFER 1,2,3,16", 4, TM) {
+            Ok(Command::Infer(v, Wire::Dense)) => {
+                assert_eq!(v, SpikeVolley::dense(vec![1.0, 2.0, 3.0, 16.0]))
+            }
             other => panic!("{:?}", other.is_ok()),
         }
-        assert!(parse_command("INFER 1,2", 4).is_err());
-        assert!(parse_command("INFER 1,x,3,4", 4).is_err());
-        assert!(parse_command("NOPE", 4).is_err());
-        assert!(parse_command("INFER", 4).is_err());
+        assert!(parse_command("INFER 1,2", 4, TM).is_err());
+        assert!(parse_command("INFER 1,x,3,4", 4, TM).is_err());
+        assert!(parse_command("NOPE", 4, TM).is_err());
+        assert!(parse_command("INFER", 4, TM).is_err());
+    }
+
+    #[test]
+    fn parse_sparse_commands() {
+        match parse_command("SPARSE 0:1,3:2.5", 4, TM) {
+            Ok(Command::Infer(v, Wire::Sparse)) => {
+                assert_eq!(v.spike_list(TM), vec![(0, 1.0), (3, 2.5)]);
+                assert_eq!(v.n(), 4);
+            }
+            other => panic!("{:?}", other.is_ok()),
+        }
+        // bare SPARSE / explicit "-" are the all-silent volley
+        for line in ["SPARSE", "SPARSE -"] {
+            match parse_command(line, 4, TM) {
+                Ok(Command::Infer(v, Wire::Sparse)) => assert_eq!(v.stats(TM).active, 0),
+                other => panic!("{:?}", other.is_ok()),
+            }
+        }
+        assert!(matches!(
+            parse_command("SLEARN 1:0", 4, TM),
+            Ok(Command::Learn(_, Wire::Sparse))
+        ));
+        // out-of-range line and grammar violations are rejected
+        assert!(parse_command("SPARSE 9:1", 4, TM).is_err());
+        assert!(parse_command("SPARSE 0:1,0:2", 4, TM).is_err());
+        assert!(parse_command("SPARSE x", 4, TM).is_err());
     }
 
     #[test]
@@ -266,5 +363,28 @@ mod tests {
         let (w, _) = parse_ok("OK winner=-1 times=16").unwrap();
         assert_eq!(w, -1);
         assert!(parse_ok("ERR nope").is_err());
+    }
+
+    #[test]
+    fn parse_sparse_replies_roundtrip_respond() {
+        let r = crate::coordinator::VolleyResult {
+            times: vec![4.0, 16.0, 2.0],
+            winner: Some(2),
+        };
+        let reply = respond(Ok(r), Wire::Sparse, TM);
+        assert_eq!(reply, "OK winner=2 spikes=0:4,2:2\n");
+        let (w, spikes) = parse_ok_sparse(reply.trim()).unwrap();
+        assert_eq!(w, 2);
+        assert_eq!(spikes, vec![(0, 4.0), (2, 2.0)]);
+
+        let silent = crate::coordinator::VolleyResult {
+            times: vec![16.0, 16.0, 16.0],
+            winner: None,
+        };
+        let reply = respond(Ok(silent), Wire::Sparse, TM);
+        assert_eq!(reply, "OK winner=-1 spikes=-\n");
+        let (w, spikes) = parse_ok_sparse(reply.trim()).unwrap();
+        assert_eq!(w, -1);
+        assert!(spikes.is_empty());
     }
 }

@@ -54,7 +54,8 @@ pub enum SorterKind {
 }
 
 impl SorterKind {
-    pub const ALL: [SorterKind; 3] = [SorterKind::Bitonic, SorterKind::OddEven, SorterKind::Optimal];
+    pub const ALL: [SorterKind; 3] =
+        [SorterKind::Bitonic, SorterKind::OddEven, SorterKind::Optimal];
     pub fn name(self) -> &'static str {
         match self {
             SorterKind::Bitonic => "bitonic",

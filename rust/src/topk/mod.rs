@@ -100,7 +100,13 @@ pub fn tournament_network(n: usize, k: usize, flavor: MergeFlavor) -> Result<CsN
     })
 }
 
-fn tournament_rec(lo: usize, size: usize, k: usize, flavor: MergeFlavor, out: &mut Vec<Comparator>) {
+fn tournament_rec(
+    lo: usize,
+    size: usize,
+    k: usize,
+    flavor: MergeFlavor,
+    out: &mut Vec<Comparator>,
+) {
     if size == k {
         // base: fully sort the k lanes (ascending toward the top of range)
         let base = match flavor {

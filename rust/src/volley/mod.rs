@@ -1,0 +1,326 @@
+//! First-class spike volleys: dense and sparse representations plus the
+//! `SPARSE` wire codec.
+//!
+//! The paper's entire argument is that real spike volleys are *sparse* —
+//! at biological line activity (~5–20%) only a handful of the n dendrite
+//! inputs carry a spike per gamma window, which is why the Catwalk
+//! dendrite can relocate the active subset with a pruned selection
+//! network instead of counting all n lines. This module is the software
+//! analogue of that relocation: a [`SpikeVolley`] travels through the
+//! serving stack (TCP server → [`crate::coordinator::DynamicBatcher`] →
+//! [`crate::coordinator::TnnHandle`] → `runtime::native`) in whichever
+//! representation is compact, and the native kernel iterates only the
+//! spiking lines when the density is below the cutover
+//! (`runtime::native::SPARSE_DENSITY_CUTOVER`).
+//!
+//! Representations (DESIGN.md §2.1):
+//!
+//! * **Dense** — `Vec<f32>` of n spike times; a value `>= t_max` (or NaN)
+//!   means "no spike" (the temporal-code infinity of paper Fig. 2a).
+//! * **Sparse** — the input width n plus a `(line, time)` list sorted by
+//!   line index, holding only lines with `time < t_max`.
+//!
+//! Conversions are lossless on *canonical* volleys (silent lines encoded
+//! as exactly `t_max`); a non-canonical dense volley (silent line encoded
+//! as e.g. `20.0` with `t_max = 16`) canonicalizes to `t_max`, which every
+//! kernel treats identically.
+//!
+//! Wire grammar (server protocol, newline-delimited):
+//!
+//! ```text
+//! payload   := "-" | pair ("," pair)*     ; "-" = all-silent volley
+//! pair      := line ":" time              ; line: usize, time: f32
+//! request   := "SPARSE " payload | "SLEARN " payload
+//! reply     := "OK winner=" int " spikes=" payload
+//! ```
+
+use crate::error::{Error, Result};
+
+/// Per-volley sparsity statistics (the numbers the serving metrics
+/// aggregate and `STATS` surfaces).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VolleyStats {
+    /// total input lines (n)
+    pub lines: usize,
+    /// lines carrying a spike (`time < t_max`)
+    pub active: usize,
+}
+
+impl VolleyStats {
+    /// Fraction of lines carrying a spike, in `[0, 1]`.
+    pub fn density(&self) -> f32 {
+        if self.lines == 0 {
+            0.0
+        } else {
+            self.active as f32 / self.lines as f32
+        }
+    }
+}
+
+/// One input volley for an n-line TNN column, in dense or sparse form.
+///
+/// Both forms describe the same semantic object — a spike time per line,
+/// with "no spike" encoded as `>= t_max` (dense) or absence (sparse) —
+/// so every consumer accepts either and converts only when profitable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpikeVolley {
+    /// n spike times; `>= t_max` (or NaN) = silent line.
+    Dense(Vec<f32>),
+    /// Input width plus `(line, time)` pairs sorted by line index; every
+    /// retained `time` is `< t_max` and every `line` is `< n`.
+    Sparse { n: usize, spikes: Vec<(usize, f32)> },
+}
+
+impl SpikeVolley {
+    /// Dense volley from raw spike times (no validation — width is
+    /// checked where the column width is known, e.g. `TnnService::pack`).
+    pub fn dense(times: Vec<f32>) -> SpikeVolley {
+        SpikeVolley::Dense(times)
+    }
+
+    /// Sparse volley over `n` lines. Out-of-range or duplicate line
+    /// indices are an error (validated before any canonicalization, so a
+    /// malformed pair is rejected regardless of its time); the surviving
+    /// pairs are sorted by line index and entries with `time >= t_max`
+    /// (or NaN) are silent and dropped.
+    pub fn sparse(n: usize, mut spikes: Vec<(usize, f32)>, t_max: usize) -> Result<SpikeVolley> {
+        spikes.sort_unstable_by_key(|&(i, _)| i);
+        for w in spikes.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(Error::Volley(format!("duplicate line {}", w[0].0)));
+            }
+        }
+        if let Some(&(i, _)) = spikes.iter().find(|&&(i, _)| i >= n) {
+            return Err(Error::Volley(format!("line {i} out of range (n = {n})")));
+        }
+        spikes.retain(|&(_, t)| t < t_max as f32);
+        Ok(SpikeVolley::Sparse { n, spikes })
+    }
+
+    /// Input width (number of lines).
+    pub fn n(&self) -> usize {
+        match self {
+            SpikeVolley::Dense(t) => t.len(),
+            SpikeVolley::Sparse { n, .. } => *n,
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, SpikeVolley::Sparse { .. })
+    }
+
+    /// Line/activity counts for this volley.
+    pub fn stats(&self, t_max: usize) -> VolleyStats {
+        match self {
+            SpikeVolley::Dense(t) => VolleyStats {
+                lines: t.len(),
+                active: t.iter().filter(|&&s| s < t_max as f32).count(),
+            },
+            SpikeVolley::Sparse { n, spikes } => VolleyStats {
+                lines: *n,
+                active: spikes.len(),
+            },
+        }
+    }
+
+    /// Sorted `(line, time)` pairs of the spiking lines.
+    pub fn spike_list(&self, t_max: usize) -> Vec<(usize, f32)> {
+        match self {
+            SpikeVolley::Dense(t) => t
+                .iter()
+                .enumerate()
+                .filter(|&(_, &s)| s < t_max as f32)
+                .map(|(i, &s)| (i, s))
+                .collect(),
+            SpikeVolley::Sparse { spikes, .. } => spikes.clone(),
+        }
+    }
+
+    /// Canonical dense spike times: silent lines become exactly `t_max`.
+    pub fn dense_times(&self, t_max: usize) -> Vec<f32> {
+        let tm = t_max as f32;
+        match self {
+            SpikeVolley::Dense(t) => t.iter().map(|&s| if s < tm { s } else { tm }).collect(),
+            SpikeVolley::Sparse { n, spikes } => {
+                let mut out = vec![tm; *n];
+                for &(i, s) in spikes {
+                    out[i] = s;
+                }
+                out
+            }
+        }
+    }
+
+    /// This volley in canonical sparse form.
+    pub fn to_sparse(&self, t_max: usize) -> SpikeVolley {
+        SpikeVolley::Sparse {
+            n: self.n(),
+            spikes: self.spike_list(t_max),
+        }
+    }
+
+    /// This volley in canonical dense form.
+    pub fn to_dense(&self, t_max: usize) -> SpikeVolley {
+        SpikeVolley::Dense(self.dense_times(t_max))
+    }
+
+    /// Write this volley into a dense row already pre-filled with
+    /// `t_max` (the batch-packing hot path: sparse volleys touch only
+    /// their spiking lines, dense volleys copy through unchanged).
+    pub fn fill_row(&self, row: &mut [f32]) {
+        match self {
+            SpikeVolley::Dense(t) => row.copy_from_slice(t),
+            SpikeVolley::Sparse { spikes, .. } => {
+                for &(i, s) in spikes {
+                    row[i] = s;
+                }
+            }
+        }
+    }
+
+    /// Encode the spiking lines as a `SPARSE` wire payload.
+    pub fn encode_sparse(&self, t_max: usize) -> String {
+        encode_pairs(&self.spike_list(t_max))
+    }
+
+    /// Parse a `SPARSE` wire payload into a sparse volley over `n` lines.
+    pub fn parse_sparse(payload: &str, n: usize, t_max: usize) -> Result<SpikeVolley> {
+        SpikeVolley::sparse(n, parse_pairs(payload)?, t_max)
+    }
+}
+
+impl From<Vec<f32>> for SpikeVolley {
+    fn from(times: Vec<f32>) -> SpikeVolley {
+        SpikeVolley::Dense(times)
+    }
+}
+
+/// Encode `(index, time)` pairs as the wire payload `i:t,i:t,...`
+/// (`"-"` when empty, so an all-silent volley still has a payload token).
+pub fn encode_pairs(pairs: &[(usize, f32)]) -> String {
+    if pairs.is_empty() {
+        return "-".into();
+    }
+    let items: Vec<String> = pairs.iter().map(|(i, t)| format!("{i}:{t}")).collect();
+    items.join(",")
+}
+
+/// Parse a wire payload `i:t,i:t,...` (or `"-"`/empty = no spikes) into
+/// raw `(index, time)` pairs. Grammar errors only — range/duplicate
+/// validation happens in [`SpikeVolley::sparse`], where n is known.
+pub fn parse_pairs(payload: &str) -> Result<Vec<(usize, f32)>> {
+    let payload = payload.trim();
+    if payload.is_empty() || payload == "-" {
+        return Ok(Vec::new());
+    }
+    payload
+        .split(',')
+        .map(|item| {
+            let (i, t) = item
+                .split_once(':')
+                .ok_or_else(|| Error::Volley(format!("bad pair `{item}` (want line:time)")))?;
+            let line = i
+                .trim()
+                .parse::<usize>()
+                .map_err(|e| Error::Volley(format!("bad line `{i}`: {e}")))?;
+            let time = t
+                .trim()
+                .parse::<f32>()
+                .map_err(|e| Error::Volley(format!("bad time `{t}`: {e}")))?;
+            Ok((line, time))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TM: usize = 16;
+
+    #[test]
+    fn dense_sparse_roundtrip_canonical() {
+        let v = SpikeVolley::dense(vec![1.0, 16.0, 3.5, 16.0]);
+        let s = v.to_sparse(TM);
+        assert_eq!(s.spike_list(TM), vec![(0, 1.0), (2, 3.5)]);
+        assert_eq!(s.to_dense(TM), v);
+        // sparse -> dense -> sparse is the identity
+        assert_eq!(s.to_dense(TM).to_sparse(TM), s);
+    }
+
+    #[test]
+    fn non_canonical_silence_normalizes() {
+        // 20.0 and NaN both mean "silent"; canonical form is t_max.
+        let v = SpikeVolley::dense(vec![2.0, 20.0, f32::NAN]);
+        assert_eq!(v.stats(TM), VolleyStats { lines: 3, active: 1 });
+        assert_eq!(v.dense_times(TM), vec![2.0, 16.0, 16.0]);
+        assert_eq!(v.spike_list(TM), vec![(0, 2.0)]);
+    }
+
+    #[test]
+    fn corners_all_silent_and_all_spiking() {
+        let silent = SpikeVolley::dense(vec![16.0; 8]);
+        assert_eq!(silent.stats(TM).active, 0);
+        assert_eq!(silent.to_sparse(TM).to_dense(TM), silent);
+        assert_eq!(silent.encode_sparse(TM), "-");
+
+        let full = SpikeVolley::dense((0..8).map(|i| i as f32).collect());
+        assert_eq!(full.stats(TM).active, 8);
+        assert_eq!(full.stats(TM).density(), 1.0);
+        assert_eq!(full.to_sparse(TM).to_dense(TM), full);
+    }
+
+    #[test]
+    fn sparse_constructor_sorts_filters_and_validates() {
+        let v = SpikeVolley::sparse(8, vec![(5, 2.0), (1, 0.0), (3, 16.0)], TM).unwrap();
+        assert_eq!(v.spike_list(TM), vec![(1, 0.0), (5, 2.0)]);
+        assert_eq!(v.n(), 8);
+
+        let err = SpikeVolley::sparse(8, vec![(8, 1.0)], TM).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let err = SpikeVolley::sparse(8, vec![(2, 1.0), (2, 3.0)], TM).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // malformed pairs are rejected even when their time is silent —
+        // validation runs before canonicalization drops them
+        assert!(SpikeVolley::sparse(8, vec![(9, 16.0)], TM).is_err());
+        assert!(SpikeVolley::sparse(8, vec![(9, f32::NAN)], TM).is_err());
+        assert!(SpikeVolley::sparse(8, vec![(2, 16.0), (2, 1.0)], TM).is_err());
+    }
+
+    #[test]
+    fn fill_row_matches_dense_times() {
+        let v = SpikeVolley::sparse(6, vec![(1, 4.0), (4, 0.5)], TM).unwrap();
+        let mut row = vec![TM as f32; 6];
+        v.fill_row(&mut row);
+        assert_eq!(row, v.dense_times(TM));
+    }
+
+    #[test]
+    fn codec_roundtrip_and_grammar() {
+        let v = SpikeVolley::sparse(16, vec![(0, 1.0), (7, 2.5)], TM).unwrap();
+        let wire = v.encode_sparse(TM);
+        assert_eq!(wire, "0:1,7:2.5");
+        assert_eq!(SpikeVolley::parse_sparse(&wire, 16, TM).unwrap(), v);
+
+        assert_eq!(parse_pairs("-").unwrap(), vec![]);
+        assert_eq!(parse_pairs("").unwrap(), vec![]);
+        assert_eq!(encode_pairs(&[]), "-");
+        assert!(parse_pairs("1").is_err());
+        assert!(parse_pairs("x:1").is_err());
+        assert!(parse_pairs("1:y").is_err());
+        assert!(SpikeVolley::parse_sparse("20:1", 16, TM).is_err());
+    }
+
+    #[test]
+    fn density_is_bounded() {
+        for active in 0..=8 {
+            let times: Vec<f32> = (0..8)
+                .map(|i| if i < active { 0.0 } else { 16.0 })
+                .collect();
+            let d = SpikeVolley::dense(times).stats(TM).density();
+            assert!((0.0..=1.0).contains(&d));
+            assert_eq!(d, active as f32 / 8.0);
+        }
+        assert_eq!(SpikeVolley::Dense(Vec::new()).stats(TM).density(), 0.0);
+    }
+}

@@ -6,9 +6,14 @@ use catwalk::coordinator::Metrics;
 use catwalk::quickprop::{forall, FnGen, UsizeRange};
 use catwalk::report::{Json, Table};
 use catwalk::rng::Xoshiro256;
+use catwalk::runtime::native::{rnl_forward, rnl_forward_auto, rnl_forward_sparse};
+use catwalk::runtime::Tensor;
+use catwalk::volley::SpikeVolley;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+const T_MAX: usize = 16;
 
 /// par_map(f) == map(f) for arbitrary input sizes and thread counts.
 #[test]
@@ -128,6 +133,85 @@ fn prop_json_writer_parses_back() {
             Json::Obj(kvs).render()
         }),
         |text| JsonValue::parse(text).is_ok(),
+    );
+}
+
+/// Sparse ↔ dense `SpikeVolley` round-trips are lossless for arbitrary
+/// canonical volleys, including the all-silent and all-spiking corners
+/// (drawn with positive probability every run).
+#[test]
+fn prop_volley_roundtrip_lossless() {
+    forall(
+        7,
+        256,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let n = 1 + rng.gen_range(64);
+            // density corners drawn explicitly: 0 = all-silent, 1 = all-spiking
+            let density = match rng.gen_range(5) {
+                0 => 0.0,
+                1 => 1.0,
+                _ => rng.gen_f64(),
+            };
+            (0..n)
+                .map(|_| {
+                    if rng.gen_bool(density) {
+                        (rng.gen_f64() * T_MAX as f64) as f32
+                    } else {
+                        T_MAX as f32
+                    }
+                })
+                .collect::<Vec<f32>>()
+        }),
+        |times| {
+            let v = SpikeVolley::dense(times.clone());
+            let sparse = v.to_sparse(T_MAX);
+            // canonical input -> round-trip is the exact identity
+            sparse.to_dense(T_MAX) == v
+                && sparse.to_dense(T_MAX).to_sparse(T_MAX) == sparse
+                && sparse.stats(T_MAX) == v.stats(T_MAX)
+                && SpikeVolley::parse_sparse(&v.encode_sparse(T_MAX), times.len(), T_MAX)
+                    .unwrap()
+                    .dense_times(T_MAX)
+                    == *times
+        },
+    );
+}
+
+/// `rnl_forward_sparse` (and the auto-cutover dispatch) equal the dense
+/// sweep bit-for-bit at arbitrary sparsity levels, shapes, thresholds
+/// and clips.
+#[test]
+fn prop_sparse_forward_matches_dense() {
+    forall(
+        8,
+        64,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let b = 1 + rng.gen_range(6);
+            let c = 1 + rng.gen_range(8);
+            let n = 1 + rng.gen_range(48);
+            let density = rng.gen_f64();
+            let spikes: Vec<f32> = (0..b * n)
+                .map(|_| {
+                    if rng.gen_bool(density) {
+                        (rng.gen_f64() * 12.0) as f32
+                    } else {
+                        T_MAX as f32
+                    }
+                })
+                .collect();
+            let weights: Vec<f32> = (0..c * n).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
+            let theta = (rng.gen_f64() * 12.0) as f32; // includes the theta = 0 edge
+            (b, c, n, spikes, weights, theta)
+        }),
+        |(b, c, n, spikes, weights, theta)| {
+            let st = Tensor::new(vec![*b, *n], spikes.clone()).unwrap();
+            let wt = Tensor::new(vec![*c, *n], weights.clone()).unwrap();
+            [None, Some(2.0)].into_iter().all(|k_clip| {
+                let dense = rnl_forward(&st, &wt, *theta, T_MAX, k_clip);
+                rnl_forward_sparse(&st, &wt, *theta, T_MAX, k_clip).data == dense.data
+                    && rnl_forward_auto(&st, &wt, *theta, T_MAX, k_clip).data == dense.data
+            })
+        },
     );
 }
 

@@ -10,12 +10,15 @@
 use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
 use catwalk::neuron::behavior::rnl_first_crossing;
 use catwalk::rng::Xoshiro256;
+use catwalk::runtime::native::{rnl_forward, rnl_forward_auto, rnl_forward_sparse, wta_mask};
 use catwalk::runtime::{Runtime, Tensor};
 use catwalk::server::{Client, Server};
 use catwalk::sim::Simulator;
 use catwalk::tnn::{wta, Column};
 use catwalk::topk::TopkSelector;
+use catwalk::volley::SpikeVolley;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// The top-k kernel and the gate-level netlist of the same selector agree
 /// bit-for-bit — the strongest L1-vs-hardware conformance signal in the
@@ -195,6 +198,107 @@ fn learn_updates_weights_within_bounds() {
     }
 }
 
+/// Conformance gate for the sparse native path: across sparsity levels
+/// (all-silent through fully dense, fractional spike times and weights,
+/// clipped and unclipped) the spiking-lines-only kernel and the
+/// auto-cutover kernel are **bit-identical** — spike times and WTA
+/// winners — to the dense golden model `rnl_forward`.
+#[test]
+fn sparse_native_path_conformance_gate() {
+    let t_max = 16usize;
+    let mut rng = Xoshiro256::new(2024);
+    for &density in &[0.0, 0.05, 0.1, 0.25, 0.5, 1.0] {
+        for _ in 0..10 {
+            let (b, c, n) = (8, 6, 48);
+            let spikes: Vec<f32> = (0..b * n)
+                .map(|_| {
+                    if rng.gen_bool(density) {
+                        (rng.gen_f64() * 10.0) as f32
+                    } else {
+                        t_max as f32
+                    }
+                })
+                .collect();
+            let weights: Vec<f32> = (0..c * n).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
+            let theta = 1.0 + (rng.gen_f64() * 10.0) as f32;
+            let st = Tensor::new(vec![b, n], spikes).unwrap();
+            let wt = Tensor::new(vec![c, n], weights).unwrap();
+            for k_clip in [None, Some(2.0)] {
+                let dense = rnl_forward(&st, &wt, theta, t_max, k_clip);
+                let sparse = rnl_forward_sparse(&st, &wt, theta, t_max, k_clip);
+                let auto = rnl_forward_auto(&st, &wt, theta, t_max, k_clip);
+                assert_eq!(
+                    dense.data, sparse.data,
+                    "times diverge at density {density} clip {k_clip:?}"
+                );
+                assert_eq!(
+                    dense.data, auto.data,
+                    "auto diverges at density {density} clip {k_clip:?}"
+                );
+                let (md, ms) = (wta_mask(&dense, t_max), wta_mask(&sparse, t_max));
+                assert_eq!(
+                    md.data, ms.data,
+                    "winners diverge at density {density} clip {k_clip:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Sparse-encoded volleys through the full engine path (pack → backend →
+/// unpack) match the behavioral golden model exactly, across sparsity
+/// levels. Volleys carry at most 2 active lanes so the k = 2 clip baked
+/// into the kernel never engages and the un-clipped golden model applies
+/// exactly — denser inputs are covered by the kernel gate above.
+#[test]
+fn sparse_volleys_match_golden_model_end_to_end() {
+    let n = 16;
+    let theta = 5u32;
+    let handle = TnnHandle::open("artifacts", n, theta as f32, 17).unwrap();
+    let c = handle.c;
+    let t_max = handle.t_max;
+
+    let mut rng = Xoshiro256::new(404);
+    let weights: Vec<f32> = (0..c * n).map(|_| rng.gen_range(8) as f32).collect();
+    handle
+        .set_weights(Tensor::new(vec![c, n], weights.clone()).unwrap())
+        .unwrap();
+
+    for active_lanes in [0usize, 1, 2] {
+        let volleys: Vec<SpikeVolley> = (0..24)
+            .map(|_| {
+                let pairs: Vec<(usize, f32)> = rng
+                    .sample_indices(n, active_lanes)
+                    .into_iter()
+                    .map(|lane| (lane, rng.gen_range(8) as f32))
+                    .collect();
+                SpikeVolley::sparse(n, pairs, t_max).unwrap()
+            })
+            .collect();
+        let results = handle.infer(volleys.clone()).unwrap();
+        for (v, res) in volleys.iter().zip(&results) {
+            let dense = v.dense_times(t_max);
+            let st: Vec<Option<u32>> = dense
+                .iter()
+                .map(|&s| if s < t_max as f32 { Some(s as u32) } else { None })
+                .collect();
+            let mut expect_times = Vec::with_capacity(c);
+            for ci in 0..c {
+                let wt: Vec<u32> = weights[ci * n..(ci + 1) * n]
+                    .iter()
+                    .map(|&w| w as u32)
+                    .collect();
+                let t = rnl_first_crossing(&st, &wt, theta, t_max as u32)
+                    .map(|t| t as f32)
+                    .unwrap_or(t_max as f32);
+                expect_times.push(t);
+            }
+            assert_eq!(res.times, expect_times, "volley {v:?}");
+            assert_eq!(res.winner, wta(&expect_times), "volley {v:?}");
+        }
+    }
+}
+
 /// Dynamic batcher under concurrency: every request gets exactly one
 /// result, batches actually form, latency is recorded.
 #[test]
@@ -241,6 +345,73 @@ fn batcher_under_concurrent_load() {
     let batches = metrics.counter("batches");
     assert!(batches > 0 && batches < total as u64, "batches={batches}");
     assert!(metrics.summary("request_latency").unwrap().count == total as u64);
+}
+
+/// Timing: a partial batch (far fewer requests than `max_batch`) is
+/// flushed by the `flush_after` timer, not held hostage waiting for a
+/// full batch.
+#[test]
+fn batcher_flushes_partial_batch_on_timeout() {
+    let handle = TnnHandle::open("artifacts", 16, 6.0, 21).unwrap();
+    let metrics = handle.metrics.clone();
+    let batcher = DynamicBatcher::start(
+        handle,
+        BatcherConfig {
+            max_batch: 32,
+            flush_after: Duration::from_millis(5),
+            learn: false,
+        },
+    );
+    let t0 = Instant::now();
+    let oks = catwalk::coordinator::pool::par_map(3, (0..3).collect::<Vec<_>>(), |_| {
+        batcher.submit(vec![16.0f32; 16]).unwrap().times.len()
+    });
+    assert_eq!(oks, vec![8, 8, 8]);
+    // generous bound: the 5 ms flush timer fired, we never waited for 32
+    // requests that will not come
+    assert!(t0.elapsed() < Duration::from_secs(5), "{:?}", t0.elapsed());
+    assert_eq!(metrics.counter("requests"), 3);
+    assert_eq!(metrics.counter("batched_requests"), 3);
+    let batches = metrics.counter("batches");
+    assert!((1..=3).contains(&batches), "batches={batches}");
+}
+
+/// Shutdown with requests still queued: the batcher flushes them (every
+/// submitter gets a real result, not an error), then rejects new work.
+#[test]
+fn batcher_shutdown_flushes_pending_requests() {
+    let handle = TnnHandle::open("artifacts", 16, 6.0, 22).unwrap();
+    let metrics = handle.metrics.clone();
+    // flush timer effectively never fires: only shutdown can flush
+    let batcher = Arc::new(DynamicBatcher::start(
+        handle,
+        BatcherConfig {
+            max_batch: 64,
+            flush_after: Duration::from_secs(30),
+            learn: false,
+        },
+    ));
+    let submitters: Vec<_> = (0..6)
+        .map(|_| {
+            let b = batcher.clone();
+            std::thread::spawn(move || b.submit(vec![16.0f32; 16]))
+        })
+        .collect();
+    // wait until all six requests are enqueued (bounded spin)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while metrics.counter("requests") < 6 {
+        assert!(Instant::now() < deadline, "submitters never enqueued");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    batcher.shutdown();
+    for s in submitters {
+        let res = s.join().unwrap().expect("pending request must be served");
+        assert_eq!(res.times.len(), 8);
+    }
+    assert_eq!(metrics.counter("batched_requests"), 6);
+    // post-shutdown submissions are rejected cleanly
+    let err = batcher.submit(vec![16.0f32; 16]).unwrap_err();
+    assert!(err.to_string().contains("shut down"), "{err}");
 }
 
 /// Rejects malformed volleys without poisoning the batcher.
@@ -301,6 +472,67 @@ fn tcp_server_end_to_end() {
         ok
     });
     assert_eq!(oks.iter().sum::<usize>(), 80);
+
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    srv.join().unwrap();
+}
+
+/// `SPARSE`/`SLEARN` over TCP: sparse requests produce exactly the dense
+/// path's results (the reply lists precisely the columns the dense reply
+/// shows firing), grammar violations get `ERR` without poisoning the
+/// connection, and both encodings mix freely on one connection.
+#[test]
+fn tcp_sparse_protocol_end_to_end() {
+    let n = 16;
+    let handle = TnnHandle::open("artifacts", n, 6.0, 23).unwrap();
+    let t_max = handle.t_max;
+    let server = Arc::new(Server::new(handle, BatcherConfig::default()));
+    let stop = server.stop_handle();
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    let mut client = Client::connect(&addr).unwrap();
+
+    let mut rng = Xoshiro256::new(314);
+    for _ in 0..20 {
+        let active = rng.gen_range(3);
+        let pairs: Vec<(usize, f32)> = rng
+            .sample_indices(n, active)
+            .into_iter()
+            .map(|lane| (lane, rng.gen_range(8) as f32))
+            .collect();
+        let dense = SpikeVolley::sparse(n, pairs.clone(), t_max)
+            .unwrap()
+            .dense_times(t_max);
+
+        let (dw, dtimes) = client.infer(&dense).unwrap();
+        let (sw, spikes) = client.infer_sparse(&pairs).unwrap();
+        assert_eq!(dw, sw, "volley {pairs:?}");
+        let fired: Vec<(usize, f32)> = dtimes
+            .iter()
+            .enumerate()
+            .filter(|&(_, &t)| t < t_max as f32)
+            .map(|(c, &t)| (c, t))
+            .collect();
+        assert_eq!(spikes, fired, "volley {pairs:?}");
+    }
+
+    // sparse learning path
+    let (_, _) = client.learn_sparse(&[(0, 0.0), (3, 1.0)]).unwrap();
+    // grammar/range violations answer ERR but the connection survives
+    assert!(client.infer_sparse(&[(99, 1.0)]).is_err());
+    let (w, _) = client.infer_sparse(&[]).unwrap();
+    assert_eq!(w, -1, "all-silent volley cannot have a winner");
+    client.quit().unwrap();
 
     stop.store(true, std::sync::atomic::Ordering::Release);
     srv.join().unwrap();
