@@ -1,6 +1,8 @@
 //! Serving demo: boots the TCP daemon on an ephemeral port, drives it
-//! with concurrent clients through the dynamic batcher, prints the
-//! latency/throughput numbers, then shuts down cleanly.
+//! with concurrent text-protocol clients through the dynamic batcher,
+//! then re-runs the same load over the v2 framed protocol (32-volley
+//! batch frames, which coalesce into whole backend batches) and prints
+//! both sets of numbers.
 //!
 //! Runs on the native backend out of the box; a build with
 //! `--features xla` (against real xla-rs, see DESIGN.md §3) plus
@@ -10,9 +12,11 @@
 
 use catwalk::coordinator::pool::par_map;
 use catwalk::coordinator::{BatcherConfig, TnnHandle};
-use catwalk::server::{Client, Server};
+use catwalk::proto::Request;
+use catwalk::server::{Client, FramedClient, Server};
 use catwalk::tnn::workload::ClusteredSeries;
 use catwalk::tnn::{GrfEncoder, WorkloadConfig};
+use catwalk::SpikeVolley;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
@@ -64,7 +68,7 @@ fn main() -> catwalk::Result<()> {
     all.sort();
     let total = all.len();
     println!(
-        "{total} requests / {conns} connections in {wall:?} -> {:.0} req/s",
+        "text protocol: {total} requests / {conns} connections in {wall:?} -> {:.0} req/s",
         total as f64 / wall.as_secs_f64()
     );
     println!(
@@ -73,6 +77,48 @@ fn main() -> catwalk::Result<()> {
         all[total * 95 / 100],
         all[total - 1]
     );
+
+    // the same load over the v2 framed protocol, one 32-volley batch
+    // frame per window: a multi-volley request enters the batcher as a
+    // whole (DynamicBatcher::submit_many), so each window coalesces
+    // into full backend batches instead of paying the flush timer one
+    // volley at a time
+    let window = 32;
+    let t0 = Instant::now();
+    let counts = par_map(conns, (0..conns).collect::<Vec<_>>(), |ci| {
+        let mut client = FramedClient::connect(&addr).expect("connect");
+        let enc = GrfEncoder::new(n / 8, 8, 0.0, 1.0);
+        let mut series = ClusteredSeries::new(WorkloadConfig {
+            dims: n / 8,
+            seed: ci as u64,
+            ..Default::default()
+        });
+        let mut done = 0usize;
+        while done < per_conn {
+            let take = window.min(per_conn - done);
+            let volleys: Vec<SpikeVolley> = (0..take)
+                .map(|_| {
+                    let (_, s) = series.next_sample();
+                    SpikeVolley::dense(enc.encode(&s))
+                })
+                .collect();
+            let resp = client
+                .call(Request::infer(volleys))
+                .expect("batch infer");
+            done += resp.results().expect("results").len();
+        }
+        let _ = client.quit();
+        done
+    });
+    let wall_framed = t0.elapsed();
+    let total_framed: usize = counts.iter().sum();
+    println!(
+        "\nv2 framed ({window}-volley batch frames): {total_framed} requests in {wall_framed:?} \
+         -> {:.0} req/s ({:.2}x vs text)",
+        total_framed as f64 / wall_framed.as_secs_f64(),
+        wall.as_secs_f64() / wall_framed.as_secs_f64()
+    );
+
     println!("\nserver metrics:\n{}", metrics.render());
 
     stop.store(true, Ordering::Release);

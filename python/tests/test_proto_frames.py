@@ -1,0 +1,353 @@
+"""Wire-level twin of the v2 framed protocol (``rust/src/proto/frame.rs``).
+
+Crafts raw v2 frames with ``struct`` against the documented layout
+(README "Serving protocol" / DESIGN.md §2.2) and checks them three ways:
+
+1. **Golden vectors** — byte-identical constants asserted here *and* in
+   ``rust/tests/proto_frames.rs``; they are the cross-language contract.
+   If either side changes the layout, exactly one of the two suites
+   breaks.
+2. **Round-trips** — the twin codec decodes what it encodes.
+3. **Malformed frames** — truncated header, bad magic, oversized
+   length, unknown version/op/repr all raise instead of misparsing.
+
+Layout (all integers big-endian, f32 = IEEE-754 bits big-endian):
+
+    frame    := magic "CWK2" | type u8 | len u32 | payload[len]
+    type     := 1 HELLO | 2 ACK | 3 REQUEST | 4 RESPONSE
+    HELLO    := min_version u16 | max_version u16
+    ACK      := version u16 | n u32 | c u32 | t_max u32
+    REQUEST  := id u64 | op u8 | flags u8 | [deadline_ms u32]
+                | nvolleys u16 | volley*
+    volley   := 0 | n u32 | n*f32            (dense)
+              | 1 | n u32 | nnz u32 | nnz*(line u32, time f32)
+    RESPONSE := id u64 | status u8 | body
+    RESULTS  := count u16 | (winner i32 | c u32 | c*f32)*
+"""
+
+import struct
+
+import pytest
+
+MAGIC = b"CWK2"
+VERSION = 2
+MAX_PAYLOAD = 1 << 24
+
+T_HELLO, T_ACK, T_REQUEST, T_RESPONSE = 1, 2, 3, 4
+OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT = 1, 2, 3, 4, 5
+FLAG_SPARSE_REPLY, FLAG_DEADLINE, FLAG_COUNTERS_ONLY = 1, 2, 4
+ST_RESULTS, ST_STATS, ST_PONG, ST_BYE, ST_ERROR = 0, 1, 2, 3, 4
+
+
+# ----------------------------------------------------------- twin codec
+
+
+def frame(ftype, payload):
+    assert len(payload) <= MAX_PAYLOAD
+    return MAGIC + struct.pack(">BI", ftype, len(payload)) + payload
+
+
+def parse_frame(buf):
+    """Returns ((type, payload), remaining). Raises ValueError on bad bytes."""
+    if len(buf) < 9:
+        raise ValueError("truncated frame header")
+    if buf[:4] != MAGIC:
+        raise ValueError("bad magic %r" % buf[:4])
+    ftype, ln = struct.unpack(">BI", buf[4:9])
+    if ftype not in (T_HELLO, T_ACK, T_REQUEST, T_RESPONSE):
+        raise ValueError("unknown frame type %d" % ftype)
+    if ln > MAX_PAYLOAD:
+        raise ValueError("oversized frame: %d" % ln)
+    if len(buf) < 9 + ln:
+        raise ValueError("truncated frame payload")
+    return (ftype, buf[9 : 9 + ln]), buf[9 + ln :]
+
+
+def hello(min_version=VERSION, max_version=VERSION):
+    return struct.pack(">HH", min_version, max_version)
+
+
+def parse_ack(payload):
+    if len(payload) != 14:
+        raise ValueError("bad ACK length %d" % len(payload))
+    version, n, c, t_max = struct.unpack(">HIII", payload)
+    if version != VERSION:
+        raise ValueError("unknown version %d" % version)
+    return {"version": version, "n": n, "c": c, "t_max": t_max}
+
+
+def dense_volley(times):
+    return struct.pack(">BI", 0, len(times)) + b"".join(
+        struct.pack(">f", t) for t in times
+    )
+
+
+def sparse_volley(n, pairs):
+    out = struct.pack(">BII", 1, n, len(pairs))
+    for line, t in pairs:
+        out += struct.pack(">If", line, t)
+    return out
+
+
+def request(rid, op, volleys=(), sparse_reply=False, deadline_ms=None,
+            counters_only=False):
+    flags = (
+        (FLAG_SPARSE_REPLY if sparse_reply else 0)
+        | (FLAG_DEADLINE if deadline_ms is not None else 0)
+        | (FLAG_COUNTERS_ONLY if counters_only else 0)
+    )
+    p = struct.pack(">QBB", rid, op, flags)
+    if deadline_ms is not None:
+        p += struct.pack(">I", deadline_ms)
+    p += struct.pack(">H", len(volleys))
+    return p + b"".join(volleys)
+
+
+class Cur:
+    def __init__(self, b):
+        self.b, self.off = b, 0
+
+    def take(self, fmt):
+        size = struct.calcsize(fmt)
+        if self.off + size > len(self.b):
+            raise ValueError("short payload at offset %d" % self.off)
+        vals = struct.unpack_from(fmt, self.b, self.off)
+        self.off += size
+        return vals if len(vals) > 1 else vals[0]
+
+    def finish(self):
+        if self.off != len(self.b):
+            raise ValueError("%d trailing bytes" % (len(self.b) - self.off))
+
+
+def parse_request(payload):
+    cur = Cur(payload)
+    rid, op, flags = cur.take(">QBB")
+    if op not in (OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT):
+        raise ValueError("unknown op %d" % op)
+    if flags & ~(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY):
+        raise ValueError("unknown flags %#x" % flags)
+    deadline = cur.take(">I") if flags & FLAG_DEADLINE else None
+    volleys = []
+    for _ in range(cur.take(">H")):
+        repr_ = cur.take(">B")
+        if repr_ == 0:
+            n = cur.take(">I")
+            if n * 4 > len(cur.b) - cur.off:
+                raise ValueError("dense count exceeds payload")
+            volleys.append(("dense", [cur.take(">f") for _ in range(n)]))
+        elif repr_ == 1:
+            n, nnz = cur.take(">II")
+            if nnz * 8 > len(cur.b) - cur.off:
+                raise ValueError("sparse count exceeds payload")
+            pairs = [cur.take(">If") for _ in range(nnz)]
+            if any(line >= n for line, _ in pairs):
+                raise ValueError("line out of range")
+            if any(a[0] >= b[0] for a, b in zip(pairs, pairs[1:])):
+                raise ValueError("lines not strictly ascending")
+            volleys.append(("sparse", n, pairs))
+        else:
+            raise ValueError("unknown volley repr %d" % repr_)
+    cur.finish()
+    return {
+        "id": rid,
+        "op": op,
+        "volleys": volleys,
+        "sparse_reply": bool(flags & FLAG_SPARSE_REPLY),
+        "deadline_ms": deadline,
+        "counters_only": bool(flags & FLAG_COUNTERS_ONLY),
+    }
+
+
+def response_results(rid, results):
+    p = struct.pack(">QBH", rid, ST_RESULTS, len(results))
+    for winner, times in results:
+        p += struct.pack(">iI", winner, len(times))
+        p += b"".join(struct.pack(">f", t) for t in times)
+    return p
+
+
+def parse_response(payload):
+    cur = Cur(payload)
+    rid, status = cur.take(">QB")
+    if status == ST_RESULTS:
+        results = []
+        for _ in range(cur.take(">H")):
+            winner, c = cur.take(">iI")
+            if c * 4 > len(cur.b) - cur.off:
+                raise ValueError("result count exceeds payload")
+            results.append((winner, [cur.take(">f") for _ in range(c)]))
+        cur.finish()
+        return {"id": rid, "results": results}
+    if status in (ST_STATS, ST_ERROR):
+        body = cur.b[cur.off :].decode("utf-8")
+        return {"id": rid, ("stats" if status == ST_STATS else "error"): body}
+    if status in (ST_PONG, ST_BYE):
+        cur.finish()
+        return {"id": rid, "status": "pong" if status == ST_PONG else "bye"}
+    raise ValueError("unknown response status %d" % status)
+
+
+# ------------------------------------------------------- golden vectors
+
+# The same constants appear in rust/tests/proto_frames.rs. Request:
+# id=7, INFER, sparse_reply + deadline 250 ms, two volleys —
+# dense [1.0, 16.0, 2.5, 16.0] and sparse n=4 {(1, 3.0)}.
+GOLDEN_REQUEST_HEX = (
+    "43574b32030000003600000000000000070103000000fa00020000000004"
+    "3f8000004180000040200000418000000100000004000000010000000140400000"
+)
+
+# Response: id=7, one result, winner=2, times=[4.0, 16.0, 2.0].
+GOLDEN_RESPONSE_HEX = (
+    "43574b32040000001f000000000000000700000100000002000000034080"
+    "00004180000040000000"
+)
+
+# HELLO [2,2] and ACK v2 for an n=16, c=8, t_max=16 column.
+GOLDEN_HELLO_HEX = "43574b32010000000400020002"
+GOLDEN_ACK_HEX = "43574b32020000000e0002000000100000000800000010"
+
+
+def golden_request_bytes():
+    return frame(
+        T_REQUEST,
+        request(
+            7,
+            OP_INFER,
+            volleys=[
+                dense_volley([1.0, 16.0, 2.5, 16.0]),
+                sparse_volley(4, [(1, 3.0)]),
+            ],
+            sparse_reply=True,
+            deadline_ms=250,
+        ),
+    )
+
+
+def golden_response_bytes():
+    return frame(T_RESPONSE, response_results(7, [(2, [4.0, 16.0, 2.0])]))
+
+
+def golden_hello_bytes():
+    return frame(T_HELLO, hello(2, 2))
+
+
+def golden_ack_bytes():
+    return frame(T_ACK, struct.pack(">HIII", VERSION, 16, 8, 16))
+
+
+# ----------------------------------------------------------------- tests
+
+
+def test_golden_request_bytes_match_contract():
+    assert golden_request_bytes().hex() == GOLDEN_REQUEST_HEX
+
+
+def test_golden_response_bytes_match_contract():
+    assert golden_response_bytes().hex() == GOLDEN_RESPONSE_HEX
+
+
+def test_golden_handshake_bytes_match_contract():
+    assert golden_hello_bytes().hex() == GOLDEN_HELLO_HEX
+    assert golden_ack_bytes().hex() == GOLDEN_ACK_HEX
+
+
+def test_request_roundtrip():
+    (ftype, payload), rest = parse_frame(golden_request_bytes())
+    assert (ftype, rest) == (T_REQUEST, b"")
+    req = parse_request(payload)
+    assert req["id"] == 7
+    assert req["op"] == OP_INFER
+    assert req["sparse_reply"] and req["deadline_ms"] == 250
+    assert not req["counters_only"]
+    assert req["volleys"][0] == ("dense", [1.0, 16.0, 2.5, 16.0])
+    assert req["volleys"][1] == ("sparse", 4, [(1, 3.0)])
+
+
+def test_response_roundtrip_and_statuses():
+    (_, payload), _ = parse_frame(golden_response_bytes())
+    resp = parse_response(payload)
+    assert resp == {"id": 7, "results": [(2, [4.0, 16.0, 2.0])]}
+
+    # winner -1 = silent; two's-complement i32 on the wire
+    p = response_results(9, [(-1, [16.0])])
+    assert parse_response(p)["results"] == [(-1, [16.0])]
+
+    stats = struct.pack(">QB", 3, ST_STATS) + b"counter.requests=5\nschema=1\n"
+    assert parse_response(stats)["stats"] == "counter.requests=5\nschema=1\n"
+    err = struct.pack(">QB", 3, ST_ERROR) + "boom ✗".encode("utf-8")
+    assert parse_response(err)["error"] == "boom ✗"
+    assert parse_response(struct.pack(">QB", 1, ST_PONG))["status"] == "pong"
+    assert parse_response(struct.pack(">QB", 1, ST_BYE))["status"] == "bye"
+
+
+def test_ack_parses_geometry():
+    (ftype, payload), _ = parse_frame(golden_ack_bytes())
+    assert ftype == T_ACK
+    assert parse_ack(payload) == {"version": 2, "n": 16, "c": 8, "t_max": 16}
+    with pytest.raises(ValueError):
+        parse_ack(struct.pack(">HIII", 9, 1, 1, 1))  # unknown version
+    with pytest.raises(ValueError):
+        parse_ack(b"\x00\x02")  # truncated
+
+
+def test_frames_concatenate_for_pipelining():
+    buf = golden_request_bytes() * 3
+    seen = []
+    while buf:
+        (ftype, payload), buf = parse_frame(buf)
+        seen.append(ftype)
+    assert seen == [T_REQUEST] * 3
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        lambda b: b[:3],  # truncated header
+        lambda b: b[:11],  # truncated payload
+        lambda b: b"XWK2" + b[4:],  # bad magic
+        lambda b: b[:4] + struct.pack(">BI", 9, 0),  # unknown frame type
+        lambda b: b[:4] + struct.pack(">BI", T_REQUEST, MAX_PAYLOAD + 1),  # oversized
+    ],
+)
+def test_malformed_frames_raise(mutate):
+    with pytest.raises(ValueError):
+        parse_frame(mutate(golden_request_bytes()))
+
+
+def test_malformed_request_payloads_raise():
+    good = request(1, OP_INFER, [dense_volley([1.0, 2.0])])
+    parse_request(good)  # sanity
+    for cut in range(len(good)):
+        with pytest.raises(ValueError):
+            parse_request(good[:cut])
+    with pytest.raises(ValueError):
+        parse_request(good + b"\x00")  # trailing bytes
+    with pytest.raises(ValueError):
+        parse_request(request(1, 99, []))  # unknown op
+    bad_flags = struct.pack(">QBB", 1, OP_PING, 0x80) + struct.pack(">H", 0)
+    with pytest.raises(ValueError):
+        parse_request(bad_flags)
+    # hostile dense count must not be trusted
+    huge = struct.pack(">QBB", 1, OP_INFER, 0) + struct.pack(">H", 1)
+    huge += struct.pack(">BI", 0, 0xFFFFFFFF)
+    with pytest.raises(ValueError):
+        parse_request(huge)
+    # sparse invariants: out-of-range line, unsorted lines
+    with pytest.raises(ValueError):
+        parse_request(request(1, OP_INFER, [sparse_volley(4, [(9, 1.0)])]))
+    with pytest.raises(ValueError):
+        parse_request(
+            request(1, OP_INFER, [sparse_volley(4, [(2, 1.0), (1, 1.0)])])
+        )
+
+
+def test_stats_kv_schema_shape():
+    """The STATS body is line-oriented key=value, sorted by key."""
+    body = "counter.requests=5\nhist.lat.p50_us=64\nschema=1\n"
+    lines = body.strip().splitlines()
+    assert lines == sorted(lines)
+    parsed = dict(line.split("=", 1) for line in lines)
+    assert parsed["schema"] == "1"
+    assert int(parsed["counter.requests"]) == 5

@@ -1,0 +1,111 @@
+//! Serving-protocol bench: v2 framed (sequential, pipelined, and
+//! multi-volley batch frames) vs the legacy text protocol, same server,
+//! same volleys — the numbers EXPERIMENTS.md §Serving records for the
+//! envelope redesign.
+//!
+//! Run: `cargo bench --bench proto_serve`
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::coordinator::{BatcherConfig, TnnHandle};
+use catwalk::proto::Request;
+use catwalk::rng::Xoshiro256;
+use catwalk::server::{Client, FramedClient, Server};
+use catwalk::volley::SpikeVolley;
+use std::sync::Arc;
+
+fn main() {
+    bench_header("serving protocol: v2 framed vs text");
+    let n = 64;
+    let handle = TnnHandle::open("artifacts", n, 8.0, 7).unwrap();
+    println!("backend: {}", handle.backend);
+    let server = Arc::new(Server::new(handle, BatcherConfig::default()));
+    let stop = server.stop_handle();
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |p| {
+                    let _ = port_tx.send(p);
+                })
+                .unwrap()
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+
+    // one fixed volley set, ~10% line activity
+    let mut rng = Xoshiro256::new(3);
+    let volleys: Vec<Vec<f32>> = (0..256)
+        .map(|_| {
+            (0..n)
+                .map(|_| {
+                    if rng.gen_bool(0.1) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        16.0
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let requests = volleys.len() as u64;
+
+    let mut text = Client::connect(&addr).unwrap();
+    let t = bench("text protocol, sequential", 1, 10, || {
+        for v in &volleys {
+            text.infer(v).unwrap();
+        }
+    });
+    println!("{}", t.report());
+    println!("  -> {:.0} req/s", t.throughput(requests));
+
+    let mut framed = FramedClient::connect(&addr).unwrap();
+    let f = bench("v2 framed, sequential", 1, 10, || {
+        for v in &volleys {
+            framed.infer(v).unwrap();
+        }
+    });
+    println!("{}", f.report());
+    println!("  -> {:.0} req/s", f.throughput(requests));
+
+    // pipelined: frames written in 64-deep windows (one flush each)
+    // before their responses are read. The connection loop still
+    // handles them serially (one volley per batcher flush), so this
+    // measures the saved round-trips only — batch coalescing needs
+    // the multi-volley frames below.
+    let p = bench("v2 framed, pipelined x256", 1, 10, || {
+        let reqs: Vec<Request> = volleys
+            .iter()
+            .map(|v| Request::infer(vec![SpikeVolley::dense(v.clone())]))
+            .collect();
+        let resps = framed.call_many(reqs).unwrap();
+        assert_eq!(resps.len(), volleys.len());
+    });
+    println!("{}", p.report());
+    println!("  -> {:.0} req/s", p.throughput(requests));
+
+    // batch frames: 256 volleys in four 64-volley requests
+    let b = bench("v2 framed, 4 x 64-volley frames", 1, 10, || {
+        for chunk in volleys.chunks(64) {
+            let vs: Vec<SpikeVolley> = chunk
+                .iter()
+                .map(|v| SpikeVolley::dense(v.clone()))
+                .collect();
+            let rs = framed.infer_batch(vs).unwrap();
+            assert_eq!(rs.len(), chunk.len());
+        }
+    });
+    println!("{}", b.report());
+    println!("  -> {:.0} volleys/s", b.throughput(requests));
+
+    println!(
+        "\n  pipelined speedup vs text: {:.2}x   batch-frame speedup vs text: {:.2}x",
+        t.median().as_secs_f64() / p.median().as_secs_f64(),
+        t.median().as_secs_f64() / b.median().as_secs_f64()
+    );
+
+    let _ = text.quit();
+    let _ = framed.quit();
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    srv.join().unwrap();
+}

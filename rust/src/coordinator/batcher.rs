@@ -41,6 +41,8 @@ impl Default for BatcherConfig {
 struct Pending {
     volley: SpikeVolley,
     enqueued: Instant,
+    /// drop (typed error) instead of executing if still queued past this
+    deadline: Option<Instant>,
     reply: SyncSender<Result<VolleyResult>>,
 }
 
@@ -99,32 +101,73 @@ impl DynamicBatcher {
     /// Submit one volley (dense `Vec<f32>` or sparse [`SpikeVolley`])
     /// and block for its result.
     pub fn submit(&self, volley: impl Into<SpikeVolley>) -> Result<VolleyResult> {
-        let volley = volley.into();
-        let (tx, rx): (_, Receiver<Result<VolleyResult>>) = sync_channel(1);
+        self.submit_many(vec![volley.into()])
+            .pop()
+            .expect("submit_many returns one result per volley")
+    }
+
+    /// Submit a whole multi-volley request (one envelope `Request`, one
+    /// enqueue): all volleys enter the queue under a single lock — so a
+    /// batch request coalesces into backend executions together rather
+    /// than racing other clients one volley at a time — then this blocks
+    /// until every result is in. Results are in request order, one per
+    /// volley.
+    pub fn submit_many(&self, volleys: Vec<SpikeVolley>) -> Vec<Result<VolleyResult>> {
+        self.submit_many_with_deadline(volleys, None)
+    }
+
+    /// [`submit_many`](DynamicBatcher::submit_many) with an absolute
+    /// deadline (the envelope's `deadline_ms` opt): a volley still
+    /// queued when its batch is drained past the deadline is answered
+    /// with a typed error instead of costing a backend execution.
+    pub fn submit_many_with_deadline(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        deadline: Option<Instant>,
+    ) -> Vec<Result<VolleyResult>> {
+        if volleys.is_empty() {
+            return Vec::new();
+        }
+        let mut waiters: Vec<Receiver<Result<VolleyResult>>> = Vec::with_capacity(volleys.len());
+        // count wire encodings before taking the queue lock — the
+        // critical section must stay O(enqueue), not O(metrics locks)
+        let sparse = volleys.iter().filter(|v| v.is_sparse()).count() as u64;
+        let dense = volleys.len() as u64 - sparse;
         {
             let (lock, cv) = &*self.queue;
             let mut q = lock.lock().unwrap();
             if q.closed {
-                return Err(Error::Coordinator("batcher is shut down".into()));
+                return volleys
+                    .iter()
+                    .map(|_| Err(Error::Coordinator("batcher is shut down".into())))
+                    .collect();
             }
-            self.service.metrics.incr("requests", 1);
-            self.service.metrics.incr(
-                if volley.is_sparse() {
-                    "requests_sparse"
-                } else {
-                    "requests_dense"
-                },
-                1,
-            );
-            q.pending.push_back(Pending {
-                volley,
-                enqueued: Instant::now(),
-                reply: tx,
-            });
+            for volley in volleys {
+                let (tx, rx) = sync_channel(1);
+                q.pending.push_back(Pending {
+                    volley,
+                    enqueued: Instant::now(),
+                    deadline,
+                    reply: tx,
+                });
+                waiters.push(rx);
+            }
             cv.notify_one();
         }
-        rx.recv()
-            .map_err(|_| Error::Coordinator("batcher dropped request".into()))?
+        self.service.metrics.incr("requests", sparse + dense);
+        if sparse > 0 {
+            self.service.metrics.incr("requests_sparse", sparse);
+        }
+        if dense > 0 {
+            self.service.metrics.incr("requests_dense", dense);
+        }
+        waiters
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err(Error::Coordinator("batcher dropped request".into())))
+            })
+            .collect()
     }
 
     /// Graceful shutdown: close the queue (new submissions are
@@ -195,6 +238,23 @@ fn batch_loop(
             let take = q.pending.len().min(cfg.max_batch);
             q.pending.drain(..take).collect()
         };
+        if batch.is_empty() {
+            continue;
+        }
+        // Expired requests are dropped at drain time — the one moment
+        // the batcher inspects every pending entry anyway — so a
+        // deadline bounds the queue wait, not just the dispatch check.
+        let now = Instant::now();
+        let (batch, expired): (Vec<Pending>, Vec<Pending>) =
+            batch.into_iter().partition(|p| !p.deadline.is_some_and(|d| now >= d));
+        if !expired.is_empty() {
+            service.metrics.incr("requests_expired", expired.len() as u64);
+            for p in expired {
+                let _ = p.reply.send(Err(Error::Coordinator(
+                    "deadline exceeded while queued".into(),
+                )));
+            }
+        }
         if batch.is_empty() {
             continue;
         }

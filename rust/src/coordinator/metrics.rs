@@ -5,6 +5,7 @@
 //! snapshots. Histograms use fixed log-spaced buckets (1 µs .. ~67 s),
 //! which is plenty for p50/p95/p99 readouts.
 
+use crate::proto::{HistStats, StatsSnapshot};
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -28,6 +29,20 @@ impl Histogram {
         self.total += 1;
         self.sum_us += us;
         self.max_us = self.max_us.max(us);
+    }
+
+    /// The six-field quantile summary — the one place a [`Histogram`]
+    /// is reduced to [`HistStats`], shared by the CLI [`Summary`] path
+    /// and the wire [`StatsSnapshot`] path so the two cannot diverge.
+    fn stats(&self) -> HistStats {
+        HistStats {
+            count: self.total,
+            mean_us: self.mean_us(),
+            p50_us: self.quantile_us(0.50),
+            p95_us: self.quantile_us(0.95),
+            p99_us: self.quantile_us(0.99),
+            max_us: self.max_us,
+        }
     }
 
     /// Upper bound (µs) of the bucket containing quantile `q`.
@@ -55,16 +70,9 @@ impl Histogram {
     }
 }
 
-/// Snapshot of one metric family.
-#[derive(Clone, Debug)]
-pub struct Summary {
-    pub count: u64,
-    pub mean_us: f64,
-    pub p50_us: u64,
-    pub p95_us: u64,
-    pub p99_us: u64,
-    pub max_us: u64,
-}
+/// Snapshot of one metric family — the same shape the wire carries
+/// ([`HistStats`]), kept under its historical name for CLI callers.
+pub type Summary = HistStats;
 
 /// Registry of named counters and histograms.
 #[derive(Default)]
@@ -106,16 +114,23 @@ impl Metrics {
     }
 
     pub fn summary(&self, name: &str) -> Option<Summary> {
-        let h = self.histograms.lock().unwrap();
-        let h = h.get(name)?;
-        Some(Summary {
-            count: h.total,
-            mean_us: h.mean_us(),
-            p50_us: h.quantile_us(0.50),
-            p95_us: h.quantile_us(0.95),
-            p99_us: h.quantile_us(0.99),
-            max_us: h.max_us,
-        })
+        self.histograms.lock().unwrap().get(name).map(Histogram::stats)
+    }
+
+    /// Typed snapshot for the wire (`STATS` → [`StatsSnapshot`]).
+    /// `full = false` skips the latency histograms — the cheap half of
+    /// a snapshot (the `counters_only` request opt).
+    pub fn snapshot(&self, full: bool) -> StatsSnapshot {
+        let mut s = StatsSnapshot::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            s.counters.insert(k.clone(), *v);
+        }
+        if full {
+            for (k, h) in self.histograms.lock().unwrap().iter() {
+                s.hists.insert(k.clone(), h.stats());
+            }
+        }
+        s
     }
 
     /// Render all metrics as a human-readable block.
@@ -181,6 +196,23 @@ mod tests {
         let r = m.render();
         assert!(r.contains("batches: 4"));
         assert!(r.contains("exec: n=1"));
+    }
+
+    #[test]
+    fn snapshot_carries_counters_and_optionally_hists() {
+        let m = Metrics::new();
+        m.incr("requests", 7);
+        m.record("lat", Duration::from_micros(50));
+        let full = m.snapshot(true);
+        assert_eq!(full.counter("requests"), 7);
+        assert_eq!(full.hist("lat").unwrap().count, 1);
+        assert!(full.hist("lat").unwrap().max_us >= 50);
+        let cheap = m.snapshot(false);
+        assert_eq!(cheap.counter("requests"), 7);
+        assert!(cheap.hists.is_empty());
+        // the wire rendering round-trips the snapshot exactly
+        let kv = full.render_kv();
+        assert_eq!(StatsSnapshot::parse_kv(&kv).unwrap(), full);
     }
 
     #[test]

@@ -9,12 +9,14 @@
 //!    across cores; [`dse`] exposes the design-space sweep API.
 //! 2. **TNN serving** — a vLLM-style front-end: [`TnnHandle`] owns the
 //!    backend executables (native interpreter by default, PJRT under
-//!    `--features xla`) and the column weight state; [`DynamicBatcher`]
-//!    groups concurrent volley requests (dense or sparse
-//!    [`crate::volley::SpikeVolley`]s, mixed freely) into fixed-batch
-//!    executions (the column kernels run at B = 64) with a flush
-//!    timeout, and [`metrics`] records queue/latency/throughput and
-//!    volley-sparsity statistics.
+//!    `--features xla`) and the column weight state, and speaks the
+//!    [`crate::proto`] envelope via [`TnnHandle::submit`];
+//!    [`DynamicBatcher`] groups concurrent volley requests (dense or
+//!    sparse [`crate::volley::SpikeVolley`]s, mixed freely; whole
+//!    multi-volley requests via [`DynamicBatcher::submit_many`]) into
+//!    fixed-batch executions (the column kernels run at B = 64) with a
+//!    flush timeout, and [`metrics`] records queue/latency/throughput
+//!    and volley-sparsity statistics.
 //!
 //! Tokio is not available offline; the pool + channel machinery here is
 //! deliberately small and fully tested (see DESIGN.md §5).

@@ -13,6 +13,7 @@
 
 use crate::coordinator::metrics::Metrics;
 use crate::error::{Error, Result};
+use crate::proto::{Op, Outcome, Request, Response};
 use crate::rng::Xoshiro256;
 use crate::runtime::native::{row_path, RowPath};
 use crate::runtime::{BackendKind, Entry, Executable, Manifest, Runtime, Tensor};
@@ -23,14 +24,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Result for one volley.
-#[derive(Clone, Debug)]
-pub struct VolleyResult {
-    /// per-column first-crossing times (t_max = silent)
-    pub times: Vec<f32>,
-    /// WTA winner, if any column fired
-    pub winner: Option<usize>,
-}
+pub use crate::volley::VolleyResult;
 
 /// Engine-thread-private service (owns the possibly-`!Send` backend
 /// state).
@@ -311,6 +305,32 @@ impl TnnHandle {
         self.call(|tx| EngineMsg::Learn(volleys, tx))?
     }
 
+    /// Typed-envelope entry point: one [`Request`] in, one [`Response`]
+    /// out, every op handled. This is the direct (unbatched) engine
+    /// path — the TCP server routes `Infer`/`Learn` through the
+    /// [`crate::coordinator::DynamicBatcher`] instead, but speaks the
+    /// same envelope. `infer`/`learn` above remain as convenience
+    /// wrappers.
+    pub fn submit(&self, req: Request) -> Response {
+        let outcome = match req.op {
+            Op::Infer => match self.infer(req.volleys) {
+                Ok(rs) => Outcome::Results(rs),
+                Err(e) => Outcome::Error(e.to_string()),
+            },
+            Op::Learn => match self.learn(req.volleys) {
+                Ok(rs) => Outcome::Results(rs),
+                Err(e) => Outcome::Error(e.to_string()),
+            },
+            Op::Stats => Outcome::Stats(self.metrics.snapshot(!req.opts.counters_only)),
+            Op::Ping => Outcome::Pong,
+            Op::Quit => Outcome::Bye,
+        };
+        Response {
+            id: req.id,
+            outcome,
+        }
+    }
+
     pub fn weights(&self) -> Result<Tensor> {
         self.call(EngineMsg::GetWeights)
     }
@@ -410,6 +430,50 @@ mod tests {
                 + handle.metrics.counter("rows_silent_skipped")
                 == 2 * 24
         );
+    }
+
+    /// The typed-envelope entry point covers every op and agrees with
+    /// the convenience wrappers.
+    #[test]
+    fn submit_handles_every_op() {
+        if !native_env() {
+            return;
+        }
+        let handle = TnnHandle::open("/no-such-dir", 16, 6.0, 7).unwrap();
+        let volleys = vec![SpikeVolley::dense(vec![0.0; 16])];
+
+        let resp = handle.submit(Request::infer(volleys.clone()).with_id(3));
+        assert_eq!(resp.id, 3);
+        let direct = handle.infer(volleys.clone()).unwrap();
+        assert_eq!(resp.results().unwrap(), &direct[..]);
+
+        let resp = handle.submit(Request::learn(volleys.clone()).with_id(4));
+        assert_eq!(resp.results().unwrap().len(), 1);
+
+        let resp = handle.submit(Request::op(Op::Stats));
+        match resp.outcome {
+            Outcome::Stats(s) => {
+                assert!(s.counter("volleys_inferred") >= 1);
+                assert!(!s.hists.is_empty(), "full snapshot carries histograms");
+            }
+            other => panic!("{other:?}"),
+        }
+        let mut counters_only = Request::op(Op::Stats);
+        counters_only.opts.counters_only = true;
+        match handle.submit(counters_only).outcome {
+            Outcome::Stats(s) => assert!(s.hists.is_empty()),
+            other => panic!("{other:?}"),
+        }
+
+        assert_eq!(handle.submit(Request::op(Op::Ping)).outcome, Outcome::Pong);
+        assert_eq!(handle.submit(Request::op(Op::Quit)).outcome, Outcome::Bye);
+
+        // errors surface as typed outcomes, not Err returns
+        let bad = handle.submit(Request::infer(vec![SpikeVolley::dense(vec![1.0; 3])]));
+        match bad.outcome {
+            Outcome::Error(e) => assert!(e.contains("width"), "{e}"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub enum Error {
     /// grammar violation, ...).
     Volley(String),
 
+    /// Wire-protocol violation (bad magic, truncated frame, unknown
+    /// version/op, ...). Decoding never panics on hostile bytes; it
+    /// returns this.
+    Proto(String),
+
     /// CLI usage error.
     Usage(String),
 
@@ -57,6 +62,7 @@ impl fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Server(m) => write!(f, "server error: {m}"),
             Error::Volley(m) => write!(f, "volley error: {m}"),
+            Error::Proto(m) => write!(f, "proto error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),

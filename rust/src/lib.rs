@@ -20,9 +20,11 @@
 //!    PJRT/XLA path (`--features xla`) for the AOT-compiled JAX/Pallas
 //!    artifacts, first-class sparse spike volleys ([`volley`]) with a
 //!    density-aware kernel cutover, a thread-pool DSE scheduler and
-//!    dynamic volley batcher ([`coordinator`]), a TCP serving front-end
-//!    ([`server`]), experiment drivers for every figure and table in the
-//!    paper ([`experiments`]), and report renderers ([`report`]).
+//!    dynamic volley batcher ([`coordinator`]), a typed request/response
+//!    envelope with a v2 framed binary codec and a text compat codec
+//!    ([`proto`]), a TCP serving front-end speaking both ([`server`]),
+//!    experiment drivers for every figure and table in the paper
+//!    ([`experiments`]), and report renderers ([`report`]).
 //!
 //! The public API a downstream user touches first:
 //!
@@ -46,6 +48,7 @@ pub mod netlist;
 pub mod neuron;
 pub mod pc;
 pub mod power;
+pub mod proto;
 pub mod quickprop;
 pub mod report;
 pub mod rng;
@@ -58,4 +61,5 @@ pub mod topk;
 pub mod volley;
 
 pub use error::{Error, Result};
-pub use volley::SpikeVolley;
+pub use proto::{Outcome, Request, Response};
+pub use volley::{SpikeVolley, VolleyResult};

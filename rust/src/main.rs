@@ -9,8 +9,9 @@
 //! repro ablate-k            # E9 accuracy ablation
 //! repro dse                 # parallel design-space sweep
 //! repro cluster             # E10 end-to-end STDP clustering via PJRT
-//! repro serve [--addr A]    # TCP serving daemon over the batcher
-//! repro client [--addr A]   # load generator against a daemon
+//! repro serve [--addr A]    # TCP daemon (v2 framed + text compat)
+//! repro client [--addr A] [--framed] [--window W]
+//!                           # load generator against a daemon
 //! repro all                 # every figure/table, EXPERIMENTS.md-ready
 //! ```
 
@@ -41,7 +42,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT]";
+const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W]";
 
 fn emit(t: &Table, csv: bool) {
     if csv {
@@ -208,7 +209,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 64)?;
     let service = TnnHandle::open(&artifacts, n, 6.0, 7)?;
     println!(
-        "serving TNN column (n={n}, backend={}) on {addr} — protocol: INFER/LEARN/STATS/QUIT",
+        "serving TNN column (n={n}, backend={}) on {addr} — v2 framed protocol \
+         (HELLO/ACK, pipelined) + text compat (INFER/LEARN/SPARSE/SLEARN/STATS/PING/QUIT)",
         service.backend
     );
     let server = Server::new(service, BatcherConfig::default());
@@ -216,15 +218,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
+    use catwalk::proto::Request;
+    use catwalk::server::FramedClient;
+    use catwalk::SpikeVolley;
+
     let addr = args.get_string("addr", "127.0.0.1:7070");
     let n = args.get_usize("n", 64)?;
     let requests = args.get_usize("requests", 512)?;
     let conns = args.get_usize("connections", 8)?;
+    let framed = args.switch("framed");
+    // pipelining window for --framed: W request frames in flight
+    let window = args.get_usize("window", 1)?.max(1);
     let t0 = Instant::now();
     let per_conn = requests / conns;
     let latencies: Vec<Vec<std::time::Duration>> =
         catwalk::coordinator::pool::par_map(conns, (0..conns).collect(), |ci| {
-            let mut client = Client::connect(&addr).expect("connect");
             let enc = GrfEncoder::new(n / 8, 8, 0.0, 1.0);
             let mut series = ClusteredSeries::new(WorkloadConfig {
                 dims: n / 8,
@@ -232,14 +240,41 @@ fn cmd_client(args: &Args) -> Result<()> {
                 ..Default::default()
             });
             let mut lats = Vec::with_capacity(per_conn);
-            for _ in 0..per_conn {
-                let (_, s) = series.next_sample();
-                let v = enc.encode(&s);
-                let t = Instant::now();
-                client.infer(&v).expect("infer");
-                lats.push(t.elapsed());
+            if framed {
+                let mut client = FramedClient::connect(&addr).expect("connect");
+                let mut left = per_conn;
+                while left > 0 {
+                    let take = window.min(left);
+                    let reqs: Vec<Request> = (0..take)
+                        .map(|_| {
+                            let (_, s) = series.next_sample();
+                            Request::infer(vec![SpikeVolley::dense(enc.encode(&s))])
+                        })
+                        .collect();
+                    let t = Instant::now();
+                    let resps = client.call_many(reqs).expect("call_many");
+                    let d = t.elapsed();
+                    for r in &resps {
+                        r.results().expect("results");
+                    }
+                    // amortized per-request latency across the window
+                    for _ in 0..take {
+                        lats.push(d / take as u32);
+                    }
+                    left -= take;
+                }
+                let _ = client.quit();
+            } else {
+                let mut client = Client::connect(&addr).expect("connect");
+                for _ in 0..per_conn {
+                    let (_, s) = series.next_sample();
+                    let v = enc.encode(&s);
+                    let t = Instant::now();
+                    client.infer(&v).expect("infer");
+                    lats.push(t.elapsed());
+                }
+                let _ = client.quit();
             }
-            let _ = client.quit();
             lats
         });
     let mut all: Vec<std::time::Duration> = latencies.into_iter().flatten().collect();

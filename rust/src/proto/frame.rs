@@ -1,0 +1,748 @@
+//! The v2 framed binary codec: length-prefixed frames, HELLO/ACK
+//! version negotiation, request ids for client-side pipelining.
+//!
+//! Every frame is `magic | type | len | payload`; every multi-byte
+//! integer is big-endian and every `f32` travels as its IEEE-754 bit
+//! pattern, big-endian. `python/tests/test_proto_frames.py` is the
+//! wire-level twin of this file — the golden byte vectors there and in
+//! `rust/tests/proto_frames.rs` are the cross-language contract.
+//!
+//! ```text
+//! frame    := magic u32 ("CWK2") | type u8 | len u32 | payload[len]
+//! type     := 1 HELLO | 2 ACK | 3 REQUEST | 4 RESPONSE
+//!
+//! HELLO    := min_version u16 | max_version u16        (client → server)
+//! ACK      := version u16 | n u32 | c u32 | t_max u32  (server → client)
+//!
+//! REQUEST  := id u64 | op u8 | flags u8
+//!             | deadline_ms u32  (iff flags bit 1)
+//!             | nvolleys u16 | volley*
+//! op       := 1 INFER | 2 LEARN | 3 STATS | 4 PING | 5 QUIT
+//! flags    := bit 0 sparse_reply | bit 1 has_deadline
+//!             | bit 2 counters_only          (other bits: error)
+//! volley   := 0 u8 | n u32 | n × f32                   (dense)
+//!           | 1 u8 | n u32 | nnz u32 | nnz × (line u32, time f32)
+//!
+//! RESPONSE := id u64 | status u8 | body
+//! status   := 0 RESULTS | 1 STATS | 2 PONG | 3 BYE | 4 ERROR
+//! RESULTS  := count u16 | (winner i32 (-1 = none) | c u32 | c × f32)*
+//! STATS    := utf8 key=value block (proto::stats schema)
+//! ERROR    := utf8 message          PONG/BYE := empty
+//! ```
+//!
+//! The handshake: the client opens with HELLO carrying the version
+//! range it speaks; the server picks the highest common version (today
+//! exactly [`VERSION`]) and answers ACK — which also tells the client
+//! the column geometry `(n, c, t_max)`, so a framed client needs no
+//! out-of-band configuration. No common version, or a first frame that
+//! is not HELLO, is answered with an ERROR response (id 0) and a close.
+//!
+//! Decoding hostile bytes — truncated header, bad magic, oversized
+//! length, unknown version/type/op/flags, trailing bytes — returns
+//! [`Error::Proto`]; nothing in this module panics on wire input.
+
+use crate::error::{Error, Result};
+use crate::proto::{Op, Outcome, Request, RequestOpts, Response, StatsSnapshot};
+use crate::volley::{SpikeVolley, VolleyResult};
+use std::io::{Read, Write};
+
+/// Frame magic: `b"CWK2"`.
+pub const MAGIC: [u8; 4] = *b"CWK2";
+/// The one protocol version this build speaks.
+pub const VERSION: u16 = 2;
+/// Hard cap on a frame payload (16 MiB) — a hostile length prefix must
+/// not become an allocation.
+pub const MAX_PAYLOAD: usize = 1 << 24;
+
+/// Frame discriminator (the `type` byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameType {
+    Hello = 1,
+    Ack = 2,
+    Request = 3,
+    Response = 4,
+}
+
+impl FrameType {
+    fn from_u8(b: u8) -> Result<FrameType> {
+        match b {
+            1 => Ok(FrameType::Hello),
+            2 => Ok(FrameType::Ack),
+            3 => Ok(FrameType::Request),
+            4 => Ok(FrameType::Response),
+            other => Err(Error::Proto(format!("unknown frame type {other}"))),
+        }
+    }
+}
+
+/// The server's half of the handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ack {
+    pub version: u16,
+    /// column input width
+    pub n: u32,
+    /// number of columns (result width)
+    pub c: u32,
+    pub t_max: u32,
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Write one frame (header + payload) and flush nothing — callers batch
+/// frames and flush once (that is the pipelining win).
+pub fn write_frame(w: &mut impl Write, ty: FrameType, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(Error::Proto(format!(
+            "payload {} exceeds max frame {MAX_PAYLOAD}",
+            payload.len()
+        )));
+    }
+    let mut head = [0u8; 9];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = ty as u8;
+    head[5..9].copy_from_slice(&(payload.len() as u32).to_be_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF *before* any byte of a
+/// frame; a connection dying mid-frame is a typed error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(FrameType, Vec<u8>)>> {
+    let mut magic = [0u8; 4];
+    match read_full(r, &mut magic)? {
+        0 => return Ok(None),
+        4 => {}
+        _ => return Err(Error::Proto("truncated frame header".into())),
+    }
+    if magic != MAGIC {
+        return Err(Error::Proto(format!(
+            "bad magic {magic:02x?} (want {MAGIC:02x?})"
+        )));
+    }
+    read_frame_after_magic(r).map(Some)
+}
+
+/// Read the rest of a frame whose 4 magic bytes were already consumed
+/// and verified (the server's protocol sniffer does this).
+pub fn read_frame_after_magic(r: &mut impl Read) -> Result<(FrameType, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    if read_full(r, &mut head)? != 5 {
+        return Err(Error::Proto("truncated frame header".into()));
+    }
+    let ty = FrameType::from_u8(head[0])?;
+    let len = u32::from_be_bytes([head[1], head[2], head[3], head[4]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(Error::Proto(format!(
+            "oversized frame: {len} > {MAX_PAYLOAD}"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    if read_full(r, &mut payload)? != len {
+        return Err(Error::Proto("truncated frame payload".into()));
+    }
+    Ok((ty, payload))
+}
+
+/// Fill `buf` as far as the stream allows; returns bytes read (short
+/// only at EOF). Unlike `read_exact`, a clean EOF at offset 0 is
+/// distinguishable from a mid-buffer one.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => break,
+            Ok(k) => off += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(off)
+}
+
+// ------------------------------------------------------------- handshake
+
+pub fn encode_hello(min_version: u16, max_version: u16) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4);
+    p.extend_from_slice(&min_version.to_be_bytes());
+    p.extend_from_slice(&max_version.to_be_bytes());
+    p
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<(u16, u16)> {
+    let mut cur = Cur::new(payload);
+    let min = cur.u16()?;
+    let max = cur.u16()?;
+    cur.finish()?;
+    if min > max {
+        return Err(Error::Proto(format!("bad version range {min}..{max}")));
+    }
+    Ok((min, max))
+}
+
+pub fn encode_ack(ack: &Ack) -> Vec<u8> {
+    let mut p = Vec::with_capacity(14);
+    p.extend_from_slice(&ack.version.to_be_bytes());
+    p.extend_from_slice(&ack.n.to_be_bytes());
+    p.extend_from_slice(&ack.c.to_be_bytes());
+    p.extend_from_slice(&ack.t_max.to_be_bytes());
+    p
+}
+
+pub fn decode_ack(payload: &[u8]) -> Result<Ack> {
+    let mut cur = Cur::new(payload);
+    let ack = Ack {
+        version: cur.u16()?,
+        n: cur.u32()?,
+        c: cur.u32()?,
+        t_max: cur.u32()?,
+    };
+    cur.finish()?;
+    Ok(ack)
+}
+
+/// The version the server picks for a client range, if any.
+pub fn negotiate(client_min: u16, client_max: u16) -> Option<u16> {
+    if (client_min..=client_max).contains(&VERSION) {
+        Some(VERSION)
+    } else {
+        None
+    }
+}
+
+// -------------------------------------------------------------- requests
+
+const FLAG_SPARSE_REPLY: u8 = 1;
+const FLAG_DEADLINE: u8 = 2;
+const FLAG_COUNTERS_ONLY: u8 = 4;
+
+fn op_to_u8(op: Op) -> u8 {
+    match op {
+        Op::Infer => 1,
+        Op::Learn => 2,
+        Op::Stats => 3,
+        Op::Ping => 4,
+        Op::Quit => 5,
+    }
+}
+
+fn op_from_u8(b: u8) -> Result<Op> {
+    match b {
+        1 => Ok(Op::Infer),
+        2 => Ok(Op::Learn),
+        3 => Ok(Op::Stats),
+        4 => Ok(Op::Ping),
+        5 => Ok(Op::Quit),
+        other => Err(Error::Proto(format!("unknown op {other}"))),
+    }
+}
+
+/// Encode a [`Request`] as a REQUEST frame payload.
+pub fn encode_request(req: &Request) -> Result<Vec<u8>> {
+    if req.volleys.len() > u16::MAX as usize {
+        return Err(Error::Proto(format!(
+            "{} volleys exceed the u16 frame field",
+            req.volleys.len()
+        )));
+    }
+    let mut p = Vec::new();
+    p.extend_from_slice(&req.id.to_be_bytes());
+    p.push(op_to_u8(req.op));
+    let mut flags = 0u8;
+    if req.opts.sparse_reply {
+        flags |= FLAG_SPARSE_REPLY;
+    }
+    if req.opts.deadline_ms.is_some() {
+        flags |= FLAG_DEADLINE;
+    }
+    if req.opts.counters_only {
+        flags |= FLAG_COUNTERS_ONLY;
+    }
+    p.push(flags);
+    if let Some(ms) = req.opts.deadline_ms {
+        p.extend_from_slice(&ms.to_be_bytes());
+    }
+    p.extend_from_slice(&(req.volleys.len() as u16).to_be_bytes());
+    for v in &req.volleys {
+        encode_volley(&mut p, v)?;
+    }
+    Ok(p)
+}
+
+/// Decode a REQUEST frame payload.
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut cur = Cur::new(payload);
+    let id = cur.u64()?;
+    let op = op_from_u8(cur.u8()?)?;
+    let flags = cur.u8()?;
+    if flags & !(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY) != 0 {
+        return Err(Error::Proto(format!("unknown request flags {flags:#x}")));
+    }
+    let deadline_ms = if flags & FLAG_DEADLINE != 0 {
+        Some(cur.u32()?)
+    } else {
+        None
+    };
+    let nvolleys = cur.u16()? as usize;
+    let mut volleys = Vec::with_capacity(nvolleys.min(1024));
+    for _ in 0..nvolleys {
+        volleys.push(decode_volley(&mut cur)?);
+    }
+    cur.finish()?;
+    Ok(Request {
+        id,
+        op,
+        volleys,
+        opts: RequestOpts {
+            sparse_reply: flags & FLAG_SPARSE_REPLY != 0,
+            deadline_ms,
+            counters_only: flags & FLAG_COUNTERS_ONLY != 0,
+        },
+    })
+}
+
+fn encode_volley(p: &mut Vec<u8>, v: &SpikeVolley) -> Result<()> {
+    let n = v.n();
+    if n > u32::MAX as usize {
+        return Err(Error::Proto(format!("volley width {n} exceeds u32")));
+    }
+    match v {
+        SpikeVolley::Dense(times) => {
+            p.push(0);
+            p.extend_from_slice(&(n as u32).to_be_bytes());
+            for &t in times {
+                p.extend_from_slice(&t.to_bits().to_be_bytes());
+            }
+        }
+        SpikeVolley::Sparse { spikes, .. } => {
+            p.push(1);
+            p.extend_from_slice(&(n as u32).to_be_bytes());
+            p.extend_from_slice(&(spikes.len() as u32).to_be_bytes());
+            for &(line, t) in spikes {
+                p.extend_from_slice(&(line as u32).to_be_bytes());
+                p.extend_from_slice(&t.to_bits().to_be_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn decode_volley(cur: &mut Cur) -> Result<SpikeVolley> {
+    match cur.u8()? {
+        0 => {
+            let n = cur.u32()? as usize;
+            cur.reserve_check(n, 4)?;
+            let times = (0..n).map(|_| cur.f32()).collect::<Result<Vec<f32>>>()?;
+            Ok(SpikeVolley::Dense(times))
+        }
+        1 => {
+            let n = cur.u32()? as usize;
+            let nnz = cur.u32()? as usize;
+            cur.reserve_check(nnz, 8)?;
+            let mut spikes = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                let line = cur.u32()? as usize;
+                let t = cur.f32()?;
+                if line >= n {
+                    return Err(Error::Proto(format!(
+                        "sparse volley line {line} out of range (n = {n})"
+                    )));
+                }
+                spikes.push((line, t));
+            }
+            // The codec enforces what it can without knowing t_max:
+            // in-range, strictly ascending lines. Silent entries
+            // (time >= t_max / NaN) are tolerated here and
+            // canonicalized by the volley accessors.
+            if spikes.windows(2).any(|w| w[0].0 >= w[1].0) {
+                return Err(Error::Proto(
+                    "sparse volley lines not strictly ascending".into(),
+                ));
+            }
+            Ok(SpikeVolley::Sparse { n, spikes })
+        }
+        other => Err(Error::Proto(format!("unknown volley repr {other}"))),
+    }
+}
+
+// ------------------------------------------------------------- responses
+
+const STATUS_RESULTS: u8 = 0;
+const STATUS_STATS: u8 = 1;
+const STATUS_PONG: u8 = 2;
+const STATUS_BYE: u8 = 3;
+const STATUS_ERROR: u8 = 4;
+
+/// Encode a [`Response`] as a RESPONSE frame payload. Results always
+/// carry the dense time vector — the sparse reply encoding is a text-
+/// protocol economy; the binary frame is already compact.
+pub fn encode_response(resp: &Response) -> Result<Vec<u8>> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&resp.id.to_be_bytes());
+    match &resp.outcome {
+        Outcome::Results(rs) => {
+            if rs.len() > u16::MAX as usize {
+                return Err(Error::Proto(format!(
+                    "{} results exceed the u16 frame field",
+                    rs.len()
+                )));
+            }
+            p.push(STATUS_RESULTS);
+            p.extend_from_slice(&(rs.len() as u16).to_be_bytes());
+            for r in rs {
+                let winner: i32 = r.winner.map(|w| w as i32).unwrap_or(-1);
+                p.extend_from_slice(&winner.to_be_bytes());
+                p.extend_from_slice(&(r.times.len() as u32).to_be_bytes());
+                for &t in &r.times {
+                    p.extend_from_slice(&t.to_bits().to_be_bytes());
+                }
+            }
+        }
+        Outcome::Stats(s) => {
+            p.push(STATUS_STATS);
+            p.extend_from_slice(s.render_kv().as_bytes());
+        }
+        Outcome::Pong => p.push(STATUS_PONG),
+        Outcome::Bye => p.push(STATUS_BYE),
+        Outcome::Error(msg) => {
+            p.push(STATUS_ERROR);
+            p.extend_from_slice(msg.as_bytes());
+        }
+    }
+    Ok(p)
+}
+
+/// Decode a RESPONSE frame payload.
+pub fn decode_response(payload: &[u8]) -> Result<Response> {
+    let mut cur = Cur::new(payload);
+    let id = cur.u64()?;
+    let status = cur.u8()?;
+    let outcome = match status {
+        STATUS_RESULTS => {
+            let count = cur.u16()? as usize;
+            let mut rs = Vec::with_capacity(count.min(1024));
+            for _ in 0..count {
+                let winner = cur.i32()?;
+                let c = cur.u32()? as usize;
+                cur.reserve_check(c, 4)?;
+                let times = (0..c).map(|_| cur.f32()).collect::<Result<Vec<f32>>>()?;
+                let winner = if winner < 0 {
+                    None
+                } else {
+                    Some(winner as usize)
+                };
+                rs.push(VolleyResult { times, winner });
+            }
+            cur.finish()?;
+            Outcome::Results(rs)
+        }
+        STATUS_STATS => Outcome::Stats(StatsSnapshot::parse_kv(&cur.rest_utf8()?)?),
+        STATUS_PONG => {
+            cur.finish()?;
+            Outcome::Pong
+        }
+        STATUS_BYE => {
+            cur.finish()?;
+            Outcome::Bye
+        }
+        STATUS_ERROR => Outcome::Error(cur.rest_utf8()?),
+        other => return Err(Error::Proto(format!("unknown response status {other}"))),
+    };
+    Ok(Response { id, outcome })
+}
+
+// ---------------------------------------------------------------- cursor
+
+/// Bounds-checked big-endian reader over a frame payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, off: 0 }
+    }
+
+    fn take(&mut self, k: usize) -> Result<&'a [u8]> {
+        if self.off + k > self.b.len() {
+            return Err(Error::Proto(format!(
+                "short payload: want {k} bytes at offset {}, have {}",
+                self.off,
+                self.b.len() - self.off
+            )));
+        }
+        let s = &self.b[self.off..self.off + k];
+        self.off += k;
+        Ok(s)
+    }
+
+    /// Guard a count field against hostile values: `count` items of
+    /// `item_bytes` each must actually fit in the remaining payload.
+    fn reserve_check(&self, count: usize, item_bytes: usize) -> Result<()> {
+        let remaining = self.b.len() - self.off;
+        if count.checked_mul(item_bytes).map_or(true, |need| need > remaining) {
+            return Err(Error::Proto(format!(
+                "count {count} x {item_bytes}B exceeds remaining payload ({remaining}B)"
+            )));
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_be_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_be_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(self.u32()? as i32)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_be_bytes(a))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn rest_utf8(&mut self) -> Result<String> {
+        let s = &self.b[self.off..];
+        self.off = self.b.len();
+        String::from_utf8(s.to_vec())
+            .map_err(|e| Error::Proto(format!("payload is not utf-8: {e}")))
+    }
+
+    /// Every byte of the payload must have been consumed.
+    fn finish(&self) -> Result<()> {
+        if self.off != self.b.len() {
+            return Err(Error::Proto(format!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.off
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_ack_roundtrip_and_negotiation() {
+        let (min, max) = decode_hello(&encode_hello(1, 4)).unwrap();
+        assert_eq!((min, max), (1, 4));
+        assert!(decode_hello(&encode_hello(4, 1)).is_err());
+        assert!(decode_hello(&[0, 1]).is_err());
+        assert!(decode_hello(&[0, 1, 0, 2, 9]).is_err());
+
+        let ack = Ack {
+            version: VERSION,
+            n: 64,
+            c: 16,
+            t_max: 16,
+        };
+        assert_eq!(decode_ack(&encode_ack(&ack)).unwrap(), ack);
+
+        assert_eq!(negotiate(1, 4), Some(2));
+        assert_eq!(negotiate(2, 2), Some(2));
+        assert_eq!(negotiate(3, 9), None);
+        assert_eq!(negotiate(0, 1), None);
+    }
+
+    #[test]
+    fn request_roundtrip_every_op_and_flag() {
+        let volleys = vec![
+            SpikeVolley::dense(vec![1.0, 16.0, 2.5]),
+            SpikeVolley::sparse(3, vec![(0, 1.0), (2, 4.5)], 16).unwrap(),
+        ];
+        for op in [Op::Infer, Op::Learn, Op::Stats, Op::Ping, Op::Quit] {
+            let req = Request {
+                id: 0xDEADBEEF00C0FFEE,
+                op,
+                volleys: volleys.clone(),
+                opts: RequestOpts {
+                    sparse_reply: true,
+                    deadline_ms: Some(1234),
+                    counters_only: true,
+                },
+            };
+            let enc = encode_request(&req).unwrap();
+            assert_eq!(decode_request(&enc).unwrap(), req);
+        }
+        // no flags, no volleys
+        let req = Request::op(Op::Ping).with_id(1);
+        assert_eq!(decode_request(&encode_request(&req).unwrap()).unwrap(), req);
+    }
+
+    #[test]
+    fn response_roundtrip_every_status() {
+        let cases = vec![
+            Outcome::Results(vec![
+                VolleyResult {
+                    times: vec![4.0, 16.0, 2.0],
+                    winner: Some(2),
+                },
+                VolleyResult {
+                    times: vec![16.0],
+                    winner: None,
+                },
+            ]),
+            Outcome::Results(Vec::new()),
+            Outcome::Stats(StatsSnapshot::new()),
+            Outcome::Pong,
+            Outcome::Bye,
+            Outcome::Error("boom with unicode ✗".into()),
+        ];
+        for outcome in cases {
+            let resp = Response { id: 42, outcome };
+            let enc = encode_response(&resp).unwrap();
+            assert_eq!(decode_response(&enc).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_errors() {
+        // truncated request payload at every prefix length
+        let req = Request::infer(vec![SpikeVolley::dense(vec![1.0, 2.0])]).with_id(3);
+        let enc = encode_request(&req).unwrap();
+        for cut in 0..enc.len() {
+            assert!(decode_request(&enc[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing garbage
+        let mut noisy = enc.clone();
+        noisy.push(0);
+        assert!(decode_request(&noisy).is_err());
+        // unknown op / flags / repr
+        let mut bad_op = enc.clone();
+        bad_op[8] = 99;
+        assert!(matches!(
+            decode_request(&bad_op).unwrap_err(),
+            Error::Proto(_)
+        ));
+        let mut bad_flags = enc.clone();
+        bad_flags[9] = 0x80;
+        assert!(decode_request(&bad_flags).is_err());
+        let mut bad_repr = enc.clone();
+        bad_repr[12] = 7; // first volley's repr byte
+        assert!(decode_request(&bad_repr).is_err());
+
+        // hostile counts cannot trigger huge allocations
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&1u64.to_be_bytes());
+        huge.push(1); // op infer
+        huge.push(0); // flags
+        huge.extend_from_slice(&1u16.to_be_bytes());
+        huge.push(0); // dense
+        huge.extend_from_slice(&u32::MAX.to_be_bytes()); // n = 4 billion
+        assert!(decode_request(&huge).is_err());
+
+        // response side
+        let resp = Response {
+            id: 1,
+            outcome: Outcome::Results(vec![VolleyResult {
+                times: vec![1.0],
+                winner: Some(0),
+            }]),
+        };
+        let enc = encode_response(&resp).unwrap();
+        for cut in 0..enc.len() {
+            assert!(decode_response(&enc[..cut]).is_err(), "cut={cut}");
+        }
+        let mut bad_status = enc.clone();
+        bad_status[8] = 9;
+        assert!(decode_response(&bad_status).is_err());
+    }
+
+    #[test]
+    fn sparse_volley_invariants_enforced_on_decode() {
+        // out-of-range line
+        let mut p = Vec::new();
+        p.extend_from_slice(&1u64.to_be_bytes());
+        p.push(1); // infer
+        p.push(0);
+        p.extend_from_slice(&1u16.to_be_bytes());
+        p.push(1); // sparse
+        p.extend_from_slice(&4u32.to_be_bytes()); // n = 4
+        p.extend_from_slice(&1u32.to_be_bytes()); // nnz = 1
+        p.extend_from_slice(&9u32.to_be_bytes()); // line 9 >= n
+        p.extend_from_slice(&1.0f32.to_bits().to_be_bytes());
+        assert!(decode_request(&p).is_err());
+
+        // duplicate / unsorted lines
+        let mut p = Vec::new();
+        p.extend_from_slice(&1u64.to_be_bytes());
+        p.push(1);
+        p.push(0);
+        p.extend_from_slice(&1u16.to_be_bytes());
+        p.push(1);
+        p.extend_from_slice(&4u32.to_be_bytes());
+        p.extend_from_slice(&2u32.to_be_bytes());
+        for line in [2u32, 1u32] {
+            p.extend_from_slice(&line.to_be_bytes());
+            p.extend_from_slice(&1.0f32.to_bits().to_be_bytes());
+        }
+        assert!(decode_request(&p).is_err());
+    }
+
+    #[test]
+    fn frame_io_roundtrip_and_hostile_streams() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameType::Hello, &encode_hello(2, 2)).unwrap();
+        write_frame(&mut buf, FrameType::Request, &[1, 2, 3]).unwrap();
+        let mut r = &buf[..];
+        let (t1, p1) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(t1, FrameType::Hello);
+        assert_eq!(decode_hello(&p1).unwrap(), (2, 2));
+        let (t2, p2) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((t2, p2), (FrameType::Request, vec![1, 2, 3]));
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+
+        // truncated header
+        let mut r = &buf[..2];
+        assert!(read_frame(&mut r).is_err());
+        // bad magic
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        let mut r = &bad[..];
+        assert!(matches!(read_frame(&mut r).unwrap_err(), Error::Proto(_)));
+        // oversized length
+        let mut big = Vec::new();
+        big.extend_from_slice(&MAGIC);
+        big.push(FrameType::Request as u8);
+        big.extend_from_slice(&(MAX_PAYLOAD as u32 + 1).to_be_bytes());
+        let mut r = &big[..];
+        assert!(read_frame(&mut r)
+            .unwrap_err()
+            .to_string()
+            .contains("oversized"));
+        // unknown frame type
+        let mut unk = Vec::new();
+        unk.extend_from_slice(&MAGIC);
+        unk.push(77);
+        unk.extend_from_slice(&0u32.to_be_bytes());
+        let mut r = &unk[..];
+        assert!(read_frame(&mut r).is_err());
+        // truncated payload (header promises more than the stream has)
+        let mut short = Vec::new();
+        short.extend_from_slice(&MAGIC);
+        short.push(FrameType::Request as u8);
+        short.extend_from_slice(&10u32.to_be_bytes());
+        short.extend_from_slice(&[1, 2, 3]);
+        let mut r = &short[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

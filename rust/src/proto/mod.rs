@@ -1,0 +1,210 @@
+//! The serving envelope: one typed request/response model, two codecs.
+//!
+//! The serving surface used to be a verb zoo — four ad-hoc text verbs
+//! (`INFER`/`LEARN`/`SPARSE`/`SLEARN`), each with its own parse path and
+//! its own `Client` method, and no way to express per-request options.
+//! This module replaces that with the layering the TNN microarchitecture
+//! framework papers argue for (DESIGN.md §2.2): the wire format is a
+//! pluggable **codec** over one typed **envelope**, and everything above
+//! the codec (`server`, `coordinator`, examples, benches) speaks only
+//! the envelope:
+//!
+//! ```text
+//!   [frame]  v2 length-prefixed binary framing, HELLO/ACK-negotiated
+//!   [text]   the legacy newline protocol, as a thin compat adapter
+//!      │
+//!      ▼  encode/decode
+//!   [Request { id, op, volleys, opts }]  ──►  handle  ──►  [Response]
+//! ```
+//!
+//! * [`Request`] — a request id (client-side pipelining), an [`Op`], the
+//!   spike volleys (multi-volley batch requests are first-class), and
+//!   [`RequestOpts`] (reply encoding, deadline, stats granularity).
+//! * [`Response`] — the echoed id plus an [`Outcome`]: results, a typed
+//!   [`StatsSnapshot`], `Pong`/`Bye`, or an error string.
+//! * [`frame`] — the v2 binary framing (magic + length prefix, version
+//!   negotiated by a HELLO/ACK handshake). Hostile bytes produce
+//!   [`crate::Error::Proto`], never a panic.
+//! * [`text`] — the legacy text protocol re-expressed over the envelope;
+//!   every legacy reply is byte-for-byte what the old per-verb plumbing
+//!   produced.
+//!
+//! The envelope depends only on [`crate::volley`] (the data plane);
+//! the coordinator and server layer on top of it.
+
+pub mod frame;
+pub mod stats;
+pub mod text;
+
+pub use stats::{HistStats, StatsSnapshot};
+
+use crate::volley::{SpikeVolley, VolleyResult};
+
+/// What a request asks the serving stack to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Run the forward kernel over the request's volleys.
+    Infer,
+    /// One online-STDP learning step over the request's volleys.
+    Learn,
+    /// Snapshot the serving metrics (see [`RequestOpts::counters_only`]).
+    Stats,
+    /// Liveness probe; answered with [`Outcome::Pong`].
+    Ping,
+    /// Close the connection; answered with [`Outcome::Bye`].
+    Quit,
+}
+
+/// Per-request options the old verb-per-method API could not express.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestOpts {
+    /// Reply with only the fired `(column, time)` pairs instead of the
+    /// dense time vector (the text codec maps `SPARSE`/`SLEARN` here).
+    pub sparse_reply: bool,
+    /// Drop the request (typed error, no compute) if it has already
+    /// waited longer than this when it reaches dispatch.
+    pub deadline_ms: Option<u32>,
+    /// For [`Op::Stats`]: skip the latency histograms and return the
+    /// counters only (the cheap half of a snapshot).
+    pub counters_only: bool,
+}
+
+/// One typed request: the whole serving surface in a single struct.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Client-chosen id, echoed verbatim in the [`Response`]; lets a
+    /// pipelined client match responses to in-flight requests.
+    pub id: u64,
+    pub op: Op,
+    /// Zero or more volleys; a multi-volley `Infer`/`Learn` is one
+    /// request (and, under the frame codec, one frame).
+    pub volleys: Vec<SpikeVolley>,
+    pub opts: RequestOpts,
+}
+
+impl Request {
+    pub fn infer(volleys: Vec<SpikeVolley>) -> Request {
+        Request {
+            id: 0,
+            op: Op::Infer,
+            volleys,
+            opts: RequestOpts::default(),
+        }
+    }
+
+    pub fn learn(volleys: Vec<SpikeVolley>) -> Request {
+        Request {
+            id: 0,
+            op: Op::Learn,
+            volleys,
+            opts: RequestOpts::default(),
+        }
+    }
+
+    /// A bare op with no volleys (`Stats`, `Ping`, `Quit`).
+    pub fn op(op: Op) -> Request {
+        Request {
+            id: 0,
+            op,
+            volleys: Vec::new(),
+            opts: RequestOpts::default(),
+        }
+    }
+
+    pub fn with_id(mut self, id: u64) -> Request {
+        self.id = id;
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, ms: u32) -> Request {
+        self.opts.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn with_sparse_reply(mut self) -> Request {
+        self.opts.sparse_reply = true;
+        self
+    }
+}
+
+/// What happened to a request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    /// One result per volley, in request order.
+    Results(Vec<VolleyResult>),
+    Stats(StatsSnapshot),
+    Pong,
+    Bye,
+    /// The request failed; the string is the rendered [`crate::Error`].
+    Error(String),
+}
+
+/// One typed response, echoing the request id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub outcome: Outcome,
+}
+
+impl Response {
+    pub fn error(id: u64, msg: impl Into<String>) -> Response {
+        Response {
+            id,
+            outcome: Outcome::Error(msg.into()),
+        }
+    }
+
+    /// The results, or the error a non-`Results` outcome amounts to.
+    pub fn results(&self) -> crate::Result<&[VolleyResult]> {
+        match &self.outcome {
+            Outcome::Results(rs) => Ok(rs),
+            Outcome::Error(e) => Err(crate::Error::Server(e.clone())),
+            other => Err(crate::Error::Proto(format!(
+                "expected results, got {other:?}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builders_compose() {
+        let r = Request::infer(vec![SpikeVolley::dense(vec![1.0, 16.0])])
+            .with_id(9)
+            .with_deadline_ms(50)
+            .with_sparse_reply();
+        assert_eq!(r.id, 9);
+        assert_eq!(r.op, Op::Infer);
+        assert_eq!(r.opts.deadline_ms, Some(50));
+        assert!(r.opts.sparse_reply);
+        assert!(!r.opts.counters_only);
+
+        let s = Request::op(Op::Stats);
+        assert!(s.volleys.is_empty());
+        assert_eq!(s.opts, RequestOpts::default());
+    }
+
+    #[test]
+    fn response_results_accessor() {
+        let ok = Response {
+            id: 1,
+            outcome: Outcome::Results(vec![VolleyResult {
+                times: vec![1.0],
+                winner: Some(0),
+            }]),
+        };
+        assert_eq!(ok.results().unwrap().len(), 1);
+        assert!(Response::error(1, "boom").results().is_err());
+        let pong = Response {
+            id: 1,
+            outcome: Outcome::Pong,
+        };
+        assert!(matches!(
+            pong.results().unwrap_err(),
+            crate::Error::Proto(_)
+        ));
+    }
+}

@@ -1,0 +1,195 @@
+//! Typed, versioned `STATS`: a [`StatsSnapshot`] renders to stable
+//! `key=value` lines sorted by key and parses back losslessly.
+//!
+//! The old `STATS` reply was the free-form human block of
+//! `Metrics::render` — unversioned, unsorted histogram prose that no
+//! client could consume without scraping. The wire now carries this
+//! schema instead (the human block survives for CLI status output):
+//!
+//! ```text
+//! counter.<name>=<u64>
+//! hist.<name>.count=<u64>
+//! hist.<name>.max_us=<u64>
+//! hist.<name>.mean_us=<f64>
+//! hist.<name>.p50_us=<u64>
+//! hist.<name>.p95_us=<u64>
+//! hist.<name>.p99_us=<u64>
+//! schema=1
+//! ```
+//!
+//! Lines are sorted lexicographically by the full key, so the rendering
+//! is deterministic and diff-friendly; unknown keys are skipped on
+//! parse, so a `schema=1` reader survives additive growth. `f64`
+//! values use Rust's shortest-round-trip `Display`, making
+//! render → parse the exact identity (property-tested in
+//! `rust/tests/proto_frames.rs`).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// The schema version stamped into every rendering.
+pub const STATS_SCHEMA: u32 = 1;
+
+/// Quantile summary of one latency histogram.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistStats {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// A typed snapshot of the serving metrics registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistStats>,
+}
+
+impl StatsSnapshot {
+    pub fn new() -> StatsSnapshot {
+        StatsSnapshot::default()
+    }
+
+    /// A counter's value (0 if absent, mirroring `Metrics::counter`).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistStats> {
+        self.hists.get(name)
+    }
+
+    /// Render as sorted `key=value` lines, each newline-terminated.
+    pub fn render_kv(&self) -> String {
+        let mut lines: Vec<String> = Vec::new();
+        lines.push(format!("schema={STATS_SCHEMA}"));
+        for (name, v) in &self.counters {
+            lines.push(format!("counter.{name}={v}"));
+        }
+        for (name, h) in &self.hists {
+            lines.push(format!("hist.{name}.count={}", h.count));
+            lines.push(format!("hist.{name}.max_us={}", h.max_us));
+            lines.push(format!("hist.{name}.mean_us={}", h.mean_us));
+            lines.push(format!("hist.{name}.p50_us={}", h.p50_us));
+            lines.push(format!("hist.{name}.p95_us={}", h.p95_us));
+            lines.push(format!("hist.{name}.p99_us={}", h.p99_us));
+        }
+        lines.sort();
+        let mut out = String::new();
+        for l in lines {
+            out.push_str(&l);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a `key=value` block (the output of [`render_kv`], possibly
+    /// from a newer server — unknown keys are skipped). Malformed lines
+    /// and unparseable numbers are typed errors.
+    ///
+    /// [`render_kv`]: StatsSnapshot::render_kv
+    pub fn parse_kv(block: &str) -> Result<StatsSnapshot> {
+        let mut snap = StatsSnapshot::new();
+        for line in block.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Proto(format!("stats line without `=`: `{line}`")))?;
+            if key == "schema" {
+                let _: u32 = parse_num(key, value)?;
+            } else if let Some(name) = key.strip_prefix("counter.") {
+                snap.counters.insert(name.to_string(), parse_num(key, value)?);
+            } else if let Some(rest) = key.strip_prefix("hist.") {
+                let (name, field) = rest
+                    .rsplit_once('.')
+                    .ok_or_else(|| Error::Proto(format!("bad hist key `{key}`")))?;
+                let h = snap.hists.entry(name.to_string()).or_default();
+                match field {
+                    "count" => h.count = parse_num(key, value)?,
+                    "max_us" => h.max_us = parse_num(key, value)?,
+                    "mean_us" => h.mean_us = parse_num(key, value)?,
+                    "p50_us" => h.p50_us = parse_num(key, value)?,
+                    "p95_us" => h.p95_us = parse_num(key, value)?,
+                    "p99_us" => h.p99_us = parse_num(key, value)?,
+                    _ => {} // additive growth: unknown hist field
+                }
+            }
+            // unknown top-level prefixes are skipped (schema=1 contract)
+        }
+        Ok(snap)
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    value
+        .parse()
+        .map_err(|e| Error::Proto(format!("bad stats value `{key}={value}`: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StatsSnapshot {
+        let mut s = StatsSnapshot::new();
+        s.counters.insert("requests".into(), 12);
+        s.counters.insert("batches".into(), 3);
+        s.hists.insert(
+            "request_latency".into(),
+            HistStats {
+                count: 12,
+                mean_us: 93.25,
+                p50_us: 64,
+                p95_us: 128,
+                p99_us: 256,
+                max_us: 301,
+            },
+        );
+        s
+    }
+
+    #[test]
+    fn render_is_sorted_and_parses_back() {
+        let s = sample();
+        let kv = s.render_kv();
+        let lines: Vec<&str> = kv.lines().collect();
+        let mut sorted = lines.clone();
+        sorted.sort();
+        assert_eq!(lines, sorted, "lines must be sorted by key");
+        assert!(kv.contains("counter.requests=12\n"));
+        assert!(kv.contains("schema=1\n"));
+        assert!(kv.contains("hist.request_latency.mean_us=93.25\n"));
+        assert_eq!(StatsSnapshot::parse_kv(&kv).unwrap(), s);
+    }
+
+    #[test]
+    fn parse_skips_unknown_keys_and_rejects_garbage() {
+        let s = StatsSnapshot::parse_kv(
+            "schema=1\ncounter.x=4\nfuture.key=9\nhist.lat.p50_us=8\nhist.lat.novel=3\n",
+        )
+        .unwrap();
+        assert_eq!(s.counter("x"), 4);
+        assert_eq!(s.counter("absent"), 0);
+        assert_eq!(s.hist("lat").unwrap().p50_us, 8);
+
+        assert!(StatsSnapshot::parse_kv("no equals sign").is_err());
+        assert!(StatsSnapshot::parse_kv("counter.x=notanumber").is_err());
+        assert!(StatsSnapshot::parse_kv("hist.nofield=1").is_err());
+    }
+
+    #[test]
+    fn empty_snapshot_roundtrips() {
+        let s = StatsSnapshot::new();
+        assert_eq!(s.render_kv(), "schema=1\n");
+        assert_eq!(StatsSnapshot::parse_kv(&s.render_kv()).unwrap(), s);
+    }
+}

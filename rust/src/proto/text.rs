@@ -1,0 +1,243 @@
+//! The legacy newline-delimited text protocol, reimplemented as a thin
+//! compat adapter over the [`crate::proto`] envelope.
+//!
+//! Verb ↔ envelope mapping (replies are byte-for-byte what the old
+//! per-verb plumbing in `server` produced, so every pre-v2 client and
+//! test keeps working unchanged):
+//!
+//! ```text
+//! INFER t,t,...    -> Request { op: Infer,  volleys: [Dense] }
+//! LEARN t,t,...    -> Request { op: Learn,  volleys: [Dense] }
+//! SPARSE i:t,...   -> Request { op: Infer,  volleys: [Sparse], sparse_reply }
+//! SLEARN i:t,...   -> Request { op: Learn,  volleys: [Sparse], sparse_reply }
+//! STATS            -> Request { op: Stats }
+//! PING             -> Request { op: Ping }     (new in v2, text too)
+//! QUIT             -> Request { op: Quit }
+//!
+//! Results  -> "OK winner=<w> times=..."  / "OK winner=<w> spikes=..."
+//! Stats    -> sorted key=value lines, terminated by a blank line
+//! Pong/Bye -> "PONG" / "BYE"
+//! Error    -> "ERR <rendered error>"
+//! ```
+//!
+//! The text protocol identifies one volley per line and carries no
+//! request ids ([`parse_line`] always yields `id = 0`); pipelining and
+//! multi-volley requests are the frame codec's job. `STATS` is the one
+//! reply this redesign changed on purpose (satellite task): it now
+//! emits the sorted, versioned `key=value` schema of
+//! [`crate::proto::stats`] instead of the free-form human block.
+
+use crate::error::{Error, Result};
+use crate::proto::{Op, Outcome, Request, Response};
+use crate::volley::SpikeVolley;
+
+/// Parse one text-protocol line into an envelope [`Request`].
+///
+/// `n` and `t_max` are the column geometry (the text protocol has no
+/// handshake to learn them from). Error messages are the exact legacy
+/// strings — clients match on them.
+pub fn parse_line(line: &str, n: usize, t_max: usize) -> Result<Request> {
+    let mut parts = line.splitn(2, ' ');
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "QUIT" => Ok(Request::op(Op::Quit)),
+        "STATS" => Ok(Request::op(Op::Stats)),
+        "PING" => Ok(Request::op(Op::Ping)),
+        "INFER" | "LEARN" => {
+            let rest = parts
+                .next()
+                .ok_or_else(|| Error::Server("missing volley payload".into()))?;
+            let volley: Vec<f32> = rest
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f32>()
+                        .map_err(|e| Error::Server(format!("bad spike time `{s}`: {e}")))
+                })
+                .collect::<Result<_>>()?;
+            if volley.len() != n {
+                return Err(Error::Server(format!(
+                    "volley has {} lines, column wants {n}",
+                    volley.len()
+                )));
+            }
+            let v = SpikeVolley::dense(volley);
+            if verb == "INFER" {
+                Ok(Request::infer(vec![v]))
+            } else {
+                Ok(Request::learn(vec![v]))
+            }
+        }
+        // Sparse encodings: payload lists only the spiking lines; an
+        // absent payload (bare `SPARSE`) is the all-silent volley.
+        "SPARSE" | "SLEARN" => {
+            let volley = SpikeVolley::parse_sparse(parts.next().unwrap_or("-"), n, t_max)?;
+            if verb == "SPARSE" {
+                Ok(Request::infer(vec![volley]).with_sparse_reply())
+            } else {
+                Ok(Request::learn(vec![volley]).with_sparse_reply())
+            }
+        }
+        other => Err(Error::Server(format!("unknown verb `{other}`"))),
+    }
+}
+
+/// Render an envelope [`Response`] as text-protocol reply lines.
+///
+/// `sparse_reply` mirrors the request encoding (the envelope carries it
+/// in `Request::opts`); `t_max` defines which columns count as fired
+/// for the sparse reply form. `Results` renders one line per volley
+/// result, in request order.
+pub fn render_response(resp: &Response, sparse_reply: bool, t_max: usize) -> String {
+    match &resp.outcome {
+        Outcome::Results(rs) => {
+            let mut out = String::new();
+            for r in rs {
+                let winner = r.winner.map(|w| w as i64).unwrap_or(-1);
+                if sparse_reply {
+                    // the volley codec owns the "which columns fired"
+                    // filter (silence = >= t_max or NaN, one definition)
+                    let spikes = SpikeVolley::dense(r.times.clone()).encode_sparse(t_max);
+                    out.push_str(&format!("OK winner={winner} spikes={spikes}\n"));
+                } else {
+                    let times: Vec<String> = r.times.iter().map(|t| format!("{t}")).collect();
+                    out.push_str(&format!("OK winner={winner} times={}\n", times.join(",")));
+                }
+            }
+            out
+        }
+        Outcome::Stats(s) => format!("{}\n", s.render_kv()),
+        Outcome::Pong => "PONG\n".into(),
+        Outcome::Bye => "BYE\n".into(),
+        Outcome::Error(e) => format!("ERR {e}\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::RequestOpts;
+    use crate::volley::VolleyResult;
+
+    const TM: usize = 16;
+
+    #[test]
+    fn parse_commands() {
+        assert_eq!(parse_line("QUIT", 4, TM).unwrap().op, Op::Quit);
+        assert_eq!(parse_line("STATS", 4, TM).unwrap().op, Op::Stats);
+        assert_eq!(parse_line("PING", 4, TM).unwrap().op, Op::Ping);
+        let req = parse_line("INFER 1,2,3,16", 4, TM).unwrap();
+        assert_eq!(req.op, Op::Infer);
+        assert_eq!(
+            req.volleys,
+            vec![SpikeVolley::dense(vec![1.0, 2.0, 3.0, 16.0])]
+        );
+        assert_eq!(req.opts, RequestOpts::default());
+        assert!(parse_line("INFER 1,2", 4, TM).is_err());
+        assert!(parse_line("INFER 1,x,3,4", 4, TM).is_err());
+        assert!(parse_line("NOPE", 4, TM).is_err());
+        assert!(parse_line("INFER", 4, TM).is_err());
+    }
+
+    #[test]
+    fn parse_sparse_commands() {
+        let req = parse_line("SPARSE 0:1,3:2.5", 4, TM).unwrap();
+        assert_eq!(req.op, Op::Infer);
+        assert!(req.opts.sparse_reply);
+        assert_eq!(req.volleys[0].spike_list(TM), vec![(0, 1.0), (3, 2.5)]);
+        assert_eq!(req.volleys[0].n(), 4);
+        // bare SPARSE / explicit "-" are the all-silent volley
+        for line in ["SPARSE", "SPARSE -"] {
+            let req = parse_line(line, 4, TM).unwrap();
+            assert_eq!(req.volleys[0].stats(TM).active, 0);
+        }
+        let req = parse_line("SLEARN 1:0", 4, TM).unwrap();
+        assert_eq!(req.op, Op::Learn);
+        assert!(req.opts.sparse_reply);
+        // out-of-range line and grammar violations are rejected
+        assert!(parse_line("SPARSE 9:1", 4, TM).is_err());
+        assert!(parse_line("SPARSE 0:1,0:2", 4, TM).is_err());
+        assert!(parse_line("SPARSE x", 4, TM).is_err());
+    }
+
+    #[test]
+    fn render_matches_legacy_bytes() {
+        let resp = Response {
+            id: 0,
+            outcome: Outcome::Results(vec![VolleyResult {
+                times: vec![4.0, 16.0, 2.0],
+                winner: Some(2),
+            }]),
+        };
+        assert_eq!(
+            render_response(&resp, false, TM),
+            "OK winner=2 times=4,16,2\n"
+        );
+        assert_eq!(
+            render_response(&resp, true, TM),
+            "OK winner=2 spikes=0:4,2:2\n"
+        );
+
+        let silent = Response {
+            id: 0,
+            outcome: Outcome::Results(vec![VolleyResult {
+                times: vec![16.0, 16.0, 16.0],
+                winner: None,
+            }]),
+        };
+        assert_eq!(
+            render_response(&silent, true, TM),
+            "OK winner=-1 spikes=-\n"
+        );
+        assert_eq!(
+            render_response(&silent, false, TM),
+            "OK winner=-1 times=16,16,16\n"
+        );
+
+        let err = Response::error(0, Error::Server("nope".into()).to_string());
+        assert_eq!(render_response(&err, false, TM), "ERR server error: nope\n");
+        assert_eq!(
+            render_response(
+                &Response {
+                    id: 0,
+                    outcome: Outcome::Bye
+                },
+                false,
+                TM
+            ),
+            "BYE\n"
+        );
+        assert_eq!(
+            render_response(
+                &Response {
+                    id: 0,
+                    outcome: Outcome::Pong
+                },
+                false,
+                TM
+            ),
+            "PONG\n"
+        );
+    }
+
+    #[test]
+    fn multi_result_renders_one_line_each() {
+        let resp = Response {
+            id: 0,
+            outcome: Outcome::Results(vec![
+                VolleyResult {
+                    times: vec![1.0],
+                    winner: Some(0),
+                },
+                VolleyResult {
+                    times: vec![16.0],
+                    winner: None,
+                },
+            ]),
+        };
+        assert_eq!(
+            render_response(&resp, false, TM),
+            "OK winner=0 times=1\nOK winner=-1 times=16\n"
+        );
+    }
+}

@@ -1,60 +1,131 @@
-//! TCP serving front-end + client load generator.
+//! TCP serving front-end + clients, speaking the [`crate::proto`]
+//! envelope over two codecs on one port.
 //!
-//! A newline-delimited text protocol over the dynamic batcher (the
-//! "serve batched requests, report latency/throughput" half of the E10
-//! end-to-end validation):
+//! Dispatch is one function — [`ServerCore::handle`] maps a typed
+//! [`Request`] to a [`Response`] — and the wire format is a pluggable
+//! codec in front of it (DESIGN.md §2.2):
+//!
+//! * **v2 framed binary** (`proto::frame`): length-prefixed frames,
+//!   HELLO/ACK version negotiation, request ids. A client may pipeline
+//!   many REQUEST frames before reading responses and may pack many
+//!   volleys into one frame; responses come back in order, ids echoed.
+//! * **text compat** (`proto::text`): the legacy newline protocol
+//!   (`INFER`/`LEARN`/`SPARSE`/`SLEARN`/`STATS`/`PING`/`QUIT`),
+//!   byte-for-byte compatible with pre-v2 clients.
+//!
+//! The server sniffs the first four bytes of each connection: the frame
+//! magic `CWK2` selects the framed codec, anything else is treated as
+//! the first text verb. One thread per connection; batching happens in
+//! the shared [`DynamicBatcher`], so concurrent clients (and the
+//! volleys of one multi-volley frame) coalesce into full backend
+//! batches.
 //!
 //! ```text
 //! -> INFER 1,3,16,16,0,...        (n comma-separated spike times)
 //! <- OK winner=2 times=4,16,2,...
-//! -> SPARSE 0:1,4:3               (spiking lines only, line:time; "-" = all silent)
+//! -> SPARSE 0:1,4:3               (spiking lines only; "-" = silent)
 //! <- OK winner=2 spikes=0:4,2:2   (columns that fired, column:time)
-//! -> LEARN 1,3,16,...
-//! <- OK winner=0 times=...
-//! -> SLEARN 0:1,4:3               (sparse-encoded LEARN)
-//! <- OK winner=0 spikes=...
 //! -> STATS
-//! <- ... metrics block ... (terminated by a blank line)
+//! <- sorted key=value lines, blank-line terminated
 //! -> QUIT
+//! <- BYE
 //! ```
-//!
-//! `SPARSE`/`SLEARN` carry only the spiking lines (volley grammar in
-//! [`crate::volley`]) — at the ~5–20% line activity of real TNN volleys
-//! the payload is a fraction of the dense encoding, and the reply lists
-//! only the columns that fired. Both encodings hit the same batcher and
-//! kernels and may be mixed freely on one connection.
-//!
-//! One thread per connection (bounded by the listener accept loop);
-//! batching happens in the shared [`DynamicBatcher`], so concurrent
-//! clients coalesce into full backend batches.
 
 use crate::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
 use crate::error::{Error, Result};
-use crate::volley::{self, SpikeVolley};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use crate::proto::{frame, text, Op, Outcome, Request, Response, StatsSnapshot};
+use crate::volley::{self, SpikeVolley, VolleyResult};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// Serving daemon state.
-pub struct Server {
+/// The codec-independent dispatch core: every wire protocol funnels
+/// into [`ServerCore::handle`].
+pub struct ServerCore {
     infer: Arc<DynamicBatcher>,
     learn: Arc<DynamicBatcher>,
     service: TnnHandle,
-    stop: Arc<AtomicBool>,
 }
 
-impl Server {
-    pub fn new(service: TnnHandle, cfg: BatcherConfig) -> Server {
+impl ServerCore {
+    pub fn new(service: TnnHandle, cfg: BatcherConfig) -> ServerCore {
         let infer = Arc::new(DynamicBatcher::start(service.clone(), cfg));
         let learn = Arc::new(DynamicBatcher::start(
             service.clone(),
             BatcherConfig { learn: true, ..cfg },
         ));
-        Server {
+        ServerCore {
             infer,
             learn,
             service,
+        }
+    }
+
+    pub fn service(&self) -> &TnnHandle {
+        &self.service
+    }
+
+    /// Handle one envelope request (by value — the volleys move
+    /// straight into the batcher queue, no hot-path clone). `received`
+    /// is when the request came off the wire; the deadline opt is
+    /// measured against it twice — here at dispatch (cheap early-out),
+    /// and again by the batcher when the batch is drained, so the
+    /// budget bounds the queue wait too, not just decode time.
+    pub fn handle(&self, req: Request, received: Instant) -> Response {
+        let deadline = req.opts.deadline_ms.map(|ms| received + Duration::from_millis(ms as u64));
+        // >=, so a 0 ms budget is deterministically expired
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Response::error(
+                req.id,
+                format!(
+                    "deadline exceeded: waited {:?} against a {} ms budget",
+                    received.elapsed(),
+                    req.opts.deadline_ms.unwrap_or(0)
+                ),
+            );
+        }
+        let outcome = match req.op {
+            Op::Infer => self.run_batched(&self.infer, req.volleys, deadline),
+            Op::Learn => self.run_batched(&self.learn, req.volleys, deadline),
+            Op::Stats => Outcome::Stats(self.service.metrics.snapshot(!req.opts.counters_only)),
+            Op::Ping => Outcome::Pong,
+            Op::Quit => Outcome::Bye,
+        };
+        Response {
+            id: req.id,
+            outcome,
+        }
+    }
+
+    fn run_batched(
+        &self,
+        batcher: &DynamicBatcher,
+        volleys: Vec<SpikeVolley>,
+        deadline: Option<Instant>,
+    ) -> Outcome {
+        let mut results = Vec::with_capacity(volleys.len());
+        for r in batcher.submit_many_with_deadline(volleys, deadline) {
+            match r {
+                Ok(v) => results.push(v),
+                Err(e) => return Outcome::Error(e.to_string()),
+            }
+        }
+        Outcome::Results(results)
+    }
+}
+
+/// Serving daemon state.
+pub struct Server {
+    core: Arc<ServerCore>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(service: TnnHandle, cfg: BatcherConfig) -> Server {
+        Server {
+            core: Arc::new(ServerCore::new(service, cfg)),
             stop: Arc::new(AtomicBool::new(false)),
         }
     }
@@ -62,6 +133,11 @@ impl Server {
     /// Handle for shutting the accept loop down from another thread.
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         self.stop.clone()
+    }
+
+    /// The dispatch core (for in-process callers: benches, tests).
+    pub fn core(&self) -> Arc<ServerCore> {
+        self.core.clone()
     }
 
     /// Bind and serve until the stop flag is set. Returns the bound port
@@ -74,12 +150,10 @@ impl Server {
         while !self.stop.load(Ordering::Acquire) {
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let infer = self.infer.clone();
-                    let learn = self.learn.clone();
-                    let service = self.service.clone();
+                    let core = self.core.clone();
                     let stop = self.stop.clone();
                     workers.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, infer, learn, service, stop);
+                        let _ = handle_conn(stream, core, stop);
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -95,35 +169,165 @@ impl Server {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    infer: Arc<DynamicBatcher>,
-    learn: Arc<DynamicBatcher>,
-    service: TnnHandle,
+/// Sniff the codec from the first four bytes, then run the matching
+/// connection loop.
+fn handle_conn(stream: TcpStream, core: Arc<ServerCore>, stop: Arc<AtomicBool>) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let out = stream;
+    let mut head = [0u8; 4];
+    match read_head(&mut reader, &mut head)? {
+        0 => return Ok(()), // client connected and left
+        4 if head == frame::MAGIC => serve_framed(reader, out, core, stop),
+        k => serve_text(reader, out, core, stop, &head[..k]),
+    }
+}
+
+/// Read the first bytes of a connection for codec sniffing — at most 4,
+/// one at a time, stopping the moment the prefix can no longer be the
+/// frame magic. The early bail matters for interactive text clients: a
+/// short first line (`"X\n"` + wait) must get its `ERR` reply instead
+/// of deadlocking against a sniffer waiting for byte 4. (No text verb
+/// starts with `C`, the magic's first byte, so real text lines bail
+/// after one read.)
+fn read_head(r: &mut impl Read, head: &mut [u8; 4]) -> Result<usize> {
+    let mut off = 0;
+    while off < 4 {
+        match r.read(&mut head[off..off + 1]) {
+            Ok(0) => break,
+            Ok(k) => {
+                off += k;
+                if head[..off] != frame::MAGIC[..off] {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(off)
+}
+
+/// The v2 framed loop: HELLO/ACK handshake, then request frames until
+/// `Quit`, EOF or the stop flag. The first frame's magic was consumed
+/// by the sniffer.
+fn serve_framed(
+    mut reader: BufReader<TcpStream>,
+    mut out: TcpStream,
+    core: Arc<ServerCore>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
+    let (ty, payload) = frame::read_frame_after_magic(&mut reader)?;
+    if ty != frame::FrameType::Hello {
+        send_response(&mut out, &Response::error(0, "expected HELLO frame"))?;
+        return Ok(());
+    }
+    let (min, max) = match frame::decode_hello(&payload) {
+        Ok(range) => range,
+        Err(e) => {
+            send_response(&mut out, &Response::error(0, e.to_string()))?;
+            return Ok(());
+        }
+    };
+    let Some(version) = frame::negotiate(min, max) else {
+        send_response(
+            &mut out,
+            &Response::error(
+                0,
+                format!(
+                    "no common protocol version: client speaks {min}..{max}, server speaks {}",
+                    frame::VERSION
+                ),
+            ),
+        )?;
+        return Ok(());
+    };
+    let svc = core.service();
+    frame::write_frame(
+        &mut out,
+        frame::FrameType::Ack,
+        &frame::encode_ack(&frame::Ack {
+            version,
+            n: svc.n as u32,
+            c: svc.c as u32,
+            t_max: svc.t_max as u32,
+        }),
+    )?;
+    out.flush()?;
+
+    loop {
+        let Some((ty, payload)) = frame::read_frame(&mut reader)? else {
+            return Ok(()); // clean close
+        };
+        let received = Instant::now();
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let resp = if ty != frame::FrameType::Request {
+            Response::error(0, format!("unexpected frame type {ty:?}"))
+        } else {
+            match frame::decode_request(&payload) {
+                // a malformed payload inside an intact frame is
+                // recoverable — answer and keep the connection
+                Err(e) => Response::error(0, e.to_string()),
+                Ok(req) => core.handle(req, received),
+            }
+        };
+        let bye = matches!(resp.outcome, Outcome::Bye);
+        send_response(&mut out, &resp)?;
+        if bye {
+            return Ok(());
+        }
+    }
+}
+
+fn send_response(out: &mut TcpStream, resp: &Response) -> Result<()> {
+    frame::write_frame(out, frame::FrameType::Response, &frame::encode_response(resp)?)?;
+    out.flush()?;
+    Ok(())
+}
+
+/// The text compat loop. `head` holds the sniffed first bytes of the
+/// first line.
+fn serve_text(
+    mut reader: BufReader<TcpStream>,
+    mut out: TcpStream,
+    core: Arc<ServerCore>,
+    stop: Arc<AtomicBool>,
+    head: &[u8],
+) -> Result<()> {
+    let svc = core.service();
+    let (n, t_max) = (svc.n, svc.t_max);
+    let mut prefix = String::from_utf8_lossy(head).into_owned();
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
+        line.push_str(&prefix);
+        prefix.clear();
+        // the sniffed head may already contain (part of) the first line
+        if !line.contains('\n') && reader.read_line(&mut line)? == 0 && line.is_empty() {
             return Ok(()); // client closed
         }
+        if let Some(pos) = line.find('\n') {
+            prefix.push_str(&line[pos + 1..]);
+            line.truncate(pos);
+        }
+        let received = Instant::now();
         let line = line.trim();
         if stop.load(Ordering::Acquire) {
             return Ok(());
         }
-        let reply = match parse_command(line, service.n, service.t_max) {
-            Ok(Command::Quit) => {
-                writeln!(out, "BYE")?;
-                return Ok(());
+        let reply = match text::parse_line(line, n, t_max) {
+            Ok(req) => {
+                let sparse_reply = req.opts.sparse_reply;
+                let resp = core.handle(req, received);
+                let rendered = text::render_response(&resp, sparse_reply, t_max);
+                if matches!(resp.outcome, Outcome::Bye) {
+                    out.write_all(rendered.as_bytes())?;
+                    out.flush()?;
+                    return Ok(());
+                }
+                rendered
             }
-            Ok(Command::Stats) => {
-                format!("{}\n", service.metrics.render())
-            }
-            Ok(Command::Infer(v, wire)) => respond(infer.submit(v), wire, service.t_max),
-            Ok(Command::Learn(v, wire)) => respond(learn.submit(v), wire, service.t_max),
             Err(e) => format!("ERR {e}\n"),
         };
         out.write_all(reply.as_bytes())?;
@@ -131,94 +335,70 @@ fn handle_conn(
     }
 }
 
-/// Which encoding a request arrived in — replies mirror it.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Wire {
-    Dense,
-    Sparse,
+/// Pipelining window shared by both clients: at most this many requests
+/// in flight per socket flush. The server answers serially while a
+/// client writes, so an unbounded pipeline could fill both socket
+/// buffers and deadlock writer-against-writer.
+const PIPELINE_WINDOW: usize = 64;
+/// Byte bound on one pipelined window — the count bound alone would not
+/// stop 64 huge multi-volley frames from filling the buffers anyway.
+/// 64 KiB outgoing keeps the (smaller) serial responses comfortably
+/// inside default socket buffers.
+const PIPELINE_WINDOW_BYTES: usize = 64 << 10;
+
+/// Socket timeouts for both clients — a hung server must not wedge a
+/// caller forever.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientConfig {
+    pub connect_timeout: Duration,
+    /// `None` = block forever (opt out explicitly).
+    pub read_timeout: Option<Duration>,
+    pub write_timeout: Option<Duration>,
 }
 
-fn respond(result: Result<crate::coordinator::VolleyResult>, wire: Wire, t_max: usize) -> String {
-    match result {
-        Ok(r) => {
-            let winner = r.winner.map(|w| w as i64).unwrap_or(-1);
-            match wire {
-                Wire::Dense => {
-                    let times: Vec<String> = r.times.iter().map(|t| format!("{t}")).collect();
-                    format!("OK winner={winner} times={}\n", times.join(","))
-                }
-                Wire::Sparse => {
-                    // the volley codec owns the "which columns fired"
-                    // filter (silence = >= t_max or NaN, one definition)
-                    let spikes = SpikeVolley::dense(r.times).encode_sparse(t_max);
-                    format!("OK winner={winner} spikes={spikes}\n")
-                }
-            }
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(10),
+            read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(30)),
         }
-        Err(e) => format!("ERR {e}\n"),
     }
 }
 
-enum Command {
-    Infer(SpikeVolley, Wire),
-    Learn(SpikeVolley, Wire),
-    Stats,
-    Quit,
-}
-
-fn parse_command(line: &str, n: usize, t_max: usize) -> Result<Command> {
-    let mut parts = line.splitn(2, ' ');
-    let verb = parts.next().unwrap_or("");
-    match verb {
-        "QUIT" => Ok(Command::Quit),
-        "STATS" => Ok(Command::Stats),
-        "INFER" | "LEARN" => {
-            let rest = parts
-                .next()
-                .ok_or_else(|| Error::Server("missing volley payload".into()))?;
-            let volley: Vec<f32> = rest
-                .split(',')
-                .map(|s| {
-                    s.trim()
-                        .parse::<f32>()
-                        .map_err(|e| Error::Server(format!("bad spike time `{s}`: {e}")))
-                })
-                .collect::<Result<_>>()?;
-            if volley.len() != n {
-                return Err(Error::Server(format!(
-                    "volley has {} lines, column wants {n}",
-                    volley.len()
-                )));
+fn connect_stream(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, cfg.connect_timeout) {
+            Ok(stream) => {
+                stream.set_read_timeout(cfg.read_timeout)?;
+                stream.set_write_timeout(cfg.write_timeout)?;
+                return Ok(stream);
             }
-            if verb == "INFER" {
-                Ok(Command::Infer(SpikeVolley::dense(volley), Wire::Dense))
-            } else {
-                Ok(Command::Learn(SpikeVolley::dense(volley), Wire::Dense))
-            }
+            Err(e) => last = Some(e),
         }
-        // Sparse encodings: payload lists only the spiking lines; an
-        // absent payload (bare `SPARSE`) is the all-silent volley.
-        "SPARSE" | "SLEARN" => {
-            let volley = SpikeVolley::parse_sparse(parts.next().unwrap_or("-"), n, t_max)?;
-            if verb == "SPARSE" {
-                Ok(Command::Infer(volley, Wire::Sparse))
-            } else {
-                Ok(Command::Learn(volley, Wire::Sparse))
-            }
-        }
-        other => Err(Error::Server(format!("unknown verb `{other}`"))),
     }
+    Err(last
+        .map(Error::Io)
+        .unwrap_or_else(|| Error::Server(format!("`{addr}` resolved to no addresses"))))
 }
 
-/// Minimal blocking client for the load generator and tests.
+/// Blocking text-protocol client (the compat surface; the load
+/// generator and every pre-v2 test use it). For the v2 binary protocol
+/// see [`FramedClient`].
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
 impl Client {
+    /// Connect with [`ClientConfig::default`] timeouts.
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
+        Client::connect_with(addr, &ClientConfig::default())
+    }
+
+    pub fn connect_with(addr: &str, cfg: &ClientConfig) -> Result<Client> {
+        let stream = connect_stream(addr, cfg)?;
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
@@ -231,6 +411,112 @@ impl Client {
         let mut reply = String::new();
         self.reader.read_line(&mut reply)?;
         Ok(reply.trim().to_string())
+    }
+
+    /// Envelope entry point over the text codec. `Infer`/`Learn`
+    /// requests carry dense volleys (the text wire has no handshake to
+    /// learn `t_max` from, so sparse volleys cannot be densified here —
+    /// use [`FramedClient`] or the `*_sparse` wrappers); multi-volley
+    /// requests pipeline one line per volley. Options the text wire
+    /// cannot express are a typed error, never silently dropped — the
+    /// same `Request` must not mean different things on the two
+    /// clients.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        if req.opts.deadline_ms.is_some() {
+            return Err(Error::Proto(
+                "the text codec cannot carry a deadline; use FramedClient".into(),
+            ));
+        }
+        if req.opts.counters_only {
+            return Err(Error::Proto(
+                "the text codec cannot request counters-only stats; use FramedClient".into(),
+            ));
+        }
+        if req.opts.sparse_reply {
+            return Err(Error::Proto(
+                "text call speaks the dense wire form; use infer_sparse/learn_sparse \
+                 or FramedClient"
+                    .into(),
+            ));
+        }
+        let outcome = match req.op {
+            Op::Infer | Op::Learn => {
+                let verb = if req.op == Op::Infer { "INFER" } else { "LEARN" };
+                let mut payloads = Vec::with_capacity(req.volleys.len());
+                for v in &req.volleys {
+                    let SpikeVolley::Dense(times) = v else {
+                        return Err(Error::Proto(
+                            "text call carries dense volleys only; use FramedClient \
+                             or infer_sparse/learn_sparse"
+                                .into(),
+                        ));
+                    };
+                    let fields: Vec<String> = times.iter().map(|t| format!("{t}")).collect();
+                    payloads.push(format!("{verb} {}\n", fields.join(",")));
+                }
+                // pipeline lines in bounded windows (count and bytes),
+                // collecting each window's replies before the next —
+                // never enough unread data in flight to deadlock
+                let mut results = Vec::with_capacity(payloads.len());
+                let mut first_err: Option<String> = None;
+                let mut i = 0;
+                while i < payloads.len() {
+                    let mut lines = String::new();
+                    let mut count = 0;
+                    while i < payloads.len()
+                        && count < PIPELINE_WINDOW
+                        && lines.len() < PIPELINE_WINDOW_BYTES
+                    {
+                        lines.push_str(&payloads[i]);
+                        i += 1;
+                        count += 1;
+                    }
+                    self.writer.write_all(lines.as_bytes())?;
+                    self.writer.flush()?;
+                    for _ in 0..count {
+                        let mut reply = String::new();
+                        self.reader.read_line(&mut reply)?;
+                        match parse_ok(reply.trim()) {
+                            Ok((winner, times)) => results.push(VolleyResult {
+                                times,
+                                winner: if winner < 0 {
+                                    None
+                                } else {
+                                    Some(winner as usize)
+                                },
+                            }),
+                            Err(e) => {
+                                first_err.get_or_insert(e.to_string());
+                            }
+                        }
+                    }
+                }
+                match first_err {
+                    Some(e) => Outcome::Error(e),
+                    None => Outcome::Results(results),
+                }
+            }
+            Op::Stats => {
+                writeln!(self.writer, "STATS")?;
+                self.writer.flush()?;
+                Outcome::Stats(self.read_stats()?)
+            }
+            Op::Ping => {
+                let reply = self.roundtrip("PING")?;
+                if reply != "PONG" {
+                    return Err(Error::Server(format!("server said: {reply}")));
+                }
+                Outcome::Pong
+            }
+            Op::Quit => {
+                let _ = self.roundtrip("QUIT")?;
+                Outcome::Bye
+            }
+        };
+        Ok(Response {
+            id: req.id,
+            outcome,
+        })
     }
 
     pub fn infer(&mut self, volley: &[f32]) -> Result<(i64, Vec<f32>)> {
@@ -257,6 +543,25 @@ impl Client {
     pub fn learn_sparse(&mut self, spikes: &[(usize, f32)]) -> Result<(i64, Vec<(usize, f32)>)> {
         let reply = self.roundtrip(&format!("SLEARN {}", volley::encode_pairs(spikes)))?;
         parse_ok_sparse(&reply)
+    }
+
+    /// Typed server metrics (the versioned `key=value` STATS schema).
+    pub fn stats(&mut self) -> Result<StatsSnapshot> {
+        writeln!(self.writer, "STATS")?;
+        self.writer.flush()?;
+        self.read_stats()
+    }
+
+    fn read_stats(&mut self) -> Result<StatsSnapshot> {
+        let mut block = String::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 || line.trim().is_empty() {
+                break; // blank line terminates the block
+            }
+            block.push_str(&line);
+        }
+        StatsSnapshot::parse_kv(&block)
     }
 
     pub fn quit(&mut self) -> Result<()> {
@@ -307,53 +612,194 @@ fn parse_ok_sparse(reply: &str) -> Result<(i64, Vec<(usize, f32)>)> {
     Ok((winner, spikes))
 }
 
+/// v2 framed-protocol client: HELLO/ACK negotiation on connect, typed
+/// [`Request`]/[`Response`] calls, and pipelining via
+/// [`FramedClient::call_many`] (bounded in-flight windows, one socket
+/// flush per window).
+pub struct FramedClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+    /// negotiated protocol version
+    pub version: u16,
+    /// column geometry from the ACK
+    pub n: usize,
+    pub c: usize,
+    pub t_max: usize,
+}
+
+impl FramedClient {
+    pub fn connect(addr: &str) -> Result<FramedClient> {
+        FramedClient::connect_with(addr, &ClientConfig::default())
+    }
+
+    pub fn connect_with(addr: &str, cfg: &ClientConfig) -> Result<FramedClient> {
+        let stream = connect_stream(addr, cfg)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        frame::write_frame(
+            &mut writer,
+            frame::FrameType::Hello,
+            &frame::encode_hello(frame::VERSION, frame::VERSION),
+        )?;
+        writer.flush()?;
+        let (ty, payload) = frame::read_frame(&mut reader)?
+            .ok_or_else(|| Error::Proto("server closed during handshake".into()))?;
+        let ack = match ty {
+            frame::FrameType::Ack => frame::decode_ack(&payload)?,
+            frame::FrameType::Response => {
+                // the server's typed rejection (e.g. no common version)
+                let resp = frame::decode_response(&payload)?;
+                let msg = match resp.outcome {
+                    Outcome::Error(e) => e,
+                    other => format!("unexpected handshake response {other:?}"),
+                };
+                return Err(Error::Proto(msg));
+            }
+            other => {
+                return Err(Error::Proto(format!(
+                    "unexpected handshake frame {other:?}"
+                )))
+            }
+        };
+        Ok(FramedClient {
+            reader,
+            writer,
+            next_id: 1,
+            version: ack.version,
+            n: ack.n as usize,
+            c: ack.c as usize,
+            t_max: ack.t_max as usize,
+        })
+    }
+
+    fn assign_id(&mut self, req: &mut Request) {
+        if req.id == 0 {
+            req.id = self.next_id;
+            self.next_id += 1;
+        }
+    }
+
+    /// One request, one response (ids matched).
+    pub fn call(&mut self, req: Request) -> Result<Response> {
+        let mut responses = self.call_many(vec![req])?;
+        responses
+            .pop()
+            .ok_or_else(|| Error::Proto("no response".into()))
+    }
+
+    /// How many requests [`call_many`](FramedClient::call_many) keeps
+    /// in flight per window (the count half of the bound; windows are
+    /// also capped at [`PIPELINE_WINDOW_BYTES`] of encoded frames, so
+    /// large multi-volley requests shrink the window automatically).
+    pub const MAX_IN_FLIGHT: usize = PIPELINE_WINDOW;
+
+    /// Pipelined calls: requests are encoded and written in bounded
+    /// windows — at most [`MAX_IN_FLIGHT`](FramedClient::MAX_IN_FLIGHT)
+    /// requests / [`PIPELINE_WINDOW_BYTES`] encoded bytes, one socket
+    /// flush per window, then that window's responses are collected —
+    /// so arbitrarily long or large request lists never deadlock
+    /// against the server's serial response writes. Responses arrive
+    /// in request order; each id is checked against its request.
+    pub fn call_many(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        let mut responses = Vec::with_capacity(reqs.len());
+        let mut window = Vec::with_capacity(Self::MAX_IN_FLIGHT);
+        let mut reqs = reqs.into_iter().peekable();
+        while reqs.peek().is_some() {
+            let mut wire = Vec::new();
+            window.clear();
+            while window.len() < Self::MAX_IN_FLIGHT && wire.len() < PIPELINE_WINDOW_BYTES {
+                let Some(mut req) = reqs.next() else { break };
+                self.assign_id(&mut req);
+                window.push(req.id);
+                frame::write_frame(
+                    &mut wire,
+                    frame::FrameType::Request,
+                    &frame::encode_request(&req)?,
+                )?;
+            }
+            self.writer.write_all(&wire)?;
+            self.writer.flush()?;
+            for &want in &window {
+                let (ty, payload) = frame::read_frame(&mut self.reader)?
+                    .ok_or_else(|| Error::Proto("server closed mid-pipeline".into()))?;
+                if ty != frame::FrameType::Response {
+                    return Err(Error::Proto(format!("unexpected frame type {ty:?}")));
+                }
+                let resp = frame::decode_response(&payload)?;
+                if resp.id != want && resp.id != 0 {
+                    return Err(Error::Proto(format!(
+                        "response id {} does not match request id {want}",
+                        resp.id
+                    )));
+                }
+                responses.push(resp);
+            }
+        }
+        Ok(responses)
+    }
+
+    /// Legacy-shaped single-volley inference (winner, dense times).
+    pub fn infer(&mut self, volley: &[f32]) -> Result<(i64, Vec<f32>)> {
+        let resp = self.call(Request::infer(vec![SpikeVolley::dense(volley.to_vec())]))?;
+        single_result(resp)
+    }
+
+    /// Legacy-shaped single-volley learning step.
+    pub fn learn(&mut self, volley: &[f32]) -> Result<(i64, Vec<f32>)> {
+        let resp = self.call(Request::learn(vec![SpikeVolley::dense(volley.to_vec())]))?;
+        single_result(resp)
+    }
+
+    /// Multi-volley batch inference in a single frame.
+    pub fn infer_batch(&mut self, volleys: Vec<SpikeVolley>) -> Result<Vec<VolleyResult>> {
+        let resp = self.call(Request::infer(volleys))?;
+        Ok(resp.results()?.to_vec())
+    }
+
+    /// Multi-volley batch learning step in a single frame.
+    pub fn learn_batch(&mut self, volleys: Vec<SpikeVolley>) -> Result<Vec<VolleyResult>> {
+        let resp = self.call(Request::learn(volleys))?;
+        Ok(resp.results()?.to_vec())
+    }
+
+    pub fn stats(&mut self) -> Result<StatsSnapshot> {
+        let resp = self.call(Request::op(Op::Stats))?;
+        match resp.outcome {
+            Outcome::Stats(s) => Ok(s),
+            Outcome::Error(e) => Err(Error::Server(e)),
+            other => Err(Error::Proto(format!("expected stats, got {other:?}"))),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let resp = self.call(Request::op(Op::Ping))?;
+        match resp.outcome {
+            Outcome::Pong => Ok(()),
+            other => Err(Error::Proto(format!("expected pong, got {other:?}"))),
+        }
+    }
+
+    pub fn quit(&mut self) -> Result<()> {
+        let resp = self.call(Request::op(Op::Quit))?;
+        match resp.outcome {
+            Outcome::Bye => Ok(()),
+            other => Err(Error::Proto(format!("expected bye, got {other:?}"))),
+        }
+    }
+}
+
+fn single_result(resp: Response) -> Result<(i64, Vec<f32>)> {
+    let rs = resp.results()?;
+    let r = rs
+        .first()
+        .ok_or_else(|| Error::Proto("empty result set".into()))?;
+    Ok((r.winner.map(|w| w as i64).unwrap_or(-1), r.times.clone()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    const TM: usize = 16;
-
-    #[test]
-    fn parse_commands() {
-        assert!(matches!(parse_command("QUIT", 4, TM), Ok(Command::Quit)));
-        assert!(matches!(parse_command("STATS", 4, TM), Ok(Command::Stats)));
-        match parse_command("INFER 1,2,3,16", 4, TM) {
-            Ok(Command::Infer(v, Wire::Dense)) => {
-                assert_eq!(v, SpikeVolley::dense(vec![1.0, 2.0, 3.0, 16.0]))
-            }
-            other => panic!("{:?}", other.is_ok()),
-        }
-        assert!(parse_command("INFER 1,2", 4, TM).is_err());
-        assert!(parse_command("INFER 1,x,3,4", 4, TM).is_err());
-        assert!(parse_command("NOPE", 4, TM).is_err());
-        assert!(parse_command("INFER", 4, TM).is_err());
-    }
-
-    #[test]
-    fn parse_sparse_commands() {
-        match parse_command("SPARSE 0:1,3:2.5", 4, TM) {
-            Ok(Command::Infer(v, Wire::Sparse)) => {
-                assert_eq!(v.spike_list(TM), vec![(0, 1.0), (3, 2.5)]);
-                assert_eq!(v.n(), 4);
-            }
-            other => panic!("{:?}", other.is_ok()),
-        }
-        // bare SPARSE / explicit "-" are the all-silent volley
-        for line in ["SPARSE", "SPARSE -"] {
-            match parse_command(line, 4, TM) {
-                Ok(Command::Infer(v, Wire::Sparse)) => assert_eq!(v.stats(TM).active, 0),
-                other => panic!("{:?}", other.is_ok()),
-            }
-        }
-        assert!(matches!(
-            parse_command("SLEARN 1:0", 4, TM),
-            Ok(Command::Learn(_, Wire::Sparse))
-        ));
-        // out-of-range line and grammar violations are rejected
-        assert!(parse_command("SPARSE 9:1", 4, TM).is_err());
-        assert!(parse_command("SPARSE 0:1,0:2", 4, TM).is_err());
-        assert!(parse_command("SPARSE x", 4, TM).is_err());
-    }
 
     #[test]
     fn parse_ok_replies() {
@@ -366,25 +812,39 @@ mod tests {
     }
 
     #[test]
-    fn parse_sparse_replies_roundtrip_respond() {
-        let r = crate::coordinator::VolleyResult {
-            times: vec![4.0, 16.0, 2.0],
-            winner: Some(2),
-        };
-        let reply = respond(Ok(r), Wire::Sparse, TM);
-        assert_eq!(reply, "OK winner=2 spikes=0:4,2:2\n");
-        let (w, spikes) = parse_ok_sparse(reply.trim()).unwrap();
+    fn parse_sparse_replies() {
+        let (w, spikes) = parse_ok_sparse("OK winner=2 spikes=0:4,2:2").unwrap();
         assert_eq!(w, 2);
         assert_eq!(spikes, vec![(0, 4.0), (2, 2.0)]);
-
-        let silent = crate::coordinator::VolleyResult {
-            times: vec![16.0, 16.0, 16.0],
-            winner: None,
-        };
-        let reply = respond(Ok(silent), Wire::Sparse, TM);
-        assert_eq!(reply, "OK winner=-1 spikes=-\n");
-        let (w, spikes) = parse_ok_sparse(reply.trim()).unwrap();
+        let (w, spikes) = parse_ok_sparse("OK winner=-1 spikes=-").unwrap();
         assert_eq!(w, -1);
         assert!(spikes.is_empty());
+        assert!(parse_ok_sparse("ERR nope").is_err());
+    }
+
+    #[test]
+    fn client_config_defaults_bounded() {
+        let cfg = ClientConfig::default();
+        assert!(cfg.connect_timeout <= Duration::from_secs(30));
+        assert!(cfg.read_timeout.is_some());
+        assert!(cfg.write_timeout.is_some());
+    }
+
+    #[test]
+    fn connect_times_out_against_black_hole() {
+        // RFC 5737 TEST-NET address: connect can't succeed; the timeout
+        // must bound the wait.
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(150),
+            ..ClientConfig::default()
+        };
+        let t0 = Instant::now();
+        let r = Client::connect_with("192.0.2.1:9", &cfg);
+        assert!(r.is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "connect hung {:?}",
+            t0.elapsed()
+        );
     }
 }

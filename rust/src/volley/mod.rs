@@ -36,6 +36,30 @@
 
 use crate::error::{Error, Result};
 
+/// Result for one volley: per-column first-crossing times plus the WTA
+/// winner. Lives here (not in the coordinator) because it is one half
+/// of the request/response envelope ([`crate::proto`]) — the volley
+/// layer owns both directions of the data plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VolleyResult {
+    /// per-column first-crossing times (t_max = silent)
+    pub times: Vec<f32>,
+    /// WTA winner, if any column fired
+    pub winner: Option<usize>,
+}
+
+impl VolleyResult {
+    /// `(column, time)` pairs of the columns that fired (`time < t_max`).
+    pub fn fired(&self, t_max: usize) -> Vec<(usize, f32)> {
+        self.times
+            .iter()
+            .enumerate()
+            .filter(|&(_, &t)| t < t_max as f32)
+            .map(|(c, &t)| (c, t))
+            .collect()
+    }
+}
+
 /// Per-volley sparsity statistics (the numbers the serving metrics
 /// aggregate and `STATS` surfaces).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,29 +134,41 @@ impl SpikeVolley {
     }
 
     /// Line/activity counts for this volley.
+    ///
+    /// Sparse volleys built by [`SpikeVolley::sparse`] never hold
+    /// silent entries, but ones decoded from the v2 frame codec may
+    /// (the codec is geometry-agnostic and cannot know `t_max`), so the
+    /// sparse arm filters too rather than trusting `spikes.len()`.
     pub fn stats(&self, t_max: usize) -> VolleyStats {
+        let tm = t_max as f32;
         match self {
             SpikeVolley::Dense(t) => VolleyStats {
                 lines: t.len(),
-                active: t.iter().filter(|&&s| s < t_max as f32).count(),
+                active: t.iter().filter(|&&s| s < tm).count(),
             },
             SpikeVolley::Sparse { n, spikes } => VolleyStats {
                 lines: *n,
-                active: spikes.len(),
+                active: spikes.iter().filter(|&&(_, s)| s < tm).count(),
             },
         }
     }
 
-    /// Sorted `(line, time)` pairs of the spiking lines.
+    /// Sorted `(line, time)` pairs of the spiking lines (silent
+    /// entries in a non-canonical sparse volley are dropped).
     pub fn spike_list(&self, t_max: usize) -> Vec<(usize, f32)> {
+        let tm = t_max as f32;
         match self {
             SpikeVolley::Dense(t) => t
                 .iter()
                 .enumerate()
-                .filter(|&(_, &s)| s < t_max as f32)
+                .filter(|&(_, &s)| s < tm)
                 .map(|(i, &s)| (i, s))
                 .collect(),
-            SpikeVolley::Sparse { spikes, .. } => spikes.clone(),
+            SpikeVolley::Sparse { spikes, .. } => spikes
+                .iter()
+                .copied()
+                .filter(|&(_, s)| s < tm)
+                .collect(),
         }
     }
 
@@ -144,7 +180,7 @@ impl SpikeVolley {
             SpikeVolley::Sparse { n, spikes } => {
                 let mut out = vec![tm; *n];
                 for &(i, s) in spikes {
-                    out[i] = s;
+                    out[i] = if s < tm { s } else { tm };
                 }
                 out
             }
@@ -309,6 +345,38 @@ mod tests {
         assert!(parse_pairs("x:1").is_err());
         assert!(parse_pairs("1:y").is_err());
         assert!(SpikeVolley::parse_sparse("20:1", 16, TM).is_err());
+    }
+
+    /// A sparse volley decoded off the wire may carry silent entries
+    /// (the frame codec cannot know `t_max`); every accessor
+    /// canonicalizes rather than trusting the raw pair list.
+    #[test]
+    fn non_canonical_sparse_normalizes_in_accessors() {
+        let v = SpikeVolley::Sparse {
+            n: 4,
+            spikes: vec![(0, 2.0), (1, 16.0), (3, 20.0)],
+        };
+        assert_eq!(v.stats(TM), VolleyStats { lines: 4, active: 1 });
+        assert_eq!(v.spike_list(TM), vec![(0, 2.0)]);
+        assert_eq!(v.dense_times(TM), vec![2.0, 16.0, 16.0, 16.0]);
+        assert_eq!(
+            v.to_sparse(TM),
+            SpikeVolley::sparse(4, vec![(0, 2.0)], TM).unwrap()
+        );
+    }
+
+    #[test]
+    fn volley_result_fired_filter() {
+        let r = VolleyResult {
+            times: vec![4.0, 16.0, 2.0, f32::NAN],
+            winner: Some(2),
+        };
+        assert_eq!(r.fired(TM), vec![(0, 4.0), (2, 2.0)]);
+        let silent = VolleyResult {
+            times: vec![16.0, 17.0],
+            winner: None,
+        };
+        assert!(silent.fired(TM).is_empty());
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! v2 framed-protocol conformance: golden byte vectors (shared with the
+//! python wire twin), quickprop round-trip properties over random
+//! envelopes, malformed-frame typed errors, and TCP end-to-end proof
+//! that the framed path is bit-identical to the text path.
+
+use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
+use catwalk::proto::frame::{self, FrameType};
+use catwalk::proto::{HistStats, Op, Outcome, Request, RequestOpts, Response, StatsSnapshot};
+use catwalk::quickprop::{forall, FnGen};
+use catwalk::rng::Xoshiro256;
+use catwalk::server::{Client, FramedClient, Server};
+use catwalk::volley::{SpikeVolley, VolleyResult};
+use catwalk::Error;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TM: usize = 16;
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+// ------------------------------------------------------- golden vectors
+
+// The same constants appear in python/tests/test_proto_frames.py; they
+// are the cross-language wire contract. If either side changes the
+// layout, exactly one of the two suites breaks.
+const GOLDEN_REQUEST_HEX: &str = "43574b32030000003600000000000000070103000000fa00020000000004\
+3f8000004180000040200000418000000100000004000000010000000140400000";
+const GOLDEN_RESPONSE_HEX: &str = "43574b32040000001f000000000000000700000100000002000000034080\
+00004180000040000000";
+const GOLDEN_HELLO_HEX: &str = "43574b32010000000400020002";
+const GOLDEN_ACK_HEX: &str = "43574b32020000000e0002000000100000000800000010";
+
+fn golden_request() -> Request {
+    Request {
+        id: 7,
+        op: Op::Infer,
+        volleys: vec![
+            SpikeVolley::dense(vec![1.0, 16.0, 2.5, 16.0]),
+            SpikeVolley::sparse(4, vec![(1, 3.0)], TM).unwrap(),
+        ],
+        opts: RequestOpts {
+            sparse_reply: true,
+            deadline_ms: Some(250),
+            counters_only: false,
+        },
+    }
+}
+
+fn golden_response() -> Response {
+    Response {
+        id: 7,
+        outcome: Outcome::Results(vec![VolleyResult {
+            times: vec![4.0, 16.0, 2.0],
+            winner: Some(2),
+        }]),
+    }
+}
+
+fn framed(ty: FrameType, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    frame::write_frame(&mut buf, ty, payload).unwrap();
+    buf
+}
+
+#[test]
+fn golden_request_bytes_match_python_twin() {
+    let bytes = framed(
+        FrameType::Request,
+        &frame::encode_request(&golden_request()).unwrap(),
+    );
+    assert_eq!(hex(&bytes), GOLDEN_REQUEST_HEX);
+    // and the bytes decode back to the exact envelope
+    let (ty, payload) = frame::read_frame(&mut &bytes[..]).unwrap().unwrap();
+    assert_eq!(ty, FrameType::Request);
+    assert_eq!(frame::decode_request(&payload).unwrap(), golden_request());
+}
+
+#[test]
+fn golden_response_bytes_match_python_twin() {
+    let bytes = framed(
+        FrameType::Response,
+        &frame::encode_response(&golden_response()).unwrap(),
+    );
+    assert_eq!(hex(&bytes), GOLDEN_RESPONSE_HEX);
+    let (_, payload) = frame::read_frame(&mut &bytes[..]).unwrap().unwrap();
+    assert_eq!(frame::decode_response(&payload).unwrap(), golden_response());
+}
+
+#[test]
+fn golden_handshake_bytes_match_python_twin() {
+    assert_eq!(
+        hex(&framed(FrameType::Hello, &frame::encode_hello(2, 2))),
+        GOLDEN_HELLO_HEX
+    );
+    let ack = frame::Ack {
+        version: 2,
+        n: 16,
+        c: 8,
+        t_max: 16,
+    };
+    assert_eq!(
+        hex(&framed(FrameType::Ack, &frame::encode_ack(&ack))),
+        GOLDEN_ACK_HEX
+    );
+}
+
+// ----------------------------------------------------------- properties
+
+fn gen_volley(rng: &mut Xoshiro256) -> SpikeVolley {
+    let n = 1 + rng.gen_range(48);
+    if rng.gen_bool(0.5) {
+        // dense, any finite times (incl. non-canonical silence)
+        SpikeVolley::dense((0..n).map(|_| (rng.gen_f64() * 24.0) as f32).collect())
+    } else {
+        let nnz = rng.gen_range(n + 1);
+        let mut lines = rng.sample_indices(n, nnz);
+        lines.sort_unstable();
+        let spikes: Vec<(usize, f32)> = lines
+            .into_iter()
+            .map(|l| (l, (rng.gen_f64() * (TM as f64 - 0.5)) as f32))
+            .collect();
+        SpikeVolley::sparse(n, spikes, TM).unwrap()
+    }
+}
+
+/// Frame codec round-trip is the identity over random envelopes —
+/// every op, every flag combination, dense and sparse volleys mixed.
+#[test]
+fn prop_request_roundtrip_lossless() {
+    forall(
+        11,
+        256,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let ops = [Op::Infer, Op::Learn, Op::Stats, Op::Ping, Op::Quit];
+            let nv = rng.gen_range(5);
+            Request {
+                id: rng.next_u64(),
+                op: ops[rng.gen_range(ops.len())],
+                volleys: (0..nv).map(|_| gen_volley(rng)).collect(),
+                opts: RequestOpts {
+                    sparse_reply: rng.gen_bool(0.5),
+                    deadline_ms: if rng.gen_bool(0.5) {
+                        Some(rng.next_u32())
+                    } else {
+                        None
+                    },
+                    counters_only: rng.gen_bool(0.5),
+                },
+            }
+        }),
+        |req| {
+            let enc = frame::encode_request(req).unwrap();
+            frame::decode_request(&enc).unwrap() == *req
+        },
+    );
+}
+
+/// Response round-trip over random results, stats and errors.
+#[test]
+fn prop_response_roundtrip_lossless() {
+    forall(
+        12,
+        256,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let outcome = match rng.gen_range(5) {
+                0 => Outcome::Results(
+                    (0..rng.gen_range(4))
+                        .map(|_| {
+                            let c = 1 + rng.gen_range(16);
+                            VolleyResult {
+                                times: (0..c).map(|_| (rng.gen_f64() * 16.0) as f32).collect(),
+                                winner: if rng.gen_bool(0.5) {
+                                    Some(rng.gen_range(c))
+                                } else {
+                                    None
+                                },
+                            }
+                        })
+                        .collect(),
+                ),
+                1 => {
+                    let mut s = StatsSnapshot::new();
+                    for i in 0..rng.gen_range(6) {
+                        s.counters.insert(format!("c{i}"), rng.next_u64());
+                    }
+                    for i in 0..rng.gen_range(3) {
+                        s.hists.insert(
+                            format!("h{i}"),
+                            HistStats {
+                                count: rng.next_u64() % 1_000_000,
+                                mean_us: rng.gen_f64() * 1e6,
+                                p50_us: rng.next_u64() % 1_000_000,
+                                p95_us: rng.next_u64() % 1_000_000,
+                                p99_us: rng.next_u64() % 1_000_000,
+                                max_us: rng.next_u64() % 1_000_000,
+                            },
+                        );
+                    }
+                    Outcome::Stats(s)
+                }
+                2 => Outcome::Pong,
+                3 => Outcome::Bye,
+                _ => Outcome::Error(format!("err {} ✗", rng.next_u32())),
+            };
+            Response {
+                id: rng.next_u64(),
+                outcome,
+            }
+        }),
+        |resp| {
+            let enc = frame::encode_response(resp).unwrap();
+            frame::decode_response(&enc).unwrap() == *resp
+        },
+    );
+}
+
+/// Any truncation of a valid request payload is a typed error, never a
+/// panic or a silent misparse.
+#[test]
+fn prop_truncated_request_is_typed_error() {
+    forall(
+        13,
+        64,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let req = Request {
+                id: rng.next_u64(),
+                op: Op::Infer,
+                volleys: (0..1 + rng.gen_range(3)).map(|_| gen_volley(rng)).collect(),
+                opts: RequestOpts::default(),
+            };
+            let enc = frame::encode_request(&req).unwrap();
+            let cut = rng.gen_range(enc.len());
+            enc[..cut].to_vec()
+        }),
+        |prefix| {
+            matches!(frame::decode_request(prefix), Err(Error::Proto(_)))
+        },
+    );
+}
+
+// ------------------------------------------------------------ TCP tests
+
+fn boot(n: usize, seed: u64) -> (Arc<Server>, String, std::thread::JoinHandle<()>) {
+    let handle = TnnHandle::open("artifacts", n, 6.0, seed).unwrap();
+    let server = Arc::new(Server::new(handle, BatcherConfig::default()));
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    (server, addr, srv)
+}
+
+fn stop(server: &Server, srv: std::thread::JoinHandle<()>) {
+    server
+        .stop_handle()
+        .store(true, std::sync::atomic::Ordering::Release);
+    srv.join().unwrap();
+}
+
+/// Acceptance gate: for the same volleys, the v2 framed path and the
+/// legacy text path return bit-identical winners and times — and the
+/// two codecs coexist on one port.
+#[test]
+fn framed_results_bit_identical_to_text_path() {
+    let n = 16;
+    let (server, addr, srv) = boot(n, 33);
+    let mut text = Client::connect(&addr).unwrap();
+    let mut framed = FramedClient::connect(&addr).unwrap();
+    assert_eq!(framed.version, frame::VERSION);
+    assert_eq!((framed.n, framed.c, framed.t_max), (16, 8, 16));
+
+    let mut rng = Xoshiro256::new(909);
+    for _ in 0..25 {
+        let volley: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.gen_bool(0.35) {
+                    rng.gen_range(8) as f32
+                } else {
+                    16.0
+                }
+            })
+            .collect();
+        let (tw, tt) = text.infer(&volley).unwrap();
+        let (fw, ft) = framed.infer(&volley).unwrap();
+        assert_eq!(tw, fw, "winner diverges for {volley:?}");
+        assert_eq!(tt, ft, "times diverge for {volley:?}");
+        // sparse request encoding through the frame codec too
+        let sparse = SpikeVolley::dense(volley.clone()).to_sparse(framed.t_max);
+        let fr = framed.infer_batch(vec![sparse]).unwrap();
+        assert_eq!(fr[0].times, tt);
+        assert_eq!(fr[0].winner, if fw < 0 { None } else { Some(fw as usize) });
+    }
+
+    text.quit().unwrap();
+    framed.quit().unwrap();
+    stop(&server, srv);
+}
+
+/// Pipelining: N requests written before any response is read; ids
+/// echo back in order and results match the sequential path.
+#[test]
+fn framed_pipelining_and_multi_volley_batches() {
+    let n = 16;
+    let (server, addr, srv) = boot(n, 34);
+    let mut framed = FramedClient::connect(&addr).unwrap();
+
+    let mut rng = Xoshiro256::new(11);
+    let volleys: Vec<Vec<f32>> = (0..24)
+        .map(|_| {
+            (0..n)
+                .map(|_| {
+                    if rng.gen_bool(0.3) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        16.0
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    // sequential reference
+    let mut seq = Vec::new();
+    for v in &volleys {
+        seq.push(framed.infer(v).unwrap());
+    }
+
+    // pipelined: one flush, 24 in-flight requests
+    let reqs: Vec<Request> = volleys
+        .iter()
+        .map(|v| Request::infer(vec![SpikeVolley::dense(v.clone())]))
+        .collect();
+    let resps = framed.call_many(reqs).unwrap();
+    assert_eq!(resps.len(), 24);
+    for (resp, (w, t)) in resps.iter().zip(&seq) {
+        let rs = resp.results().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].winner.map(|x| x as i64).unwrap_or(-1), *w);
+        assert_eq!(&rs[0].times, t);
+    }
+    // ids are strictly increasing and unique
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    let before = ids.clone();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 24);
+    assert_eq!(before, ids, "responses arrive in request order");
+
+    // one multi-volley frame == the same volleys one by one
+    let batch: Vec<SpikeVolley> = volleys
+        .iter()
+        .map(|v| SpikeVolley::dense(v.clone()))
+        .collect();
+    let rs = framed.infer_batch(batch).unwrap();
+    assert_eq!(rs.len(), 24);
+    for (r, (w, t)) in rs.iter().zip(&seq) {
+        assert_eq!(r.winner.map(|x| x as i64).unwrap_or(-1), *w);
+        assert_eq!(&r.times, t);
+    }
+
+    framed.quit().unwrap();
+    stop(&server, srv);
+}
+
+/// Envelope ops over both codecs: PING, typed STATS (full and
+/// counters-only), deadline enforcement, and learn-path parity.
+#[test]
+fn envelope_ops_end_to_end() {
+    let n = 16;
+    let (server, addr, srv) = boot(n, 35);
+    let mut framed = FramedClient::connect(&addr).unwrap();
+    let mut text = Client::connect(&addr).unwrap();
+
+    framed.ping().unwrap();
+    let resp = text.call(&Request::op(Op::Ping)).unwrap();
+    assert_eq!(resp.outcome, Outcome::Pong);
+
+    // drive some traffic, then check the typed stats on both codecs
+    let volley = vec![0.0f32; n];
+    framed.infer(&volley).unwrap();
+    framed.learn(&volley).unwrap();
+    let s = framed.stats().unwrap();
+    assert!(s.counter("requests") >= 2);
+    assert!(s.counter("volleys_learned") >= 1);
+    assert!(!s.hists.is_empty(), "full snapshot carries histograms");
+    let ts = text.stats().unwrap();
+    assert!(ts.counter("requests") >= 2);
+    assert_eq!(
+        ts.hist("request_latency").map(|h| h.count > 0),
+        Some(true)
+    );
+
+    // counters-only stats opt
+    let mut cheap = Request::op(Op::Stats);
+    cheap.opts.counters_only = true;
+    match framed.call(cheap).unwrap().outcome {
+        Outcome::Stats(s) => assert!(s.hists.is_empty()),
+        other => panic!("{other:?}"),
+    }
+
+    // a 0 ms deadline has always expired by dispatch time
+    let doomed = Request::infer(vec![SpikeVolley::dense(volley.clone())]).with_deadline_ms(0);
+    match framed.call(doomed).unwrap().outcome {
+        Outcome::Error(e) => assert!(e.contains("deadline"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+    // ...and a generous one sails through
+    let fine = Request::infer(vec![SpikeVolley::dense(volley.clone())])
+        .with_deadline_ms(60_000);
+    assert_eq!(framed.call(fine).unwrap().results().unwrap().len(), 1);
+
+    // text multi-volley call pipelines one line per volley
+    let resp = text
+        .call(&Request::infer(vec![
+            SpikeVolley::dense(vec![16.0; 16]),
+            SpikeVolley::dense(vec![0.0; 16]),
+        ]))
+        .unwrap();
+    let rs = resp.results().unwrap();
+    assert_eq!(rs.len(), 2);
+    assert_eq!(rs[0].winner, None);
+    assert!(rs[1].winner.is_some());
+
+    text.quit().unwrap();
+    framed.quit().unwrap();
+    stop(&server, srv);
+}
+
+/// The deadline opt bounds the batcher queue wait, not just decode
+/// time: volleys still queued past their deadline are dropped with a
+/// typed error at drain, and never cost a backend execution.
+#[test]
+fn batcher_drops_expired_requests_at_drain() {
+    let handle = TnnHandle::open("artifacts", 16, 6.0, 40).unwrap();
+    let metrics = handle.metrics.clone();
+    // max_batch = 2 drains the queue the moment both volleys are in, so
+    // the test never depends on the (long) flush timer
+    let batcher = DynamicBatcher::start(
+        handle,
+        BatcherConfig {
+            max_batch: 2,
+            flush_after: Duration::from_secs(30),
+            learn: false,
+        },
+    );
+    let volleys = || vec![SpikeVolley::dense(vec![16.0; 16]), SpikeVolley::dense(vec![16.0; 16])];
+
+    let expired = Instant::now() - Duration::from_millis(1);
+    for r in batcher.submit_many_with_deadline(volleys(), Some(expired)) {
+        let e = r.unwrap_err().to_string();
+        assert!(e.contains("deadline"), "{e}");
+    }
+    assert_eq!(metrics.counter("requests_expired"), 2);
+    assert_eq!(metrics.counter("batches"), 0, "no backend execution");
+
+    // a generous deadline sails through on the same batcher
+    let live = Instant::now() + Duration::from_secs(60);
+    for r in batcher.submit_many_with_deadline(volleys(), Some(live)) {
+        assert_eq!(r.unwrap().times.len(), 8);
+    }
+    assert_eq!(metrics.counter("batches"), 1);
+}
+
+/// Version negotiation and hostile frames against a live server: typed
+/// rejections, and a malformed request payload does not poison the
+/// connection.
+#[test]
+fn negotiation_and_hostile_frames_over_tcp() {
+    let n = 16;
+    let (server, addr, srv) = boot(n, 36);
+
+    // a client that only speaks a future version is rejected in kind
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        frame::write_frame(
+            &mut stream,
+            FrameType::Hello,
+            &frame::encode_hello(9, 12),
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let (ty, payload) = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(ty, FrameType::Response);
+        let resp = frame::decode_response(&payload).unwrap();
+        match resp.outcome {
+            Outcome::Error(e) => assert!(e.contains("no common protocol version"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+    }
+    // FramedClient surfaces the same rejection as a typed error
+    // (negotiate() is pinned to VERSION, so only a matching range works)
+
+    // malformed request payload inside an intact frame: typed error
+    // response (id 0), then the connection still serves good requests
+    {
+        let mut framed = FramedClient::connect(&addr).unwrap();
+        // craft garbage through the raw writer path: a valid frame whose
+        // payload is one hostile byte
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        frame::write_frame(
+            &mut stream,
+            FrameType::Hello,
+            &frame::encode_hello(2, 2),
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let (ty, _) = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(ty, FrameType::Ack);
+        frame::write_frame(&mut stream, FrameType::Request, &[0xFF]).unwrap();
+        stream.flush().unwrap();
+        let (_, payload) = frame::read_frame(&mut reader).unwrap().unwrap();
+        let resp = frame::decode_response(&payload).unwrap();
+        assert_eq!(resp.id, 0);
+        assert!(matches!(resp.outcome, Outcome::Error(_)));
+        // same connection, now a well-formed request
+        frame::write_frame(
+            &mut stream,
+            FrameType::Request,
+            &frame::encode_request(&Request::infer(vec![SpikeVolley::dense(vec![
+                16.0;
+                16
+            ])]).with_id(5))
+            .unwrap(),
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let (_, payload) = frame::read_frame(&mut reader).unwrap().unwrap();
+        let resp = frame::decode_response(&payload).unwrap();
+        assert_eq!(resp.id, 5);
+        assert_eq!(resp.results().unwrap().len(), 1);
+
+        framed.quit().unwrap();
+    }
+
+    stop(&server, srv);
+}
