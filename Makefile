@@ -1,7 +1,7 @@
 # Local entry points mirroring .github/workflows/ci.yml — keep the two in
 # lockstep so local runs and CI always exercise the same commands.
 
-.PHONY: build test bench lint fmt check python-test artifacts all clean
+.PHONY: build test bench lint fmt check python-test artifacts all clean clean-checkpoints
 
 all: lint build test bench
 
@@ -38,6 +38,13 @@ python-test:
 artifacts:
 	cd python && python3 -m compile.aot --outdir ../artifacts
 
-clean:
+# Weight checkpoints written by `repro serve --ckpt-dir checkpoints`
+# (and its autosave loop) are runtime state, not build outputs — they
+# get their own clean target so wiping builds never deletes learned
+# weights by accident, and vice versa.
+clean-checkpoints:
+	rm -rf checkpoints
+
+clean: clean-checkpoints
 	cargo clean
 	rm -rf artifacts

@@ -1,8 +1,10 @@
 //! Serving demo: boots the TCP daemon on an ephemeral port, drives it
 //! with concurrent text-protocol clients through the dynamic batcher,
-//! then re-runs the same load over the v2 framed protocol (32-volley
-//! batch frames, which coalesce into whole backend batches) and prints
-//! both sets of numbers.
+//! re-runs the same load over the framed protocol (32-volley batch
+//! frames, which coalesce into whole backend batches), then exercises
+//! the multi-model registry — create a second column over the wire,
+//! interleave routed traffic, checkpoint and hot-swap it — and prints
+//! every set of numbers.
 //!
 //! Runs on the native backend out of the box; a build with
 //! `--features xla` (against real xla-rs, see DESIGN.md §3) plus
@@ -11,8 +13,9 @@
 //! Run: `cargo run --release --example serve_demo`
 
 use catwalk::coordinator::pool::par_map;
-use catwalk::coordinator::{BatcherConfig, TnnHandle};
+use catwalk::coordinator::BatcherConfig;
 use catwalk::proto::Request;
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
 use catwalk::server::{Client, FramedClient, Server};
 use catwalk::tnn::workload::ClusteredSeries;
 use catwalk::tnn::{GrfEncoder, WorkloadConfig};
@@ -23,10 +26,25 @@ use std::time::Instant;
 
 fn main() -> catwalk::Result<()> {
     let n = 64;
-    let handle = TnnHandle::open("artifacts", n, 6.0, 7)?;
+    let ckpt_dir = std::env::temp_dir().join(format!("catwalk-demo-ckpts-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let registry = Arc::new(ModelRegistry::open(
+        RegistryConfig {
+            ckpt_dir: Some(ckpt_dir.clone()),
+            batcher: BatcherConfig::default(),
+            ..RegistryConfig::default()
+        },
+        "default",
+        ModelSpec {
+            n,
+            theta: 6.0,
+            seed: 7,
+        },
+    )?);
+    let handle = registry.slot(None)?.handle.clone();
     println!("backend: {}", handle.backend);
     let metrics = handle.metrics.clone();
-    let server = Arc::new(Server::new(handle, BatcherConfig::default()));
+    let server = Arc::new(Server::with_registry(registry));
     let stop = server.stop_handle();
     let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
     let srv = {
@@ -119,10 +137,68 @@ fn main() -> catwalk::Result<()> {
         wall.as_secs_f64() / wall_framed.as_secs_f64()
     );
 
+    // ---- multi-model registry over the wire: create a second (small,
+    // hotter-threshold) column, interleave routed traffic, checkpoint
+    // it, drift it with learning, hot-swap the checkpoint back
+    println!("\nregistry demo:");
+    let mut admin = FramedClient::connect(&addr)?;
+    let info = admin.create_model("edge", 16, 4.0, 3)?;
+    println!(
+        "  created model {} (n={} c={} theta={})",
+        info.name, info.n, info.c, info.theta
+    );
+    let edge_volley = vec![0.0f32; 16];
+    let wide_volley = vec![0.0f32; n];
+    let t0 = Instant::now();
+    let rounds = 128;
+    for _ in 0..rounds {
+        admin.infer(&wide_volley)?; // default model, unrouted
+        admin.infer_model("edge", &edge_volley)?; // routed by name
+        admin.learn_model("edge", &edge_volley)?;
+    }
+    println!(
+        "  interleaved {} requests across 2 models in {:?}",
+        rounds * 3,
+        t0.elapsed()
+    );
+    let receipt = admin.save_model("edge")?;
+    println!("  {receipt}");
+    let before = admin.infer_model("edge", &edge_volley)?;
+    for _ in 0..16 {
+        admin.learn_model("edge", &edge_volley)?; // drift the weights
+    }
+    admin.load_model("edge")?;
+    let after = admin.infer_model("edge", &edge_volley)?;
+    println!(
+        "  hot-swap restored checkpointed weights: replies identical = {}",
+        before == after
+    );
+    for m in admin.models()? {
+        println!(
+            "  model {:10} n={:3} c={:3} theta={:5} seed={}{}",
+            m.name,
+            m.n,
+            m.c,
+            m.theta,
+            m.seed,
+            if m.default { "  (default)" } else { "" }
+        );
+    }
+    let stats = admin.stats()?;
+    println!(
+        "  merged stats: requests={} (default={}, edge={})",
+        stats.counter("requests"),
+        stats.counter("model.default.requests"),
+        stats.counter("model.edge.requests")
+    );
+    admin.unload_model("edge")?;
+    let _ = admin.quit();
+
     println!("\nserver metrics:\n{}", metrics.render());
 
     stop.store(true, Ordering::Release);
     srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
     println!("daemon stopped cleanly");
     Ok(())
 }

@@ -1,7 +1,8 @@
-"""Wire-level twin of the v2 framed protocol (``rust/src/proto/frame.rs``).
+"""Wire-level twin of the framed protocol (``rust/src/proto/frame.rs``).
 
-Crafts raw v2 frames with ``struct`` against the documented layout
-(README "Serving protocol" / DESIGN.md §2.2) and checks them three ways:
+Crafts raw frames with ``struct`` against the documented layout
+(README "Serving protocol" / DESIGN.md §2.2–2.3) and checks them three
+ways:
 
 1. **Golden vectors** — byte-identical constants asserted here *and* in
    ``rust/tests/proto_frames.rs``; they are the cross-language contract.
@@ -9,20 +10,33 @@ Crafts raw v2 frames with ``struct`` against the documented layout
    breaks.
 2. **Round-trips** — the twin codec decodes what it encodes.
 3. **Malformed frames** — truncated header, bad magic, oversized
-   length, unknown version/op/repr all raise instead of misparsing.
+   length, unknown version/op/repr/cmd all raise instead of misparsing.
 
-Layout (all integers big-endian, f32 = IEEE-754 bits big-endian):
+Layout (all integers big-endian, f32 = IEEE-754 bits big-endian;
+constructs marked v3 are the model-registry additions — a v2 frame is
+byte-for-byte a valid v3 frame without them):
 
     frame    := magic "CWK2" | type u8 | len u32 | payload[len]
     type     := 1 HELLO | 2 ACK | 3 REQUEST | 4 RESPONSE
     HELLO    := min_version u16 | max_version u16
     ACK      := version u16 | n u32 | c u32 | t_max u32
     REQUEST  := id u64 | op u8 | flags u8 | [deadline_ms u32]
-                | nvolleys u16 | volley*
+                | [mlen u16 | model utf8]            (v3, flags bit 3)
+                | body
+    body     := nvolleys u16 | volley*               (op 1..5)
+              | cmd u8 | cmd_fields                  (op 6 ADMIN, v3)
     volley   := 0 | n u32 | n*f32            (dense)
               | 1 | n u32 | nnz u32 | nnz*(line u32, time f32)
+    cmd      := 1 LIST | 2 CREATE | 3 SAVE | 4 LOAD | 5 UNLOAD
+    CREATE   := str16 name | n u32 | theta f32 | seed u64
+    SAVE/LOAD/UNLOAD := str16 name
+    str16    := len u16 | utf8[len]
     RESPONSE := id u64 | status u8 | body
     RESULTS  := count u16 | (winner i32 | c u32 | c*f32)*
+    ADMIN    := 0 | receipt utf8                     (v3, OK)
+              | 1 | count u16 | model_row*           (v3, MODELS)
+    model_row := str16 name | n u32 | c u32 | t_max u32
+                 | theta f32 | seed u64 | mflags u8 (bit 0 default)
 """
 
 import struct
@@ -30,13 +44,17 @@ import struct
 import pytest
 
 MAGIC = b"CWK2"
-VERSION = 2
+VERSION = 3
+MIN_VERSION = 2
 MAX_PAYLOAD = 1 << 24
 
 T_HELLO, T_ACK, T_REQUEST, T_RESPONSE = 1, 2, 3, 4
-OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT = 1, 2, 3, 4, 5
-FLAG_SPARSE_REPLY, FLAG_DEADLINE, FLAG_COUNTERS_ONLY = 1, 2, 4
-ST_RESULTS, ST_STATS, ST_PONG, ST_BYE, ST_ERROR = 0, 1, 2, 3, 4
+OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT, OP_ADMIN = 1, 2, 3, 4, 5, 6
+FLAG_SPARSE_REPLY, FLAG_DEADLINE, FLAG_COUNTERS_ONLY, FLAG_MODEL = 1, 2, 4, 8
+ST_RESULTS, ST_STATS, ST_PONG, ST_BYE, ST_ERROR, ST_ADMIN = 0, 1, 2, 3, 4, 5
+CMD_LIST, CMD_CREATE, CMD_SAVE, CMD_LOAD, CMD_UNLOAD = 1, 2, 3, 4, 5
+ADMIN_OK, ADMIN_MODELS = 0, 1
+MFLAG_DEFAULT = 1
 
 
 # ----------------------------------------------------------- twin codec
@@ -71,7 +89,7 @@ def parse_ack(payload):
     if len(payload) != 14:
         raise ValueError("bad ACK length %d" % len(payload))
     version, n, c, t_max = struct.unpack(">HIII", payload)
-    if version != VERSION:
+    if not MIN_VERSION <= version <= VERSION:
         raise ValueError("unknown version %d" % version)
     return {"version": version, "n": n, "c": c, "t_max": t_max}
 
@@ -89,18 +107,47 @@ def sparse_volley(n, pairs):
     return out
 
 
+def str16(s):
+    raw = s.encode("utf-8")
+    return struct.pack(">H", len(raw)) + raw
+
+
 def request(rid, op, volleys=(), sparse_reply=False, deadline_ms=None,
-            counters_only=False):
+            counters_only=False, model=None, admin=None):
+    """``admin`` is the pre-encoded cmd body; required iff op is ADMIN."""
     flags = (
         (FLAG_SPARSE_REPLY if sparse_reply else 0)
         | (FLAG_DEADLINE if deadline_ms is not None else 0)
         | (FLAG_COUNTERS_ONLY if counters_only else 0)
+        | (FLAG_MODEL if model is not None else 0)
     )
     p = struct.pack(">QBB", rid, op, flags)
     if deadline_ms is not None:
         p += struct.pack(">I", deadline_ms)
+    if model is not None:
+        p += str16(model)
+    if op == OP_ADMIN:
+        assert not volleys and admin is not None
+        return p + admin
     p += struct.pack(">H", len(volleys))
     return p + b"".join(volleys)
+
+
+def cmd_list():
+    return struct.pack(">B", CMD_LIST)
+
+
+def cmd_create(name, n, theta, seed):
+    return (
+        struct.pack(">B", CMD_CREATE)
+        + str16(name)
+        + struct.pack(">IfQ", n, theta, seed)
+    )
+
+
+def cmd_named(cmd, name):
+    assert cmd in (CMD_SAVE, CMD_LOAD, CMD_UNLOAD)
+    return struct.pack(">B", cmd) + str16(name)
 
 
 class Cur:
@@ -115,39 +162,66 @@ class Cur:
         self.off += size
         return vals if len(vals) > 1 else vals[0]
 
+    def str16(self):
+        ln = self.take(">H")
+        if self.off + ln > len(self.b):
+            raise ValueError("short string at offset %d" % self.off)
+        raw = self.b[self.off : self.off + ln]
+        self.off += ln
+        return raw.decode("utf-8")
+
     def finish(self):
         if self.off != len(self.b):
             raise ValueError("%d trailing bytes" % (len(self.b) - self.off))
 
 
+def parse_model_cmd(cur):
+    cmd = cur.take(">B")
+    if cmd == CMD_LIST:
+        return ("list",)
+    if cmd == CMD_CREATE:
+        name = cur.str16()
+        n, theta, seed = cur.take(">IfQ")
+        return ("create", name, n, theta, seed)
+    if cmd in (CMD_SAVE, CMD_LOAD, CMD_UNLOAD):
+        verb = {CMD_SAVE: "save", CMD_LOAD: "load", CMD_UNLOAD: "unload"}[cmd]
+        return (verb, cur.str16())
+    raise ValueError("unknown admin cmd %d" % cmd)
+
+
 def parse_request(payload):
     cur = Cur(payload)
     rid, op, flags = cur.take(">QBB")
-    if op not in (OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT):
+    if op not in (OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT, OP_ADMIN):
         raise ValueError("unknown op %d" % op)
-    if flags & ~(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY):
+    if flags & ~(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY | FLAG_MODEL):
         raise ValueError("unknown flags %#x" % flags)
     deadline = cur.take(">I") if flags & FLAG_DEADLINE else None
+    model = cur.str16() if flags & FLAG_MODEL else None
     volleys = []
-    for _ in range(cur.take(">H")):
-        repr_ = cur.take(">B")
-        if repr_ == 0:
-            n = cur.take(">I")
-            if n * 4 > len(cur.b) - cur.off:
-                raise ValueError("dense count exceeds payload")
-            volleys.append(("dense", [cur.take(">f") for _ in range(n)]))
-        elif repr_ == 1:
-            n, nnz = cur.take(">II")
-            if nnz * 8 > len(cur.b) - cur.off:
-                raise ValueError("sparse count exceeds payload")
-            pairs = [cur.take(">If") for _ in range(nnz)]
-            if any(line >= n for line, _ in pairs):
-                raise ValueError("line out of range")
-            if any(a[0] >= b[0] for a, b in zip(pairs, pairs[1:])):
-                raise ValueError("lines not strictly ascending")
-            volleys.append(("sparse", n, pairs))
-        else:
-            raise ValueError("unknown volley repr %d" % repr_)
+    admin = None
+    if op == OP_ADMIN:
+        admin = parse_model_cmd(cur)
+    else:
+        for _ in range(cur.take(">H")):
+            repr_ = cur.take(">B")
+            if repr_ == 0:
+                n = cur.take(">I")
+                if n * 4 > len(cur.b) - cur.off:
+                    raise ValueError("dense count exceeds payload")
+                volleys.append(("dense", [cur.take(">f") for _ in range(n)]))
+            elif repr_ == 1:
+                n, nnz = cur.take(">II")
+                if nnz * 8 > len(cur.b) - cur.off:
+                    raise ValueError("sparse count exceeds payload")
+                pairs = [cur.take(">If") for _ in range(nnz)]
+                if any(line >= n for line, _ in pairs):
+                    raise ValueError("line out of range")
+                if any(a[0] >= b[0] for a, b in zip(pairs, pairs[1:])):
+                    raise ValueError("lines not strictly ascending")
+                volleys.append(("sparse", n, pairs))
+            else:
+                raise ValueError("unknown volley repr %d" % repr_)
     cur.finish()
     return {
         "id": rid,
@@ -156,6 +230,8 @@ def parse_request(payload):
         "sparse_reply": bool(flags & FLAG_SPARSE_REPLY),
         "deadline_ms": deadline,
         "counters_only": bool(flags & FLAG_COUNTERS_ONLY),
+        "model": model,
+        "admin": admin,
     }
 
 
@@ -164,6 +240,20 @@ def response_results(rid, results):
     for winner, times in results:
         p += struct.pack(">iI", winner, len(times))
         p += b"".join(struct.pack(">f", t) for t in times)
+    return p
+
+
+def response_admin_ok(rid, receipt):
+    return struct.pack(">QBB", rid, ST_ADMIN, ADMIN_OK) + receipt.encode("utf-8")
+
+
+def response_admin_models(rid, rows):
+    """rows: (name, n, c, t_max, theta, seed, default) tuples."""
+    p = struct.pack(">QBBH", rid, ST_ADMIN, ADMIN_MODELS, len(rows))
+    for name, n, c, t_max, theta, seed, default in rows:
+        p += str16(name)
+        p += struct.pack(">IIIfQB", n, c, t_max, theta, seed,
+                         MFLAG_DEFAULT if default else 0)
     return p
 
 
@@ -185,6 +275,22 @@ def parse_response(payload):
     if status in (ST_PONG, ST_BYE):
         cur.finish()
         return {"id": rid, "status": "pong" if status == ST_PONG else "bye"}
+    if status == ST_ADMIN:
+        kind = cur.take(">B")
+        if kind == ADMIN_OK:
+            return {"id": rid, "receipt": cur.b[cur.off :].decode("utf-8")}
+        if kind == ADMIN_MODELS:
+            rows = []
+            for _ in range(cur.take(">H")):
+                name = cur.str16()
+                n, c, t_max, theta, seed, mflags = cur.take(">IIIfQB")
+                if mflags & ~MFLAG_DEFAULT:
+                    raise ValueError("unknown model row flags %#x" % mflags)
+                rows.append((name, n, c, t_max, theta, seed,
+                             bool(mflags & MFLAG_DEFAULT)))
+            cur.finish()
+            return {"id": rid, "models": rows}
+        raise ValueError("unknown admin reply kind %d" % kind)
     raise ValueError("unknown response status %d" % status)
 
 
@@ -207,6 +313,37 @@ GOLDEN_RESPONSE_HEX = (
 # HELLO [2,2] and ACK v2 for an n=16, c=8, t_max=16 column.
 GOLDEN_HELLO_HEX = "43574b32010000000400020002"
 GOLDEN_ACK_HEX = "43574b32020000000e0002000000100000000800000010"
+
+# --- v3 (model registry) golden vectors, also asserted in
+# --- rust/tests/proto_frames.rs.
+
+# Request: id=7, INFER routed to model "edge" (flag bit 3 only), one
+# dense volley [1.0, 16.0, 2.5, 16.0].
+GOLDEN_MODEL_REQUEST_HEX = (
+    "43574b32030000002700000000000000070108000465646765000100000000"
+    "043f800000418000004020000041800000"
+)
+
+# Request: id=8, ADMIN CREATE { name="edge", n=16, theta=6.0, seed=5 }.
+GOLDEN_ADMIN_CREATE_HEX = (
+    "43574b32030000002100000000000000080600020004656467650000001040"
+    "c000000000000000000005"
+)
+
+# Request: id=9, ADMIN LIST.
+GOLDEN_ADMIN_LIST_HEX = "43574b32030000000b0000000000000009060001"
+
+# Response: id=9, MODELS [default(n=64,c=16,t_max=16,theta=6,seed=7)*,
+# edge(n=16,c=8,t_max=16,theta=6,seed=5)] — * = default flag.
+GOLDEN_MODELS_RESPONSE_HEX = (
+    "43574b32040000004d000000000000000905010002000764656661756c7400"
+    "000040000000100000001040c0000000000000000000070100046564676500"
+    "000010000000080000001040c00000000000000000000500"
+)
+
+# HELLO [2,3] (what a v3 client sends) and a v3 ACK for the n=64 column.
+GOLDEN_HELLO_V3_HEX = "43574b32010000000400020003"
+GOLDEN_ACK_V3_HEX = "43574b32020000000e0003000000400000001000000010"
 
 
 def golden_request_bytes():
@@ -234,7 +371,40 @@ def golden_hello_bytes():
 
 
 def golden_ack_bytes():
-    return frame(T_ACK, struct.pack(">HIII", VERSION, 16, 8, 16))
+    return frame(T_ACK, struct.pack(">HIII", 2, 16, 8, 16))
+
+
+def golden_model_request_bytes():
+    return frame(
+        T_REQUEST,
+        request(
+            7,
+            OP_INFER,
+            volleys=[dense_volley([1.0, 16.0, 2.5, 16.0])],
+            model="edge",
+        ),
+    )
+
+
+def golden_admin_create_bytes():
+    return frame(T_REQUEST, request(8, OP_ADMIN, admin=cmd_create("edge", 16, 6.0, 5)))
+
+
+def golden_admin_list_bytes():
+    return frame(T_REQUEST, request(9, OP_ADMIN, admin=cmd_list()))
+
+
+def golden_models_response_bytes():
+    return frame(
+        T_RESPONSE,
+        response_admin_models(
+            9,
+            [
+                ("default", 64, 16, 16, 6.0, 7, True),
+                ("edge", 16, 8, 16, 6.0, 5, False),
+            ],
+        ),
+    )
 
 
 # ----------------------------------------------------------------- tests
@@ -343,11 +513,148 @@ def test_malformed_request_payloads_raise():
         )
 
 
+def test_golden_v3_vectors_match_contract():
+    assert golden_model_request_bytes().hex() == GOLDEN_MODEL_REQUEST_HEX
+    assert golden_admin_create_bytes().hex() == GOLDEN_ADMIN_CREATE_HEX
+    assert golden_admin_list_bytes().hex() == GOLDEN_ADMIN_LIST_HEX
+    assert golden_models_response_bytes().hex() == GOLDEN_MODELS_RESPONSE_HEX
+    assert frame(T_HELLO, hello(2, 3)).hex() == GOLDEN_HELLO_V3_HEX
+    assert (
+        frame(T_ACK, struct.pack(">HIII", 3, 64, 16, 16)).hex() == GOLDEN_ACK_V3_HEX
+    )
+    # the v3 ACK parses under the twin's version window [2, 3]
+    (ftype, payload), _ = parse_frame(frame(T_ACK, struct.pack(">HIII", 3, 64, 16, 16)))
+    assert parse_ack(payload)["version"] == 3
+
+
+def test_model_request_roundtrip():
+    (ftype, payload), rest = parse_frame(golden_model_request_bytes())
+    assert (ftype, rest) == (T_REQUEST, b"")
+    req = parse_request(payload)
+    assert req["model"] == "edge"
+    assert req["op"] == OP_INFER and req["id"] == 7
+    assert req["volleys"] == [("dense", [1.0, 16.0, 2.5, 16.0])]
+    assert req["admin"] is None
+    # without the flag the model field is absent — the v2 layout exactly
+    bare = request(7, OP_INFER, volleys=[dense_volley([1.0])])
+    assert parse_request(bare)["model"] is None
+    # model composes with the other flags (deadline sits before it)
+    both = request(1, OP_LEARN, volleys=[dense_volley([2.0])],
+                   deadline_ms=50, model="edge", sparse_reply=True)
+    req = parse_request(both)
+    assert (req["deadline_ms"], req["model"]) == (50, "edge")
+
+
+def test_admin_frames_roundtrip_and_reject_garbage():
+    (_, payload), _ = parse_frame(golden_admin_create_bytes())
+    req = parse_request(payload)
+    assert req["op"] == OP_ADMIN
+    assert req["admin"] == ("create", "edge", 16, 6.0, 5)
+    (_, payload), _ = parse_frame(golden_admin_list_bytes())
+    assert parse_request(payload)["admin"] == ("list",)
+    for cmd, verb in [(CMD_SAVE, "save"), (CMD_LOAD, "load"), (CMD_UNLOAD, "unload")]:
+        p = request(3, OP_ADMIN, admin=cmd_named(cmd, "edge"))
+        assert parse_request(p)["admin"] == (verb, "edge")
+    # unknown cmd byte, truncated name, trailing bytes: all raise
+    with pytest.raises(ValueError):
+        parse_request(request(3, OP_ADMIN, admin=struct.pack(">B", 99)))
+    with pytest.raises(ValueError):
+        parse_request(request(3, OP_ADMIN, admin=struct.pack(">B", CMD_SAVE) + str16("edge")[:3]))
+    with pytest.raises(ValueError):
+        parse_request(request(3, OP_ADMIN, admin=cmd_list() + b"\x00"))
+    # every truncation of the create frame raises
+    good = request(8, OP_ADMIN, admin=cmd_create("edge", 16, 6.0, 5))
+    for cut in range(len(good)):
+        with pytest.raises(ValueError):
+            parse_request(good[:cut])
+
+
+def test_admin_response_roundtrip():
+    ok = response_admin_ok(4, "saved edge to checkpoints/edge.ckpt")
+    assert parse_response(ok)["receipt"].startswith("saved edge")
+    (_, payload), _ = parse_frame(golden_models_response_bytes())
+    resp = parse_response(payload)
+    assert resp["id"] == 9
+    assert resp["models"] == [
+        ("default", 64, 16, 16, 6.0, 7, True),
+        ("edge", 16, 8, 16, 6.0, 5, False),
+    ]
+    # unknown reply kind / model-row flags raise
+    with pytest.raises(ValueError):
+        parse_response(struct.pack(">QBB", 1, ST_ADMIN, 9))
+    bad_row = response_admin_models(1, [("m", 1, 1, 1, 1.0, 1, False)])
+    bad_row = bad_row[:-1] + b"\x80"
+    with pytest.raises(ValueError):
+        parse_response(bad_row)
+
+
+# ------------------------------------------- checkpoint file twin (CWKP)
+
+CKPT_MAGIC = b"CWKP"
+CKPT_SCHEMA = 1
+
+# Shared with rust/tests/registry.rs (golden_checkpoint_bytes_match_
+# python_twin): n=4, c=2, t_max=16, theta=6.5, seed=0xABCD, weights
+# [1.0, 2.5, 3.0, 4.0, -0.5, 0.0, 7.0, 8.25].
+GOLDEN_CKPT_HEX = (
+    "43574b50000100000004000000020000001040d00000000000000000abcd0000"
+    "0000000000083f800000402000004040000040800000bf000000000000004"
+    "0e0000041040000f26a105c"
+)
+
+
+def checkpoint_bytes(n, c, t_max, theta, seed, weights):
+    """``registry/checkpoint.rs`` layout: header | f32 weights | crc32."""
+    import zlib
+
+    assert len(weights) == n * c
+    p = CKPT_MAGIC + struct.pack(
+        ">HIIIfQQ", CKPT_SCHEMA, n, c, t_max, theta, seed, len(weights)
+    )
+    p += b"".join(struct.pack(">f", w) for w in weights)
+    return p + struct.pack(">I", zlib.crc32(p) & 0xFFFFFFFF)
+
+
+def test_checkpoint_golden_bytes():
+    b = checkpoint_bytes(
+        4, 2, 16, 6.5, 0xABCD, [1.0, 2.5, 3.0, 4.0, -0.5, 0.0, 7.0, 8.25]
+    )
+    assert b.hex() == GOLDEN_CKPT_HEX
+    # fixed header (38) + 8 weights + crc
+    assert len(b) == 38 + 8 * 4 + 4
+    # the trailing crc covers everything before it (zlib == IEEE 802.3,
+    # the polynomial rust's registry::checkpoint::crc32 implements)
+    import zlib
+
+    stored = struct.unpack(">I", b[-4:])[0]
+    assert stored == zlib.crc32(b[:-4]) & 0xFFFFFFFF
+    # a bit flip anywhere breaks the crc — the property rust enforces
+    flipped = bytearray(b)
+    flipped[10] ^= 1
+    assert struct.unpack(">I", bytes(flipped[-4:]))[0] != (
+        zlib.crc32(bytes(flipped[:-4])) & 0xFFFFFFFF
+    )
+
+
 def test_stats_kv_schema_shape():
-    """The STATS body is line-oriented key=value, sorted by key."""
-    body = "counter.requests=5\nhist.lat.p50_us=64\nschema=1\n"
+    """The STATS body is line-oriented key=value, sorted by key; the
+    schema=2 registry rows namespace per-model metrics under
+    ``model.<name>.`` and keep plain keys as the cross-model aggregate."""
+    body = (
+        "counter.model.edge.n=16\n"
+        "counter.model.edge.requests=3\n"
+        "counter.requests=5\n"
+        "hist.lat.p50_us=64\n"
+        "hist.model.edge.lat.p50_us=32\n"
+        "schema=2\n"
+    )
     lines = body.strip().splitlines()
     assert lines == sorted(lines)
     parsed = dict(line.split("=", 1) for line in lines)
-    assert parsed["schema"] == "1"
+    assert parsed["schema"] == "2"
     assert int(parsed["counter.requests"]) == 5
+    # per-model rows are ordinary keys under the model.<name>. prefix,
+    # so a schema=1 reader that skips unknown keys keeps working
+    assert int(parsed["counter.model.edge.requests"]) == 3
+    assert int(parsed["counter.model.edge.n"]) == 16
+    assert int(parsed["hist.model.edge.lat.p50_us"]) == 32

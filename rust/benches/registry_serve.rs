@@ -1,0 +1,150 @@
+//! Registry-serving bench: what multi-model routing costs on the hot
+//! path, and what checkpoint hot-swaps cost under load — the numbers
+//! EXPERIMENTS.md §Serving records for the registry subsystem.
+//!
+//! Three measurements against one server:
+//!
+//! 1. default-model infer (the pre-registry baseline shape),
+//! 2. the same traffic routed by explicit model name (`@`-routing on
+//!    the framed codec: one read-lock + `Arc` clone per request),
+//! 3. routed traffic while a second thread save/load hot-swaps another
+//!    model's checkpoint in a tight loop (admin ops take the write
+//!    lock; the bench shows they do not stall the read-locked path).
+//!
+//! Run: `cargo bench --bench registry_serve`
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use catwalk::rng::Xoshiro256;
+use catwalk::server::{FramedClient, Server};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn main() {
+    bench_header("registry serving: routing + hot-swap under load");
+    let ckpt_dir = std::env::temp_dir().join(format!(
+        "catwalk-registry-bench-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    let registry = Arc::new(
+        ModelRegistry::open(
+            RegistryConfig {
+                ckpt_dir: Some(ckpt_dir.clone()),
+                ..RegistryConfig::default()
+            },
+            "default",
+            ModelSpec {
+                n: 64,
+                theta: 8.0,
+                seed: 7,
+            },
+        )
+        .unwrap(),
+    );
+    registry
+        .create(
+            "swap",
+            ModelSpec {
+                n: 16,
+                theta: 6.0,
+                seed: 3,
+            },
+        )
+        .unwrap();
+    println!(
+        "backend: {}",
+        registry.slot(None).unwrap().handle.backend
+    );
+
+    let server = Arc::new(Server::with_registry(registry.clone()));
+    let stop = server.stop_handle();
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |p| {
+                    let _ = port_tx.send(p);
+                })
+                .unwrap()
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+
+    // one fixed volley set at ~10% line activity
+    let n = 64;
+    let mut rng = Xoshiro256::new(5);
+    let volleys: Vec<Vec<f32>> = (0..256)
+        .map(|_| {
+            (0..n)
+                .map(|_| {
+                    if rng.gen_bool(0.1) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        16.0
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let requests = volleys.len() as u64;
+
+    let mut client = FramedClient::connect(&addr).unwrap();
+    let base = bench("default model, unrouted", 1, 10, || {
+        for v in &volleys {
+            client.infer(v).unwrap();
+        }
+    });
+    println!("{}", base.report());
+    println!("  -> {:.0} req/s", base.throughput(requests));
+
+    let routed = bench("default model, routed by name", 1, 10, || {
+        for v in &volleys {
+            client.infer_model("default", v).unwrap();
+        }
+    });
+    println!("{}", routed.report());
+    println!("  -> {:.0} req/s", routed.throughput(requests));
+
+    // hot-swap churn on the *other* model while the routed load runs
+    let churn_stop = Arc::new(AtomicBool::new(false));
+    let churner = {
+        let registry = registry.clone();
+        let churn_stop = churn_stop.clone();
+        std::thread::spawn(move || {
+            let mut swaps = 0u64;
+            registry.save("swap").unwrap();
+            while !churn_stop.load(Ordering::Acquire) {
+                registry.save("swap").unwrap();
+                registry.load("swap").unwrap();
+                swaps += 2;
+            }
+            swaps
+        })
+    };
+    let under_swap = bench("routed, hot-swap churn on sibling", 1, 10, || {
+        for v in &volleys {
+            client.infer_model("default", v).unwrap();
+        }
+    });
+    churn_stop.store(true, Ordering::Release);
+    let swaps = churner.join().unwrap();
+    println!("{}", under_swap.report());
+    println!(
+        "  -> {:.0} req/s while the sibling model absorbed {swaps} save/load swaps",
+        under_swap.throughput(requests)
+    );
+
+    println!(
+        "\n  routing overhead: {:.2}x   hot-swap interference: {:.2}x",
+        routed.median().as_secs_f64() / base.median().as_secs_f64(),
+        under_swap.median().as_secs_f64() / routed.median().as_secs_f64()
+    );
+
+    let _ = client.quit();
+    stop.store(true, Ordering::Release);
+    srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}

@@ -11,7 +11,11 @@ use std::collections::HashMap;
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: String,
-    flags: HashMap<String, String>,
+    /// Values per flag, in the order given — a flag may repeat
+    /// (`--models a=16,6 --models b=64,12`); [`Args::flag`] yields the
+    /// last value (the familiar override semantics), [`Args::flag_all`]
+    /// yields them all.
+    flags: HashMap<String, Vec<String>>,
     switches: Vec<String>,
 }
 
@@ -20,7 +24,7 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
         let mut it = argv.into_iter().skip(1);
         let subcommand = it.next().unwrap_or_default();
-        let mut flags = HashMap::new();
+        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
         let mut switches = Vec::new();
         let mut pending: Option<String> = None;
         for arg in it {
@@ -29,12 +33,12 @@ impl Args {
                     switches.push(prev);
                 }
                 if let Some((k, v)) = name.split_once('=') {
-                    flags.insert(k.to_string(), v.to_string());
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
                 } else {
                     pending = Some(name.to_string());
                 }
             } else if let Some(name) = pending.take() {
-                flags.insert(name, arg);
+                flags.entry(name).or_default().push(arg);
             } else {
                 return Err(Error::Usage(format!("unexpected positional `{arg}`")));
             }
@@ -50,7 +54,19 @@ impl Args {
     }
 
     pub fn flag(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every value a repeated flag was given, in order (empty when the
+    /// flag is absent).
+    pub fn flag_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
     }
 
     pub fn switch(&self, name: &str) -> bool {
@@ -127,5 +143,17 @@ mod tests {
     fn trailing_switch_works() {
         let a = Args::parse(argv("serve --learn")).unwrap();
         assert!(a.switch("learn"));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_and_last_wins() {
+        let a = Args::parse(argv(
+            "serve --models a=16,6 --models b=64,12,9 --addr x --addr y",
+        ))
+        .unwrap();
+        assert_eq!(a.flag_all("models"), vec!["a=16,6", "b=64,12,9"]);
+        assert_eq!(a.flag("addr"), Some("y"), "last value wins for flag()");
+        assert!(a.flag_all("absent").is_empty());
+        assert!(a.switch("models"), "a valued flag still reads as present");
     }
 }

@@ -187,6 +187,16 @@ pub struct TnnHandle {
     pub c: usize,
     pub b: usize,
     pub t_max: usize,
+    /// Firing threshold θ this instance was opened with (checkpoint
+    /// provenance; the engine owns the live copy).
+    pub theta: f32,
+    /// Weight-init seed this instance was opened with (checkpoint
+    /// provenance — loaded weights may since have replaced the init).
+    pub seed: u64,
+    /// Artifact directory this instance was opened against, so a
+    /// registry wrapped around the handle opens sibling models from
+    /// the same artifact set.
+    pub artifacts_dir: PathBuf,
 }
 
 impl TnnHandle {
@@ -195,6 +205,7 @@ impl TnnHandle {
     /// return the handle.
     pub fn open(dir: impl AsRef<Path>, n: usize, theta: f32, seed: u64) -> Result<TnnHandle> {
         let dir: PathBuf = dir.as_ref().to_path_buf();
+        let artifacts_dir = dir.clone();
         let kind = BackendKind::from_env()?;
         let manifest = Manifest::load_or_default(&dir, kind.requires_artifacts())?;
         let entry = manifest
@@ -275,6 +286,9 @@ impl TnnHandle {
             c: entry.c,
             b: entry.b,
             t_max: manifest.t_max,
+            theta,
+            seed,
+            artifacts_dir,
         })
     }
 
@@ -324,6 +338,14 @@ impl TnnHandle {
             Op::Stats => Outcome::Stats(self.metrics.snapshot(!req.opts.counters_only)),
             Op::Ping => Outcome::Pong,
             Op::Quit => Outcome::Bye,
+            // a bare handle is one model; registry administration needs
+            // the registry itself (crate::registry::ModelRegistry)
+            Op::Admin(_) => Outcome::Error(
+                Error::Coordinator(
+                    "admin ops route through the model registry, not a bare TnnHandle".into(),
+                )
+                .to_string(),
+            ),
         };
         Response {
             id: req.id,
@@ -367,6 +389,7 @@ mod tests {
         let handle = TnnHandle::open("/no-such-dir", 16, 6.0, 1).unwrap();
         assert_eq!(handle.backend, "native");
         assert_eq!((handle.n, handle.c, handle.b, handle.t_max), (16, 8, 64, 16));
+        assert_eq!((handle.theta, handle.seed), (6.0, 1));
         // an all-silent volley produces no winner and all-t_max times
         let res = handle.infer(vec![vec![16.0; 16]]).unwrap();
         assert_eq!(res.len(), 1);
@@ -474,6 +497,42 @@ mod tests {
             Outcome::Error(e) => assert!(e.contains("width"), "{e}"),
             other => panic!("{other:?}"),
         }
+
+        // admin ops are the registry's job — a bare handle answers in kind
+        let resp = handle.submit(Request::admin(crate::proto::ModelCmd::List));
+        match resp.outcome {
+            Outcome::Error(e) => assert!(e.contains("registry"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// The set_weights shape gate is a typed error through the handle
+    /// (not an engine-side log), and a rejected swap leaves the old
+    /// weights serving — the registry's checkpoint `Load` path builds
+    /// on exactly this contract (see rust/tests/registry.rs for the
+    /// wire-level twin of this test).
+    #[test]
+    fn set_weights_shape_mismatch_is_typed_and_non_destructive() {
+        if !native_env() {
+            return;
+        }
+        let handle = TnnHandle::open("/no-such-dir", 16, 6.0, 9).unwrap();
+        let before = handle.weights().unwrap();
+        let volley = vec![0.0f32; 16];
+        let reply_before = handle.infer(vec![volley.clone()]).unwrap();
+
+        let bad = Tensor::zeros(vec![4, 8]);
+        match handle.set_weights(bad) {
+            Err(Error::Runtime(m)) => assert!(m.contains("shape"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(handle.weights().unwrap().data, before.data);
+        assert_eq!(handle.infer(vec![volley]).unwrap(), reply_before);
+
+        // a well-shaped swap still goes through
+        let good = Tensor::zeros(vec![handle.c, handle.n]);
+        handle.set_weights(good.clone()).unwrap();
+        assert_eq!(handle.weights().unwrap().data, good.data);
     }
 
     #[test]

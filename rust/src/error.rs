@@ -42,6 +42,12 @@ pub enum Error {
     /// returns this.
     Proto(String),
 
+    /// A weight checkpoint was unreadable (bad magic/schema, truncated
+    /// file, CRC mismatch) or incompatible with its target model.
+    /// Loading never panics on hostile bytes; it returns this, and the
+    /// live model keeps serving its old weights.
+    Checkpoint(String),
+
     /// CLI usage error.
     Usage(String),
 
@@ -63,6 +69,7 @@ impl fmt::Display for Error {
             Error::Server(m) => write!(f, "server error: {m}"),
             Error::Volley(m) => write!(f, "volley error: {m}"),
             Error::Proto(m) => write!(f, "proto error: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),

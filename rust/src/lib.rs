@@ -21,10 +21,12 @@
 //!    artifacts, first-class sparse spike volleys ([`volley`]) with a
 //!    density-aware kernel cutover, a thread-pool DSE scheduler and
 //!    dynamic volley batcher ([`coordinator`]), a typed request/response
-//!    envelope with a v2 framed binary codec and a text compat codec
-//!    ([`proto`]), a TCP serving front-end speaking both ([`server`]),
-//!    experiment drivers for every figure and table in the paper
-//!    ([`experiments`]), and report renderers ([`report`]).
+//!    envelope with a framed binary codec (v3: model routing + registry
+//!    admin) and a text compat codec ([`proto`]), a multi-model registry
+//!    with named instances and versioned weight checkpoints
+//!    ([`registry`]), a TCP serving front-end speaking both codecs
+//!    ([`server`]), experiment drivers for every figure and table in
+//!    the paper ([`experiments`]), and report renderers ([`report`]).
 //!
 //! The public API a downstream user touches first:
 //!
@@ -50,6 +52,7 @@ pub mod pc;
 pub mod power;
 pub mod proto;
 pub mod quickprop;
+pub mod registry;
 pub mod report;
 pub mod rng;
 pub mod runtime;
@@ -62,4 +65,5 @@ pub mod volley;
 
 pub use error::{Error, Result};
 pub use proto::{Outcome, Request, Response};
+pub use registry::{ModelRegistry, ModelSpec, RegistryConfig};
 pub use volley::{SpikeVolley, VolleyResult};

@@ -9,8 +9,11 @@
 //! repro ablate-k            # E9 accuracy ablation
 //! repro dse                 # parallel design-space sweep
 //! repro cluster             # E10 end-to-end STDP clustering via PJRT
-//! repro serve [--addr A]    # TCP daemon (v2 framed + text compat)
-//! repro client [--addr A] [--framed] [--window W]
+//! repro serve [--addr A] [--models name=n,theta[,seed];...]
+//!             [--ckpt-dir D] [--autosave-secs S]
+//!                           # TCP daemon (v3 framed + text compat);
+//!                           # multi-model registry + weight checkpoints
+//! repro client [--addr A] [--framed] [--window W] [--model NAME]
 //!                           # load generator against a daemon
 //! repro all                 # every figure/table, EXPERIMENTS.md-ready
 //! ```
@@ -19,6 +22,7 @@ use catwalk::cli::Args;
 use catwalk::coordinator::dse;
 use catwalk::coordinator::{BatcherConfig, TnnHandle};
 use catwalk::error::{Error, Result};
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
 use catwalk::experiments::activity::StimulusConfig;
 use catwalk::experiments::figures;
 use catwalk::experiments::{ablate_k, sparsity_study};
@@ -26,6 +30,7 @@ use catwalk::report::Table;
 use catwalk::server::{Client, Server};
 use catwalk::tnn::workload::ClusteredSeries;
 use catwalk::tnn::{GrfEncoder, WorkloadConfig};
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -42,7 +47,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W]";
+const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed];...] [--ckpt-dir DIR] [--autosave-secs S]";
 
 fn emit(t: &Table, csv: bool) {
     if csv {
@@ -203,17 +208,103 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One `--models` entry: `name=n,theta[,seed]` (semicolon-separated
+/// entries and repeated flags both work).
+fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec)> {
+    let bad = |why: &str| {
+        Error::Usage(format!(
+            "--models `{raw}`: {why} (want name=n,theta[,seed])"
+        ))
+    };
+    let (name, rest) = raw.split_once('=').ok_or_else(|| bad("missing `=`"))?;
+    let mut fields = rest.split(',');
+    let n = fields
+        .next()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .ok_or_else(|| bad("bad n"))?;
+    let theta = fields
+        .next()
+        .and_then(|s| s.trim().parse::<f32>().ok())
+        .ok_or_else(|| bad("bad theta"))?;
+    let seed = match fields.next() {
+        None => 7,
+        Some(s) => s.trim().parse::<u64>().map_err(|_| bad("bad seed"))?,
+    };
+    if fields.next().is_some() {
+        return Err(bad("too many fields"));
+    }
+    Ok((name.trim().to_string(), ModelSpec { n, theta, seed }))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get_string("artifacts", "artifacts");
     let addr = args.get_string("addr", "127.0.0.1:7070");
     let n = args.get_usize("n", 64)?;
-    let service = TnnHandle::open(&artifacts, n, 6.0, 7)?;
+    let theta = args.get_f64("theta", 6.0)? as f32;
+    let seed = args.get_u64("seed", 7)?;
+    let autosave = args.get_u64("autosave-secs", 30)?;
+    let ckpt_dir = args.flag("ckpt-dir").map(std::path::PathBuf::from);
+
+    // `--models a=16,6;b=64,12,9` or repeated `--models` flags; the
+    // first entry is the default model. No flag = one default model
+    // from the classic --n/--theta/--seed knobs.
+    let mut specs: Vec<(String, ModelSpec)> = Vec::new();
+    for raw in args.flag_all("models") {
+        for part in raw.split(';').filter(|p| !p.trim().is_empty()) {
+            specs.push(parse_model_spec(part.trim())?);
+        }
+    }
+    if specs.is_empty() {
+        specs.push(("default".into(), ModelSpec { n, theta, seed }));
+    }
+
+    let cfg = RegistryConfig {
+        artifacts_dir: artifacts.into(),
+        batcher: BatcherConfig::default(),
+        ckpt_dir: ckpt_dir.clone(),
+        autosave_after: (autosave > 0 && ckpt_dir.is_some())
+            .then(|| std::time::Duration::from_secs(autosave)),
+    };
+    let (default_name, default_spec) = specs[0].clone();
+    let registry = Arc::new(ModelRegistry::open(cfg, &default_name, default_spec)?);
+    for (name, spec) in &specs[1..] {
+        registry.create(name, *spec)?;
+    }
+    for info in registry.list() {
+        let resumed = registry
+            .ckpt_path(&info.name)
+            .is_some_and(|p| p.exists());
+        println!(
+            "model {}{}: n={} c={} t_max={} theta={} seed={}{}",
+            info.name,
+            if info.default { " (default)" } else { "" },
+            info.n,
+            info.c,
+            info.t_max,
+            info.theta,
+            info.seed,
+            if resumed { " [resumed from checkpoint]" } else { "" },
+        );
+    }
+    if let Some(dir) = &ckpt_dir {
+        if autosave > 0 {
+            println!(
+                "checkpoints in {} (autosave every {autosave}s + shutdown flush)",
+                dir.display()
+            );
+        } else {
+            println!(
+                "checkpoints in {} (shutdown flush only; --autosave-secs 0)",
+                dir.display()
+            );
+        }
+    }
     println!(
-        "serving TNN column (n={n}, backend={}) on {addr} — v2 framed protocol \
-         (HELLO/ACK, pipelined) + text compat (INFER/LEARN/SPARSE/SLEARN/STATS/PING/QUIT)",
-        service.backend
+        "serving {} model(s) on {addr} — v3 framed protocol (HELLO/ACK, pipelined, \
+         @model routing, admin) + text compat (INFER/LEARN/SPARSE/SLEARN/STATS/PING/QUIT)",
+        specs.len()
     );
-    let server = Server::new(service, BatcherConfig::default());
+    let server = Server::with_registry(registry);
     server.serve(&addr, |port| println!("bound on port {port}"))
 }
 
@@ -227,6 +318,8 @@ fn cmd_client(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 512)?;
     let conns = args.get_usize("connections", 8)?;
     let framed = args.switch("framed");
+    // route every request to this named model (size --n to its width)
+    let model = args.flag("model").map(str::to_string);
     // pipelining window for --framed: W request frames in flight
     let window = args.get_usize("window", 1)?.max(1);
     let t0 = Instant::now();
@@ -248,7 +341,12 @@ fn cmd_client(args: &Args) -> Result<()> {
                     let reqs: Vec<Request> = (0..take)
                         .map(|_| {
                             let (_, s) = series.next_sample();
-                            Request::infer(vec![SpikeVolley::dense(enc.encode(&s))])
+                            let req =
+                                Request::infer(vec![SpikeVolley::dense(enc.encode(&s))]);
+                            match &model {
+                                Some(m) => req.with_model(m.clone()),
+                                None => req,
+                            }
                         })
                         .collect();
                     let t = Instant::now();
@@ -270,7 +368,18 @@ fn cmd_client(args: &Args) -> Result<()> {
                     let (_, s) = series.next_sample();
                     let v = enc.encode(&s);
                     let t = Instant::now();
-                    client.infer(&v).expect("infer");
+                    match &model {
+                        // text routing: the @model prefix via call()
+                        Some(m) => {
+                            let req = Request::infer(vec![SpikeVolley::dense(v.clone())])
+                                .with_model(m.clone());
+                            let resp = client.call(&req).expect("infer");
+                            resp.results().expect("results");
+                        }
+                        None => {
+                            client.infer(&v).expect("infer");
+                        }
+                    }
                     lats.push(t.elapsed());
                 }
                 let _ = client.quit();

@@ -1,5 +1,5 @@
-//! The v2 framed binary codec: length-prefixed frames, HELLO/ACK
-//! version negotiation, request ids for client-side pipelining.
+//! The framed binary codec: length-prefixed frames, HELLO/ACK version
+//! negotiation, request ids for client-side pipelining.
 //!
 //! Every frame is `magic | type | len | payload`; every multi-byte
 //! integer is big-endian and every `f32` travels as its IEEE-754 bit
@@ -15,41 +15,72 @@
 //! ACK      := version u16 | n u32 | c u32 | t_max u32  (server → client)
 //!
 //! REQUEST  := id u64 | op u8 | flags u8
-//!             | deadline_ms u32  (iff flags bit 1)
-//!             | nvolleys u16 | volley*
+//!             | deadline_ms u32           (iff flags bit 1)
+//!             | mlen u16 | model utf8     (iff flags bit 3; v3)
+//!             | body
 //! op       := 1 INFER | 2 LEARN | 3 STATS | 4 PING | 5 QUIT
+//!           | 6 ADMIN                     (v3)
 //! flags    := bit 0 sparse_reply | bit 1 has_deadline
-//!             | bit 2 counters_only          (other bits: error)
+//!             | bit 2 counters_only | bit 3 has_model (v3)
+//!             (other bits: error)
+//! body     := nvolleys u16 | volley*                   (op 1..5)
+//!           | cmd u8 | cmd_fields                      (op 6)
 //! volley   := 0 u8 | n u32 | n × f32                   (dense)
 //!           | 1 u8 | n u32 | nnz u32 | nnz × (line u32, time f32)
+//! cmd      := 1 LIST | 2 CREATE | 3 SAVE | 4 LOAD | 5 UNLOAD
+//! CREATE   := name str16 | n u32 | theta f32 | seed u64
+//! SAVE/LOAD/UNLOAD := name str16
+//! str16    := len u16 | utf8[len]
 //!
 //! RESPONSE := id u64 | status u8 | body
 //! status   := 0 RESULTS | 1 STATS | 2 PONG | 3 BYE | 4 ERROR
+//!           | 5 ADMIN                    (v3)
 //! RESULTS  := count u16 | (winner i32 (-1 = none) | c u32 | c × f32)*
 //! STATS    := utf8 key=value block (proto::stats schema)
 //! ERROR    := utf8 message          PONG/BYE := empty
+//! ADMIN    := 0 u8 | receipt utf8                      (OK)
+//!           | 1 u8 | count u16 | model_row*            (MODELS)
+//! model_row := name str16 | n u32 | c u32 | t_max u32
+//!              | theta f32 | seed u64 | mflags u8 (bit 0 = default)
 //! ```
 //!
 //! The handshake: the client opens with HELLO carrying the version
-//! range it speaks; the server picks the highest common version (today
-//! exactly [`VERSION`]) and answers ACK — which also tells the client
-//! the column geometry `(n, c, t_max)`, so a framed client needs no
-//! out-of-band configuration. No common version, or a first frame that
-//! is not HELLO, is answered with an ERROR response (id 0) and a close.
+//! range it speaks; the server picks the highest version inside both
+//! `[client_min, client_max]` and `[`[`MIN_VERSION`]`, `[`VERSION`]`]`
+//! and answers ACK — which also tells the client the column geometry
+//! `(n, c, t_max)` of the **default model**, so a framed client needs
+//! no out-of-band configuration. No common version, or a first frame
+//! that is not HELLO, is answered with an ERROR response (id 0) and a
+//! close.
+//!
+//! **v2 ↔ v3.** Version 3 adds exactly the constructs marked `(v3)`
+//! above: the tagged optional model-id field (flag bit 3), the ADMIN
+//! op, and the ADMIN response status. A v2 frame is byte-for-byte a
+//! valid v3 frame with those absent, so a v2 client negotiates version
+//! 2 and keeps working unchanged; a v3 client that negotiated version
+//! 2 must not emit model ids or admin ops ([`crate::server::FramedClient`]
+//! refuses with a typed error rather than sending bytes the peer would
+//! reject).
 //!
 //! Decoding hostile bytes — truncated header, bad magic, oversized
-//! length, unknown version/type/op/flags, trailing bytes — returns
+//! length, unknown version/type/op/flags/cmd, trailing bytes — returns
 //! [`Error::Proto`]; nothing in this module panics on wire input.
 
 use crate::error::{Error, Result};
-use crate::proto::{Op, Outcome, Request, RequestOpts, Response, StatsSnapshot};
+use crate::proto::{
+    AdminReply, ModelCmd, ModelInfo, Op, Outcome, Request, RequestOpts, Response, StatsSnapshot,
+};
 use crate::volley::{SpikeVolley, VolleyResult};
 use std::io::{Read, Write};
 
 /// Frame magic: `b"CWK2"`.
 pub const MAGIC: [u8; 4] = *b"CWK2";
-/// The one protocol version this build speaks.
-pub const VERSION: u16 = 2;
+/// The newest protocol version this build speaks (v3: model routing +
+/// registry admin).
+pub const VERSION: u16 = 3;
+/// The oldest protocol version this build still speaks (v2: the PR 3
+/// envelope, no model routing).
+pub const MIN_VERSION: u16 = 2;
 /// Hard cap on a frame payload (16 MiB) — a hostile length prefix must
 /// not become an allocation.
 pub const MAX_PAYLOAD: usize = 1 << 24;
@@ -201,13 +232,12 @@ pub fn decode_ack(payload: &[u8]) -> Result<Ack> {
     Ok(ack)
 }
 
-/// The version the server picks for a client range, if any.
+/// The version the server picks for a client range, if any: the
+/// highest version both sides speak.
 pub fn negotiate(client_min: u16, client_max: u16) -> Option<u16> {
-    if (client_min..=client_max).contains(&VERSION) {
-        Some(VERSION)
-    } else {
-        None
-    }
+    let lo = client_min.max(MIN_VERSION);
+    let hi = client_max.min(VERSION);
+    (lo <= hi).then_some(hi)
 }
 
 // -------------------------------------------------------------- requests
@@ -215,14 +245,24 @@ pub fn negotiate(client_min: u16, client_max: u16) -> Option<u16> {
 const FLAG_SPARSE_REPLY: u8 = 1;
 const FLAG_DEADLINE: u8 = 2;
 const FLAG_COUNTERS_ONLY: u8 = 4;
+const FLAG_MODEL: u8 = 8;
 
-fn op_to_u8(op: Op) -> u8 {
+const OP_ADMIN: u8 = 6;
+
+const CMD_LIST: u8 = 1;
+const CMD_CREATE: u8 = 2;
+const CMD_SAVE: u8 = 3;
+const CMD_LOAD: u8 = 4;
+const CMD_UNLOAD: u8 = 5;
+
+fn op_to_u8(op: &Op) -> u8 {
     match op {
         Op::Infer => 1,
         Op::Learn => 2,
         Op::Stats => 3,
         Op::Ping => 4,
         Op::Quit => 5,
+        Op::Admin(_) => OP_ADMIN,
     }
 }
 
@@ -237,6 +277,69 @@ fn op_from_u8(b: u8) -> Result<Op> {
     }
 }
 
+/// Append a length-prefixed utf-8 string (`str16` in the layout).
+fn put_str(p: &mut Vec<u8>, s: &str) -> Result<()> {
+    if s.len() > u16::MAX as usize {
+        return Err(Error::Proto(format!(
+            "string of {} bytes exceeds the u16 frame field",
+            s.len()
+        )));
+    }
+    p.extend_from_slice(&(s.len() as u16).to_be_bytes());
+    p.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn encode_model_cmd(p: &mut Vec<u8>, cmd: &ModelCmd) -> Result<()> {
+    match cmd {
+        ModelCmd::List => p.push(CMD_LIST),
+        ModelCmd::Create {
+            name,
+            n,
+            theta,
+            seed,
+        } => {
+            if *n > u32::MAX as usize {
+                return Err(Error::Proto(format!("model width {n} exceeds u32")));
+            }
+            p.push(CMD_CREATE);
+            put_str(p, name)?;
+            p.extend_from_slice(&(*n as u32).to_be_bytes());
+            p.extend_from_slice(&theta.to_bits().to_be_bytes());
+            p.extend_from_slice(&seed.to_be_bytes());
+        }
+        ModelCmd::Save { name } => {
+            p.push(CMD_SAVE);
+            put_str(p, name)?;
+        }
+        ModelCmd::Load { name } => {
+            p.push(CMD_LOAD);
+            put_str(p, name)?;
+        }
+        ModelCmd::Unload { name } => {
+            p.push(CMD_UNLOAD);
+            put_str(p, name)?;
+        }
+    }
+    Ok(())
+}
+
+fn decode_model_cmd(cur: &mut Cur) -> Result<ModelCmd> {
+    match cur.u8()? {
+        CMD_LIST => Ok(ModelCmd::List),
+        CMD_CREATE => Ok(ModelCmd::Create {
+            name: cur.str16()?,
+            n: cur.u32()? as usize,
+            theta: cur.f32()?,
+            seed: cur.u64()?,
+        }),
+        CMD_SAVE => Ok(ModelCmd::Save { name: cur.str16()? }),
+        CMD_LOAD => Ok(ModelCmd::Load { name: cur.str16()? }),
+        CMD_UNLOAD => Ok(ModelCmd::Unload { name: cur.str16()? }),
+        other => Err(Error::Proto(format!("unknown admin cmd {other}"))),
+    }
+}
+
 /// Encode a [`Request`] as a REQUEST frame payload.
 pub fn encode_request(req: &Request) -> Result<Vec<u8>> {
     if req.volleys.len() > u16::MAX as usize {
@@ -247,7 +350,7 @@ pub fn encode_request(req: &Request) -> Result<Vec<u8>> {
     }
     let mut p = Vec::new();
     p.extend_from_slice(&req.id.to_be_bytes());
-    p.push(op_to_u8(req.op));
+    p.push(op_to_u8(&req.op));
     let mut flags = 0u8;
     if req.opts.sparse_reply {
         flags |= FLAG_SPARSE_REPLY;
@@ -258,13 +361,28 @@ pub fn encode_request(req: &Request) -> Result<Vec<u8>> {
     if req.opts.counters_only {
         flags |= FLAG_COUNTERS_ONLY;
     }
+    if req.opts.model.is_some() {
+        flags |= FLAG_MODEL;
+    }
     p.push(flags);
     if let Some(ms) = req.opts.deadline_ms {
         p.extend_from_slice(&ms.to_be_bytes());
     }
-    p.extend_from_slice(&(req.volleys.len() as u16).to_be_bytes());
-    for v in &req.volleys {
-        encode_volley(&mut p, v)?;
+    if let Some(model) = &req.opts.model {
+        put_str(&mut p, model)?;
+    }
+    if let Op::Admin(cmd) = &req.op {
+        if !req.volleys.is_empty() {
+            return Err(Error::Proto(
+                "admin request carries no volleys".into(),
+            ));
+        }
+        encode_model_cmd(&mut p, cmd)?;
+    } else {
+        p.extend_from_slice(&(req.volleys.len() as u16).to_be_bytes());
+        for v in &req.volleys {
+            encode_volley(&mut p, v)?;
+        }
     }
     Ok(p)
 }
@@ -273,9 +391,9 @@ pub fn encode_request(req: &Request) -> Result<Vec<u8>> {
 pub fn decode_request(payload: &[u8]) -> Result<Request> {
     let mut cur = Cur::new(payload);
     let id = cur.u64()?;
-    let op = op_from_u8(cur.u8()?)?;
+    let op_byte = cur.u8()?;
     let flags = cur.u8()?;
-    if flags & !(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY) != 0 {
+    if flags & !(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY | FLAG_MODEL) != 0 {
         return Err(Error::Proto(format!("unknown request flags {flags:#x}")));
     }
     let deadline_ms = if flags & FLAG_DEADLINE != 0 {
@@ -283,11 +401,22 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
     } else {
         None
     };
-    let nvolleys = cur.u16()? as usize;
-    let mut volleys = Vec::with_capacity(nvolleys.min(1024));
-    for _ in 0..nvolleys {
-        volleys.push(decode_volley(&mut cur)?);
-    }
+    let model = if flags & FLAG_MODEL != 0 {
+        Some(cur.str16()?)
+    } else {
+        None
+    };
+    let (op, volleys) = if op_byte == OP_ADMIN {
+        (Op::Admin(decode_model_cmd(&mut cur)?), Vec::new())
+    } else {
+        let op = op_from_u8(op_byte)?;
+        let nvolleys = cur.u16()? as usize;
+        let mut volleys = Vec::with_capacity(nvolleys.min(1024));
+        for _ in 0..nvolleys {
+            volleys.push(decode_volley(&mut cur)?);
+        }
+        (op, volleys)
+    };
     cur.finish()?;
     Ok(Request {
         id,
@@ -297,6 +426,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
             sparse_reply: flags & FLAG_SPARSE_REPLY != 0,
             deadline_ms,
             counters_only: flags & FLAG_COUNTERS_ONLY != 0,
+            model,
         },
     })
 }
@@ -372,6 +502,11 @@ const STATUS_STATS: u8 = 1;
 const STATUS_PONG: u8 = 2;
 const STATUS_BYE: u8 = 3;
 const STATUS_ERROR: u8 = 4;
+const STATUS_ADMIN: u8 = 5;
+
+const ADMIN_OK: u8 = 0;
+const ADMIN_MODELS: u8 = 1;
+const MFLAG_DEFAULT: u8 = 1;
 
 /// Encode a [`Response`] as a RESPONSE frame payload. Results always
 /// carry the dense time vector — the sparse reply encoding is a text-
@@ -401,6 +536,40 @@ pub fn encode_response(resp: &Response) -> Result<Vec<u8>> {
         Outcome::Stats(s) => {
             p.push(STATUS_STATS);
             p.extend_from_slice(s.render_kv().as_bytes());
+        }
+        Outcome::Admin(AdminReply::Ok(msg)) => {
+            p.push(STATUS_ADMIN);
+            p.push(ADMIN_OK);
+            p.extend_from_slice(msg.as_bytes());
+        }
+        Outcome::Admin(AdminReply::Models(models)) => {
+            if models.len() > u16::MAX as usize {
+                return Err(Error::Proto(format!(
+                    "{} model rows exceed the u16 frame field",
+                    models.len()
+                )));
+            }
+            p.push(STATUS_ADMIN);
+            p.push(ADMIN_MODELS);
+            p.extend_from_slice(&(models.len() as u16).to_be_bytes());
+            for m in models {
+                let over_u32 = m.n > u32::MAX as usize
+                    || m.c > u32::MAX as usize
+                    || m.t_max > u32::MAX as usize;
+                if over_u32 {
+                    return Err(Error::Proto(format!(
+                        "model `{}` geometry exceeds u32",
+                        m.name
+                    )));
+                }
+                put_str(&mut p, &m.name)?;
+                p.extend_from_slice(&(m.n as u32).to_be_bytes());
+                p.extend_from_slice(&(m.c as u32).to_be_bytes());
+                p.extend_from_slice(&(m.t_max as u32).to_be_bytes());
+                p.extend_from_slice(&m.theta.to_bits().to_be_bytes());
+                p.extend_from_slice(&m.seed.to_be_bytes());
+                p.push(if m.default { MFLAG_DEFAULT } else { 0 });
+            }
         }
         Outcome::Pong => p.push(STATUS_PONG),
         Outcome::Bye => p.push(STATUS_BYE),
@@ -437,6 +606,43 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
             Outcome::Results(rs)
         }
         STATUS_STATS => Outcome::Stats(StatsSnapshot::parse_kv(&cur.rest_utf8()?)?),
+        STATUS_ADMIN => match cur.u8()? {
+            ADMIN_OK => Outcome::Admin(AdminReply::Ok(cur.rest_utf8()?)),
+            ADMIN_MODELS => {
+                let count = cur.u16()? as usize;
+                let mut models = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    let name = cur.str16()?;
+                    let n = cur.u32()? as usize;
+                    let c = cur.u32()? as usize;
+                    let t_max = cur.u32()? as usize;
+                    let theta = cur.f32()?;
+                    let seed = cur.u64()?;
+                    let mflags = cur.u8()?;
+                    if mflags & !MFLAG_DEFAULT != 0 {
+                        return Err(Error::Proto(format!(
+                            "unknown model row flags {mflags:#x}"
+                        )));
+                    }
+                    models.push(ModelInfo {
+                        name,
+                        n,
+                        c,
+                        t_max,
+                        theta,
+                        seed,
+                        default: mflags & MFLAG_DEFAULT != 0,
+                    });
+                }
+                cur.finish()?;
+                Outcome::Admin(AdminReply::Models(models))
+            }
+            other => {
+                return Err(Error::Proto(format!(
+                    "unknown admin reply kind {other}"
+                )))
+            }
+        },
         STATUS_PONG => {
             cur.finish()?;
             Outcome::Pong
@@ -518,6 +724,14 @@ impl<'a> Cur<'a> {
         Ok(f32::from_bits(self.u32()?))
     }
 
+    /// Length-prefixed utf-8 string (`str16` in the layout).
+    fn str16(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let s = self.take(len)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|e| Error::Proto(format!("string is not utf-8: {e}")))
+    }
+
     fn rest_utf8(&mut self) -> Result<String> {
         let s = &self.b[self.off..];
         self.off = self.b.len();
@@ -557,9 +771,13 @@ mod tests {
         };
         assert_eq!(decode_ack(&encode_ack(&ack)).unwrap(), ack);
 
-        assert_eq!(negotiate(1, 4), Some(2));
-        assert_eq!(negotiate(2, 2), Some(2));
-        assert_eq!(negotiate(3, 9), None);
+        // the server picks the highest common version in [2, 3]
+        assert_eq!(negotiate(1, 4), Some(3));
+        assert_eq!(negotiate(2, 2), Some(2), "pre-PR v2 client keeps working");
+        assert_eq!(negotiate(2, 3), Some(3));
+        assert_eq!(negotiate(3, 3), Some(3));
+        assert_eq!(negotiate(3, 9), Some(3));
+        assert_eq!(negotiate(4, 9), None);
         assert_eq!(negotiate(0, 1), None);
     }
 
@@ -578,6 +796,7 @@ mod tests {
                     sparse_reply: true,
                     deadline_ms: Some(1234),
                     counters_only: true,
+                    model: Some("column-α".into()),
                 },
             };
             let enc = encode_request(&req).unwrap();
@@ -586,6 +805,95 @@ mod tests {
         // no flags, no volleys
         let req = Request::op(Op::Ping).with_id(1);
         assert_eq!(decode_request(&encode_request(&req).unwrap()).unwrap(), req);
+        // a model id alone sets exactly the model flag bit
+        let req = Request::infer(vec![SpikeVolley::dense(vec![1.0])]).with_model("m");
+        let enc = encode_request(&req).unwrap();
+        assert_eq!(enc[9], 8, "flags byte carries only FLAG_MODEL");
+        assert_eq!(decode_request(&enc).unwrap(), req);
+    }
+
+    #[test]
+    fn admin_request_roundtrip_every_cmd() {
+        let cmds = [
+            ModelCmd::List,
+            ModelCmd::Create {
+                name: "mnist".into(),
+                n: 64,
+                theta: 12.5,
+                seed: 0xC0FFEE,
+            },
+            ModelCmd::Save { name: "mnist".into() },
+            ModelCmd::Load { name: "mnist".into() },
+            ModelCmd::Unload { name: "mnist".into() },
+        ];
+        for cmd in cmds {
+            let req = Request::admin(cmd).with_id(9);
+            let enc = encode_request(&req).unwrap();
+            assert_eq!(decode_request(&enc).unwrap(), req);
+            // truncations stay typed errors
+            for cut in 0..enc.len() {
+                assert!(decode_request(&enc[..cut]).is_err(), "cut={cut}");
+            }
+        }
+        // an admin request cannot carry volleys
+        let mut bad = Request::admin(ModelCmd::List);
+        bad.volleys.push(SpikeVolley::dense(vec![1.0]));
+        assert!(encode_request(&bad).is_err());
+        // unknown cmd byte is a typed error
+        let enc = encode_request(&Request::admin(ModelCmd::List)).unwrap();
+        let mut unk = enc.clone();
+        *unk.last_mut().unwrap() = 99;
+        assert!(matches!(decode_request(&unk), Err(Error::Proto(_))));
+    }
+
+    #[test]
+    fn admin_response_roundtrip() {
+        let cases = vec![
+            Outcome::Admin(AdminReply::Ok("saved to checkpoints/a.ckpt".into())),
+            Outcome::Admin(AdminReply::Models(vec![
+                ModelInfo {
+                    name: "default".into(),
+                    n: 64,
+                    c: 16,
+                    t_max: 16,
+                    theta: 6.0,
+                    seed: 7,
+                    default: true,
+                },
+                ModelInfo {
+                    name: "edge".into(),
+                    n: 16,
+                    c: 8,
+                    t_max: 16,
+                    theta: 4.0,
+                    seed: 3,
+                    default: false,
+                },
+            ])),
+            Outcome::Admin(AdminReply::Models(Vec::new())),
+        ];
+        for outcome in cases {
+            // truncating an OK receipt merely shortens the utf-8 body
+            // (like STATUS_ERROR); only MODELS rows have fixed layout
+            let check_cuts = matches!(outcome, Outcome::Admin(AdminReply::Models(_)));
+            let resp = Response { id: 6, outcome };
+            let enc = encode_response(&resp).unwrap();
+            assert_eq!(decode_response(&enc).unwrap(), resp);
+            if check_cuts {
+                for cut in 10..enc.len() {
+                    assert!(decode_response(&enc[..cut]).is_err(), "cut={cut}");
+                }
+            }
+        }
+        // unknown admin reply kind
+        let enc = encode_response(&Response {
+            id: 1,
+            outcome: Outcome::Admin(AdminReply::Ok(String::new())),
+        })
+        .unwrap();
+        let mut bad = enc.clone();
+        bad[9] = 7; // the kind byte after id(8) + status(1)
+        assert!(decode_response(&bad).is_err());
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! the envelope:
 //!
 //! ```text
-//!   [frame]  v2 length-prefixed binary framing, HELLO/ACK-negotiated
+//!   [frame]  length-prefixed binary framing, HELLO/ACK-negotiated
+//!            (v2, or v3 with model routing + registry admin)
 //!   [text]   the legacy newline protocol, as a thin compat adapter
 //!      │
 //!      ▼  encode/decode
@@ -22,8 +23,9 @@
 //!   [`RequestOpts`] (reply encoding, deadline, stats granularity).
 //! * [`Response`] — the echoed id plus an [`Outcome`]: results, a typed
 //!   [`StatsSnapshot`], `Pong`/`Bye`, or an error string.
-//! * [`frame`] — the v2 binary framing (magic + length prefix, version
-//!   negotiated by a HELLO/ACK handshake). Hostile bytes produce
+//! * [`frame`] — the binary framing (magic + length prefix, version
+//!   negotiated by a HELLO/ACK handshake; v3 adds model routing and
+//!   the registry admin ops). Hostile bytes produce
 //!   [`crate::Error::Proto`], never a panic.
 //! * [`text`] — the legacy text protocol re-expressed over the envelope;
 //!   every legacy reply is byte-for-byte what the old per-verb plumbing
@@ -41,7 +43,7 @@ pub use stats::{HistStats, StatsSnapshot};
 use crate::volley::{SpikeVolley, VolleyResult};
 
 /// What a request asks the serving stack to do.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Op {
     /// Run the forward kernel over the request's volleys.
     Infer,
@@ -53,10 +55,80 @@ pub enum Op {
     Ping,
     /// Close the connection; answered with [`Outcome::Bye`].
     Quit,
+    /// Registry administration (list/create/save/load/unload models);
+    /// answered with [`Outcome::Admin`]. Frame codec v3 only.
+    Admin(ModelCmd),
+}
+
+/// A registry administration command (the payload of [`Op::Admin`]).
+///
+/// `Save`/`Load` address checkpoints **by model name** inside the
+/// server's configured checkpoint directory — the wire never carries
+/// filesystem paths (the registry API accepts explicit paths for
+/// in-process callers).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelCmd {
+    /// Enumerate the registered models.
+    List,
+    /// Create (and start serving) a new named model instance.
+    Create {
+        name: String,
+        /// column input width (must match a manifest entry)
+        n: usize,
+        /// firing threshold θ
+        theta: f32,
+        /// weight-init seed
+        seed: u64,
+    },
+    /// Write the model's weights to its checkpoint file.
+    Save { name: String },
+    /// Hot-swap the model's weights from its checkpoint file.
+    Load { name: String },
+    /// Stop serving and drop a (non-default) model.
+    Unload { name: String },
+}
+
+impl ModelCmd {
+    /// The model name a command addresses (`List` addresses none).
+    pub fn name(&self) -> Option<&str> {
+        match self {
+            ModelCmd::List => None,
+            ModelCmd::Create { name, .. }
+            | ModelCmd::Save { name }
+            | ModelCmd::Load { name }
+            | ModelCmd::Unload { name } => Some(name),
+        }
+    }
+}
+
+/// One row of the model listing (the reply to [`ModelCmd::List`], and
+/// what [`ModelCmd::Create`] echoes back).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    /// column input width
+    pub n: usize,
+    /// number of columns (result width)
+    pub c: usize,
+    pub t_max: usize,
+    pub theta: f32,
+    pub seed: u64,
+    /// true for the slot unnamed requests route to
+    pub default: bool,
+}
+
+/// What an [`Op::Admin`] request came back with.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdminReply {
+    /// The command succeeded; the string is a human-readable receipt
+    /// (e.g. the checkpoint path a `Save` wrote).
+    Ok(String),
+    /// The model listing (`List`, and `Create`'s echo of the new slot).
+    Models(Vec<ModelInfo>),
 }
 
 /// Per-request options the old verb-per-method API could not express.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RequestOpts {
     /// Reply with only the fired `(column, time)` pairs instead of the
     /// dense time vector (the text codec maps `SPARSE`/`SLEARN` here).
@@ -67,6 +139,11 @@ pub struct RequestOpts {
     /// For [`Op::Stats`]: skip the latency histograms and return the
     /// counters only (the cheap half of a snapshot).
     pub counters_only: bool,
+    /// Route to this named model in the server's registry (`None` =
+    /// the default model). Carried as a tagged optional field in the
+    /// v3 frame codec and as the `@model` prefix token in the text
+    /// protocol; an unknown name is a typed error, never a fallback.
+    pub model: Option<String>,
 }
 
 /// One typed request: the whole serving surface in a single struct.
@@ -111,6 +188,11 @@ impl Request {
         }
     }
 
+    /// A registry administration request (no volleys).
+    pub fn admin(cmd: ModelCmd) -> Request {
+        Request::op(Op::Admin(cmd))
+    }
+
     pub fn with_id(mut self, id: u64) -> Request {
         self.id = id;
         self
@@ -125,6 +207,12 @@ impl Request {
         self.opts.sparse_reply = true;
         self
     }
+
+    /// Route this request to the named model instead of the default.
+    pub fn with_model(mut self, name: impl Into<String>) -> Request {
+        self.opts.model = Some(name.into());
+        self
+    }
 }
 
 /// What happened to a request.
@@ -133,6 +221,8 @@ pub enum Outcome {
     /// One result per volley, in request order.
     Results(Vec<VolleyResult>),
     Stats(StatsSnapshot),
+    /// The reply to an [`Op::Admin`] command.
+    Admin(AdminReply),
     Pong,
     Bye,
     /// The request failed; the string is the rendered [`crate::Error`].
@@ -164,6 +254,17 @@ impl Response {
             ))),
         }
     }
+
+    /// The admin reply, or the error a non-`Admin` outcome amounts to.
+    pub fn admin(&self) -> crate::Result<&AdminReply> {
+        match &self.outcome {
+            Outcome::Admin(r) => Ok(r),
+            Outcome::Error(e) => Err(crate::Error::Server(e.clone())),
+            other => Err(crate::Error::Proto(format!(
+                "expected admin reply, got {other:?}"
+            ))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -185,6 +286,45 @@ mod tests {
         let s = Request::op(Op::Stats);
         assert!(s.volleys.is_empty());
         assert_eq!(s.opts, RequestOpts::default());
+
+        let m = Request::infer(vec![SpikeVolley::dense(vec![1.0])]).with_model("mnist");
+        assert_eq!(m.opts.model.as_deref(), Some("mnist"));
+
+        let a = Request::admin(ModelCmd::Save {
+            name: "mnist".into(),
+        });
+        assert!(a.volleys.is_empty());
+        assert_eq!(a.op, Op::Admin(ModelCmd::Save { name: "mnist".into() }));
+        assert_eq!(a.op.clone(), a.op);
+    }
+
+    #[test]
+    fn model_cmd_names() {
+        assert_eq!(ModelCmd::List.name(), None);
+        for cmd in [
+            ModelCmd::Create {
+                name: "a".into(),
+                n: 16,
+                theta: 6.0,
+                seed: 1,
+            },
+            ModelCmd::Save { name: "a".into() },
+            ModelCmd::Load { name: "a".into() },
+            ModelCmd::Unload { name: "a".into() },
+        ] {
+            assert_eq!(cmd.name(), Some("a"));
+        }
+    }
+
+    #[test]
+    fn admin_reply_accessor() {
+        let resp = Response {
+            id: 2,
+            outcome: Outcome::Admin(AdminReply::Ok("saved".into())),
+        };
+        assert_eq!(resp.admin().unwrap(), &AdminReply::Ok("saved".into()));
+        assert!(resp.results().is_err());
+        assert!(Response::error(2, "boom").admin().is_err());
     }
 
     #[test]

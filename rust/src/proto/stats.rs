@@ -14,21 +14,31 @@
 //! hist.<name>.p50_us=<u64>
 //! hist.<name>.p95_us=<u64>
 //! hist.<name>.p99_us=<u64>
-//! schema=1
+//! schema=2
 //! ```
+//!
+//! **schema=2 (multi-model registry).** A registry-backed server
+//! prefixes per-model rows with `model.<model>.` inside the counter /
+//! hist namespaces — e.g. `counter.model.edge.requests=4` or
+//! `hist.model.edge.request_latency.p50_us=64` — plus geometry rows
+//! (`counter.model.<m>.n/c/t_max/seed` and `counter.model.<m>.default`).
+//! Plain (unprefixed) counters are the **sums across models** and plain
+//! hists are the **default model's**, so a schema=1 reader that knows
+//! nothing about models parses the exact aggregate it always saw; the
+//! grammar itself is unchanged, which is why the bump is additive.
 //!
 //! Lines are sorted lexicographically by the full key, so the rendering
 //! is deterministic and diff-friendly; unknown keys are skipped on
-//! parse, so a `schema=1` reader survives additive growth. `f64`
-//! values use Rust's shortest-round-trip `Display`, making
-//! render → parse the exact identity (property-tested in
-//! `rust/tests/proto_frames.rs`).
+//! parse, so a reader survives additive growth. `f64` values use
+//! Rust's shortest-round-trip `Display`, making render → parse the
+//! exact identity (property-tested in `rust/tests/proto_frames.rs`).
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 
-/// The schema version stamped into every rendering.
-pub const STATS_SCHEMA: u32 = 1;
+/// The schema version stamped into every rendering (2 = per-model
+/// registry rows; the grammar is unchanged from 1).
+pub const STATS_SCHEMA: u32 = 2;
 
 /// Quantile summary of one latency histogram.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -166,7 +176,7 @@ mod tests {
         sorted.sort();
         assert_eq!(lines, sorted, "lines must be sorted by key");
         assert!(kv.contains("counter.requests=12\n"));
-        assert!(kv.contains("schema=1\n"));
+        assert!(kv.contains("schema=2\n"));
         assert!(kv.contains("hist.request_latency.mean_us=93.25\n"));
         assert_eq!(StatsSnapshot::parse_kv(&kv).unwrap(), s);
     }
@@ -189,7 +199,22 @@ mod tests {
     #[test]
     fn empty_snapshot_roundtrips() {
         let s = StatsSnapshot::new();
-        assert_eq!(s.render_kv(), "schema=1\n");
+        assert_eq!(s.render_kv(), "schema=2\n");
         assert_eq!(StatsSnapshot::parse_kv(&s.render_kv()).unwrap(), s);
+    }
+
+    #[test]
+    fn model_rows_parse_as_namespaced_keys() {
+        // the schema=2 per-model rows ride the schema=1 grammar: a
+        // model prefix is just part of the counter/hist name
+        let s = StatsSnapshot::parse_kv(
+            "schema=2\ncounter.requests=7\ncounter.model.edge.requests=3\n\
+             counter.model.edge.n=16\nhist.model.edge.request_latency.p50_us=64\n",
+        )
+        .unwrap();
+        assert_eq!(s.counter("requests"), 7);
+        assert_eq!(s.counter("model.edge.requests"), 3);
+        assert_eq!(s.counter("model.edge.n"), 16);
+        assert_eq!(s.hist("model.edge.request_latency").unwrap().p50_us, 64);
     }
 }

@@ -20,6 +20,15 @@
 //! Error    -> "ERR <rendered error>"
 //! ```
 //!
+//! **Model routing.** Any line may open with a `@model` prefix token
+//! (`@edge INFER 1,2,...`) naming the registry slot the request routes
+//! to; no prefix = the default model. [`split_model`] peels the token
+//! off before [`parse_line`] runs, because the remainder of the line is
+//! validated against the *named* model's geometry `(n, t_max)`, which
+//! the caller looks up in between. A bare `@` (no name) is a typed
+//! error. Registry admin has no text verbs — that surface is frame
+//! codec v3 only.
+//!
 //! The text protocol identifies one volley per line and carries no
 //! request ids ([`parse_line`] always yields `id = 0`); pipelining and
 //! multi-volley requests are the frame codec's job. `STATS` is the one
@@ -30,6 +39,24 @@
 use crate::error::{Error, Result};
 use crate::proto::{Op, Outcome, Request, Response};
 use crate::volley::SpikeVolley;
+
+/// Peel an optional `@model` prefix token off a text-protocol line:
+/// `"@edge INFER 1,2"` → `(Some("edge"), "INFER 1,2")`. Lines without
+/// the prefix pass through untouched. The caller resolves the model
+/// (for its `(n, t_max)` geometry) before parsing the remainder.
+pub fn split_model(line: &str) -> Result<(Option<&str>, &str)> {
+    let Some(rest) = line.strip_prefix('@') else {
+        return Ok((None, line));
+    };
+    let (model, rest) = match rest.split_once(' ') {
+        Some((m, r)) => (m, r.trim_start()),
+        None => (rest, ""),
+    };
+    if model.is_empty() {
+        return Err(Error::Server("empty model name after `@`".into()));
+    }
+    Ok((Some(model), rest))
+}
 
 /// Parse one text-protocol line into an envelope [`Request`].
 ///
@@ -107,6 +134,9 @@ pub fn render_response(resp: &Response, sparse_reply: bool, t_max: usize) -> Str
             out
         }
         Outcome::Stats(s) => format!("{}\n", s.render_kv()),
+        // text requests cannot produce admin outcomes (no admin verbs);
+        // render defensively rather than panicking on a misrouted reply
+        Outcome::Admin(_) => "ERR admin replies are frame-codec only\n".into(),
         Outcome::Pong => "PONG\n".into(),
         Outcome::Bye => "BYE\n".into(),
         Outcome::Error(e) => format!("ERR {e}\n"),
@@ -137,6 +167,35 @@ mod tests {
         assert!(parse_line("INFER 1,x,3,4", 4, TM).is_err());
         assert!(parse_line("NOPE", 4, TM).is_err());
         assert!(parse_line("INFER", 4, TM).is_err());
+    }
+
+    #[test]
+    fn split_model_prefix() {
+        assert_eq!(split_model("INFER 1,2").unwrap(), (None, "INFER 1,2"));
+        assert_eq!(
+            split_model("@edge INFER 1,2").unwrap(),
+            (Some("edge"), "INFER 1,2")
+        );
+        assert_eq!(split_model("@edge STATS").unwrap(), (Some("edge"), "STATS"));
+        // a bare model token (no verb) parses; the verb error comes later
+        assert_eq!(split_model("@edge").unwrap(), (Some("edge"), ""));
+        assert!(split_model("@").is_err());
+        assert!(split_model("@ INFER 1,2").is_err());
+        // the prefix composes with parse_line on the resolved geometry
+        let (model, rest) = split_model("@edge SPARSE 0:1").unwrap();
+        assert_eq!(model, Some("edge"));
+        let req = parse_line(rest, 4, TM).unwrap();
+        assert_eq!(req.op, Op::Infer);
+        assert!(req.opts.sparse_reply);
+    }
+
+    #[test]
+    fn admin_outcome_renders_defensively() {
+        let resp = Response {
+            id: 0,
+            outcome: Outcome::Admin(crate::proto::AdminReply::Ok("x".into())),
+        };
+        assert!(render_response(&resp, false, TM).starts_with("ERR "));
     }
 
     #[test]

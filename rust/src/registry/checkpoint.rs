@@ -1,0 +1,331 @@
+//! Versioned weight checkpoints: the on-disk format that lets a served
+//! model's learned STDP state survive a process restart.
+//!
+//! One checkpoint is one file holding one model's weight matrix plus
+//! the header needed to validate it against a live slot (DESIGN.md
+//! §2.3):
+//!
+//! ```text
+//! checkpoint := magic u32 ("CWKP") | schema u16
+//!               | n u32 | c u32 | t_max u32
+//!               | theta f32 | seed u64
+//!               | nweights u64 | nweights × f32   (row-major, [c, n])
+//!               | crc32 u32                       (over all prior bytes)
+//! ```
+//!
+//! Every integer is big-endian and every `f32` travels as its IEEE-754
+//! bit pattern, matching the frame codec's conventions — the python
+//! wire twin (`test_checkpoint_golden_bytes` in
+//! `python/tests/test_proto_frames.py`) builds this layout with
+//! `struct` + `zlib.crc32` and shares a golden byte vector with
+//! `rust/tests/registry.rs`. `theta` and `seed` are **provenance**
+//! (what the weights were learned under); `n`/`c` are **compatibility**
+//! and must match the target slot on load.
+//!
+//! Durability rules:
+//!
+//! * [`Checkpoint::save`] writes to a sibling temp file, `sync_all`s,
+//!   then atomically renames over the destination — a crash mid-save
+//!   leaves either the old checkpoint or the new one, never a torn
+//!   file, and readers never observe a partial write.
+//! * [`Checkpoint::read`] verifies magic, schema, the weight count
+//!   against `n·c`, and the trailing CRC-32 before returning; any
+//!   truncation or bit flip is a typed [`Error::Checkpoint`], so a
+//!   corrupt file can never be hot-swapped into a live model.
+
+use crate::error::{Error, Result};
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// Checkpoint file magic: `b"CWKP"`.
+pub const CKPT_MAGIC: [u8; 4] = *b"CWKP";
+/// The checkpoint schema this build reads and writes.
+pub const CKPT_SCHEMA: u16 = 1;
+/// Hard cap on the weight count (64 Mi entries = 256 MiB of f32) — a
+/// hostile header must not become an allocation.
+pub const MAX_WEIGHTS: u64 = 1 << 26;
+
+/// One model's checkpointable state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// column input width
+    pub n: u32,
+    /// number of columns
+    pub c: u32,
+    pub t_max: u32,
+    /// threshold the weights were learned under (provenance)
+    pub theta: f32,
+    /// weight-init seed of the originating instance (provenance)
+    pub seed: u64,
+    /// row-major `[c, n]` weight matrix
+    pub weights: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk byte layout (header + weights + CRC).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let want = (self.c as u64) * (self.n as u64);
+        if self.weights.len() as u64 != want {
+            return Err(Error::Checkpoint(format!(
+                "{} weights do not fill a [{}, {}] matrix",
+                self.weights.len(),
+                self.c,
+                self.n
+            )));
+        }
+        let mut p = Vec::with_capacity(38 + self.weights.len() * 4 + 4);
+        p.extend_from_slice(&CKPT_MAGIC);
+        p.extend_from_slice(&CKPT_SCHEMA.to_be_bytes());
+        p.extend_from_slice(&self.n.to_be_bytes());
+        p.extend_from_slice(&self.c.to_be_bytes());
+        p.extend_from_slice(&self.t_max.to_be_bytes());
+        p.extend_from_slice(&self.theta.to_bits().to_be_bytes());
+        p.extend_from_slice(&self.seed.to_be_bytes());
+        p.extend_from_slice(&(self.weights.len() as u64).to_be_bytes());
+        for &w in &self.weights {
+            p.extend_from_slice(&w.to_bits().to_be_bytes());
+        }
+        let crc = crc32(&p);
+        p.extend_from_slice(&crc.to_be_bytes());
+        Ok(p)
+    }
+
+    /// Parse and verify the on-disk byte layout. Every malformed input
+    /// — short file, bad magic/schema, weight-count mismatch, trailing
+    /// bytes, CRC failure — is a typed [`Error::Checkpoint`].
+    pub fn from_bytes(b: &[u8]) -> Result<Checkpoint> {
+        // fixed header (38) + crc (4) is the minimum possible file
+        if b.len() < 42 {
+            return Err(Error::Checkpoint(format!(
+                "truncated checkpoint: {} bytes",
+                b.len()
+            )));
+        }
+        let (body, tail) = b.split_at(b.len() - 4);
+        let stored = u32::from_be_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        let actual = crc32(body);
+        if stored != actual {
+            return Err(Error::Checkpoint(format!(
+                "crc mismatch: file says {stored:#010x}, bytes hash to {actual:#010x}"
+            )));
+        }
+        if body[..4] != CKPT_MAGIC {
+            return Err(Error::Checkpoint(format!(
+                "bad magic {:02x?} (want {CKPT_MAGIC:02x?})",
+                &body[..4]
+            )));
+        }
+        let schema = u16::from_be_bytes([body[4], body[5]]);
+        if schema != CKPT_SCHEMA {
+            return Err(Error::Checkpoint(format!(
+                "unknown checkpoint schema {schema} (this build reads {CKPT_SCHEMA})"
+            )));
+        }
+        let n = u32::from_be_bytes([body[6], body[7], body[8], body[9]]);
+        let c = u32::from_be_bytes([body[10], body[11], body[12], body[13]]);
+        let t_max = u32::from_be_bytes([body[14], body[15], body[16], body[17]]);
+        let theta = f32::from_bits(u32::from_be_bytes([body[18], body[19], body[20], body[21]]));
+        let seed = u64::from_be_bytes([
+            body[22], body[23], body[24], body[25], body[26], body[27], body[28], body[29],
+        ]);
+        let nweights = u64::from_be_bytes([
+            body[30], body[31], body[32], body[33], body[34], body[35], body[36], body[37],
+        ]);
+        if nweights != (n as u64) * (c as u64) || nweights > MAX_WEIGHTS {
+            return Err(Error::Checkpoint(format!(
+                "weight count {nweights} does not fit a [{c}, {n}] matrix"
+            )));
+        }
+        let weights_bytes = &body[38..];
+        if weights_bytes.len() as u64 != nweights * 4 {
+            return Err(Error::Checkpoint(format!(
+                "weight section is {} bytes, header promises {}",
+                weights_bytes.len(),
+                nweights * 4
+            )));
+        }
+        let weights = weights_bytes
+            .chunks_exact(4)
+            .map(|ch| f32::from_bits(u32::from_be_bytes([ch[0], ch[1], ch[2], ch[3]])))
+            .collect();
+        Ok(Checkpoint {
+            n,
+            c,
+            t_max,
+            theta,
+            seed,
+            weights,
+        })
+    }
+
+    /// Write atomically: serialize to a uniquely named
+    /// `<path>.<pid>-<seq>.tmp` sibling, `sync_all`, then rename over
+    /// `path`. The destination either keeps its old bytes or gains the
+    /// complete new ones — and because every save stages into its own
+    /// temp file, concurrent saves of the same checkpoint (a wire
+    /// `Save` racing the autosave sweep) cannot interleave writes; the
+    /// last rename wins wholesale.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = unique_tmp_path(path);
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        if let Err(e) = fs::rename(&tmp, path) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e.into());
+        }
+        Ok(())
+    }
+
+    /// Read and verify a checkpoint file.
+    pub fn read(path: &Path) -> Result<Checkpoint> {
+        let bytes = fs::read(path)
+            .map_err(|e| Error::Checkpoint(format!("read {}: {e}", path.display())))?;
+        Checkpoint::from_bytes(&bytes)
+            .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))
+    }
+}
+
+/// The uniquely named sibling temp file one [`Checkpoint::save`] call
+/// stages into (pid + process-wide sequence number, so concurrent
+/// saves never share a staging file).
+fn unique_tmp_path(path: &Path) -> std::path::PathBuf {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mut os = path.as_os_str().to_os_string();
+    os.push(format!(".{}-{seq}.tmp", std::process::id()));
+    std::path::PathBuf::from(os)
+}
+
+/// True when `dir` holds a leftover `*.tmp` staging file (test
+/// helper: a completed save must leave none behind).
+pub fn dir_has_tmp_files(dir: &Path) -> bool {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return false;
+    };
+    entries.flatten().any(|e| {
+        e.file_name()
+            .to_string_lossy()
+            .ends_with(".tmp")
+    })
+}
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial), bitwise — checkpoint
+/// files are megabytes at most, so a lookup table buys nothing here.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = !0;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            n: 4,
+            c: 2,
+            t_max: 16,
+            theta: 6.5,
+            seed: 0xABCD,
+            weights: vec![1.0, 2.5, 3.0, 4.0, -0.5, 0.0, 7.0, 8.25],
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the classic IEEE test vectors
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b"catwalk"), crc32(b"catwalk"));
+        assert_ne!(crc32(b"catwalk"), crc32(b"catwalj"));
+    }
+
+    #[test]
+    fn byte_roundtrip_is_identity() {
+        let c = sample();
+        let bytes = c.to_bytes().unwrap();
+        assert_eq!(Checkpoint::from_bytes(&bytes).unwrap(), c);
+        // layout spot checks: magic, schema, trailing crc
+        assert_eq!(&bytes[..4], b"CWKP");
+        assert_eq!(u16::from_be_bytes([bytes[4], bytes[5]]), CKPT_SCHEMA);
+        assert_eq!(bytes.len(), 38 + 8 * 4 + 4);
+    }
+
+    #[test]
+    fn every_truncation_and_any_bit_flip_rejected() {
+        let bytes = sample().to_bytes().unwrap();
+        for cut in 0..bytes.len() {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        for i in 0..bytes.len() {
+            let mut flipped = bytes.clone();
+            flipped[i] ^= 0x01;
+            assert!(
+                Checkpoint::from_bytes(&flipped).is_err(),
+                "flip at byte {i} went undetected"
+            );
+        }
+        // trailing garbage shifts the crc window and fails too
+        let mut noisy = bytes.clone();
+        noisy.push(0);
+        assert!(Checkpoint::from_bytes(&noisy).is_err());
+    }
+
+    #[test]
+    fn weight_count_must_match_geometry() {
+        let mut c = sample();
+        c.weights.pop();
+        assert!(c.to_bytes().is_err());
+
+        // a forged header promising a huge count is rejected before
+        // any allocation (crc is checked first, so forge that too)
+        let mut bytes = sample().to_bytes().unwrap();
+        let len = bytes.len();
+        bytes[30..38].copy_from_slice(&(MAX_WEIGHTS + 1).to_be_bytes());
+        let crc = crc32(&bytes[..len - 4]);
+        bytes[len - 4..].copy_from_slice(&crc.to_be_bytes());
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_and_read_verifies() {
+        let dir = std::env::temp_dir().join(format!(
+            "catwalk-ckpt-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = dir.join("m.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        assert!(!dir_has_tmp_files(&dir), "staging file must not survive");
+        assert_eq!(Checkpoint::read(&path).unwrap(), c);
+
+        // overwrite with new weights: old file fully replaced
+        let mut c2 = c.clone();
+        c2.weights[3] = 99.0;
+        c2.save(&path).unwrap();
+        assert_eq!(Checkpoint::read(&path).unwrap(), c2);
+
+        // a missing file is a typed error naming the path
+        let err = Checkpoint::read(&dir.join("absent.ckpt")).unwrap_err();
+        assert!(err.to_string().contains("absent.ckpt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,862 @@
+//! The multi-model registry: N named, independently checkpointable TNN
+//! instances behind one dispatch surface.
+//!
+//! The TNN microarchitecture framework line of work treats a deployment
+//! as many independently-sized column configurations serving different
+//! sensory workloads; this module is that deployment model in software
+//! (DESIGN.md §2.3). A [`ModelRegistry`] owns one [`ModelSlot`] per
+//! named model — each slot a [`TnnHandle`] (its own engine thread,
+//! weights and [`Metrics`]) plus its own infer/learn
+//! [`DynamicBatcher`] pair, so traffic for one model never dilutes
+//! another model's batches — and the server dispatches every request
+//! into the registry by name:
+//!
+//! ```text
+//!            ┌───────────────────────────────────────────────┐
+//!            │ ModelRegistry            RwLock<name → slot>  │
+//!  Request ──┤  opts.model ─┬─ "edge"  → ModelSlot { handle, │──► Response
+//!            │   (None =    │            batchers, metrics } │
+//!            │    default)  └─ "wide"  → ModelSlot { … }     │
+//!            │  Op::Admin  → create / list / save / load /   │
+//!            │               unload                          │
+//!            └───────────────────────────────────────────────┘
+//! ```
+//!
+//! Locking: the slot map is an `RwLock` taken for **read** on the
+//! infer/learn hot path (lookup, clone the `Arc`, drop the guard before
+//! any compute) and for **write** only by the rare admin ops; per-slot
+//! state needs no lock of its own because the engine thread serializes
+//! it. Unknown model names are a typed [`Error::Proto`] — routing
+//! never falls back silently.
+//!
+//! Checkpoints ([`checkpoint`]) give each slot durable weights:
+//! `save`/`load`/hot-swap on a live slot, `<ckpt_dir>/<name>.ckpt`
+//! naming, load-on-open so a restarted `repro serve` resumes learned
+//! state, and periodic autosave driven by the server's accept loop.
+
+pub mod checkpoint;
+
+use crate::coordinator::{BatcherConfig, DynamicBatcher, Metrics, TnnHandle};
+use crate::error::{Error, Result};
+use crate::proto::{AdminReply, ModelCmd, ModelInfo, Outcome, StatsSnapshot};
+use crate::runtime::Tensor;
+use crate::volley::SpikeVolley;
+use checkpoint::Checkpoint;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// How a model instance is sized and seeded (the create-time knobs;
+/// `c`, `b` and `t_max` come from the manifest entry for `n`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// column input width (must match a manifest entry)
+    pub n: usize,
+    /// firing threshold θ
+    pub theta: f32,
+    /// weight-init seed
+    pub seed: u64,
+}
+
+/// Registry-wide configuration.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Kernel-artifact directory every created model opens against.
+    pub artifacts_dir: PathBuf,
+    /// Batching policy applied to each slot's infer batcher (the learn
+    /// batcher is the same config with `learn = true`).
+    pub batcher: BatcherConfig,
+    /// Checkpoint directory (`<dir>/<name>.ckpt`). `None` disables
+    /// save/load-by-name, load-on-open and autosave.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Autosave every model at most this often (driven by
+    /// [`ModelRegistry::maybe_autosave`]; needs `ckpt_dir`).
+    pub autosave_after: Option<Duration>,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> RegistryConfig {
+        RegistryConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            batcher: BatcherConfig::default(),
+            ckpt_dir: None,
+            autosave_after: None,
+        }
+    }
+}
+
+/// One served model: the engine handle plus its private batcher pair.
+/// Slots are handed out as `Arc<ModelSlot>` clones, so an `unload`
+/// never yanks state from under an in-flight request — the last clone
+/// dropping shuts the batchers and engine down.
+pub struct ModelSlot {
+    pub name: String,
+    pub handle: TnnHandle,
+    pub spec: ModelSpec,
+    infer: DynamicBatcher,
+    learn: DynamicBatcher,
+}
+
+impl ModelSlot {
+    fn open(name: &str, spec: ModelSpec, cfg: &RegistryConfig) -> Result<ModelSlot> {
+        let handle = TnnHandle::open(&cfg.artifacts_dir, spec.n, spec.theta, spec.seed)?;
+        Ok(ModelSlot::from_handle(name, handle, cfg.batcher))
+    }
+
+    /// The one place slot wiring lives: both the open-by-spec path and
+    /// the wrap-an-existing-handle compat path build slots here, so the
+    /// batcher pair can never drift between them. The spec is read
+    /// back off the handle (identical to the opening spec by
+    /// construction).
+    fn from_handle(name: &str, handle: TnnHandle, batcher: BatcherConfig) -> ModelSlot {
+        let infer = DynamicBatcher::start(handle.clone(), batcher);
+        let learn = DynamicBatcher::start(
+            handle.clone(),
+            BatcherConfig {
+                learn: true,
+                ..batcher
+            },
+        );
+        let spec = ModelSpec {
+            n: handle.n,
+            theta: handle.theta,
+            seed: handle.seed,
+        };
+        ModelSlot {
+            name: name.to_string(),
+            handle,
+            spec,
+            infer,
+            learn,
+        }
+    }
+
+    /// Run a volley batch through this slot's batcher (the server's
+    /// `Infer`/`Learn` path). Mirrors the pre-registry `run_batched`:
+    /// the first volley error aborts the whole request in kind.
+    pub fn run_batched(
+        &self,
+        learn: bool,
+        volleys: Vec<SpikeVolley>,
+        deadline: Option<Instant>,
+    ) -> Outcome {
+        let batcher = if learn { &self.learn } else { &self.infer };
+        let mut results = Vec::with_capacity(volleys.len());
+        for r in batcher.submit_many_with_deadline(volleys, deadline) {
+            match r {
+                Ok(v) => results.push(v),
+                Err(e) => return Outcome::Error(e.to_string()),
+            }
+        }
+        Outcome::Results(results)
+    }
+
+    /// This slot's row in the model listing.
+    pub fn info(&self, default: bool) -> ModelInfo {
+        ModelInfo {
+            name: self.name.clone(),
+            n: self.handle.n,
+            c: self.handle.c,
+            t_max: self.handle.t_max,
+            theta: self.spec.theta,
+            seed: self.spec.seed,
+            default,
+        }
+    }
+
+    /// Snapshot this slot's weights as a [`Checkpoint`].
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        let w = self.handle.weights()?;
+        Ok(Checkpoint {
+            n: self.handle.n as u32,
+            c: self.handle.c as u32,
+            t_max: self.handle.t_max as u32,
+            theta: self.spec.theta,
+            seed: self.spec.seed,
+            weights: w.data,
+        })
+    }
+
+    /// Hot-swap this slot's weights from a verified checkpoint. The
+    /// geometry gate runs **before** the engine is touched, and the
+    /// engine re-checks the tensor shape — a bad checkpoint leaves the
+    /// old weights serving (regression-tested in
+    /// `rust/tests/registry.rs`).
+    pub fn restore(&self, ckpt: &Checkpoint) -> Result<()> {
+        if (ckpt.n as usize, ckpt.c as usize) != (self.handle.n, self.handle.c) {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint is [{}, {}], model `{}` wants [{}, {}]",
+                ckpt.c, ckpt.n, self.name, self.handle.c, self.handle.n
+            )));
+        }
+        let w = Tensor::new(
+            vec![self.handle.c, self.handle.n],
+            ckpt.weights.clone(),
+        )?;
+        self.handle.set_weights(w)
+    }
+}
+
+/// The registry: named model slots plus the admin surface over them.
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    slots: RwLock<BTreeMap<String, Arc<ModelSlot>>>,
+    default_name: String,
+    /// Registry-level counters (admin ops, routing misses, autosave),
+    /// merged into the top level of the combined stats snapshot.
+    pub metrics: Arc<Metrics>,
+    last_autosave: Mutex<Instant>,
+}
+
+impl ModelRegistry {
+    /// A registry whose default model is opened from `spec` under
+    /// `name`. With a checkpoint directory configured, a matching
+    /// `<ckpt_dir>/<name>.ckpt` is loaded into the fresh slot
+    /// (load-on-open), so reopening resumes learned state.
+    pub fn open(cfg: RegistryConfig, name: &str, spec: ModelSpec) -> Result<ModelRegistry> {
+        let reg = ModelRegistry::empty(cfg, name);
+        reg.create(name, spec)?;
+        Ok(reg)
+    }
+
+    /// A registry wrapped around an already-open handle (the
+    /// single-model compat path `Server::new` uses). Load-on-open is
+    /// skipped — the caller owns the handle's state.
+    pub fn with_default(name: &str, handle: TnnHandle, cfg: RegistryConfig) -> ModelRegistry {
+        let slot = Arc::new(ModelSlot::from_handle(name, handle, cfg.batcher));
+        let reg = ModelRegistry::empty(cfg, name);
+        reg.slots.write().unwrap().insert(name.to_string(), slot);
+        reg
+    }
+
+    fn empty(cfg: RegistryConfig, default_name: &str) -> ModelRegistry {
+        ModelRegistry {
+            cfg,
+            slots: RwLock::new(BTreeMap::new()),
+            default_name: default_name.to_string(),
+            metrics: Arc::new(Metrics::new()),
+            last_autosave: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// The name unnamed requests route to.
+    pub fn default_name(&self) -> &str {
+        &self.default_name
+    }
+
+    /// Resolve a request's model option to a slot (`None` or an empty
+    /// name = the default model). The read lock is held only for the
+    /// map lookup — the hot path.
+    pub fn slot(&self, model: Option<&str>) -> Result<Arc<ModelSlot>> {
+        let name = match model {
+            None | Some("") => self.default_name.as_str(),
+            Some(m) => m,
+        };
+        let found = self.slots.read().unwrap().get(name).cloned();
+        found.ok_or_else(|| {
+            self.metrics.incr("unknown_model", 1);
+            Error::Proto(format!("unknown model `{name}`"))
+        })
+    }
+
+    /// Every slot, sorted by name (the map is a `BTreeMap`).
+    fn all_slots(&self) -> Vec<Arc<ModelSlot>> {
+        self.slots.read().unwrap().values().cloned().collect()
+    }
+
+    /// The model listing, sorted by name.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        self.all_slots()
+            .iter()
+            .map(|s| s.info(s.name == self.default_name))
+            .collect()
+    }
+
+    /// Create (and start serving) a new named model, resuming learned
+    /// state from `<ckpt_dir>/<name>.ckpt` when one exists — the
+    /// **boot** path (`repro serve --models`, [`ModelRegistry::open`]),
+    /// where a restart must come back with its checkpointed weights
+    /// (an incompatible checkpoint fails the boot rather than serving
+    /// half-loaded).
+    pub fn create(&self, name: &str, spec: ModelSpec) -> Result<ModelInfo> {
+        self.create_inner(name, spec, true)
+    }
+
+    /// Create with freshly seed-initialized weights, ignoring any
+    /// stale checkpoint under the name — the **wire** path
+    /// ([`ModelCmd::Create`]): the caller asked for a new model with
+    /// these exact knobs, and a leftover file must neither block the
+    /// name forever nor silently substitute old weights. A later
+    /// `Save` simply overwrites the stale file.
+    pub fn create_fresh(&self, name: &str, spec: ModelSpec) -> Result<ModelInfo> {
+        self.create_inner(name, spec, false)
+    }
+
+    /// The engine open runs outside the write lock — a slow backend
+    /// load must not stall the serving hot path — so the duplicate
+    /// check runs twice.
+    fn create_inner(&self, name: &str, spec: ModelSpec, resume: bool) -> Result<ModelInfo> {
+        // allowlist, not blocklist: names become filesystem components
+        // (`<name>.ckpt`), text-protocol tokens (`@name `) and stats
+        // keys (`model.<name>.<counter>=v`), so anything beyond
+        // [A-Za-z0-9_-] would corrupt one of those grammars ('=' breaks
+        // key=value, '.' aliases into another model's stats namespace)
+        let ok = !name.is_empty()
+            && name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-');
+        if !ok {
+            return Err(Error::Proto(format!(
+                "bad model name `{name}` (use [A-Za-z0-9_-]+)"
+            )));
+        }
+        if self.slots.read().unwrap().contains_key(name) {
+            return Err(Error::Proto(format!("model `{name}` already exists")));
+        }
+        let slot = Arc::new(ModelSlot::open(name, spec, &self.cfg)?);
+        // load-on-open: resume learned state when a checkpoint exists
+        if resume {
+            if let Some(path) = self.ckpt_path(name) {
+                if path.exists() {
+                    slot.restore(&Checkpoint::read(&path)?)?;
+                    self.metrics.incr("checkpoints_loaded", 1);
+                }
+            }
+        }
+        match self.slots.write().unwrap().entry(name.to_string()) {
+            std::collections::btree_map::Entry::Occupied(_) => {
+                Err(Error::Proto(format!("model `{name}` already exists")))
+            }
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(slot.clone());
+                Ok(slot.info(name == self.default_name))
+            }
+        }
+    }
+
+    /// Stop serving a (non-default) model. In-flight requests holding
+    /// the slot `Arc` finish; the engine shuts down with the last clone.
+    pub fn unload(&self, name: &str) -> Result<()> {
+        if name == self.default_name {
+            return Err(Error::Proto(format!(
+                "cannot unload the default model `{name}`"
+            )));
+        }
+        match self.slots.write().unwrap().remove(name) {
+            Some(_) => Ok(()),
+            None => Err(Error::Proto(format!("unknown model `{name}`"))),
+        }
+    }
+
+    /// `<ckpt_dir>/<name>.ckpt`, if a checkpoint directory is set.
+    pub fn ckpt_path(&self, name: &str) -> Option<PathBuf> {
+        self.cfg
+            .ckpt_dir
+            .as_ref()
+            .map(|d| d.join(format!("{name}.ckpt")))
+    }
+
+    fn ckpt_path_required(&self, name: &str) -> Result<PathBuf> {
+        self.ckpt_path(name).ok_or_else(|| {
+            Error::Checkpoint("no checkpoint directory configured (serve --ckpt-dir)".into())
+        })
+    }
+
+    /// Save a model's weights to its named checkpoint file.
+    pub fn save(&self, name: &str) -> Result<PathBuf> {
+        let path = self.ckpt_path_required(name)?;
+        self.save_to(name, &path)?;
+        Ok(path)
+    }
+
+    /// Save a model's weights to an explicit path (in-process callers;
+    /// the wire only addresses checkpoints by name).
+    pub fn save_to(&self, name: &str, path: &Path) -> Result<()> {
+        let slot = self.slot(Some(name))?;
+        slot.checkpoint()?.save(path)?;
+        self.metrics.incr("checkpoints_saved", 1);
+        Ok(())
+    }
+
+    /// Hot-swap a model's weights from its named checkpoint file.
+    pub fn load(&self, name: &str) -> Result<PathBuf> {
+        let path = self.ckpt_path_required(name)?;
+        self.load_from(name, &path)?;
+        Ok(path)
+    }
+
+    /// Hot-swap from an explicit path (in-process callers).
+    pub fn load_from(&self, name: &str, path: &Path) -> Result<()> {
+        let slot = self.slot(Some(name))?;
+        slot.restore(&Checkpoint::read(path)?)?;
+        self.metrics.incr("checkpoints_loaded", 1);
+        Ok(())
+    }
+
+    /// Save every model; returns how many saved. Individual failures
+    /// are counted and the first is returned after the sweep finishes
+    /// (one bad slot must not stop the others from persisting). Each
+    /// save goes through the slot `Arc` already in hand — no second
+    /// name lookup, so a model unloaded mid-sweep still saves its
+    /// final state instead of miscounting as a routing miss.
+    pub fn save_all(&self) -> Result<usize> {
+        let mut saved = 0;
+        let mut first_err = None;
+        for slot in self.all_slots() {
+            let result = self
+                .ckpt_path_required(&slot.name)
+                .and_then(|path| slot.checkpoint()?.save(&path));
+            match result {
+                Ok(()) => {
+                    self.metrics.incr("checkpoints_saved", 1);
+                    saved += 1;
+                }
+                Err(e) => {
+                    self.metrics.incr("autosave_errors", 1);
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(saved),
+        }
+    }
+
+    /// Autosave clock tick: true when the configured interval elapsed
+    /// (and resets it — the caller owes a [`ModelRegistry::save_all`],
+    /// typically on a background thread so a multi-model fsync sweep
+    /// never stalls the accept loop). Always false when autosave is
+    /// off. The timer resets *before* the save runs so a failing
+    /// sweep cannot hot-loop.
+    pub fn autosave_due(&self) -> bool {
+        let Some(after) = self.cfg.autosave_after else {
+            return false;
+        };
+        if self.cfg.ckpt_dir.is_none() {
+            return false;
+        }
+        let mut last = self.last_autosave.lock().unwrap();
+        if last.elapsed() < after {
+            return false;
+        }
+        *last = Instant::now();
+        self.metrics.incr("autosave_runs", 1);
+        true
+    }
+
+    /// Synchronous autosave tick (clock check + sweep in one call, for
+    /// in-process callers and tests).
+    pub fn maybe_autosave(&self) -> Result<usize> {
+        if !self.autosave_due() {
+            return Ok(0);
+        }
+        self.save_all()
+    }
+
+    /// Shutdown flush: one last [`ModelRegistry::save_all`] for any
+    /// checkpoint-enabled registry — `--ckpt-dir` without periodic
+    /// autosave still persists on a clean stop (learned state must
+    /// never be lost to a graceful shutdown).
+    pub fn final_autosave(&self) -> Result<usize> {
+        if self.cfg.ckpt_dir.is_none() {
+            return Ok(0);
+        }
+        self.save_all()
+    }
+
+    /// Dispatch an admin command to a typed outcome (errors become
+    /// [`Outcome::Error`] — the server maps this straight onto the
+    /// wire).
+    pub fn admin(&self, cmd: ModelCmd) -> Outcome {
+        self.metrics.incr("admin_ops", 1);
+        let reply = match cmd {
+            ModelCmd::List => Ok(AdminReply::Models(self.list())),
+            ModelCmd::Create {
+                name,
+                n,
+                theta,
+                seed,
+            } => self
+                .create_fresh(&name, ModelSpec { n, theta, seed })
+                .map(|info| AdminReply::Models(vec![info])),
+            ModelCmd::Save { name } => self
+                .save(&name)
+                .map(|p| AdminReply::Ok(format!("saved {name} to {}", p.display()))),
+            ModelCmd::Load { name } => self
+                .load(&name)
+                .map(|p| AdminReply::Ok(format!("loaded {name} from {}", p.display()))),
+            ModelCmd::Unload { name } => self
+                .unload(&name)
+                .map(|_| AdminReply::Ok(format!("unloaded {name}"))),
+        };
+        match reply {
+            Ok(r) => Outcome::Admin(r),
+            Err(e) => {
+                self.metrics.incr("admin_errors", 1);
+                Outcome::Error(e.to_string())
+            }
+        }
+    }
+
+    /// The combined stats snapshot (schema=2). With `model` set, just
+    /// that slot's snapshot under plain names; otherwise plain counters
+    /// are sums across models, plain hists are the default model's, and
+    /// every slot additionally appears under `model.<name>.*` with
+    /// geometry rows (`n`, `c`, `t_max`, `seed`, `default`).
+    pub fn stats(&self, full: bool, model: Option<&str>) -> Result<StatsSnapshot> {
+        if let Some(name) = model {
+            return Ok(self.slot(Some(name))?.handle.metrics.snapshot(full));
+        }
+        let mut out = self.metrics.snapshot(false);
+        for slot in self.all_slots() {
+            let name = &slot.name;
+            let snap = slot.handle.metrics.snapshot(full);
+            for (k, v) in &snap.counters {
+                *out.counters.entry(k.clone()).or_insert(0) += v;
+                out.counters.insert(format!("model.{name}.{k}"), *v);
+            }
+            for (k, h) in &snap.hists {
+                if *name == self.default_name {
+                    out.hists.insert(k.clone(), *h);
+                }
+                out.hists.insert(format!("model.{name}.{k}"), *h);
+            }
+            let default = (*name == self.default_name) as u64;
+            out.counters
+                .insert(format!("model.{name}.n"), slot.handle.n as u64);
+            out.counters
+                .insert(format!("model.{name}.c"), slot.handle.c as u64);
+            out.counters
+                .insert(format!("model.{name}.t_max"), slot.handle.t_max as u64);
+            out.counters
+                .insert(format!("model.{name}.seed"), slot.spec.seed);
+            out.counters
+                .insert(format!("model.{name}.default"), default);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BackendKind;
+
+    fn native_env() -> bool {
+        matches!(BackendKind::from_env(), Ok(BackendKind::Native))
+    }
+
+    fn spec(n: usize, theta: f32, seed: u64) -> ModelSpec {
+        ModelSpec { n, theta, seed }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("catwalk-registry-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn create_route_list_unload() {
+        if !native_env() {
+            return;
+        }
+        let reg =
+            ModelRegistry::open(RegistryConfig::default(), "default", spec(16, 6.0, 1)).unwrap();
+        assert_eq!(reg.default_name(), "default");
+        // default routing and named routing hit the same slot
+        assert_eq!(reg.slot(None).unwrap().name, "default");
+        assert_eq!(reg.slot(Some("default")).unwrap().name, "default");
+        // a second model with different geometry
+        reg.create("wide", spec(64, 12.0, 9)).unwrap();
+        let wide = reg.slot(Some("wide")).unwrap();
+        assert_eq!((wide.handle.n, wide.handle.c), (64, 16));
+        // duplicates and bad names are typed errors — names must stay
+        // inside [A-Za-z0-9_-] (stats keys, @-tokens, file names)
+        assert!(reg.create("wide", spec(16, 6.0, 1)).is_err());
+        assert!(reg.create("", spec(16, 6.0, 1)).is_err());
+        assert!(reg.create("a b", spec(16, 6.0, 1)).is_err());
+        assert!(reg.create("@x", spec(16, 6.0, 1)).is_err());
+        assert!(reg.create("x=1", spec(16, 6.0, 1)).is_err());
+        assert!(reg.create("a.n", spec(16, 6.0, 1)).is_err());
+        assert!(reg.create("../up", spec(16, 6.0, 1)).is_err());
+        reg.create("ok_Name-2", spec(16, 6.0, 1)).unwrap();
+        reg.unload("ok_Name-2").unwrap();
+        // listing is sorted and flags the default
+        let infos = reg.list();
+        assert_eq!(
+            infos.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
+            vec!["default", "wide"]
+        );
+        assert!(infos[0].default && !infos[1].default);
+        assert_eq!(infos[1].theta, 12.0);
+        // unknown model is Error::Proto (the routing contract)
+        match reg.slot(Some("nope")) {
+            Err(Error::Proto(m)) => assert!(m.contains("unknown model"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(reg.metrics.counter("unknown_model"), 1);
+        // the default cannot be unloaded; others can, exactly once
+        assert!(reg.unload("default").is_err());
+        reg.unload("wide").unwrap();
+        assert!(reg.unload("wide").is_err());
+        assert!(reg.slot(Some("wide")).is_err());
+    }
+
+    #[test]
+    fn slots_serve_and_stats_merge() {
+        if !native_env() {
+            return;
+        }
+        let reg =
+            ModelRegistry::open(RegistryConfig::default(), "default", spec(16, 6.0, 3)).unwrap();
+        reg.create("edge", spec(32, 8.0, 4)).unwrap();
+        let d = reg.slot(None).unwrap();
+        let e = reg.slot(Some("edge")).unwrap();
+        // each slot batches through its own handle at its own width
+        match d.run_batched(false, vec![SpikeVolley::dense(vec![0.0; 16])], None) {
+            Outcome::Results(rs) => assert_eq!(rs[0].times.len(), 8),
+            other => panic!("{other:?}"),
+        }
+        match e.run_batched(true, vec![SpikeVolley::dense(vec![0.0; 32])], None) {
+            Outcome::Results(rs) => assert_eq!(rs[0].times.len(), 12),
+            other => panic!("{other:?}"),
+        }
+        // a width mismatch is an error outcome, not a panic
+        match d.run_batched(false, vec![SpikeVolley::dense(vec![0.0; 32])], None) {
+            Outcome::Error(msg) => assert!(msg.contains("width"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // merged stats: per-model rows + aggregated plain counters
+        let s = reg.stats(true, None).unwrap();
+        assert_eq!(s.counter("model.default.requests"), 1);
+        assert_eq!(s.counter("model.edge.requests"), 1);
+        assert_eq!(
+            s.counter("requests"),
+            s.counter("model.default.requests") + s.counter("model.edge.requests")
+        );
+        assert_eq!(s.counter("model.edge.n"), 32);
+        assert_eq!(s.counter("model.edge.default"), 0);
+        assert_eq!(s.counter("model.default.default"), 1);
+        assert!(s.hist("request_latency").is_some(), "default's plain hists");
+        assert!(s.hist("model.edge.request_latency").is_some());
+        // single-model stats keep plain names only
+        let es = reg.stats(false, Some("edge")).unwrap();
+        assert_eq!(es.counter("requests"), 1);
+        assert_eq!(es.counter("model.edge.requests"), 0);
+        assert!(reg.stats(false, Some("nope")).is_err());
+    }
+
+    #[test]
+    fn checkpoint_save_load_and_admin_surface() {
+        if !native_env() {
+            return;
+        }
+        let dir = temp_dir("admin");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = RegistryConfig {
+            ckpt_dir: Some(dir.clone()),
+            ..RegistryConfig::default()
+        };
+        let reg = ModelRegistry::open(cfg, "default", spec(16, 6.0, 5)).unwrap();
+        // learn a little so the weights diverge from init
+        let slot = reg.slot(None).unwrap();
+        for _ in 0..4 {
+            slot.run_batched(true, vec![SpikeVolley::dense(vec![0.0; 16])], None);
+        }
+        let learned = slot.handle.weights().unwrap();
+
+        // admin Save writes the named checkpoint
+        match reg.admin(ModelCmd::Save {
+            name: "default".into(),
+        }) {
+            Outcome::Admin(AdminReply::Ok(msg)) => {
+                assert!(msg.contains("default.ckpt"), "{msg}")
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(dir.join("default.ckpt").exists());
+        assert_eq!(reg.metrics.counter("checkpoints_saved"), 1);
+
+        // drift the weights (several steps over varied volleys, so the
+        // update cannot be a no-op), then admin Load restores the save
+        for i in 0..8 {
+            let v: Vec<f32> = (0..16)
+                .map(|j| if (i + j) % 3 == 0 { i as f32 } else { 16.0 })
+                .collect();
+            slot.run_batched(true, vec![SpikeVolley::dense(v)], None);
+        }
+        assert_ne!(slot.handle.weights().unwrap().data, learned.data);
+        match reg.admin(ModelCmd::Load {
+            name: "default".into(),
+        }) {
+            Outcome::Admin(AdminReply::Ok(_)) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(slot.handle.weights().unwrap().data, learned.data);
+
+        // admin List / Create / Unload round out the surface
+        match reg.admin(ModelCmd::Create {
+            name: "edge".into(),
+            n: 32,
+            theta: 9.0,
+            seed: 8,
+        }) {
+            Outcome::Admin(AdminReply::Models(ms)) => {
+                assert_eq!(ms[0].name, "edge");
+                assert_eq!(ms[0].c, 12);
+            }
+            other => panic!("{other:?}"),
+        }
+        match reg.admin(ModelCmd::List) {
+            Outcome::Admin(AdminReply::Models(ms)) => assert_eq!(ms.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        match reg.admin(ModelCmd::Unload {
+            name: "edge".into(),
+        }) {
+            Outcome::Admin(AdminReply::Ok(_)) => {}
+            other => panic!("{other:?}"),
+        }
+        // errors surface as Outcome::Error with the admin_errors counter
+        match reg.admin(ModelCmd::Unload {
+            name: "edge".into(),
+        }) {
+            Outcome::Error(e) => assert!(e.contains("unknown model"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        assert!(reg.metrics.counter("admin_errors") >= 1);
+
+        // load-on-open: a fresh registry over the same ckpt_dir resumes
+        let cfg = RegistryConfig {
+            ckpt_dir: Some(dir.clone()),
+            ..RegistryConfig::default()
+        };
+        let reg2 = ModelRegistry::open(cfg, "default", spec(16, 6.0, 5)).unwrap();
+        assert_eq!(
+            reg2.slot(None).unwrap().handle.weights().unwrap().data,
+            learned.data
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The boot path resumes from (and is gated by) checkpoints; the
+    /// wire Create path starts fresh — a stale file can neither block
+    /// the name nor smuggle in old weights.
+    #[test]
+    fn wire_create_is_fresh_boot_create_resumes() {
+        if !native_env() {
+            return;
+        }
+        let dir = temp_dir("fresh");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = RegistryConfig {
+            ckpt_dir: Some(dir.clone()),
+            ..RegistryConfig::default()
+        };
+        let reg = ModelRegistry::open(cfg, "default", spec(16, 6.0, 5)).unwrap();
+        // plant a stale, geometry-incompatible checkpoint under "edge"
+        Checkpoint {
+            n: 8,
+            c: 4,
+            t_max: 16,
+            theta: 6.0,
+            seed: 1,
+            weights: vec![1.0; 32],
+        }
+        .save(&dir.join("edge.ckpt"))
+        .unwrap();
+        // boot-path create refuses to come up half-loaded...
+        match reg.create("edge", spec(32, 8.0, 4)) {
+            Err(Error::Checkpoint(_)) => {}
+            other => panic!("{other:?}"),
+        }
+        // ...but the wire Create (admin) starts fresh and serves
+        match reg.admin(ModelCmd::Create {
+            name: "edge".into(),
+            n: 32,
+            theta: 8.0,
+            seed: 4,
+        }) {
+            Outcome::Admin(AdminReply::Models(ms)) => assert_eq!(ms[0].n, 32),
+            other => panic!("{other:?}"),
+        }
+        match reg
+            .slot(Some("edge"))
+            .unwrap()
+            .run_batched(false, vec![SpikeVolley::dense(vec![0.0; 32])], None)
+        {
+            Outcome::Results(rs) => assert_eq!(rs[0].times.len(), 12),
+            other => panic!("{other:?}"),
+        }
+        // a later Save overwrites the stale file with the live state
+        reg.save("edge").unwrap();
+        let back = Checkpoint::read(&dir.join("edge.ckpt")).unwrap();
+        assert_eq!((back.n, back.c), (32, 12));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_restore_keeps_old_weights() {
+        if !native_env() {
+            return;
+        }
+        let reg =
+            ModelRegistry::open(RegistryConfig::default(), "default", spec(16, 6.0, 6)).unwrap();
+        let slot = reg.slot(None).unwrap();
+        let before = slot.handle.weights().unwrap();
+        // wrong geometry: typed checkpoint error, weights untouched
+        let bad = Checkpoint {
+            n: 8,
+            c: 4,
+            t_max: 16,
+            theta: 6.0,
+            seed: 6,
+            weights: vec![1.0; 32],
+        };
+        match slot.restore(&bad) {
+            Err(Error::Checkpoint(m)) => assert!(m.contains("wants"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(slot.handle.weights().unwrap().data, before.data);
+    }
+
+    #[test]
+    fn autosave_ticks_on_interval() {
+        if !native_env() {
+            return;
+        }
+        let dir = temp_dir("autosave");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = RegistryConfig {
+            ckpt_dir: Some(dir.clone()),
+            autosave_after: Some(Duration::from_millis(0)),
+            ..RegistryConfig::default()
+        };
+        let reg = ModelRegistry::open(cfg, "default", spec(16, 6.0, 7)).unwrap();
+        assert_eq!(reg.maybe_autosave().unwrap(), 1);
+        assert!(dir.join("default.ckpt").exists());
+        assert!(reg.metrics.counter("autosave_runs") >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // checkpoints without periodic autosave: ticks are no-ops but
+        // the shutdown flush still persists every model
+        let cfg = RegistryConfig {
+            ckpt_dir: Some(dir.clone()),
+            autosave_after: None,
+            ..RegistryConfig::default()
+        };
+        let reg = ModelRegistry::open(cfg, "default", spec(16, 6.0, 7)).unwrap();
+        assert!(!reg.autosave_due());
+        assert_eq!(reg.maybe_autosave().unwrap(), 0);
+        assert_eq!(reg.final_autosave().unwrap(), 1);
+        assert!(dir.join("default.ckpt").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // no checkpoint dir at all: everything is a clean no-op
+        let reg =
+            ModelRegistry::open(RegistryConfig::default(), "default", spec(16, 6.0, 7)).unwrap();
+        assert_eq!(reg.maybe_autosave().unwrap(), 0);
+        assert_eq!(reg.final_autosave().unwrap(), 0);
+    }
+}

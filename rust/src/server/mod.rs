@@ -2,28 +2,33 @@
 //! envelope over two codecs on one port.
 //!
 //! Dispatch is one function — [`ServerCore::handle`] maps a typed
-//! [`Request`] to a [`Response`] — and the wire format is a pluggable
-//! codec in front of it (DESIGN.md §2.2):
+//! [`Request`] to a [`Response`] by routing it into the
+//! [`ModelRegistry`] — and the wire format is a pluggable codec in
+//! front of it (DESIGN.md §2.2–2.3):
 //!
-//! * **v2 framed binary** (`proto::frame`): length-prefixed frames,
-//!   HELLO/ACK version negotiation, request ids. A client may pipeline
-//!   many REQUEST frames before reading responses and may pack many
-//!   volleys into one frame; responses come back in order, ids echoed.
+//! * **framed binary** (`proto::frame`): length-prefixed frames,
+//!   HELLO/ACK version negotiation (v2 and v3), request ids. A client
+//!   may pipeline many REQUEST frames before reading responses and may
+//!   pack many volleys into one frame; responses come back in order,
+//!   ids echoed. v3 adds per-request model routing and the registry
+//!   admin ops.
 //! * **text compat** (`proto::text`): the legacy newline protocol
 //!   (`INFER`/`LEARN`/`SPARSE`/`SLEARN`/`STATS`/`PING`/`QUIT`),
-//!   byte-for-byte compatible with pre-v2 clients.
+//!   byte-for-byte compatible with pre-v2 clients, plus an optional
+//!   `@model` prefix token for routing.
 //!
 //! The server sniffs the first four bytes of each connection: the frame
 //! magic `CWK2` selects the framed codec, anything else is treated as
 //! the first text verb. One thread per connection; batching happens in
-//! the shared [`DynamicBatcher`], so concurrent clients (and the
-//! volleys of one multi-volley frame) coalesce into full backend
-//! batches.
+//! each model slot's [`crate::coordinator::DynamicBatcher`], so
+//! concurrent clients of one model (and the volleys of one multi-volley
+//! frame) coalesce into full backend batches without diluting another
+//! model's batches.
 //!
 //! ```text
 //! -> INFER 1,3,16,16,0,...        (n comma-separated spike times)
 //! <- OK winner=2 times=4,16,2,...
-//! -> SPARSE 0:1,4:3               (spiking lines only; "-" = silent)
+//! -> @edge SPARSE 0:1,4:3         (route to model `edge`)
 //! <- OK winner=2 spikes=0:4,2:2   (columns that fired, column:time)
 //! -> STATS
 //! <- sorted key=value lines, blank-line terminated
@@ -31,9 +36,12 @@
 //! <- BYE
 //! ```
 
-use crate::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
+use crate::coordinator::{BatcherConfig, TnnHandle};
 use crate::error::{Error, Result};
-use crate::proto::{frame, text, Op, Outcome, Request, Response, StatsSnapshot};
+use crate::proto::{
+    frame, text, AdminReply, ModelCmd, ModelInfo, Op, Outcome, Request, Response, StatsSnapshot,
+};
+use crate::registry::{ModelRegistry, RegistryConfig};
 use crate::volley::{self, SpikeVolley, VolleyResult};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -42,29 +50,51 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// The codec-independent dispatch core: every wire protocol funnels
-/// into [`ServerCore::handle`].
+/// into [`ServerCore::handle`], which routes into the model registry.
 pub struct ServerCore {
-    infer: Arc<DynamicBatcher>,
-    learn: Arc<DynamicBatcher>,
+    registry: Arc<ModelRegistry>,
+    /// The default model's handle, cached for the ACK geometry and the
+    /// in-process compat accessor ([`ServerCore::service`]).
     service: TnnHandle,
 }
 
 impl ServerCore {
+    /// Single-model compat constructor: wraps `service` as the default
+    /// (and only initial) model of a fresh registry. Models created
+    /// over the wire open against the same artifact directory the
+    /// wrapped handle was opened with.
     pub fn new(service: TnnHandle, cfg: BatcherConfig) -> ServerCore {
-        let infer = Arc::new(DynamicBatcher::start(service.clone(), cfg));
-        let learn = Arc::new(DynamicBatcher::start(
+        let registry = ModelRegistry::with_default(
+            "default",
             service.clone(),
-            BatcherConfig { learn: true, ..cfg },
-        ));
-        ServerCore {
-            infer,
-            learn,
-            service,
-        }
+            RegistryConfig {
+                artifacts_dir: service.artifacts_dir.clone(),
+                batcher: cfg,
+                ..RegistryConfig::default()
+            },
+        );
+        ServerCore::with_registry(Arc::new(registry))
     }
 
+    /// The multi-model constructor: dispatch into an existing registry.
+    pub fn with_registry(registry: Arc<ModelRegistry>) -> ServerCore {
+        let service = registry
+            .slot(None)
+            .expect("registry has a default model")
+            .handle
+            .clone();
+        ServerCore { registry, service }
+    }
+
+    /// The default model's handle (compat surface for in-process
+    /// callers: benches, tests, the ACK geometry).
     pub fn service(&self) -> &TnnHandle {
         &self.service
+    }
+
+    /// The registry this core dispatches into.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     /// Handle one envelope request (by value — the volleys move
@@ -73,6 +103,11 @@ impl ServerCore {
     /// measured against it twice — here at dispatch (cheap early-out),
     /// and again by the batcher when the batch is drained, so the
     /// budget bounds the queue wait too, not just decode time.
+    ///
+    /// Routing: `opts.model` selects the registry slot (`None` = the
+    /// default model); an unknown name is a typed error outcome. The
+    /// slot lookup is a read-lock + `Arc` clone, so the infer/learn hot
+    /// path never contends with admin ops beyond that.
     pub fn handle(&self, req: Request, received: Instant) -> Response {
         let deadline = req.opts.deadline_ms.map(|ms| received + Duration::from_millis(ms as u64));
         // >=, so a 0 ms budget is deterministically expired
@@ -87,32 +122,30 @@ impl ServerCore {
             );
         }
         let outcome = match req.op {
-            Op::Infer => self.run_batched(&self.infer, req.volleys, deadline),
-            Op::Learn => self.run_batched(&self.learn, req.volleys, deadline),
-            Op::Stats => Outcome::Stats(self.service.metrics.snapshot(!req.opts.counters_only)),
+            Op::Infer | Op::Learn => {
+                let learn = req.op == Op::Learn;
+                match self.registry.slot(req.opts.model.as_deref()) {
+                    Ok(slot) => slot.run_batched(learn, req.volleys, deadline),
+                    Err(e) => Outcome::Error(e.to_string()),
+                }
+            }
+            Op::Stats => {
+                match self
+                    .registry
+                    .stats(!req.opts.counters_only, req.opts.model.as_deref())
+                {
+                    Ok(s) => Outcome::Stats(s),
+                    Err(e) => Outcome::Error(e.to_string()),
+                }
+            }
             Op::Ping => Outcome::Pong,
             Op::Quit => Outcome::Bye,
+            Op::Admin(cmd) => self.registry.admin(cmd),
         };
         Response {
             id: req.id,
             outcome,
         }
-    }
-
-    fn run_batched(
-        &self,
-        batcher: &DynamicBatcher,
-        volleys: Vec<SpikeVolley>,
-        deadline: Option<Instant>,
-    ) -> Outcome {
-        let mut results = Vec::with_capacity(volleys.len());
-        for r in batcher.submit_many_with_deadline(volleys, deadline) {
-            match r {
-                Ok(v) => results.push(v),
-                Err(e) => return Outcome::Error(e.to_string()),
-            }
-        }
-        Outcome::Results(results)
     }
 }
 
@@ -130,6 +163,14 @@ impl Server {
         }
     }
 
+    /// A server dispatching into an existing multi-model registry.
+    pub fn with_registry(registry: Arc<ModelRegistry>) -> Server {
+        Server {
+            core: Arc::new(ServerCore::with_registry(registry)),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
     /// Handle for shutting the accept loop down from another thread.
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         self.stop.clone()
@@ -141,13 +182,33 @@ impl Server {
     }
 
     /// Bind and serve until the stop flag is set. Returns the bound port
-    /// through `on_bound` (port 0 = ephemeral).
+    /// through `on_bound` (port 0 = ephemeral). The accept loop doubles
+    /// as the registry's autosave clock ([`ModelRegistry::autosave_due`]
+    /// checked every tick, the sweep itself on a worker thread), and a
+    /// final save runs at shutdown for any checkpoint-enabled registry
+    /// so a clean stop never loses learned state.
     pub fn serve(&self, addr: &str, on_bound: impl FnOnce(u16)) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         on_bound(listener.local_addr()?.port());
-        let mut workers = Vec::new();
+        let registry = self.core.registry().clone();
+        let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut fatal: Option<Error> = None;
         while !self.stop.load(Ordering::Acquire) {
+            // sweep finished connection/autosave threads so a daemon
+            // serving for weeks never accumulates dead JoinHandles
+            workers.retain(|w| !w.is_finished());
+            // the accept loop is only the autosave *clock*; the sweep
+            // itself (engine round-trips + fsyncs per model) runs on a
+            // worker thread so connecting clients never wait on it
+            if registry.autosave_due() {
+                let registry = registry.clone();
+                workers.push(std::thread::spawn(move || {
+                    if let Err(e) = registry.save_all() {
+                        eprintln!("autosave: {e}");
+                    }
+                }));
+            }
             match listener.accept() {
                 Ok((stream, _)) => {
                     let core = self.core.clone();
@@ -159,13 +220,26 @@ impl Server {
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(2));
                 }
-                Err(e) => return Err(e.into()),
+                // a hard accept error ends the loop but must still flow
+                // through the shutdown path below — learned state is
+                // flushed even when the listener dies (e.g. EMFILE)
+                Err(e) => {
+                    fatal = Some(e.into());
+                    break;
+                }
             }
         }
         for w in workers {
             let _ = w.join();
         }
-        Ok(())
+        // shutdown flush: checkpoint-enabled registries persist on stop
+        if let Err(e) = registry.final_autosave() {
+            eprintln!("final autosave: {e}");
+        }
+        match fatal {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -269,6 +343,19 @@ fn serve_framed(
                 // a malformed payload inside an intact frame is
                 // recoverable — answer and keep the connection
                 Err(e) => Response::error(0, e.to_string()),
+                // the negotiated version is a contract, not advice: a
+                // v2 connection must not reach the v3 surface (and must
+                // never be answered with a v3-only status byte)
+                Ok(req)
+                    if version < 3
+                        && (req.opts.model.is_some() || matches!(req.op, Op::Admin(_))) =>
+                {
+                    Response::error(
+                        req.id,
+                        "model routing and admin ops need protocol v3 \
+                         (this connection negotiated v2)",
+                    )
+                }
                 Ok(req) => core.handle(req, received),
             }
         };
@@ -288,6 +375,12 @@ fn send_response(out: &mut TcpStream, resp: &Response) -> Result<()> {
 
 /// The text compat loop. `head` holds the sniffed first bytes of the
 /// first line.
+///
+/// Model routing happens **before** parsing: the optional `@model`
+/// prefix names the registry slot whose geometry `(n, t_max)` the rest
+/// of the line is validated against — different models legitimately
+/// take different volley widths. Unrouted lines use the default
+/// model's geometry, exactly the pre-registry behavior.
 fn serve_text(
     mut reader: BufReader<TcpStream>,
     mut out: TcpStream,
@@ -295,8 +388,6 @@ fn serve_text(
     stop: Arc<AtomicBool>,
     head: &[u8],
 ) -> Result<()> {
-    let svc = core.service();
-    let (n, t_max) = (svc.n, svc.t_max);
     let mut prefix = String::from_utf8_lossy(head).into_owned();
     let mut line = String::new();
     loop {
@@ -316,8 +407,8 @@ fn serve_text(
         if stop.load(Ordering::Acquire) {
             return Ok(());
         }
-        let reply = match text::parse_line(line, n, t_max) {
-            Ok(req) => {
+        let reply = match text_request(&core, line) {
+            Ok((req, t_max)) => {
                 let sparse_reply = req.opts.sparse_reply;
                 let resp = core.handle(req, received);
                 let rendered = text::render_response(&resp, sparse_reply, t_max);
@@ -333,6 +424,18 @@ fn serve_text(
         out.write_all(reply.as_bytes())?;
         out.flush()?;
     }
+}
+
+/// Resolve a text line to an envelope request plus the `t_max` its
+/// reply renders against (the routed model's, for sparse replies).
+fn text_request(core: &ServerCore, line: &str) -> Result<(Request, usize)> {
+    let (model, rest) = text::split_model(line)?;
+    let slot = core.registry().slot(model)?;
+    let mut req = text::parse_line(rest, slot.handle.n, slot.handle.t_max)?;
+    if let Some(m) = model {
+        req.opts.model = Some(m.to_string());
+    }
+    Ok((req, slot.handle.t_max))
 }
 
 /// Pipelining window shared by both clients: at most this many requests
@@ -417,7 +520,8 @@ impl Client {
     /// requests carry dense volleys (the text wire has no handshake to
     /// learn `t_max` from, so sparse volleys cannot be densified here —
     /// use [`FramedClient`] or the `*_sparse` wrappers); multi-volley
-    /// requests pipeline one line per volley. Options the text wire
+    /// requests pipeline one line per volley; a model opt becomes the
+    /// `@model` prefix token on every line. Options the text wire
     /// cannot express are a typed error, never silently dropped — the
     /// same `Request` must not mean different things on the two
     /// clients.
@@ -439,7 +543,17 @@ impl Client {
                     .into(),
             ));
         }
-        let outcome = match req.op {
+        // the `@model` routing prefix, applied to every line we emit
+        let at = match &req.opts.model {
+            Some(m) => format!("@{m} "),
+            None => String::new(),
+        };
+        let outcome = match &req.op {
+            Op::Admin(_) => {
+                return Err(Error::Proto(
+                    "the text codec has no admin verbs; use FramedClient".into(),
+                ))
+            }
             Op::Infer | Op::Learn => {
                 let verb = if req.op == Op::Infer { "INFER" } else { "LEARN" };
                 let mut payloads = Vec::with_capacity(req.volleys.len());
@@ -452,7 +566,7 @@ impl Client {
                         ));
                     };
                     let fields: Vec<String> = times.iter().map(|t| format!("{t}")).collect();
-                    payloads.push(format!("{verb} {}\n", fields.join(",")));
+                    payloads.push(format!("{at}{verb} {}\n", fields.join(",")));
                 }
                 // pipeline lines in bounded windows (count and bytes),
                 // collecting each window's replies before the next —
@@ -497,19 +611,19 @@ impl Client {
                 }
             }
             Op::Stats => {
-                writeln!(self.writer, "STATS")?;
+                writeln!(self.writer, "{at}STATS")?;
                 self.writer.flush()?;
                 Outcome::Stats(self.read_stats()?)
             }
             Op::Ping => {
-                let reply = self.roundtrip("PING")?;
+                let reply = self.roundtrip(&format!("{at}PING"))?;
                 if reply != "PONG" {
                     return Err(Error::Server(format!("server said: {reply}")));
                 }
                 Outcome::Pong
             }
             Op::Quit => {
-                let _ = self.roundtrip("QUIT")?;
+                let _ = self.roundtrip(&format!("{at}QUIT"))?;
                 Outcome::Bye
             }
         };
@@ -640,13 +754,26 @@ impl FramedClient {
         frame::write_frame(
             &mut writer,
             frame::FrameType::Hello,
-            &frame::encode_hello(frame::VERSION, frame::VERSION),
+            &frame::encode_hello(frame::MIN_VERSION, frame::VERSION),
         )?;
         writer.flush()?;
         let (ty, payload) = frame::read_frame(&mut reader)?
             .ok_or_else(|| Error::Proto("server closed during handshake".into()))?;
         let ack = match ty {
-            frame::FrameType::Ack => frame::decode_ack(&payload)?,
+            frame::FrameType::Ack => {
+                let ack = frame::decode_ack(&payload)?;
+                // an ACK outside the window we offered means a broken
+                // (or hostile) peer — refusing here keeps the version
+                // gate in call_many honest (the python twin's
+                // parse_ack rejects out-of-window versions the same way)
+                if !(frame::MIN_VERSION..=frame::VERSION).contains(&ack.version) {
+                    return Err(Error::Proto(format!(
+                        "server ACKed unsupported protocol version {}",
+                        ack.version
+                    )));
+                }
+                ack
+            }
             frame::FrameType::Response => {
                 // the server's typed rejection (e.g. no common version)
                 let resp = frame::decode_response(&payload)?;
@@ -710,6 +837,16 @@ impl FramedClient {
             window.clear();
             while window.len() < Self::MAX_IN_FLIGHT && wire.len() < PIPELINE_WINDOW_BYTES {
                 let Some(mut req) = reqs.next() else { break };
+                // v3 constructs must not reach a v2-negotiated peer —
+                // it would reject the flags/op; fail typed client-side
+                if self.version < 3
+                    && (req.opts.model.is_some() || matches!(req.op, Op::Admin(_)))
+                {
+                    return Err(Error::Proto(format!(
+                        "negotiated protocol v{} cannot carry model routing or admin ops",
+                        self.version
+                    )));
+                }
                 self.assign_id(&mut req);
                 window.push(req.id);
                 frame::write_frame(
@@ -785,6 +922,91 @@ impl FramedClient {
         match resp.outcome {
             Outcome::Bye => Ok(()),
             other => Err(Error::Proto(format!("expected bye, got {other:?}"))),
+        }
+    }
+
+    // ------------------------------------------ registry admin (v3)
+
+    fn call_admin(&mut self, cmd: ModelCmd) -> Result<AdminReply> {
+        let resp = self.call(Request::admin(cmd))?;
+        resp.admin().cloned()
+    }
+
+    /// List the registry's models (name, geometry, θ, seed, default).
+    pub fn models(&mut self) -> Result<Vec<ModelInfo>> {
+        match self.call_admin(ModelCmd::List)? {
+            AdminReply::Models(ms) => Ok(ms),
+            other => Err(Error::Proto(format!("expected model list, got {other:?}"))),
+        }
+    }
+
+    /// Create (and start serving) a new named model on the server.
+    pub fn create_model(
+        &mut self,
+        name: &str,
+        n: usize,
+        theta: f32,
+        seed: u64,
+    ) -> Result<ModelInfo> {
+        let cmd = ModelCmd::Create {
+            name: name.into(),
+            n,
+            theta,
+            seed,
+        };
+        match self.call_admin(cmd)? {
+            AdminReply::Models(mut ms) if ms.len() == 1 => Ok(ms.remove(0)),
+            other => Err(Error::Proto(format!("expected new model row, got {other:?}"))),
+        }
+    }
+
+    /// Checkpoint a model's weights server-side (`<ckpt_dir>/<name>.ckpt`).
+    pub fn save_model(&mut self, name: &str) -> Result<String> {
+        match self.call_admin(ModelCmd::Save { name: name.into() })? {
+            AdminReply::Ok(receipt) => Ok(receipt),
+            other => Err(Error::Proto(format!("expected receipt, got {other:?}"))),
+        }
+    }
+
+    /// Hot-swap a model's weights from its server-side checkpoint.
+    pub fn load_model(&mut self, name: &str) -> Result<String> {
+        match self.call_admin(ModelCmd::Load { name: name.into() })? {
+            AdminReply::Ok(receipt) => Ok(receipt),
+            other => Err(Error::Proto(format!("expected receipt, got {other:?}"))),
+        }
+    }
+
+    /// Stop serving a (non-default) model.
+    pub fn unload_model(&mut self, name: &str) -> Result<()> {
+        match self.call_admin(ModelCmd::Unload { name: name.into() })? {
+            AdminReply::Ok(_) => Ok(()),
+            other => Err(Error::Proto(format!("expected receipt, got {other:?}"))),
+        }
+    }
+
+    /// Single-volley inference routed to a named model. The volley
+    /// width is the named model's `n`, which may differ from
+    /// [`FramedClient::n`] (the default model's).
+    pub fn infer_model(&mut self, model: &str, volley: &[f32]) -> Result<(i64, Vec<f32>)> {
+        let req =
+            Request::infer(vec![SpikeVolley::dense(volley.to_vec())]).with_model(model);
+        single_result(self.call(req)?)
+    }
+
+    /// Single-volley learning step routed to a named model.
+    pub fn learn_model(&mut self, model: &str, volley: &[f32]) -> Result<(i64, Vec<f32>)> {
+        let req =
+            Request::learn(vec![SpikeVolley::dense(volley.to_vec())]).with_model(model);
+        single_result(self.call(req)?)
+    }
+
+    /// Typed stats for one model only (plain, unprefixed keys).
+    pub fn stats_model(&mut self, model: &str) -> Result<StatsSnapshot> {
+        let resp = self.call(Request::op(Op::Stats).with_model(model))?;
+        match resp.outcome {
+            Outcome::Stats(s) => Ok(s),
+            Outcome::Error(e) => Err(Error::Server(e)),
+            other => Err(Error::Proto(format!("expected stats, got {other:?}"))),
         }
     }
 }

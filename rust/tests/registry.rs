@@ -1,0 +1,408 @@
+//! Multi-model registry end-to-end: framed admin surface over TCP,
+//! interleaved per-model traffic, checkpoint round-trip properties,
+//! restart-resume, and the bad-Load regression gate (old weights keep
+//! serving).
+
+use catwalk::proto::{Op, Outcome, Request};
+use catwalk::quickprop::{forall, FnGen};
+use catwalk::registry::checkpoint::{crc32, dir_has_tmp_files, Checkpoint};
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use catwalk::rng::Xoshiro256;
+use catwalk::server::{Client, FramedClient, Server};
+use catwalk::{Error, SpikeVolley};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("catwalk-registry-e2e-{tag}-{}", std::process::id()))
+}
+
+fn boot_registry(
+    ckpt_dir: Option<PathBuf>,
+) -> (Arc<Server>, String, std::thread::JoinHandle<()>) {
+    let cfg = RegistryConfig {
+        ckpt_dir,
+        ..RegistryConfig::default()
+    };
+    let registry = Arc::new(
+        ModelRegistry::open(
+            cfg,
+            "default",
+            ModelSpec {
+                n: 16,
+                theta: 6.0,
+                seed: 11,
+            },
+        )
+        .unwrap(),
+    );
+    let server = Arc::new(Server::with_registry(registry));
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    (server, addr, srv)
+}
+
+fn stop(server: &Server, srv: std::thread::JoinHandle<()>) {
+    server
+        .stop_handle()
+        .store(true, std::sync::atomic::Ordering::Release);
+    srv.join().unwrap();
+}
+
+// ----------------------------------------------- checkpoint properties
+
+/// save → load is bit-identical for random geometries and weights,
+/// and the atomic-rename staging file never survives.
+#[test]
+fn prop_checkpoint_roundtrip_bit_identical() {
+    let dir = temp_dir("prop");
+    let _ = std::fs::remove_dir_all(&dir);
+    let case = std::cell::Cell::new(0u32);
+    forall(
+        21,
+        32,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let n = 1 + rng.gen_range(48) as u32;
+            let c = 1 + rng.gen_range(24) as u32;
+            let weights: Vec<f32> = (0..(n * c) as usize)
+                .map(|_| (rng.gen_f64() * 16.0 - 4.0) as f32)
+                .collect();
+            Checkpoint {
+                n,
+                c,
+                t_max: 16,
+                theta: (rng.gen_f64() * 20.0) as f32,
+                seed: rng.next_u64(),
+                weights,
+            }
+        }),
+        |ckpt| {
+            case.set(case.get() + 1);
+            let path = dir.join(format!("w{}.ckpt", case.get()));
+            ckpt.save(&path).unwrap();
+            let back = Checkpoint::read(&path).unwrap();
+            // bit-identical weights, not merely approximately equal
+            let bits_match = ckpt
+                .weights
+                .iter()
+                .zip(&back.weights)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            bits_match && back == *ckpt && !dir_has_tmp_files(&dir)
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Truncated and bit-flipped files are typed errors, never misparses.
+#[test]
+fn prop_corrupt_checkpoint_files_rejected() {
+    let dir = temp_dir("corrupt");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = Checkpoint {
+        n: 8,
+        c: 4,
+        t_max: 16,
+        theta: 6.0,
+        seed: 1,
+        weights: (0..32).map(|i| i as f32 / 4.0).collect(),
+    };
+    let path = dir.join("victim.ckpt");
+    ckpt.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    let mut rng = Xoshiro256::new(22);
+    for _ in 0..64 {
+        let corrupted = if rng.gen_bool(0.5) {
+            // truncate at a random offset
+            bytes[..rng.gen_range(bytes.len())].to_vec()
+        } else {
+            // flip one random bit
+            let mut b = bytes.clone();
+            let i = rng.gen_range(b.len());
+            b[i] ^= 1 << rng.gen_range(8);
+            b
+        };
+        std::fs::write(&path, &corrupted).unwrap();
+        match Checkpoint::read(&path) {
+            Err(Error::Checkpoint(_)) => {}
+            other => panic!("corrupt file accepted: {other:?}"),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crc32_reference_vector() {
+    // pin the polynomial: the python twin and external tools agree on
+    // this IEEE vector, so the file format is tool-checkable
+    assert_eq!(crc32(b"123456789"), 0xCBF43926);
+}
+
+/// Golden checkpoint bytes, shared with the python wire twin
+/// (`test_checkpoint_golden_bytes` in python/tests/test_proto_frames.py):
+/// n=4, c=2, t_max=16, theta=6.5, seed=0xABCD, weights
+/// [1.0, 2.5, 3.0, 4.0, -0.5, 0.0, 7.0, 8.25], zlib crc32.
+const GOLDEN_CKPT_HEX: &str = "43574b50000100000004000000020000001040d0000000000000\
+0000abcd00000000000000083f800000402000004040000040800000bf0000000000000040e0000041040000\
+f26a105c";
+
+#[test]
+fn golden_checkpoint_bytes_match_python_twin() {
+    let ckpt = Checkpoint {
+        n: 4,
+        c: 2,
+        t_max: 16,
+        theta: 6.5,
+        seed: 0xABCD,
+        weights: vec![1.0, 2.5, 3.0, 4.0, -0.5, 0.0, 7.0, 8.25],
+    };
+    let bytes = ckpt.to_bytes().unwrap();
+    let hex: String = bytes.iter().map(|b| format!("{b:02x}")).collect();
+    assert_eq!(hex, GOLDEN_CKPT_HEX);
+    assert_eq!(Checkpoint::from_bytes(&bytes).unwrap(), ckpt);
+}
+
+// ------------------------------------------------------- TCP end-to-end
+
+/// The acceptance scenario: one framed client creates two models of
+/// different (n, θ), interleaves infer/learn across both by name,
+/// lists them, saves/loads checkpoints, and unloads — all over TCP.
+#[test]
+fn two_models_interleaved_over_tcp() {
+    let dir = temp_dir("two-models");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (server, addr, srv) = boot_registry(Some(dir.clone()));
+    let mut client = FramedClient::connect(&addr).unwrap();
+    assert_eq!((client.n, client.c), (16, 8), "ACK carries the default");
+
+    // create a second, wider model with a different threshold
+    let info = client.create_model("wide", 64, 12.0, 9).unwrap();
+    assert_eq!((info.n, info.c), (64, 16));
+    assert_eq!(info.theta, 12.0);
+    assert!(!info.default);
+
+    // duplicate create is a typed server-side error
+    let err = client.create_model("wide", 16, 6.0, 1).unwrap_err();
+    assert!(err.to_string().contains("already exists"), "{err}");
+
+    // interleave infer/learn across both models by name; width follows
+    // the routed model, not the connection's default
+    let narrow = vec![0.0f32; 16];
+    let wide = vec![0.0f32; 64];
+    for _ in 0..3 {
+        let (w, t) = client.infer(&narrow).unwrap();
+        assert_eq!(t.len(), 8);
+        assert!(w >= -1);
+        let (_, t) = client.infer_model("wide", &wide).unwrap();
+        assert_eq!(t.len(), 16);
+        client.learn_model("wide", &wide).unwrap();
+        client.learn_model("default", &narrow).unwrap();
+    }
+    // sending the wrong width to a routed model errors in kind
+    let err = client.infer_model("wide", &narrow).unwrap_err();
+    assert!(err.to_string().contains("width"), "{err}");
+    // unknown model: typed proto error, not a fallback to default
+    let err = client.infer_model("nope", &narrow).unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+
+    // listing reflects both slots, sorted, default flagged
+    let models = client.models().unwrap();
+    let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+    assert_eq!(names, vec!["default", "wide"]);
+    assert!(models[0].default && !models[1].default);
+
+    // save / load round-trip over the wire
+    let receipt = client.save_model("wide").unwrap();
+    assert!(receipt.contains("wide.ckpt"), "{receipt}");
+    let replies_after_save: Vec<(i64, Vec<f32>)> = (0..4)
+        .map(|_| client.infer_model("wide", &wide).unwrap())
+        .collect();
+    // drift the weights, then restore them
+    client.learn_model("wide", &wide).unwrap();
+    client.load_model("wide").unwrap();
+    for (w, t) in &replies_after_save {
+        let (w2, t2) = client.infer_model("wide", &wide).unwrap();
+        assert_eq!((w2, &t2), (*w, t), "restored weights serve identically");
+    }
+
+    // per-model stats carry the routed traffic; the merged snapshot
+    // namespaces both models
+    let ws = client.stats_model("wide").unwrap();
+    assert!(ws.counter("volleys_learned") >= 4);
+    let all = client.stats().unwrap();
+    assert_eq!(all.counter("model.wide.n"), 64);
+    assert_eq!(all.counter("model.default.default"), 1);
+    assert!(all.counter("requests") >= all.counter("model.wide.requests"));
+
+    // text clients route with the @model prefix on the same port
+    let mut text = Client::connect(&addr).unwrap();
+    let resp = text
+        .call(&Request::infer(vec![SpikeVolley::dense(wide.clone())]).with_model("wide"))
+        .unwrap();
+    assert_eq!(resp.results().unwrap()[0].times.len(), 16);
+    let resp = text
+        .call(&Request::op(Op::Stats).with_model("wide"))
+        .unwrap();
+    match resp.outcome {
+        Outcome::Stats(s) => assert!(s.counter("requests") >= 1),
+        other => panic!("{other:?}"),
+    }
+    text.quit().unwrap();
+
+    // unload the extra model; the default cannot be unloaded
+    client.unload_model("wide").unwrap();
+    let err = client.infer_model("wide", &wide).unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+    let err = client.unload_model("default").unwrap_err();
+    assert!(err.to_string().contains("default"), "{err}");
+
+    client.quit().unwrap();
+    stop(&server, srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Restart-resume: learn on a model, save, stop the server, boot a
+/// fresh one over the same checkpoint directory — the reopened model
+/// serves byte-identical infer replies to the pre-restart ones.
+#[test]
+fn save_restart_resume_identical_replies() {
+    let dir = temp_dir("restart");
+    let _ = std::fs::remove_dir_all(&dir);
+    let volleys: Vec<Vec<f32>> = {
+        let mut rng = Xoshiro256::new(77);
+        (0..12)
+            .map(|_| {
+                (0..16)
+                    .map(|_| {
+                        if rng.gen_bool(0.4) {
+                            rng.gen_range(8) as f32
+                        } else {
+                            16.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+
+    // session 1: learn, save, record replies
+    let replies: Vec<(i64, Vec<f32>)> = {
+        let (server, addr, srv) = boot_registry(Some(dir.clone()));
+        let mut client = FramedClient::connect(&addr).unwrap();
+        for v in &volleys {
+            client.learn(v).unwrap();
+        }
+        client.save_model("default").unwrap();
+        let replies = volleys.iter().map(|v| client.infer(v).unwrap()).collect();
+        client.quit().unwrap();
+        stop(&server, srv);
+        replies
+    };
+
+    // session 2: a brand-new server process state over the same dir
+    // (load-on-open) serves the same weights
+    let (server, addr, srv) = boot_registry(Some(dir.clone()));
+    let mut client = FramedClient::connect(&addr).unwrap();
+    for (v, (w, t)) in volleys.iter().zip(&replies) {
+        let (w2, t2) = client.infer(v).unwrap();
+        assert_eq!(w2, *w, "winner diverges after restart for {v:?}");
+        let bits: Vec<u32> = t.iter().map(|x| x.to_bits()).collect();
+        let bits2: Vec<u32> = t2.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, bits2, "times diverge after restart for {v:?}");
+    }
+    client.quit().unwrap();
+    stop(&server, srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Regression gate for the set_weights satellite: a Load whose
+/// checkpoint mismatches the model's shape comes back as a typed error
+/// **through the wire**, and the old weights keep serving.
+#[test]
+fn bad_load_is_typed_and_old_weights_keep_serving() {
+    let dir = temp_dir("bad-load");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // plant a wrong-geometry checkpoint under the default model's name
+    Checkpoint {
+        n: 8,
+        c: 4,
+        t_max: 16,
+        theta: 6.0,
+        seed: 11,
+        weights: vec![1.0; 32],
+    }
+    .save(&dir.join("default.ckpt"))
+    .unwrap();
+
+    // a registry opening over it refuses to come up half-loaded
+    let cfg = RegistryConfig {
+        ckpt_dir: Some(dir.clone()),
+        ..RegistryConfig::default()
+    };
+    let err = ModelRegistry::open(
+        cfg,
+        "default",
+        ModelSpec {
+            n: 16,
+            theta: 6.0,
+            seed: 11,
+        },
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err, Error::Checkpoint(_)),
+        "load-on-open surfaced {err:?}"
+    );
+
+    // live server: Load of the bad checkpoint errors over the wire and
+    // leaves the serving weights untouched
+    std::fs::remove_file(dir.join("default.ckpt")).unwrap();
+    let (server, addr, srv) = boot_registry(Some(dir.clone()));
+    let mut client = FramedClient::connect(&addr).unwrap();
+    let volley = vec![0.0f32; 16];
+    let before = client.infer(&volley).unwrap();
+
+    Checkpoint {
+        n: 8,
+        c: 4,
+        t_max: 16,
+        theta: 6.0,
+        seed: 11,
+        weights: vec![1.0; 32],
+    }
+    .save(&dir.join("default.ckpt"))
+    .unwrap();
+    let err = client.load_model("default").unwrap_err();
+    assert!(err.to_string().contains("wants"), "typed shape error: {err}");
+    assert_eq!(
+        client.infer(&volley).unwrap(),
+        before,
+        "old weights still serving after the failed load"
+    );
+
+    // a corrupt (bit-flipped) checkpoint is equally refused
+    let mut bytes = std::fs::read(dir.join("default.ckpt")).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(dir.join("default.ckpt"), &bytes).unwrap();
+    let err = client.load_model("default").unwrap_err();
+    assert!(err.to_string().contains("crc"), "{err}");
+    assert_eq!(client.infer(&volley).unwrap(), before);
+
+    client.quit().unwrap();
+    stop(&server, srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
