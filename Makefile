@@ -41,7 +41,11 @@ artifacts:
 # Weight checkpoints written by `repro serve --ckpt-dir checkpoints`
 # (and its autosave loop) are runtime state, not build outputs — they
 # get their own clean target so wiping builds never deletes learned
-# weights by accident, and vice versa.
+# weights by accident, and vice versa. The directory holds CWKP weight
+# files, and for sharded models (--models ...,shards=K) the CWKS shard
+# manifests plus their <name>.shard<i>.<crc>.ckpt siblings — all removed
+# together, so a later boot can never resume from a half-wiped shard
+# set.
 clean-checkpoints:
 	rm -rf checkpoints
 

@@ -41,9 +41,10 @@ fn main() -> catwalk::Result<()> {
             seed: 7,
         },
     )?);
-    let handle = registry.slot(None)?.handle.clone();
-    println!("backend: {}", handle.backend);
-    let metrics = handle.metrics.clone();
+    let default_slot = registry.slot(None)?;
+    println!("backend: {}", default_slot.backend());
+    let metrics = default_slot.metrics().clone();
+    drop(default_slot);
     let server = Arc::new(Server::with_registry(registry));
     let stop = server.stop_handle();
     let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);

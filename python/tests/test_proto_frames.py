@@ -658,3 +658,136 @@ def test_stats_kv_schema_shape():
     assert int(parsed["counter.model.edge.requests"]) == 3
     assert int(parsed["counter.model.edge.n"]) == 16
     assert int(parsed["hist.model.edge.lat.p50_us"]) == 32
+
+
+def test_stats_kv_shard_rows():
+    """A column-sharded model adds ``model.<name>.shard.<i>.*`` rows
+    under the same schema=2 grammar: model-level keys count each request
+    once (the scatter/gather layer's view), shard keys expose each
+    engine's private counters plus its column count, and the ``shards``
+    geometry row says how the model is split. Model names are
+    allowlisted to [A-Za-z0-9_-], so the ``.shard.<i>.`` segment can
+    never collide with a model name."""
+    body = (
+        "counter.model.quad.requests=5\n"
+        "counter.model.quad.shard.0.c=2\n"
+        "counter.model.quad.shard.0.requests=5\n"
+        "counter.model.quad.shard.1.c=2\n"
+        "counter.model.quad.shard.1.requests=5\n"
+        "counter.model.quad.shards=2\n"
+        "counter.requests=5\n"
+        "hist.model.quad.shard.0.batch_exec.p50_us=16\n"
+        "schema=2\n"
+    )
+    lines = body.strip().splitlines()
+    assert lines == sorted(lines)
+    parsed = dict(line.split("=", 1) for line in lines)
+    assert parsed["schema"] == "2"
+    k = int(parsed["counter.model.quad.shards"])
+    assert k == 2
+    # every shard 0..k-1 has a column count, and they tile the model
+    per_shard_c = [
+        int(parsed["counter.model.quad.shard.%d.c" % i]) for i in range(k)
+    ]
+    assert all(c >= 1 for c in per_shard_c)
+    # each shard engine saw every scattered request; the model-level
+    # (and plain aggregate) rows count them once, not k times
+    assert int(parsed["counter.model.quad.requests"]) == 5
+    assert int(parsed["counter.requests"]) == 5
+    assert int(parsed["counter.model.quad.shard.1.requests"]) == 5
+    # shard keys parse under the schema-1 grammar (skip-unknown-keys
+    # readers keep working)
+    for key in parsed:
+        assert "=" not in key and " " not in key
+
+
+# --------------------------------------- shard-manifest twin (CWKS)
+
+CWKS_MAGIC = b"CWKS"
+CWKS_SCHEMA = 1
+
+# Shared with rust/tests/shard.rs (golden_shard_manifest_bytes_match_
+# python_twin): n=16, c=8, t_max=16, theta=6.0, seed=11, three shards
+# (0..3, 3..6, 6..8) with file CRCs 0x11111111/0x22222222/0x33333333.
+GOLDEN_CWKS_HEX = (
+    "43574b53000100000010000000080000001040c00000000000000000000b"
+    "000000030000000000000003111111110000000300000006222222220000"
+    "000600000008333333331f195abd"
+)
+
+
+def shard_manifest_bytes(n, c, t_max, theta, seed, shards):
+    """``shard/manifest.rs`` layout: header | (start, end, crc)* | crc32.
+
+    ``shards`` is a list of (start, end, file_crc) tuples — the CRC-32
+    of each shard's complete CWKP file bytes, which is how the loader
+    proves all K files belong to one save generation.
+    """
+    import zlib
+
+    p = CWKS_MAGIC + struct.pack(
+        ">HIIIfQI", CWKS_SCHEMA, n, c, t_max, theta, seed, len(shards)
+    )
+    for start, end, crc in shards:
+        p += struct.pack(">III", start, end, crc)
+    return p + struct.pack(">I", zlib.crc32(p) & 0xFFFFFFFF)
+
+
+def test_shard_manifest_golden_bytes():
+    b = shard_manifest_bytes(
+        16, 8, 16, 6.0, 11,
+        [(0, 3, 0x11111111), (3, 6, 0x22222222), (6, 8, 0x33333333)],
+    )
+    assert b.hex() == GOLDEN_CWKS_HEX
+    # fixed header (34) + 3 entries (12 each) + crc
+    assert len(b) == 34 + 3 * 12 + 4
+    import zlib
+
+    stored = struct.unpack(">I", b[-4:])[0]
+    assert stored == zlib.crc32(b[:-4]) & 0xFFFFFFFF
+    # the entry table is a contiguous ascending partition of 0..c —
+    # the property rust's validate_partition enforces
+    entries = [
+        struct.unpack_from(">III", b, 34 + i * 12) for i in range(3)
+    ]
+    assert entries[0][0] == 0
+    assert entries[-1][1] == 8
+    for (s0, e0, _), (s1, e1, _) in zip(entries, entries[1:]):
+        assert e0 == s1 and s0 < e0 < e1
+    # a bit flip anywhere breaks the crc, exactly like CWKP
+    flipped = bytearray(b)
+    flipped[20] ^= 1
+    assert struct.unpack(">I", bytes(flipped[-4:]))[0] != (
+        zlib.crc32(bytes(flipped[:-4])) & 0xFFFFFFFF
+    )
+
+
+def test_shard_checkpoint_files_share_cwkp_layout():
+    """Each shard's weight file is an ordinary CWKP checkpoint whose
+    ``c`` is the shard's column count — the manifest ties K of them
+    together. Rebuild shard files for a c=8 model split 3 ways and
+    check the manifest CRCs bind the exact file bytes."""
+    import zlib
+
+    ranges = [(0, 3), (3, 6), (6, 8)]
+    files = []
+    for start, end in ranges:
+        cl = end - start
+        weights = [float(start * 16 + i) / 4.0 for i in range(cl * 16)]
+        files.append(checkpoint_bytes(16, cl, 16, 6.0, 11, weights))
+    manifest = shard_manifest_bytes(
+        16, 8, 16, 6.0, 11,
+        [
+            (start, end, zlib.crc32(fb) & 0xFFFFFFFF)
+            for (start, end), fb in zip(ranges, files)
+        ],
+    )
+    # every shard file verifies against its manifest entry...
+    for i, fb in enumerate(files):
+        crc = struct.unpack_from(">III", manifest, 34 + i * 12)[2]
+        assert crc == zlib.crc32(fb) & 0xFFFFFFFF
+        assert fb[:4] == CKPT_MAGIC
+    # ...and a shard file from another save generation does not
+    other = checkpoint_bytes(16, 3, 16, 6.0, 12, [0.0] * 48)
+    crc0 = struct.unpack_from(">III", manifest, 34)[2]
+    assert crc0 != zlib.crc32(other) & 0xFFFFFFFF

@@ -55,7 +55,7 @@ fn main() {
         .unwrap();
     println!(
         "backend: {}",
-        registry.slot(None).unwrap().handle.backend
+        registry.slot(None).unwrap().backend()
     );
 
     let server = Arc::new(Server::with_registry(registry.clone()));

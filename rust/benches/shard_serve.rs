@@ -1,0 +1,104 @@
+//! Sharded-serving bench: what the scatter/gather layer costs and
+//! where column sharding starts paying — the numbers EXPERIMENTS.md
+//! §Serving records for the shard subsystem.
+//!
+//! One n=64 model (c=16 output columns) served 1/2/4/8-way sharded,
+//! with the unsharded slot as the baseline; each shard count is driven
+//! with dense (50% line activity) and sparse (10% activity, sparse
+//! encoding) volleys through `ModelSlot::run_batched` — the exact
+//! dispatch path the TCP server takes — plus a learn section, where a
+//! sharded step pays two scattered passes (forward for the global
+//! winner, then the gated update).
+//!
+//! Run: `cargo bench --bench shard_serve`
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use catwalk::rng::Xoshiro256;
+use catwalk::volley::SpikeVolley;
+
+fn volleys(n: usize, rows: usize, density: f64, sparse: bool, seed: u64) -> Vec<SpikeVolley> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..rows)
+        .map(|_| {
+            let dense: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.gen_bool(density) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        16.0
+                    }
+                })
+                .collect();
+            let v = SpikeVolley::dense(dense);
+            if sparse {
+                v.to_sparse(16)
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    bench_header("sharded serving: scatter/gather vs single slot (n=64, c=16)");
+    let n = 64;
+    let spec = ModelSpec {
+        n,
+        theta: 8.0,
+        seed: 7,
+    };
+    let registry = ModelRegistry::open(RegistryConfig::default(), "k1", spec).unwrap();
+    for k in [2usize, 4, 8] {
+        registry.create_sharded(&format!("k{k}"), spec, k).unwrap();
+    }
+    println!(
+        "backend: {}\n",
+        registry.slot(None).unwrap().backend()
+    );
+
+    let rows = 64; // one full backend batch per request
+    let mut baseline_infer = None;
+    for k in [1usize, 2, 4, 8] {
+        let slot = registry.slot(Some(&format!("k{k}"))).unwrap();
+        for (label, density, sparse) in
+            [("dense 50%", 0.5, false), ("sparse 10%", 0.1, true)]
+        {
+            let batch = volleys(n, rows, density, sparse, 11);
+            let r = bench(&format!("infer k={k} {label}"), 2, 12, || {
+                let out = slot.run_batched(false, batch.clone(), None);
+                assert!(matches!(out, catwalk::Outcome::Results(_)));
+            });
+            println!("{}", r.report());
+            println!("  -> {:.0} volleys/s", r.throughput(rows as u64));
+            if k == 1 && !sparse {
+                baseline_infer = Some(r.median());
+            } else if let Some(base) = baseline_infer.filter(|_| !sparse) {
+                println!(
+                    "  scatter/gather overhead vs single slot: {:.2}x",
+                    r.median().as_secs_f64() / base.as_secs_f64()
+                );
+            }
+        }
+    }
+
+    println!();
+    let mut baseline_learn = None;
+    for k in [1usize, 2, 4, 8] {
+        let slot = registry.slot(Some(&format!("k{k}"))).unwrap();
+        let batch = volleys(n, rows, 0.3, false, 23);
+        let r = bench(&format!("learn k={k} dense 30%"), 2, 12, || {
+            let out = slot.run_batched(true, batch.clone(), None);
+            assert!(matches!(out, catwalk::Outcome::Results(_)));
+        });
+        println!("{}", r.report());
+        println!("  -> {:.0} volleys/s", r.throughput(rows as u64));
+        match baseline_learn {
+            None => baseline_learn = Some(r.median()),
+            Some(base) => println!(
+                "  two-phase + scatter/gather vs single slot: {:.2}x",
+                r.median().as_secs_f64() / base.as_secs_f64()
+            ),
+        }
+    }
+}

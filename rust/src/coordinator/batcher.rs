@@ -51,6 +51,27 @@ struct Queue {
     closed: bool,
 }
 
+/// The in-flight half of a [`DynamicBatcher::submit_many_deferred`]
+/// call: one waiter per volley, collected in request order by
+/// [`PendingResults::wait`].
+pub struct PendingResults {
+    waiters: Vec<Receiver<Result<VolleyResult>>>,
+}
+
+impl PendingResults {
+    /// Block until every volley of the deferred submission has a
+    /// result (or a typed error), in request order.
+    pub fn wait(self) -> Vec<Result<VolleyResult>> {
+        self.waiters
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err(Error::Coordinator("batcher dropped request".into())))
+            })
+            .collect()
+    }
+}
+
 /// The batcher front-end; share it across client threads behind an
 /// `Arc` (see [`DynamicBatcher::shutdown`]).
 pub struct DynamicBatcher {
@@ -125,8 +146,21 @@ impl DynamicBatcher {
         volleys: Vec<SpikeVolley>,
         deadline: Option<Instant>,
     ) -> Vec<Result<VolleyResult>> {
+        self.submit_many_deferred(volleys, deadline).wait()
+    }
+
+    /// The non-blocking half of a submission: enqueue every volley (one
+    /// lock), return a [`PendingResults`] to collect later. This is the
+    /// scatter primitive the sharded execution layer builds on — K
+    /// shards are all enqueued before anything blocks, so their
+    /// backends run concurrently.
+    pub fn submit_many_deferred(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        deadline: Option<Instant>,
+    ) -> PendingResults {
         if volleys.is_empty() {
-            return Vec::new();
+            return PendingResults { waiters: Vec::new() };
         }
         let mut waiters: Vec<Receiver<Result<VolleyResult>>> = Vec::with_capacity(volleys.len());
         // count wire encodings before taking the queue lock — the
@@ -137,10 +171,14 @@ impl DynamicBatcher {
             let (lock, cv) = &*self.queue;
             let mut q = lock.lock().unwrap();
             if q.closed {
-                return volleys
-                    .iter()
-                    .map(|_| Err(Error::Coordinator("batcher is shut down".into())))
-                    .collect();
+                // the rejection still flows through the waiters so the
+                // deferred caller sees a uniform interface
+                for _ in &volleys {
+                    let (tx, rx) = sync_channel(1);
+                    let _ = tx.send(Err(Error::Coordinator("batcher is shut down".into())));
+                    waiters.push(rx);
+                }
+                return PendingResults { waiters };
             }
             for volley in volleys {
                 let (tx, rx) = sync_channel(1);
@@ -161,13 +199,7 @@ impl DynamicBatcher {
         if dense > 0 {
             self.service.metrics.incr("requests_dense", dense);
         }
-        waiters
-            .into_iter()
-            .map(|rx| {
-                rx.recv()
-                    .unwrap_or_else(|_| Err(Error::Coordinator("batcher dropped request".into())))
-            })
-            .collect()
+        PendingResults { waiters }
     }
 
     /// Graceful shutdown: close the queue (new submissions are
@@ -250,9 +282,7 @@ fn batch_loop(
         if !expired.is_empty() {
             service.metrics.incr("requests_expired", expired.len() as u64);
             for p in expired {
-                let _ = p.reply.send(Err(Error::Coordinator(
-                    "deadline exceeded while queued".into(),
-                )));
+                let _ = p.reply.send(Err(Error::DeadlineExpired));
             }
         }
         if batch.is_empty() {

@@ -27,7 +27,7 @@ pub mod metrics;
 pub mod pool;
 pub mod service;
 
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::{BatcherConfig, DynamicBatcher, PendingResults};
 pub use metrics::{Metrics, Summary};
 pub use pool::ThreadPool;
-pub use service::{TnnHandle, VolleyResult};
+pub use service::{EngineCall, TnnHandle, VolleyResult};

@@ -41,26 +41,58 @@ struct TnnService {
     metrics: Arc<Metrics>,
 }
 
+/// The engine-thread init bundle: the create-time knobs plus which
+/// rows of the full weight matrix this engine owns (`0..c` for an
+/// unsharded open).
+struct EngineInit {
+    theta: f32,
+    seed: u64,
+    cols: std::ops::Range<usize>,
+}
+
 impl TnnService {
     /// `entry` is the forward-kind manifest entry resolved once by
     /// [`TnnHandle::open`], so handle and engine always agree on it.
+    ///
+    /// `init.cols` names which rows of the *full* weight matrix this
+    /// engine owns. The init RNG walks the full matrix in row-major
+    /// order and the engine keeps only its slice (a prefix walk up to
+    /// `cols.end` rows is enough — the sequence is deterministic), so
+    /// shard row `r` holds bit-for-bit the weights the unsharded model
+    /// would hold at row `cols.start + r` — the root of the
+    /// sharded/unsharded bit-identity contract.
     fn open(
         dir: &Path,
         kind: BackendKind,
         manifest: Manifest,
         entry: Entry,
-        theta: f32,
-        seed: u64,
+        init: EngineInit,
         metrics: Arc<Metrics>,
     ) -> Result<TnnService> {
         let rt = Runtime::from_manifest(dir, kind, manifest)?;
         let (n, c, b) = (entry.n, entry.c, entry.b);
         let forward = rt.load(&entry.name)?;
-        let train = rt.load(&format!("tnn_train_n{n}_c{c}_b{b}"))?;
-        let mut rng = Xoshiro256::new(seed);
-        let w: Vec<f32> = (0..c * n)
+        // resolve the train kernel by kind + full (n, c, b) agreement
+        // with the forward entry rather than re-deriving its *name*
+        // from the geometry — a column-sharded entry keeps its
+        // full-geometry name while its shapes describe the slice, but
+        // the pair must still agree exactly (a manifest may hold
+        // several configurations sharing n)
+        let train_name = rt
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.kind == "train" && e.n == n && e.c == c && e.b == b)
+            .map(|e| e.name.clone())
+            .ok_or_else(|| {
+                Error::Runtime(format!("no train artifact for n={n} c={c} b={b}"))
+            })?;
+        let train = rt.load(&train_name)?;
+        let mut rng = Xoshiro256::new(init.seed);
+        let full: Vec<f32> = (0..init.cols.end * n)
             .map(|_| 2.0 + 3.0 * rng.gen_f64() as f32)
             .collect();
+        let w = full[init.cols.start * n..init.cols.end * n].to_vec();
         Ok(TnnService {
             n,
             c,
@@ -70,9 +102,15 @@ impl TnnService {
             forward,
             train,
             weights: Tensor::new(vec![c, n], w)?,
-            theta,
+            theta: init.theta,
             metrics,
         })
+    }
+
+    /// Whether the train kernel expects the sharded gate input (declared
+    /// as a fourth manifest input by [`TnnHandle::open_columns`]).
+    fn gated(&self) -> bool {
+        self.train.entry.inputs.len() == 4
     }
 
     fn pack(&self, volleys: &[SpikeVolley]) -> Result<Tensor> {
@@ -147,6 +185,13 @@ impl TnnService {
     }
 
     fn learn(&mut self, volleys: &[SpikeVolley]) -> Result<Vec<VolleyResult>> {
+        if self.gated() {
+            return Err(Error::Coordinator(
+                "column-sharded engine learns through supplied gates \
+                 (the global winner lives outside this shard)"
+                    .into(),
+            ));
+        }
         let t0 = Instant::now();
         let spikes = self.pack(volleys)?;
         self.record_sparsity(volleys);
@@ -161,14 +206,76 @@ impl TnnService {
         self.metrics.incr("volleys_learned", volleys.len() as u64);
         Ok(res)
     }
+
+    /// One learning step with externally supplied per-`(volley, column)`
+    /// gates, row-major `volleys.len() × c` (the sharded learn protocol:
+    /// the scatter/gather layer derives gates from the global winner).
+    /// Rows padding the batch out to `b` get zero gates — their deltas
+    /// are zero anyway (all-silent input), so padding stays inert.
+    fn learn_gated(&mut self, volleys: &[SpikeVolley], gates: &[f32]) -> Result<Vec<VolleyResult>> {
+        if !self.gated() {
+            return Err(Error::Coordinator(
+                "this engine derives gates locally; learn_gated needs a \
+                 column-sharded open (TnnHandle::open_columns)"
+                    .into(),
+            ));
+        }
+        if gates.len() != volleys.len() * self.c {
+            return Err(Error::Coordinator(format!(
+                "{} gates do not fill [{}, {}]",
+                gates.len(),
+                volleys.len(),
+                self.c
+            )));
+        }
+        let t0 = Instant::now();
+        let spikes = self.pack(volleys)?;
+        self.record_sparsity(volleys);
+        let mut g = vec![0f32; self.b * self.c];
+        g[..gates.len()].copy_from_slice(gates);
+        let out = self.train.run(&[
+            self.weights.clone(),
+            spikes,
+            Tensor::scalar(self.theta),
+            Tensor::new(vec![self.b, self.c], g)?,
+        ])?;
+        self.weights = out[0].clone();
+        let res = self.unpack(&out[1], &out[2], volleys.len());
+        self.metrics.record("train_exec", t0.elapsed());
+        self.metrics.incr("volleys_learned", volleys.len() as u64);
+        Ok(res)
+    }
 }
 
 enum EngineMsg {
     Infer(Vec<SpikeVolley>, SyncSender<Result<Vec<VolleyResult>>>),
     Learn(Vec<SpikeVolley>, SyncSender<Result<Vec<VolleyResult>>>),
+    LearnGated(
+        Vec<SpikeVolley>,
+        Vec<f32>,
+        SyncSender<Result<Vec<VolleyResult>>>,
+    ),
     GetWeights(SyncSender<Tensor>),
     SetWeights(Tensor, SyncSender<Result<()>>),
     Shutdown,
+}
+
+/// One in-flight engine call, produced by the `*_deferred` entry points;
+/// [`EngineCall::wait`] blocks for the engine's reply. The sharded
+/// execution layer ([`crate::shard`]) issues one of these per shard so
+/// all K engines compute concurrently instead of round-tripping one at
+/// a time.
+pub struct EngineCall<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> EngineCall<T> {
+    /// Block for the engine's reply.
+    pub fn wait(self) -> Result<T> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Coordinator("engine dropped request".into()))
+    }
 }
 
 struct EngineShared {
@@ -204,15 +311,98 @@ impl TnnHandle {
     /// the engine thread, wait for the backend to load the kernels,
     /// return the handle.
     pub fn open(dir: impl AsRef<Path>, n: usize, theta: f32, seed: u64) -> Result<TnnHandle> {
-        let dir: PathBuf = dir.as_ref().to_path_buf();
+        TnnHandle::open_inner(dir.as_ref(), n, theta, seed, None)
+    }
+
+    /// Open a **column shard**: an engine serving only output columns
+    /// `cols` of the full manifest geometry for `n`. Weight init walks
+    /// the full matrix and slices (the engine-thread init documents the
+    /// bit-identity argument), so shard and unsharded weights agree bit
+    /// for bit; the train kernel is declared with a fourth gate input,
+    /// making [`TnnHandle::learn_gated`] this engine's only learning
+    /// entry — the global WTA winner lives outside any one shard.
+    ///
+    /// Only backends that interpret kernels straight from entry
+    /// metadata can execute a sliced geometry; artifact-backed backends
+    /// compiled their kernels for the full column count and are
+    /// rejected with a typed error.
+    pub fn open_columns(
+        dir: impl AsRef<Path>,
+        n: usize,
+        theta: f32,
+        seed: u64,
+        cols: std::ops::Range<usize>,
+    ) -> Result<TnnHandle> {
+        TnnHandle::open_inner(dir.as_ref(), n, theta, seed, Some(cols))
+    }
+
+    fn open_inner(
+        dir: &Path,
+        n: usize,
+        theta: f32,
+        seed: u64,
+        cols: Option<std::ops::Range<usize>>,
+    ) -> Result<TnnHandle> {
+        let dir: PathBuf = dir.to_path_buf();
         let artifacts_dir = dir.clone();
         let kind = BackendKind::from_env()?;
-        let manifest = Manifest::load_or_default(&dir, kind.requires_artifacts())?;
-        let entry = manifest
+        if cols.is_some() && kind.requires_artifacts() {
+            return Err(Error::Runtime(
+                "column sharding requires a backend that interprets kernels at \
+                 arbitrary column widths (CATWALK_BACKEND=native); artifact-backed \
+                 kernels are compiled for the full column count"
+                    .into(),
+            ));
+        }
+        let mut manifest = Manifest::load_or_default(&dir, kind.requires_artifacts())?;
+        let full_entry = manifest
             .entries
             .iter()
             .find(|e| e.kind == "forward" && e.n == n)
             .ok_or_else(|| Error::Runtime(format!("no forward artifact for n={n}")))?
+            .clone();
+        let c_total = full_entry.c;
+        let cols = match cols {
+            None => 0..c_total,
+            Some(r) => {
+                if r.start >= r.end || r.end > c_total {
+                    return Err(Error::Runtime(format!(
+                        "column range {}..{} does not fit 0..{c_total}",
+                        r.start, r.end
+                    )));
+                }
+                // rewrite this configuration's forward/train shapes to
+                // the slice (names stay full-geometry; the train entry
+                // gains the [b, c] gate input the sharded learn
+                // protocol supplies). Matching on (n, c) keeps the
+                // rewrite pinned to the resolved configuration even in
+                // a manifest holding several widths that share n.
+                let (cl, b) = (r.len(), full_entry.b);
+                for e in &mut manifest.entries {
+                    if e.n != n || e.c != c_total {
+                        continue;
+                    }
+                    if e.kind == "forward" {
+                        e.c = cl;
+                        e.inputs = vec![vec![b, n], vec![cl, n], vec![1, 1]];
+                        e.outputs = vec![vec![b, cl], vec![b, cl]];
+                    } else if e.kind == "train" {
+                        e.c = cl;
+                        e.inputs =
+                            vec![vec![cl, n], vec![b, n], vec![1, 1], vec![b, cl]];
+                        e.outputs = vec![vec![cl, n], vec![b, cl], vec![b, cl]];
+                    }
+                }
+                r
+            }
+        };
+        // re-resolve by name: the rewrite preserved names, and name
+        // lookup stays exact even if several configurations share n
+        let entry = manifest
+            .entries
+            .iter()
+            .find(|e| e.name == full_entry.name)
+            .expect("forward entry survives the rewrite")
             .clone();
         let metrics = Arc::new(Metrics::new());
 
@@ -221,6 +411,7 @@ impl TnnHandle {
         let engine_metrics = metrics.clone();
         let engine_manifest = manifest.clone();
         let engine_entry = entry.clone();
+        let engine_init = EngineInit { theta, seed, cols };
         let join = std::thread::Builder::new()
             .name("catwalk-engine".into())
             .spawn(move || {
@@ -229,8 +420,7 @@ impl TnnHandle {
                     kind,
                     engine_manifest,
                     engine_entry,
-                    theta,
-                    seed,
+                    engine_init,
                     engine_metrics,
                 ) {
                     Ok(s) => {
@@ -249,6 +439,9 @@ impl TnnHandle {
                         }
                         EngineMsg::Learn(v, reply) => {
                             let _ = reply.send(service.learn(&v));
+                        }
+                        EngineMsg::LearnGated(v, gates, reply) => {
+                            let _ = reply.send(service.learn_gated(&v, &gates));
                         }
                         EngineMsg::GetWeights(reply) => {
                             let _ = reply.send(service.weights.clone());
@@ -292,31 +485,67 @@ impl TnnHandle {
         })
     }
 
-    fn call<T>(
+    fn call_deferred<T>(
         &self,
         make: impl FnOnce(SyncSender<T>) -> EngineMsg,
-    ) -> Result<T> {
+    ) -> Result<EngineCall<T>> {
         let (tx, rx) = sync_channel(1);
         self.shared
             .tx
             .send(make(tx))
             .map_err(|_| Error::Coordinator("engine is shut down".into()))?;
-        rx.recv()
-            .map_err(|_| Error::Coordinator("engine dropped request".into()))
+        Ok(EngineCall { rx })
+    }
+
+    fn call<T>(
+        &self,
+        make: impl FnOnce(SyncSender<T>) -> EngineMsg,
+    ) -> Result<T> {
+        self.call_deferred(make)?.wait()
     }
 
     /// Inference for up to `b` volleys (one backend execution). Accepts
     /// anything convertible to [`SpikeVolley`] — dense `Vec<f32>` rows
     /// and sparse volleys mix freely within one batch.
     pub fn infer<V: Into<SpikeVolley>>(&self, volleys: Vec<V>) -> Result<Vec<VolleyResult>> {
-        let volleys: Vec<SpikeVolley> = volleys.into_iter().map(Into::into).collect();
-        self.call(|tx| EngineMsg::Infer(volleys, tx))?
+        self.infer_deferred(volleys.into_iter().map(Into::into).collect())?
+            .wait()?
+    }
+
+    /// Enqueue an inference without blocking for it — the scatter half
+    /// of the sharded execution layer's scatter/gather.
+    pub fn infer_deferred(
+        &self,
+        volleys: Vec<SpikeVolley>,
+    ) -> Result<EngineCall<Result<Vec<VolleyResult>>>> {
+        self.call_deferred(|tx| EngineMsg::Infer(volleys, tx))
     }
 
     /// One online-learning step over up to `b` volleys; updates weights.
     pub fn learn<V: Into<SpikeVolley>>(&self, volleys: Vec<V>) -> Result<Vec<VolleyResult>> {
         let volleys: Vec<SpikeVolley> = volleys.into_iter().map(Into::into).collect();
         self.call(|tx| EngineMsg::Learn(volleys, tx))?
+    }
+
+    /// One learning step with externally supplied gates, row-major
+    /// `volleys.len() × c` — only valid on engines opened with
+    /// [`TnnHandle::open_columns`] (gate semantics on the service's
+    /// `learn_gated`).
+    pub fn learn_gated(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        gates: Vec<f32>,
+    ) -> Result<Vec<VolleyResult>> {
+        self.learn_gated_deferred(volleys, gates)?.wait()?
+    }
+
+    /// Enqueue a gated learning step without blocking for it.
+    pub fn learn_gated_deferred(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        gates: Vec<f32>,
+    ) -> Result<EngineCall<Result<Vec<VolleyResult>>>> {
+        self.call_deferred(|tx| EngineMsg::LearnGated(volleys, gates, tx))
     }
 
     /// Typed-envelope entry point: one [`Request`] in, one [`Response`]
@@ -409,6 +638,48 @@ mod tests {
             Err(e) => assert!(e.to_string().contains("no forward artifact"), "{e}"),
             Ok(_) => panic!("expected failure"),
         }
+    }
+
+    /// A column-shard engine serves a slice of the full geometry: its
+    /// weights are the corresponding rows of the full init, its forward
+    /// times the corresponding columns of the full engine, and gated
+    /// learning is its only learning entry (with validated gates).
+    #[test]
+    fn open_columns_slices_geometry_and_weights() {
+        if !native_env() {
+            return;
+        }
+        let full = TnnHandle::open("/no-such-dir", 16, 6.0, 4).unwrap();
+        let shard = TnnHandle::open_columns("/no-such-dir", 16, 6.0, 4, 3..7).unwrap();
+        assert_eq!((shard.n, shard.c, shard.b, shard.t_max), (16, 4, 64, 16));
+        let fw = full.weights().unwrap();
+        let sw = shard.weights().unwrap();
+        assert_eq!(sw.shape, vec![4, 16]);
+        assert_eq!(sw.data[..], fw.data[3 * 16..7 * 16]);
+        // forward times equal the matching columns of the full engine
+        let volley = vec![vec![1.0f32; 16]];
+        let ft = full.infer(volley.clone()).unwrap();
+        let st = shard.infer(volley).unwrap();
+        assert_eq!(st[0].times[..], ft[0].times[3..7]);
+        // plain learn is refused (the winner lives outside the shard);
+        // gated learn validates its gate count, then runs
+        let v = vec![SpikeVolley::dense(vec![0.0; 16])];
+        let err = shard.learn(v.clone()).unwrap_err();
+        assert!(err.to_string().contains("gates"), "{err}");
+        let err = shard.learn_gated(v.clone(), vec![1.0; 3]).unwrap_err();
+        assert!(err.to_string().contains("gates"), "{err}");
+        let res = shard.learn_gated(v, vec![0.0; 4]).unwrap();
+        assert_eq!(res[0].times.len(), 4);
+        // all-zero gates leave the weights untouched
+        assert_eq!(shard.weights().unwrap().data, sw.data);
+        // a full engine refuses gated learn in kind
+        let err = full
+            .learn_gated(vec![SpikeVolley::dense(vec![0.0; 16])], vec![0.0; 8])
+            .unwrap_err();
+        assert!(err.to_string().contains("column-sharded"), "{err}");
+        // degenerate column ranges are typed open errors
+        assert!(TnnHandle::open_columns("/no-such-dir", 16, 6.0, 4, 5..5).is_err());
+        assert!(TnnHandle::open_columns("/no-such-dir", 16, 6.0, 4, 0..9).is_err());
     }
 
     /// Sparse volleys produce exactly the same results as their dense

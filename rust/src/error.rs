@@ -30,6 +30,13 @@ pub enum Error {
     /// Coordinator-level failure (queue closed, worker panicked, ...).
     Coordinator(String),
 
+    /// A request sat past its deadline budget and was dropped without
+    /// costing a backend execution (checked at batcher drain and at
+    /// the sharded learn's chunk boundaries). A dedicated variant so
+    /// expiry accounting can match structurally instead of sniffing
+    /// message text.
+    DeadlineExpired,
+
     /// Serving front-end failure.
     Server(String),
 
@@ -66,6 +73,7 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::DeadlineExpired => write!(f, "deadline exceeded while queued"),
             Error::Server(m) => write!(f, "server error: {m}"),
             Error::Volley(m) => write!(f, "volley error: {m}"),
             Error::Proto(m) => write!(f, "proto error: {m}"),

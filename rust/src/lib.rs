@@ -24,7 +24,10 @@
 //!    envelope with a framed binary codec (v3: model routing + registry
 //!    admin) and a text compat codec ([`proto`]), a multi-model registry
 //!    with named instances and versioned weight checkpoints
-//!    ([`registry`]), a TCP serving front-end speaking both codecs
+//!    ([`registry`]), a sharded-model execution layer that
+//!    scatter/gathers one model's output columns across K parallel
+//!    engines bit-identically ([`shard`]), a TCP serving front-end
+//!    speaking both codecs
 //!    ([`server`]), experiment drivers for every figure and table in
 //!    the paper ([`experiments`]), and report renderers ([`report`]).
 //!
@@ -57,6 +60,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod sim;
 pub mod sorters;
 pub mod tnn;

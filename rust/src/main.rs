@@ -9,10 +9,12 @@
 //! repro ablate-k            # E9 accuracy ablation
 //! repro dse                 # parallel design-space sweep
 //! repro cluster             # E10 end-to-end STDP clustering via PJRT
-//! repro serve [--addr A] [--models name=n,theta[,seed];...]
+//! repro serve [--addr A] [--models name=n,theta[,seed][,shards=K];...]
 //!             [--ckpt-dir D] [--autosave-secs S]
 //!                           # TCP daemon (v3 framed + text compat);
-//!                           # multi-model registry + weight checkpoints
+//!                           # multi-model registry + weight checkpoints;
+//!                           # shards=K scatter/gathers a model's output
+//!                           # columns across K parallel engines
 //! repro client [--addr A] [--framed] [--window W] [--model NAME]
 //!                           # load generator against a daemon
 //! repro all                 # every figure/table, EXPERIMENTS.md-ready
@@ -47,7 +49,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed];...] [--ckpt-dir DIR] [--autosave-secs S]";
+const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K];...] [--ckpt-dir DIR] [--autosave-secs S]";
 
 fn emit(t: &Table, csv: bool) {
     if csv {
@@ -208,12 +210,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// One `--models` entry: `name=n,theta[,seed]` (semicolon-separated
-/// entries and repeated flags both work).
-fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec)> {
+/// One `--models` entry: `name=n,theta[,seed][,shards=K]`
+/// (semicolon-separated entries and repeated flags both work). The
+/// optional trailing tokens may come in either order: a bare integer
+/// is the seed, `shards=K` column-shards the model K ways.
+fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec, usize)> {
     let bad = |why: &str| {
         Error::Usage(format!(
-            "--models `{raw}`: {why} (want name=n,theta[,seed])"
+            "--models `{raw}`: {why} (want name=n,theta[,seed][,shards=K])"
         ))
     };
     let (name, rest) = raw.split_once('=').ok_or_else(|| bad("missing `=`"))?;
@@ -226,14 +230,33 @@ fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec)> {
         .next()
         .and_then(|s| s.trim().parse::<f32>().ok())
         .ok_or_else(|| bad("bad theta"))?;
-    let seed = match fields.next() {
-        None => 7,
-        Some(s) => s.trim().parse::<u64>().map_err(|_| bad("bad seed"))?,
-    };
-    if fields.next().is_some() {
-        return Err(bad("too many fields"));
+    let (mut seed, mut shards) = (None, None);
+    for field in fields {
+        let field = field.trim();
+        if let Some(k) = field.strip_prefix("shards=") {
+            if shards.is_some() {
+                return Err(bad("shards given twice"));
+            }
+            let k: usize = k.trim().parse().map_err(|_| bad("bad shards"))?;
+            if k == 0 {
+                return Err(bad("shards must be >= 1"));
+            }
+            shards = Some(k);
+        } else if seed.is_none() {
+            seed = Some(field.parse::<u64>().map_err(|_| bad("bad seed"))?);
+        } else {
+            return Err(bad("too many fields"));
+        }
     }
-    Ok((name.trim().to_string(), ModelSpec { n, theta, seed }))
+    Ok((
+        name.trim().to_string(),
+        ModelSpec {
+            n,
+            theta,
+            seed: seed.unwrap_or(7),
+        },
+        shards.unwrap_or(1),
+    ))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -245,17 +268,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let autosave = args.get_u64("autosave-secs", 30)?;
     let ckpt_dir = args.flag("ckpt-dir").map(std::path::PathBuf::from);
 
-    // `--models a=16,6;b=64,12,9` or repeated `--models` flags; the
-    // first entry is the default model. No flag = one default model
-    // from the classic --n/--theta/--seed knobs.
-    let mut specs: Vec<(String, ModelSpec)> = Vec::new();
+    // `--models a=16,6;b=64,12,9,shards=4` or repeated `--models`
+    // flags; the first entry is the default model. No flag = one
+    // default model from the classic --n/--theta/--seed knobs.
+    let mut specs: Vec<(String, ModelSpec, usize)> = Vec::new();
     for raw in args.flag_all("models") {
         for part in raw.split(';').filter(|p| !p.trim().is_empty()) {
             specs.push(parse_model_spec(part.trim())?);
         }
     }
     if specs.is_empty() {
-        specs.push(("default".into(), ModelSpec { n, theta, seed }));
+        specs.push(("default".into(), ModelSpec { n, theta, seed }, 1));
     }
 
     let cfg = RegistryConfig {
@@ -265,17 +288,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         autosave_after: (autosave > 0 && ckpt_dir.is_some())
             .then(|| std::time::Duration::from_secs(autosave)),
     };
-    let (default_name, default_spec) = specs[0].clone();
-    let registry = Arc::new(ModelRegistry::open(cfg, &default_name, default_spec)?);
-    for (name, spec) in &specs[1..] {
-        registry.create(name, *spec)?;
+    let (default_name, default_spec, default_shards) = specs[0].clone();
+    let registry = Arc::new(ModelRegistry::open_sharded(
+        cfg,
+        &default_name,
+        default_spec,
+        default_shards,
+    )?);
+    for (name, spec, shards) in &specs[1..] {
+        registry.create_sharded(name, *spec, *shards)?;
     }
     for info in registry.list() {
         let resumed = registry
             .ckpt_path(&info.name)
             .is_some_and(|p| p.exists());
+        let shards = registry.slot(Some(info.name.as_str()))?.shard_count();
         println!(
-            "model {}{}: n={} c={} t_max={} theta={} seed={}{}",
+            "model {}{}: n={} c={} t_max={} theta={} seed={}{}{}",
             info.name,
             if info.default { " (default)" } else { "" },
             info.n,
@@ -283,6 +312,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             info.t_max,
             info.theta,
             info.seed,
+            if shards > 1 {
+                format!(" shards={shards}")
+            } else {
+                String::new()
+            },
             if resumed { " [resumed from checkpoint]" } else { "" },
         );
     }

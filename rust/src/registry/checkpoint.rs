@@ -167,23 +167,7 @@ impl Checkpoint {
     /// `Save` racing the autosave sweep) cannot interleave writes; the
     /// last rename wins wholesale.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let bytes = self.to_bytes()?;
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                fs::create_dir_all(dir)?;
-            }
-        }
-        let tmp = unique_tmp_path(path);
-        {
-            let mut f = fs::File::create(&tmp)?;
-            f.write_all(&bytes)?;
-            f.sync_all()?;
-        }
-        if let Err(e) = fs::rename(&tmp, path) {
-            let _ = fs::remove_file(&tmp);
-            return Err(e.into());
-        }
-        Ok(())
+        write_atomic(path, &self.to_bytes()?)
     }
 
     /// Read and verify a checkpoint file.
@@ -193,6 +177,29 @@ impl Checkpoint {
         Checkpoint::from_bytes(&bytes)
             .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))
     }
+}
+
+/// Atomic file write shared by the `CWKP` checkpoint and `CWKS`
+/// shard-manifest savers: stage into a uniquely named sibling temp
+/// file, `sync_all`, rename over `path`. The destination either keeps
+/// its old bytes or gains the complete new ones.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = unique_tmp_path(path);
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    if let Err(e) = fs::rename(&tmp, path) {
+        let _ = fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    Ok(())
 }
 
 /// The uniquely named sibling temp file one [`Checkpoint::save`] call

@@ -5,11 +5,14 @@
 //! as many independently-sized column configurations serving different
 //! sensory workloads; this module is that deployment model in software
 //! (DESIGN.md §2.3). A [`ModelRegistry`] owns one [`ModelSlot`] per
-//! named model — each slot a [`TnnHandle`] (its own engine thread,
-//! weights and [`Metrics`]) plus its own infer/learn
+//! named model — each slot either a [`TnnHandle`] (its own engine
+//! thread, weights and [`Metrics`]) plus its own infer/learn
 //! [`DynamicBatcher`] pair, so traffic for one model never dilutes
-//! another model's batches — and the server dispatches every request
-//! into the registry by name:
+//! another model's batches, or a column-sharded
+//! [`crate::shard::ShardedModel`] (K engine threads behind one
+//! scatter/gather layer, DESIGN.md §2.4) — and the server dispatches
+//! every request into the registry by name, never needing to know
+//! which shape it hit:
 //!
 //! ```text
 //!            ┌───────────────────────────────────────────────┐
@@ -33,6 +36,12 @@
 //! `save`/`load`/hot-swap on a live slot, `<ckpt_dir>/<name>.ckpt`
 //! naming, load-on-open so a restarted `repro serve` resumes learned
 //! state, and periodic autosave driven by the server's accept loop.
+//! A sharded slot persists the same `<name>.ckpt` path as a `CWKS`
+//! shard manifest tying K sibling `<name>.shard<i>.<crc>.ckpt` weight
+//! files
+//! together ([`crate::shard::manifest`]); `Save`/`Load`/`Create`/
+//! `Unload` admin ops fan out per shard behind the unchanged wire
+//! surface.
 
 pub mod checkpoint;
 
@@ -40,6 +49,7 @@ use crate::coordinator::{BatcherConfig, DynamicBatcher, Metrics, TnnHandle};
 use crate::error::{Error, Result};
 use crate::proto::{AdminReply, ModelCmd, ModelInfo, Outcome, StatsSnapshot};
 use crate::runtime::Tensor;
+use crate::shard::ShardedModel;
 use crate::volley::SpikeVolley;
 use checkpoint::Checkpoint;
 use std::collections::BTreeMap;
@@ -86,29 +96,60 @@ impl Default for RegistryConfig {
     }
 }
 
-/// One served model: the engine handle plus its private batcher pair.
-/// Slots are handed out as `Arc<ModelSlot>` clones, so an `unload`
-/// never yanks state from under an in-flight request — the last clone
-/// dropping shuts the batchers and engine down.
+/// How a slot executes: one engine thread, or K column-shard engines
+/// behind the scatter/gather layer ([`crate::shard::ShardedModel`]).
+/// Sharding is invisible to routing, the wire and the checkpoint admin
+/// surface — only STATS (per-shard rows) and the checkpoint *files*
+/// (a `CWKS` manifest + K `CWKP` slices) reveal it.
+enum SlotEngine {
+    Single {
+        handle: TnnHandle,
+        infer: DynamicBatcher,
+        learn: DynamicBatcher,
+    },
+    Sharded(ShardedModel),
+}
+
+/// One served model: its execution engine(s) plus batching. Slots are
+/// handed out as `Arc<ModelSlot>` clones, so an `unload` never yanks
+/// state from under an in-flight request — the last clone dropping
+/// shuts the batchers and engines down.
 pub struct ModelSlot {
     pub name: String,
-    pub handle: TnnHandle,
     pub spec: ModelSpec,
-    infer: DynamicBatcher,
-    learn: DynamicBatcher,
+    engine: SlotEngine,
 }
 
 impl ModelSlot {
-    fn open(name: &str, spec: ModelSpec, cfg: &RegistryConfig) -> Result<ModelSlot> {
-        let handle = TnnHandle::open(&cfg.artifacts_dir, spec.n, spec.theta, spec.seed)?;
-        Ok(ModelSlot::from_handle(name, handle, cfg.batcher))
+    fn open(name: &str, spec: ModelSpec, shards: usize, cfg: &RegistryConfig) -> Result<ModelSlot> {
+        if shards == 0 {
+            return Err(Error::Coordinator("shard count must be >= 1".into()));
+        }
+        if shards == 1 {
+            let handle = TnnHandle::open(&cfg.artifacts_dir, spec.n, spec.theta, spec.seed)?;
+            Ok(ModelSlot::from_handle(name, handle, cfg.batcher))
+        } else {
+            let sharded = ShardedModel::open(
+                &cfg.artifacts_dir,
+                spec.n,
+                spec.theta,
+                spec.seed,
+                shards,
+                cfg.batcher,
+            )?;
+            Ok(ModelSlot {
+                name: name.to_string(),
+                spec,
+                engine: SlotEngine::Sharded(sharded),
+            })
+        }
     }
 
-    /// The one place slot wiring lives: both the open-by-spec path and
-    /// the wrap-an-existing-handle compat path build slots here, so the
-    /// batcher pair can never drift between them. The spec is read
-    /// back off the handle (identical to the opening spec by
-    /// construction).
+    /// The one place single-engine slot wiring lives: both the
+    /// open-by-spec path and the wrap-an-existing-handle compat path
+    /// build slots here, so the batcher pair can never drift between
+    /// them. The spec is read back off the handle (identical to the
+    /// opening spec by construction).
     fn from_handle(name: &str, handle: TnnHandle, batcher: BatcherConfig) -> ModelSlot {
         let infer = DynamicBatcher::start(handle.clone(), batcher);
         let learn = DynamicBatcher::start(
@@ -125,25 +166,130 @@ impl ModelSlot {
         };
         ModelSlot {
             name: name.to_string(),
-            handle,
             spec,
-            infer,
-            learn,
+            engine: SlotEngine::Single {
+                handle,
+                infer,
+                learn,
+            },
         }
     }
 
-    /// Run a volley batch through this slot's batcher (the server's
-    /// `Infer`/`Learn` path). Mirrors the pre-registry `run_batched`:
-    /// the first volley error aborts the whole request in kind.
+    // -------------------------------------- engine-agnostic accessors
+
+    /// Column input width.
+    pub fn n(&self) -> usize {
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => handle.n,
+            SlotEngine::Sharded(s) => s.n,
+        }
+    }
+
+    /// Total output columns (across all shards, for a sharded slot).
+    pub fn c(&self) -> usize {
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => handle.c,
+            SlotEngine::Sharded(s) => s.c,
+        }
+    }
+
+    pub fn t_max(&self) -> usize {
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => handle.t_max,
+            SlotEngine::Sharded(s) => s.t_max,
+        }
+    }
+
+    /// Name of the executing backend (`"native"` / `"xla"`).
+    pub fn backend(&self) -> &'static str {
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => handle.backend,
+            SlotEngine::Sharded(s) => s.backend,
+        }
+    }
+
+    /// How many engines serve this slot (1 = unsharded).
+    pub fn shard_count(&self) -> usize {
+        match &self.engine {
+            SlotEngine::Single { .. } => 1,
+            SlotEngine::Sharded(s) => s.plan.k,
+        }
+    }
+
+    /// Model-level metrics: the engine's own registry for a single
+    /// slot, the scatter/gather layer's for a sharded one (per-shard
+    /// engine metrics surface as `model.<name>.shard.<i>.*` rows).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => &handle.metrics,
+            SlotEngine::Sharded(s) => &s.metrics,
+        }
+    }
+
+    /// The single engine handle, when this slot has exactly one (the
+    /// in-process compat surface; a sharded slot has no full-geometry
+    /// handle to give out).
+    pub fn handle(&self) -> Option<&TnnHandle> {
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => Some(handle),
+            SlotEngine::Sharded(_) => None,
+        }
+    }
+
+    /// The sharded engine, when this slot is sharded.
+    pub fn sharded(&self) -> Option<&ShardedModel> {
+        match &self.engine {
+            SlotEngine::Single { .. } => None,
+            SlotEngine::Sharded(s) => Some(s),
+        }
+    }
+
+    /// The full `[c, n]` weight matrix (shard rows concatenated in
+    /// plan order for a sharded slot).
+    pub fn weights(&self) -> Result<Tensor> {
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => handle.weights(),
+            SlotEngine::Sharded(s) => s.weights(),
+        }
+    }
+
+    /// Swap in a full `[c, n]` weight matrix (scattered across shards
+    /// for a sharded slot).
+    pub fn set_weights(&self, w: Tensor) -> Result<()> {
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => handle.set_weights(w),
+            SlotEngine::Sharded(s) => s.set_weights(w),
+        }
+    }
+
+    /// Run a volley batch through this slot (the server's
+    /// `Infer`/`Learn` path) — the batcher pair for a single slot, the
+    /// scatter/gather layer for a sharded one. Mirrors the pre-registry
+    /// `run_batched`: the first volley error aborts the whole request
+    /// in kind.
     pub fn run_batched(
         &self,
         learn: bool,
         volleys: Vec<SpikeVolley>,
         deadline: Option<Instant>,
     ) -> Outcome {
-        let batcher = if learn { &self.learn } else { &self.infer };
-        let mut results = Vec::with_capacity(volleys.len());
-        for r in batcher.submit_many_with_deadline(volleys, deadline) {
+        let replies = match &self.engine {
+            SlotEngine::Single {
+                infer: i, learn: l, ..
+            } => {
+                let batcher = if learn { l } else { i };
+                batcher.submit_many_with_deadline(volleys, deadline)
+            }
+            SlotEngine::Sharded(s) => {
+                if learn {
+                    s.learn(volleys, deadline)
+                } else {
+                    s.infer(volleys, deadline)
+                }
+            }
+        };
+        let mut results = Vec::with_capacity(replies.len());
+        for r in replies {
             match r {
                 Ok(v) => results.push(v),
                 Err(e) => return Outcome::Error(e.to_string()),
@@ -156,22 +302,22 @@ impl ModelSlot {
     pub fn info(&self, default: bool) -> ModelInfo {
         ModelInfo {
             name: self.name.clone(),
-            n: self.handle.n,
-            c: self.handle.c,
-            t_max: self.handle.t_max,
+            n: self.n(),
+            c: self.c(),
+            t_max: self.t_max(),
             theta: self.spec.theta,
             seed: self.spec.seed,
             default,
         }
     }
 
-    /// Snapshot this slot's weights as a [`Checkpoint`].
+    /// Snapshot this slot's (full-matrix) weights as a [`Checkpoint`].
     pub fn checkpoint(&self) -> Result<Checkpoint> {
-        let w = self.handle.weights()?;
+        let w = self.weights()?;
         Ok(Checkpoint {
-            n: self.handle.n as u32,
-            c: self.handle.c as u32,
-            t_max: self.handle.t_max as u32,
+            n: self.n() as u32,
+            c: self.c() as u32,
+            t_max: self.t_max() as u32,
             theta: self.spec.theta,
             seed: self.spec.seed,
             weights: w.data,
@@ -179,22 +325,61 @@ impl ModelSlot {
     }
 
     /// Hot-swap this slot's weights from a verified checkpoint. The
-    /// geometry gate runs **before** the engine is touched, and the
-    /// engine re-checks the tensor shape — a bad checkpoint leaves the
+    /// geometry gate runs **before** any engine is touched, and the
+    /// engines re-check tensor shapes — a bad checkpoint leaves the
     /// old weights serving (regression-tested in
     /// `rust/tests/registry.rs`).
     pub fn restore(&self, ckpt: &Checkpoint) -> Result<()> {
-        if (ckpt.n as usize, ckpt.c as usize) != (self.handle.n, self.handle.c) {
+        if (ckpt.n as usize, ckpt.c as usize) != (self.n(), self.c()) {
             return Err(Error::Checkpoint(format!(
                 "checkpoint is [{}, {}], model `{}` wants [{}, {}]",
-                ckpt.c, ckpt.n, self.name, self.handle.c, self.handle.n
+                ckpt.c,
+                ckpt.n,
+                self.name,
+                self.c(),
+                self.n()
             )));
         }
-        let w = Tensor::new(
-            vec![self.handle.c, self.handle.n],
-            ckpt.weights.clone(),
-        )?;
-        self.handle.set_weights(w)
+        let w = Tensor::new(vec![self.c(), self.n()], ckpt.weights.clone())?;
+        self.set_weights(w)
+    }
+
+    /// Persist this slot's weights under `path`: one `CWKP` file for a
+    /// single slot; a `CWKS` shard manifest at `path` plus K sibling
+    /// per-shard `CWKP` files for a sharded one.
+    pub fn save_ckpt(&self, path: &Path) -> Result<()> {
+        match &self.engine {
+            SlotEngine::Single { .. } => self.checkpoint()?.save(path),
+            SlotEngine::Sharded(s) => s.save_checkpoints(path),
+        }
+    }
+
+    /// Hot-swap this slot's weights from its checkpoint file(s) at
+    /// `path` — the format must match the slot's engine shape, so a
+    /// single-model `CWKP` cannot half-load into a sharded slot (or
+    /// vice versa); either mismatch is a typed error and the old
+    /// weights keep serving.
+    pub fn load_ckpt(&self, path: &Path) -> Result<()> {
+        match &self.engine {
+            SlotEngine::Single { .. } => self.restore(&Checkpoint::read(path)?),
+            SlotEngine::Sharded(s) => s.load_checkpoints(path),
+        }
+    }
+
+    /// Drain this slot's serving machinery: queued work flushes to its
+    /// callers, later submissions get typed errors. Called by
+    /// [`ModelRegistry::unload`] after the slot leaves the routing map,
+    /// so unload never strands a blocked client.
+    fn drain(&self) {
+        match &self.engine {
+            SlotEngine::Single {
+                infer: i, learn: l, ..
+            } => {
+                i.shutdown();
+                l.shutdown();
+            }
+            SlotEngine::Sharded(s) => s.drain(),
+        }
     }
 }
 
@@ -215,8 +400,19 @@ impl ModelRegistry {
     /// `<ckpt_dir>/<name>.ckpt` is loaded into the fresh slot
     /// (load-on-open), so reopening resumes learned state.
     pub fn open(cfg: RegistryConfig, name: &str, spec: ModelSpec) -> Result<ModelRegistry> {
+        ModelRegistry::open_sharded(cfg, name, spec, 1)
+    }
+
+    /// [`ModelRegistry::open`] with the default model column-sharded
+    /// `shards` ways (`repro serve --models name=n,theta,shards=K`).
+    pub fn open_sharded(
+        cfg: RegistryConfig,
+        name: &str,
+        spec: ModelSpec,
+        shards: usize,
+    ) -> Result<ModelRegistry> {
         let reg = ModelRegistry::empty(cfg, name);
-        reg.create(name, spec)?;
+        reg.create_sharded(name, spec, shards)?;
         Ok(reg)
     }
 
@@ -280,7 +476,17 @@ impl ModelRegistry {
     /// (an incompatible checkpoint fails the boot rather than serving
     /// half-loaded).
     pub fn create(&self, name: &str, spec: ModelSpec) -> Result<ModelInfo> {
-        self.create_inner(name, spec, true)
+        self.create_inner(name, spec, 1, true)
+    }
+
+    /// [`ModelRegistry::create`] with the model column-sharded
+    /// `shards` ways (transparent to routing and the wire; `shards = 1`
+    /// is exactly `create`). A sharded model resumes from its `CWKS`
+    /// shard manifest — a single-model `CWKP` under the same name (or
+    /// a manifest for a different shard count) fails the boot rather
+    /// than serving half-loaded.
+    pub fn create_sharded(&self, name: &str, spec: ModelSpec, shards: usize) -> Result<ModelInfo> {
+        self.create_inner(name, spec, shards, true)
     }
 
     /// Create with freshly seed-initialized weights, ignoring any
@@ -290,13 +496,19 @@ impl ModelRegistry {
     /// name forever nor silently substitute old weights. A later
     /// `Save` simply overwrites the stale file.
     pub fn create_fresh(&self, name: &str, spec: ModelSpec) -> Result<ModelInfo> {
-        self.create_inner(name, spec, false)
+        self.create_inner(name, spec, 1, false)
     }
 
     /// The engine open runs outside the write lock — a slow backend
     /// load must not stall the serving hot path — so the duplicate
     /// check runs twice.
-    fn create_inner(&self, name: &str, spec: ModelSpec, resume: bool) -> Result<ModelInfo> {
+    fn create_inner(
+        &self,
+        name: &str,
+        spec: ModelSpec,
+        shards: usize,
+        resume: bool,
+    ) -> Result<ModelInfo> {
         // allowlist, not blocklist: names become filesystem components
         // (`<name>.ckpt`), text-protocol tokens (`@name `) and stats
         // keys (`model.<name>.<counter>=v`), so anything beyond
@@ -314,12 +526,12 @@ impl ModelRegistry {
         if self.slots.read().unwrap().contains_key(name) {
             return Err(Error::Proto(format!("model `{name}` already exists")));
         }
-        let slot = Arc::new(ModelSlot::open(name, spec, &self.cfg)?);
+        let slot = Arc::new(ModelSlot::open(name, spec, shards, &self.cfg)?);
         // load-on-open: resume learned state when a checkpoint exists
         if resume {
             if let Some(path) = self.ckpt_path(name) {
                 if path.exists() {
-                    slot.restore(&Checkpoint::read(&path)?)?;
+                    slot.load_ckpt(&path)?;
                     self.metrics.incr("checkpoints_loaded", 1);
                 }
             }
@@ -335,16 +547,30 @@ impl ModelRegistry {
         }
     }
 
-    /// Stop serving a (non-default) model. In-flight requests holding
-    /// the slot `Arc` finish; the engine shuts down with the last clone.
+    /// Stop serving a (non-default) model. The slot leaves the routing
+    /// map first (no new lookups can reach it), then its batching
+    /// machinery is **drained**: requests already queued flush through
+    /// the engine and reach their blocked callers, and anything
+    /// submitted afterwards through a still-held slot `Arc` gets a
+    /// typed "batcher is shut down" error — unload never strands a
+    /// client mid-request (regression-tested as unload-under-load in
+    /// `rust/tests/registry.rs`). The engines themselves exit with the
+    /// last `Arc` clone.
     pub fn unload(&self, name: &str) -> Result<()> {
         if name == self.default_name {
             return Err(Error::Proto(format!(
                 "cannot unload the default model `{name}`"
             )));
         }
-        match self.slots.write().unwrap().remove(name) {
-            Some(_) => Ok(()),
+        // bind before matching: the drain (which waits out queued
+        // engine work) must run *after* the write guard drops, or an
+        // unload-under-load would stall every other model's routing
+        let removed = self.slots.write().unwrap().remove(name);
+        match removed {
+            Some(slot) => {
+                slot.drain();
+                Ok(())
+            }
             None => Err(Error::Proto(format!("unknown model `{name}`"))),
         }
     }
@@ -371,10 +597,11 @@ impl ModelRegistry {
     }
 
     /// Save a model's weights to an explicit path (in-process callers;
-    /// the wire only addresses checkpoints by name).
+    /// the wire only addresses checkpoints by name). A sharded slot
+    /// fans out to its `CWKS` manifest + per-shard `CWKP` files.
     pub fn save_to(&self, name: &str, path: &Path) -> Result<()> {
         let slot = self.slot(Some(name))?;
-        slot.checkpoint()?.save(path)?;
+        slot.save_ckpt(path)?;
         self.metrics.incr("checkpoints_saved", 1);
         Ok(())
     }
@@ -389,7 +616,7 @@ impl ModelRegistry {
     /// Hot-swap from an explicit path (in-process callers).
     pub fn load_from(&self, name: &str, path: &Path) -> Result<()> {
         let slot = self.slot(Some(name))?;
-        slot.restore(&Checkpoint::read(path)?)?;
+        slot.load_ckpt(path)?;
         self.metrics.incr("checkpoints_loaded", 1);
         Ok(())
     }
@@ -406,7 +633,7 @@ impl ModelRegistry {
         for slot in self.all_slots() {
             let result = self
                 .ckpt_path_required(&slot.name)
-                .and_then(|path| slot.checkpoint()?.save(&path));
+                .and_then(|path| slot.save_ckpt(&path));
             match result {
                 Ok(()) => {
                     self.metrics.incr("checkpoints_saved", 1);
@@ -504,15 +731,32 @@ impl ModelRegistry {
     /// that slot's snapshot under plain names; otherwise plain counters
     /// are sums across models, plain hists are the default model's, and
     /// every slot additionally appears under `model.<name>.*` with
-    /// geometry rows (`n`, `c`, `t_max`, `seed`, `default`).
+    /// geometry rows (`n`, `c`, `t_max`, `seed`, `default`, `shards`).
+    /// Sharded slots add `model.<name>.shard.<i>.*` rows — each shard
+    /// engine's own counters/hists plus its column count — under the
+    /// same key=value grammar (model names cannot contain `.`, so the
+    /// `shard.` segment is unambiguous); shard rows are *not* folded
+    /// into the plain aggregates, which count each request once at the
+    /// scatter/gather layer rather than K times.
     pub fn stats(&self, full: bool, model: Option<&str>) -> Result<StatsSnapshot> {
         if let Some(name) = model {
-            return Ok(self.slot(Some(name))?.handle.metrics.snapshot(full));
+            let slot = self.slot(Some(name))?;
+            let mut snap = slot.metrics().snapshot(full);
+            // a sharded slot's engine-execution counters and hists
+            // live on the shard handles; surface them here too (as
+            // `shard.<i>.*` rows) so a per-model stats query keeps
+            // full kernel visibility, like a single slot's does
+            if let Some(sharded) = slot.sharded() {
+                snap.counters
+                    .insert("shards".into(), sharded.plan.k as u64);
+                insert_shard_rows(&mut snap, sharded, "shard", full);
+            }
+            return Ok(snap);
         }
         let mut out = self.metrics.snapshot(false);
         for slot in self.all_slots() {
             let name = &slot.name;
-            let snap = slot.handle.metrics.snapshot(full);
+            let snap = slot.metrics().snapshot(full);
             for (k, v) in &snap.counters {
                 *out.counters.entry(k.clone()).or_insert(0) += v;
                 out.counters.insert(format!("model.{name}.{k}"), *v);
@@ -525,17 +769,40 @@ impl ModelRegistry {
             }
             let default = (*name == self.default_name) as u64;
             out.counters
-                .insert(format!("model.{name}.n"), slot.handle.n as u64);
+                .insert(format!("model.{name}.n"), slot.n() as u64);
             out.counters
-                .insert(format!("model.{name}.c"), slot.handle.c as u64);
+                .insert(format!("model.{name}.c"), slot.c() as u64);
             out.counters
-                .insert(format!("model.{name}.t_max"), slot.handle.t_max as u64);
+                .insert(format!("model.{name}.t_max"), slot.t_max() as u64);
             out.counters
                 .insert(format!("model.{name}.seed"), slot.spec.seed);
             out.counters
                 .insert(format!("model.{name}.default"), default);
+            out.counters
+                .insert(format!("model.{name}.shards"), slot.shard_count() as u64);
+            if let Some(sharded) = slot.sharded() {
+                insert_shard_rows(&mut out, sharded, &format!("model.{name}.shard"), full);
+            }
         }
         Ok(out)
+    }
+}
+
+/// Emit each shard engine's own counters/hists (plus its column count)
+/// under `<prefix>.<i>.*` — shared by the aggregate snapshot
+/// (`model.<name>.shard.<i>.*`) and the per-model one (`shard.<i>.*`)
+/// so the two views cannot drift.
+fn insert_shard_rows(out: &mut StatsSnapshot, sharded: &ShardedModel, prefix: &str, full: bool) {
+    for i in 0..sharded.plan.k {
+        let shard_snap = sharded.shard_handle(i).metrics.snapshot(full);
+        for (k, v) in &shard_snap.counters {
+            out.counters.insert(format!("{prefix}.{i}.{k}"), *v);
+        }
+        for (k, h) in &shard_snap.hists {
+            out.hists.insert(format!("{prefix}.{i}.{k}"), *h);
+        }
+        out.counters
+            .insert(format!("{prefix}.{i}.c"), sharded.plan.range(i).len() as u64);
     }
 }
 
@@ -570,7 +837,7 @@ mod tests {
         // a second model with different geometry
         reg.create("wide", spec(64, 12.0, 9)).unwrap();
         let wide = reg.slot(Some("wide")).unwrap();
-        assert_eq!((wide.handle.n, wide.handle.c), (64, 16));
+        assert_eq!((wide.n(), wide.c()), (64, 16));
         // duplicates and bad names are typed errors — names must stay
         // inside [A-Za-z0-9_-] (stats keys, @-tokens, file names)
         assert!(reg.create("wide", spec(16, 6.0, 1)).is_err());
@@ -664,7 +931,7 @@ mod tests {
         for _ in 0..4 {
             slot.run_batched(true, vec![SpikeVolley::dense(vec![0.0; 16])], None);
         }
-        let learned = slot.handle.weights().unwrap();
+        let learned = slot.weights().unwrap();
 
         // admin Save writes the named checkpoint
         match reg.admin(ModelCmd::Save {
@@ -686,14 +953,14 @@ mod tests {
                 .collect();
             slot.run_batched(true, vec![SpikeVolley::dense(v)], None);
         }
-        assert_ne!(slot.handle.weights().unwrap().data, learned.data);
+        assert_ne!(slot.weights().unwrap().data, learned.data);
         match reg.admin(ModelCmd::Load {
             name: "default".into(),
         }) {
             Outcome::Admin(AdminReply::Ok(_)) => {}
             other => panic!("{other:?}"),
         }
-        assert_eq!(slot.handle.weights().unwrap().data, learned.data);
+        assert_eq!(slot.weights().unwrap().data, learned.data);
 
         // admin List / Create / Unload round out the surface
         match reg.admin(ModelCmd::Create {
@@ -734,7 +1001,7 @@ mod tests {
         };
         let reg2 = ModelRegistry::open(cfg, "default", spec(16, 6.0, 5)).unwrap();
         assert_eq!(
-            reg2.slot(None).unwrap().handle.weights().unwrap().data,
+            reg2.slot(None).unwrap().weights().unwrap().data,
             learned.data
         );
         let _ = std::fs::remove_dir_all(&dir);
@@ -804,7 +1071,7 @@ mod tests {
         let reg =
             ModelRegistry::open(RegistryConfig::default(), "default", spec(16, 6.0, 6)).unwrap();
         let slot = reg.slot(None).unwrap();
-        let before = slot.handle.weights().unwrap();
+        let before = slot.weights().unwrap();
         // wrong geometry: typed checkpoint error, weights untouched
         let bad = Checkpoint {
             n: 8,
@@ -818,7 +1085,111 @@ mod tests {
             Err(Error::Checkpoint(m)) => assert!(m.contains("wants"), "{m}"),
             other => panic!("{other:?}"),
         }
-        assert_eq!(slot.handle.weights().unwrap().data, before.data);
+        assert_eq!(slot.weights().unwrap().data, before.data);
+    }
+
+    /// A sharded slot is a drop-in registry citizen: same routing,
+    /// same admin surface, shard rows in the merged stats, and a
+    /// checkpoint that fans out to a CWKS manifest + per-shard files
+    /// (with the shape gates rejecting cross-format loads as a unit).
+    #[test]
+    fn sharded_slot_serves_and_checkpoints() {
+        if !native_env() {
+            return;
+        }
+        let dir = temp_dir("sharded");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = RegistryConfig {
+            ckpt_dir: Some(dir.clone()),
+            ..RegistryConfig::default()
+        };
+        let reg = ModelRegistry::open(cfg, "default", spec(16, 6.0, 5)).unwrap();
+        reg.create_sharded("quad", spec(16, 6.0, 5), 4).unwrap();
+        let slot = reg.slot(Some("quad")).unwrap();
+        assert_eq!((slot.n(), slot.c(), slot.shard_count()), (16, 8, 4));
+        assert!(slot.handle().is_none(), "no single handle to hand out");
+        assert_eq!(slot.sharded().unwrap().plan.k, 4);
+
+        // serves like any slot, same geometry as the unsharded default
+        match slot.run_batched(false, vec![SpikeVolley::dense(vec![0.0; 16])], None) {
+            Outcome::Results(rs) => assert_eq!(rs[0].times.len(), 8),
+            other => panic!("{other:?}"),
+        }
+        for _ in 0..3 {
+            slot.run_batched(true, vec![SpikeVolley::dense(vec![2.0; 16])], None);
+        }
+
+        // merged stats: model-level rows count each request once;
+        // shard rows surface the per-engine view
+        let s = reg.stats(true, None).unwrap();
+        assert_eq!(s.counter("model.quad.shards"), 4);
+        assert_eq!(s.counter("model.quad.requests"), 4);
+        assert_eq!(s.counter("model.default.shards"), 1);
+        assert_eq!(s.counter("model.quad.shard.0.c"), 2);
+        assert_eq!(s.counter("model.quad.shard.3.c"), 2);
+        // every shard engine saw every request (scatter), but the
+        // plain aggregate only counts the model-level view
+        assert_eq!(s.counter("model.quad.shard.0.requests"), 1, "infer rides the batcher");
+        assert!(s.hist("model.quad.request_latency").is_some());
+        // a per-model stats query keeps full kernel visibility too
+        let qs = reg.stats(true, Some("quad")).unwrap();
+        assert_eq!(qs.counter("shards"), 4);
+        assert_eq!(qs.counter("shard.0.c"), 2);
+        assert!(qs.counter("shard.0.volleys_inferred") >= 1);
+        assert!(qs.hist("shard.0.train_exec").is_some(), "exec hists reachable");
+
+        // checkpoint fan-out: manifest + 4 content-addressed shard
+        // files (`quad.shard<i>.<crc>.ckpt`), resume works
+        reg.save("quad").unwrap();
+        assert!(dir.join("quad.ckpt").exists());
+        let shard_files = |i: usize| -> Vec<std::path::PathBuf> {
+            let prefix = format!("quad.shard{i}.");
+            std::fs::read_dir(&dir)
+                .unwrap()
+                .flatten()
+                .filter(|e| e.file_name().to_string_lossy().starts_with(&prefix))
+                .map(|e| e.path())
+                .collect()
+        };
+        for i in 0..4 {
+            assert_eq!(shard_files(i).len(), 1, "shard {i}");
+        }
+        let learned = slot.weights().unwrap();
+        drop(slot);
+        reg.unload("quad").unwrap();
+        reg.create_sharded("quad", spec(16, 6.0, 5), 4).unwrap();
+        assert_eq!(
+            reg.slot(Some("quad")).unwrap().weights().unwrap().data,
+            learned.data,
+            "sharded load-on-open resumes learned state"
+        );
+
+        // a missing shard file rejects the load as a unit
+        std::fs::remove_file(&shard_files(2)[0]).unwrap();
+        let before = reg.slot(Some("quad")).unwrap().weights().unwrap();
+        match reg.load("quad") {
+            Err(Error::Checkpoint(m)) => assert!(m.contains("quad.shard2"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            reg.slot(Some("quad")).unwrap().weights().unwrap().data,
+            before.data,
+            "old weights keep serving"
+        );
+
+        // shard-count mismatch at boot is a typed error, not a half-load
+        reg.unload("quad").unwrap();
+        match reg.create_sharded("quad", spec(16, 6.0, 5), 2) {
+            Err(Error::Checkpoint(_)) => {}
+            other => panic!("{other:?}"),
+        }
+        // and a CWKS manifest cannot load into a single-engine slot
+        std::fs::copy(dir.join("quad.ckpt"), dir.join("single.ckpt")).unwrap();
+        match reg.create("single", spec(16, 6.0, 5)) {
+            Err(Error::Checkpoint(_)) => {}
+            other => panic!("{other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

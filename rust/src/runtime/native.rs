@@ -85,11 +85,20 @@ struct TrainKernel {
 }
 
 impl Kernel for TrainKernel {
+    /// Three inputs = the classic kernel (gates derived from the local
+    /// WTA); a fourth input is a `[b, c]` gate tensor supplied by the
+    /// sharded execution layer, whose manifest entries declare it (a
+    /// shard cannot see the global winner, so its caller must).
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let (weights, spikes, theta) = (&inputs[0], &inputs[1], inputs[2].data[0]);
         let times = rnl_forward_auto(spikes, weights, theta, self.t_max, self.k_clip);
         let mask = wta_mask(&times, self.t_max);
-        let new_w = stdp_update(weights, spikes, &times, &mask, self.t_max, &self.params);
+        let new_w = match inputs.get(3) {
+            Some(gates) => {
+                stdp_update_gated(weights, spikes, &times, gates, self.t_max, &self.params)
+            }
+            None => stdp_update(weights, spikes, &times, &mask, self.t_max, &self.params),
+        };
         Ok(vec![new_w, times, mask])
     }
 }
@@ -341,11 +350,49 @@ pub fn wta_mask(times: &Tensor, t_max: usize) -> Tensor {
 /// gated to the WTA winner (or to every column when the whole row stayed
 /// silent — otherwise a dead network could never become responsive),
 /// averaged over the batch, then clipped into `[0, w_max]`.
+///
+/// Implemented as the local-gate derivation (`clamp(mask + row_silent)`)
+/// in front of [`stdp_update_gated`], which does the actual
+/// accumulation — the sharded execution layer ([`crate::shard`]) calls
+/// the gated entry point directly with gates computed from the *global*
+/// (cross-shard) winner, and sharing the loop is what makes the two
+/// paths bit-identical.
 pub fn stdp_update(
     weights: &Tensor,
     in_times: &Tensor,
     out_times: &Tensor,
     winner_mask: &Tensor,
+    t_max: usize,
+    p: &StdpParams,
+) -> Tensor {
+    let (c, _n) = (weights.shape[0], weights.shape[1]);
+    let b = in_times.shape[0];
+    let t_inf = t_max as f32;
+    let mut gates = Tensor::zeros(vec![b, c]);
+    for bi in 0..b {
+        let y_times = &out_times.data[bi * c..(bi + 1) * c];
+        let row_silent = y_times.iter().all(|&t| t >= t_inf);
+        for ci in 0..c {
+            gates.data[bi * c + ci] = (winner_mask.data[bi * c + ci]
+                + if row_silent { 1.0 } else { 0.0 })
+            .clamp(0.0, 1.0);
+        }
+    }
+    stdp_update_gated(weights, in_times, out_times, &gates, t_max, p)
+}
+
+/// The STDP accumulation with externally supplied per-`(row, column)`
+/// gates in `[0, 1]` — the primitive a column shard needs: its local
+/// winner mask is meaningless (the real winner may live in another
+/// shard), so the scatter/gather layer computes the global gate —
+/// `1` for the global WTA winner, `1` for every column of a globally
+/// silent row, `0` otherwise — and hands it in. With gates derived
+/// locally ([`stdp_update`]) this is exactly the historical update.
+pub fn stdp_update_gated(
+    weights: &Tensor,
+    in_times: &Tensor,
+    out_times: &Tensor,
+    gates: &Tensor,
     t_max: usize,
     p: &StdpParams,
 ) -> Tensor {
@@ -356,10 +403,8 @@ pub fn stdp_update(
     for bi in 0..b {
         let x_times = &in_times.data[bi * n..(bi + 1) * n];
         let y_times = &out_times.data[bi * c..(bi + 1) * c];
-        let row_silent = y_times.iter().all(|&t| t >= t_inf);
         for ci in 0..c {
-            let gate = (winner_mask.data[bi * c + ci] + if row_silent { 1.0 } else { 0.0 })
-                .clamp(0.0, 1.0);
+            let gate = gates.data[bi * c + ci];
             if gate <= 0.0 {
                 continue;
             }
@@ -586,6 +631,67 @@ mod tests {
                     assert!((a - b).abs() < 1e-5, "case {case} w[{ci}][{i}]: {a} vs {b}");
                 }
             }
+        }
+    }
+
+    /// The shard contract at the kernel level: splitting the weight
+    /// matrix into column slices and applying [`stdp_update_gated`] per
+    /// slice — with gates derived from the *global* winner and global
+    /// row silence — reproduces the full [`stdp_update`] bit for bit.
+    #[test]
+    fn gated_stdp_on_column_slices_matches_full_update() {
+        let mut rng = Xoshiro256::new(91);
+        for case in 0..50 {
+            let (b, c, n) = (5, 7, 12);
+            let spikes: Vec<f32> = (0..b * n)
+                .map(|_| {
+                    if rng.gen_bool(0.35) {
+                        rng.gen_range(8) as f32
+                    } else {
+                        TM as f32
+                    }
+                })
+                .collect();
+            let weights: Vec<f32> = (0..c * n).map(|_| (rng.gen_f64() * 6.0) as f32).collect();
+            let theta = 2.0 + rng.gen_range(8) as f32;
+            let st = Tensor::new(vec![b, n], spikes).unwrap();
+            let wt = Tensor::new(vec![c, n], weights).unwrap();
+            let times = rnl_forward_auto(&st, &wt, theta, TM, Some(2.0));
+            let mask = wta_mask(&times, TM);
+            let full = stdp_update(&wt, &st, &times, &mask, TM, &StdpParams::default());
+
+            // split columns at an uneven boundary and rebuild per slice
+            let split = 1 + (case as usize % (c - 1));
+            let mut rebuilt = vec![0f32; c * n];
+            for (start, end) in [(0, split), (split, c)] {
+                let cl = end - start;
+                let w_slice =
+                    Tensor::new(vec![cl, n], wt.data[start * n..end * n].to_vec()).unwrap();
+                let mut t_slice = Tensor::zeros(vec![b, cl]);
+                let mut gates = Tensor::zeros(vec![b, cl]);
+                for bi in 0..b {
+                    let row = &times.data[bi * c..(bi + 1) * c];
+                    let row_silent = row.iter().all(|&t| t >= TM as f32);
+                    for (lj, cj) in (start..end).enumerate() {
+                        t_slice.data[bi * cl + lj] = row[cj];
+                        let winner = mask.data[bi * c + cj] > 0.5;
+                        gates.data[bi * cl + lj] =
+                            if winner || row_silent { 1.0 } else { 0.0 };
+                    }
+                }
+                let part = stdp_update_gated(
+                    &w_slice,
+                    &st,
+                    &t_slice,
+                    &gates,
+                    TM,
+                    &StdpParams::default(),
+                );
+                rebuilt[start * n..end * n].copy_from_slice(&part.data);
+            }
+            let full_bits: Vec<u32> = full.data.iter().map(|x| x.to_bits()).collect();
+            let rebuilt_bits: Vec<u32> = rebuilt.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(full_bits, rebuilt_bits, "case {case} split {split}");
         }
     }
 

@@ -53,9 +53,10 @@ use std::time::{Duration, Instant};
 /// into [`ServerCore::handle`], which routes into the model registry.
 pub struct ServerCore {
     registry: Arc<ModelRegistry>,
-    /// The default model's handle, cached for the ACK geometry and the
-    /// in-process compat accessor ([`ServerCore::service`]).
-    service: TnnHandle,
+    /// The default model's `(n, c, t_max)`, cached for the ACK — a
+    /// geometry tuple rather than a handle, because a column-sharded
+    /// default model has no single full-geometry engine to hand out.
+    default_geometry: (usize, usize, usize),
 }
 
 impl ServerCore {
@@ -78,18 +79,18 @@ impl ServerCore {
 
     /// The multi-model constructor: dispatch into an existing registry.
     pub fn with_registry(registry: Arc<ModelRegistry>) -> ServerCore {
-        let service = registry
-            .slot(None)
-            .expect("registry has a default model")
-            .handle
-            .clone();
-        ServerCore { registry, service }
+        let slot = registry.slot(None).expect("registry has a default model");
+        let default_geometry = (slot.n(), slot.c(), slot.t_max());
+        drop(slot);
+        ServerCore {
+            registry,
+            default_geometry,
+        }
     }
 
-    /// The default model's handle (compat surface for in-process
-    /// callers: benches, tests, the ACK geometry).
-    pub fn service(&self) -> &TnnHandle {
-        &self.service
+    /// The default model's `(n, c, t_max)` (the ACK geometry).
+    pub fn default_geometry(&self) -> (usize, usize, usize) {
+        self.default_geometry
     }
 
     /// The registry this core dispatches into.
@@ -315,15 +316,15 @@ fn serve_framed(
         )?;
         return Ok(());
     };
-    let svc = core.service();
+    let (n, c, t_max) = core.default_geometry();
     frame::write_frame(
         &mut out,
         frame::FrameType::Ack,
         &frame::encode_ack(&frame::Ack {
             version,
-            n: svc.n as u32,
-            c: svc.c as u32,
-            t_max: svc.t_max as u32,
+            n: n as u32,
+            c: c as u32,
+            t_max: t_max as u32,
         }),
     )?;
     out.flush()?;
@@ -431,11 +432,11 @@ fn serve_text(
 fn text_request(core: &ServerCore, line: &str) -> Result<(Request, usize)> {
     let (model, rest) = text::split_model(line)?;
     let slot = core.registry().slot(model)?;
-    let mut req = text::parse_line(rest, slot.handle.n, slot.handle.t_max)?;
+    let mut req = text::parse_line(rest, slot.n(), slot.t_max())?;
     if let Some(m) = model {
         req.opts.model = Some(m.to_string());
     }
-    Ok((req, slot.handle.t_max))
+    Ok((req, slot.t_max()))
 }
 
 /// Pipelining window shared by both clients: at most this many requests

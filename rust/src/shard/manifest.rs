@@ -1,0 +1,394 @@
+//! The `CWKS` shard manifest: one file tying a sharded model's K
+//! per-shard `CWKP` weight checkpoints into a single atomic unit.
+//!
+//! A sharded model cannot persist as one `CWKP` file without
+//! serializing every shard through one writer, and it cannot persist as
+//! K naked files without risking a load that mixes save generations.
+//! The manifest solves both: each shard engine writes its own `CWKP`
+//! slice, and the manifest — written **last** — records the partition
+//! plus a CRC-32 of every shard file's complete bytes, so the loader
+//! can prove all K files belong to the same save before touching a
+//! live engine (DESIGN.md §2.4):
+//!
+//! ```text
+//! manifest := magic u32 ("CWKS") | schema u16
+//!             | n u32 | c u32 | t_max u32
+//!             | theta f32 | seed u64
+//!             | k u32
+//!             | k × (start u32 | end u32 | file_crc u32)
+//!             | crc32 u32                      (over all prior bytes)
+//! ```
+//!
+//! Conventions match [`crate::registry::checkpoint`]: big-endian
+//! integers, IEEE-754 bit-pattern floats, zlib-polynomial CRC-32, and
+//! an atomic temp-file + rename save. The python wire twin
+//! (`test_shard_manifest_golden_bytes` in
+//! `python/tests/test_proto_frames.py`) shares a golden byte vector
+//! with `rust/tests/shard.rs`. Shard files are addressed by
+//! **position**, not by stored paths — [`shard_path`] derives
+//! `<name>.shard<i>.<crc>.ckpt` from the manifest's own path and its
+//! recorded per-file CRCs, so a manifest
+//! can never point outside its directory.
+
+use crate::error::{Error, Result};
+use crate::registry::checkpoint::{crc32, write_atomic};
+use std::path::{Path, PathBuf};
+
+/// Shard manifest magic: `b"CWKS"`.
+pub const SHARD_MAGIC: [u8; 4] = *b"CWKS";
+/// The manifest schema this build reads and writes.
+pub const SHARD_SCHEMA: u16 = 1;
+/// Hard cap on the shard count — a hostile header must not become an
+/// allocation (no real column config approaches this).
+pub const MAX_SHARDS: u32 = 1 << 12;
+
+/// Fixed header size (magic..k inclusive) before the entry table.
+const HEADER: usize = 34;
+/// Bytes per shard entry.
+const ENTRY: usize = 12;
+
+/// One shard's row in the manifest: the columns it covers and the
+/// CRC-32 of its `CWKP` file's complete bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    pub start: u32,
+    pub end: u32,
+    pub file_crc: u32,
+}
+
+/// The parsed `CWKS` manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    /// column input width
+    pub n: u32,
+    /// total output columns across all shards
+    pub c: u32,
+    pub t_max: u32,
+    /// threshold the weights were learned under (provenance)
+    pub theta: f32,
+    /// weight-init seed of the originating instance (provenance)
+    pub seed: u64,
+    /// per-shard column ranges + file CRCs, in shard order
+    pub shards: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    /// Serialize to the on-disk byte layout.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        validate_partition(self.c, &self.shards)?;
+        let mut p = Vec::with_capacity(HEADER + self.shards.len() * ENTRY + 4);
+        p.extend_from_slice(&SHARD_MAGIC);
+        p.extend_from_slice(&SHARD_SCHEMA.to_be_bytes());
+        p.extend_from_slice(&self.n.to_be_bytes());
+        p.extend_from_slice(&self.c.to_be_bytes());
+        p.extend_from_slice(&self.t_max.to_be_bytes());
+        p.extend_from_slice(&self.theta.to_bits().to_be_bytes());
+        p.extend_from_slice(&self.seed.to_be_bytes());
+        p.extend_from_slice(&(self.shards.len() as u32).to_be_bytes());
+        for s in &self.shards {
+            p.extend_from_slice(&s.start.to_be_bytes());
+            p.extend_from_slice(&s.end.to_be_bytes());
+            p.extend_from_slice(&s.file_crc.to_be_bytes());
+        }
+        let crc = crc32(&p);
+        p.extend_from_slice(&crc.to_be_bytes());
+        Ok(p)
+    }
+
+    /// Parse and verify. Every malformed input — short file, bad
+    /// magic/schema, CRC failure, shard count out of bounds, a table
+    /// that is not a contiguous ascending partition of `0..c` — is a
+    /// typed [`Error::Checkpoint`].
+    pub fn from_bytes(b: &[u8]) -> Result<ShardManifest> {
+        if b.len() < HEADER + 4 {
+            return Err(Error::Checkpoint(format!(
+                "truncated shard manifest: {} bytes",
+                b.len()
+            )));
+        }
+        let (body, tail) = b.split_at(b.len() - 4);
+        let stored = u32::from_be_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        let actual = crc32(body);
+        if stored != actual {
+            return Err(Error::Checkpoint(format!(
+                "crc mismatch: file says {stored:#010x}, bytes hash to {actual:#010x}"
+            )));
+        }
+        if body[..4] != SHARD_MAGIC {
+            return Err(Error::Checkpoint(format!(
+                "bad magic {:02x?} (want {SHARD_MAGIC:02x?})",
+                &body[..4]
+            )));
+        }
+        let schema = u16::from_be_bytes([body[4], body[5]]);
+        if schema != SHARD_SCHEMA {
+            return Err(Error::Checkpoint(format!(
+                "unknown shard-manifest schema {schema} (this build reads {SHARD_SCHEMA})"
+            )));
+        }
+        let u32_at = |off: usize| {
+            u32::from_be_bytes([body[off], body[off + 1], body[off + 2], body[off + 3]])
+        };
+        let n = u32_at(6);
+        let c = u32_at(10);
+        let t_max = u32_at(14);
+        let theta = f32::from_bits(u32_at(18));
+        let seed = u64::from_be_bytes([
+            body[22], body[23], body[24], body[25], body[26], body[27], body[28], body[29],
+        ]);
+        let k = u32_at(30);
+        if k == 0 || k > MAX_SHARDS {
+            return Err(Error::Checkpoint(format!(
+                "shard count {k} outside 1..={MAX_SHARDS}"
+            )));
+        }
+        if body.len() != HEADER + (k as usize) * ENTRY {
+            return Err(Error::Checkpoint(format!(
+                "shard table is {} bytes, header promises {}",
+                body.len() - HEADER,
+                (k as usize) * ENTRY
+            )));
+        }
+        let shards: Vec<ShardEntry> = (0..k as usize)
+            .map(|i| {
+                let off = HEADER + i * ENTRY;
+                ShardEntry {
+                    start: u32_at(off),
+                    end: u32_at(off + 4),
+                    file_crc: u32_at(off + 8),
+                }
+            })
+            .collect();
+        validate_partition(c, &shards)?;
+        Ok(ShardManifest {
+            n,
+            c,
+            t_max,
+            theta,
+            seed,
+            shards,
+        })
+    }
+
+    /// Write atomically (temp file + `sync_all` + rename), like
+    /// [`crate::registry::checkpoint::Checkpoint::save`].
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_bytes()?)
+    }
+
+    /// Read and verify a shard-manifest file.
+    pub fn read(path: &Path) -> Result<ShardManifest> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Checkpoint(format!("read {}: {e}", path.display())))?;
+        ShardManifest::from_bytes(&bytes)
+            .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))
+    }
+}
+
+/// The table must be a contiguous ascending partition of `0..c` —
+/// anything else means mixed plans or forged bytes.
+fn validate_partition(c: u32, shards: &[ShardEntry]) -> Result<()> {
+    let mut expect = 0u32;
+    for (i, s) in shards.iter().enumerate() {
+        if s.start != expect || s.end <= s.start {
+            return Err(Error::Checkpoint(format!(
+                "shard {i} covers {}..{}, expected a contiguous range from {expect}",
+                s.start, s.end
+            )));
+        }
+        expect = s.end;
+    }
+    if expect != c {
+        return Err(Error::Checkpoint(format!(
+            "shard table covers 0..{expect}, manifest promises c={c}"
+        )));
+    }
+    Ok(())
+}
+
+/// Shard `i`'s `CWKP` file for the manifest at `path`:
+/// `<dir>/<stem>.shard<i>.<crc:08x>.ckpt` — derived from the
+/// manifest's own path and the entry's recorded file CRC, never
+/// stored, so a manifest cannot name files outside its own directory.
+///
+/// The CRC in the **name** is what makes a sharded save crash-safe:
+/// a new generation's shard files land under fresh names while the
+/// old generation's files stay untouched, and the manifest rename is
+/// the single atomic commit point — a crash mid-save leaves the old
+/// manifest pointing at the complete old set (plus harmless orphans
+/// that [`sweep_stale_shards`] collects on the next save).
+pub fn shard_path(path: &Path, i: usize, file_crc: u32) -> PathBuf {
+    let stem = manifest_stem(path);
+    let name = format!("{stem}.shard{i}.{file_crc:08x}.ckpt");
+    match path.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => dir.join(name),
+        _ => PathBuf::from(name),
+    }
+}
+
+fn manifest_stem(path: &Path) -> String {
+    path.file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "model".into())
+}
+
+/// Best-effort removal of shard files from superseded save generations:
+/// everything matching `<stem>.shard<i>.<crc>.ckpt` that the committed
+/// manifest does not reference. Failures are ignored — orphans are
+/// harmless (never referenced) and the next save sweeps again.
+pub fn sweep_stale_shards(path: &Path, keep: &ShardManifest) {
+    let stem = manifest_stem(path);
+    let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) else {
+        return;
+    };
+    let live: Vec<String> = keep
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("{stem}.shard{i}.{:08x}.ckpt", s.file_crc))
+        .collect();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let prefix = format!("{stem}.shard");
+    for e in entries.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if name.starts_with(&prefix)
+            && name.ends_with(".ckpt")
+            && !live.iter().any(|l| *l == name)
+        {
+            let _ = std::fs::remove_file(e.path());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ShardManifest {
+        ShardManifest {
+            n: 16,
+            c: 8,
+            t_max: 16,
+            theta: 6.0,
+            seed: 11,
+            shards: vec![
+                ShardEntry { start: 0, end: 3, file_crc: 0x1111_1111 },
+                ShardEntry { start: 3, end: 6, file_crc: 0x2222_2222 },
+                ShardEntry { start: 6, end: 8, file_crc: 0x3333_3333 },
+            ],
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip_is_identity() {
+        let m = sample();
+        let bytes = m.to_bytes().unwrap();
+        assert_eq!(ShardManifest::from_bytes(&bytes).unwrap(), m);
+        assert_eq!(&bytes[..4], b"CWKS");
+        assert_eq!(bytes.len(), HEADER + 3 * ENTRY + 4);
+    }
+
+    #[test]
+    fn every_truncation_and_any_bit_flip_rejected() {
+        let bytes = sample().to_bytes().unwrap();
+        for cut in 0..bytes.len() {
+            assert!(ShardManifest::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        for i in 0..bytes.len() {
+            let mut flipped = bytes.clone();
+            flipped[i] ^= 0x01;
+            assert!(
+                ShardManifest::from_bytes(&flipped).is_err(),
+                "flip at byte {i} went undetected"
+            );
+        }
+        let mut noisy = bytes.clone();
+        noisy.push(0);
+        assert!(ShardManifest::from_bytes(&noisy).is_err());
+    }
+
+    #[test]
+    fn partition_must_tile_the_columns() {
+        let mut m = sample();
+        m.shards[1].start = 4; // gap after shard 0
+        assert!(m.to_bytes().is_err());
+        let mut m = sample();
+        m.shards[2].end = 7; // does not reach c
+        assert!(m.to_bytes().is_err());
+        let mut m = sample();
+        m.shards[0].end = 0; // empty shard
+        assert!(m.to_bytes().is_err());
+        let mut m = sample();
+        m.shards.clear(); // covers nothing
+        assert!(m.to_bytes().is_err());
+
+        // a forged shard count is rejected before any allocation
+        // (crc re-forged so the count check is what fires)
+        let mut bytes = sample().to_bytes().unwrap();
+        bytes[30..34].copy_from_slice(&(MAX_SHARDS + 1).to_be_bytes());
+        let len = bytes.len();
+        let crc = crc32(&bytes[..len - 4]);
+        bytes[len - 4..].copy_from_slice(&crc.to_be_bytes());
+        assert!(ShardManifest::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn save_read_and_shard_paths() {
+        let dir = std::env::temp_dir().join(format!(
+            "catwalk-cwks-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = dir.join("m.ckpt");
+        let m = sample();
+        m.save(&path).unwrap();
+        assert_eq!(ShardManifest::read(&path).unwrap(), m);
+        // shard file names are content-addressed by the recorded CRC
+        assert_eq!(
+            shard_path(&path, 0, 0x1111_1111),
+            dir.join("m.shard0.11111111.ckpt")
+        );
+        assert_eq!(
+            shard_path(&path, 2, 0xAB),
+            dir.join("m.shard2.000000ab.ckpt")
+        );
+        assert_eq!(
+            shard_path(Path::new("bare.ckpt"), 1, 1),
+            PathBuf::from("bare.shard1.00000001.ckpt")
+        );
+        let err = ShardManifest::read(&dir.join("absent.ckpt")).unwrap_err();
+        assert!(err.to_string().contains("absent.ckpt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The stale-shard sweep removes superseded generations but never
+    /// the files the committed manifest references, and never another
+    /// model's files.
+    #[test]
+    fn sweep_keeps_live_generation_only() {
+        let dir = std::env::temp_dir().join(format!(
+            "catwalk-cwks-sweep-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        let m = sample();
+        // live generation + an orphan from an older save + a sibling
+        // model whose name shares the prefix characters
+        for (i, s) in m.shards.iter().enumerate() {
+            std::fs::write(shard_path(&path, i, s.file_crc), b"live").unwrap();
+        }
+        std::fs::write(dir.join("m.shard0.deadbeef.ckpt"), b"stale").unwrap();
+        std::fs::write(dir.join("m2.shard0.deadbeef.ckpt"), b"other model").unwrap();
+        sweep_stale_shards(&path, &m);
+        for (i, s) in m.shards.iter().enumerate() {
+            assert!(shard_path(&path, i, s.file_crc).exists(), "live shard {i}");
+        }
+        assert!(!dir.join("m.shard0.deadbeef.ckpt").exists(), "stale swept");
+        assert!(dir.join("m2.shard0.deadbeef.ckpt").exists(), "other model kept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

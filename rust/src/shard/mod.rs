@@ -1,0 +1,703 @@
+//! Sharded-model execution: scatter/gather column sharding of one TNN
+//! model across K parallel engines.
+//!
+//! The paper's column is an array of independent RNL neurons — each
+//! output column owns a private weight row and sees the full input
+//! volley; the only cross-column coupling is the final WTA stage. The
+//! TNN microarchitecture framework line scales columns by replicating
+//! independent neuron lanes behind one shared input bus, and this module
+//! is that shape in the serving stack (DESIGN.md §2.4): a model's `c`
+//! output columns partition into K contiguous shards, each served by
+//! its own engine thread, with one thin scatter/gather layer re-running
+//! the global winner selection over the concatenated per-shard times:
+//!
+//! ```text
+//!              ┌ shard 0: cols 0..6   TnnHandle + DynamicBatcher ┐
+//!  volley ──►  ├ shard 1: cols 6..11  TnnHandle + DynamicBatcher ┤ ──► gather:
+//!  (scatter    └ shard 2: cols 11..16 TnnHandle + DynamicBatcher ┘     concat times,
+//!   to all)                                                            global argmin
+//! ```
+//!
+//! **Bit-identity contract.** A [`ShardedModel`] produces results
+//! byte-for-byte equal to the unsharded model it partitions
+//! (`rust/tests/shard.rs` gates this over TCP on both codecs):
+//!
+//! * *Weights*: every shard initializes from the full `c × n` RNG walk
+//!   and keeps its slice ([`crate::coordinator::TnnHandle::open_columns`]),
+//!   so shard row `r` equals unsharded row `range.start + r`.
+//! * *Forward*: first-crossing times are per-column independent; the
+//!   gather step concatenates them in shard order (contiguous ranges
+//!   preserve column indices) and re-runs the WTA argmin — same
+//!   strictly-less scan, same lowest-index tie-break.
+//! * *Learn*: the STDP gate is **global** — `1` for the global winner,
+//!   `1` everywhere on a globally silent row, `0` otherwise — so
+//!   learning runs a two-phase protocol per chunk: phase 1 scatters a
+//!   forward pass and gathers the global winners; phase 2 scatters a
+//!   gated update ([`crate::runtime::native::stdp_update_gated`]) with
+//!   each shard's slice of those gates. Each column's weights are
+//!   touched only by its own shard, and the accumulation arithmetic is
+//!   the unsharded kernel's loop restricted to the shard's rows.
+//!
+//! Concurrency: a model-level read/write lock stands in for the
+//! atomicity one engine thread gave the unsharded model. Infers,
+//! weight snapshots and checkpoint saves hold it **shared** — they
+//! interleave freely (concurrent clients still coalesce into full
+//! backend batches in each shard's [`DynamicBatcher`]) but always
+//! observe one consistent weight generation across all K shards.
+//! Learns and weight swaps hold it **exclusive**: the two phases of
+//! one learn must hit every shard in the same order, no infer may mix
+//! pre- and post-update shards into one reply, and no autosave may
+//! persist half a generation. A phase-2 failure on some shard (only
+//! possible when an engine is shut down mid-request) errors the whole
+//! chunk; shards that already applied it may then disagree until the
+//! next checkpoint load, exactly like a torn unsharded process death.
+//!
+//! Checkpoints: a sharded model persists as K `CWKP` per-shard weight
+//! files tied together by one `CWKS` shard-manifest ([`manifest`]);
+//! partial, missing or mismatched shard files are rejected as a unit
+//! and the old weights keep serving.
+
+pub mod manifest;
+
+use crate::coordinator::{BatcherConfig, DynamicBatcher, EngineCall, Metrics, TnnHandle};
+use crate::error::{Error, Result};
+use crate::registry::checkpoint::{crc32, write_atomic, Checkpoint};
+use crate::runtime::{BackendKind, Manifest, Tensor};
+use crate::volley::{SpikeVolley, VolleyResult};
+use manifest::{shard_path, ShardEntry, ShardManifest};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+/// Deterministic partition of `c` output columns into `k` contiguous
+/// shards: the first `c % k` shards take `c / k + 1` columns, the rest
+/// `c / k` — so any `(c, k)` pair names exactly one layout, and a
+/// checkpoint written under one plan can be validated against another.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// total output columns
+    pub c: usize,
+    /// shard count (`1..=c`)
+    pub k: usize,
+}
+
+impl ShardPlan {
+    pub fn new(c: usize, k: usize) -> Result<ShardPlan> {
+        if k == 0 || k > c {
+            return Err(Error::Coordinator(format!(
+                "shard count {k} must be in 1..={c} (one column per shard at most)"
+            )));
+        }
+        Ok(ShardPlan { c, k })
+    }
+
+    /// Columns shard `i` owns.
+    pub fn range(&self, i: usize) -> Range<usize> {
+        debug_assert!(i < self.k);
+        let (base, rem) = (self.c / self.k, self.c % self.k);
+        let start = i * base + i.min(rem);
+        start..start + base + usize::from(i < rem)
+    }
+
+    /// Every shard's range, in shard order (their concatenation is
+    /// exactly `0..c`).
+    pub fn ranges(&self) -> Vec<Range<usize>> {
+        (0..self.k).map(|i| self.range(i)).collect()
+    }
+}
+
+/// One shard's serving machinery: the column-range engine plus its
+/// private infer batcher (the same pair a registry slot owns, minus the
+/// learn batcher — sharded learning is the two-phase protocol below,
+/// not a per-shard queue).
+struct ShardEngine {
+    handle: TnnHandle,
+    infer: DynamicBatcher,
+}
+
+/// K column-shard engines behind one model-shaped face: same
+/// `infer`/`learn`/`weights`/`set_weights` surface as a single
+/// [`TnnHandle`] slot, same results bit for bit.
+pub struct ShardedModel {
+    pub plan: ShardPlan,
+    shards: Vec<ShardEngine>,
+    /// column input width
+    pub n: usize,
+    /// total output columns (= `plan.c`)
+    pub c: usize,
+    /// backend batch size
+    pub b: usize,
+    pub t_max: usize,
+    pub theta: f32,
+    pub seed: u64,
+    /// executing backend of the shard engines
+    pub backend: &'static str,
+    pub artifacts_dir: PathBuf,
+    /// Model-level counters/hists (requests, volleys, latency) — each
+    /// request is counted **once** here; the per-shard engine metrics
+    /// (which see every request K times) surface separately as
+    /// `model.<name>.shard.<i>.*` stats rows.
+    pub metrics: Arc<Metrics>,
+    /// Cross-shard consistency lock, standing in for the atomicity one
+    /// engine thread gave the unsharded model: **shared** holders
+    /// (infers, weight snapshots, checkpoint saves) may interleave
+    /// freely — they only read a stable weight generation — while
+    /// **exclusive** holders (learns, weight swaps) mutate it. Without
+    /// it a concurrent infer could mix pre- and post-update shards into
+    /// a reply no consistent weight matrix could produce, a learn's
+    /// two phases could hit shards in different orders, and an autosave
+    /// could persist a torn, mixed-generation checkpoint whose fresh
+    /// CRCs defeat the loader's own mixed-generation gate.
+    state_lock: RwLock<()>,
+    /// Set by [`ShardedModel::drain`]: the model is unloaded; learns
+    /// (which bypass the per-shard batchers) answer with the same
+    /// typed error a closed batcher gives.
+    stopped: AtomicBool,
+    /// Volleys per learn execution — mirrors the batcher's `max_batch`
+    /// so a serial client's learn chunking matches the unsharded path.
+    learn_chunk: usize,
+}
+
+/// Owned per-shard copies of one scatter payload: K−1 clones plus the
+/// original moved into the last slot — both scatter sites (infer and
+/// learn phase 2) share this so they cannot drift apart.
+fn scatter_payloads<T: Clone>(payload: Vec<T>, k: usize) -> Vec<Vec<T>> {
+    let mut out = Vec::with_capacity(k);
+    for _ in 1..k {
+        out.push(payload.clone());
+    }
+    out.push(payload);
+    out
+}
+
+impl ShardedModel {
+    /// Open K column-shard engines over the manifest geometry for `n`.
+    /// Every shard shares `(n, theta, seed)` — the init RNG walk is the
+    /// full matrix in each engine, sliced to the shard's rows.
+    pub fn open(
+        dir: impl AsRef<Path>,
+        n: usize,
+        theta: f32,
+        seed: u64,
+        k: usize,
+        batcher: BatcherConfig,
+    ) -> Result<ShardedModel> {
+        let dir = dir.as_ref().to_path_buf();
+        let kind = BackendKind::from_env()?;
+        let m = Manifest::load_or_default(&dir, kind.requires_artifacts())?;
+        let entry = m
+            .entries
+            .iter()
+            .find(|e| e.kind == "forward" && e.n == n)
+            .ok_or_else(|| Error::Runtime(format!("no forward artifact for n={n}")))?;
+        let plan = ShardPlan::new(entry.c, k)?;
+        let mut shards = Vec::with_capacity(k);
+        for range in plan.ranges() {
+            let handle = TnnHandle::open_columns(&dir, n, theta, seed, range)?;
+            let infer = DynamicBatcher::start(handle.clone(), batcher);
+            shards.push(ShardEngine { handle, infer });
+        }
+        let (b, t_max, backend) = {
+            let first = &shards[0].handle;
+            (first.b, first.t_max, first.backend)
+        };
+        Ok(ShardedModel {
+            n,
+            c: plan.c,
+            b,
+            t_max,
+            theta,
+            seed,
+            backend,
+            artifacts_dir: dir,
+            plan,
+            metrics: Arc::new(Metrics::new()),
+            state_lock: RwLock::new(()),
+            stopped: AtomicBool::new(false),
+            learn_chunk: batcher.max_batch,
+            shards,
+        })
+    }
+
+    /// Shard `i`'s engine handle (per-shard metrics, weights for
+    /// checkpointing, tests).
+    pub fn shard_handle(&self, i: usize) -> &TnnHandle {
+        &self.shards[i].handle
+    }
+
+    /// Scatter a volley batch to every shard's infer batcher, gather
+    /// the per-shard times, merge with a global winner re-selection.
+    /// One `Result` per volley in request order, like the batcher.
+    /// Holds the state lock **shared** for the whole scatter/gather, so
+    /// every reply is computed against one consistent weight
+    /// generation (concurrent infers still interleave and coalesce).
+    pub fn infer(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        deadline: Option<Instant>,
+    ) -> Vec<Result<VolleyResult>> {
+        if volleys.is_empty() {
+            return Vec::new();
+        }
+        let t0 = Instant::now();
+        let _shared = self.state_lock.read().unwrap();
+        if self.stopped.load(Ordering::Acquire) {
+            return self.all_stopped(volleys.len());
+        }
+        let sparse = volleys.iter().filter(|v| v.is_sparse()).count() as u64;
+        self.count_request(sparse, volleys.len() as u64 - sparse);
+        let k = self.shards.len();
+        // scatter: enqueue every shard before blocking on any
+        let pending: Vec<_> = self
+            .shards
+            .iter()
+            .zip(scatter_payloads(volleys, k))
+            .map(|(s, v)| s.infer.submit_many_deferred(v, deadline))
+            .collect();
+        let parts: Vec<Vec<Result<VolleyResult>>> =
+            pending.into_iter().map(|p| p.wait()).collect();
+        let merged = self.gather(parts);
+        let ok = merged.iter().filter(|r| r.is_ok()).count() as u64;
+        self.metrics.incr("volleys_inferred", ok);
+        // expiries are detected at each shard batcher's drain (which
+        // counts them on the *shard* handle's metrics, K-fold); fold
+        // them into the model-level counter once, matched structurally
+        // on the typed variant, so `requests_expired` stays consistent
+        // between single and sharded slots
+        let expired = merged
+            .iter()
+            .filter(|r| matches!(r, Err(Error::DeadlineExpired)))
+            .count() as u64;
+        if expired > 0 {
+            self.metrics.incr("requests_expired", expired);
+        }
+        for r in &merged {
+            if r.is_ok() {
+                self.metrics.record("request_latency", t0.elapsed());
+            }
+        }
+        merged
+    }
+
+    /// The per-volley reply a drained model gives — the same typed
+    /// error a closed batcher produces, so unload semantics match the
+    /// single-engine slot.
+    fn all_stopped(&self, nvol: usize) -> Vec<Result<VolleyResult>> {
+        (0..nvol)
+            .map(|_| Err(Error::Coordinator("sharded model is shut down".into())))
+            .collect()
+    }
+
+    /// The two-phase sharded learning step; one `Result` per volley.
+    /// Chunked at the batcher's `max_batch` (the grouping a serial
+    /// client's learns get from the unsharded batcher); each chunk is
+    /// phase 1 (scatter forward, gather global winners) then phase 2
+    /// (scatter gated updates). The exclusive lock is taken **per
+    /// chunk**, not across the whole request — infers interleave
+    /// between chunks exactly as the unsharded batchers interleave
+    /// between learn batches, observing only whole intermediate weight
+    /// generations.
+    pub fn learn(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        deadline: Option<Instant>,
+    ) -> Vec<Result<VolleyResult>> {
+        if volleys.is_empty() {
+            return Vec::new();
+        }
+        let t0 = Instant::now();
+        // cheap pre-check; the authoritative one runs under the lock
+        if self.stopped.load(Ordering::Acquire) {
+            return self.all_stopped(volleys.len());
+        }
+        // count at submit time like the batcher does, so
+        // `requests >= requests_expired` holds on every path
+        let sparse = volleys.iter().filter(|v| v.is_sparse()).count() as u64;
+        self.count_request(sparse, volleys.len() as u64 - sparse);
+        let out = self.learn_chunks(volleys, deadline);
+        // single accounting exit: chunks completed before an expiry or
+        // a drain still count as learned work
+        let ok = out.iter().filter(|r| r.is_ok()).count() as u64;
+        self.metrics.incr("volleys_learned", ok);
+        for r in &out {
+            if r.is_ok() {
+                self.metrics.record("request_latency", t0.elapsed());
+            }
+        }
+        out
+    }
+
+    /// The chunk loop behind [`ShardedModel::learn`]; early returns
+    /// here still flow through `learn`'s accounting.
+    fn learn_chunks(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        deadline: Option<Instant>,
+    ) -> Vec<Result<VolleyResult>> {
+        let mut out: Vec<Result<VolleyResult>> = Vec::with_capacity(volleys.len());
+        let mut rest = volleys;
+        while !rest.is_empty() {
+            let tail = rest.split_off(self.learn_chunk.min(rest.len()));
+            let chunk = std::mem::replace(&mut rest, tail);
+            let chunk_len = chunk.len();
+            // a deadline bounds queue wait exactly like the batcher's
+            // drain-time check: expired chunks are dropped untouched
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                self.metrics
+                    .incr("requests_expired", (chunk_len + rest.len()) as u64);
+                for _ in 0..chunk_len + rest.len() {
+                    out.push(Err(Error::DeadlineExpired));
+                }
+                return out;
+            }
+            let _serial = self.state_lock.write().unwrap();
+            // checked under the lock: a learn parked on the lock while
+            // drain ran must fail typed, not mutate an unloaded model
+            if self.stopped.load(Ordering::Acquire) {
+                out.extend(self.all_stopped(chunk_len + rest.len()));
+                return out;
+            }
+            match self.run_learn_chunk(chunk) {
+                Ok(results) => out.extend(results.into_iter().map(Ok)),
+                Err(e) => {
+                    let msg = e.to_string();
+                    out.extend((0..chunk_len).map(|_| {
+                        Err(Error::Coordinator(format!("batch failed: {msg}")))
+                    }));
+                }
+            }
+        }
+        out
+    }
+
+    /// One learn chunk: forward everywhere, derive the global gates,
+    /// update everywhere. The phase-2 forward pass inside the train
+    /// kernel recomputes the same times phase 1 gathered (weights
+    /// cannot change between phases — the caller holds the state lock
+    /// exclusively), so the merged reply re-selects its winner from
+    /// phase-2 times.
+    fn run_learn_chunk(&self, chunk: Vec<SpikeVolley>) -> Result<Vec<VolleyResult>> {
+        let k = self.shards.len();
+        let rows = chunk.len();
+        // phase 1: locate every row's global winner (the chunk is
+        // still needed for phase 2, so every shard gets a clone here)
+        let calls: Vec<EngineCall<Result<Vec<VolleyResult>>>> = self
+            .shards
+            .iter()
+            .map(|s| s.handle.infer_deferred(chunk.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        let mut parts = Vec::with_capacity(k);
+        for call in calls {
+            parts.push(call.wait()??);
+        }
+        let winners: Vec<Option<usize>> = (0..rows)
+            .map(|r| {
+                let mut times = Vec::with_capacity(self.c);
+                for p in &parts {
+                    times.extend_from_slice(&p[r].times);
+                }
+                merge_result(&times, self.t_max).winner
+            })
+            .collect();
+        // phase 2: scatter the gated update, each shard gated by its
+        // slice of the global rule — winner column 1, globally silent
+        // row all-1 (the search term), 0 otherwise
+        let calls: Vec<EngineCall<Result<Vec<VolleyResult>>>> = self
+            .shards
+            .iter()
+            .enumerate()
+            .zip(scatter_payloads(chunk, k))
+            .map(|((i, s), payload)| {
+                let range = self.plan.range(i);
+                let cl = range.len();
+                let mut gates = vec![0f32; rows * cl];
+                for (r, winner) in winners.iter().enumerate() {
+                    match winner {
+                        None => gates[r * cl..(r + 1) * cl].fill(1.0),
+                        Some(w) if range.contains(w) => gates[r * cl + (w - range.start)] = 1.0,
+                        Some(_) => {}
+                    }
+                }
+                s.handle.learn_gated_deferred(payload, gates)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut parts = Vec::with_capacity(k);
+        for call in calls {
+            parts.push(call.wait()??);
+        }
+        Ok((0..rows)
+            .map(|r| {
+                let mut times = Vec::with_capacity(self.c);
+                for p in &parts {
+                    times.extend_from_slice(&p[r].times);
+                }
+                merge_result(&times, self.t_max)
+            })
+            .collect())
+    }
+
+    fn count_request(&self, sparse: u64, dense: u64) {
+        self.metrics.incr("requests", sparse + dense);
+        if sparse > 0 {
+            self.metrics.incr("requests_sparse", sparse);
+        }
+        if dense > 0 {
+            self.metrics.incr("requests_dense", dense);
+        }
+    }
+
+    /// Merge per-shard result vectors into one result per volley:
+    /// concatenate times in shard order, re-select the winner globally.
+    /// A shard error for a volley errors that volley (first shard's
+    /// error wins, matching "first error aborts in kind").
+    fn gather(&self, parts: Vec<Vec<Result<VolleyResult>>>) -> Vec<Result<VolleyResult>> {
+        let nvol = parts.first().map_or(0, |p| p.len());
+        let mut iters: Vec<_> = parts.into_iter().map(IntoIterator::into_iter).collect();
+        (0..nvol)
+            .map(|_| {
+                let mut times = Vec::with_capacity(self.c);
+                let mut err: Option<Error> = None;
+                for it in &mut iters {
+                    match it.next().expect("every shard answers every volley") {
+                        Ok(r) => times.extend_from_slice(&r.times),
+                        Err(e) => {
+                            err.get_or_insert(e);
+                        }
+                    }
+                }
+                match err {
+                    Some(e) => Err(e),
+                    None => Ok(merge_result(&times, self.t_max)),
+                }
+            })
+            .collect()
+    }
+
+    /// The full `[c, n]` weight matrix, shard rows concatenated in
+    /// plan order — read under the shared lock, so the snapshot is one
+    /// consistent generation even while learns are in flight.
+    pub fn weights(&self) -> Result<Tensor> {
+        let _shared = self.state_lock.read().unwrap();
+        self.weights_locked()
+    }
+
+    /// The concatenation itself (callers already holding a lock side).
+    fn weights_locked(&self) -> Result<Tensor> {
+        let mut data = Vec::with_capacity(self.c * self.n);
+        for s in &self.shards {
+            data.extend_from_slice(&s.handle.weights()?.data);
+        }
+        Tensor::new(vec![self.c, self.n], data)
+    }
+
+    /// Scatter a full `[c, n]` weight matrix across the shards (the
+    /// in-process restore path). Exclusive against learns and infers.
+    pub fn set_weights(&self, w: Tensor) -> Result<()> {
+        if w.shape != vec![self.c, self.n] {
+            return Err(Error::Runtime(format!(
+                "weights shape {:?} != [{}, {}]",
+                w.shape, self.c, self.n
+            )));
+        }
+        let _serial = self.state_lock.write().unwrap();
+        for (i, s) in self.shards.iter().enumerate() {
+            let r = self.plan.range(i);
+            let slice = Tensor::new(
+                vec![r.len(), self.n],
+                w.data[r.start * self.n..r.end * self.n].to_vec(),
+            )?;
+            s.handle.set_weights(slice)?;
+        }
+        Ok(())
+    }
+
+    /// Persist as K per-shard `CWKP` files plus the `CWKS` manifest at
+    /// `path` tying them together. Shard files are **content-addressed**
+    /// (`<name>.shard<i>.<crc>.ckpt`, [`manifest::shard_path`]) and
+    /// written first, so a new generation never overwrites the old
+    /// one's bytes; the manifest rename is the single atomic commit —
+    /// a crash anywhere mid-save leaves the old manifest pointing at
+    /// the complete old set, exactly the old-or-new guarantee the
+    /// single-file `CWKP` save gives. Superseded generations are swept
+    /// best-effort after the commit. The whole save runs under the
+    /// shared lock: an autosave racing a learn must persist one weight
+    /// generation, never a mix whose fresh CRCs would defeat the
+    /// loader's mixed-generation gate.
+    pub fn save_checkpoints(&self, path: &Path) -> Result<()> {
+        let _shared = self.state_lock.read().unwrap();
+        let mut entries = Vec::with_capacity(self.plan.k);
+        for (i, s) in self.shards.iter().enumerate() {
+            let range = self.plan.range(i);
+            let bytes = Checkpoint {
+                n: self.n as u32,
+                c: range.len() as u32,
+                t_max: self.t_max as u32,
+                theta: self.theta,
+                seed: self.seed,
+                weights: s.handle.weights()?.data,
+            }
+            .to_bytes()?;
+            let crc = crc32(&bytes);
+            write_atomic(&shard_path(path, i, crc), &bytes)?;
+            entries.push(ShardEntry {
+                start: range.start as u32,
+                end: range.end as u32,
+                file_crc: crc,
+            });
+        }
+        let m = ShardManifest {
+            n: self.n as u32,
+            c: self.c as u32,
+            t_max: self.t_max as u32,
+            theta: self.theta,
+            seed: self.seed,
+            shards: entries,
+        };
+        m.save(path)?;
+        manifest::sweep_stale_shards(path, &m);
+        Ok(())
+    }
+
+    /// Restore from a `CWKS` manifest at `path`: every shard file is
+    /// read and verified (manifest CRC, per-file CRC against the
+    /// manifest's record, geometry against this model's plan) **before**
+    /// any engine is touched — missing, truncated, corrupt or
+    /// foreign-save shard files reject the load as a unit and the old
+    /// weights keep serving.
+    pub fn load_checkpoints(&self, path: &Path) -> Result<()> {
+        let m = ShardManifest::read(path)?;
+        if (m.n as usize, m.c as usize) != (self.n, self.c) {
+            return Err(Error::Checkpoint(format!(
+                "shard manifest is [{}, {}], model wants [{}, {}]",
+                m.c, m.n, self.c, self.n
+            )));
+        }
+        if m.shards.len() != self.plan.k {
+            return Err(Error::Checkpoint(format!(
+                "shard manifest has {} shards, model is sharded {} ways",
+                m.shards.len(),
+                self.plan.k
+            )));
+        }
+        let mut slices = Vec::with_capacity(self.plan.k);
+        for (i, entry) in m.shards.iter().enumerate() {
+            let range = self.plan.range(i);
+            if (entry.start as usize, entry.end as usize) != (range.start, range.end) {
+                return Err(Error::Checkpoint(format!(
+                    "shard {i} covers {}..{} in the manifest, {}..{} in the plan",
+                    entry.start, entry.end, range.start, range.end
+                )));
+            }
+            let spath = shard_path(path, i, entry.file_crc);
+            let bytes = std::fs::read(&spath)
+                .map_err(|e| Error::Checkpoint(format!("read {}: {e}", spath.display())))?;
+            // the name is derived from the manifest's CRC, but the
+            // bytes must still hash to it — a renamed or tampered file
+            // is rejected before any engine is touched
+            if crc32(&bytes) != entry.file_crc {
+                return Err(Error::Checkpoint(format!(
+                    "{} does not match its shard manifest (mixed save generations?)",
+                    spath.display()
+                )));
+            }
+            let ckpt = Checkpoint::from_bytes(&bytes)
+                .map_err(|e| Error::Checkpoint(format!("{}: {e}", spath.display())))?;
+            if (ckpt.n as usize, ckpt.c as usize) != (self.n, range.len()) {
+                return Err(Error::Checkpoint(format!(
+                    "{} is [{}, {}], shard {i} wants [{}, {}]",
+                    spath.display(),
+                    ckpt.c,
+                    ckpt.n,
+                    range.len(),
+                    self.n
+                )));
+            }
+            slices.push(Tensor::new(vec![range.len(), self.n], ckpt.weights)?);
+        }
+        // everything verified; swap exclusively — no infer, learn or
+        // save may observe the matrix half-replaced
+        let _serial = self.state_lock.write().unwrap();
+        for (s, w) in self.shards.iter().zip(slices) {
+            s.handle.set_weights(w)?;
+        }
+        Ok(())
+    }
+
+    /// Drain for unload: flag the model stopped (learns bypass the
+    /// batchers, so they check it under the state lock and fail typed),
+    /// shut the shard infer batchers down (queued work flushes, later
+    /// submitters get typed errors), then wait out whatever holds the
+    /// state lock — after this returns, nothing mutates the model
+    /// again.
+    pub fn drain(&self) {
+        self.stopped.store(true, Ordering::Release);
+        for s in &self.shards {
+            s.infer.shutdown();
+        }
+        drop(self.state_lock.write().unwrap());
+    }
+}
+
+/// Concatenated per-column times → one [`VolleyResult`] with the
+/// global WTA winner: the earliest time wins, ties break to the lowest
+/// column index, an all-silent row has no winner — the exact scan
+/// `runtime::native::wta_mask` performs on the unsharded matrix.
+pub fn merge_result(times: &[f32], t_max: usize) -> VolleyResult {
+    let mut best = 0usize;
+    for (i, &t) in times.iter().enumerate() {
+        if t < times[best] {
+            best = i;
+        }
+    }
+    let winner = (!times.is_empty() && times[best] < t_max as f32).then_some(best);
+    VolleyResult {
+        times: times.to_vec(),
+        winner,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_partitions_contiguously() {
+        for (c, k) in [(8, 1), (8, 8), (8, 3), (16, 4), (16, 5), (12, 7)] {
+            let plan = ShardPlan::new(c, k).unwrap();
+            let ranges = plan.ranges();
+            assert_eq!(ranges.len(), k);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges[k - 1].end, c);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous ({c}, {k})");
+            }
+            let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced ({c}, {k}): {sizes:?}");
+            assert!(sizes.iter().all(|&s| s >= 1));
+        }
+    }
+
+    #[test]
+    fn plan_rejects_degenerate_counts() {
+        assert!(ShardPlan::new(8, 0).is_err());
+        assert!(ShardPlan::new(8, 9).is_err());
+        assert!(ShardPlan::new(0, 1).is_err());
+    }
+
+    #[test]
+    fn merge_result_matches_wta_semantics() {
+        let r = merge_result(&[5.0, 2.0, 9.0], 16);
+        assert_eq!(r.winner, Some(1));
+        // tie -> lowest index
+        let r = merge_result(&[3.0, 3.0, 16.0], 16);
+        assert_eq!(r.winner, Some(0));
+        // all silent -> no winner
+        let r = merge_result(&[16.0, 16.0], 16);
+        assert_eq!(r.winner, None);
+        assert_eq!(r.times, vec![16.0, 16.0]);
+        assert_eq!(merge_result(&[], 16).winner, None);
+    }
+}

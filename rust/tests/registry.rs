@@ -326,6 +326,101 @@ fn save_restart_resume_identical_replies() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Regression gate for unload-under-load: unloading a model with
+/// queued learn requests must **drain** them — every in-flight request
+/// gets a real reply (computed result or typed "shut down" error),
+/// no submitter hangs, and submissions through a still-held slot `Arc`
+/// after the unload fail typed instead of vanishing. Runs against a
+/// single-engine victim and a column-sharded one: sharded learns
+/// bypass the per-shard batchers, so the typed-error guarantee needs
+/// the shard layer's own stop flag, not just batcher shutdown.
+#[test]
+fn unload_under_load_drains_or_errors_typed() {
+    for shards in [1usize, 4] {
+        unload_under_load_case(shards);
+    }
+}
+
+fn unload_under_load_case(shards: usize) {
+    let reg = Arc::new(
+        ModelRegistry::open(
+            RegistryConfig::default(),
+            "default",
+            ModelSpec {
+                n: 16,
+                theta: 6.0,
+                seed: 3,
+            },
+        )
+        .unwrap(),
+    );
+    reg.create_sharded(
+        "victim",
+        ModelSpec {
+            n: 16,
+            theta: 6.0,
+            seed: 4,
+        },
+        shards,
+    )
+    .unwrap();
+
+    let barrier = Arc::new(std::sync::Barrier::new(5));
+    let workers: Vec<_> = (0..4)
+        .map(|wi| {
+            let reg = reg.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                // hold the slot Arc across the unload, like a live
+                // connection thread would
+                let slot = reg.slot(Some("victim")).unwrap();
+                barrier.wait();
+                let mut answered = 0usize;
+                let mut rejected = 0usize;
+                for i in 0..40 {
+                    let v = vec![(i % 8) as f32; 16];
+                    match slot.run_batched(true, vec![SpikeVolley::dense(v)], None) {
+                        Outcome::Results(rs) => {
+                            assert_eq!(rs.len(), 1, "worker {wi}");
+                            answered += 1;
+                        }
+                        Outcome::Error(e) => {
+                            assert!(
+                                e.contains("shut down"),
+                                "worker {wi} got a non-typed failure: {e}"
+                            );
+                            rejected += 1;
+                        }
+                        other => panic!("worker {wi}: {other:?}"),
+                    }
+                }
+                (answered, rejected)
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    // let some learns land, then unload mid-stream; unload must drain
+    // (flush queued work) rather than strand blocked submitters
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    reg.unload("victim").unwrap();
+    assert!(reg.slot(Some("victim")).is_err(), "routing is gone");
+
+    let mut total_answered = 0;
+    let mut total_rejected = 0;
+    for w in workers {
+        // join() returning at all is the no-hang half of the gate
+        let (answered, rejected) = w.join().unwrap();
+        assert_eq!(answered + rejected, 40, "every request got a reply");
+        total_answered += answered;
+        total_rejected += rejected;
+    }
+    assert_eq!(total_answered + total_rejected, 160);
+    // the unload raced real traffic: typically both outcomes occur,
+    // but the invariant is completeness, not the split
+    assert!(reg.unload("victim").is_err(), "second unload is typed");
+}
+
 /// Regression gate for the set_weights satellite: a Load whose
 /// checkpoint mismatches the model's shape comes back as a typed error
 /// **through the wire**, and the old weights keep serving.

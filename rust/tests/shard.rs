@@ -1,0 +1,402 @@
+//! Sharded-model execution end-to-end: the bit-identity contract
+//! (sharded == unsharded, forward and learn), the `CWKS` shard-manifest
+//! golden bytes shared with the python wire twin, and the acceptance
+//! gate — byte-identical wire replies from a sharded and an unsharded
+//! model over TCP on both codecs, across infer + learn +
+//! save/restart/resume.
+
+use catwalk::coordinator::{BatcherConfig, TnnHandle};
+use catwalk::proto::frame;
+use catwalk::quickprop::{forall, FnGen};
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use catwalk::rng::Xoshiro256;
+use catwalk::runtime::BackendKind;
+use catwalk::server::{FramedClient, Server};
+use catwalk::shard::manifest::{ShardEntry, ShardManifest};
+use catwalk::shard::{merge_result, ShardedModel};
+use catwalk::SpikeVolley;
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn native_env() -> bool {
+    matches!(BackendKind::from_env(), Ok(BackendKind::Native))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("catwalk-shard-e2e-{tag}-{}", std::process::id()))
+}
+
+fn random_volleys(rng: &mut Xoshiro256, rows: usize, n: usize, density: f64) -> Vec<Vec<f32>> {
+    (0..rows)
+        .map(|_| {
+            (0..n)
+                .map(|_| {
+                    if rng.gen_bool(density) {
+                        (rng.gen_f64() * 8.0) as f32
+                    } else {
+                        16.0
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+// --------------------------------------------------- golden CWKS bytes
+
+/// Golden shard-manifest bytes, shared with the python wire twin
+/// (`test_shard_manifest_golden_bytes` in
+/// python/tests/test_proto_frames.py): n=16, c=8, t_max=16, theta=6.0,
+/// seed=11, shards (0..3, 3..6, 6..8) with file CRCs 0x11111111,
+/// 0x22222222, 0x33333333; zlib crc32 trailer.
+const GOLDEN_CWKS_HEX: &str = "43574b53000100000010000000080000001040c00000000000000000000b\
+0000000300000000000000031111111100000003000000062222222200000006000000083333333\
+31f195abd";
+
+#[test]
+fn golden_shard_manifest_bytes_match_python_twin() {
+    let m = ShardManifest {
+        n: 16,
+        c: 8,
+        t_max: 16,
+        theta: 6.0,
+        seed: 11,
+        shards: vec![
+            ShardEntry { start: 0, end: 3, file_crc: 0x1111_1111 },
+            ShardEntry { start: 3, end: 6, file_crc: 0x2222_2222 },
+            ShardEntry { start: 6, end: 8, file_crc: 0x3333_3333 },
+        ],
+    };
+    let bytes = m.to_bytes().unwrap();
+    let hex: String = bytes.iter().map(|b| format!("{b:02x}")).collect();
+    assert_eq!(hex, GOLDEN_CWKS_HEX);
+    assert_eq!(ShardManifest::from_bytes(&bytes).unwrap(), m);
+}
+
+// ------------------------------------------- forward bit-identity prop
+
+/// Sharded forward == unsharded forward bit-identically across random
+/// (n, K, sparsity) — every case also pins K=1, K=c and a K that does
+/// not divide c, so the remainder-distribution path is always covered.
+#[test]
+fn prop_sharded_forward_matches_unsharded_bitwise() {
+    if !native_env() {
+        return;
+    }
+    forall(
+        47,
+        10,
+        &FnGen(|rng: &mut Xoshiro256| {
+            let n = [16usize, 32, 64][rng.gen_range(3)];
+            let density = [0.0, 0.05, 0.15, 0.5, 1.0][rng.gen_range(5)];
+            let seed = rng.next_u64();
+            (n, density, seed)
+        }),
+        |&(n, density, seed)| {
+            let theta = 6.0f32;
+            let solo = TnnHandle::open("/no-such-dir", n, theta, seed).unwrap();
+            let c = solo.c;
+            let mut rng = Xoshiro256::new(seed ^ 0x5EED);
+            let volleys = random_volleys(&mut rng, 12, n, density);
+            let expect = solo.infer(volleys.clone()).unwrap();
+            // K=1, K=c, a K not dividing c, and a random K
+            let mut ks = vec![1, c, 3, 1 + rng.gen_range(c)];
+            ks.retain(|&k| k <= c);
+            for k in ks {
+                let sharded = ShardedModel::open(
+                    "/no-such-dir",
+                    n,
+                    theta,
+                    seed,
+                    k,
+                    BatcherConfig::default(),
+                )
+                .unwrap();
+                let got: Vec<_> = sharded
+                    .infer(
+                        volleys.iter().cloned().map(SpikeVolley::dense).collect(),
+                        None,
+                    )
+                    .into_iter()
+                    .map(|r| r.unwrap())
+                    .collect();
+                for (e, g) in expect.iter().zip(&got) {
+                    if e.winner != g.winner {
+                        return false;
+                    }
+                    let eb: Vec<u32> = e.times.iter().map(|t| t.to_bits()).collect();
+                    let gb: Vec<u32> = g.times.iter().map(|t| t.to_bits()).collect();
+                    if eb != gb {
+                        return false;
+                    }
+                }
+                // sparse volleys travel the same path bit-identically
+                let sparse: Vec<SpikeVolley> = volleys
+                    .iter()
+                    .map(|v| SpikeVolley::dense(v.clone()).to_sparse(sharded.t_max))
+                    .collect();
+                let got_sparse = sharded.infer(sparse, None);
+                for (e, g) in expect.iter().zip(got_sparse) {
+                    let g = g.unwrap();
+                    if e.winner != g.winner || e.times != g.times {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+// --------------------------------------------- learn bit-identity test
+
+/// A sequence of sharded learning steps produces bit-identical weights
+/// *and* replies to the unsharded engine — the two-phase global-gate
+/// protocol is exact, not approximate. Exercises winners landing in
+/// different shards, globally silent rows (the search term), and
+/// several shard counts including one that does not divide c.
+#[test]
+fn sharded_learn_matches_unsharded_bitwise() {
+    if !native_env() {
+        return;
+    }
+    let (n, theta, seed) = (16usize, 5.0f32, 77u64);
+    for k in [1usize, 2, 3, 5, 8] {
+        let solo = TnnHandle::open("/no-such-dir", n, theta, seed).unwrap();
+        let sharded =
+            ShardedModel::open("/no-such-dir", n, theta, seed, k, BatcherConfig::default())
+                .unwrap();
+        assert_eq!(sharded.c, solo.c);
+        // identical starting weights (sliced init == full init)
+        assert_eq!(
+            sharded.weights().unwrap().data,
+            solo.weights().unwrap().data,
+            "init weights diverge at k={k}"
+        );
+        let mut rng = Xoshiro256::new(123);
+        for step in 0..8 {
+            // vary density per step so some batches have silent rows,
+            // some have winners scattered across every shard
+            let density = [0.0, 0.1, 0.3, 0.6][step % 4];
+            let volleys = random_volleys(&mut rng, 12, n, density);
+            let expect = solo.learn(volleys.clone()).unwrap();
+            let got = sharded.learn(
+                volleys.iter().cloned().map(SpikeVolley::dense).collect(),
+                None,
+            );
+            for (i, (e, g)) in expect.iter().zip(got).enumerate() {
+                let g = g.unwrap();
+                assert_eq!(e.winner, g.winner, "k={k} step={step} volley={i}");
+                let eb: Vec<u32> = e.times.iter().map(|t| t.to_bits()).collect();
+                let gb: Vec<u32> = g.times.iter().map(|t| t.to_bits()).collect();
+                assert_eq!(eb, gb, "k={k} step={step} volley={i}");
+            }
+            let wb: Vec<u32> = solo
+                .weights()
+                .unwrap()
+                .data
+                .iter()
+                .map(|w| w.to_bits())
+                .collect();
+            let sb: Vec<u32> = sharded
+                .weights()
+                .unwrap()
+                .data
+                .iter()
+                .map(|w| w.to_bits())
+                .collect();
+            assert_eq!(wb, sb, "weights diverge at k={k} step={step}");
+        }
+    }
+}
+
+#[test]
+fn merge_result_is_reexported_for_gather_consumers() {
+    let r = merge_result(&[4.0, 2.0, 16.0], 16);
+    assert_eq!(r.winner, Some(1));
+}
+
+// ------------------------------------------------- TCP e2e (acceptance)
+
+fn boot(
+    ckpt_dir: PathBuf,
+) -> (Arc<Server>, String, std::thread::JoinHandle<()>, Arc<ModelRegistry>) {
+    let cfg = RegistryConfig {
+        ckpt_dir: Some(ckpt_dir),
+        ..RegistryConfig::default()
+    };
+    let spec = ModelSpec {
+        n: 16,
+        theta: 6.0,
+        seed: 11,
+    };
+    let registry = Arc::new(ModelRegistry::open(cfg, "solo", spec).unwrap());
+    registry.create_sharded("quad", spec, 4).unwrap();
+    let server = Arc::new(Server::with_registry(registry.clone()));
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    (server, addr, srv, registry)
+}
+
+fn stop(server: &Server, srv: std::thread::JoinHandle<()>) {
+    server
+        .stop_handle()
+        .store(true, std::sync::atomic::Ordering::Release);
+    srv.join().unwrap();
+}
+
+/// Raw text-codec round-trip: one request line in, one reply line out —
+/// byte-level, so the comparison below really is wire bytes.
+fn text_roundtrip(addr: &str, lines: &[String]) -> Vec<String> {
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut replies = Vec::with_capacity(lines.len());
+    for line in lines {
+        writeln!(writer, "{line}").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        replies.push(reply);
+    }
+    writeln!(writer, "QUIT").unwrap();
+    writer.flush().unwrap();
+    replies
+}
+
+/// The acceptance gate: a 4-way-sharded model and its unsharded twin
+/// (same n, θ, seed) produce **byte-identical wire replies** for the
+/// same traffic — infer and learn, dense and sparse, text and framed
+/// codec — and still do after save / server restart / resume.
+#[test]
+fn sharded_and_unsharded_wire_replies_byte_identical() {
+    if !native_env() {
+        return;
+    }
+    let dir = temp_dir("twins");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (server, addr, srv, _registry) = boot(dir.clone());
+
+    let volleys: Vec<Vec<f32>> = {
+        let mut rng = Xoshiro256::new(5);
+        random_volleys(&mut rng, 10, 16, 0.3)
+    };
+
+    // --- framed codec: interleave learn + infer on both models; the
+    // encoded response bytes (ids normalized) must match exactly
+    let mut client = FramedClient::connect(&addr).unwrap();
+    let builders: [fn(Vec<SpikeVolley>) -> catwalk::Request; 2] =
+        [catwalk::Request::learn, catwalk::Request::infer];
+    for v in &volleys {
+        let sv = vec![SpikeVolley::dense(v.clone())];
+        for build in builders {
+            let mut solo = client.call(build(sv.clone()).with_model("solo")).unwrap();
+            let mut quad = client.call(build(sv.clone()).with_model("quad")).unwrap();
+            solo.id = 0;
+            quad.id = 0;
+            let solo_bytes = frame::encode_response(&solo).unwrap();
+            let quad_bytes = frame::encode_response(&quad).unwrap();
+            assert_eq!(solo_bytes, quad_bytes, "framed replies diverge for {v:?}");
+        }
+    }
+    // multi-volley batch frames agree too — a 10-volley LEARN is one
+    // batched kernel step on the solo side and one two-phase sharded
+    // chunk on the quad side, then a 10-volley INFER probes the
+    // post-step weights
+    let batch: Vec<SpikeVolley> = volleys.iter().cloned().map(SpikeVolley::dense).collect();
+    for build in builders {
+        let mut solo = client
+            .call(build(batch.clone()).with_model("solo"))
+            .unwrap();
+        let mut quad = client
+            .call(build(batch.clone()).with_model("quad"))
+            .unwrap();
+        solo.id = 0;
+        quad.id = 0;
+        assert_eq!(
+            frame::encode_response(&solo).unwrap(),
+            frame::encode_response(&quad).unwrap(),
+            "multi-volley batch frames diverge"
+        );
+    }
+
+    // --- text codec: identical raw reply lines for dense INFER/LEARN
+    // and sparse SPARSE/SLEARN, routed by @-prefix on one socket each
+    let payload = |v: &Vec<f32>| {
+        v.iter()
+            .map(|t| format!("{t}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let sparse_payload = |v: &Vec<f32>| {
+        SpikeVolley::dense(v.clone()).encode_sparse(16)
+    };
+    let make_lines = |model: &str| -> Vec<String> {
+        let mut lines = Vec::new();
+        for v in &volleys {
+            lines.push(format!("@{model} LEARN {}", payload(v)));
+            lines.push(format!("@{model} INFER {}", payload(v)));
+            lines.push(format!("@{model} SPARSE {}", sparse_payload(v)));
+            lines.push(format!("@{model} SLEARN {}", sparse_payload(v)));
+        }
+        lines
+    };
+    let solo_replies = text_roundtrip(&addr, &make_lines("solo"));
+    let quad_replies = text_roundtrip(&addr, &make_lines("quad"));
+    assert_eq!(solo_replies, quad_replies, "text replies diverge");
+
+    // --- save both, restart the server over the same checkpoint dir,
+    // and verify resumed replies are byte-identical to pre-restart
+    // ones (mutation-free probe lines, so the weight state under
+    // comparison is exactly the saved one)
+    client.save_model("solo").unwrap();
+    client.save_model("quad").unwrap();
+    assert!(dir.join("quad.ckpt").exists(), "CWKS manifest");
+    let shard_files = |prefix: &str| -> usize {
+        std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with(prefix))
+            .count()
+    };
+    // 4 content-addressed shard files (`quad.shard<i>.<crc>.ckpt`)
+    assert_eq!(shard_files("quad.shard0."), 1);
+    assert_eq!(shard_files("quad.shard3."), 1);
+    assert!(dir.join("solo.ckpt").exists(), "plain CWKP");
+    assert_eq!(shard_files("solo.shard"), 0);
+    let probe_lines = |model: &str| -> Vec<String> {
+        volleys
+            .iter()
+            .flat_map(|v| {
+                [
+                    format!("@{model} INFER {}", payload(v)),
+                    format!("@{model} SPARSE {}", sparse_payload(v)),
+                ]
+            })
+            .collect()
+    };
+    let pre_solo = text_roundtrip(&addr, &probe_lines("solo"));
+    let pre_quad = text_roundtrip(&addr, &probe_lines("quad"));
+    assert_eq!(pre_solo, pre_quad, "twins disagree before restart");
+    client.quit().unwrap();
+    stop(&server, srv);
+
+    let (server, addr, srv, _registry) = boot(dir.clone());
+    let post_solo = text_roundtrip(&addr, &probe_lines("solo"));
+    let post_quad = text_roundtrip(&addr, &probe_lines("quad"));
+    assert_eq!(pre_solo, post_solo, "solo resume diverges");
+    assert_eq!(pre_quad, post_quad, "sharded resume diverges");
+    stop(&server, srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
