@@ -1,7 +1,7 @@
 # Local entry points mirroring .github/workflows/ci.yml — keep the two in
 # lockstep so local runs and CI always exercise the same commands.
 
-.PHONY: build test bench lint fmt check python-test artifacts all clean clean-checkpoints
+.PHONY: build test bench bench-json lint fmt check python-test artifacts all clean clean-checkpoints
 
 all: lint build test bench
 
@@ -17,6 +17,13 @@ bench:
 
 bench-run:
 	cargo bench
+
+# machine-readable perf-trajectory point: sweeps every KernelPlan path
+# over the density range and writes BENCH_<pr>.json at the repo root
+# (BENCH_JSON_OUT overrides the path, CATWALK_SPARSE_CUTOVER the auto
+# cutover)
+bench-json:
+	cargo bench --bench bench_json
 
 lint:
 	cargo fmt --all --check

@@ -101,8 +101,10 @@ def rnl_column_sparse_ref(
     k_clip: int | None = None,
 ) -> np.ndarray:
     """Sparsity-aware SRM0-RNL column forward: iterates only the spiking
-    lines of each volley, mirroring ``runtime::native::rnl_forward_sparse``
-    in the Rust serving stack.
+    lines of each volley, mirroring the historical
+    ``runtime::native::rnl_forward_sparse`` in the Rust serving stack
+    (whose successor is the compacted path —
+    :func:`rnl_column_compacted_ref`).
 
     Must agree exactly with :func:`rnl_column_ref` on the canonical dense
     form of the same volleys — the per-cycle count is a sum of ones over
@@ -128,6 +130,56 @@ def rnl_column_sparse_ref(
                 pot += np.float32(count)
                 if pot >= th:
                     out[b, ci] = float(t)
+                    break
+    return out
+
+
+def rnl_column_compacted_ref(
+    spike_times,
+    weights,
+    theta,
+    t_max: int,
+    k_clip: int | None = None,
+) -> np.ndarray:
+    """Software-Catwalk SRM0-RNL forward: the Python twin of the Rust
+    ``KernelPlan`` compacted path (``rust/src/runtime/plan.rs``,
+    DESIGN.md §2.5).
+
+    Once per batch, every volley's scattered ``(line, time)`` entries are
+    compacted into a contiguous sorted-by-line dense prefix (the paper's
+    unary top-k relocation, done in software); the column-major sweep then
+    gathers each run's weights once (``wk = w[c, lines]``) and scans two
+    dense arrays per cycle — no per-cycle ``w[line]`` indirection.
+
+    Must agree exactly with :func:`rnl_column_ref`: the per-cycle count is
+    a sum of ones over exactly the lines whose ramp is active, so count,
+    clip, and the running potential take identical values regardless of
+    whether silent lines participate (they count 0) or are absent.
+
+    spike_times: ``[B, n]`` (``>= t_max`` or NaN = silent); weights
+    ``[C, n]``; theta scalar. Returns ``[B, C]`` float32 first-crossing
+    times.
+    """
+    s = np.asarray(spike_times, np.float32)
+    w = np.asarray(weights, np.float32)
+    th = float(np.asarray(theta, np.float32).reshape(-1)[0])
+    b, c = s.shape[0], w.shape[0]
+    # relocation stage: one CSR-style compaction per batch
+    lines = [np.flatnonzero(row < t_max) for row in s]
+    times = [row[idx] for row, idx in zip(s, lines)]
+    out = np.full((b, c), float(t_max), np.float32)
+    for ci in range(c):  # column-major: one weight row serves the batch
+        for bi in range(b):
+            wk = w[ci, lines[bi]]  # gather once per (column, row)
+            tk = times[bi]
+            pot = np.float32(0.0)
+            for t in range(t_max):
+                count = int(np.count_nonzero((tk <= t) & (t < tk + wk)))
+                if k_clip is not None:
+                    count = min(count, k_clip)
+                pot += np.float32(count)
+                if pot >= th:
+                    out[bi, ci] = float(t)
                     break
     return out
 

@@ -1,9 +1,11 @@
-"""Sparse volley reference vs the dense oracle (cross-language parity).
+"""Sparse volley references vs the dense oracle (cross-language parity).
 
-``rnl_column_sparse_ref`` is the Python twin of the Rust serving stack's
-``runtime::native::rnl_forward_sparse``: both iterate only the spiking
-lines and both must be exactly equal to the dense oracle, so the two
-languages share one conformance story.
+``rnl_column_sparse_ref`` is the Python twin of the historical
+``runtime::native::rnl_forward_sparse``, and ``rnl_column_compacted_ref``
+is the twin of its successor — the ``KernelPlan`` compacted
+(software-Catwalk) path in ``rust/src/runtime/plan.rs``. All must be
+exactly equal to the dense oracle, so the two languages share one
+conformance story.
 """
 
 import jax.numpy as jnp
@@ -13,6 +15,7 @@ from hypothesis import given, settings, strategies as st
 
 from compile.kernels.ref import (
     dense_to_sparse,
+    rnl_column_compacted_ref,
     rnl_column_ref,
     rnl_column_sparse_ref,
     sparse_to_dense,
@@ -38,6 +41,31 @@ def test_sparse_ref_matches_dense_ref(density, k_clip):
     theta = float(rng.integers(1, 12))
     want = rnl_column_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(theta), T, k_clip)
     got = rnl_column_sparse_ref(dense_to_sparse(s, T), n, w, theta, T, k_clip)
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.1, 0.25, 0.5, 1.0])
+@pytest.mark.parametrize("k_clip", [None, 2])
+def test_compacted_ref_matches_dense_ref(density, k_clip):
+    # the software-Catwalk twin (KernelPlan compacted path) equals the
+    # dense oracle exactly, like its Rust counterpart in
+    # rust/tests/runtime_roundtrip.rs
+    rng = np.random.default_rng(int(density * 100) + (0 if k_clip is None else 1))
+    b, c, n = 16, 8, 32
+    s = random_dense(rng, b, n, density)
+    w = rng.integers(0, 8, size=(c, n)).astype(np.float32)
+    theta = float(rng.integers(1, 12))
+    want = rnl_column_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(theta), T, k_clip)
+    got = rnl_column_compacted_ref(s, w, theta, T, k_clip)
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+def test_compacted_ref_treats_nan_as_silent():
+    s = np.asarray([[2.0, np.nan, 20.0, 16.0]], np.float32)
+    canonical = np.asarray([[2.0, 16.0, 16.0, 16.0]], np.float32)
+    w = np.full((3, 4), 4.0, np.float32)
+    got = rnl_column_compacted_ref(s, w, 1.0, T)
+    want = rnl_column_ref(jnp.asarray(canonical), jnp.asarray(w), jnp.asarray(1.0), T)
     np.testing.assert_array_equal(got, np.asarray(want))
 
 
@@ -91,3 +119,5 @@ def test_sparse_ref_matches_dense_ref_hypothesis(n_exp, c, theta, k_clip, densit
     want = rnl_column_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(float(theta)), T, k_clip)
     got = rnl_column_sparse_ref(dense_to_sparse(s, T), n, w, float(theta), T, k_clip)
     np.testing.assert_array_equal(got, np.asarray(want))
+    compacted = rnl_column_compacted_ref(s, w, float(theta), T, k_clip)
+    np.testing.assert_array_equal(compacted, np.asarray(want))

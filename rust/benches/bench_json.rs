@@ -1,0 +1,148 @@
+//! Machine-readable kernel-path benchmark: sweeps every [`KernelPlan`]
+//! path over the density range and writes the perf-trajectory point
+//! `BENCH_6.json` at the repo root (EXPERIMENTS.md §Perf 8).
+//!
+//! Run: `make bench-json` (or `cargo bench --bench bench_json`).
+//! Override the output path with `BENCH_JSON_OUT=/path/file.json`;
+//! sweep alternative cutovers by re-running under
+//! `CATWALK_SPARSE_CUTOVER=<density>` (the auto row reflects it).
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::coordinator::pool::par_map;
+use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
+use catwalk::report::Json;
+use catwalk::rng::Xoshiro256;
+use catwalk::runtime::plan::{detect_simd, ForwardArgs, KernelPath, KernelPlan};
+use catwalk::runtime::Tensor;
+use catwalk::volley::SpikeVolley;
+use std::sync::Arc;
+
+const T_MAX: usize = 16;
+const B: usize = 64;
+const C: usize = 16;
+const N: usize = 64;
+const THETA: f32 = 8.0;
+const DENSITIES: [f64; 5] = [0.05, 0.10, 0.25, 0.40, 0.50];
+
+fn random_batch(rng: &mut Xoshiro256, density: f64) -> Tensor {
+    let data: Vec<f32> = (0..B * N)
+        .map(|_| {
+            if rng.gen_bool(density) {
+                rng.gen_range(8) as f32
+            } else {
+                T_MAX as f32
+            }
+        })
+        .collect();
+    Tensor::new(vec![B, N], data).unwrap()
+}
+
+fn median_ns(name: &str, f: impl FnMut() -> f32) -> f64 {
+    bench(name, 3, 30, f).median().as_nanos() as f64
+}
+
+fn main() {
+    bench_header("bench-json kernel path sweep");
+    let plan = KernelPlan::from_env().unwrap();
+    println!("  simd: {:?}  cutover: {}", detect_simd(), plan.cutover());
+
+    let mut rng = Xoshiro256::new(6);
+    let weights: Vec<f32> = (0..C * N).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
+    let wt = Tensor::new(vec![C, N], weights).unwrap();
+
+    let mut sweep = Vec::new();
+    for density in DENSITIES {
+        let spikes = random_batch(&mut rng, density);
+        let args = ForwardArgs::new(&spikes, &wt, THETA, T_MAX).k_clip(Some(2.0));
+        let scalar = median_ns(&format!("scalar    d={density:.2}"), || {
+            KernelPlan::with_path(KernelPath::Scalar).forward(&args).data[0]
+        });
+        let simd = median_ns(&format!("simd      d={density:.2}"), || {
+            KernelPlan::with_path(KernelPath::Simd).forward(&args).data[0]
+        });
+        let compacted = median_ns(&format!("compacted d={density:.2}"), || {
+            KernelPlan::with_path(KernelPath::Compacted).forward(&args).data[0]
+        });
+        let auto = median_ns(&format!("auto      d={density:.2}"), || {
+            plan.forward(&args).data[0]
+        });
+        println!(
+            "  density {density:.2}: scalar {scalar:.0}ns simd {simd:.0}ns \
+             compacted {compacted:.0}ns auto {auto:.0}ns \
+             (compacted {:.2}x vs scalar)",
+            scalar / compacted
+        );
+        sweep.push(Json::Obj(vec![
+            ("density".into(), Json::Num(density)),
+            ("scalar_dense_ns".into(), Json::Num(scalar)),
+            ("simd_dense_ns".into(), Json::Num(simd)),
+            ("compacted_ns".into(), Json::Num(compacted)),
+            ("auto_ns".into(), Json::Num(auto)),
+            (
+                "compacted_vs_scalar_speedup".into(),
+                Json::Num(scalar / compacted),
+            ),
+            (
+                "compacted_vs_simd_speedup".into(),
+                Json::Num(simd / compacted),
+            ),
+        ]));
+    }
+
+    // end-to-end batcher throughput at the biological operating point
+    let handle = TnnHandle::open("artifacts", N, THETA, 7).unwrap();
+    let batcher = Arc::new(DynamicBatcher::start(handle, BatcherConfig::default()));
+    let threads = 8;
+    let per_thread = 200;
+    let r = bench("batcher 8x200 sparse volleys", 1, 5, || {
+        let done: usize = par_map(threads, (0..threads).collect::<Vec<_>>(), |tid| {
+            let mut rng = Xoshiro256::new(tid as u64 + 1);
+            for _ in 0..per_thread {
+                let spikes: Vec<(usize, f32)> = rng
+                    .sample_indices(N, 3)
+                    .into_iter()
+                    .map(|i| (i, rng.gen_range(8) as f32))
+                    .collect();
+                batcher
+                    .submit(SpikeVolley::sparse(N, spikes, T_MAX).unwrap())
+                    .unwrap();
+            }
+            per_thread
+        })
+        .iter()
+        .sum();
+        done
+    });
+    let volleys_per_s = r.throughput((threads * per_thread) as u64);
+    println!("  batcher: {volleys_per_s:.0} volleys/s");
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("kernel_path_sweep".into())),
+        ("pr".into(), Json::Num(6.0)),
+        (
+            "geometry".into(),
+            Json::Obj(vec![
+                ("b".into(), Json::Num(B as f64)),
+                ("c".into(), Json::Num(C as f64)),
+                ("n".into(), Json::Num(N as f64)),
+                ("t_max".into(), Json::Num(T_MAX as f64)),
+                ("theta".into(), Json::Num(THETA as f64)),
+                ("k_clip".into(), Json::Num(2.0)),
+            ]),
+        ),
+        ("simd".into(), Json::Str(format!("{:?}", detect_simd()))),
+        ("cutover".into(), Json::Num(plan.cutover() as f64)),
+        ("densities".into(), Json::Arr(sweep)),
+        (
+            "batcher_volleys_per_s".into(),
+            Json::Num(volleys_per_s),
+        ),
+        (
+            "harness".into(),
+            Json::Str("rust bench_util (make bench-json)".into()),
+        ),
+    ]);
+    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_6.json".into());
+    std::fs::write(&out, doc.render() + "\n").unwrap();
+    println!("  wrote {out}");
+}

@@ -1,6 +1,7 @@
-//! Sparse-volley serving bench: dense sweep vs spiking-lines-only kernel
-//! at biological line activity, plus the end-to-end batcher path driven
-//! with sparse volleys — the speedup EXPERIMENTS.md §Serving records.
+//! Sparse-volley serving bench: the [`KernelPlan`] paths (scalar dense,
+//! SIMD dense, software-Catwalk compacted, auto cutover) at biological
+//! line activity, plus the end-to-end batcher path driven with sparse
+//! volleys — the speedup EXPERIMENTS.md §Serving records.
 //!
 //! Run: `cargo bench --bench sparse_serve`
 
@@ -8,7 +9,7 @@ use catwalk::bench_util::{bench, bench_header};
 use catwalk::coordinator::pool::par_map;
 use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
 use catwalk::rng::Xoshiro256;
-use catwalk::runtime::native::{rnl_forward, rnl_forward_auto, rnl_forward_sparse};
+use catwalk::runtime::plan::{detect_simd, ForwardArgs, KernelPath, KernelPlan};
 use catwalk::runtime::Tensor;
 use catwalk::volley::SpikeVolley;
 use std::sync::Arc;
@@ -30,41 +31,41 @@ fn random_batch(rng: &mut Xoshiro256, b: usize, n: usize, density: f64) -> Tenso
 
 fn main() {
     bench_header("sparse spike-volley serving");
+    println!("  simd: {:?}", detect_simd());
     let (b, c, n) = (64, 16, 64);
     let mut rng = Xoshiro256::new(5);
     let weights: Vec<f32> = (0..c * n).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
     let wt = Tensor::new(vec![c, n], weights).unwrap();
     let theta = 8.0;
 
-    // kernel-level: dense sweep vs sparse evaluation across densities
+    // kernel-level: every plan path across densities
+    let paths = [
+        ("scalar dense", KernelPath::Scalar),
+        ("simd dense", KernelPath::Simd),
+        ("compacted", KernelPath::Compacted),
+        ("auto", KernelPath::Auto),
+    ];
     for density in [0.05, 0.10, 0.25, 0.50] {
         let spikes = random_batch(&mut rng, b, n, density);
-        let dense = bench(
-            &format!("rnl_forward (dense)    density={density:.2}"),
-            3,
-            30,
-            || rnl_forward(&spikes, &wt, theta, T_MAX, Some(2.0)).data[0],
-        );
-        let sparse = bench(
-            &format!("rnl_forward_sparse     density={density:.2}"),
-            3,
-            30,
-            || rnl_forward_sparse(&spikes, &wt, theta, T_MAX, Some(2.0)).data[0],
-        );
-        let auto = bench(
-            &format!("rnl_forward_auto       density={density:.2}"),
-            3,
-            30,
-            || rnl_forward_auto(&spikes, &wt, theta, T_MAX, Some(2.0)).data[0],
-        );
-        println!("{}", dense.report());
-        println!("{}", sparse.report());
-        println!("{}", auto.report());
+        let args = ForwardArgs::new(&spikes, &wt, theta, T_MAX).k_clip(Some(2.0));
+        let mut results = Vec::new();
+        for (label, path) in paths {
+            let plan = KernelPlan::with_path(path);
+            let r = bench(
+                &format!("{label:<14} density={density:.2}"),
+                3,
+                30,
+                || plan.forward(&args).data[0],
+            );
+            println!("{}", r.report());
+            results.push(r);
+        }
+        let (scalar, compacted) = (&results[0], &results[2]);
         println!(
-            "  -> sparse {:.2}x vs dense ({:.2} vs {:.2} Mvolley/s)",
-            dense.median().as_secs_f64() / sparse.median().as_secs_f64(),
-            sparse.throughput(b as u64) / 1e6,
-            dense.throughput(b as u64) / 1e6
+            "  -> compacted {:.2}x vs scalar dense ({:.2} vs {:.2} Mvolley/s)",
+            scalar.median().as_secs_f64() / compacted.median().as_secs_f64(),
+            compacted.throughput(b as u64) / 1e6,
+            scalar.throughput(b as u64) / 1e6
         );
     }
 

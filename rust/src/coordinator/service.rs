@@ -15,7 +15,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::error::{Error, Result};
 use crate::proto::{Op, Outcome, Request, Response};
 use crate::rng::Xoshiro256;
-use crate::runtime::native::{row_path, RowPath};
+use crate::runtime::plan::{KernelPlan, RowPath};
 use crate::runtime::{BackendKind, Entry, Executable, Manifest, Runtime, Tensor};
 use crate::volley::SpikeVolley;
 use std::path::{Path, PathBuf};
@@ -38,6 +38,10 @@ struct TnnService {
     train: Arc<Executable>,
     weights: Tensor,
     theta: f32,
+    /// Same environment-resolved plan the native kernels execute under —
+    /// held so sparsity accounting classifies rows at the cutover the
+    /// kernel actually runs at.
+    plan: KernelPlan,
     metrics: Arc<Metrics>,
 }
 
@@ -103,6 +107,7 @@ impl TnnService {
             train,
             weights: Tensor::new(vec![c, n], w)?,
             theta: init.theta,
+            plan: KernelPlan::from_env()?,
             metrics,
         })
     }
@@ -137,15 +142,16 @@ impl TnnService {
 
     /// Per-batch sparsity accounting, surfaced through `STATS`: line
     /// activity always; plus, on the native backend, which evaluation
-    /// path each row takes — decided by the kernel's own
-    /// [`row_path`] so the counters cannot drift from what it executes.
+    /// path each row takes — decided by the same [`KernelPlan`] the
+    /// kernels run under so the counters cannot drift from what they
+    /// execute (both resolve `CATWALK_SPARSE_CUTOVER` at open).
     fn record_sparsity(&self, volleys: &[SpikeVolley]) {
         let mut active = 0u64;
         let (mut silent, mut sparse, mut dense) = (0u64, 0u64, 0u64);
         for v in volleys {
             let st = v.stats(self.t_max);
             active += st.active as u64;
-            match row_path(st.active, self.n, self.theta) {
+            match self.plan.row_path(st.active, self.n, self.theta) {
                 RowPath::SilentSkip => silent += 1,
                 RowPath::Sparse => sparse += 1,
                 RowPath::Dense => dense += 1,

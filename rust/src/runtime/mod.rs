@@ -22,6 +22,7 @@
 
 pub mod manifest;
 pub mod native;
+pub mod plan;
 #[cfg(feature = "xla")]
 pub mod xla_backend;
 
@@ -32,6 +33,7 @@ use std::sync::{Arc, Mutex};
 
 pub use manifest::{Entry, Manifest};
 pub use native::NativeBackend;
+pub use plan::{ForwardArgs, KernelPath, KernelPlan, RowPath, SimdLevel, StdpArgs};
 
 /// Host-side f32 tensor (row-major) used on the runtime boundary.
 #[derive(Clone, Debug, PartialEq)]

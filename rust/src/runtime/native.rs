@@ -2,33 +2,48 @@
 //! manifest's kernels.
 //!
 //! Ports `python/compile/kernels/ref.py` (the pure-jnp oracles the Pallas
-//! kernels are verified against) operation for operation:
+//! kernels are verified against) operation for operation. Since PR 6 all
+//! forward/train compute dispatches through one
+//! [`KernelPlan`](crate::runtime::plan::KernelPlan) (see DESIGN.md §2.5)
+//! — column-major layout, runtime-selected SIMD counts, and the
+//! software-Catwalk compacted path — and this module only adapts the
+//! manifest's kernel entries onto that seam:
 //!
-//! * `"forward"` → [`rnl_forward_auto`] + [`wta_mask`] — batched SRM0-RNL
+//! * `"forward"` → `plan.forward()` + `plan.wta()` — batched SRM0-RNL
 //!   first-crossing times with the Catwalk k-clip (k from the manifest,
 //!   mirroring `aot.py` which lowers `column_forward` with `k_clip = K`),
-//!   then the 1-WTA winner mask. Rows at or below
-//!   [`SPARSE_DENSITY_CUTOVER`] line activity are evaluated by
-//!   [`rnl_forward_sparse`]'s spiking-lines-only loop — the software
-//!   analogue of the Catwalk relocation — bit-identical to the dense
-//!   sweep [`rnl_forward`].
-//! * `"train"` → forward + [`stdp_update`] — the winner-gated
-//!   expected-value STDP step, batch-averaged exactly like
-//!   `model.py::stdp_update` (learning rates from
+//!   then the 1-WTA winner mask. Path selection per batch row (silent
+//!   skip / compacted / dense-SIMD) happens inside the plan at the
+//!   calibrated [`SPARSE_DENSITY_CUTOVER`], overridable via
+//!   `CATWALK_SPARSE_CUTOVER`.
+//! * `"train"` → `plan.forward()` + `plan.stdp()` / `plan.stdp_gated()`
+//!   — the winner-gated expected-value STDP step, batch-averaged exactly
+//!   like `model.py::stdp_update` (learning rates from
 //!   [`StdpParams::default`], which the native [`crate::tnn::stdp`] rule
 //!   shares).
 //! * `"topk"` → [`topk_taps`] — the per-cycle top-k counting oracle; the
 //!   gate-level selection network is proven equivalent to it in
 //!   `rust/tests/runtime_roundtrip.rs`.
 //!
+//! The former free-function entry points (`rnl_forward`,
+//! `rnl_forward_sparse`, `rnl_forward_auto`, `wta_mask`, `stdp_update`,
+//! `stdp_update_gated`, `row_path`) remain below as thin wrappers over
+//! the plan for one PR — **deprecated**: new code should build a
+//! [`KernelPlan`](crate::runtime::plan::KernelPlan) and call it directly.
+//!
 //! This is the default backend: it needs nothing on disk, so the whole
 //! serving stack (coordinator, batcher, TCP server, experiment drivers)
 //! runs and is tested on every commit without libxla.
 
+use super::plan::{ForwardArgs, KernelPath, KernelPlan, StdpArgs};
 use super::{Backend, Entry, Kernel, Manifest, Tensor};
 use crate::error::{Error, Result};
 use crate::tnn::stdp::StdpParams;
 use std::path::Path;
+
+// The path-selection vocabulary moved into the plan module with PR 6;
+// re-exported here so existing imports keep compiling for one PR.
+pub use super::plan::{RowPath, SPARSE_DENSITY_CUTOVER};
 
 /// Zero-state backend handle; all kernel state lives in the manifest.
 pub struct NativeBackend;
@@ -40,12 +55,18 @@ impl Backend for NativeBackend {
 
     fn load(&self, _dir: &Path, entry: &Entry, manifest: &Manifest) -> Result<Box<dyn Kernel>> {
         let t_max = manifest.t_max;
+        // One plan per kernel instance, environment-aware: the engine
+        // that loads this kernel and the serving metrics both resolve
+        // the same cutover.
+        let plan = KernelPlan::from_env()?;
         match entry.kind.as_str() {
             "forward" => Ok(Box::new(ForwardKernel {
+                plan,
                 t_max,
                 k_clip: Some(manifest.k as f32),
             })),
             "train" => Ok(Box::new(TrainKernel {
+                plan,
                 t_max,
                 k_clip: Some(manifest.k as f32),
                 params: StdpParams::default(),
@@ -60,25 +81,23 @@ impl Backend for NativeBackend {
 }
 
 struct ForwardKernel {
+    plan: KernelPlan,
     t_max: usize,
     k_clip: Option<f32>,
 }
 
 impl Kernel for ForwardKernel {
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let times = rnl_forward_auto(
-            &inputs[0],
-            &inputs[1],
-            inputs[2].data[0],
-            self.t_max,
-            self.k_clip,
-        );
-        let mask = wta_mask(&times, self.t_max);
+        let args = ForwardArgs::new(&inputs[0], &inputs[1], inputs[2].data[0], self.t_max)
+            .k_clip(self.k_clip);
+        let times = self.plan.forward(&args);
+        let mask = self.plan.wta(&times, self.t_max);
         Ok(vec![times, mask])
     }
 }
 
 struct TrainKernel {
+    plan: KernelPlan,
     t_max: usize,
     k_clip: Option<f32>,
     params: StdpParams,
@@ -91,13 +110,19 @@ impl Kernel for TrainKernel {
     /// shard cannot see the global winner, so its caller must).
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let (weights, spikes, theta) = (&inputs[0], &inputs[1], inputs[2].data[0]);
-        let times = rnl_forward_auto(spikes, weights, theta, self.t_max, self.k_clip);
-        let mask = wta_mask(&times, self.t_max);
+        let args = ForwardArgs::new(spikes, weights, theta, self.t_max).k_clip(self.k_clip);
+        let times = self.plan.forward(&args);
+        let mask = self.plan.wta(&times, self.t_max);
+        let stdp = StdpArgs {
+            weights,
+            in_times: spikes,
+            out_times: &times,
+            t_max: self.t_max,
+            params: &self.params,
+        };
         let new_w = match inputs.get(3) {
-            Some(gates) => {
-                stdp_update_gated(weights, spikes, &times, gates, self.t_max, &self.params)
-            }
-            None => stdp_update(weights, spikes, &times, &mask, self.t_max, &self.params),
+            Some(gates) => self.plan.stdp_gated(&stdp, gates),
+            None => self.plan.stdp(&stdp, &mask),
         };
         Ok(vec![new_w, times, mask])
     }
@@ -119,6 +144,10 @@ impl Kernel for TopkKernel {
 /// first-crossing times `[B, C]` in `0..=t_max` (`t_max` = no spike). The
 /// per-cycle response count is optionally clipped at `k_clip` (the
 /// Catwalk dendrite) before accumulating into the membrane potential.
+///
+/// **Deprecated** (kept for one PR): this is the plan's `Scalar` path —
+/// new code should call
+/// `KernelPlan::with_path(KernelPath::Scalar).forward(&args)`.
 pub fn rnl_forward(
     spikes: &Tensor,
     weights: &Tensor,
@@ -126,140 +155,31 @@ pub fn rnl_forward(
     t_max: usize,
     k_clip: Option<f32>,
 ) -> Tensor {
-    let (b, n) = (spikes.shape[0], spikes.shape[1]);
-    let c = weights.shape[0];
-    let mut out = Tensor::zeros(vec![b, c]);
-    for bi in 0..b {
-        let volley = &spikes.data[bi * n..(bi + 1) * n];
-        // Padded/silent rows (the batcher pads to the manifest batch with
-        // all-t_max volleys) accumulate zero every cycle: skip the
-        // O(c * t_max * n) scan. With theta <= 0 a zero potential still
-        // crosses at t = 0, so that case takes the general path.
-        if theta > 0.0 && volley.iter().all(|&s| s >= t_max as f32) {
-            for ci in 0..c {
-                out.data[bi * c + ci] = t_max as f32;
-            }
-            continue;
-        }
-        for ci in 0..c {
-            let w = &weights.data[ci * n..(ci + 1) * n];
-            out.data[bi * c + ci] = first_crossing_dense(volley, w, theta, t_max, k_clip);
-        }
-    }
-    out
+    KernelPlan::with_path(KernelPath::Scalar)
+        .forward(&ForwardArgs::new(spikes, weights, theta, t_max).k_clip(k_clip))
 }
 
-/// Line density at or below which the sparse row evaluation beats the
-/// dense sweep (per-row decision in [`rnl_forward_auto`]). At the
-/// biological ~5–20% activity the paper targets, volleys fall well under
-/// this; a dense request (or an adversarially busy one) falls back to the
-/// dense sweep.
-pub const SPARSE_DENSITY_CUTOVER: f32 = 0.25;
-
-/// Which evaluation [`rnl_forward_auto`] applies to one batch row.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum RowPath {
-    /// No spiking line and `theta > 0`: the row can never cross, skip it.
-    SilentSkip,
-    /// At or below [`SPARSE_DENSITY_CUTOVER`]: iterate spiking lines only.
-    Sparse,
-    /// Busier than the cutover: full dense sweep.
-    Dense,
-}
-
-/// The per-row path decision, shared with the serving metrics
-/// (`coordinator::service`) so `STATS` counters cannot drift from what
+/// The per-row path decision at the calibrated default cutover, shared
+/// with the serving metrics so `STATS` counters cannot drift from what
 /// the kernel actually executes.
-pub fn row_path(active: usize, n: usize, theta: f32) -> RowPath {
-    if active == 0 && theta > 0.0 {
-        RowPath::SilentSkip
-    } else if (active as f32) <= SPARSE_DENSITY_CUTOVER * n as f32 {
-        RowPath::Sparse
-    } else {
-        RowPath::Dense
-    }
-}
-
-/// One column's first-crossing time over a dense volley row — the inner
-/// loop of [`rnl_forward`], kept as the bit-exact reference the sparse
-/// evaluation is conformance-gated against.
-#[inline]
-fn first_crossing_dense(
-    volley: &[f32],
-    w: &[f32],
-    theta: f32,
-    t_max: usize,
-    k_clip: Option<f32>,
-) -> f32 {
-    let mut pot = 0f32;
-    for t in 0..t_max {
-        let tf = t as f32;
-        let mut count = 0f32;
-        for (&s, &wi) in volley.iter().zip(w) {
-            if tf >= s && tf < s + wi {
-                count += 1.0;
-            }
-        }
-        if let Some(k) = k_clip {
-            count = count.min(k);
-        }
-        pot += count;
-        if pot >= theta {
-            return tf;
-        }
-    }
-    t_max as f32
-}
-
-/// One column's first-crossing time iterating only the spiking lines.
 ///
-/// Bit-identical to [`first_crossing_dense`]: the per-cycle count is a
-/// sum of ones (exact in f32 far beyond any n here) over exactly the
-/// lines whose ramp is active, so count, clip, and running potential take
-/// identical values in either evaluation order.
-#[inline]
-fn first_crossing_sparse(
-    active: &[(usize, f32)],
-    w: &[f32],
-    theta: f32,
-    t_max: usize,
-    k_clip: Option<f32>,
-) -> f32 {
-    let mut pot = 0f32;
-    for t in 0..t_max {
-        let tf = t as f32;
-        let mut count = 0f32;
-        for &(line, s) in active {
-            if tf >= s && tf < s + w[line] {
-                count += 1.0;
-            }
-        }
-        if let Some(k) = k_clip {
-            count = count.min(k);
-        }
-        pot += count;
-        if pot >= theta {
-            return tf;
-        }
-    }
-    t_max as f32
+/// **Deprecated** (kept for one PR): environment-blind — new code should
+/// hold a `KernelPlan` (e.g. from `KernelPlan::from_env()`) and call its
+/// `row_path` so metric classification honors the same cutover the
+/// kernel runs at.
+pub fn row_path(active: usize, n: usize, theta: f32) -> RowPath {
+    KernelPlan::auto().row_path(active, n, theta)
 }
 
-/// Spiking lines of one dense volley row, sorted by line (silent = `>=
-/// t_max` or NaN, matching [`crate::volley::SpikeVolley`] semantics).
-fn row_spike_list(volley: &[f32], t_max: usize) -> Vec<(usize, f32)> {
-    volley
-        .iter()
-        .enumerate()
-        .filter(|&(_, &s)| s < t_max as f32)
-        .map(|(i, &s)| (i, s))
-        .collect()
-}
-
-/// Sparsity-aware RNL forward: every row is evaluated by iterating only
-/// its spiking lines — O(C · t_max · nnz) instead of O(C · t_max · n).
-/// Output is bit-identical to [`rnl_forward`] (see
-/// `rust/tests/runtime_roundtrip.rs` for the conformance gate).
+/// Sparsity-aware RNL forward: every non-silent row is evaluated on the
+/// compacted (software-Catwalk) path — O(C · t_max · nnz) contiguous
+/// work instead of O(C · t_max · n). Output is bit-identical to
+/// [`rnl_forward`] (see `rust/tests/runtime_roundtrip.rs` for the
+/// conformance gate).
+///
+/// **Deprecated** (kept for one PR): this is the plan's `Compacted` path
+/// — new code should call
+/// `KernelPlan::with_path(KernelPath::Compacted).forward(&args)`.
 pub fn rnl_forward_sparse(
     spikes: &Tensor,
     weights: &Tensor,
@@ -267,24 +187,18 @@ pub fn rnl_forward_sparse(
     t_max: usize,
     k_clip: Option<f32>,
 ) -> Tensor {
-    let (b, n) = (spikes.shape[0], spikes.shape[1]);
-    let c = weights.shape[0];
-    let mut out = Tensor::zeros(vec![b, c]);
-    for bi in 0..b {
-        let active = row_spike_list(&spikes.data[bi * n..(bi + 1) * n], t_max);
-        for ci in 0..c {
-            let w = &weights.data[ci * n..(ci + 1) * n];
-            out.data[bi * c + ci] = first_crossing_sparse(&active, w, theta, t_max, k_clip);
-        }
-    }
-    out
+    KernelPlan::with_path(KernelPath::Compacted)
+        .forward(&ForwardArgs::new(spikes, weights, theta, t_max).k_clip(k_clip))
 }
 
-/// RNL forward with an automatic per-row density cutover: silent rows are
-/// skipped outright, rows at or below [`SPARSE_DENSITY_CUTOVER`] take the
-/// sparse evaluation, busier rows take the dense sweep. This is what the
-/// native forward/train kernels execute; all three paths are bit-exact
+/// RNL forward with the automatic per-row density cutover: silent rows
+/// are skipped outright, rows at or below the cutover are compacted,
+/// busier rows take the (SIMD) dense sweep. All paths are bit-exact
 /// equals of each other.
+///
+/// **Deprecated** (kept for one PR): this is `KernelPlan::auto()` at the
+/// default cutover (no environment override) — new code should build the
+/// plan once and reuse it.
 pub fn rnl_forward_auto(
     spikes: &Tensor,
     weights: &Tensor,
@@ -292,57 +206,17 @@ pub fn rnl_forward_auto(
     t_max: usize,
     k_clip: Option<f32>,
 ) -> Tensor {
-    let (b, n) = (spikes.shape[0], spikes.shape[1]);
-    let c = weights.shape[0];
-    let mut out = Tensor::zeros(vec![b, c]);
-    for bi in 0..b {
-        let volley = &spikes.data[bi * n..(bi + 1) * n];
-        let active_count = volley.iter().filter(|&&s| s < t_max as f32).count();
-        match row_path(active_count, n, theta) {
-            RowPath::SilentSkip => {
-                for ci in 0..c {
-                    out.data[bi * c + ci] = t_max as f32;
-                }
-            }
-            RowPath::Sparse => {
-                // the spike list is only materialized on rows that use it
-                let active = row_spike_list(volley, t_max);
-                for ci in 0..c {
-                    let w = &weights.data[ci * n..(ci + 1) * n];
-                    out.data[bi * c + ci] =
-                        first_crossing_sparse(&active, w, theta, t_max, k_clip);
-                }
-            }
-            RowPath::Dense => {
-                for ci in 0..c {
-                    let w = &weights.data[ci * n..(ci + 1) * n];
-                    out.data[bi * c + ci] = first_crossing_dense(volley, w, theta, t_max, k_clip);
-                }
-            }
-        }
-    }
-    out
+    KernelPlan::auto().forward(&ForwardArgs::new(spikes, weights, theta, t_max).k_clip(k_clip))
 }
 
 /// 1-WTA one-hot mask of the earliest-spiking column per batch row
 /// (ties → lowest index; all-zero row when nothing spiked). Mirrors
 /// `model.py::wta`.
+///
+/// **Deprecated** (kept for one PR): new code should call
+/// `KernelPlan::wta` on the plan it already holds.
 pub fn wta_mask(times: &Tensor, t_max: usize) -> Tensor {
-    let (b, c) = (times.shape[0], times.shape[1]);
-    let mut mask = Tensor::zeros(vec![b, c]);
-    for bi in 0..b {
-        let row = &times.data[bi * c..(bi + 1) * c];
-        let mut best = 0usize;
-        for (i, &t) in row.iter().enumerate() {
-            if t < row[best] {
-                best = i;
-            }
-        }
-        if row[best] < t_max as f32 {
-            mask.data[bi * c + best] = 1.0;
-        }
-    }
-    mask
+    KernelPlan::auto().wta(times, t_max)
 }
 
 /// Winner-gated expected-value STDP, batch-averaged (mirrors
@@ -351,12 +225,8 @@ pub fn wta_mask(times: &Tensor, t_max: usize) -> Tensor {
 /// silent — otherwise a dead network could never become responsive),
 /// averaged over the batch, then clipped into `[0, w_max]`.
 ///
-/// Implemented as the local-gate derivation (`clamp(mask + row_silent)`)
-/// in front of [`stdp_update_gated`], which does the actual
-/// accumulation — the sharded execution layer ([`crate::shard`]) calls
-/// the gated entry point directly with gates computed from the *global*
-/// (cross-shard) winner, and sharing the loop is what makes the two
-/// paths bit-identical.
+/// **Deprecated** (kept for one PR): new code should call
+/// `KernelPlan::stdp` with a [`StdpArgs`].
 pub fn stdp_update(
     weights: &Tensor,
     in_times: &Tensor,
@@ -365,20 +235,16 @@ pub fn stdp_update(
     t_max: usize,
     p: &StdpParams,
 ) -> Tensor {
-    let (c, _n) = (weights.shape[0], weights.shape[1]);
-    let b = in_times.shape[0];
-    let t_inf = t_max as f32;
-    let mut gates = Tensor::zeros(vec![b, c]);
-    for bi in 0..b {
-        let y_times = &out_times.data[bi * c..(bi + 1) * c];
-        let row_silent = y_times.iter().all(|&t| t >= t_inf);
-        for ci in 0..c {
-            gates.data[bi * c + ci] = (winner_mask.data[bi * c + ci]
-                + if row_silent { 1.0 } else { 0.0 })
-            .clamp(0.0, 1.0);
-        }
-    }
-    stdp_update_gated(weights, in_times, out_times, &gates, t_max, p)
+    KernelPlan::auto().stdp(
+        &StdpArgs {
+            weights,
+            in_times,
+            out_times,
+            t_max,
+            params: p,
+        },
+        winner_mask,
+    )
 }
 
 /// The STDP accumulation with externally supplied per-`(row, column)`
@@ -388,6 +254,9 @@ pub fn stdp_update(
 /// `1` for the global WTA winner, `1` for every column of a globally
 /// silent row, `0` otherwise — and hands it in. With gates derived
 /// locally ([`stdp_update`]) this is exactly the historical update.
+///
+/// **Deprecated** (kept for one PR): new code should call
+/// `KernelPlan::stdp_gated` with a [`StdpArgs`].
 pub fn stdp_update_gated(
     weights: &Tensor,
     in_times: &Tensor,
@@ -396,42 +265,16 @@ pub fn stdp_update_gated(
     t_max: usize,
     p: &StdpParams,
 ) -> Tensor {
-    let (c, n) = (weights.shape[0], weights.shape[1]);
-    let b = in_times.shape[0];
-    let t_inf = t_max as f32;
-    let mut acc = vec![0f32; c * n];
-    for bi in 0..b {
-        let x_times = &in_times.data[bi * n..(bi + 1) * n];
-        let y_times = &out_times.data[bi * c..(bi + 1) * c];
-        for ci in 0..c {
-            let gate = gates.data[bi * c + ci];
-            if gate <= 0.0 {
-                continue;
-            }
-            let t_y = y_times[ci];
-            let y_spk = t_y < t_inf;
-            for (i, &t_x) in x_times.iter().enumerate() {
-                let w = weights.data[ci * n + i];
-                let x_spk = t_x < t_inf;
-                let delta = if x_spk && y_spk && t_x <= t_y {
-                    p.mu_capture * (p.w_max - w)
-                } else if (x_spk && y_spk && t_x > t_y) || (!x_spk && y_spk) {
-                    -p.mu_backoff * w
-                } else if x_spk && !y_spk {
-                    p.mu_search * (p.w_max - w)
-                } else {
-                    0.0
-                };
-                acc[ci * n + i] += gate * delta;
-            }
-        }
-    }
-    let inv_b = 1.0 / b as f32;
-    let mut out = weights.clone();
-    for (w, a) in out.data.iter_mut().zip(&acc) {
-        *w = (*w + a * inv_b).clamp(0.0, p.w_max);
-    }
-    out
+    KernelPlan::auto().stdp_gated(
+        &StdpArgs {
+            weights,
+            in_times,
+            out_times,
+            t_max,
+            params: p,
+        },
+        gates,
+    )
 }
 
 /// Per-cycle unary top-k taps (mirrors `ref.py::topk_wave_ref`): tap `j`

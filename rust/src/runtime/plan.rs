@@ -1,0 +1,835 @@
+//! `KernelPlan`: the compute-layer dispatch surface (DESIGN.md §2.5).
+//!
+//! Every RNL forward/train execution in the crate flows through one
+//! [`KernelPlan`] — the engine ([`crate::coordinator::TnnHandle`]'s
+//! service via the native [`crate::runtime::Backend`]), the sharded
+//! execution layer, the benches and the conformance tests all talk to
+//! this one seam instead of the former pile of free functions
+//! (`rnl_forward`, `rnl_forward_sparse`, `rnl_forward_auto`,
+//! `stdp_update`, `stdp_update_gated` — kept as thin deprecated
+//! wrappers in [`crate::runtime::native`] for one PR). A plan owns the
+//! three execution decisions:
+//!
+//! * **Layout** — the batch sweep is column-major: for each weight row
+//!   (output column) all volleys of the batch are evaluated before the
+//!   next row is touched, so one traversal of the `n`-wide weight row
+//!   serves the whole batch from L1 instead of being re-streamed per
+//!   volley (the seed kernel's row-walk).
+//! * **SIMD** — the per-cycle active-line count vectorizes over lanes
+//!   with explicit `core::arch` intrinsics (AVX2 when the CPU has it,
+//!   SSE2 — the x86_64 baseline — otherwise, scalar on other
+//!   architectures). The count is an integer popcount of a compare
+//!   mask, so its value cannot depend on summation order and every
+//!   SIMD width is bit-identical to the scalar loop.
+//! * **Software Catwalk** — the paper's unary top-k relocates a
+//!   volley's sparse spikes into a sorted dense cluster before
+//!   accumulation; [`CompactVolleys`] is that relocation in software.
+//!   Once per batch, each volley's scattered `(line, time)` entries
+//!   compact into one contiguous CSR-style run (sorted by line), and
+//!   the per-column sweep gathers the matching weights once and then
+//!   scans two dense arrays — O(t_max · nnz) contiguous work instead
+//!   of either the O(t_max · n) dense sweep or the old per-cycle
+//!   `w[line]` indirection.
+//!
+//! Bit-identity across paths is a hard contract (the sharding and
+//! checkpoint layers depend on replies being byte-stable under path
+//! changes): all inner loops share [`first_crossing`], counts are
+//! integers, the k-clip and threshold comparisons are applied in the
+//! same order, so `Scalar`, `Simd` and `Compacted` agree bit for bit —
+//! gated in `rust/tests/runtime_roundtrip.rs`, property-tested in
+//! `rust/tests/coordinator_props.rs`, and twinned against
+//! `python/compile/kernels/ref.py`.
+
+use super::Tensor;
+use crate::error::{Error, Result};
+use crate::tnn::stdp::StdpParams;
+use std::sync::OnceLock;
+
+/// Line density at or below which the auto path compacts a batch row
+/// instead of running the dense sweep. Recalibrated for PR 6 from the
+/// measured crossover of the new paths on an AVX2 host (EXPERIMENTS.md
+/// §Perf 8: the compacted sweep wins up to ~55% density against the
+/// SIMD dense sweep; the pre-SIMD cutover of 0.25 was calibrated
+/// against the scalar sweep the plan no longer runs by default).
+pub const SPARSE_DENSITY_CUTOVER: f32 = 0.55;
+
+/// Cutover used when no SIMD dense sweep is available (non-x86_64
+/// scalar fallback): without vector counts the dense sweep is so much
+/// slower that compaction pays almost up to full density.
+pub const SCALAR_FALLBACK_CUTOVER: f32 = 0.90;
+
+/// Environment variable overriding the auto-path cutover (a density in
+/// `[0, 1]`), read by [`KernelPlan::from_env`] — the knob the
+/// `bench_json` sweeps turn to locate the crossover on a new host.
+pub const CUTOVER_ENV: &str = "CATWALK_SPARSE_CUTOVER";
+
+/// Which execution path a [`KernelPlan`] runs for the forward sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Dense sweep, scalar inner loop — the bit-exact reference every
+    /// other path is gated against.
+    Scalar,
+    /// Dense sweep with the SIMD active-line count (falls back to the
+    /// scalar count on architectures without one).
+    Simd,
+    /// Software Catwalk: compact every volley's spikes into a dense
+    /// sorted run once per batch, sweep the runs.
+    Compacted,
+    /// Per-row choice by measured density cutover: silent rows are
+    /// skipped, rows at or below the cutover are compacted, busier
+    /// rows take the SIMD dense sweep.
+    Auto,
+}
+
+/// Which evaluation the auto path applies to one batch row. The same
+/// classification drives the serving metrics
+/// (`coordinator::service::record_sparsity`), so the `STATS` counters
+/// cannot drift from what the kernel executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowPath {
+    /// No spiking line and `theta > 0`: the row can never cross, skip it.
+    SilentSkip,
+    /// At or below the plan's cutover: compacted evaluation.
+    Sparse,
+    /// Busier than the cutover: dense sweep.
+    Dense,
+}
+
+/// SIMD capability of the running CPU for the active-line count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// No vector count — scalar inner loop.
+    None,
+    /// 4-lane SSE2 count (the x86_64 baseline, always sound there).
+    Sse2,
+    /// 8-lane AVX2 count (runtime-detected).
+    Avx2,
+}
+
+/// Runtime CPU capability probe, cached for the process lifetime.
+pub fn detect_simd() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Sse2
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            SimdLevel::None
+        }
+    })
+}
+
+/// Inputs of one forward execution: `spikes` `[B, n]` (`>= t_max` or
+/// NaN = silent), `weights` `[C, n]`, firing threshold, horizon, and
+/// the optional Catwalk k-clip on the per-cycle response count.
+pub struct ForwardArgs<'a> {
+    pub spikes: &'a Tensor,
+    pub weights: &'a Tensor,
+    pub theta: f32,
+    pub t_max: usize,
+    pub k_clip: Option<f32>,
+}
+
+impl<'a> ForwardArgs<'a> {
+    pub fn new(spikes: &'a Tensor, weights: &'a Tensor, theta: f32, t_max: usize) -> Self {
+        ForwardArgs {
+            spikes,
+            weights,
+            theta,
+            t_max,
+            k_clip: None,
+        }
+    }
+
+    pub fn k_clip(mut self, k: Option<f32>) -> Self {
+        self.k_clip = k;
+        self
+    }
+}
+
+/// Inputs of one STDP update: current `weights` `[C, n]`, input spike
+/// times `[B, n]`, output first-crossing times `[B, C]`, horizon, and
+/// the learning-rate bundle.
+pub struct StdpArgs<'a> {
+    pub weights: &'a Tensor,
+    pub in_times: &'a Tensor,
+    pub out_times: &'a Tensor,
+    pub t_max: usize,
+    pub params: &'a StdpParams,
+}
+
+/// The relocation stage of the software Catwalk path: every volley's
+/// scattered spiking lines compacted into one contiguous CSR-style
+/// buffer — per row, a dense sorted-by-line run of `(line, time)`
+/// pairs in struct-of-arrays form. Built once per batch; the
+/// per-column sweep then gathers each run's weights once and scans
+/// dense memory only.
+pub struct CompactVolleys {
+    offsets: Vec<usize>,
+    lines: Vec<u32>,
+    times: Vec<f32>,
+}
+
+impl CompactVolleys {
+    /// Compact a `[B, n]` spike tensor (silent = `>= t_max` or NaN,
+    /// matching [`crate::volley::SpikeVolley`] semantics).
+    pub fn build(spikes: &Tensor, t_max: usize) -> CompactVolleys {
+        let (b, n) = (spikes.shape[0], spikes.shape[1]);
+        let t_inf = t_max as f32;
+        let mut offsets = Vec::with_capacity(b + 1);
+        let mut lines = Vec::new();
+        let mut times = Vec::new();
+        offsets.push(0);
+        for bi in 0..b {
+            for (i, &s) in spikes.data[bi * n..(bi + 1) * n].iter().enumerate() {
+                if s < t_inf {
+                    lines.push(i as u32);
+                    times.push(s);
+                }
+            }
+            offsets.push(lines.len());
+        }
+        CompactVolleys {
+            offsets,
+            lines,
+            times,
+        }
+    }
+
+    /// Row `bi`'s dense run as `(lines, times)` slices.
+    pub fn row(&self, bi: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.offsets[bi], self.offsets[bi + 1]);
+        (&self.lines[lo..hi], &self.times[lo..hi])
+    }
+
+    /// Spiking-line count of row `bi`.
+    pub fn row_nnz(&self, bi: usize) -> usize {
+        self.offsets[bi + 1] - self.offsets[bi]
+    }
+
+    /// Largest per-row run (scratch sizing for the weight gather).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.offsets.len() - 1)
+            .map(|bi| self.row_nnz(bi))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// How one batch row executes under a given plan (the resolved form of
+/// [`RowPath`]: explicit paths force every non-silent row one way).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RowExec {
+    Skip,
+    Dense,
+    Compact,
+}
+
+/// The kernel dispatch plan: execution path, density cutover, SIMD
+/// capability. Cheap to build and `Copy` — engines build one per open,
+/// benches build one per sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelPlan {
+    path: KernelPath,
+    cutover: f32,
+    simd: SimdLevel,
+}
+
+impl Default for KernelPlan {
+    fn default() -> Self {
+        KernelPlan::auto()
+    }
+}
+
+impl KernelPlan {
+    /// The serving default: auto path selection at the calibrated
+    /// cutover ([`SPARSE_DENSITY_CUTOVER`], or
+    /// [`SCALAR_FALLBACK_CUTOVER`] without a SIMD count) with the
+    /// detected SIMD level. Does not consult the environment — see
+    /// [`KernelPlan::from_env`].
+    pub fn auto() -> KernelPlan {
+        let simd = detect_simd();
+        KernelPlan {
+            path: KernelPath::Auto,
+            cutover: default_cutover(simd),
+            simd,
+        }
+    }
+
+    /// [`KernelPlan::auto`] with the cutover overridable via
+    /// [`CUTOVER_ENV`]; a malformed value is a typed error, never a
+    /// silent fallback (same contract as `CATWALK_BACKEND`).
+    pub fn from_env() -> Result<KernelPlan> {
+        let mut plan = KernelPlan::auto();
+        match std::env::var(CUTOVER_ENV) {
+            Err(std::env::VarError::NotPresent) => {}
+            Err(std::env::VarError::NotUnicode(_)) => {
+                return Err(Error::Runtime(format!(
+                    "{CUTOVER_ENV} is set to a non-unicode value"
+                )));
+            }
+            Ok(v) => {
+                plan.cutover = parse_cutover(&v).ok_or_else(|| {
+                    Error::Runtime(format!(
+                        "{CUTOVER_ENV}=`{v}` is not a density in [0, 1]"
+                    ))
+                })?;
+            }
+        }
+        Ok(plan)
+    }
+
+    /// A plan pinned to one execution path (conformance gates, benches,
+    /// crossover sweeps). Auto-path decisions still use the calibrated
+    /// default cutover.
+    pub fn with_path(path: KernelPath) -> KernelPlan {
+        KernelPlan {
+            path,
+            ..KernelPlan::auto()
+        }
+    }
+
+    /// Override the auto-path cutover (clamped to `[0, 1]`).
+    pub fn with_cutover(mut self, cutover: f32) -> KernelPlan {
+        self.cutover = cutover.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Force the SIMD level (scalar-fallback measurement on SIMD hosts).
+    pub fn with_simd(mut self, simd: SimdLevel) -> KernelPlan {
+        self.simd = match simd {
+            SimdLevel::None => SimdLevel::None,
+            requested => {
+                // never grant a level the CPU lacks
+                if detect_simd() == SimdLevel::Avx2 || requested == SimdLevel::Sse2 {
+                    requested
+                } else {
+                    detect_simd()
+                }
+            }
+        };
+        self
+    }
+
+    pub fn path(&self) -> KernelPath {
+        self.path
+    }
+
+    pub fn cutover(&self) -> f32 {
+        self.cutover
+    }
+
+    pub fn simd(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// The auto path's per-row decision — shared with the serving
+    /// metrics so `STATS` counters match kernel execution exactly.
+    pub fn row_path(&self, active: usize, n: usize, theta: f32) -> RowPath {
+        if active == 0 && theta > 0.0 {
+            RowPath::SilentSkip
+        } else if (active as f32) <= self.cutover * n as f32 {
+            RowPath::Sparse
+        } else {
+            RowPath::Dense
+        }
+    }
+
+    fn row_exec(&self, active: usize, n: usize, theta: f32) -> RowExec {
+        let silent = active == 0 && theta > 0.0;
+        match self.path {
+            KernelPath::Scalar | KernelPath::Simd => {
+                if silent {
+                    RowExec::Skip
+                } else {
+                    RowExec::Dense
+                }
+            }
+            KernelPath::Compacted => {
+                if silent {
+                    RowExec::Skip
+                } else {
+                    RowExec::Compact
+                }
+            }
+            KernelPath::Auto => match self.row_path(active, n, theta) {
+                RowPath::SilentSkip => RowExec::Skip,
+                RowPath::Sparse => RowExec::Compact,
+                RowPath::Dense => RowExec::Dense,
+            },
+        }
+    }
+
+    /// SIMD level the dense/compacted counts run at under this plan.
+    fn count_simd(&self) -> SimdLevel {
+        match self.path {
+            KernelPath::Scalar => SimdLevel::None,
+            _ => self.simd,
+        }
+    }
+
+    /// Batched SRM0-RNL first-crossing times `[B, C]` (mirrors
+    /// `ref.py::rnl_column_ref`; `t_max` = no spike). Column-major
+    /// sweep; per-row execution resolved once per batch.
+    pub fn forward(&self, a: &ForwardArgs) -> Tensor {
+        let (b, n) = (a.spikes.shape[0], a.spikes.shape[1]);
+        let c = a.weights.shape[0];
+        let t_inf = a.t_max as f32;
+        let mut out = Tensor::zeros(vec![b, c]);
+
+        // classify every row once (the seed kernel re-derived this per
+        // row-column pair)
+        let exec: Vec<RowExec> = (0..b)
+            .map(|bi| {
+                let row = &a.spikes.data[bi * n..(bi + 1) * n];
+                let active = row.iter().filter(|&&s| s < t_inf).count();
+                self.row_exec(active, n, a.theta)
+            })
+            .collect();
+
+        // relocation stage: one CSR compaction per batch, only if some
+        // row runs compacted
+        let compact = if exec.contains(&RowExec::Compact) {
+            Some(CompactVolleys::build(a.spikes, a.t_max))
+        } else {
+            None
+        };
+
+        for (bi, e) in exec.iter().enumerate() {
+            if *e == RowExec::Skip {
+                out.data[bi * c..(bi + 1) * c].fill(t_inf);
+            }
+        }
+
+        let simd = self.count_simd();
+        let mut wk: Vec<f32> =
+            Vec::with_capacity(compact.as_ref().map_or(0, |cv| cv.max_row_nnz()));
+        for ci in 0..c {
+            let w = &a.weights.data[ci * n..(ci + 1) * n];
+            for (bi, e) in exec.iter().enumerate() {
+                let t = match e {
+                    RowExec::Skip => continue,
+                    RowExec::Dense => {
+                        let volley = &a.spikes.data[bi * n..(bi + 1) * n];
+                        first_crossing(volley, w, a.theta, a.t_max, a.k_clip, simd)
+                    }
+                    RowExec::Compact => {
+                        let (lines, times) =
+                            compact.as_ref().expect("compaction built").row(bi);
+                        wk.clear();
+                        wk.extend(lines.iter().map(|&l| w[l as usize]));
+                        first_crossing(times, &wk, a.theta, a.t_max, a.k_clip, simd)
+                    }
+                };
+                out.data[bi * c + ci] = t;
+            }
+        }
+        out
+    }
+
+    /// 1-WTA one-hot mask of the earliest-spiking column per batch row
+    /// (ties → lowest index; all-zero row when nothing spiked). Mirrors
+    /// `model.py::wta`; path-independent.
+    pub fn wta(&self, times: &Tensor, t_max: usize) -> Tensor {
+        let (b, c) = (times.shape[0], times.shape[1]);
+        let mut mask = Tensor::zeros(vec![b, c]);
+        for bi in 0..b {
+            let row = &times.data[bi * c..(bi + 1) * c];
+            let mut best = 0usize;
+            for (i, &t) in row.iter().enumerate() {
+                if t < row[best] {
+                    best = i;
+                }
+            }
+            if row[best] < t_max as f32 {
+                mask.data[bi * c + best] = 1.0;
+            }
+        }
+        mask
+    }
+
+    /// Winner-gated expected-value STDP, batch-averaged (mirrors
+    /// `ref.py::stdp_ref`): the local-gate derivation
+    /// (`clamp(mask + row_silent)`) in front of
+    /// [`KernelPlan::stdp_gated`], which does the actual accumulation —
+    /// sharing the loop is what keeps the local and sharded (global
+    /// gate) paths bit-identical.
+    pub fn stdp(&self, a: &StdpArgs, winner_mask: &Tensor) -> Tensor {
+        let c = a.weights.shape[0];
+        let b = a.in_times.shape[0];
+        let t_inf = a.t_max as f32;
+        let mut gates = Tensor::zeros(vec![b, c]);
+        for bi in 0..b {
+            let y_times = &a.out_times.data[bi * c..(bi + 1) * c];
+            let row_silent = y_times.iter().all(|&t| t >= t_inf);
+            for ci in 0..c {
+                gates.data[bi * c + ci] = (winner_mask.data[bi * c + ci]
+                    + if row_silent { 1.0 } else { 0.0 })
+                .clamp(0.0, 1.0);
+            }
+        }
+        self.stdp_gated(a, &gates)
+    }
+
+    /// The STDP accumulation with externally supplied per-`(row,
+    /// column)` gates in `[0, 1]` — the primitive a column shard needs:
+    /// its local winner mask is meaningless (the real winner may live
+    /// in another shard), so the scatter/gather layer computes the
+    /// global gate and hands it in. Deliberately scalar and in fixed
+    /// loop order: the f32 accumulation sequence is part of the
+    /// bit-identity contract with the sharded learn protocol.
+    pub fn stdp_gated(&self, a: &StdpArgs, gates: &Tensor) -> Tensor {
+        let (c, n) = (a.weights.shape[0], a.weights.shape[1]);
+        let b = a.in_times.shape[0];
+        let t_inf = a.t_max as f32;
+        let p = a.params;
+        let mut acc = vec![0f32; c * n];
+        for bi in 0..b {
+            let x_times = &a.in_times.data[bi * n..(bi + 1) * n];
+            let y_times = &a.out_times.data[bi * c..(bi + 1) * c];
+            for ci in 0..c {
+                let gate = gates.data[bi * c + ci];
+                if gate <= 0.0 {
+                    continue;
+                }
+                let t_y = y_times[ci];
+                let y_spk = t_y < t_inf;
+                for (i, &t_x) in x_times.iter().enumerate() {
+                    let w = a.weights.data[ci * n + i];
+                    let x_spk = t_x < t_inf;
+                    let delta = if x_spk && y_spk && t_x <= t_y {
+                        p.mu_capture * (p.w_max - w)
+                    } else if (x_spk && y_spk && t_x > t_y) || (!x_spk && y_spk) {
+                        -p.mu_backoff * w
+                    } else if x_spk && !y_spk {
+                        p.mu_search * (p.w_max - w)
+                    } else {
+                        0.0
+                    };
+                    acc[ci * n + i] += gate * delta;
+                }
+            }
+        }
+        let inv_b = 1.0 / b as f32;
+        let mut out = a.weights.clone();
+        for (w, acc_i) in out.data.iter_mut().zip(&acc) {
+            *w = (*w + acc_i * inv_b).clamp(0.0, p.w_max);
+        }
+        out
+    }
+}
+
+fn default_cutover(simd: SimdLevel) -> f32 {
+    if simd == SimdLevel::None {
+        SCALAR_FALLBACK_CUTOVER
+    } else {
+        SPARSE_DENSITY_CUTOVER
+    }
+}
+
+/// Parse a cutover density; `None` unless a finite value in `[0, 1]`.
+pub fn parse_cutover(v: &str) -> Option<f32> {
+    v.trim()
+        .parse::<f32>()
+        .ok()
+        .filter(|x| x.is_finite() && (0.0..=1.0).contains(x))
+}
+
+/// One (row, column) first-crossing time over paired `(spike, weight)`
+/// slices — dense row or compacted run alike (a silent dense lane
+/// contributes 0 to every cycle's count exactly like an absent
+/// compacted lane, which is the whole bit-identity argument). The
+/// per-cycle count is an integer, so every count kernel yields the
+/// same f32 sequence for `pot` regardless of lane order or width.
+#[inline]
+fn first_crossing(
+    s: &[f32],
+    w: &[f32],
+    theta: f32,
+    t_max: usize,
+    k_clip: Option<f32>,
+    simd: SimdLevel,
+) -> f32 {
+    let mut pot = 0f32;
+    for t in 0..t_max {
+        let tf = t as f32;
+        let mut count = count_active(s, w, tf, simd) as f32;
+        if let Some(k) = k_clip {
+            count = count.min(k);
+        }
+        pot += count;
+        if pot >= theta {
+            return tf;
+        }
+    }
+    t_max as f32
+}
+
+/// Number of lanes whose ramp is active at cycle `tf`: `tf >= s[i] &&
+/// tf < s[i] + w[i]`. NaN spike times (non-canonical "silent") fail
+/// both the scalar comparison and the ordered SIMD compares, so every
+/// kernel counts them as inactive.
+#[inline]
+fn count_active(s: &[f32], w: &[f32], tf: f32, simd: SimdLevel) -> usize {
+    debug_assert_eq!(s.len(), w.len());
+    match simd {
+        SimdLevel::None => count_active_scalar(s, w, tf),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::count_active_sse2(s, w, tf) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::count_active_avx2(s, w, tf) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdLevel::Sse2 | SimdLevel::Avx2 => count_active_scalar(s, w, tf),
+    }
+}
+
+#[inline]
+fn count_active_scalar(s: &[f32], w: &[f32], tf: f32) -> usize {
+    s.iter()
+        .zip(w)
+        .filter(|&(&si, &wi)| tf >= si && tf < si + wi)
+        .count()
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! Explicit-SIMD active-line counts. Both kernels compute the exact
+    //! scalar predicate per lane (`s <= tf` ∧ `tf < s + w`, ordered
+    //! compares so NaN lanes never count), collapse the mask with
+    //! `movemask` + popcount, and hand the ragged tail to the scalar
+    //! loop — the result is an integer, identical to
+    //! [`super::count_active_scalar`] by construction.
+
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// SSE2 is part of the x86_64 baseline ABI; sound on every x86_64
+    /// CPU this crate compiles for.
+    #[inline]
+    pub unsafe fn count_active_sse2(s: &[f32], w: &[f32], tf: f32) -> usize {
+        let n = s.len();
+        let tv = _mm_set1_ps(tf);
+        let mut count = 0usize;
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let sv = _mm_loadu_ps(s.as_ptr().add(i));
+            let wv = _mm_loadu_ps(w.as_ptr().add(i));
+            let ge = _mm_cmple_ps(sv, tv); // tf >= s
+            let lt = _mm_cmplt_ps(tv, _mm_add_ps(sv, wv)); // tf < s + w
+            let mask = _mm_movemask_ps(_mm_and_ps(ge, lt)) as u32;
+            count += mask.count_ones() as usize;
+            i += 4;
+        }
+        count + super::count_active_scalar(&s[i..], &w[i..], tf)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support
+    /// (`std::arch::is_x86_feature_detected!("avx2")` — cached by
+    /// [`super::detect_simd`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn count_active_avx2(s: &[f32], w: &[f32], tf: f32) -> usize {
+        let n = s.len();
+        let tv = _mm256_set1_ps(tf);
+        let mut count = 0usize;
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let sv = _mm256_loadu_ps(s.as_ptr().add(i));
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            let ge = _mm256_cmp_ps::<_CMP_LE_OQ>(sv, tv); // tf >= s
+            let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(tv, _mm256_add_ps(sv, wv)); // tf < s + w
+            let mask = _mm256_movemask_ps(_mm256_and_ps(ge, lt)) as u32;
+            count += mask.count_ones() as usize;
+            i += 8;
+        }
+        count + super::count_active_scalar(&s[i..], &w[i..], tf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    const TM: usize = 16;
+
+    fn random_problem(
+        rng: &mut Xoshiro256,
+        b: usize,
+        c: usize,
+        n: usize,
+        density: f64,
+    ) -> (Tensor, Tensor) {
+        let spikes: Vec<f32> = (0..b * n)
+            .map(|_| {
+                if rng.gen_bool(density) {
+                    (rng.gen_f64() * 10.0) as f32
+                } else {
+                    TM as f32
+                }
+            })
+            .collect();
+        let weights: Vec<f32> = (0..c * n).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
+        (
+            Tensor::new(vec![b, n], spikes).unwrap(),
+            Tensor::new(vec![c, n], weights).unwrap(),
+        )
+    }
+
+    /// Every SIMD count kernel equals the scalar count on random lane
+    /// vectors of every alignment/tail length, NaN lanes included.
+    #[test]
+    fn count_kernels_agree_with_scalar() {
+        let mut rng = Xoshiro256::new(17);
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 33, 64, 100] {
+            for _ in 0..20 {
+                let s: Vec<f32> = (0..n)
+                    .map(|_| match rng.gen_range(10) {
+                        0 => f32::NAN,
+                        1 => TM as f32,
+                        _ => (rng.gen_f64() * 18.0) as f32,
+                    })
+                    .collect();
+                let w: Vec<f32> = (0..n).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
+                for t in 0..TM {
+                    let tf = t as f32;
+                    let scalar = count_active(&s, &w, tf, SimdLevel::None);
+                    for level in [SimdLevel::Sse2, SimdLevel::Avx2] {
+                        if level == SimdLevel::Avx2 && detect_simd() != SimdLevel::Avx2 {
+                            continue;
+                        }
+                        assert_eq!(
+                            count_active(&s, &w, tf, level),
+                            scalar,
+                            "n={n} t={t} level={level:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// All four plan paths produce bit-identical forwards across the
+    /// density range, clipped and unclipped.
+    #[test]
+    fn all_paths_bit_identical() {
+        let mut rng = Xoshiro256::new(23);
+        for &density in &[0.0, 0.05, 0.25, 0.55, 0.8, 1.0] {
+            for _ in 0..10 {
+                let (st, wt) = random_problem(&mut rng, 6, 5, 33, density);
+                let theta = (rng.gen_f64() * 11.0) as f32;
+                for k_clip in [None, Some(2.0)] {
+                    let args = ForwardArgs::new(&st, &wt, theta, TM).k_clip(k_clip);
+                    let scalar = KernelPlan::with_path(KernelPath::Scalar).forward(&args);
+                    for path in [KernelPath::Simd, KernelPath::Compacted, KernelPath::Auto] {
+                        let got = KernelPlan::with_path(path).forward(&args);
+                        let a: Vec<u32> = scalar.data.iter().map(|x| x.to_bits()).collect();
+                        let b: Vec<u32> = got.data.iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(a, b, "path {path:?} density {density} clip {k_clip:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Compaction is the exact sparse view of the batch: sorted by
+    /// line, spiking lines only, NaN treated as silent.
+    #[test]
+    fn compaction_matches_row_filter() {
+        let mut rng = Xoshiro256::new(31);
+        let (b, n) = (7, 29);
+        let mut spikes: Vec<f32> = (0..b * n)
+            .map(|_| {
+                if rng.gen_bool(0.3) {
+                    (rng.gen_f64() * 15.0) as f32
+                } else {
+                    TM as f32
+                }
+            })
+            .collect();
+        spikes[3] = f32::NAN; // non-canonical silent
+        let st = Tensor::new(vec![b, n], spikes.clone()).unwrap();
+        let cv = CompactVolleys::build(&st, TM);
+        let mut max_nnz = 0;
+        for bi in 0..b {
+            let expect: Vec<(u32, f32)> = spikes[bi * n..(bi + 1) * n]
+                .iter()
+                .enumerate()
+                .filter(|&(_, &s)| s < TM as f32)
+                .map(|(i, &s)| (i as u32, s))
+                .collect();
+            let (lines, times) = cv.row(bi);
+            assert_eq!(lines.len(), expect.len());
+            assert_eq!(cv.row_nnz(bi), expect.len());
+            for (j, &(l, t)) in expect.iter().enumerate() {
+                assert_eq!((lines[j], times[j]), (l, t));
+            }
+            max_nnz = max_nnz.max(expect.len());
+        }
+        assert_eq!(cv.max_row_nnz(), max_nnz);
+    }
+
+    /// Cutover parsing accepts densities, rejects everything else; the
+    /// env-free constructors use the calibrated defaults.
+    #[test]
+    fn cutover_parse_and_defaults() {
+        assert_eq!(parse_cutover("0.4"), Some(0.4));
+        assert_eq!(parse_cutover(" 1.0 "), Some(1.0));
+        assert_eq!(parse_cutover("0"), Some(0.0));
+        assert_eq!(parse_cutover("1.5"), None);
+        assert_eq!(parse_cutover("-0.1"), None);
+        assert_eq!(parse_cutover("NaN"), None);
+        assert_eq!(parse_cutover("abc"), None);
+        assert_eq!(parse_cutover(""), None);
+
+        let plan = KernelPlan::auto();
+        assert_eq!(plan.path(), KernelPath::Auto);
+        let expect = if detect_simd() == SimdLevel::None {
+            SCALAR_FALLBACK_CUTOVER
+        } else {
+            SPARSE_DENSITY_CUTOVER
+        };
+        assert_eq!(plan.cutover(), expect);
+        assert_eq!(plan.with_cutover(2.0).cutover(), 1.0);
+        assert_eq!(plan.with_cutover(-1.0).cutover(), 0.0);
+    }
+
+    /// The row classification honors the plan's cutover and the theta
+    /// <= 0 edge (a zero potential crosses at t = 0, so silent rows
+    /// must not be skipped).
+    #[test]
+    fn row_path_honors_cutover_and_theta_edge() {
+        let plan = KernelPlan::auto().with_cutover(0.25);
+        assert_eq!(plan.row_path(0, 16, 6.0), RowPath::SilentSkip);
+        assert_eq!(plan.row_path(0, 16, 0.0), RowPath::Sparse);
+        assert_eq!(plan.row_path(4, 16, 6.0), RowPath::Sparse);
+        assert_eq!(plan.row_path(5, 16, 6.0), RowPath::Dense);
+        let wide = plan.with_cutover(1.0);
+        assert_eq!(wide.row_path(16, 16, 6.0), RowPath::Sparse);
+    }
+
+    /// theta <= 0 crosses at t = 0 everywhere on every path, even with
+    /// an all-silent batch (the general-path edge the silent skip must
+    /// not swallow).
+    #[test]
+    fn theta_zero_crosses_immediately_on_all_paths() {
+        let st = Tensor::new(vec![2, 8], vec![TM as f32; 16]).unwrap();
+        let wt = Tensor::zeros(vec![3, 8]);
+        for path in [
+            KernelPath::Scalar,
+            KernelPath::Simd,
+            KernelPath::Compacted,
+            KernelPath::Auto,
+        ] {
+            let args = ForwardArgs::new(&st, &wt, 0.0, TM);
+            let out = KernelPlan::with_path(path).forward(&args);
+            assert!(out.data.iter().all(|&t| t == 0.0), "path {path:?}");
+        }
+    }
+}

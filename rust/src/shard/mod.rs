@@ -33,7 +33,7 @@
 //!   `1` everywhere on a globally silent row, `0` otherwise — so
 //!   learning runs a two-phase protocol per chunk: phase 1 scatters a
 //!   forward pass and gathers the global winners; phase 2 scatters a
-//!   gated update ([`crate::runtime::native::stdp_update_gated`]) with
+//!   gated update ([`crate::runtime::plan::KernelPlan::stdp_gated`]) with
 //!   each shard's slice of those gates. Each column's weights are
 //!   touched only by its own shard, and the accumulation arithmetic is
 //!   the unsharded kernel's loop restricted to the shard's rows.
@@ -643,7 +643,7 @@ impl ShardedModel {
 /// Concatenated per-column times → one [`VolleyResult`] with the
 /// global WTA winner: the earliest time wins, ties break to the lowest
 /// column index, an all-silent row has no winner — the exact scan
-/// `runtime::native::wta_mask` performs on the unsharded matrix.
+/// `runtime::plan::KernelPlan::wta` performs on the unsharded matrix.
 pub fn merge_result(times: &[f32], t_max: usize) -> VolleyResult {
     let mut best = 0usize;
     for (i, &t) in times.iter().enumerate() {

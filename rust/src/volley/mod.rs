@@ -9,9 +9,11 @@
 //! analogue of that relocation: a [`SpikeVolley`] travels through the
 //! serving stack (TCP server → [`crate::coordinator::DynamicBatcher`] →
 //! [`crate::coordinator::TnnHandle`] → `runtime::native`) in whichever
-//! representation is compact, and the native kernel iterates only the
-//! spiking lines when the density is below the cutover
-//! (`runtime::native::SPARSE_DENSITY_CUTOVER`).
+//! representation is compact, and the native kernel compacts a row's
+//! spiking lines into a dense run (the software-Catwalk path) when its
+//! density is below the plan's cutover
+//! (`runtime::plan::SPARSE_DENSITY_CUTOVER`, env-overridable via
+//! `CATWALK_SPARSE_CUTOVER`).
 //!
 //! Representations (DESIGN.md §2.1):
 //!

@@ -6,7 +6,7 @@ use catwalk::coordinator::Metrics;
 use catwalk::quickprop::{forall, FnGen, UsizeRange};
 use catwalk::report::{Json, Table};
 use catwalk::rng::Xoshiro256;
-use catwalk::runtime::native::{rnl_forward, rnl_forward_auto, rnl_forward_sparse};
+use catwalk::runtime::plan::{ForwardArgs, KernelPath, KernelPlan};
 use catwalk::runtime::Tensor;
 use catwalk::volley::SpikeVolley;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -177,11 +177,12 @@ fn prop_volley_roundtrip_lossless() {
     );
 }
 
-/// `rnl_forward_sparse` (and the auto-cutover dispatch) equal the dense
-/// sweep bit-for-bit at arbitrary sparsity levels, shapes, thresholds
-/// and clips.
+/// Scalar == SIMD == catwalk-compacted == auto forward, bit for bit,
+/// across random (n, c, t_max, sparsity) — the all-silent and
+/// fully-dense corners drawn with positive probability every run — at
+/// random cutovers, thresholds and clips.
 #[test]
-fn prop_sparse_forward_matches_dense() {
+fn prop_kernel_paths_bit_identical() {
     forall(
         8,
         64,
@@ -189,27 +190,42 @@ fn prop_sparse_forward_matches_dense() {
             let b = 1 + rng.gen_range(6);
             let c = 1 + rng.gen_range(8);
             let n = 1 + rng.gen_range(48);
-            let density = rng.gen_f64();
+            let t_max = 4 + rng.gen_range(28);
+            // density corners drawn explicitly: 0 = all-silent, 1 = fully dense
+            let density = match rng.gen_range(5) {
+                0 => 0.0,
+                1 => 1.0,
+                _ => rng.gen_f64(),
+            };
             let spikes: Vec<f32> = (0..b * n)
                 .map(|_| {
                     if rng.gen_bool(density) {
-                        (rng.gen_f64() * 12.0) as f32
+                        (rng.gen_f64() * t_max as f64) as f32
                     } else {
-                        T_MAX as f32
+                        t_max as f32
                     }
                 })
                 .collect();
             let weights: Vec<f32> = (0..c * n).map(|_| (rng.gen_f64() * 7.0) as f32).collect();
             let theta = (rng.gen_f64() * 12.0) as f32; // includes the theta = 0 edge
-            (b, c, n, spikes, weights, theta)
+            let cutover = rng.gen_f64() as f32; // auto decisions at arbitrary cutovers
+            (b, c, n, t_max, spikes, weights, theta, cutover)
         }),
-        |(b, c, n, spikes, weights, theta)| {
+        |(b, c, n, t_max, spikes, weights, theta, cutover)| {
             let st = Tensor::new(vec![*b, *n], spikes.clone()).unwrap();
             let wt = Tensor::new(vec![*c, *n], weights.clone()).unwrap();
             [None, Some(2.0)].into_iter().all(|k_clip| {
-                let dense = rnl_forward(&st, &wt, *theta, T_MAX, k_clip);
-                rnl_forward_sparse(&st, &wt, *theta, T_MAX, k_clip).data == dense.data
-                    && rnl_forward_auto(&st, &wt, *theta, T_MAX, k_clip).data == dense.data
+                let args = ForwardArgs::new(&st, &wt, *theta, *t_max).k_clip(k_clip);
+                let bits = |t: Tensor| -> Vec<u32> {
+                    t.data.iter().map(|x| x.to_bits()).collect()
+                };
+                let scalar = bits(KernelPlan::with_path(KernelPath::Scalar).forward(&args));
+                [KernelPath::Simd, KernelPath::Compacted, KernelPath::Auto]
+                    .into_iter()
+                    .all(|path| {
+                        let plan = KernelPlan::with_path(path).with_cutover(*cutover);
+                        bits(plan.forward(&args)) == scalar
+                    })
             })
         },
     );

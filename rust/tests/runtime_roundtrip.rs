@@ -10,7 +10,7 @@
 use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
 use catwalk::neuron::behavior::rnl_first_crossing;
 use catwalk::rng::Xoshiro256;
-use catwalk::runtime::native::{rnl_forward, rnl_forward_auto, rnl_forward_sparse, wta_mask};
+use catwalk::runtime::plan::{detect_simd, ForwardArgs, KernelPath, KernelPlan, SimdLevel};
 use catwalk::runtime::{Runtime, Tensor};
 use catwalk::server::{Client, Server};
 use catwalk::sim::Simulator;
@@ -198,14 +198,17 @@ fn learn_updates_weights_within_bounds() {
     }
 }
 
-/// Conformance gate for the sparse native path: across sparsity levels
-/// (all-silent through fully dense, fractional spike times and weights,
-/// clipped and unclipped) the spiking-lines-only kernel and the
-/// auto-cutover kernel are **bit-identical** — spike times and WTA
-/// winners — to the dense golden model `rnl_forward`.
+/// Conformance gate for the kernel dispatch paths: across sparsity
+/// levels (all-silent through fully dense, fractional spike times and
+/// weights, clipped and unclipped) the SIMD dense sweep, the
+/// software-Catwalk compacted path and the auto cutover are
+/// **bit-identical** — spike times and WTA winners — to the scalar dense
+/// golden model (`KernelPath::Scalar`, the loop `ref.py::rnl_column_ref`
+/// mirrors).
 #[test]
-fn sparse_native_path_conformance_gate() {
+fn kernel_path_conformance_gate() {
     let t_max = 16usize;
+    let scalar_plan = KernelPlan::with_path(KernelPath::Scalar);
     let mut rng = Xoshiro256::new(2024);
     for &density in &[0.0, 0.05, 0.1, 0.25, 0.5, 1.0] {
         for _ in 0..10 {
@@ -224,22 +227,88 @@ fn sparse_native_path_conformance_gate() {
             let st = Tensor::new(vec![b, n], spikes).unwrap();
             let wt = Tensor::new(vec![c, n], weights).unwrap();
             for k_clip in [None, Some(2.0)] {
-                let dense = rnl_forward(&st, &wt, theta, t_max, k_clip);
-                let sparse = rnl_forward_sparse(&st, &wt, theta, t_max, k_clip);
-                let auto = rnl_forward_auto(&st, &wt, theta, t_max, k_clip);
-                assert_eq!(
-                    dense.data, sparse.data,
-                    "times diverge at density {density} clip {k_clip:?}"
-                );
-                assert_eq!(
-                    dense.data, auto.data,
-                    "auto diverges at density {density} clip {k_clip:?}"
-                );
-                let (md, ms) = (wta_mask(&dense, t_max), wta_mask(&sparse, t_max));
-                assert_eq!(
-                    md.data, ms.data,
-                    "winners diverge at density {density} clip {k_clip:?}"
-                );
+                let args = ForwardArgs::new(&st, &wt, theta, t_max).k_clip(k_clip);
+                let scalar = scalar_plan.forward(&args);
+                for path in [KernelPath::Simd, KernelPath::Compacted, KernelPath::Auto] {
+                    let plan = KernelPlan::with_path(path);
+                    let got = plan.forward(&args);
+                    let sb: Vec<u32> = scalar.data.iter().map(|x| x.to_bits()).collect();
+                    let gb: Vec<u32> = got.data.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(
+                        sb, gb,
+                        "{path:?} times diverge at density {density} clip {k_clip:?}"
+                    );
+                    let (ms, mg) = (
+                        scalar_plan.wta(&scalar, t_max),
+                        plan.wta(&got, t_max),
+                    );
+                    assert_eq!(
+                        ms.data, mg.data,
+                        "{path:?} winners diverge at density {density} clip {k_clip:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Every explicit kernel path — not just the serving default — matches
+/// the behavioral golden model `rnl_first_crossing` on integer problems,
+/// at every SIMD level the host can run. This pins all three rebuilt
+/// paths directly to the model the python oracle (`ref.py`) is itself
+/// verified against, rather than only to each other.
+#[test]
+fn all_kernel_paths_match_behavior_golden_model() {
+    let t_max = 16usize;
+    let theta = 6u32;
+    let mut rng = Xoshiro256::new(777);
+    let (b, c, n) = (12, 5, 24);
+    for _ in 0..20 {
+        let spikes: Vec<f32> = (0..b * n)
+            .map(|_| {
+                if rng.gen_bool(0.3) {
+                    rng.gen_range(8) as f32
+                } else {
+                    t_max as f32
+                }
+            })
+            .collect();
+        let weights: Vec<f32> = (0..c * n).map(|_| rng.gen_range(8) as f32).collect();
+        let st = Tensor::new(vec![b, n], spikes.clone()).unwrap();
+        let wt = Tensor::new(vec![c, n], weights.clone()).unwrap();
+        let args = ForwardArgs::new(&st, &wt, theta as f32, t_max);
+        for path in [
+            KernelPath::Scalar,
+            KernelPath::Simd,
+            KernelPath::Compacted,
+            KernelPath::Auto,
+        ] {
+            let mut levels = vec![SimdLevel::None, SimdLevel::Sse2];
+            if detect_simd() == SimdLevel::Avx2 {
+                levels.push(SimdLevel::Avx2);
+            }
+            for level in levels {
+                let times = KernelPlan::with_path(path).with_simd(level).forward(&args);
+                for bi in 0..b {
+                    let stv: Vec<Option<u32>> = spikes[bi * n..(bi + 1) * n]
+                        .iter()
+                        .map(|&s| if s < t_max as f32 { Some(s as u32) } else { None })
+                        .collect();
+                    for ci in 0..c {
+                        let wv: Vec<u32> = weights[ci * n..(ci + 1) * n]
+                            .iter()
+                            .map(|&w| w as u32)
+                            .collect();
+                        let expect = rnl_first_crossing(&stv, &wv, theta, t_max as u32)
+                            .map(|t| t as f32)
+                            .unwrap_or(t_max as f32);
+                        assert_eq!(
+                            times.at2(bi, ci),
+                            expect,
+                            "{path:?}/{level:?} row {bi} col {ci}"
+                        );
+                    }
+                }
             }
         }
     }

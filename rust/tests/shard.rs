@@ -10,7 +10,8 @@ use catwalk::proto::frame;
 use catwalk::quickprop::{forall, FnGen};
 use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
 use catwalk::rng::Xoshiro256;
-use catwalk::runtime::BackendKind;
+use catwalk::runtime::plan::{ForwardArgs, KernelPath, KernelPlan};
+use catwalk::runtime::{BackendKind, Tensor};
 use catwalk::server::{FramedClient, Server};
 use catwalk::shard::manifest::{ShardEntry, ShardManifest};
 use catwalk::shard::{merge_result, ShardedModel};
@@ -215,6 +216,55 @@ fn sharded_learn_matches_unsharded_bitwise() {
 fn merge_result_is_reexported_for_gather_consumers() {
     let r = merge_result(&[4.0, 2.0, 16.0], 16);
     assert_eq!(r.winner, Some(1));
+}
+
+/// Gather regression for the PR 6 kernel dispatch redesign: the sharded
+/// scatter/gather pipeline (per-shard engines → concatenation →
+/// [`merge_result`]) returns exactly what every explicit [`KernelPlan`]
+/// path computes on the full, unsharded weight matrix. If the new
+/// dispatch layer changed the gather contract in any way — ordering,
+/// tie-breaks, silent handling, path-dependent times — this diverges.
+#[test]
+fn sharded_gather_unchanged_under_kernel_plan_dispatch() {
+    if !native_env() {
+        return;
+    }
+    let (n, theta, seed, k) = (16usize, 6.0f32, 31u64, 3usize);
+    let sharded =
+        ShardedModel::open("/no-such-dir", n, theta, seed, k, BatcherConfig::default()).unwrap();
+    let (c, t_max) = (sharded.c, sharded.t_max);
+    let full_w = sharded.weights().unwrap();
+    let mut rng = Xoshiro256::new(4242);
+    for density in [0.0, 0.05, 0.25, 0.6, 1.0] {
+        let volleys = random_volleys(&mut rng, 10, n, density);
+        let got: Vec<_> = sharded
+            .infer(
+                volleys.iter().cloned().map(SpikeVolley::dense).collect(),
+                None,
+            )
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        let spikes = Tensor::new(
+            vec![volleys.len(), n],
+            volleys.iter().flatten().copied().collect(),
+        )
+        .unwrap();
+        for path in [KernelPath::Scalar, KernelPath::Simd, KernelPath::Compacted] {
+            // k_clip = 2.0: the clip the built-in manifest bakes into
+            // the native forward kernel (k = 2)
+            let args = ForwardArgs::new(&spikes, &full_w, theta, t_max).k_clip(Some(2.0));
+            let times = KernelPlan::with_path(path).forward(&args);
+            for (bi, g) in got.iter().enumerate() {
+                let row: Vec<f32> = (0..c).map(|ci| times.at2(bi, ci)).collect();
+                let expect = merge_result(&row, t_max);
+                assert_eq!(expect.winner, g.winner, "{path:?} density {density} row {bi}");
+                let eb: Vec<u32> = expect.times.iter().map(|t| t.to_bits()).collect();
+                let gb: Vec<u32> = g.times.iter().map(|t| t.to_bits()).collect();
+                assert_eq!(eb, gb, "{path:?} density {density} row {bi}");
+            }
+        }
+    }
 }
 
 // ------------------------------------------------- TCP e2e (acceptance)
