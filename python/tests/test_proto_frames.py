@@ -35,6 +35,8 @@ byte-for-byte a valid v3 frame without them):
     RESULTS  := count u16 | (winner i32 | c u32 | c*f32)*
     ADMIN    := 0 | receipt utf8                     (v3, OK)
               | 1 | count u16 | model_row*           (v3, MODELS)
+    BUSY     := retry_after_ms u32                   (v3, QoS shed;
+                a v2 connection gets ERROR text instead)
     model_row := str16 name | n u32 | c u32 | t_max u32
                  | theta f32 | seed u64 | mflags u8 (bit 0 default)
 """
@@ -51,7 +53,9 @@ MAX_PAYLOAD = 1 << 24
 T_HELLO, T_ACK, T_REQUEST, T_RESPONSE = 1, 2, 3, 4
 OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT, OP_ADMIN = 1, 2, 3, 4, 5, 6
 FLAG_SPARSE_REPLY, FLAG_DEADLINE, FLAG_COUNTERS_ONLY, FLAG_MODEL = 1, 2, 4, 8
-ST_RESULTS, ST_STATS, ST_PONG, ST_BYE, ST_ERROR, ST_ADMIN = 0, 1, 2, 3, 4, 5
+ST_RESULTS, ST_STATS, ST_PONG, ST_BYE, ST_ERROR, ST_ADMIN, ST_BUSY = (
+    0, 1, 2, 3, 4, 5, 6,
+)
 CMD_LIST, CMD_CREATE, CMD_SAVE, CMD_LOAD, CMD_UNLOAD = 1, 2, 3, 4, 5
 ADMIN_OK, ADMIN_MODELS = 0, 1
 MFLAG_DEFAULT = 1
@@ -247,6 +251,11 @@ def response_admin_ok(rid, receipt):
     return struct.pack(">QBB", rid, ST_ADMIN, ADMIN_OK) + receipt.encode("utf-8")
 
 
+def response_busy(rid, retry_after_ms):
+    """QoS load shed (v3-only): admission refused, retry hint in ms."""
+    return struct.pack(">QBI", rid, ST_BUSY, retry_after_ms)
+
+
 def response_admin_models(rid, rows):
     """rows: (name, n, c, t_max, theta, seed, default) tuples."""
     p = struct.pack(">QBBH", rid, ST_ADMIN, ADMIN_MODELS, len(rows))
@@ -291,6 +300,10 @@ def parse_response(payload):
             cur.finish()
             return {"id": rid, "models": rows}
         raise ValueError("unknown admin reply kind %d" % kind)
+    if status == ST_BUSY:
+        retry = cur.take(">I")
+        cur.finish()
+        return {"id": rid, "busy_retry_after_ms": retry}
     raise ValueError("unknown response status %d" % status)
 
 
@@ -345,6 +358,15 @@ GOLDEN_MODELS_RESPONSE_HEX = (
 GOLDEN_HELLO_V3_HEX = "43574b32010000000400020003"
 GOLDEN_ACK_V3_HEX = "43574b32020000000e0003000000400000001000000010"
 
+# Response: id=7, BUSY with retry hint 250 ms — the QoS load-shed reply
+# (status 6, v3-only; PR 7). Shared with rust/tests/proto_frames.rs
+# (golden_busy_bytes_match_python_twin). On a v2 connection the server
+# degrades this to ST_ERROR with the rendered message
+# "server busy, retry after 250 ms"; the legacy text codec sends the
+# line "BUSY 250\n".
+GOLDEN_BUSY_RESPONSE_HEX = "43574b32040000000d000000000000000706000000fa"
+BUSY_TEXT_LINE = b"BUSY 250\n"
+
 
 def golden_request_bytes():
     return frame(
@@ -392,6 +414,10 @@ def golden_admin_create_bytes():
 
 def golden_admin_list_bytes():
     return frame(T_REQUEST, request(9, OP_ADMIN, admin=cmd_list()))
+
+
+def golden_busy_response_bytes():
+    return frame(T_RESPONSE, response_busy(7, 250))
 
 
 def golden_models_response_bytes():
@@ -567,6 +593,31 @@ def test_admin_frames_roundtrip_and_reject_garbage():
     for cut in range(len(good)):
         with pytest.raises(ValueError):
             parse_request(good[:cut])
+
+
+def test_golden_busy_response_bytes_match_contract():
+    assert golden_busy_response_bytes().hex() == GOLDEN_BUSY_RESPONSE_HEX
+
+
+def test_busy_response_roundtrip_and_degrade():
+    (ftype, payload), rest = parse_frame(golden_busy_response_bytes())
+    assert (ftype, rest) == (T_RESPONSE, b"")
+    assert payload[8] == ST_BUSY
+    resp = parse_response(payload)
+    assert resp == {"id": 7, "busy_retry_after_ms": 250}
+    # every truncation of the payload raises instead of misparsing
+    for cut in range(len(payload)):
+        with pytest.raises(ValueError):
+            parse_response(payload[:cut])
+    # ...and so do trailing bytes after the retry hint
+    with pytest.raises(ValueError):
+        parse_response(payload + b"\x00")
+    # the v2 degrade is an ordinary ERROR frame with the rendered text —
+    # a v2-only reader never sees status 6 on the wire
+    degraded = struct.pack(">QB", 7, ST_ERROR) + b"server busy, retry after 250 ms"
+    assert parse_response(degraded)["error"] == "server busy, retry after 250 ms"
+    # legacy text codec: same shed as a parseable one-line reply
+    assert BUSY_TEXT_LINE.decode("ascii") == "BUSY %d\n" % 250
 
 
 def test_admin_response_roundtrip():

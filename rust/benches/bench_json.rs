@@ -1,6 +1,7 @@
-//! Machine-readable kernel-path benchmark: sweeps every [`KernelPlan`]
-//! path over the density range and writes the perf-trajectory point
-//! `BENCH_6.json` at the repo root (EXPERIMENTS.md §Perf 8).
+//! Machine-readable benchmark: sweeps every [`KernelPlan`] path over
+//! the density range, replays QoS traffic at rate multiples, and writes
+//! the perf-trajectory point `BENCH_7.json` at the repo root
+//! (EXPERIMENTS.md §Perf 8 and §Serving).
 //!
 //! Run: `make bench-json` (or `cargo bench --bench bench_json`).
 //! Override the output path with `BENCH_JSON_OUT=/path/file.json`;
@@ -10,10 +11,14 @@
 use catwalk::bench_util::{bench, bench_header};
 use catwalk::coordinator::pool::par_map;
 use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
+use catwalk::qos::replay::{self, ReplayLog, ReplayOptions, SynthSpec};
+use catwalk::qos::QosConfig;
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
 use catwalk::report::Json;
 use catwalk::rng::Xoshiro256;
 use catwalk::runtime::plan::{detect_simd, ForwardArgs, KernelPath, KernelPlan};
 use catwalk::runtime::Tensor;
+use catwalk::server::Server;
 use catwalk::volley::SpikeVolley;
 use std::sync::Arc;
 
@@ -116,9 +121,85 @@ fn main() {
     let volleys_per_s = r.throughput((threads * per_thread) as u64);
     println!("  batcher: {volleys_per_s:.0} volleys/s");
 
+    // QoS replay: the same traffic log at 1x/2x/4x, lanes off vs on
+    // (the qos_serve bench prints the same sweep in prose).
+    let spec = SynthSpec {
+        requests: 1000,
+        rate_per_s: 4000.0,
+        n: N,
+        t_max: T_MAX,
+        deadline_ms: Some(50),
+        models: vec![String::new()],
+        seed: 7,
+    };
+    let log = ReplayLog::synthesize(&spec);
+    let mut qos_rows = Vec::new();
+    for (mode, qos) in [
+        ("off", QosConfig::default()),
+        (
+            "on",
+            QosConfig {
+                infer_depth: 64,
+                ..QosConfig::on()
+            },
+        ),
+    ] {
+        let registry = Arc::new(
+            ModelRegistry::open(
+                RegistryConfig {
+                    qos,
+                    ..RegistryConfig::default()
+                },
+                "default",
+                ModelSpec {
+                    n: N,
+                    theta: THETA,
+                    seed: 7,
+                },
+            )
+            .unwrap(),
+        );
+        let server = Arc::new(Server::with_registry(registry));
+        let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+        let srv = {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                server
+                    .serve("127.0.0.1:0", move |p| {
+                        let _ = port_tx.send(p);
+                    })
+                    .unwrap();
+            })
+        };
+        let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+        for multiple in [1.0, 2.0, 4.0] {
+            let opts = ReplayOptions { multiple, conns: 8 };
+            let r = replay::replay(&addr, &log, &opts).unwrap();
+            let shed_rate = r.busy as f64 / r.sent as f64;
+            println!(
+                "  qos {mode:3} {multiple:.0}x: {:.0} req/s  p99 {}us  shed {:.1}%",
+                r.rps(),
+                r.percentile_us(0.99),
+                shed_rate * 100.0
+            );
+            qos_rows.push(Json::Obj(vec![
+                ("mode".into(), Json::Str(mode.into())),
+                ("multiple".into(), Json::Num(multiple)),
+                ("req_per_s".into(), Json::Num(r.rps())),
+                ("p99_us".into(), Json::Num(r.percentile_us(0.99) as f64)),
+                ("shed_rate".into(), Json::Num(shed_rate)),
+                ("expired".into(), Json::Num(r.expired as f64)),
+            ]));
+        }
+        server
+            .stop_handle()
+            .store(true, std::sync::atomic::Ordering::Release);
+        srv.join().unwrap();
+    }
+
     let doc = Json::Obj(vec![
-        ("bench".into(), Json::Str("kernel_path_sweep".into())),
-        ("pr".into(), Json::Num(6.0)),
+        ("bench".into(), Json::Str("kernel_path_sweep+qos_serve".into())),
+        ("pr".into(), Json::Num(7.0)),
         (
             "geometry".into(),
             Json::Obj(vec![
@@ -137,12 +218,13 @@ fn main() {
             "batcher_volleys_per_s".into(),
             Json::Num(volleys_per_s),
         ),
+        ("qos_serve".into(), Json::Arr(qos_rows)),
         (
             "harness".into(),
             Json::Str("rust bench_util (make bench-json)".into()),
         ),
     ]);
-    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_6.json".into());
+    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_7.json".into());
     std::fs::write(&out, doc.render() + "\n").unwrap();
     println!("  wrote {out}");
 }

@@ -1,0 +1,117 @@
+//! QoS serving bench: replay one synthesized CWKR traffic log against
+//! the same model at 1x/2x/4x recorded rate, once with QoS disabled and
+//! once with admission lanes on, and report throughput, tail latency,
+//! and shed rate side by side — the numbers EXPERIMENTS.md §Serving
+//! records for the QoS subsystem.
+//!
+//! The contract under test: with lanes on, overload is refused *early*
+//! (typed BUSY, no queue slot, no compute), so the requests that are
+//! admitted keep a bounded queue ahead of them and the infer p99 stays
+//! flat while the no-QoS server lets its queue grow until deadlines
+//! burn inside the batcher.
+//!
+//! Run: `cargo bench --bench qos_serve`
+
+use catwalk::bench_util::bench_header;
+use catwalk::qos::replay::{self, ReplayLog, ReplayOptions, SynthSpec};
+use catwalk::qos::QosConfig;
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use catwalk::server::Server;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+const N: usize = 64;
+const MULTIPLES: [f64; 3] = [1.0, 2.0, 4.0];
+
+fn boot(qos: QosConfig) -> (Arc<Server>, String, std::thread::JoinHandle<()>) {
+    let cfg = RegistryConfig {
+        qos,
+        ..RegistryConfig::default()
+    };
+    let spec = ModelSpec {
+        n: N,
+        theta: 8.0,
+        seed: 7,
+    };
+    let registry = Arc::new(ModelRegistry::open(cfg, "default", spec).unwrap());
+    let server = Arc::new(Server::with_registry(registry));
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    (server, addr, srv)
+}
+
+fn stop(server: &Server, srv: std::thread::JoinHandle<()>) {
+    server.stop_handle().store(true, Ordering::Release);
+    srv.join().unwrap();
+}
+
+fn run_side(label: &str, qos: QosConfig, log: &ReplayLog) -> Vec<(f64, f64, u64, f64)> {
+    let (server, addr, srv) = boot(qos);
+    let mut rows = Vec::new();
+    for multiple in MULTIPLES {
+        let opts = ReplayOptions { multiple, conns: 8 };
+        let r = replay::replay(&addr, log, &opts).unwrap();
+        assert_eq!(r.transport_errors, 0, "replay hit transport errors");
+        assert_eq!(r.answered(), r.sent, "silent drop under {label} at {multiple}x");
+        let shed_rate = r.busy as f64 / r.sent as f64;
+        println!(
+            "  {label:7} {multiple:.0}x: {:8.0} req/s  p50 {:6}us  p99 {:7}us  \
+             shed {:5.1}%  expired {}",
+            r.rps(),
+            r.percentile_us(0.50),
+            r.percentile_us(0.99),
+            shed_rate * 100.0,
+            r.expired,
+        );
+        rows.push((multiple, r.rps(), r.percentile_us(0.99), shed_rate));
+    }
+    stop(&server, srv);
+    rows
+}
+
+fn main() {
+    bench_header("qos serving: replay at rate multiples, lanes on vs off");
+    let spec = SynthSpec {
+        requests: 2000,
+        rate_per_s: 4000.0,
+        n: N,
+        t_max: 16,
+        deadline_ms: Some(50),
+        models: vec![String::new()],
+        seed: 7,
+    };
+    let log = ReplayLog::synthesize(&spec);
+    println!(
+        "  log: {} requests over {:?} recorded ({}-line volleys, 50 ms deadline)",
+        log.entries.len(),
+        log.duration(),
+        N
+    );
+
+    let off = run_side("qos-off", QosConfig::default(), &log);
+    let lanes = QosConfig {
+        infer_depth: 64,
+        ..QosConfig::on()
+    };
+    let on = run_side("qos-on", lanes, &log);
+
+    for ((m, _, p99_off, _), (_, _, p99_on, shed)) in off.iter().zip(on.iter()) {
+        println!(
+            "  {m:.0}x: infer p99 {:.2}x of no-QoS baseline ({} vs {}us), shed {:.1}%",
+            *p99_on as f64 / (*p99_off).max(1) as f64,
+            p99_on,
+            p99_off,
+            shed * 100.0
+        );
+    }
+}

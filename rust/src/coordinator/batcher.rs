@@ -235,8 +235,8 @@ fn batch_loop(
 ) {
     let (lock, cv) = &*queue;
     loop {
-        // collect a batch
-        let batch: Vec<Pending> = {
+        // collect a batch (and the expired entries dropped forming it)
+        let (batch, expired): (Vec<Pending>, Vec<Pending>) = {
             let mut q = lock.lock().unwrap();
             loop {
                 if q.pending.len() >= cfg.max_batch {
@@ -267,18 +267,29 @@ fn batch_loop(
                 let (guard, _) = cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
                 q = guard;
             }
-            let take = q.pending.len().min(cfg.max_batch);
-            q.pending.drain(..take).collect()
+            // Deadline-aware batch formation: expired entries are
+            // filtered out *while* the batch is formed — before any
+            // kernel execution — and live entries queued behind them
+            // backfill the freed slots, so a burst of doomed requests
+            // can neither reach the backend nor dilute the batch that
+            // does. (The old drain partitioned a fixed-size take
+            // afterwards, shipping partial batches whenever expired
+            // entries had claimed slots.)
+            let now = Instant::now();
+            let mut batch = Vec::with_capacity(q.pending.len().min(cfg.max_batch));
+            let mut expired = Vec::new();
+            while batch.len() < cfg.max_batch {
+                let Some(p) = q.pending.pop_front() else {
+                    break;
+                };
+                if p.deadline.is_some_and(|d| now >= d) {
+                    expired.push(p);
+                } else {
+                    batch.push(p);
+                }
+            }
+            (batch, expired)
         };
-        if batch.is_empty() {
-            continue;
-        }
-        // Expired requests are dropped at drain time — the one moment
-        // the batcher inspects every pending entry anyway — so a
-        // deadline bounds the queue wait, not just the dispatch check.
-        let now = Instant::now();
-        let (batch, expired): (Vec<Pending>, Vec<Pending>) =
-            batch.into_iter().partition(|p| !p.deadline.is_some_and(|d| now >= d));
         if !expired.is_empty() {
             service.metrics.incr("requests_expired", expired.len() as u64);
             for p in expired {

@@ -37,6 +37,18 @@ pub enum Error {
     /// message text.
     DeadlineExpired,
 
+    /// The server shed the request at admission: the target model's
+    /// bounded queue (or rate limit) had no room, so the request was
+    /// refused *before* costing any queue slot or compute. Carries the
+    /// shed layer's retry hint so clients can back off instead of
+    /// hammering. A dedicated variant so the codecs can render it as a
+    /// first-class status (`BUSY` text line, frame status 6 on v3).
+    Busy {
+        /// How long the shedding layer suggests the client wait before
+        /// retrying, in milliseconds.
+        retry_after_ms: u32,
+    },
+
     /// Serving front-end failure.
     Server(String),
 
@@ -74,6 +86,9 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::DeadlineExpired => write!(f, "deadline exceeded while queued"),
+            Error::Busy { retry_after_ms } => {
+                write!(f, "server busy, retry after {retry_after_ms} ms")
+            }
             Error::Server(m) => write!(f, "server error: {m}"),
             Error::Volley(m) => write!(f, "volley error: {m}"),
             Error::Proto(m) => write!(f, "proto error: {m}"),

@@ -26,7 +26,9 @@
 //!    with named instances and versioned weight checkpoints
 //!    ([`registry`]), a sharded-model execution layer that
 //!    scatter/gathers one model's output columns across K parallel
-//!    engines bit-identically ([`shard`]), a TCP serving front-end
+//!    engines bit-identically ([`shard`]), a QoS layer with per-model
+//!    admission control, priority lanes, load shedding and a
+//!    traffic-replay chaos harness ([`qos`]), a TCP serving front-end
 //!    speaking both codecs
 //!    ([`server`]), experiment drivers for every figure and table in
 //!    the paper ([`experiments`]), and report renderers ([`report`]).
@@ -54,6 +56,7 @@ pub mod neuron;
 pub mod pc;
 pub mod power;
 pub mod proto;
+pub mod qos;
 pub mod quickprop;
 pub mod registry;
 pub mod report;

@@ -11,12 +11,23 @@
 //! repro cluster             # E10 end-to-end STDP clustering via PJRT
 //! repro serve [--addr A] [--models name=n,theta[,seed][,shards=K];...]
 //!             [--ckpt-dir D] [--autosave-secs S]
+//!             [--qos] [--qos-depth N] [--qos-learn-depth N]
+//!             [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS]
 //!                           # TCP daemon (v3 framed + text compat);
 //!                           # multi-model registry + weight checkpoints;
 //!                           # shards=K scatter/gathers a model's output
-//!                           # columns across K parallel engines
+//!                           # columns across K parallel engines;
+//!                           # --qos* arms admission control: bounded
+//!                           # lanes shed with typed BUSY instead of
+//!                           # queueing without bound
 //! repro client [--addr A] [--framed] [--window W] [--model NAME]
 //!                           # load generator against a daemon
+//! repro replay --record F | [--log F] [--addr A] [--multiple X] | --chaos
+//!                           # record a CWKR traffic log, replay one
+//!                           # against a daemon at a rate multiple, or
+//!                           # run the canned chaos scenario (stalled
+//!                           # clients + shard kill + checkpoint
+//!                           # corruption) against a scratch server
 //! repro all                 # every figure/table, EXPERIMENTS.md-ready
 //! ```
 
@@ -49,7 +60,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K];...] [--ckpt-dir DIR] [--autosave-secs S]";
+const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|replay|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K];...] [--ckpt-dir DIR] [--autosave-secs S] [--qos] [--qos-depth N] [--qos-learn-depth N] [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS] [--record FILE | --log FILE | --chaos] [--multiple X] [--rate R] [--deadline-ms MS]";
 
 fn emit(t: &Table, csv: bool) {
     if csv {
@@ -100,6 +111,7 @@ fn run(args: &Args) -> Result<()> {
         "cluster" => cmd_cluster(args)?,
         "serve" => cmd_serve(args)?,
         "client" => cmd_client(args)?,
+        "replay" => cmd_replay(args)?,
         "export-verilog" => cmd_export_verilog(args)?,
         "all" => cmd_all(args, csv)?,
         "" => {
@@ -259,6 +271,32 @@ fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec, usize)> {
     ))
 }
 
+/// The `--qos*` knob family: `--qos` alone arms admission control at
+/// the defaults; any sizing knob (`--qos-depth`, `--qos-rate`, ...)
+/// also implies `--qos`, so `repro serve --qos-depth 8` does what it
+/// reads as.
+fn qos_from(args: &Args) -> Result<catwalk::qos::QosConfig> {
+    use catwalk::qos::QosConfig;
+    let d = QosConfig::default();
+    let knobs = [
+        "qos",
+        "qos-depth",
+        "qos-learn-depth",
+        "qos-rate",
+        "qos-burst",
+        "qos-retry-ms",
+    ];
+    let rate = args.get_f64("qos-rate", 0.0)?;
+    Ok(QosConfig {
+        enabled: knobs.iter().any(|f| args.switch(f)),
+        infer_depth: args.get_usize("qos-depth", d.infer_depth)?,
+        learn_depth: args.get_usize("qos-learn-depth", d.learn_depth)?,
+        rate_per_s: (rate > 0.0).then_some(rate),
+        burst: args.get_f64("qos-burst", d.burst)?,
+        retry_after_ms: args.get_u64("qos-retry-ms", d.retry_after_ms as u64)? as u32,
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get_string("artifacts", "artifacts");
     let addr = args.get_string("addr", "127.0.0.1:7070");
@@ -281,12 +319,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         specs.push(("default".into(), ModelSpec { n, theta, seed }, 1));
     }
 
+    let qos = qos_from(args)?;
     let cfg = RegistryConfig {
         artifacts_dir: artifacts.into(),
         batcher: BatcherConfig::default(),
         ckpt_dir: ckpt_dir.clone(),
         autosave_after: (autosave > 0 && ckpt_dir.is_some())
             .then(|| std::time::Duration::from_secs(autosave)),
+        qos,
     };
     let (default_name, default_spec, default_shards) = specs[0].clone();
     let registry = Arc::new(ModelRegistry::open_sharded(
@@ -332,6 +372,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 dir.display()
             );
         }
+    }
+    if qos.enabled {
+        println!(
+            "qos: infer lane {} / learn lane {}{} (full lanes shed with BUSY, retry {} ms)",
+            qos.infer_depth,
+            qos.learn_depth,
+            match qos.rate_per_s {
+                Some(r) => format!(", {r} volleys/s (burst {})", qos.burst),
+                None => String::new(),
+            },
+            qos.retry_after_ms
+        );
     }
     println!(
         "serving {} model(s) on {addr} — v3 framed protocol (HELLO/ACK, pipelined, \
@@ -438,6 +490,127 @@ fn cmd_client(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `repro replay` — the traffic-replay / chaos harness front-end.
+///
+/// Three modes, picked by flag:
+/// * `--record FILE` — synthesize a deterministic request stream
+///   (`--requests`, `--rate`, `--n`, `--deadline-ms`, `--route a,b`,
+///   `--seed`) and write it as a versioned CWKR log.
+/// * default — replay `--log FILE` (or a fresh synthetic stream)
+///   against `--addr` at `--multiple` times the recorded rate over
+///   `--connections` framed clients, then print the outcome ledger.
+/// * `--chaos` — boot a scratch registry+server, replay at the given
+///   multiple while stalling clients, killing a shard slot and
+///   corrupting a checkpoint mid-run, and verify the typed-error and
+///   old-weights-keep-serving contracts.
+fn cmd_replay(args: &Args) -> Result<()> {
+    use catwalk::qos::replay::{self, ChaosOptions, ReplayLog, ReplayOptions, SynthSpec};
+    use std::path::Path;
+
+    let spec = SynthSpec {
+        requests: args.get_usize("requests", 200)?,
+        rate_per_s: args.get_f64("rate", 500.0)?,
+        n: args.get_usize("n", 16)?,
+        t_max: args.get_usize("t-max", 16)?,
+        deadline_ms: match args.get_u64("deadline-ms", 250)? {
+            0 => None,
+            ms => Some(ms as u32),
+        },
+        models: args
+            .get_string("route", "")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect(),
+        seed: args.get_u64("seed", 7)?,
+    };
+    let opts = ReplayOptions {
+        multiple: args.get_f64("multiple", 1.0)?,
+        conns: args.get_usize("connections", 8)?,
+    };
+
+    if let Some(path) = args.flag("record") {
+        let log = ReplayLog::synthesize(&spec);
+        log.save(Path::new(path))?;
+        println!(
+            "recorded {} requests over {:?} to {path}",
+            log.entries.len(),
+            log.duration()
+        );
+        return Ok(());
+    }
+
+    if args.switch("chaos") {
+        // the chaos scenario is about QoS under faults — admission
+        // control is always armed here (sizing knobs still apply)
+        let mut qos = qos_from(args)?;
+        qos.enabled = true;
+        let scratch = match args.flag("scratch") {
+            Some(d) => std::path::PathBuf::from(d),
+            None => std::env::temp_dir().join(format!("catwalk-chaos-{}", std::process::id())),
+        };
+        let copts = ChaosOptions {
+            artifacts_dir: args.get_string("artifacts", "artifacts").into(),
+            scratch_dir: scratch,
+            spec,
+            replay: opts,
+            qos,
+            stall_clients: args.get_usize("stall-clients", 2)?,
+        };
+        let report = replay::chaos_run(&copts)?;
+        print_replay_report(&report.replay);
+        println!(
+            "chaos: victim typed errors {}  hangs {}  corrupt ckpt rejected {}  \
+             weights bit-identical {}  survivor serving {}",
+            report.victim_typed_errors,
+            report.victim_hangs,
+            report.corrupt_load_rejected,
+            report.weights_bit_identical,
+            report.survivor_serving
+        );
+        if !report.contracts_hold() {
+            return Err(Error::Coordinator(
+                "chaos contracts violated (see ledger above)".into(),
+            ));
+        }
+        println!("chaos contracts hold");
+        return Ok(());
+    }
+
+    let addr = args.get_string("addr", "127.0.0.1:7070");
+    let log = match args.flag("log") {
+        Some(p) => ReplayLog::read(Path::new(p))?,
+        None => ReplayLog::synthesize(&spec),
+    };
+    let report = replay::replay(&addr, &log, &opts)?;
+    print_replay_report(&report);
+    Ok(())
+}
+
+fn print_replay_report(r: &catwalk::qos::replay::ReplayReport) {
+    println!(
+        "replayed {} requests in {:?} -> {:.1} req/s",
+        r.sent,
+        r.wall,
+        r.rps()
+    );
+    println!(
+        "outcomes: results {}  busy {}  expired {}  errors {}  transport {}  (answered {}/{})",
+        r.results,
+        r.busy,
+        r.expired,
+        r.errors,
+        r.transport_errors,
+        r.answered(),
+        r.sent
+    );
+    println!(
+        "latency p50 {}us  p95 {}us  p99 {}us",
+        r.percentile_us(50.0),
+        r.percentile_us(95.0),
+        r.percentile_us(99.0)
+    );
 }
 
 /// Export any of the paper's designs as structural Verilog (NanGate45

@@ -34,7 +34,7 @@
 //!
 //! RESPONSE := id u64 | status u8 | body
 //! status   := 0 RESULTS | 1 STATS | 2 PONG | 3 BYE | 4 ERROR
-//!           | 5 ADMIN                    (v3)
+//!           | 5 ADMIN | 6 BUSY           (v3)
 //! RESULTS  := count u16 | (winner i32 (-1 = none) | c u32 | c × f32)*
 //! STATS    := utf8 key=value block (proto::stats schema)
 //! ERROR    := utf8 message          PONG/BYE := empty
@@ -42,6 +42,7 @@
 //!           | 1 u8 | count u16 | model_row*            (MODELS)
 //! model_row := name str16 | n u32 | c u32 | t_max u32
 //!              | theta f32 | seed u64 | mflags u8 (bit 0 = default)
+//! BUSY     := retry_after_ms u32                       (v3)
 //! ```
 //!
 //! The handshake: the client opens with HELLO carrying the version
@@ -55,12 +56,14 @@
 //!
 //! **v2 ↔ v3.** Version 3 adds exactly the constructs marked `(v3)`
 //! above: the tagged optional model-id field (flag bit 3), the ADMIN
-//! op, and the ADMIN response status. A v2 frame is byte-for-byte a
-//! valid v3 frame with those absent, so a v2 client negotiates version
-//! 2 and keeps working unchanged; a v3 client that negotiated version
-//! 2 must not emit model ids or admin ops ([`crate::server::FramedClient`]
-//! refuses with a typed error rather than sending bytes the peer would
-//! reject).
+//! op, the ADMIN response status, and the BUSY response status (QoS
+//! load shedding, PR 7). A v2 frame is byte-for-byte a valid v3 frame
+//! with those absent, so a v2 client negotiates version 2 and keeps
+//! working unchanged; a v3 client that negotiated version 2 must not
+//! emit model ids or admin ops ([`crate::server::FramedClient`] refuses
+//! with a typed error rather than sending bytes the peer would
+//! reject), and the server degrades a BUSY reply to the generic ERROR
+//! form on a v2 connection ([`crate::proto::Response::degrade_busy`]).
 //!
 //! Decoding hostile bytes — truncated header, bad magic, oversized
 //! length, unknown version/type/op/flags/cmd, trailing bytes — returns
@@ -503,6 +506,7 @@ const STATUS_PONG: u8 = 2;
 const STATUS_BYE: u8 = 3;
 const STATUS_ERROR: u8 = 4;
 const STATUS_ADMIN: u8 = 5;
+const STATUS_BUSY: u8 = 6;
 
 const ADMIN_OK: u8 = 0;
 const ADMIN_MODELS: u8 = 1;
@@ -573,6 +577,10 @@ pub fn encode_response(resp: &Response) -> Result<Vec<u8>> {
         }
         Outcome::Pong => p.push(STATUS_PONG),
         Outcome::Bye => p.push(STATUS_BYE),
+        Outcome::Busy { retry_after_ms } => {
+            p.push(STATUS_BUSY);
+            p.extend_from_slice(&retry_after_ms.to_be_bytes());
+        }
         Outcome::Error(msg) => {
             p.push(STATUS_ERROR);
             p.extend_from_slice(msg.as_bytes());
@@ -650,6 +658,11 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
         STATUS_BYE => {
             cur.finish()?;
             Outcome::Bye
+        }
+        STATUS_BUSY => {
+            let retry_after_ms = cur.u32()?;
+            cur.finish()?;
+            Outcome::Busy { retry_after_ms }
         }
         STATUS_ERROR => Outcome::Error(cur.rest_utf8()?),
         other => return Err(Error::Proto(format!("unknown response status {other}"))),
@@ -913,6 +926,9 @@ mod tests {
             Outcome::Stats(StatsSnapshot::new()),
             Outcome::Pong,
             Outcome::Bye,
+            Outcome::Busy {
+                retry_after_ms: 250,
+            },
             Outcome::Error("boom with unicode ✗".into()),
         ];
         for outcome in cases {
@@ -920,6 +936,15 @@ mod tests {
             let enc = encode_response(&resp).unwrap();
             assert_eq!(decode_response(&enc).unwrap(), resp);
         }
+        // a truncated BUSY payload is a typed error, and trailing bytes
+        // after the retry hint are refused
+        let enc = encode_response(&Response::busy(7, 100)).unwrap();
+        for cut in 9..enc.len() {
+            assert!(decode_response(&enc[..cut]).is_err(), "cut={cut}");
+        }
+        let mut noisy = enc.clone();
+        noisy.push(0);
+        assert!(decode_response(&noisy).is_err());
     }
 
     #[test]

@@ -225,6 +225,15 @@ pub enum Outcome {
     Admin(AdminReply),
     Pong,
     Bye,
+    /// The server shed this request at admission (bounded queue full or
+    /// rate limit exhausted) — no queue slot, no compute. Carries the
+    /// QoS layer's retry hint. Frame codec status 6 on v3; a v2 peer
+    /// sees the generic error form instead, and the text codec renders
+    /// a `BUSY <ms>` line.
+    Busy {
+        /// Suggested client backoff before retrying, in milliseconds.
+        retry_after_ms: u32,
+    },
     /// The request failed; the string is the rendered [`crate::Error`].
     Error(String),
 }
@@ -244,10 +253,35 @@ impl Response {
         }
     }
 
+    /// The shed reply for a request refused at admission.
+    pub fn busy(id: u64, retry_after_ms: u32) -> Response {
+        Response {
+            id,
+            outcome: Outcome::Busy { retry_after_ms },
+        }
+    }
+
+    /// Render this response for a peer whose negotiated protocol
+    /// version cannot carry the [`Outcome::Busy`] status (frame v2):
+    /// the typed shed reply degrades to the generic error form, which
+    /// every version understands. All other outcomes pass through.
+    pub fn degrade_busy(self) -> Response {
+        match self.outcome {
+            Outcome::Busy { retry_after_ms } => Response::error(
+                self.id,
+                crate::Error::Busy { retry_after_ms }.to_string(),
+            ),
+            _ => self,
+        }
+    }
+
     /// The results, or the error a non-`Results` outcome amounts to.
     pub fn results(&self) -> crate::Result<&[VolleyResult]> {
         match &self.outcome {
             Outcome::Results(rs) => Ok(rs),
+            Outcome::Busy { retry_after_ms } => Err(crate::Error::Busy {
+                retry_after_ms: *retry_after_ms,
+            }),
             Outcome::Error(e) => Err(crate::Error::Server(e.clone())),
             other => Err(crate::Error::Proto(format!(
                 "expected results, got {other:?}"

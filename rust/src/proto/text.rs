@@ -17,6 +17,7 @@
 //! Results  -> "OK winner=<w> times=..."  / "OK winner=<w> spikes=..."
 //! Stats    -> sorted key=value lines, terminated by a blank line
 //! Pong/Bye -> "PONG" / "BYE"
+//! Busy     -> "BUSY <retry_after_ms>"    (QoS load shed, PR 7)
 //! Error    -> "ERR <rendered error>"
 //! ```
 //!
@@ -139,6 +140,9 @@ pub fn render_response(resp: &Response, sparse_reply: bool, t_max: usize) -> Str
         Outcome::Admin(_) => "ERR admin replies are frame-codec only\n".into(),
         Outcome::Pong => "PONG\n".into(),
         Outcome::Bye => "BYE\n".into(),
+        // the shed reply keeps its retry hint machine-readable: one
+        // token after the verb, so legacy line parsers can split on ' '
+        Outcome::Busy { retry_after_ms } => format!("BUSY {retry_after_ms}\n"),
         Outcome::Error(e) => format!("ERR {e}\n"),
     }
 }
@@ -255,6 +259,9 @@ mod tests {
 
         let err = Response::error(0, Error::Server("nope".into()).to_string());
         assert_eq!(render_response(&err, false, TM), "ERR server error: nope\n");
+        // the shed reply is a first-class verb with the retry hint as
+        // its single machine-readable token
+        assert_eq!(render_response(&Response::busy(0, 150), false, TM), "BUSY 150\n");
         assert_eq!(
             render_response(
                 &Response {

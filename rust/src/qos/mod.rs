@@ -1,0 +1,425 @@
+//! QoS: admission control, priority lanes and load shedding for the
+//! serving stack (DESIGN.md §2.6).
+//!
+//! PRs 3–5 enforce deadlines *after* a request is accepted (dispatch
+//! check + batcher-drain expiry), which means an overloaded server
+//! still accepts every request and lets the excess rot in its queues.
+//! The TNN online-learning microarchitecture treats training and
+//! inference as concurrent always-on flows sharing one substrate —
+//! exactly the contention each [`crate::registry::ModelSlot`] has
+//! (an infer and a learn batcher over one engine) — so pressure must
+//! be *regulated at the door*, not absorbed. This module is that door:
+//!
+//! ```text
+//!                 ┌────────────── QosGate (per model slot) ─────────────┐
+//!  Request ──────►│ token bucket ──► lane check ──► AdmitPermit (RAII)  │──► batchers
+//!  (Infer/Learn)  │  (rate/burst,    infer lane: depth bound            │
+//!                 │   per model)     learn lane: depth bound AND        │
+//!                 │                  yields while infer > ½ full        │
+//!                 └───────┬─────────────────┬───────────────────────────┘
+//!                         ▼                 ▼
+//!                  Error::Busy        Error::Busy
+//!                  (requests_         (requests_shed)
+//!                   throttled)
+//! ```
+//!
+//! **Shed vs expire.** A *shed* request is refused at admission —
+//! before costing a queue slot, a token or any compute — and answered
+//! immediately with the typed [`crate::Error::Busy`] carrying a retry
+//! hint (`BUSY` line on the text codec, status-6 frame on v3, generic
+//! error form on v2). An *expired* request was admitted but sat past
+//! its deadline budget; it dies at batcher drain (or a shard chunk
+//! boundary) as [`crate::Error::DeadlineExpired`]. The two are
+//! counted separately (`requests_shed`/`requests_throttled` vs
+//! `requests_expired`) because they indict different layers: shedding
+//! is the server protecting itself, expiry is capacity genuinely
+//! falling behind.
+//!
+//! **Lanes.** Each slot has two admission lanes with independent
+//! in-flight bounds. The infer lane admits until `infer_depth`
+//! requests are in flight. The learn lane is subordinate: it admits
+//! until `learn_depth`, *and only while the infer lane is at most
+//! half full* — under pressure, online-learning traffic yields the
+//! engine to inference instead of competing with it (the paper's
+//! always-on training flow is elastic; its user-facing flow is not).
+//!
+//! **Token bucket.** An optional per-model rate limit (volleys per
+//! second, with a burst allowance) keeps one hot model from starving
+//! its neighbors: each model's bucket refills independently, so a
+//! flood against `edge` throttles `edge` and leaves `wide`'s tokens
+//! untouched. Throttled requests get a *computed* retry hint — the
+//! time until the bucket holds enough tokens — rather than the
+//! configured shed hint.
+//!
+//! All accounting is `Instant` arithmetic and atomics: no background
+//! thread, no timer wheel, nothing to shut down.
+
+pub mod replay;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Admission policy for one model slot. `enabled: false` (the
+/// default) makes every gate a no-op, preserving pre-QoS behavior
+/// for existing callers and tests.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QosConfig {
+    /// Master switch; off = admit everything, count nothing.
+    pub enabled: bool,
+    /// Max infer requests in flight per slot before shedding.
+    pub infer_depth: usize,
+    /// Max learn requests in flight per slot before shedding. The
+    /// learn lane additionally yields while the infer lane is more
+    /// than half full.
+    pub learn_depth: usize,
+    /// Optional per-model rate limit in volleys per second. `None`
+    /// disables the token bucket.
+    pub rate_per_s: Option<f64>,
+    /// Token bucket capacity in volleys (the burst allowance). A
+    /// single request carrying more volleys than this can never be
+    /// admitted while the rate limit is on.
+    pub burst: f64,
+    /// Retry hint attached to shed (queue-full) replies, in ms.
+    /// Throttled replies compute their own hint from the bucket
+    /// deficit instead.
+    pub retry_after_ms: u32,
+}
+
+impl Default for QosConfig {
+    fn default() -> QosConfig {
+        QosConfig {
+            enabled: false,
+            infer_depth: 256,
+            learn_depth: 64,
+            rate_per_s: None,
+            burst: 128.0,
+            retry_after_ms: 25,
+        }
+    }
+}
+
+impl QosConfig {
+    /// The defaults with the master switch on (`repro serve --qos`).
+    pub fn on() -> QosConfig {
+        QosConfig {
+            enabled: true,
+            ..QosConfig::default()
+        }
+    }
+}
+
+/// Which admission lane a request enters. Infer outranks learn: the
+/// learn lane yields whenever the infer lane is under pressure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Infer,
+    Learn,
+}
+
+/// Why a request was refused at admission — picks the counter the
+/// caller bumps (`requests_shed` vs `requests_throttled`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedCause {
+    /// The lane's in-flight bound was hit (or learn yielded to infer).
+    QueueFull,
+    /// The per-model token bucket ran dry.
+    Throttled,
+}
+
+/// An admission refusal: the cause plus the retry hint that rides the
+/// [`crate::Error::Busy`] reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shed {
+    pub cause: ShedCause,
+    pub retry_after_ms: u32,
+}
+
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// The per-slot admission gate: two lane counters plus the optional
+/// token bucket. Cheap enough to sit on every [`ModelSlot`]
+/// unconditionally — a disabled gate is two untouched atomics.
+///
+/// [`ModelSlot`]: crate::registry::ModelSlot
+pub struct QosGate {
+    cfg: QosConfig,
+    infer_inflight: AtomicUsize,
+    learn_inflight: AtomicUsize,
+    bucket: Mutex<TokenBucket>,
+}
+
+/// RAII admission slot: holding one keeps the lane's in-flight count
+/// up; dropping it (when the request's reply is on the wire) releases
+/// the slot. A permit from a disabled gate holds nothing.
+pub struct AdmitPermit<'a> {
+    gate: &'a QosGate,
+    lane: Option<Lane>,
+}
+
+impl Drop for AdmitPermit<'_> {
+    fn drop(&mut self) {
+        if let Some(lane) = self.lane {
+            self.gate.release(lane);
+        }
+    }
+}
+
+/// Bounded increment: CAS loop so concurrent admissions can never
+/// overshoot `depth` (a plain fetch_add + check could).
+fn try_acquire(ctr: &AtomicUsize, depth: usize) -> bool {
+    let mut cur = ctr.load(Ordering::Relaxed);
+    loop {
+        if cur >= depth {
+            return false;
+        }
+        match ctr.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl QosGate {
+    pub fn new(cfg: QosConfig) -> QosGate {
+        QosGate {
+            cfg,
+            infer_inflight: AtomicUsize::new(0),
+            learn_inflight: AtomicUsize::new(0),
+            // the bucket boots full: a fresh model serves its burst
+            // immediately instead of trickling up from zero
+            bucket: Mutex::new(TokenBucket {
+                tokens: cfg.burst,
+                last: Instant::now(),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &QosConfig {
+        &self.cfg
+    }
+
+    /// Requests currently admitted into a lane (observability + tests).
+    pub fn inflight(&self, lane: Lane) -> usize {
+        match lane {
+            Lane::Infer => self.infer_inflight.load(Ordering::Acquire),
+            Lane::Learn => self.learn_inflight.load(Ordering::Acquire),
+        }
+    }
+
+    /// Try to admit a `volleys`-volley request into `lane`. On success
+    /// the returned permit holds the lane slot until dropped; on
+    /// refusal the [`Shed`] says which counter to bump and what retry
+    /// hint to send. Order matters: the lane slot is reserved first
+    /// and released again on a throttle, so tokens are only ever spent
+    /// by requests that actually enter.
+    pub fn admit(&self, lane: Lane, volleys: usize) -> std::result::Result<AdmitPermit<'_>, Shed> {
+        if !self.cfg.enabled {
+            return Ok(AdmitPermit {
+                gate: self,
+                lane: None,
+            });
+        }
+        let ok = match lane {
+            Lane::Infer => try_acquire(&self.infer_inflight, self.cfg.infer_depth),
+            // learn yields: the subordinate lane only admits while the
+            // infer lane is at most half full, so a learn flood can
+            // never crowd user-facing traffic out of the engine
+            Lane::Learn => {
+                self.infer_inflight.load(Ordering::Acquire) <= self.cfg.infer_depth / 2
+                    && try_acquire(&self.learn_inflight, self.cfg.learn_depth)
+            }
+        };
+        if !ok {
+            return Err(Shed {
+                cause: ShedCause::QueueFull,
+                retry_after_ms: self.cfg.retry_after_ms,
+            });
+        }
+        if let Some(rate) = self.cfg.rate_per_s {
+            let need = volleys as f64;
+            let mut b = self.bucket.lock().unwrap();
+            let now = Instant::now();
+            let dt = now.duration_since(b.last).as_secs_f64();
+            b.tokens = (b.tokens + dt * rate).min(self.cfg.burst);
+            b.last = now;
+            if b.tokens < need {
+                // the hint is the time until the bucket can cover this
+                // request (never 0: a client must actually back off)
+                let wait_ms = (((need - b.tokens) / rate) * 1000.0).ceil();
+                drop(b);
+                self.release(lane);
+                return Err(Shed {
+                    cause: ShedCause::Throttled,
+                    retry_after_ms: (wait_ms as u64).clamp(1, u32::MAX as u64) as u32,
+                });
+            }
+            b.tokens -= need;
+        }
+        Ok(AdmitPermit {
+            gate: self,
+            lane: Some(lane),
+        })
+    }
+
+    fn release(&self, lane: Lane) {
+        let ctr = match lane {
+            Lane::Infer => &self.infer_inflight,
+            Lane::Learn => &self.learn_inflight,
+        };
+        ctr.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(infer_depth: usize, learn_depth: usize) -> QosConfig {
+        QosConfig {
+            enabled: true,
+            infer_depth,
+            learn_depth,
+            ..QosConfig::default()
+        }
+    }
+
+    #[test]
+    fn disabled_gate_admits_everything() {
+        let gate = QosGate::new(QosConfig::default());
+        let mut permits = Vec::new();
+        for _ in 0..10_000 {
+            permits.push(gate.admit(Lane::Infer, 64).unwrap());
+        }
+        // a disabled gate holds no lane slots at all
+        assert_eq!(gate.inflight(Lane::Infer), 0);
+    }
+
+    #[test]
+    fn infer_lane_bounds_and_releases() {
+        let gate = QosGate::new(cfg(2, 2));
+        let p1 = gate.admit(Lane::Infer, 1).unwrap();
+        let _p2 = gate.admit(Lane::Infer, 1).unwrap();
+        assert_eq!(gate.inflight(Lane::Infer), 2);
+        // full lane sheds with the configured hint
+        match gate.admit(Lane::Infer, 1) {
+            Err(Shed {
+                cause: ShedCause::QueueFull,
+                retry_after_ms,
+            }) => assert_eq!(retry_after_ms, QosConfig::default().retry_after_ms),
+            other => panic!("{other:?}"),
+        }
+        // dropping a permit frees its slot
+        drop(p1);
+        assert_eq!(gate.inflight(Lane::Infer), 1);
+        let _p3 = gate.admit(Lane::Infer, 1).unwrap();
+    }
+
+    #[test]
+    fn learn_yields_while_infer_is_pressured() {
+        let gate = QosGate::new(cfg(4, 4));
+        // infer at half depth: learn still admits
+        let _i1 = gate.admit(Lane::Infer, 1).unwrap();
+        let _i2 = gate.admit(Lane::Infer, 1).unwrap();
+        let l = gate.admit(Lane::Learn, 1).unwrap();
+        drop(l);
+        // one more infer pushes past half; learn now sheds even though
+        // its own lane is empty
+        let _i3 = gate.admit(Lane::Infer, 1).unwrap();
+        match gate.admit(Lane::Learn, 1) {
+            Err(Shed {
+                cause: ShedCause::QueueFull,
+                ..
+            }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(gate.inflight(Lane::Learn), 0);
+        // infer keeps admitting to its own bound regardless
+        let _i4 = gate.admit(Lane::Infer, 1).unwrap();
+        assert!(gate.admit(Lane::Infer, 1).is_err());
+    }
+
+    #[test]
+    fn learn_lane_has_its_own_depth() {
+        let gate = QosGate::new(cfg(100, 1));
+        let _l1 = gate.admit(Lane::Learn, 1).unwrap();
+        assert!(gate.admit(Lane::Learn, 1).is_err());
+    }
+
+    #[test]
+    fn token_bucket_throttles_and_computes_hint() {
+        let gate = QosGate::new(QosConfig {
+            enabled: true,
+            rate_per_s: Some(10.0),
+            burst: 2.0,
+            ..QosConfig::default()
+        });
+        // the bucket boots full: the burst is admitted...
+        let _p1 = gate.admit(Lane::Infer, 2).unwrap();
+        // ...then the next volley is throttled with a computed hint
+        // (~1 token at 10/s = ~100 ms; generous upper bound for CI)
+        match gate.admit(Lane::Infer, 1) {
+            Err(Shed {
+                cause: ShedCause::Throttled,
+                retry_after_ms,
+            }) => assert!((1..=150).contains(&retry_after_ms), "{retry_after_ms}"),
+            other => panic!("{other:?}"),
+        }
+        // a throttle must not leak the lane slot it briefly reserved
+        assert_eq!(gate.inflight(Lane::Infer), 1);
+        // a request larger than the burst can never pass
+        match gate.admit(Lane::Infer, 100) {
+            Err(Shed {
+                cause: ShedCause::Throttled,
+                ..
+            }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bucket_refills_over_time() {
+        let gate = QosGate::new(QosConfig {
+            enabled: true,
+            rate_per_s: Some(1000.0),
+            burst: 1.0,
+            ..QosConfig::default()
+        });
+        let _ = gate.admit(Lane::Infer, 1).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // 5 ms at 1000/s refills well past one token
+        assert!(gate.admit(Lane::Infer, 1).is_ok());
+    }
+
+    #[test]
+    fn concurrent_admissions_never_overshoot() {
+        let gate = std::sync::Arc::new(QosGate::new(cfg(8, 8)));
+        let admitted = std::sync::Arc::new(AtomicUsize::new(0));
+        let peak = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut threads = Vec::new();
+        for _ in 0..16 {
+            let gate = gate.clone();
+            let admitted = admitted.clone();
+            let peak = peak.clone();
+            threads.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    if let Ok(_p) = gate.admit(Lane::Infer, 1) {
+                        admitted.fetch_add(1, Ordering::Relaxed);
+                        let seen = gate.inflight(Lane::Infer);
+                        peak.fetch_max(seen, Ordering::Relaxed);
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(peak.load(Ordering::Relaxed) <= 8, "depth bound violated");
+        assert!(admitted.load(Ordering::Relaxed) >= 8, "nothing admitted");
+        assert_eq!(gate.inflight(Lane::Infer), 0, "permits all released");
+    }
+}

@@ -1,0 +1,751 @@
+//! Traffic replay + chaos harness: record a request stream to a
+//! versioned log, replay it at rate multiples against a live server,
+//! and inject faults mid-run while asserting the serving contracts
+//! (typed errors only, old weights keep serving).
+//!
+//! # The `CWKR` replay log
+//!
+//! A replay log is a streamable append-only file (all integers
+//! big-endian, like every other wire/disk format in this crate):
+//!
+//! ```text
+//! "CWKR" | schema u16            header
+//! repeat per entry:
+//!   offset_us u64                when the request arrived, relative
+//!                                to the stream's start
+//!   len u32                      payload byte count
+//!   payload [len]                frame-codec encoded Request
+//!                                (proto::frame::encode_request)
+//!   crc32 u32                    CRC-32 of payload
+//! ```
+//!
+//! The payload reuses the frame codec's request encoding verbatim, so
+//! the log format inherits its golden-vector coverage and the python
+//! wire twin can decode entries with the code it already has. Each
+//! entry carries its own CRC (a whole-file CRC would make the format
+//! non-appendable); a truncated tail, a bad magic/schema or a CRC
+//! mismatch is a typed [`Error::Proto`] — hostile bytes never panic.
+//!
+//! # Replay
+//!
+//! [`replay`] fires a log's requests at their recorded offsets scaled
+//! by a rate multiple (2.0 = twice as fast), over a small pool of
+//! framed connections, and classifies every reply: `Results`, typed
+//! `Busy`, typed deadline expiry, or other typed error. The report
+//! pins the overload contract — `sent == results + busy + expired +
+//! errors`, every request exactly one typed reply, no silent drops —
+//! and carries the latency percentiles the `qos_serve` bench prints.
+//!
+//! # Chaos
+//!
+//! [`chaos_run`] boots an in-process two-model registry (an unsharded
+//! `default` plus a 2-way-sharded `quad`), replays a synthesized
+//! stream against it, and halfway through injects three faults:
+//! stalled clients (connections that write a partial magic and hold),
+//! a shard kill ([`crate::shard::ShardedModel::kill_shard`]), and a
+//! checkpoint corruption followed by a hot-swap attempt. The run
+//! asserts the contracts that matter under fire: the wounded model
+//! answers *typed* errors (never hangs, never silently drops), the
+//! corrupt checkpoint is rejected as a unit, and the survivor model's
+//! replies stay bit-identical to its pre-fault weights.
+
+use crate::error::{Error, Result};
+use crate::proto::{frame, Outcome, Request, Response};
+use crate::qos::QosConfig;
+use crate::registry::checkpoint::crc32;
+use crate::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use crate::rng::Xoshiro256;
+use crate::server::{FramedClient, Server};
+use crate::volley::SpikeVolley;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Replay log magic.
+pub const REPLAY_MAGIC: [u8; 4] = *b"CWKR";
+/// Replay log schema version.
+pub const REPLAY_SCHEMA: u16 = 1;
+
+/// One recorded request: its arrival offset (µs since stream start)
+/// plus the envelope itself.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplayEntry {
+    pub offset_us: u64,
+    pub req: Request,
+}
+
+/// A recorded request stream.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplayLog {
+    pub entries: Vec<ReplayEntry>,
+}
+
+impl ReplayLog {
+    /// Serialize to the `CWKR` byte layout.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&REPLAY_MAGIC);
+        out.extend_from_slice(&REPLAY_SCHEMA.to_be_bytes());
+        for e in &self.entries {
+            let payload = frame::encode_request(&e.req)?;
+            out.extend_from_slice(&e.offset_us.to_be_bytes());
+            out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+            out.extend_from_slice(&payload);
+            out.extend_from_slice(&crc32(&payload).to_be_bytes());
+        }
+        Ok(out)
+    }
+
+    /// Parse the `CWKR` byte layout. Every malformed input — short
+    /// header, wrong magic/schema, truncated entry, CRC mismatch — is
+    /// a typed error naming what broke.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ReplayLog> {
+        if bytes.len() < 6 {
+            return Err(Error::Proto("replay log shorter than its header".into()));
+        }
+        if bytes[..4] != REPLAY_MAGIC {
+            return Err(Error::Proto("bad replay log magic (want CWKR)".into()));
+        }
+        let schema = u16::from_be_bytes([bytes[4], bytes[5]]);
+        if schema != REPLAY_SCHEMA {
+            return Err(Error::Proto(format!(
+                "replay log schema {schema}, this build reads {REPLAY_SCHEMA}"
+            )));
+        }
+        let mut entries = Vec::new();
+        let mut at = 6;
+        while at < bytes.len() {
+            if bytes.len() - at < 12 {
+                return Err(Error::Proto(format!(
+                    "replay log truncated mid-entry-header at byte {at}"
+                )));
+            }
+            let offset_us = u64::from_be_bytes(bytes[at..at + 8].try_into().unwrap());
+            let len = u32::from_be_bytes(bytes[at + 8..at + 12].try_into().unwrap()) as usize;
+            at += 12;
+            if bytes.len() - at < len + 4 {
+                return Err(Error::Proto(format!(
+                    "replay log truncated mid-entry at byte {at}"
+                )));
+            }
+            let payload = &bytes[at..at + len];
+            let want = u32::from_be_bytes(bytes[at + len..at + len + 4].try_into().unwrap());
+            if crc32(payload) != want {
+                return Err(Error::Proto(format!(
+                    "replay log entry CRC mismatch at byte {at}"
+                )));
+            }
+            entries.push(ReplayEntry {
+                offset_us,
+                req: frame::decode_request(payload)?,
+            });
+            at += len + 4;
+        }
+        Ok(ReplayLog { entries })
+    }
+
+    /// Write the log to disk (plain write — the log is an input
+    /// artifact, not live state needing the atomic-rename dance).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(&self.to_bytes()?)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read a log from disk.
+    pub fn read(path: &Path) -> Result<ReplayLog> {
+        let mut bytes = Vec::new();
+        BufReader::new(std::fs::File::open(path)?).read_to_end(&mut bytes)?;
+        ReplayLog::from_bytes(&bytes)
+    }
+
+    /// The recorded stream duration (offset of the last entry).
+    pub fn duration(&self) -> Duration {
+        Duration::from_micros(self.entries.last().map(|e| e.offset_us).unwrap_or(0))
+    }
+
+    /// Synthesize a deterministic request stream: `requests` arrivals
+    /// at `rate_per_s` (evenly spaced with seeded jitter), n-wide
+    /// volleys of seeded sparsity, request mix ~1 learn per 4 infers,
+    /// round-robin across `models` (empty string = unrouted/default).
+    /// Same spec + seed → bit-identical log, so a recorded benchmark
+    /// run is reproducible from its parameters alone.
+    pub fn synthesize(spec: &SynthSpec) -> ReplayLog {
+        let mut rng = Xoshiro256::new(spec.seed);
+        let gap_us = 1_000_000.0 / spec.rate_per_s.max(1e-9);
+        let mut entries = Vec::with_capacity(spec.requests);
+        let mut t = 0.0f64;
+        for i in 0..spec.requests {
+            // jitter keeps batcher timing honest without changing the
+            // mean rate: uniform in [0.5, 1.5) of the nominal gap
+            t += gap_us * (0.5 + rng.gen_f64());
+            let volley: Vec<f32> = (0..spec.n)
+                .map(|_| {
+                    if rng.gen_bool(0.3) {
+                        rng.gen_range(spec.t_max) as f32
+                    } else {
+                        spec.t_max as f32
+                    }
+                })
+                .collect();
+            let v = vec![SpikeVolley::dense(volley)];
+            let mut req = if rng.gen_bool(0.2) {
+                Request::learn(v)
+            } else {
+                Request::infer(v)
+            }
+            .with_id(i as u64);
+            if let Some(ms) = spec.deadline_ms {
+                req = req.with_deadline_ms(ms);
+            }
+            let model = &spec.models[i % spec.models.len().max(1)];
+            if !model.is_empty() {
+                req = req.with_model(model.clone());
+            }
+            entries.push(ReplayEntry {
+                offset_us: t as u64,
+                req,
+            });
+        }
+        ReplayLog { entries }
+    }
+}
+
+/// Parameters for [`ReplayLog::synthesize`].
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub requests: usize,
+    pub rate_per_s: f64,
+    /// Volley width (the target models' `n`).
+    pub n: usize,
+    pub t_max: usize,
+    /// Deadline opt stamped on every request (`None` = no deadline).
+    pub deadline_ms: Option<u32>,
+    /// Models to round-robin across; `""` routes to the default.
+    pub models: Vec<String>,
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> SynthSpec {
+        SynthSpec {
+            requests: 200,
+            rate_per_s: 500.0,
+            n: 16,
+            t_max: 16,
+            deadline_ms: Some(250),
+            models: vec![String::new()],
+            seed: 7,
+        }
+    }
+}
+
+/// Reply classification totals + latency tape from one replay run.
+/// The overload contract is `sent == results + busy + expired +
+/// errors` with `transport_errors == 0`: every request exactly one
+/// *typed* reply, nothing silently dropped.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayReport {
+    pub sent: u64,
+    pub results: u64,
+    pub busy: u64,
+    /// Typed deadline expiries (dispatch- or drain-level).
+    pub expired: u64,
+    /// Other typed error outcomes (e.g. a killed shard's replies).
+    pub errors: u64,
+    /// I/O-level failures — a nonzero count means a reply was lost,
+    /// which the harness treats as a contract violation.
+    pub transport_errors: u64,
+    /// Wall-clock of the whole replay.
+    pub wall: Duration,
+    /// Per-reply round-trip latencies in µs, sorted ascending.
+    pub latencies_us: Vec<u64>,
+}
+
+impl ReplayReport {
+    pub fn answered(&self) -> u64 {
+        self.results + self.busy + self.expired + self.errors
+    }
+
+    /// The p-th percentile (0.0–1.0) round-trip latency in µs.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        percentile_us(&self.latencies_us, p)
+    }
+
+    /// Achieved reply throughput in requests/s.
+    pub fn rps(&self) -> f64 {
+        self.answered() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    fn merge(&mut self, other: ReplayReport) {
+        self.sent += other.sent;
+        self.results += other.results;
+        self.busy += other.busy;
+        self.expired += other.expired;
+        self.errors += other.errors;
+        self.transport_errors += other.transport_errors;
+        self.latencies_us.extend(other.latencies_us);
+    }
+}
+
+/// Percentile over a sorted-or-not µs tape (sorts a copy; tapes here
+/// are bench-sized).
+pub fn percentile_us(tape: &[u64], p: f64) -> u64 {
+    if tape.is_empty() {
+        return 0;
+    }
+    let mut sorted = tape.to_vec();
+    sorted.sort_unstable();
+    let idx = ((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
+}
+
+/// How a replay run paces and fans out.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayOptions {
+    /// Rate multiple: recorded offsets are divided by this, so 4.0
+    /// replays the stream four times as fast as it was recorded.
+    pub multiple: f64,
+    /// Framed connections to spread the stream across (round-robin).
+    pub conns: usize,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> ReplayOptions {
+        ReplayOptions {
+            multiple: 1.0,
+            conns: 8,
+        }
+    }
+}
+
+/// Classify one reply into the report's buckets. Deadline expiries are
+/// recognized by the typed error's stable message prefix — both the
+/// dispatch-level and drain-level forms start with "deadline exceeded".
+fn classify(report: &mut ReplayReport, latency: Duration, resp: Response) {
+    report.latencies_us.push(latency.as_micros() as u64);
+    match resp.outcome {
+        Outcome::Busy { .. } => report.busy += 1,
+        Outcome::Error(msg) if msg.starts_with("deadline exceeded") => report.expired += 1,
+        Outcome::Error(_) => report.errors += 1,
+        _ => report.results += 1,
+    }
+}
+
+/// Replay a log against a live server at `opts.multiple` the recorded
+/// rate. Entries fan out round-robin across `opts.conns` framed
+/// connections; each connection fires its entries at their scaled
+/// offsets (sleeping ahead of schedule, never delaying further when
+/// behind — an overloaded run degrades to closed-loop pressure, which
+/// is exactly the flood the QoS layer exists for).
+pub fn replay(addr: &str, log: &ReplayLog, opts: &ReplayOptions) -> Result<ReplayReport> {
+    let conns = opts.conns.max(1);
+    let multiple = if opts.multiple > 0.0 { opts.multiple } else { 1.0 };
+    let (tx, rx) = mpsc::channel::<Result<ReplayReport>>();
+    let t0 = Instant::now();
+    let mut spawned = 0;
+    for lane in 0..conns {
+        let entries: Vec<ReplayEntry> = log
+            .entries
+            .iter()
+            .skip(lane)
+            .step_by(conns)
+            .cloned()
+            .collect();
+        if entries.is_empty() {
+            continue;
+        }
+        spawned += 1;
+        let addr = addr.to_string();
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let run = || -> Result<ReplayReport> {
+                let mut client = FramedClient::connect(&addr)?;
+                let mut report = ReplayReport::default();
+                for e in entries {
+                    let due = Duration::from_micros((e.offset_us as f64 / multiple) as u64);
+                    let elapsed = t0.elapsed();
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                    report.sent += 1;
+                    let sent_at = Instant::now();
+                    match client.call(e.req) {
+                        Ok(resp) => classify(&mut report, sent_at.elapsed(), resp),
+                        Err(_) => report.transport_errors += 1,
+                    }
+                }
+                Ok(report)
+            };
+            let _ = tx.send(run());
+        });
+    }
+    drop(tx);
+    let mut total = ReplayReport::default();
+    for _ in 0..spawned {
+        total.merge(rx.recv().map_err(|_| {
+            Error::Server("replay worker died without reporting".into())
+        })??);
+    }
+    total.wall = t0.elapsed();
+    total.latencies_us.sort_unstable();
+    Ok(total)
+}
+
+// ---------------------------------------------------------------- chaos
+
+/// Knobs for one [`chaos_run`].
+#[derive(Clone, Debug)]
+pub struct ChaosOptions {
+    /// Kernel-artifact directory the in-process models open against.
+    pub artifacts_dir: PathBuf,
+    /// Scratch directory for checkpoints (created, then removed).
+    pub scratch_dir: PathBuf,
+    /// Stream to synthesize and replay.
+    pub spec: SynthSpec,
+    pub replay: ReplayOptions,
+    /// Admission policy for the in-process registry's slots.
+    pub qos: QosConfig,
+    /// Stalled connections to park mid-run.
+    pub stall_clients: usize,
+}
+
+/// What a chaos run observed; [`ChaosReport::contracts_hold`] is the
+/// acceptance gate.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub replay: ReplayReport,
+    /// Replies the killed-shard model gave *after* the kill: typed
+    /// errors (good) vs anything silently lost (contract violation).
+    pub victim_typed_errors: u64,
+    pub victim_hangs: u64,
+    /// The corrupt checkpoint hot-swap was rejected with a typed
+    /// checkpoint error.
+    pub corrupt_load_rejected: bool,
+    /// The survivor model's post-fault reply is bit-identical to its
+    /// pre-fault reply (old weights kept serving).
+    pub weights_bit_identical: bool,
+    /// The survivor model still answered Results after every fault.
+    pub survivor_serving: bool,
+}
+
+impl ChaosReport {
+    /// Every contract the harness asserts, as one gate: no silent
+    /// drops, faults surface as typed errors, old weights keep
+    /// serving bit-identically.
+    pub fn contracts_hold(&self) -> bool {
+        self.replay.transport_errors == 0
+            && self.replay.answered() == self.replay.sent
+            && self.victim_hangs == 0
+            && self.corrupt_load_rejected
+            && self.weights_bit_identical
+            && self.survivor_serving
+    }
+}
+
+/// Flip one byte in the middle of a file (the checkpoint-corruption
+/// fault). Returns the corrupted offset.
+pub fn corrupt_file(path: &Path) -> Result<u64> {
+    let mut bytes = std::fs::read(path)?;
+    if bytes.is_empty() {
+        return Err(Error::Proto("cannot corrupt an empty file".into()));
+    }
+    let at = bytes.len() / 2;
+    bytes[at] ^= 0xFF;
+    std::fs::write(path, &bytes)?;
+    Ok(at as u64)
+}
+
+/// The canned chaos scenario (`repro replay --chaos`, and the e2e gate
+/// in `rust/tests/qos.rs`): boot an in-process server with an
+/// unsharded `default` model and a 2-way-sharded `quad`, replay a
+/// synthesized stream split across both, and at ~50% of the scaled
+/// timeline park stalled clients, kill `quad`'s shard 1, corrupt
+/// `default`'s checkpoint on disk and attempt a hot-swap. Every
+/// post-fault contract lands in the [`ChaosReport`].
+pub fn chaos_run(opts: &ChaosOptions) -> Result<ChaosReport> {
+    std::fs::create_dir_all(&opts.scratch_dir)?;
+    let cfg = RegistryConfig {
+        artifacts_dir: opts.artifacts_dir.clone(),
+        ckpt_dir: Some(opts.scratch_dir.clone()),
+        qos: opts.qos,
+        ..RegistryConfig::default()
+    };
+    let spec = ModelSpec {
+        n: opts.spec.n,
+        theta: 6.0,
+        seed: 5,
+    };
+    let registry = Arc::new(ModelRegistry::open(cfg, "default", spec)?);
+    registry.create_sharded("quad", spec, 2)?;
+
+    let server = Server::with_registry(registry.clone());
+    let stop = server.stop_handle();
+    let (port_tx, port_rx) = mpsc::channel();
+    let srv = {
+        let server = Arc::new(server);
+        let s = server.clone();
+        std::thread::spawn(move || s.serve("127.0.0.1:0", |p| port_tx.send(p).unwrap()))
+    };
+    let addr = format!(
+        "127.0.0.1:{}",
+        port_rx
+            .recv()
+            .map_err(|_| Error::Server("chaos server never bound".into()))?
+    );
+
+    // pre-fault probe: a fixed volley against the survivor model, plus
+    // its on-disk checkpoint (the corruption target)
+    let probe_volley: Vec<f32> = (0..opts.spec.n)
+        .map(|i| if i % 3 == 0 { 1.0 } else { opts.spec.t_max as f32 })
+        .collect();
+    let mut probe = FramedClient::connect(&addr)?;
+    let before = probe.infer(&probe_volley)?;
+    registry.save("default")?;
+    let ckpt = registry
+        .ckpt_path("default")
+        .expect("scratch ckpt dir is configured");
+
+    // replay on a worker; faults fire from this thread mid-stream
+    let log = ReplayLog::synthesize(&opts.spec);
+    let half = log.duration().div_f64(2.0 * opts.replay.multiple.max(0.01));
+    let replay_worker = {
+        let addr = addr.clone();
+        let log = log.clone();
+        let ropts = opts.replay;
+        std::thread::spawn(move || replay(&addr, &log, &ropts))
+    };
+    std::thread::sleep(half);
+
+    // fault 1: stalled clients — partial magic, then silence; the
+    // accept loop and live connections must not care
+    let mut stalled = Vec::new();
+    for _ in 0..opts.stall_clients {
+        if let Ok(mut s) = std::net::TcpStream::connect(&addr) {
+            let _ = s.write_all(&frame::MAGIC[..2]);
+            stalled.push(s);
+        }
+    }
+    // fault 2: kill one shard of the sharded model
+    registry
+        .slot(Some("quad"))?
+        .sharded()
+        .expect("quad is sharded")
+        .kill_shard(1);
+    // fault 3: corrupt the survivor's checkpoint, then hot-swap it
+    corrupt_file(&ckpt)?;
+    let corrupt_load_rejected = matches!(registry.load("default"), Err(Error::Checkpoint(_)));
+
+    let replay_report = replay_worker
+        .join()
+        .map_err(|_| Error::Server("replay worker panicked".into()))??;
+
+    // post-fault probes on a fresh connection
+    let mut post = FramedClient::connect(&addr)?;
+    let mut victim_typed_errors = 0;
+    let mut victim_hangs = 0;
+    for _ in 0..4 {
+        // the killed shard makes quad answer typed errors — the call
+        // itself must still complete (no hang, no dropped reply)
+        match post.call(Request::infer(vec![SpikeVolley::dense(probe_volley.clone())])
+            .with_model("quad"))
+        {
+            Ok(resp) => match resp.outcome {
+                Outcome::Error(_) | Outcome::Busy { .. } => victim_typed_errors += 1,
+                _ => {}
+            },
+            Err(_) => victim_hangs += 1,
+        }
+    }
+    let after = post.infer(&probe_volley);
+    let weights_bit_identical = match &after {
+        Ok((w, times)) => {
+            *w == before.0
+                && times.len() == before.1.len()
+                && times
+                    .iter()
+                    .zip(&before.1)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+        }
+        Err(_) => false,
+    };
+    let survivor_serving = after.is_ok();
+
+    drop(stalled);
+    stop.store(true, Ordering::Release);
+    let _ = probe.quit();
+    let _ = srv.join();
+    let _ = std::fs::remove_dir_all(&opts.scratch_dir);
+
+    Ok(ChaosReport {
+        replay: replay_report,
+        victim_typed_errors,
+        victim_hangs,
+        corrupt_load_rejected,
+        weights_bit_identical,
+        survivor_serving,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::Op;
+
+    fn sample_log() -> ReplayLog {
+        ReplayLog {
+            entries: vec![
+                ReplayEntry {
+                    offset_us: 0,
+                    req: Request::infer(vec![SpikeVolley::dense(vec![1.0, 2.0])]).with_id(1),
+                },
+                ReplayEntry {
+                    offset_us: 1500,
+                    req: Request::learn(vec![SpikeVolley::dense(vec![0.0, 16.0])])
+                        .with_id(2)
+                        .with_deadline_ms(50)
+                        .with_model("edge"),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn log_roundtrips_bitwise() {
+        let log = sample_log();
+        let bytes = log.to_bytes().unwrap();
+        assert_eq!(&bytes[..4], b"CWKR");
+        assert_eq!(u16::from_be_bytes([bytes[4], bytes[5]]), REPLAY_SCHEMA);
+        let back = ReplayLog::from_bytes(&bytes).unwrap();
+        assert_eq!(back, log);
+        // round-trip through disk too
+        let path = std::env::temp_dir().join(format!(
+            "catwalk-replay-roundtrip-{}.cwkr",
+            std::process::id()
+        ));
+        log.save(&path).unwrap();
+        assert_eq!(ReplayLog::read(&path).unwrap(), log);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_logs_are_typed_errors() {
+        let bytes = sample_log().to_bytes().unwrap();
+        // every truncation point past the header dies typed (some cut
+        // points leave a valid shorter log only when they land exactly
+        // on an entry boundary — those must still parse)
+        let boundaries: Vec<usize> = {
+            let log = sample_log();
+            let mut at = 6;
+            let mut b = vec![at];
+            for e in &log.entries {
+                at += 12 + frame::encode_request(&e.req).unwrap().len() + 4;
+                b.push(at);
+            }
+            b
+        };
+        for cut in 0..bytes.len() {
+            let r = ReplayLog::from_bytes(&bytes[..cut]);
+            if boundaries.contains(&cut) {
+                assert!(r.is_ok(), "cut {cut} lands on an entry boundary");
+            } else {
+                match r {
+                    Err(Error::Proto(_)) => {}
+                    other => panic!("cut {cut}: {other:?}"),
+                }
+            }
+        }
+        // bad magic, bad schema, flipped payload byte
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            ReplayLog::from_bytes(&bad),
+            Err(Error::Proto(_))
+        ));
+        let mut bad = bytes.clone();
+        bad[5] = 9;
+        assert!(matches!(
+            ReplayLog::from_bytes(&bad),
+            Err(Error::Proto(_))
+        ));
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x01; // inside the first entry's payload
+        assert!(matches!(
+            ReplayLog::from_bytes(&bad),
+            Err(Error::Proto(_))
+        ));
+    }
+
+    #[test]
+    fn synthesize_is_deterministic_and_paced() {
+        let spec = SynthSpec {
+            requests: 50,
+            rate_per_s: 1000.0,
+            models: vec![String::new(), "quad".into()],
+            ..SynthSpec::default()
+        };
+        let a = ReplayLog::synthesize(&spec);
+        let b = ReplayLog::synthesize(&spec);
+        assert_eq!(a, b, "same spec, same bytes");
+        assert_eq!(a.entries.len(), 50);
+        // offsets are strictly increasing and roughly at the rate
+        for w in a.entries.windows(2) {
+            assert!(w[0].offset_us < w[1].offset_us);
+        }
+        let dur = a.duration().as_secs_f64();
+        assert!((0.02..0.12).contains(&dur), "50 req at ~1k/s: {dur}");
+        // the model mix round-robins; ids are distinct
+        assert!(a.entries.iter().any(|e| e.req.opts.model.is_none()));
+        assert!(a
+            .entries
+            .iter()
+            .any(|e| e.req.opts.model.as_deref() == Some("quad")));
+        assert!(a.entries.iter().any(|e| e.req.op == Op::Learn));
+        // a changed seed changes the stream
+        let c = ReplayLog::synthesize(&SynthSpec { seed: 8, ..spec });
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile_us(&[], 0.99), 0);
+        assert_eq!(percentile_us(&[7], 0.0), 7);
+        assert_eq!(percentile_us(&[7], 1.0), 7);
+        let tape: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&tape, 0.5), 51);
+        assert_eq!(percentile_us(&tape, 0.99), 99);
+        assert_eq!(percentile_us(&tape, 1.0), 100);
+    }
+
+    #[test]
+    fn report_accounting() {
+        let mut r = ReplayReport::default();
+        classify(&mut r, Duration::from_micros(10), Response::busy(1, 25));
+        classify(
+            &mut r,
+            Duration::from_micros(20),
+            Response::error(2, Error::DeadlineExpired.to_string()),
+        );
+        classify(
+            &mut r,
+            Duration::from_micros(30),
+            Response::error(3, "deadline exceeded: waited 1ms against a 0 ms budget"),
+        );
+        classify(&mut r, Duration::from_micros(40), Response::error(4, "boom"));
+        classify(
+            &mut r,
+            Duration::from_micros(50),
+            Response {
+                id: 5,
+                outcome: Outcome::Results(vec![]),
+            },
+        );
+        r.sent = 5;
+        assert_eq!((r.busy, r.expired, r.errors, r.results), (1, 2, 1, 1));
+        assert_eq!(r.answered(), 5);
+        assert_eq!(r.percentile_us(1.0), 50);
+    }
+}

@@ -48,6 +48,7 @@ pub mod checkpoint;
 use crate::coordinator::{BatcherConfig, DynamicBatcher, Metrics, TnnHandle};
 use crate::error::{Error, Result};
 use crate::proto::{AdminReply, ModelCmd, ModelInfo, Outcome, StatsSnapshot};
+use crate::qos::{AdmitPermit, Lane, QosConfig, QosGate, ShedCause};
 use crate::runtime::Tensor;
 use crate::shard::ShardedModel;
 use crate::volley::SpikeVolley;
@@ -83,6 +84,9 @@ pub struct RegistryConfig {
     /// Autosave every model at most this often (driven by
     /// [`ModelRegistry::maybe_autosave`]; needs `ckpt_dir`).
     pub autosave_after: Option<Duration>,
+    /// Admission policy stamped onto every slot's [`QosGate`]
+    /// (DESIGN.md §2.6). Disabled by default — pre-QoS behavior.
+    pub qos: QosConfig,
 }
 
 impl Default for RegistryConfig {
@@ -92,6 +96,7 @@ impl Default for RegistryConfig {
             batcher: BatcherConfig::default(),
             ckpt_dir: None,
             autosave_after: None,
+            qos: QosConfig::default(),
         }
     }
 }
@@ -118,6 +123,10 @@ pub struct ModelSlot {
     pub name: String,
     pub spec: ModelSpec,
     engine: SlotEngine,
+    /// Per-slot admission gate (DESIGN.md §2.6): two priority lanes
+    /// plus the per-model token bucket. A disabled gate admits
+    /// everything for free.
+    qos: QosGate,
 }
 
 impl ModelSlot {
@@ -127,7 +136,7 @@ impl ModelSlot {
         }
         if shards == 1 {
             let handle = TnnHandle::open(&cfg.artifacts_dir, spec.n, spec.theta, spec.seed)?;
-            Ok(ModelSlot::from_handle(name, handle, cfg.batcher))
+            Ok(ModelSlot::from_handle(name, handle, cfg.batcher, cfg.qos))
         } else {
             let sharded = ShardedModel::open(
                 &cfg.artifacts_dir,
@@ -141,6 +150,7 @@ impl ModelSlot {
                 name: name.to_string(),
                 spec,
                 engine: SlotEngine::Sharded(sharded),
+                qos: QosGate::new(cfg.qos),
             })
         }
     }
@@ -150,7 +160,12 @@ impl ModelSlot {
     /// build slots here, so the batcher pair can never drift between
     /// them. The spec is read back off the handle (identical to the
     /// opening spec by construction).
-    fn from_handle(name: &str, handle: TnnHandle, batcher: BatcherConfig) -> ModelSlot {
+    fn from_handle(
+        name: &str,
+        handle: TnnHandle,
+        batcher: BatcherConfig,
+        qos: QosConfig,
+    ) -> ModelSlot {
         let infer = DynamicBatcher::start(handle.clone(), batcher);
         let learn = DynamicBatcher::start(
             handle.clone(),
@@ -172,6 +187,7 @@ impl ModelSlot {
                 infer,
                 learn,
             },
+            qos: QosGate::new(qos),
         }
     }
 
@@ -262,11 +278,41 @@ impl ModelSlot {
         }
     }
 
+    /// This slot's admission gate (observability, benches, tests).
+    pub fn qos(&self) -> &QosGate {
+        &self.qos
+    }
+
+    /// Admission check for a `volleys`-volley request (the server runs
+    /// this *before* [`ModelSlot::run_batched`]): learn traffic enters
+    /// the subordinate lane, and a refusal bumps the shed counter it
+    /// indicts — `requests_shed` for a full lane, `requests_throttled`
+    /// for a dry token bucket — then surfaces as the typed
+    /// [`Error::Busy`] the codecs render as a first-class status. The
+    /// returned permit must be held across the batched run; dropping
+    /// it releases the lane slot.
+    pub fn admit(&self, learn: bool, volleys: usize) -> Result<AdmitPermit<'_>> {
+        let lane = if learn { Lane::Learn } else { Lane::Infer };
+        self.qos.admit(lane, volleys).map_err(|shed| {
+            let counter = match shed.cause {
+                ShedCause::QueueFull => "requests_shed",
+                ShedCause::Throttled => "requests_throttled",
+            };
+            // volley-granular, like every other requests_* counter
+            self.metrics().incr(counter, volleys.max(1) as u64);
+            Error::Busy {
+                retry_after_ms: shed.retry_after_ms,
+            }
+        })
+    }
+
     /// Run a volley batch through this slot (the server's
     /// `Infer`/`Learn` path) — the batcher pair for a single slot, the
     /// scatter/gather layer for a sharded one. Mirrors the pre-registry
     /// `run_batched`: the first volley error aborts the whole request
-    /// in kind.
+    /// in kind. Structural errors with their own wire status (`Busy`)
+    /// stay structural; everything else flattens to the rendered
+    /// error outcome.
     pub fn run_batched(
         &self,
         learn: bool,
@@ -292,6 +338,7 @@ impl ModelSlot {
         for r in replies {
             match r {
                 Ok(v) => results.push(v),
+                Err(Error::Busy { retry_after_ms }) => return Outcome::Busy { retry_after_ms },
                 Err(e) => return Outcome::Error(e.to_string()),
             }
         }
@@ -420,7 +467,7 @@ impl ModelRegistry {
     /// single-model compat path `Server::new` uses). Load-on-open is
     /// skipped — the caller owns the handle's state.
     pub fn with_default(name: &str, handle: TnnHandle, cfg: RegistryConfig) -> ModelRegistry {
-        let slot = Arc::new(ModelSlot::from_handle(name, handle, cfg.batcher));
+        let slot = Arc::new(ModelSlot::from_handle(name, handle, cfg.batcher, cfg.qos));
         let reg = ModelRegistry::empty(cfg, name);
         reg.slots.write().unwrap().insert(name.to_string(), slot);
         reg

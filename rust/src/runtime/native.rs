@@ -14,8 +14,8 @@
 //!   mirroring `aot.py` which lowers `column_forward` with `k_clip = K`),
 //!   then the 1-WTA winner mask. Path selection per batch row (silent
 //!   skip / compacted / dense-SIMD) happens inside the plan at the
-//!   calibrated [`SPARSE_DENSITY_CUTOVER`], overridable via
-//!   `CATWALK_SPARSE_CUTOVER`.
+//!   calibrated [`SPARSE_DENSITY_CUTOVER`](super::plan::SPARSE_DENSITY_CUTOVER),
+//!   overridable via `CATWALK_SPARSE_CUTOVER`.
 //! * `"train"` → `plan.forward()` + `plan.stdp()` / `plan.stdp_gated()`
 //!   — the winner-gated expected-value STDP step, batch-averaged exactly
 //!   like `model.py::stdp_update` (learning rates from
@@ -25,25 +25,23 @@
 //!   gate-level selection network is proven equivalent to it in
 //!   `rust/tests/runtime_roundtrip.rs`.
 //!
-//! The former free-function entry points (`rnl_forward`,
-//! `rnl_forward_sparse`, `rnl_forward_auto`, `wta_mask`, `stdp_update`,
-//! `stdp_update_gated`, `row_path`) remain below as thin wrappers over
-//! the plan for one PR — **deprecated**: new code should build a
-//! [`KernelPlan`](crate::runtime::plan::KernelPlan) and call it directly.
+//! The free-function wrappers that bridged the pre-plan API
+//! (`rnl_forward`, `rnl_forward_sparse`, `rnl_forward_auto`, `wta_mask`,
+//! `stdp_update`, `stdp_update_gated`, `row_path`) were deleted after
+//! their one-PR deprecation window: build a
+//! [`KernelPlan`](crate::runtime::plan::KernelPlan) and call it directly
+//! (the path-selection vocabulary — `RowPath`,
+//! `SPARSE_DENSITY_CUTOVER` — lives in [`crate::runtime::plan`]).
 //!
 //! This is the default backend: it needs nothing on disk, so the whole
 //! serving stack (coordinator, batcher, TCP server, experiment drivers)
 //! runs and is tested on every commit without libxla.
 
-use super::plan::{ForwardArgs, KernelPath, KernelPlan, StdpArgs};
+use super::plan::{ForwardArgs, KernelPlan, StdpArgs};
 use super::{Backend, Entry, Kernel, Manifest, Tensor};
 use crate::error::{Error, Result};
 use crate::tnn::stdp::StdpParams;
 use std::path::Path;
-
-// The path-selection vocabulary moved into the plan module with PR 6;
-// re-exported here so existing imports keep compiling for one PR.
-pub use super::plan::{RowPath, SPARSE_DENSITY_CUTOVER};
 
 /// Zero-state backend handle; all kernel state lives in the manifest.
 pub struct NativeBackend;
@@ -138,145 +136,6 @@ impl Kernel for TopkKernel {
     }
 }
 
-/// SRM0-RNL column forward pass (mirrors `ref.py::rnl_column_ref`).
-///
-/// `spikes` `[B, n]` (`>= t_max` = silent), `weights` `[C, n]`; returns
-/// first-crossing times `[B, C]` in `0..=t_max` (`t_max` = no spike). The
-/// per-cycle response count is optionally clipped at `k_clip` (the
-/// Catwalk dendrite) before accumulating into the membrane potential.
-///
-/// **Deprecated** (kept for one PR): this is the plan's `Scalar` path —
-/// new code should call
-/// `KernelPlan::with_path(KernelPath::Scalar).forward(&args)`.
-pub fn rnl_forward(
-    spikes: &Tensor,
-    weights: &Tensor,
-    theta: f32,
-    t_max: usize,
-    k_clip: Option<f32>,
-) -> Tensor {
-    KernelPlan::with_path(KernelPath::Scalar)
-        .forward(&ForwardArgs::new(spikes, weights, theta, t_max).k_clip(k_clip))
-}
-
-/// The per-row path decision at the calibrated default cutover, shared
-/// with the serving metrics so `STATS` counters cannot drift from what
-/// the kernel actually executes.
-///
-/// **Deprecated** (kept for one PR): environment-blind — new code should
-/// hold a `KernelPlan` (e.g. from `KernelPlan::from_env()`) and call its
-/// `row_path` so metric classification honors the same cutover the
-/// kernel runs at.
-pub fn row_path(active: usize, n: usize, theta: f32) -> RowPath {
-    KernelPlan::auto().row_path(active, n, theta)
-}
-
-/// Sparsity-aware RNL forward: every non-silent row is evaluated on the
-/// compacted (software-Catwalk) path — O(C · t_max · nnz) contiguous
-/// work instead of O(C · t_max · n). Output is bit-identical to
-/// [`rnl_forward`] (see `rust/tests/runtime_roundtrip.rs` for the
-/// conformance gate).
-///
-/// **Deprecated** (kept for one PR): this is the plan's `Compacted` path
-/// — new code should call
-/// `KernelPlan::with_path(KernelPath::Compacted).forward(&args)`.
-pub fn rnl_forward_sparse(
-    spikes: &Tensor,
-    weights: &Tensor,
-    theta: f32,
-    t_max: usize,
-    k_clip: Option<f32>,
-) -> Tensor {
-    KernelPlan::with_path(KernelPath::Compacted)
-        .forward(&ForwardArgs::new(spikes, weights, theta, t_max).k_clip(k_clip))
-}
-
-/// RNL forward with the automatic per-row density cutover: silent rows
-/// are skipped outright, rows at or below the cutover are compacted,
-/// busier rows take the (SIMD) dense sweep. All paths are bit-exact
-/// equals of each other.
-///
-/// **Deprecated** (kept for one PR): this is `KernelPlan::auto()` at the
-/// default cutover (no environment override) — new code should build the
-/// plan once and reuse it.
-pub fn rnl_forward_auto(
-    spikes: &Tensor,
-    weights: &Tensor,
-    theta: f32,
-    t_max: usize,
-    k_clip: Option<f32>,
-) -> Tensor {
-    KernelPlan::auto().forward(&ForwardArgs::new(spikes, weights, theta, t_max).k_clip(k_clip))
-}
-
-/// 1-WTA one-hot mask of the earliest-spiking column per batch row
-/// (ties → lowest index; all-zero row when nothing spiked). Mirrors
-/// `model.py::wta`.
-///
-/// **Deprecated** (kept for one PR): new code should call
-/// `KernelPlan::wta` on the plan it already holds.
-pub fn wta_mask(times: &Tensor, t_max: usize) -> Tensor {
-    KernelPlan::auto().wta(times, t_max)
-}
-
-/// Winner-gated expected-value STDP, batch-averaged (mirrors
-/// `model.py::stdp_update` / `ref.py::stdp_ref`): per-sample deltas are
-/// gated to the WTA winner (or to every column when the whole row stayed
-/// silent — otherwise a dead network could never become responsive),
-/// averaged over the batch, then clipped into `[0, w_max]`.
-///
-/// **Deprecated** (kept for one PR): new code should call
-/// `KernelPlan::stdp` with a [`StdpArgs`].
-pub fn stdp_update(
-    weights: &Tensor,
-    in_times: &Tensor,
-    out_times: &Tensor,
-    winner_mask: &Tensor,
-    t_max: usize,
-    p: &StdpParams,
-) -> Tensor {
-    KernelPlan::auto().stdp(
-        &StdpArgs {
-            weights,
-            in_times,
-            out_times,
-            t_max,
-            params: p,
-        },
-        winner_mask,
-    )
-}
-
-/// The STDP accumulation with externally supplied per-`(row, column)`
-/// gates in `[0, 1]` — the primitive a column shard needs: its local
-/// winner mask is meaningless (the real winner may live in another
-/// shard), so the scatter/gather layer computes the global gate —
-/// `1` for the global WTA winner, `1` for every column of a globally
-/// silent row, `0` otherwise — and hands it in. With gates derived
-/// locally ([`stdp_update`]) this is exactly the historical update.
-///
-/// **Deprecated** (kept for one PR): new code should call
-/// `KernelPlan::stdp_gated` with a [`StdpArgs`].
-pub fn stdp_update_gated(
-    weights: &Tensor,
-    in_times: &Tensor,
-    out_times: &Tensor,
-    gates: &Tensor,
-    t_max: usize,
-    p: &StdpParams,
-) -> Tensor {
-    KernelPlan::auto().stdp_gated(
-        &StdpArgs {
-            weights,
-            in_times,
-            out_times,
-            t_max,
-            params: p,
-        },
-        gates,
-    )
-}
-
 /// Per-cycle unary top-k taps (mirrors `ref.py::topk_wave_ref`): tap `j`
 /// carries a 1 in a cycle iff at least `k - j` lanes are high that cycle
 /// — the counting characterization the gate-level selection network is
@@ -307,11 +166,25 @@ mod tests {
     use super::*;
     use crate::neuron::behavior::rnl_first_crossing;
     use crate::rng::Xoshiro256;
+    use crate::runtime::plan::KernelPath;
     use crate::tnn::stdp::StdpRule;
     use crate::tnn::{Column, T_MAX};
     use crate::topk::TopkSelector;
 
     const TM: usize = T_MAX as usize;
+
+    /// One forward evaluation on an explicit plan path (the tests'
+    /// shorthand for the `KernelPlan` API the wrappers used to hide).
+    fn fwd(
+        path: KernelPath,
+        spikes: &Tensor,
+        weights: &Tensor,
+        theta: f32,
+        k: Option<f32>,
+    ) -> Tensor {
+        let args = ForwardArgs::new(spikes, weights, theta, TM).k_clip(k);
+        KernelPlan::with_path(path).forward(&args)
+    }
 
     fn random_spikes(rng: &mut Xoshiro256, n: usize, p: f64) -> Vec<f32> {
         (0..n)
@@ -343,13 +216,9 @@ mod tests {
                 .collect();
             let weights: Vec<f32> = (0..c * n).map(|_| rng.gen_range(8) as f32).collect();
             let theta = 1 + rng.gen_range(11) as u32;
-            let times = rnl_forward(
-                &Tensor::new(vec![b, n], spikes.clone()).unwrap(),
-                &Tensor::new(vec![c, n], weights.clone()).unwrap(),
-                theta as f32,
-                TM,
-                None,
-            );
+            let st = Tensor::new(vec![b, n], spikes.clone()).unwrap();
+            let wt = Tensor::new(vec![c, n], weights.clone()).unwrap();
+            let times = fwd(KernelPath::Scalar, &st, &wt, theta as f32, None);
             for bi in 0..b {
                 let st: Vec<Option<u32>> = spikes[bi * n..(bi + 1) * n]
                     .iter()
@@ -381,14 +250,9 @@ mod tests {
         let wt = Tensor::new(vec![4, 16], weights).unwrap();
         for _ in 0..100 {
             let volley = random_spikes(&mut rng, 16, 0.5);
-            let times = rnl_forward(
-                &Tensor::new(vec![1, 16], volley.clone()).unwrap(),
-                &wt,
-                6.0,
-                TM,
-                Some(2.0),
-            );
-            let mask = wta_mask(&times, TM);
+            let st = Tensor::new(vec![1, 16], volley.clone()).unwrap();
+            let times = fwd(KernelPath::Scalar, &st, &wt, 6.0, Some(2.0));
+            let mask = KernelPlan::auto().wta(&times, TM);
             let expect = col.forward(&volley);
             for ci in 0..4 {
                 assert_eq!(times.at2(0, ci), expect.times[ci], "volley {volley:?}");
@@ -421,9 +285,9 @@ mod tests {
                 let st = Tensor::new(vec![b, n], spikes).unwrap();
                 let wt = Tensor::new(vec![c, n], weights).unwrap();
                 for k_clip in [None, Some(2.0)] {
-                    let dense = rnl_forward(&st, &wt, theta, TM, k_clip);
-                    let sparse = rnl_forward_sparse(&st, &wt, theta, TM, k_clip);
-                    let auto = rnl_forward_auto(&st, &wt, theta, TM, k_clip);
+                    let dense = fwd(KernelPath::Scalar, &st, &wt, theta, k_clip);
+                    let sparse = fwd(KernelPath::Compacted, &st, &wt, theta, k_clip);
+                    let auto = fwd(KernelPath::Auto, &st, &wt, theta, k_clip);
                     assert_eq!(dense.data, sparse.data, "density {density} clip {k_clip:?}");
                     assert_eq!(dense.data, auto.data, "density {density} clip {k_clip:?}");
                 }
@@ -433,15 +297,16 @@ mod tests {
 
     #[test]
     fn wta_mask_ties_and_silence() {
+        let plan = KernelPlan::auto();
         let t = Tensor::new(vec![3, 3], vec![5.0, 2.0, 9.0, 2.0, 2.0, 1.5, 16.0, 16.0, 16.0])
             .unwrap();
-        let m = wta_mask(&t, 16);
+        let m = plan.wta(&t, 16);
         assert_eq!(m.data[0..3], [0.0, 1.0, 0.0]);
         assert_eq!(m.data[3..6], [0.0, 0.0, 1.0]);
         assert_eq!(m.data[6..9], [0.0, 0.0, 0.0]);
         // tie -> lowest index
         let t = Tensor::new(vec![1, 3], vec![3.0, 3.0, 16.0]).unwrap();
-        assert_eq!(wta_mask(&t, 16).data, vec![1.0, 0.0, 0.0]);
+        assert_eq!(plan.wta(&t, 16).data, vec![1.0, 0.0, 0.0]);
     }
 
     /// With batch = 1 the batched expected-value update degenerates to
@@ -449,6 +314,8 @@ mod tests {
     #[test]
     fn stdp_update_matches_per_volley_rule_at_batch_one() {
         let mut rng = Xoshiro256::new(33);
+        let plan = KernelPlan::auto();
+        let params = StdpParams::default();
         for case in 0..100 {
             let (c, n) = (3, 8);
             let mut col = Column::new(n, c, 5.0, Some(2), case);
@@ -456,16 +323,17 @@ mod tests {
             let out = col.forward(&volley);
             let weights: Vec<f32> = col.weights.iter().flatten().copied().collect();
             let wt = Tensor::new(vec![c, n], weights).unwrap();
+            let st = Tensor::new(vec![1, n], volley.clone()).unwrap();
             let times = Tensor::new(vec![1, c], out.times.clone()).unwrap();
-            let mask = wta_mask(&times, TM);
-            let batched = stdp_update(
-                &wt,
-                &Tensor::new(vec![1, n], volley.clone()).unwrap(),
-                &times,
-                &mask,
-                TM,
-                &StdpParams::default(),
-            );
+            let mask = plan.wta(&times, TM);
+            let args = StdpArgs {
+                weights: &wt,
+                in_times: &st,
+                out_times: &times,
+                t_max: TM,
+                params: &params,
+            };
+            let batched = plan.stdp(&args, &mask);
             StdpRule::default().apply(&mut col, &volley, &out.times, out.winner);
             for ci in 0..c {
                 for i in 0..n {
@@ -478,12 +346,15 @@ mod tests {
     }
 
     /// The shard contract at the kernel level: splitting the weight
-    /// matrix into column slices and applying [`stdp_update_gated`] per
-    /// slice — with gates derived from the *global* winner and global
-    /// row silence — reproduces the full [`stdp_update`] bit for bit.
+    /// matrix into column slices and applying `KernelPlan::stdp_gated`
+    /// per slice — with gates derived from the *global* winner and
+    /// global row silence — reproduces the full `KernelPlan::stdp` bit
+    /// for bit.
     #[test]
     fn gated_stdp_on_column_slices_matches_full_update() {
         let mut rng = Xoshiro256::new(91);
+        let plan = KernelPlan::auto();
+        let params = StdpParams::default();
         for case in 0..50 {
             let (b, c, n) = (5, 7, 12);
             let spikes: Vec<f32> = (0..b * n)
@@ -499,9 +370,16 @@ mod tests {
             let theta = 2.0 + rng.gen_range(8) as f32;
             let st = Tensor::new(vec![b, n], spikes).unwrap();
             let wt = Tensor::new(vec![c, n], weights).unwrap();
-            let times = rnl_forward_auto(&st, &wt, theta, TM, Some(2.0));
-            let mask = wta_mask(&times, TM);
-            let full = stdp_update(&wt, &st, &times, &mask, TM, &StdpParams::default());
+            let times = fwd(KernelPath::Auto, &st, &wt, theta, Some(2.0));
+            let mask = plan.wta(&times, TM);
+            let full_args = StdpArgs {
+                weights: &wt,
+                in_times: &st,
+                out_times: &times,
+                t_max: TM,
+                params: &params,
+            };
+            let full = plan.stdp(&full_args, &mask);
 
             // split columns at an uneven boundary and rebuild per slice
             let split = 1 + (case as usize % (c - 1));
@@ -522,14 +400,14 @@ mod tests {
                             if winner || row_silent { 1.0 } else { 0.0 };
                     }
                 }
-                let part = stdp_update_gated(
-                    &w_slice,
-                    &st,
-                    &t_slice,
-                    &gates,
-                    TM,
-                    &StdpParams::default(),
-                );
+                let slice_args = StdpArgs {
+                    weights: &w_slice,
+                    in_times: &st,
+                    out_times: &t_slice,
+                    t_max: TM,
+                    params: &params,
+                };
+                let part = plan.stdp_gated(&slice_args, &gates);
                 rebuilt[start * n..end * n].copy_from_slice(&part.data);
             }
             let full_bits: Vec<u32> = full.data.iter().map(|x| x.to_bits()).collect();

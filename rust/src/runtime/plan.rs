@@ -6,9 +6,9 @@
 //! execution layer, the benches and the conformance tests all talk to
 //! this one seam instead of the former pile of free functions
 //! (`rnl_forward`, `rnl_forward_sparse`, `rnl_forward_auto`,
-//! `stdp_update`, `stdp_update_gated` — kept as thin deprecated
-//! wrappers in [`crate::runtime::native`] for one PR). A plan owns the
-//! three execution decisions:
+//! `stdp_update`, `stdp_update_gated` — deprecated in PR 6 and deleted
+//! from [`crate::runtime::native`] with PR 7). A plan owns the three
+//! execution decisions:
 //!
 //! * **Layout** — the batch sweep is column-major: for each weight row
 //!   (output column) all volleys of the batch are evaluated before the

@@ -113,6 +113,12 @@ impl ServerCore {
         let deadline = req.opts.deadline_ms.map(|ms| received + Duration::from_millis(ms as u64));
         // >=, so a 0 ms budget is deterministically expired
         if deadline.is_some_and(|d| Instant::now() >= d) {
+            // dispatch-level expiry is still *accounted* expiry: the
+            // request dies right here (it never reaches a batcher
+            // drain), so this is its exactly-once increment — and the
+            // submit-side counters are mirrored so the invariant
+            // `requests >= requests_expired` holds on this path too
+            self.count_dispatch_expiry(&req);
             return Response::error(
                 req.id,
                 format!(
@@ -126,7 +132,14 @@ impl ServerCore {
             Op::Infer | Op::Learn => {
                 let learn = req.op == Op::Learn;
                 match self.registry.slot(req.opts.model.as_deref()) {
-                    Ok(slot) => slot.run_batched(learn, req.volleys, deadline),
+                    // admission runs before any queue slot or compute
+                    // is spent; the permit spans the batched run so the
+                    // lane's in-flight count tracks real load
+                    Ok(slot) => match slot.admit(learn, req.volleys.len()) {
+                        Ok(_permit) => slot.run_batched(learn, req.volleys, deadline),
+                        Err(Error::Busy { retry_after_ms }) => Outcome::Busy { retry_after_ms },
+                        Err(e) => Outcome::Error(e.to_string()),
+                    },
                     Err(e) => Outcome::Error(e.to_string()),
                 }
             }
@@ -147,6 +160,35 @@ impl ServerCore {
             id: req.id,
             outcome,
         }
+    }
+
+    /// Metrics for a request expiring at the dispatch check (the
+    /// silent-expiry gap fixed in PR 7): before this, a request dying
+    /// here left no trace in any counter, while drain-level expiry
+    /// counted — so `requests_expired` undercounted exactly the
+    /// requests that were most late. Mirrors the batcher's submit-side
+    /// accounting (volley-granular `requests`/`requests_sparse`/
+    /// `requests_dense`), then counts the expiry itself. Exactly once
+    /// per request: dispatch expiry returns before anything is
+    /// enqueued, so the drain path can never see (or recount) it.
+    fn count_dispatch_expiry(&self, req: &Request) {
+        if !matches!(req.op, Op::Infer | Op::Learn) || req.volleys.is_empty() {
+            return;
+        }
+        let Ok(slot) = self.registry.slot(req.opts.model.as_deref()) else {
+            return;
+        };
+        let m = slot.metrics();
+        let sparse = req.volleys.iter().filter(|v| v.is_sparse()).count() as u64;
+        let total = req.volleys.len() as u64;
+        m.incr("requests", total);
+        if sparse > 0 {
+            m.incr("requests_sparse", sparse);
+        }
+        if total > sparse {
+            m.incr("requests_dense", total - sparse);
+        }
+        m.incr("requests_expired", total);
     }
 }
 
@@ -360,6 +402,11 @@ fn serve_framed(
                 Ok(req) => core.handle(req, received),
             }
         };
+        // the negotiated version caps the *reply* surface too: a QoS
+        // shed on a v2 connection degrades from the status-6 BUSY
+        // frame to the generic error form, so a v2 peer never sees a
+        // status byte it cannot decode
+        let resp = if version < 3 { resp.degrade_busy() } else { resp };
         let bye = matches!(resp.outcome, Outcome::Bye);
         send_response(&mut out, &resp)?;
         if bye {

@@ -638,6 +638,18 @@ impl ShardedModel {
         }
         drop(self.state_lock.write().unwrap());
     }
+
+    /// Chaos-harness fault: shut down one shard's infer batcher while
+    /// the rest of the model keeps running. Queued work on that shard
+    /// flushes, later infers that scatter onto it gather a typed
+    /// "batcher is shut down" error — so a killed shard degrades the
+    /// model to typed errors, never to hangs or silent drops (the
+    /// contract `qos::replay::chaos_run` asserts). The model-level
+    /// state lock and the other shards are untouched; there is no
+    /// resurrect — unload the slot to recover.
+    pub fn kill_shard(&self, i: usize) {
+        self.shards[i].infer.shutdown();
+    }
 }
 
 /// Concatenated per-column times → one [`VolleyResult`] with the

@@ -49,6 +49,9 @@ const GOLDEN_MODELS_RESPONSE_HEX: &str = "43574b32040000004d00000000000000090501
 const GOLDEN_HELLO_V3_HEX: &str = "43574b32010000000400020003";
 const GOLDEN_ACK_V3_HEX: &str = "43574b32020000000e0003000000400000001000000010";
 
+// The QoS shed reply (status 6, v3-only; PR 7): id 7, retry 250 ms.
+const GOLDEN_BUSY_RESPONSE_HEX: &str = "43574b32040000000d000000000000000706000000fa";
+
 fn golden_request() -> Request {
     Request {
         id: 7,
@@ -222,6 +225,41 @@ fn golden_v3_bytes_match_python_twin() {
         frame::decode_response(&payload).unwrap(),
         golden_models_response()
     );
+}
+
+/// The BUSY status frame: golden bytes shared with the python twin, a
+/// lossless decode back, truncation at every cut is a typed error, and
+/// the v2 degrade renders the same retry hint through the generic
+/// ERROR status instead.
+#[test]
+fn golden_busy_bytes_match_python_twin() {
+    let resp = Response::busy(7, 250);
+    let payload = frame::encode_response(&resp).unwrap();
+    let bytes = framed(FrameType::Response, &payload);
+    assert_eq!(hex(&bytes), GOLDEN_BUSY_RESPONSE_HEX);
+    assert_eq!(frame::decode_response(&payload).unwrap(), resp);
+    // status byte sits right after the u64 id
+    assert_eq!(payload[8], 6);
+    // any truncation of the 13-byte payload is a typed error
+    for cut in 0..payload.len() {
+        assert!(
+            matches!(frame::decode_response(&payload[..cut]), Err(Error::Proto(_))),
+            "cut at {cut} must be a typed error"
+        );
+    }
+    // the v2 fallback form: same envelope id, generic ERROR status,
+    // retry hint preserved in the rendered message
+    let degraded = Response::busy(7, 250).degrade_busy();
+    assert_eq!(degraded.id, 7);
+    let payload = frame::encode_response(&degraded).unwrap();
+    assert_eq!(payload[8], 4, "v2 form uses the ERROR status");
+    match degraded.outcome {
+        Outcome::Error(e) => assert_eq!(e, "server busy, retry after 250 ms"),
+        other => panic!("{other:?}"),
+    }
+    // non-busy outcomes pass through degrade untouched
+    let ok = golden_response().degrade_busy();
+    assert_eq!(ok, golden_response());
 }
 
 // ----------------------------------------------------------- properties

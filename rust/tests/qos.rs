@@ -1,0 +1,366 @@
+//! QoS end-to-end gates: typed load shedding over TCP, exactly-once
+//! expiry accounting, priority-lane policy, the v2 degrade contract on
+//! the wire, and the traffic-replay chaos harness.
+//!
+//! The overload tests make shedding *deterministic* by sizing the
+//! admission lanes down to zero (an empty lane is full by definition),
+//! so no assertion here depends on winning a timing race.
+
+use catwalk::coordinator::pool::par_map;
+use catwalk::proto::frame::{self, FrameType};
+use catwalk::proto::{Outcome, Request};
+use catwalk::qos::replay::{self, ChaosOptions, ReplayLog, ReplayOptions, SynthSpec};
+use catwalk::qos::QosConfig;
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use catwalk::server::{FramedClient, Server};
+use catwalk::volley::SpikeVolley;
+use catwalk::Error;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+const N: usize = 16;
+
+fn boot(qos: QosConfig) -> (Arc<Server>, String, std::thread::JoinHandle<()>) {
+    let cfg = RegistryConfig {
+        qos,
+        ..RegistryConfig::default()
+    };
+    let spec = ModelSpec {
+        n: N,
+        theta: 6.0,
+        seed: 7,
+    };
+    let registry = Arc::new(ModelRegistry::open(cfg, "default", spec).unwrap());
+    let server = Arc::new(Server::with_registry(registry));
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    (server, addr, srv)
+}
+
+fn stop(server: &Server, srv: std::thread::JoinHandle<()>) {
+    server
+        .stop_handle()
+        .store(true, std::sync::atomic::Ordering::Release);
+    srv.join().unwrap();
+}
+
+fn silent() -> SpikeVolley {
+    SpikeVolley::dense(vec![16.0; N])
+}
+
+/// A zero-depth infer lane sheds every request with the typed BUSY
+/// reply carrying the configured retry hint — fast, no queue slot, no
+/// compute — while PING/STATS (not admission-gated) keep working, and
+/// the shed shows up in the `requests_shed` counter, aggregate and
+/// per-model.
+#[test]
+fn zero_depth_gate_sheds_with_typed_busy() {
+    let qos = QosConfig {
+        infer_depth: 0,
+        learn_depth: 0,
+        retry_after_ms: 40,
+        ..QosConfig::on()
+    };
+    let (server, addr, srv) = boot(qos);
+    let mut client = FramedClient::connect(&addr).unwrap();
+
+    for _ in 0..3 {
+        let resp = client.call(Request::infer(vec![silent()])).unwrap();
+        match resp.outcome {
+            Outcome::Busy { retry_after_ms } => assert_eq!(retry_after_ms, 40),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        // the ergonomic accessor surfaces it as the typed error
+        let resp = client.call(Request::infer(vec![silent()])).unwrap();
+        match resp.results() {
+            Err(Error::Busy { retry_after_ms }) => assert_eq!(retry_after_ms, 40),
+            other => panic!("{other:?}"),
+        }
+    }
+    client.ping().unwrap();
+    let s = client.stats().unwrap();
+    assert_eq!(s.counter("requests_shed"), 6);
+    assert_eq!(s.counter("model.default.requests_shed"), 6);
+    assert_eq!(s.counter("model.default.requests"), 0, "nothing admitted");
+    assert_eq!(s.counter("model.default.batches"), 0, "nothing executed");
+
+    client.quit().unwrap();
+    stop(&server, srv);
+}
+
+/// Overload acceptance gate: flood a depth-1 lane from many pipelined
+/// connections; every request gets exactly one reply, every reply is
+/// typed (Results or Busy, nothing else, no silent drops), and the
+/// server-side ledger reconciles exactly: admitted + shed == sent.
+#[test]
+fn flood_gets_exactly_one_typed_reply_per_request() {
+    let qos = QosConfig {
+        infer_depth: 1,
+        ..QosConfig::on()
+    };
+    let (server, addr, srv) = boot(qos);
+
+    let conns = 8usize;
+    let per_conn = 32usize;
+    let barrier = Arc::new(Barrier::new(conns));
+    let tallies: Vec<(u64, u64)> = par_map(conns, (0..conns).collect(), |_| {
+        let mut client = FramedClient::connect(&addr).expect("connect");
+        barrier.wait();
+        let reqs: Vec<Request> = (0..per_conn)
+            .map(|_| Request::infer(vec![silent()]))
+            .collect();
+        let resps = client.call_many(reqs).expect("call_many");
+        assert_eq!(resps.len(), per_conn, "exactly one reply per request");
+        let (mut ok, mut busy) = (0u64, 0u64);
+        for resp in &resps {
+            match &resp.outcome {
+                Outcome::Results(rs) => {
+                    assert_eq!(rs.len(), 1);
+                    ok += 1;
+                }
+                Outcome::Busy { retry_after_ms } => {
+                    assert!(*retry_after_ms >= 1);
+                    busy += 1;
+                }
+                other => panic!("untyped reply under flood: {other:?}"),
+            }
+        }
+        let _ = client.quit();
+        (ok, busy)
+    });
+
+    let sent = (conns * per_conn) as u64;
+    let ok: u64 = tallies.iter().map(|t| t.0).sum();
+    let busy: u64 = tallies.iter().map(|t| t.1).sum();
+    assert_eq!(ok + busy, sent, "no silent drops");
+    assert!(
+        busy > 0,
+        "a depth-1 lane under 8 simultaneous connections must shed"
+    );
+    assert!(ok > 0, "the lane still serves while shedding");
+
+    // server-side ledger: every volley is either admitted or shed,
+    // counted exactly once
+    let mut client = FramedClient::connect(&addr).unwrap();
+    let s = client.stats().unwrap();
+    assert_eq!(s.counter("model.default.requests"), ok);
+    assert_eq!(s.counter("model.default.requests_shed"), busy);
+    client.quit().unwrap();
+    stop(&server, srv);
+}
+
+/// The silent-expiry regression pin: a request already past its
+/// deadline at dispatch is answered with the typed error AND counted in
+/// `requests_expired` exactly once, with the submit-side counters
+/// mirrored so `requests >= requests_expired` stays an invariant.
+#[test]
+fn dispatch_expiry_counted_exactly_once() {
+    let (server, addr, srv) = boot(QosConfig::default());
+    let mut client = FramedClient::connect(&addr).unwrap();
+
+    let doomed = Request::infer(vec![silent(), silent(), silent()]).with_deadline_ms(0);
+    match client.call(doomed).unwrap().outcome {
+        Outcome::Error(e) => assert!(e.contains("deadline"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+    let s = client.stats().unwrap();
+    assert_eq!(
+        s.counter("model.default.requests_expired"),
+        3,
+        "3 volleys expired once each — not zero (silent), not double"
+    );
+    assert_eq!(s.counter("model.default.requests"), 3);
+    assert_eq!(s.counter("model.default.batches"), 0, "no kernel execution");
+
+    // once more: the count advances by exactly the volley count again
+    let doomed = Request::infer(vec![silent()]).with_deadline_ms(0);
+    assert!(matches!(
+        client.call(doomed).unwrap().outcome,
+        Outcome::Error(_)
+    ));
+    let s = client.stats().unwrap();
+    assert_eq!(s.counter("model.default.requests_expired"), 4);
+
+    client.quit().unwrap();
+    stop(&server, srv);
+}
+
+/// Priority lanes end-to-end: with the learn lane sized to zero, learn
+/// traffic sheds with the typed BUSY (and lands in the shed counter)
+/// while infer traffic on the same model is untouched — the lane
+/// policy's guarantee that background learning cannot starve serving.
+#[test]
+fn learn_lane_sheds_while_infer_serves() {
+    let qos = QosConfig {
+        learn_depth: 0,
+        ..QosConfig::on()
+    };
+    let (server, addr, srv) = boot(qos);
+    let mut client = FramedClient::connect(&addr).unwrap();
+
+    for _ in 0..4 {
+        match client.call(Request::learn(vec![silent()])).unwrap().outcome {
+            Outcome::Busy { .. } => {}
+            other => panic!("learn should shed, got {other:?}"),
+        }
+        let resp = client.call(Request::infer(vec![silent()])).unwrap();
+        assert_eq!(resp.results().unwrap().len(), 1, "infer unaffected");
+    }
+    let s = client.stats().unwrap();
+    assert_eq!(s.counter("model.default.requests_shed"), 4);
+    assert_eq!(s.counter("model.default.requests"), 4);
+
+    client.quit().unwrap();
+    stop(&server, srv);
+}
+
+/// The v2 degrade contract on the wire: a connection that negotiated
+/// version 2 never receives the status-6 BUSY byte — a shed reply
+/// arrives as the generic ERROR status carrying the rendered
+/// `Error::Busy` message, so a pre-PR client decodes it fine.
+#[test]
+fn v2_connection_never_sees_status_busy() {
+    let qos = QosConfig {
+        infer_depth: 0,
+        ..QosConfig::on()
+    };
+    let (server, addr, srv) = boot(qos);
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    frame::write_frame(&mut stream, FrameType::Hello, &frame::encode_hello(2, 2)).unwrap();
+    stream.flush().unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let (ty, payload) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(ty, FrameType::Ack);
+    assert_eq!(frame::decode_ack(&payload).unwrap().version, 2);
+
+    for _ in 0..3 {
+        let req = Request::infer(vec![silent()]).with_id(77);
+        frame::write_frame(
+            &mut stream,
+            FrameType::Request,
+            &frame::encode_request(&req).unwrap(),
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let (_, payload) = frame::read_frame(&mut reader).unwrap().unwrap();
+        // byte 8 of a response payload is the status: must be 4
+        // (ERROR), never 6 (BUSY) on this connection
+        assert_eq!(payload[8], 4, "v2 peer got status {}", payload[8]);
+        let resp = frame::decode_response(&payload).unwrap();
+        assert_eq!(resp.id, 77);
+        match resp.outcome {
+            Outcome::Error(e) => {
+                assert!(e.contains("server busy"), "{e}");
+                assert!(e.contains("retry after"), "{e}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // the same shed on a v3 client IS the structural status
+    let mut v3 = FramedClient::connect(&addr).unwrap();
+    assert!(matches!(
+        v3.call(Request::infer(vec![silent()])).unwrap().outcome,
+        Outcome::Busy { .. }
+    ));
+    v3.quit().unwrap();
+    stop(&server, srv);
+}
+
+/// Replay log + live replay: synthesize a deterministic stream, save
+/// and re-read it bitwise, replay it against a QoS server at 2x, and
+/// check the client-side ledger covers every request with a typed
+/// outcome.
+#[test]
+fn replay_log_roundtrips_and_replays_with_full_accounting() {
+    let spec = SynthSpec {
+        requests: 64,
+        rate_per_s: 2000.0,
+        n: N,
+        t_max: 16,
+        deadline_ms: Some(2_000),
+        models: vec![String::new()],
+        seed: 13,
+    };
+    let log = ReplayLog::synthesize(&spec);
+    assert_eq!(log.entries.len(), 64);
+
+    let dir = std::env::temp_dir().join(format!("catwalk-replay-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("stream.cwkr");
+    log.save(&path).unwrap();
+    let back = ReplayLog::read(&path).unwrap();
+    assert_eq!(back.entries.len(), log.entries.len());
+    for (a, b) in log.entries.iter().zip(&back.entries) {
+        assert_eq!(a.offset_us, b.offset_us);
+        assert_eq!(a.req, b.req);
+    }
+
+    let (server, addr, srv) = boot(QosConfig::on());
+    let opts = ReplayOptions {
+        multiple: 2.0,
+        conns: 4,
+    };
+    let report = replay::replay(&addr, &log, &opts).unwrap();
+    assert_eq!(report.sent, 64);
+    assert_eq!(report.transport_errors, 0, "no torn connections");
+    assert_eq!(
+        report.answered(),
+        report.sent,
+        "every request got exactly one typed reply"
+    );
+    assert!(report.results > 0);
+    assert!(report.percentile_us(99.0) >= report.percentile_us(50.0));
+
+    std::fs::remove_dir_all(&dir).ok();
+    stop(&server, srv);
+}
+
+/// The chaos acceptance gate: replay under stalled clients, a killed
+/// shard slot and a corrupted checkpoint. Every contract must hold —
+/// typed errors only, no hangs, the corrupt checkpoint is refused, and
+/// the old weights keep serving bit-identical replies.
+#[test]
+fn chaos_replay_contracts_hold() {
+    let scratch = std::env::temp_dir().join(format!("catwalk-chaos-t-{}", std::process::id()));
+    let opts = ChaosOptions {
+        artifacts_dir: "artifacts".into(),
+        scratch_dir: scratch,
+        spec: SynthSpec {
+            requests: 48,
+            rate_per_s: 1200.0,
+            n: N,
+            t_max: 16,
+            deadline_ms: Some(2_000),
+            models: vec![String::new()],
+            seed: 21,
+        },
+        replay: ReplayOptions {
+            multiple: 1.0,
+            conns: 4,
+        },
+        qos: QosConfig::on(),
+        stall_clients: 2,
+    };
+    let report = replay::chaos_run(&opts).unwrap();
+    assert_eq!(report.replay.transport_errors, 0);
+    assert_eq!(report.replay.answered(), report.replay.sent);
+    assert_eq!(report.victim_hangs, 0, "killed shard degrades, never hangs");
+    assert!(report.victim_typed_errors > 0, "killed shard answers typed");
+    assert!(report.corrupt_load_rejected, "corrupt checkpoint refused");
+    assert!(report.weights_bit_identical, "old weights keep serving");
+    assert!(report.survivor_serving);
+    assert!(report.contracts_hold());
+}
