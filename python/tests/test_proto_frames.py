@@ -22,19 +22,31 @@ byte-for-byte a valid v3 frame without them):
     ACK      := version u16 | n u32 | c u32 | t_max u32
     REQUEST  := id u64 | op u8 | flags u8 | [deadline_ms u32]
                 | [mlen u16 | model utf8]            (v3, flags bit 3)
+                | [ngates u32 | ngates*f32]          (v3, flags bit 4,
+                                                      LEARN only)
                 | body
     body     := nvolleys u16 | volley*               (op 1..5)
               | cmd u8 | cmd_fields                  (op 6 ADMIN, v3)
     volley   := 0 | n u32 | n*f32            (dense)
               | 1 | n u32 | nnz u32 | nnz*(line u32, time f32)
     cmd      := 1 LIST | 2 CREATE | 3 SAVE | 4 LOAD | 5 UNLOAD
+              | 6 CREATE_COLUMNS | 7 FETCH_CKPT | 8 PUT_CKPT
+              | 9 PUT_SHARD | 10 PUT_MANIFEST       (v3, dist tier)
     CREATE   := str16 name | n u32 | theta f32 | seed u64
     SAVE/LOAD/UNLOAD := str16 name
+    CREATE_COLUMNS := str16 name | index u32 | n u32 | theta f32
+                      | seed u64 | start u32 | end u32
+    FETCH_CKPT := str16 name
+    PUT_CKPT   := str16 name | blob32
+    PUT_SHARD  := str16 name | index u32 | crc u32 | blob32
+    PUT_MANIFEST := str16 name | blob32
     str16    := len u16 | utf8[len]
+    blob32   := blen u32 | bytes[blen]
     RESPONSE := id u64 | status u8 | body
     RESULTS  := count u16 | (winner i32 | c u32 | c*f32)*
     ADMIN    := 0 | receipt utf8                     (v3, OK)
               | 1 | count u16 | model_row*           (v3, MODELS)
+              | 2 | ckpt bytes (raw CWKP)            (v3, CKPT)
     BUSY     := retry_after_ms u32                   (v3, QoS shed;
                 a v2 connection gets ERROR text instead)
     model_row := str16 name | n u32 | c u32 | t_max u32
@@ -53,11 +65,14 @@ MAX_PAYLOAD = 1 << 24
 T_HELLO, T_ACK, T_REQUEST, T_RESPONSE = 1, 2, 3, 4
 OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT, OP_ADMIN = 1, 2, 3, 4, 5, 6
 FLAG_SPARSE_REPLY, FLAG_DEADLINE, FLAG_COUNTERS_ONLY, FLAG_MODEL = 1, 2, 4, 8
+FLAG_GATES = 16
 ST_RESULTS, ST_STATS, ST_PONG, ST_BYE, ST_ERROR, ST_ADMIN, ST_BUSY = (
     0, 1, 2, 3, 4, 5, 6,
 )
 CMD_LIST, CMD_CREATE, CMD_SAVE, CMD_LOAD, CMD_UNLOAD = 1, 2, 3, 4, 5
-ADMIN_OK, ADMIN_MODELS = 0, 1
+CMD_CREATE_COLUMNS, CMD_FETCH_CKPT, CMD_PUT_CKPT = 6, 7, 8
+CMD_PUT_SHARD, CMD_PUT_MANIFEST = 9, 10
+ADMIN_OK, ADMIN_MODELS, ADMIN_CKPT = 0, 1, 2
 MFLAG_DEFAULT = 1
 
 
@@ -117,19 +132,27 @@ def str16(s):
 
 
 def request(rid, op, volleys=(), sparse_reply=False, deadline_ms=None,
-            counters_only=False, model=None, admin=None):
-    """``admin`` is the pre-encoded cmd body; required iff op is ADMIN."""
+            counters_only=False, model=None, gates=None, admin=None):
+    """``admin`` is the pre-encoded cmd body; required iff op is ADMIN.
+    ``gates`` (a list of f32, LEARN only) is the dist tier's phase-2
+    STDP gate vector — the coordinator's global-winner broadcast."""
     flags = (
         (FLAG_SPARSE_REPLY if sparse_reply else 0)
         | (FLAG_DEADLINE if deadline_ms is not None else 0)
         | (FLAG_COUNTERS_ONLY if counters_only else 0)
         | (FLAG_MODEL if model is not None else 0)
+        | (FLAG_GATES if gates is not None else 0)
     )
+    if gates is not None:
+        assert op == OP_LEARN, "gates ride only on LEARN requests"
     p = struct.pack(">QBB", rid, op, flags)
     if deadline_ms is not None:
         p += struct.pack(">I", deadline_ms)
     if model is not None:
         p += str16(model)
+    if gates is not None:
+        p += struct.pack(">I", len(gates))
+        p += b"".join(struct.pack(">f", g) for g in gates)
     if op == OP_ADMIN:
         assert not volleys and admin is not None
         return p + admin
@@ -150,8 +173,37 @@ def cmd_create(name, n, theta, seed):
 
 
 def cmd_named(cmd, name):
-    assert cmd in (CMD_SAVE, CMD_LOAD, CMD_UNLOAD)
+    assert cmd in (CMD_SAVE, CMD_LOAD, CMD_UNLOAD, CMD_FETCH_CKPT)
     return struct.pack(">B", cmd) + str16(name)
+
+
+def blob32(b):
+    return struct.pack(">I", len(b)) + b
+
+
+def cmd_create_columns(name, index, n, theta, seed, start, end):
+    return (
+        struct.pack(">B", CMD_CREATE_COLUMNS)
+        + str16(name)
+        + struct.pack(">IIfQII", index, n, theta, seed, start, end)
+    )
+
+
+def cmd_put_ckpt(name, data):
+    return struct.pack(">B", CMD_PUT_CKPT) + str16(name) + blob32(data)
+
+
+def cmd_put_shard(name, index, crc, data):
+    return (
+        struct.pack(">B", CMD_PUT_SHARD)
+        + str16(name)
+        + struct.pack(">II", index, crc)
+        + blob32(data)
+    )
+
+
+def cmd_put_manifest(name, data):
+    return struct.pack(">B", CMD_PUT_MANIFEST) + str16(name) + blob32(data)
 
 
 class Cur:
@@ -174,6 +226,14 @@ class Cur:
         self.off += ln
         return raw.decode("utf-8")
 
+    def blob32(self):
+        ln = self.take(">I")
+        if self.off + ln > len(self.b):
+            raise ValueError("short blob at offset %d" % self.off)
+        raw = self.b[self.off : self.off + ln]
+        self.off += ln
+        return raw
+
     def finish(self):
         if self.off != len(self.b):
             raise ValueError("%d trailing bytes" % (len(self.b) - self.off))
@@ -187,9 +247,22 @@ def parse_model_cmd(cur):
         name = cur.str16()
         n, theta, seed = cur.take(">IfQ")
         return ("create", name, n, theta, seed)
-    if cmd in (CMD_SAVE, CMD_LOAD, CMD_UNLOAD):
-        verb = {CMD_SAVE: "save", CMD_LOAD: "load", CMD_UNLOAD: "unload"}[cmd]
+    if cmd in (CMD_SAVE, CMD_LOAD, CMD_UNLOAD, CMD_FETCH_CKPT):
+        verb = {CMD_SAVE: "save", CMD_LOAD: "load", CMD_UNLOAD: "unload",
+                CMD_FETCH_CKPT: "fetch_ckpt"}[cmd]
         return (verb, cur.str16())
+    if cmd == CMD_CREATE_COLUMNS:
+        name = cur.str16()
+        index, n, theta, seed, start, end = cur.take(">IIfQII")
+        return ("create_columns", name, index, n, theta, seed, start, end)
+    if cmd == CMD_PUT_CKPT:
+        return ("put_ckpt", cur.str16(), cur.blob32())
+    if cmd == CMD_PUT_SHARD:
+        name = cur.str16()
+        index, crc = cur.take(">II")
+        return ("put_shard", name, index, crc, cur.blob32())
+    if cmd == CMD_PUT_MANIFEST:
+        return ("put_manifest", cur.str16(), cur.blob32())
     raise ValueError("unknown admin cmd %d" % cmd)
 
 
@@ -198,10 +271,19 @@ def parse_request(payload):
     rid, op, flags = cur.take(">QBB")
     if op not in (OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT, OP_ADMIN):
         raise ValueError("unknown op %d" % op)
-    if flags & ~(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY | FLAG_MODEL):
+    if flags & ~(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY
+                 | FLAG_MODEL | FLAG_GATES):
         raise ValueError("unknown flags %#x" % flags)
+    if flags & FLAG_GATES and op != OP_LEARN:
+        raise ValueError("gates flag on op %d" % op)
     deadline = cur.take(">I") if flags & FLAG_DEADLINE else None
     model = cur.str16() if flags & FLAG_MODEL else None
+    gates = None
+    if flags & FLAG_GATES:
+        g = cur.take(">I")
+        if g * 4 > len(cur.b) - cur.off:
+            raise ValueError("gate count exceeds payload")
+        gates = [cur.take(">f") for _ in range(g)]
     volleys = []
     admin = None
     if op == OP_ADMIN:
@@ -235,6 +317,7 @@ def parse_request(payload):
         "deadline_ms": deadline,
         "counters_only": bool(flags & FLAG_COUNTERS_ONLY),
         "model": model,
+        "gates": gates,
         "admin": admin,
     }
 
@@ -264,6 +347,12 @@ def response_admin_models(rid, rows):
         p += struct.pack(">IIIfQB", n, c, t_max, theta, seed,
                          MFLAG_DEFAULT if default else 0)
     return p
+
+
+def response_admin_ckpt(rid, data):
+    """Raw checkpoint bytes (CWKP, or CWKS for a manifest) — the file's
+    own trailing CRC-32 is the integrity check, so no extra framing."""
+    return struct.pack(">QBB", rid, ST_ADMIN, ADMIN_CKPT) + data
 
 
 def parse_response(payload):
@@ -299,6 +388,9 @@ def parse_response(payload):
                              bool(mflags & MFLAG_DEFAULT)))
             cur.finish()
             return {"id": rid, "models": rows}
+        if kind == ADMIN_CKPT:
+            # raw CWKP (or CWKS) bytes — self-checksummed, no framing
+            return {"id": rid, "ckpt": cur.b[cur.off :]}
         raise ValueError("unknown admin reply kind %d" % kind)
     if status == ST_BUSY:
         retry = cur.take(">I")
@@ -637,6 +729,85 @@ def test_admin_response_roundtrip():
     bad_row = bad_row[:-1] + b"\x80"
     with pytest.raises(ValueError):
         parse_response(bad_row)
+
+
+def test_gated_learn_request_roundtrip():
+    """The dist tier's phase-2 LEARN carries the coordinator's global
+    gate vector (flags bit 4, v3). Gates are 0.0/1.0 floats, one per
+    (row, local column) cell of the shard."""
+    gates = [1.0, 0.0, 0.0, 1.0, 0.0, 1.0]
+    p = request(5, OP_LEARN, volleys=[dense_volley([1.0, 16.0])],
+                model="dist-s0", gates=gates)
+    req = parse_request(p)
+    assert req["op"] == OP_LEARN and req["model"] == "dist-s0"
+    assert req["gates"] == gates
+    assert req["volleys"] == [("dense", [1.0, 16.0])]
+    # without the flag the field is absent — a v2 LEARN exactly
+    bare = request(5, OP_LEARN, volleys=[dense_volley([1.0, 16.0])])
+    assert parse_request(bare)["gates"] is None
+    # every truncation raises instead of misparsing
+    for cut in range(len(p)):
+        with pytest.raises(ValueError):
+            parse_request(p[:cut])
+    # gates on a non-LEARN op is a typed error, not a silent skip:
+    # craft the bytes by hand since the builder refuses to
+    bad = struct.pack(">QBB", 5, OP_INFER, FLAG_GATES)
+    bad += struct.pack(">I", 1) + struct.pack(">f", 1.0)
+    bad += struct.pack(">H", 0)
+    with pytest.raises(ValueError):
+        parse_request(bad)
+    # hostile gate count must not be trusted
+    huge = struct.pack(">QBB", 5, OP_LEARN, FLAG_GATES)
+    huge += struct.pack(">I", 0xFFFFFFFF)
+    with pytest.raises(ValueError):
+        parse_request(huge)
+
+
+def test_dist_admin_cmds_roundtrip():
+    """The v3 admin verbs the distributed shard tier adds: shard-slot
+    provisioning (CREATE_COLUMNS) and checkpoint replication
+    (FETCH/PUT_CKPT, PUT_SHARD, PUT_MANIFEST)."""
+    p = request(3, OP_ADMIN,
+                admin=cmd_create_columns("dist", 1, 16, 6.0, 11, 8, 16))
+    assert parse_request(p)["admin"] == (
+        "create_columns", "dist", 1, 16, 6.0, 11, 8, 16)
+    p = request(3, OP_ADMIN, admin=cmd_named(CMD_FETCH_CKPT, "dist-s1"))
+    assert parse_request(p)["admin"] == ("fetch_ckpt", "dist-s1")
+    p = request(3, OP_ADMIN, admin=cmd_put_ckpt("dist-s1", b"\x01\x02"))
+    assert parse_request(p)["admin"] == ("put_ckpt", "dist-s1", b"\x01\x02")
+    p = request(3, OP_ADMIN,
+                admin=cmd_put_shard("dist", 1, 0xDEADBEEF, b"\x03\x04\x05"))
+    assert parse_request(p)["admin"] == (
+        "put_shard", "dist", 1, 0xDEADBEEF, b"\x03\x04\x05")
+    p = request(3, OP_ADMIN, admin=cmd_put_manifest("dist", b""))
+    assert parse_request(p)["admin"] == ("put_manifest", "dist", b"")
+    # every truncation of the widest verb raises
+    good = request(3, OP_ADMIN,
+                   admin=cmd_put_shard("dist", 1, 7, b"\x00" * 9))
+    for cut in range(len(good)):
+        with pytest.raises(ValueError):
+            parse_request(good[:cut])
+    # a blob length claiming past the payload end raises
+    bad = request(3, OP_ADMIN, admin=cmd_put_manifest("dist", b"\x00" * 4))
+    bad = bad[:-8] + struct.pack(">I", 64) + b"\x00" * 4
+    with pytest.raises(ValueError):
+        parse_request(bad)
+
+
+def test_admin_ckpt_response_roundtrip():
+    """FETCH_CKPT replies with the raw checkpoint file bytes; the CWKP
+    trailer CRC is the end-to-end integrity check the follower re-runs
+    before staging a replicated slice."""
+    import zlib
+
+    body = checkpoint_bytes(4, 1, 16, 6.0, 3, [0.5, 1.0, 0.0, 2.0])
+    p = response_admin_ckpt(11, body)
+    resp = parse_response(p)
+    assert resp["id"] == 11 and resp["ckpt"] == body
+    stored = struct.unpack(">I", resp["ckpt"][-4:])[0]
+    assert stored == zlib.crc32(resp["ckpt"][:-4]) & 0xFFFFFFFF
+    # an empty body is representable (the reply is just "the bytes")
+    assert parse_response(response_admin_ckpt(11, b""))["ckpt"] == b""
 
 
 # ------------------------------------------- checkpoint file twin (CWKP)

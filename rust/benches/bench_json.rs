@@ -1,6 +1,7 @@
 //! Machine-readable benchmark: sweeps every [`KernelPlan`] path over
-//! the density range, replays QoS traffic at rate multiples, and writes
-//! the perf-trajectory point `BENCH_7.json` at the repo root
+//! the density range, replays QoS traffic at rate multiples, compares
+//! the distributed shard transport against the in-process one, and
+//! writes the perf-trajectory point `BENCH_8.json` at the repo root
 //! (EXPERIMENTS.md §Perf 8 and §Serving).
 //!
 //! Run: `make bench-json` (or `cargo bench --bench bench_json`).
@@ -11,8 +12,11 @@
 use catwalk::bench_util::{bench, bench_header};
 use catwalk::coordinator::pool::par_map;
 use catwalk::coordinator::{BatcherConfig, DynamicBatcher, TnnHandle};
-use catwalk::qos::replay::{self, ReplayLog, ReplayOptions, SynthSpec};
+use catwalk::dist::RetryPolicy;
+use catwalk::qos::replay::{self, boot_shard_host, ReplayLog, ReplayOptions, SynthSpec};
 use catwalk::qos::QosConfig;
+use catwalk::server::ClientConfig;
+use catwalk::shard::ShardedModel;
 use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
 use catwalk::report::Json;
 use catwalk::rng::Xoshiro256;
@@ -197,9 +201,90 @@ fn main() {
         srv.join().unwrap();
     }
 
+    // distributed shards: in-process vs TCP transport, same volley
+    // tape, k=2 over loopback hosts (dist_shard_serve prints the full
+    // sweep with replication and failover timings in prose).
+    let scratch =
+        std::env::temp_dir().join(format!("catwalk-bench-json-dist-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let host_a =
+        boot_shard_host("artifacts".as_ref(), &scratch.join("a"), QosConfig::default()).unwrap();
+    let host_b =
+        boot_shard_host("artifacts".as_ref(), &scratch.join("b"), QosConfig::default()).unwrap();
+    let local =
+        ShardedModel::open("artifacts", N, THETA, 7, 2, BatcherConfig::default()).unwrap();
+    let remote = ShardedModel::open_remote(
+        "artifacts",
+        "bench",
+        N,
+        THETA,
+        7,
+        &[host_a.addr.clone(), host_b.addr.clone()],
+        Vec::new(),
+        ClientConfig::default(),
+        RetryPolicy::default(),
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let dist_batch: Vec<SpikeVolley> = {
+        let mut rng = Xoshiro256::new(31);
+        (0..B)
+            .map(|_| {
+                SpikeVolley::dense(
+                    (0..N)
+                        .map(|_| {
+                            if rng.gen_bool(0.5) {
+                                rng.gen_range(8) as f32
+                            } else {
+                                T_MAX as f32
+                            }
+                        })
+                        .collect(),
+                )
+            })
+            .collect()
+    };
+    let mut dist_rows = Vec::new();
+    for (transport, model) in [("inproc", &local), ("tcp", &remote)] {
+        let infer = bench(&format!("dist infer {transport} k=2"), 2, 10, || {
+            for r in model.infer(dist_batch.clone(), None) {
+                r.unwrap();
+            }
+        });
+        let learn = bench(&format!("dist learn {transport} k=2"), 2, 10, || {
+            for r in model.learn(dist_batch.clone(), None) {
+                r.unwrap();
+            }
+        });
+        println!(
+            "  dist {transport}: infer {:.0} volleys/s  learn {:.0} volleys/s",
+            infer.throughput(B as u64),
+            learn.throughput(B as u64)
+        );
+        dist_rows.push(Json::Obj(vec![
+            ("transport".into(), Json::Str(transport.into())),
+            ("shards".into(), Json::Num(2.0)),
+            (
+                "infer_volleys_per_s".into(),
+                Json::Num(infer.throughput(B as u64)),
+            ),
+            (
+                "learn_volleys_per_s".into(),
+                Json::Num(learn.throughput(B as u64)),
+            ),
+        ]));
+    }
+    drop(remote);
+    host_a.shutdown();
+    host_b.shutdown();
+    let _ = std::fs::remove_dir_all(&scratch);
+
     let doc = Json::Obj(vec![
-        ("bench".into(), Json::Str("kernel_path_sweep+qos_serve".into())),
-        ("pr".into(), Json::Num(7.0)),
+        (
+            "bench".into(),
+            Json::Str("kernel_path_sweep+qos_serve+dist_shard_serve".into()),
+        ),
+        ("pr".into(), Json::Num(8.0)),
         (
             "geometry".into(),
             Json::Obj(vec![
@@ -219,12 +304,13 @@ fn main() {
             Json::Num(volleys_per_s),
         ),
         ("qos_serve".into(), Json::Arr(qos_rows)),
+        ("dist_serve".into(), Json::Arr(dist_rows)),
         (
             "harness".into(),
             Json::Str("rust bench_util (make bench-json)".into()),
         ),
     ]);
-    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_7.json".into());
+    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_8.json".into());
     std::fs::write(&out, doc.render() + "\n").unwrap();
     println!("  wrote {out}");
 }

@@ -1,0 +1,194 @@
+//! Distributed-shard serving bench: what the TCP transport seam costs
+//! over the in-process scatter/gather — the numbers EXPERIMENTS.md
+//! §Serving records for the dist subsystem.
+//!
+//! One n=64 model (c=16 output columns) split 2-way, served three
+//! ways: unsharded baseline, in-process shards (`InProcessShard`), and
+//! remote shards on loopback `repro serve --standby` hosts
+//! (`TcpShard`, framed v3, gates on the wire for phase 2). Same volley
+//! tape everywhere, so the deltas isolate (a) scatter/gather and
+//! (b) socket + codec per hop. A replication section times pushing the
+//! committed `CWKS` generation to a follower, and a failover section
+//! times the standby swap itself (detect → re-provision → verify →
+//! rollback).
+//!
+//! Run: `cargo bench --bench dist_shard_serve`
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::coordinator::{BatcherConfig, TnnHandle};
+use catwalk::dist::{replicate, RetryPolicy};
+use catwalk::qos::replay::boot_shard_host;
+use catwalk::qos::QosConfig;
+use catwalk::rng::Xoshiro256;
+use catwalk::server::ClientConfig;
+use catwalk::shard::ShardedModel;
+use catwalk::volley::SpikeVolley;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn volleys(n: usize, rows: usize, density: f64, seed: u64) -> Vec<SpikeVolley> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..rows)
+        .map(|_| {
+            SpikeVolley::dense(
+                (0..n)
+                    .map(|_| {
+                        if rng.gen_bool(density) {
+                            rng.gen_range(8) as f32
+                        } else {
+                            16.0
+                        }
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    bench_header("distributed shards: TCP transport vs in-process (n=64, c=16, k=2)");
+    let scratch =
+        std::env::temp_dir().join(format!("catwalk-dist-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let artifacts = Path::new("artifacts");
+    let (n, theta, seed) = (64usize, 8.0f32, 7u64);
+
+    let host_a = boot_shard_host(artifacts, &scratch.join("host-a"), QosConfig::default())
+        .expect("shard host a");
+    let host_b = boot_shard_host(artifacts, &scratch.join("host-b"), QosConfig::default())
+        .expect("shard host b");
+    let follower = boot_shard_host(artifacts, &scratch.join("follower"), QosConfig::default())
+        .expect("follower host");
+
+    let client = ClientConfig {
+        read_timeout: Some(Duration::from_secs(10)),
+        write_timeout: Some(Duration::from_secs(10)),
+        ..ClientConfig::default()
+    };
+    let retry = RetryPolicy::default();
+
+    let solo = TnnHandle::open(artifacts, n, theta, seed).expect("unsharded engine");
+    let local = ShardedModel::open(artifacts, n, theta, seed, 2, BatcherConfig::default())
+        .expect("in-process shards");
+    let remote = ShardedModel::open_remote(
+        artifacts,
+        "bench",
+        n,
+        theta,
+        seed,
+        &[host_a.addr.clone(), host_b.addr.clone()],
+        Vec::new(),
+        client.clone(),
+        retry,
+        BatcherConfig::default(),
+    )
+    .expect("remote shards");
+    println!("backend: {}  hosts: {} {}\n", solo.backend, host_a.addr, host_b.addr);
+
+    let rows = 64; // one full backend batch per request
+    let batch = volleys(n, rows, 0.5, 11);
+    let mut baseline = None;
+    for (label, run) in [
+        ("infer unsharded", &(|| {
+            solo.infer(batch.clone()).unwrap();
+        }) as &dyn Fn()),
+        ("infer inproc k=2", &|| {
+            for r in local.infer(batch.clone(), None) {
+                r.unwrap();
+            }
+        }),
+        ("infer tcp k=2", &|| {
+            for r in remote.infer(batch.clone(), None) {
+                r.unwrap();
+            }
+        }),
+    ] {
+        let r = bench(label, 2, 12, run);
+        println!("{}", r.report());
+        println!("  -> {:.0} volleys/s", r.throughput(rows as u64));
+        match baseline {
+            None => baseline = Some(r.median()),
+            Some(base) => println!(
+                "  transport overhead vs unsharded: {:.2}x",
+                r.median().as_secs_f64() / base.as_secs_f64()
+            ),
+        }
+    }
+
+    println!();
+    let lbatch = volleys(n, rows, 0.3, 23);
+    let mut lbase = None;
+    for (label, run) in [
+        ("learn unsharded", &(|| {
+            solo.learn(lbatch.clone()).unwrap();
+        }) as &dyn Fn()),
+        ("learn inproc k=2", &|| {
+            for r in local.learn(lbatch.clone(), None) {
+                r.unwrap();
+            }
+        }),
+        ("learn tcp k=2 (two-phase, gates on the wire)", &|| {
+            for r in remote.learn(lbatch.clone(), None) {
+                r.unwrap();
+            }
+        }),
+    ] {
+        let r = bench(label, 2, 12, run);
+        println!("{}", r.report());
+        println!("  -> {:.0} volleys/s", r.throughput(rows as u64));
+        match lbase {
+            None => lbase = Some(r.median()),
+            Some(base) => println!(
+                "  two-phase transport overhead vs unsharded: {:.2}x",
+                r.median().as_secs_f64() / base.as_secs_f64()
+            ),
+        }
+    }
+
+    println!();
+    let coord = scratch.join("coord");
+    std::fs::create_dir_all(&coord).expect("coordinator scratch dir");
+    let ckpt: PathBuf = coord.join("bench.ckpt");
+    remote.save_checkpoints(&ckpt).expect("committed generation");
+    let r = bench("replicate generation to follower (k=2 slices + manifest)", 1, 8, || {
+        replicate(&follower.addr, &client, &retry, "bench", &ckpt).unwrap();
+    });
+    println!("{}", r.report());
+
+    // failover cost: kill one host's transport, swap the standby in.
+    // Each iteration re-opens a remote model against a fresh standby
+    // pool so the swap path (verify + rollback) runs every time.
+    let r = bench("failover: detect + standby swap + rollback (1 shard)", 1, 4, || {
+        let standby = boot_shard_host(
+            artifacts,
+            &scratch.join(format!("standby-{}", std::process::id())),
+            QosConfig::default(),
+        )
+        .expect("standby host");
+        let m = ShardedModel::open_remote(
+            artifacts,
+            "bench",
+            n,
+            theta,
+            seed,
+            &[host_a.addr.clone(), host_b.addr.clone()],
+            vec![standby.addr.clone()],
+            client.clone(),
+            retry,
+            BatcherConfig::default(),
+        )
+        .expect("remote model");
+        replicate(&standby.addr, &client, &retry, "bench", &ckpt).unwrap();
+        m.kill_shard(1);
+        assert_eq!(m.failover(&ckpt).unwrap(), 1);
+        drop(m);
+        standby.shutdown();
+    });
+    println!("{}", r.report());
+
+    drop(remote);
+    host_a.shutdown();
+    host_b.shutdown();
+    follower.shutdown();
+    let _ = std::fs::remove_dir_all(&scratch);
+}

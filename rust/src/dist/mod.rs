@@ -1,0 +1,731 @@
+//! Distributed shard transport: the seam that lets one
+//! [`crate::shard::ShardedModel`] fan its scatter/gather out over
+//! processes and hosts (DESIGN.md §2.7).
+//!
+//! The TNN microarchitecture framework line scales column units across
+//! independent blocks; PR 5 built the in-process analogue (K column
+//! engines behind one scatter/gather layer) and this module abstracts
+//! the *edge* between the gather layer and a shard into a trait:
+//!
+//! ```text
+//!                       ┌ InProcessShard   TnnHandle + DynamicBatcher ┐
+//!  ShardedModel ──────► │                                             │
+//!  (scatter/gather,     ├ TcpShard         FramedClient ──► repro     │
+//!   two-phase learn)    │                  serve --standby host       │
+//!                       └ …                (slot `<name>-s<i>`)       ┘
+//! ```
+//!
+//! * [`ShardTransport`] — what the gather layer needs from a shard:
+//!   begin an infer / a phase-1 forward / a phase-2 gated update
+//!   (all *begin*-shaped, so a scatter enqueues every shard before
+//!   blocking on any), snapshot/replace the column-slice weights, and
+//!   report health. The two-phase gated-STDP learn protocol lives
+//!   entirely above this trait, so both impls run it bit-identically.
+//! * [`InProcessShard`] — exactly the pre-dist shard engine (a
+//!   column-range [`TnnHandle`] plus its private [`DynamicBatcher`]).
+//! * [`TcpShard`] — a remote `repro serve` host driven over the framed
+//!   v3 codec: the shard's column slice is provisioned as a registry
+//!   slot named `<model>-s<i>` ([`crate::proto::ModelCmd::CreateColumns`]),
+//!   phase-1 forwards ride plain `Infer` envelopes and phase-2 updates
+//!   ride `Learn` envelopes carrying the gate vector (`FLAG_GATES`,
+//!   frame v3). A transport failure marks the shard **failed** and
+//!   every later call short-circuits with a typed error — never a hang
+//!   — until [`crate::shard::ShardedModel::failover`] swaps a standby
+//!   in. There is no silent auto-reconnect: a half-alive shard must
+//!   not serve a weight generation the coordinator cannot vouch for.
+//!
+//! **Replication** ([`replicate`]): after a committed checkpoint save,
+//! the coordinator pushes each content-addressed `CWKP` shard slice to
+//! follower hosts (`PutShard`), then the `CWKS` manifest (`PutManifest`)
+//! — and the follower re-verifies CRCs, parses and geometry-checks
+//! every slice *before* atomically renaming the manifest into place,
+//! so the manifest rename stays the commit point on every replica and
+//! a torn or corrupted push can never shadow the previous generation.
+//!
+//! **Retry** ([`RetryPolicy`]): bounded, exponentially backed-off,
+//! deterministically jittered reconnect schedule. [`retry_with`] takes
+//! the sleep as an injected closure so tests pin the exact schedule
+//! without waiting on a wall clock.
+
+use crate::coordinator::{DynamicBatcher, EngineCall, Metrics, PendingResults, TnnHandle};
+use crate::error::{Error, Result};
+use crate::proto::{AdminReply, ModelCmd, Outcome, Request, Response};
+use crate::registry::checkpoint::Checkpoint;
+use crate::rng::Xoshiro256;
+use crate::runtime::Tensor;
+use crate::server::{ClientConfig, FramedClient};
+use crate::shard::manifest::{shard_path, ShardManifest};
+use crate::volley::{SpikeVolley, VolleyResult};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One shard's serving edge, as the scatter/gather layer sees it. All
+/// three request methods are *begin*-shaped — they enqueue (or spawn)
+/// work and return a [`ShardCall`] to block on later — so a scatter
+/// reaches every shard before the gather blocks on any.
+pub trait ShardTransport: Send + Sync {
+    /// `"inproc"` or `"tcp"` (stats, logs).
+    fn kind(&self) -> &'static str;
+
+    /// The column slice this shard owns.
+    fn columns(&self) -> Range<usize>;
+
+    /// Begin a deadline-aware infer over this shard's columns.
+    fn begin_infer(&self, volleys: Vec<SpikeVolley>, deadline: Option<Instant>) -> ShardCall;
+
+    /// Begin a learn phase-1 forward pass (no deadline: the chunk is
+    /// already admitted and the caller holds the model write lock).
+    fn begin_forward(&self, volleys: Vec<SpikeVolley>) -> Result<ShardCall>;
+
+    /// Begin a learn phase-2 gated STDP update; `gates` is row-major
+    /// `[volleys × this shard's columns]`.
+    fn begin_learn_gated(&self, volleys: Vec<SpikeVolley>, gates: Vec<f32>) -> Result<ShardCall>;
+
+    /// Snapshot this shard's `[cols, n]` weight slice.
+    fn weights(&self) -> Result<Tensor>;
+
+    /// Replace this shard's `[cols, n]` weight slice.
+    fn set_weights(&self, w: Tensor) -> Result<()>;
+
+    /// This shard's own counters (surfaced as `shard.<i>.*` stats rows).
+    fn metrics(&self) -> Arc<Metrics>;
+
+    /// True once the shard is known dead (transport failure). The
+    /// gather layer uses this to pick failover victims; an in-process
+    /// shard never transitions.
+    fn failed(&self) -> bool {
+        false
+    }
+
+    /// Stop serving (drain/kill); later calls answer typed errors.
+    fn shutdown(&self);
+}
+
+/// An in-flight shard request: block on it with [`ShardCall::wait`]
+/// (per-volley results, infer-shaped) or [`ShardCall::wait_all`]
+/// (first error fails the call, learn-phase-shaped).
+pub enum ShardCall {
+    /// Queued on an in-process shard's infer batcher.
+    Batched(PendingResults),
+    /// A direct engine round-trip (in-process learn phases).
+    Deferred {
+        call: EngineCall<crate::error::Result<Vec<VolleyResult>>>,
+        volleys: usize,
+    },
+    /// A socket round-trip running on its own thread.
+    Remote {
+        join: JoinHandle<Vec<Result<VolleyResult>>>,
+        volleys: usize,
+    },
+}
+
+impl ShardCall {
+    /// One `Result` per volley, in request order (the infer gather
+    /// shape). A call-level failure fans out to every volley as a
+    /// typed error — callers never see a short vector.
+    pub fn wait(self) -> Vec<Result<VolleyResult>> {
+        match self {
+            ShardCall::Batched(p) => p.wait(),
+            ShardCall::Deferred { call, volleys } => match call.wait() {
+                Ok(Ok(rs)) => rs.into_iter().map(Ok).collect(),
+                Ok(Err(e)) | Err(e) => {
+                    let msg = e.to_string();
+                    (0..volleys)
+                        .map(|_| Err(Error::Coordinator(msg.clone())))
+                        .collect()
+                }
+            },
+            ShardCall::Remote { join, volleys } => join.join().unwrap_or_else(|_| {
+                (0..volleys)
+                    .map(|_| Err(Error::Coordinator("remote shard worker panicked".into())))
+                    .collect()
+            }),
+        }
+    }
+
+    /// Every volley's result, or the first error (the learn-phase
+    /// shape: one failed shard fails the whole chunk).
+    pub fn wait_all(self) -> Result<Vec<VolleyResult>> {
+        match self {
+            ShardCall::Batched(p) => p.wait().into_iter().collect(),
+            ShardCall::Deferred { call, .. } => call.wait()?,
+            ShardCall::Remote { join, .. } => join
+                .join()
+                .map_err(|_| Error::Coordinator("remote shard worker panicked".into()))?
+                .into_iter()
+                .collect(),
+        }
+    }
+}
+
+// ------------------------------------------------------------ in-process
+
+/// The pre-dist shard engine behind the transport trait: a column-range
+/// [`TnnHandle`] plus its private infer [`DynamicBatcher`]. Behavior is
+/// bit-identical to the PR 5 `ShardEngine` — the batcher queues infers,
+/// learn phases go straight to the engine thread.
+pub struct InProcessShard {
+    handle: TnnHandle,
+    infer: DynamicBatcher,
+    cols: Range<usize>,
+}
+
+impl InProcessShard {
+    pub fn new(handle: TnnHandle, infer: DynamicBatcher, cols: Range<usize>) -> InProcessShard {
+        InProcessShard {
+            handle,
+            infer,
+            cols,
+        }
+    }
+}
+
+impl ShardTransport for InProcessShard {
+    fn kind(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn columns(&self) -> Range<usize> {
+        self.cols.clone()
+    }
+
+    fn begin_infer(&self, volleys: Vec<SpikeVolley>, deadline: Option<Instant>) -> ShardCall {
+        ShardCall::Batched(self.infer.submit_many_deferred(volleys, deadline))
+    }
+
+    fn begin_forward(&self, volleys: Vec<SpikeVolley>) -> Result<ShardCall> {
+        let volleys_n = volleys.len();
+        Ok(ShardCall::Deferred {
+            call: self.handle.infer_deferred(volleys)?,
+            volleys: volleys_n,
+        })
+    }
+
+    fn begin_learn_gated(&self, volleys: Vec<SpikeVolley>, gates: Vec<f32>) -> Result<ShardCall> {
+        let volleys_n = volleys.len();
+        Ok(ShardCall::Deferred {
+            call: self.handle.learn_gated_deferred(volleys, gates)?,
+            volleys: volleys_n,
+        })
+    }
+
+    fn weights(&self) -> Result<Tensor> {
+        self.handle.weights()
+    }
+
+    fn set_weights(&self, w: Tensor) -> Result<()> {
+        self.handle.set_weights(w)
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        self.handle.metrics.clone()
+    }
+
+    fn shutdown(&self) {
+        self.infer.shutdown();
+    }
+}
+
+// ------------------------------------------------------------------ tcp
+
+/// A remote shard host driven over the framed v3 codec. The remote
+/// `repro serve` process holds the shard's columns as a registry slot
+/// named `<model>-s<index>`; this side holds one pipelined
+/// [`FramedClient`] (per-shard calls are serialized by the client
+/// mutex — the scatter's parallelism is across shards, and one
+/// multi-volley envelope per phase already pipelines within a shard).
+pub struct TcpShard {
+    inner: Arc<TcpInner>,
+}
+
+struct TcpInner {
+    addr: String,
+    /// the remote slot name (`<model>-s<index>`)
+    slot: String,
+    cols: Range<usize>,
+    n: usize,
+    t_max: usize,
+    theta: f32,
+    seed: u64,
+    /// `None` after a transport failure — no silent reconnect.
+    client: Mutex<Option<FramedClient>>,
+    metrics: Arc<Metrics>,
+    failed: AtomicBool,
+}
+
+impl TcpShard {
+    /// Connect (with backoff) to `addr` and provision the column slice
+    /// `cols` of model `base` as remote slot `<base>-s<index>`.
+    /// Provisioning is idempotent on the host, and the host resumes
+    /// the slice from its replicated `<base>.ckpt` `CWKS` generation
+    /// when one exists — that resume is what failover banks on.
+    #[allow(clippy::too_many_arguments)]
+    pub fn open(
+        addr: &str,
+        base: &str,
+        index: usize,
+        cols: Range<usize>,
+        n: usize,
+        t_max: usize,
+        theta: f32,
+        seed: u64,
+        cfg: &ClientConfig,
+        retry: &RetryPolicy,
+    ) -> Result<TcpShard> {
+        let mut client = connect_backoff(addr, cfg, retry)?;
+        let reply = client.call_admin(ModelCmd::CreateColumns {
+            name: base.to_string(),
+            index,
+            n,
+            theta,
+            seed,
+            start: cols.start,
+            end: cols.end,
+        })?;
+        match reply {
+            AdminReply::Models(ms)
+                if ms.len() == 1 && ms[0].n == n && ms[0].c == cols.len() => {}
+            other => {
+                return Err(Error::Coordinator(format!(
+                    "shard host {addr} answered provisioning with {other:?}"
+                )))
+            }
+        }
+        Ok(TcpShard {
+            inner: Arc::new(TcpInner {
+                addr: addr.to_string(),
+                slot: format!("{base}-s{index}"),
+                cols,
+                n,
+                t_max,
+                theta,
+                seed,
+                client: Mutex::new(Some(client)),
+                metrics: Arc::new(Metrics::new()),
+                failed: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// The host address (failover bookkeeping, logs).
+    pub fn addr(&self) -> &str {
+        &self.inner.addr
+    }
+}
+
+impl TcpInner {
+    /// One framed round-trip against the remote slot. A transport
+    /// failure (socket error, timeout, server gone) marks the shard
+    /// failed, drops the connection, and answers typed — every later
+    /// call short-circuits until failover replaces this transport.
+    fn call(&self, req: Request) -> Result<Response> {
+        if self.failed.load(Ordering::Acquire) {
+            return Err(Error::Coordinator(format!(
+                "shard host {} is marked failed (awaiting failover)",
+                self.addr
+            )));
+        }
+        let mut guard = self.client.lock().unwrap();
+        let client = guard.as_mut().ok_or_else(|| {
+            Error::Coordinator(format!("shard host {} has no live connection", self.addr))
+        })?;
+        self.metrics.incr("remote_calls", 1);
+        match client.call(req) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.metrics.incr("transport_errors", 1);
+                self.failed.store(true, Ordering::Release);
+                *guard = None;
+                Err(Error::Coordinator(format!("shard host {}: {e}", self.addr)))
+            }
+        }
+    }
+
+    /// Map one envelope reply onto the per-volley result vector the
+    /// gather layer consumes, preserving the typed error taxonomy
+    /// (`Busy` stays `Busy`, deadline expiry stays `DeadlineExpired`).
+    fn per_volley(&self, nvol: usize, resp: Result<Response>) -> Vec<Result<VolleyResult>> {
+        let fan = |mk: &dyn Fn() -> Error| (0..nvol).map(|_| Err(mk())).collect();
+        match resp {
+            Ok(resp) => match resp.outcome {
+                Outcome::Results(rs) if rs.len() == nvol => rs.into_iter().map(Ok).collect(),
+                Outcome::Results(rs) => {
+                    let (addr, got) = (self.addr.clone(), rs.len());
+                    fan(&|| {
+                        Error::Coordinator(format!(
+                            "shard host {addr} answered {got} results for {nvol} volleys"
+                        ))
+                    })
+                }
+                Outcome::Busy { retry_after_ms } => fan(&|| Error::Busy { retry_after_ms }),
+                Outcome::Error(msg) if msg.starts_with("deadline exceeded") => {
+                    self.metrics.incr("requests_expired", nvol as u64);
+                    fan(&|| Error::DeadlineExpired)
+                }
+                Outcome::Error(msg) => {
+                    let addr = self.addr.clone();
+                    fan(&|| Error::Coordinator(format!("shard host {addr}: {msg}")))
+                }
+                other => {
+                    let (addr, o) = (self.addr.clone(), format!("{other:?}"));
+                    fan(&|| Error::Coordinator(format!("shard host {addr} answered {o}")))
+                }
+            },
+            Err(e) => {
+                let msg = e.to_string();
+                fan(&|| Error::Coordinator(msg.clone()))
+            }
+        }
+    }
+
+    fn infer_sync(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        deadline: Option<Instant>,
+    ) -> Vec<Result<VolleyResult>> {
+        let nvol = volleys.len();
+        let mut req = Request::infer(volleys).with_model(self.slot.clone());
+        if let Some(d) = deadline {
+            let now = Instant::now();
+            if now >= d {
+                // already expired: answer typed without a wire trip,
+                // exactly like the batcher's drain-time check
+                self.metrics.incr("requests_expired", nvol as u64);
+                return (0..nvol).map(|_| Err(Error::DeadlineExpired)).collect();
+            }
+            let ms = ((d - now).as_millis() as u64).clamp(1, u32::MAX as u64) as u32;
+            req = req.with_deadline_ms(ms);
+        }
+        let resp = self.call(req);
+        self.per_volley(nvol, resp)
+    }
+
+    fn learn_gated_sync(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        gates: Vec<f32>,
+    ) -> Vec<Result<VolleyResult>> {
+        let nvol = volleys.len();
+        let req = Request::learn(volleys)
+            .with_model(self.slot.clone())
+            .with_gates(gates);
+        let resp = self.call(req);
+        self.per_volley(nvol, resp)
+    }
+}
+
+impl ShardTransport for TcpShard {
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn columns(&self) -> Range<usize> {
+        self.inner.cols.clone()
+    }
+
+    fn begin_infer(&self, volleys: Vec<SpikeVolley>, deadline: Option<Instant>) -> ShardCall {
+        let nvol = volleys.len();
+        let inner = self.inner.clone();
+        ShardCall::Remote {
+            join: std::thread::spawn(move || inner.infer_sync(volleys, deadline)),
+            volleys: nvol,
+        }
+    }
+
+    fn begin_forward(&self, volleys: Vec<SpikeVolley>) -> Result<ShardCall> {
+        let nvol = volleys.len();
+        let inner = self.inner.clone();
+        Ok(ShardCall::Remote {
+            join: std::thread::spawn(move || inner.infer_sync(volleys, None)),
+            volleys: nvol,
+        })
+    }
+
+    fn begin_learn_gated(&self, volleys: Vec<SpikeVolley>, gates: Vec<f32>) -> Result<ShardCall> {
+        let nvol = volleys.len();
+        let inner = self.inner.clone();
+        Ok(ShardCall::Remote {
+            join: std::thread::spawn(move || inner.learn_gated_sync(volleys, gates)),
+            volleys: nvol,
+        })
+    }
+
+    fn weights(&self) -> Result<Tensor> {
+        let resp = self
+            .inner
+            .call(Request::admin(ModelCmd::FetchCkpt {
+                name: self.inner.slot.clone(),
+            }))?;
+        let bytes = match resp.admin()? {
+            AdminReply::Ckpt(b) => b.clone(),
+            other => {
+                return Err(Error::Proto(format!(
+                    "expected checkpoint bytes, got {other:?}"
+                )))
+            }
+        };
+        let ckpt = Checkpoint::from_bytes(&bytes)?;
+        if (ckpt.n as usize, ckpt.c as usize) != (self.inner.n, self.inner.cols.len()) {
+            return Err(Error::Checkpoint(format!(
+                "shard host {} holds [{}, {}], this shard is [{}, {}]",
+                self.inner.addr,
+                ckpt.c,
+                ckpt.n,
+                self.inner.cols.len(),
+                self.inner.n
+            )));
+        }
+        Tensor::new(vec![self.inner.cols.len(), self.inner.n], ckpt.weights)
+    }
+
+    fn set_weights(&self, w: Tensor) -> Result<()> {
+        if w.shape != vec![self.inner.cols.len(), self.inner.n] {
+            return Err(Error::Runtime(format!(
+                "weights shape {:?} != [{}, {}]",
+                w.shape,
+                self.inner.cols.len(),
+                self.inner.n
+            )));
+        }
+        let bytes = Checkpoint {
+            n: self.inner.n as u32,
+            c: self.inner.cols.len() as u32,
+            t_max: self.inner.t_max as u32,
+            theta: self.inner.theta,
+            seed: self.inner.seed,
+            weights: w.data,
+        }
+        .to_bytes()?;
+        let resp = self.inner.call(Request::admin(ModelCmd::PutCkpt {
+            name: self.inner.slot.clone(),
+            bytes,
+        }))?;
+        match resp.admin()? {
+            AdminReply::Ok(_) => Ok(()),
+            other => Err(Error::Proto(format!("expected receipt, got {other:?}"))),
+        }
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        self.inner.metrics.clone()
+    }
+
+    fn failed(&self) -> bool {
+        self.inner.failed.load(Ordering::Acquire)
+    }
+
+    fn shutdown(&self) {
+        self.inner.failed.store(true, Ordering::Release);
+        // dropping the client closes the socket; a blocked remote
+        // worker wakes with a typed transport error
+        *self.inner.client.lock().unwrap() = None;
+    }
+}
+
+// ---------------------------------------------------------------- retry
+
+/// Bounded reconnect schedule: `attempts` tries, exponential backoff
+/// from `base` capped at `max`, each delay jittered by a seeded
+/// `±jitter` fraction — so two coordinators bouncing off the same dead
+/// host do not reconnect in lockstep, and the exact schedule is still
+/// reproducible from the seed (unit-tested with an injected clock in
+/// `rust/tests/dist.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total connect attempts (>= 1); `attempts - 1` sleeps.
+    pub attempts: u32,
+    pub base: Duration,
+    pub max: Duration,
+    /// Jitter fraction in `[0, 1]`: each delay is scaled by a seeded
+    /// uniform factor in `[1 - jitter, 1 + jitter)`.
+    pub jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 4,
+            base: Duration::from_millis(25),
+            max: Duration::from_millis(400),
+            jitter: 0.25,
+            seed: 1,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The full sleep schedule (`attempts - 1` entries), deterministic
+    /// per `(attempts, base, max, jitter, seed)`.
+    pub fn delays(&self) -> Vec<Duration> {
+        let mut rng = Xoshiro256::new(self.seed);
+        (0..self.attempts.saturating_sub(1))
+            .map(|i| {
+                let exp = self.base.as_secs_f64() * 2f64.powi(i.min(30) as i32);
+                let capped = exp.min(self.max.as_secs_f64());
+                let factor = 1.0 + self.jitter * (2.0 * rng.gen_f64() - 1.0);
+                Duration::from_secs_f64((capped * factor).max(0.0))
+            })
+            .collect()
+    }
+}
+
+/// Run `op` up to `policy.attempts` times, calling `sleep` with the
+/// policy's jittered delay between attempts. The sleep is injected so
+/// the schedule is testable against a recorded clock; production
+/// callers pass `std::thread::sleep`. Returns the first success or the
+/// last typed error.
+pub fn retry_with<T>(
+    policy: &RetryPolicy,
+    mut sleep: impl FnMut(Duration),
+    mut op: impl FnMut(u32) -> Result<T>,
+) -> Result<T> {
+    let delays = policy.delays();
+    let attempts = policy.attempts.max(1);
+    let mut last: Option<Error> = None;
+    for attempt in 0..attempts {
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => last = Some(e),
+        }
+        if let Some(d) = delays.get(attempt as usize) {
+            sleep(*d);
+        }
+    }
+    Err(last.unwrap_or_else(|| Error::Coordinator("retry ran zero attempts".into())))
+}
+
+/// [`FramedClient::connect_with`] wrapped in the bounded, jittered
+/// retry schedule — the helper transport-layer callers use instead of
+/// hand-rolling reconnect loops.
+pub fn connect_backoff(
+    addr: &str,
+    cfg: &ClientConfig,
+    policy: &RetryPolicy,
+) -> Result<FramedClient> {
+    retry_with(policy, std::thread::sleep, |_| {
+        FramedClient::connect_with(addr, cfg)
+    })
+}
+
+// ----------------------------------------------------------- replication
+
+/// Push one committed `CWKS` generation to a follower host: every
+/// content-addressed shard slice first (`PutShard` — the follower
+/// re-verifies the CRC and parses the `CWKP` before writing), then the
+/// manifest (`PutManifest` — the follower re-verifies *every* slice it
+/// holds against the manifest before the atomic rename that commits
+/// the generation). Order matters: slices before manifest means a
+/// half-pushed generation is invisible on the follower, which keeps
+/// serving (and resuming standbys from) the previous one.
+pub fn replicate(
+    addr: &str,
+    cfg: &ClientConfig,
+    policy: &RetryPolicy,
+    name: &str,
+    manifest_path: &Path,
+) -> Result<()> {
+    let m = ShardManifest::read(manifest_path)?;
+    let mut client = connect_backoff(addr, cfg, policy)?;
+    for (i, entry) in m.shards.iter().enumerate() {
+        let spath = shard_path(manifest_path, i, entry.file_crc);
+        let bytes = std::fs::read(&spath)
+            .map_err(|e| Error::Checkpoint(format!("read {}: {e}", spath.display())))?;
+        match client.call_admin(ModelCmd::PutShard {
+            name: name.to_string(),
+            index: i,
+            crc: entry.file_crc,
+            bytes,
+        })? {
+            AdminReply::Ok(_) => {}
+            other => {
+                return Err(Error::Proto(format!(
+                    "follower {addr} answered shard push with {other:?}"
+                )))
+            }
+        }
+    }
+    match client.call_admin(ModelCmd::PutManifest {
+        name: name.to_string(),
+        bytes: m.to_bytes()?,
+    })? {
+        AdminReply::Ok(_) => {}
+        other => {
+            return Err(Error::Proto(format!(
+                "follower {addr} answered manifest push with {other:?}"
+            )))
+        }
+    }
+    let _ = client.quit();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_are_deterministic_bounded_and_jittered() {
+        let p = RetryPolicy::default();
+        let a = p.delays();
+        let b = p.delays();
+        assert_eq!(a, b, "same policy, same schedule");
+        assert_eq!(a.len(), (p.attempts - 1) as usize);
+        for (i, d) in a.iter().enumerate() {
+            let nominal = (p.base.as_secs_f64() * 2f64.powi(i as i32)).min(p.max.as_secs_f64());
+            let lo = nominal * (1.0 - p.jitter) - 1e-9;
+            let hi = nominal * (1.0 + p.jitter) + 1e-9;
+            assert!(
+                (lo..=hi).contains(&d.as_secs_f64()),
+                "delay {i} = {d:?} outside [{lo}, {hi}]"
+            );
+        }
+        // a different seed moves the jitter, not the envelope
+        let q = RetryPolicy { seed: 99, ..p };
+        assert_ne!(q.delays(), a);
+    }
+
+    #[test]
+    fn retry_with_bounded_attempts_and_injected_clock() {
+        let p = RetryPolicy {
+            attempts: 3,
+            ..RetryPolicy::default()
+        };
+        let mut slept = Vec::new();
+        let mut calls = 0;
+        let r: Result<()> = retry_with(
+            &p,
+            |d| slept.push(d),
+            |_| {
+                calls += 1;
+                Err(Error::Coordinator("still down".into()))
+            },
+        );
+        assert!(r.is_err());
+        assert_eq!(calls, 3);
+        assert_eq!(slept, p.delays(), "sleeps follow the schedule exactly");
+
+        // success on attempt 2 stops the loop after one sleep
+        let mut slept = Vec::new();
+        let mut calls = 0;
+        let r = retry_with(
+            &p,
+            |d| slept.push(d),
+            |attempt| {
+                calls += 1;
+                if attempt == 1 {
+                    Ok(attempt)
+                } else {
+                    Err(Error::Coordinator("not yet".into()))
+                }
+            },
+        );
+        assert_eq!(r.unwrap(), 1);
+        assert_eq!(calls, 2);
+        assert_eq!(slept, p.delays()[..1].to_vec());
+    }
+}

@@ -26,7 +26,9 @@
 //!    with named instances and versioned weight checkpoints
 //!    ([`registry`]), a sharded-model execution layer that
 //!    scatter/gathers one model's output columns across K parallel
-//!    engines bit-identically ([`shard`]), a QoS layer with per-model
+//!    engines bit-identically ([`shard`]) — in-process or across hosts
+//!    over the distributed shard transport with checkpoint replication
+//!    and standby failover ([`dist`]), a QoS layer with per-model
 //!    admission control, priority lanes, load shedding and a
 //!    traffic-replay chaos harness ([`qos`]), a TCP serving front-end
 //!    speaking both codecs
@@ -49,6 +51,7 @@ pub mod bench_util;
 pub mod cells;
 pub mod cli;
 pub mod coordinator;
+pub mod dist;
 pub mod error;
 pub mod experiments;
 pub mod netlist;

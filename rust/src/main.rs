@@ -9,38 +9,49 @@
 //! repro ablate-k            # E9 accuracy ablation
 //! repro dse                 # parallel design-space sweep
 //! repro cluster             # E10 end-to-end STDP clustering via PJRT
-//! repro serve [--addr A] [--models name=n,theta[,seed][,shards=K];...]
+//! repro serve [--addr A] [--models name=n,theta[,seed][,shards=K[@h:p+h:p]];...]
 //!             [--ckpt-dir D] [--autosave-secs S]
+//!             [--standby] [--standbys h:p+h:p] [--max-conns N]
 //!             [--qos] [--qos-depth N] [--qos-learn-depth N]
 //!             [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS]
 //!                           # TCP daemon (v3 framed + text compat);
 //!                           # multi-model registry + weight checkpoints;
 //!                           # shards=K scatter/gathers a model's output
-//!                           # columns across K parallel engines;
-//!                           # --qos* arms admission control: bounded
-//!                           # lanes shed with typed BUSY instead of
-//!                           # queueing without bound
+//!                           # columns across K parallel engines —
+//!                           # in-process, or on K remote shard hosts
+//!                           # with `@host:port+host:port`; --standby
+//!                           # boots a shard host (no models until a
+//!                           # coordinator provisions them over the
+//!                           # wire); --standbys names failover hosts
+//!                           # checkpoints replicate to; --max-conns
+//!                           # caps live connections (typed BUSY past
+//!                           # it); --qos* arms admission control:
+//!                           # bounded lanes shed with typed BUSY
+//!                           # instead of queueing without bound
 //! repro client [--addr A] [--framed] [--window W] [--model NAME]
 //!                           # load generator against a daemon
-//! repro replay --record F | [--log F] [--addr A] [--multiple X] | --chaos
+//! repro replay --record F | [--log F] [--addr A] [--multiple X] | --chaos [--dist]
 //!                           # record a CWKR traffic log, replay one
 //!                           # against a daemon at a rate multiple, or
 //!                           # run the canned chaos scenario (stalled
 //!                           # clients + shard kill + checkpoint
-//!                           # corruption) against a scratch server
+//!                           # corruption) against a scratch server;
+//!                           # --dist adds the killed-shard-host +
+//!                           # standby-failover fault
 //! repro all                 # every figure/table, EXPERIMENTS.md-ready
 //! ```
 
 use catwalk::cli::Args;
 use catwalk::coordinator::dse;
 use catwalk::coordinator::{BatcherConfig, TnnHandle};
+use catwalk::dist::RetryPolicy;
 use catwalk::error::{Error, Result};
 use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
 use catwalk::experiments::activity::StimulusConfig;
 use catwalk::experiments::figures;
 use catwalk::experiments::{ablate_k, sparsity_study};
 use catwalk::report::Table;
-use catwalk::server::{Client, Server};
+use catwalk::server::{Client, ClientConfig, Server};
 use catwalk::tnn::workload::ClusteredSeries;
 use catwalk::tnn::{GrfEncoder, WorkloadConfig};
 use std::sync::Arc;
@@ -60,7 +71,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|replay|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K];...] [--ckpt-dir DIR] [--autosave-secs S] [--qos] [--qos-depth N] [--qos-learn-depth N] [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS] [--record FILE | --log FILE | --chaos] [--multiple X] [--rate R] [--deadline-ms MS]";
+const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|replay|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K[@h:p+h:p]];...] [--standby] [--standbys h:p+h:p] [--max-conns N] [--ckpt-dir DIR] [--autosave-secs S] [--qos] [--qos-depth N] [--qos-learn-depth N] [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS] [--record FILE | --log FILE | --chaos [--dist]] [--multiple X] [--rate R] [--deadline-ms MS]";
 
 fn emit(t: &Table, csv: bool) {
     if csv {
@@ -222,14 +233,35 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// One `--models` entry: `name=n,theta[,seed][,shards=K]`
+/// Column layout for one `--models` entry.
+#[derive(Clone, Debug)]
+enum Shards {
+    /// `shards=K` (or no `shards=` at all, K = 1): K in-process engines.
+    Local(usize),
+    /// `shards=K@hostA:port+hostB:port`: one shard per remote host,
+    /// driven over the framed protocol by the distributed transport.
+    Remote(Vec<String>),
+}
+
+impl Shards {
+    fn count(&self) -> usize {
+        match self {
+            Shards::Local(k) => *k,
+            Shards::Remote(hosts) => hosts.len(),
+        }
+    }
+}
+
+/// One `--models` entry: `name=n,theta[,seed][,shards=K[@h:p+h:p]]`
 /// (semicolon-separated entries and repeated flags both work). The
 /// optional trailing tokens may come in either order: a bare integer
-/// is the seed, `shards=K` column-shards the model K ways.
-fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec, usize)> {
+/// is the seed, `shards=K` column-shards the model K ways in-process,
+/// and `shards=K@hostA:port+hostB:port` puts each shard on a remote
+/// host (`+`-separated, exactly K of them).
+fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec, Shards)> {
     let bad = |why: &str| {
         Error::Usage(format!(
-            "--models `{raw}`: {why} (want name=n,theta[,seed][,shards=K])"
+            "--models `{raw}`: {why} (want name=n,theta[,seed][,shards=K[@h:p+h:p]])"
         ))
     };
     let (name, rest) = raw.split_once('=').ok_or_else(|| bad("missing `=`"))?;
@@ -245,15 +277,31 @@ fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec, usize)> {
     let (mut seed, mut shards) = (None, None);
     for field in fields {
         let field = field.trim();
-        if let Some(k) = field.strip_prefix("shards=") {
+        if let Some(spec) = field.strip_prefix("shards=") {
             if shards.is_some() {
                 return Err(bad("shards given twice"));
             }
-            let k: usize = k.trim().parse().map_err(|_| bad("bad shards"))?;
+            let (k_raw, hosts_raw) = match spec.split_once('@') {
+                Some((k, hosts)) => (k, Some(hosts)),
+                None => (spec, None),
+            };
+            let k: usize = k_raw.trim().parse().map_err(|_| bad("bad shards"))?;
             if k == 0 {
                 return Err(bad("shards must be >= 1"));
             }
-            shards = Some(k);
+            shards = Some(match hosts_raw {
+                None => Shards::Local(k),
+                Some(hosts_raw) => {
+                    let hosts: Vec<String> = hosts_raw
+                        .split('+')
+                        .map(|h| h.trim().to_string())
+                        .collect();
+                    if hosts.len() != k || hosts.iter().any(|h| h.is_empty()) {
+                        return Err(bad("shards=K@... needs exactly K `+`-separated hosts"));
+                    }
+                    Shards::Remote(hosts)
+                }
+            });
         } else if seed.is_none() {
             seed = Some(field.parse::<u64>().map_err(|_| bad("bad seed"))?);
         } else {
@@ -267,7 +315,7 @@ fn parse_model_spec(raw: &str) -> Result<(String, ModelSpec, usize)> {
             theta,
             seed: seed.unwrap_or(7),
         },
-        shards.unwrap_or(1),
+        shards.unwrap_or(Shards::Local(1)),
     ))
 }
 
@@ -309,15 +357,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `--models a=16,6;b=64,12,9,shards=4` or repeated `--models`
     // flags; the first entry is the default model. No flag = one
     // default model from the classic --n/--theta/--seed knobs.
-    let mut specs: Vec<(String, ModelSpec, usize)> = Vec::new();
+    let mut specs: Vec<(String, ModelSpec, Shards)> = Vec::new();
     for raw in args.flag_all("models") {
         for part in raw.split(';').filter(|p| !p.trim().is_empty()) {
             specs.push(parse_model_spec(part.trim())?);
         }
     }
     if specs.is_empty() {
-        specs.push(("default".into(), ModelSpec { n, theta, seed }, 1));
+        specs.push((
+            "default".into(),
+            ModelSpec { n, theta, seed },
+            Shards::Local(1),
+        ));
     }
+    // `--standbys a:p+b:p` — failover hosts every remote model's
+    // committed checkpoint generations replicate to
+    let standbys: Vec<String> = args
+        .get_string("standbys", "")
+        .split('+')
+        .map(str::trim)
+        .filter(|h| !h.is_empty())
+        .map(str::to_string)
+        .collect();
+    let max_conns = args.get_usize("max-conns", 0)?;
 
     let qos = qos_from(args)?;
     let cfg = RegistryConfig {
@@ -328,21 +390,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .then(|| std::time::Duration::from_secs(autosave)),
         qos,
     };
+
+    // `--standby`: a shard host. Boots with no models; a coordinator
+    // provisions column slices over the wire (CreateColumns) and
+    // checkpoint replication stages generations into --ckpt-dir.
+    if args.switch("standby") {
+        let registry = Arc::new(ModelRegistry::standby(cfg));
+        if let Some(dir) = &ckpt_dir {
+            println!("replicated generations land in {}", dir.display());
+        }
+        println!(
+            "standby shard host on {addr} — no models until a coordinator \
+             provisions column slices over the wire"
+        );
+        let server = Server::with_registry(registry).with_max_conns(max_conns);
+        return server.serve(&addr, |port| println!("bound on port {port}"));
+    }
+
     let (default_name, default_spec, default_shards) = specs[0].clone();
-    let registry = Arc::new(ModelRegistry::open_sharded(
-        cfg,
-        &default_name,
-        default_spec,
-        default_shards,
-    )?);
+    let registry = Arc::new(match &default_shards {
+        Shards::Local(k) => ModelRegistry::open_sharded(cfg, &default_name, default_spec, *k)?,
+        Shards::Remote(hosts) => ModelRegistry::open_remote(
+            cfg,
+            &default_name,
+            default_spec,
+            hosts,
+            standbys.clone(),
+            ClientConfig::default(),
+            RetryPolicy::default(),
+        )?,
+    });
     for (name, spec, shards) in &specs[1..] {
-        registry.create_sharded(name, *spec, *shards)?;
+        match shards {
+            Shards::Local(k) => {
+                registry.create_sharded(name, *spec, *k)?;
+            }
+            Shards::Remote(hosts) => {
+                registry.create_remote(
+                    name,
+                    *spec,
+                    hosts,
+                    standbys.clone(),
+                    ClientConfig::default(),
+                    RetryPolicy::default(),
+                )?;
+            }
+        }
     }
     for info in registry.list() {
         let resumed = registry
             .ckpt_path(&info.name)
             .is_some_and(|p| p.exists());
         let shards = registry.slot(Some(info.name.as_str()))?.shard_count();
+        let remote = specs
+            .iter()
+            .find(|(name, _, _)| *name == info.name)
+            .and_then(|(_, _, s)| match s {
+                Shards::Remote(hosts) => Some(hosts.join("+")),
+                Shards::Local(_) => None,
+            });
         println!(
             "model {}{}: n={} c={} t_max={} theta={} seed={}{}{}",
             info.name,
@@ -352,10 +458,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             info.t_max,
             info.theta,
             info.seed,
-            if shards > 1 {
-                format!(" shards={shards}")
-            } else {
-                String::new()
+            match &remote {
+                Some(hosts) => format!(" shards={shards}@{hosts}"),
+                None if shards > 1 => format!(" shards={shards}"),
+                None => String::new(),
             },
             if resumed { " [resumed from checkpoint]" } else { "" },
         );
@@ -385,12 +491,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             qos.retry_after_ms
         );
     }
+    if !standbys.is_empty() {
+        println!(
+            "standby host(s) for failover: {} (committed generations replicate there)",
+            standbys.join(", ")
+        );
+    }
+    if max_conns > 0 {
+        println!("connection cap: {max_conns} live (past it, typed BUSY on both codecs)");
+    }
     println!(
         "serving {} model(s) on {addr} — v3 framed protocol (HELLO/ACK, pipelined, \
          @model routing, admin) + text compat (INFER/LEARN/SPARSE/SLEARN/STATS/PING/QUIT)",
         specs.len()
     );
-    let server = Server::with_registry(registry);
+    let server = Server::with_registry(registry).with_max_conns(max_conns);
     server.serve(&addr, |port| println!("bound on port {port}"))
 }
 
@@ -504,7 +619,10 @@ fn cmd_client(args: &Args) -> Result<()> {
 /// * `--chaos` — boot a scratch registry+server, replay at the given
 ///   multiple while stalling clients, killing a shard slot and
 ///   corrupting a checkpoint mid-run, and verify the typed-error and
-///   old-weights-keep-serving contracts.
+///   old-weights-keep-serving contracts. With `--dist`, also kill a
+///   remote shard *host* mid-traffic and verify typed errors in the
+///   window plus bit-identical standby failover from the replicated
+///   checkpoint generation.
 fn cmd_replay(args: &Args) -> Result<()> {
     use catwalk::qos::replay::{self, ChaosOptions, ReplayLog, ReplayOptions, SynthSpec};
     use std::path::Path;
@@ -557,6 +675,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
             replay: opts,
             qos,
             stall_clients: args.get_usize("stall-clients", 2)?,
+            dist: args.switch("dist"),
         };
         let report = replay::chaos_run(&copts)?;
         print_replay_report(&report.replay);
@@ -569,6 +688,16 @@ fn cmd_replay(args: &Args) -> Result<()> {
             report.weights_bit_identical,
             report.survivor_serving
         );
+        if report.shard_host_killed {
+            println!(
+                "dist: typed errors in kill window {}  hangs {}  failover recovered {}  \
+                 committed weights bit-identical {}",
+                report.dist_typed_errors,
+                report.dist_hangs,
+                report.failover_recovered,
+                report.failover_weights_match
+            );
+        }
         if !report.contracts_hold() {
             return Err(Error::Coordinator(
                 "chaos contracts violated (see ledger above)".into(),

@@ -17,19 +17,28 @@
 //! REQUEST  := id u64 | op u8 | flags u8
 //!             | deadline_ms u32           (iff flags bit 1)
 //!             | mlen u16 | model utf8     (iff flags bit 3; v3)
+//!             | gcount u32 | gcount × f32 (iff flags bit 4; v3, LEARN)
 //!             | body
 //! op       := 1 INFER | 2 LEARN | 3 STATS | 4 PING | 5 QUIT
 //!           | 6 ADMIN                     (v3)
 //! flags    := bit 0 sparse_reply | bit 1 has_deadline
 //!             | bit 2 counters_only | bit 3 has_model (v3)
+//!             | bit 4 has_gates (v3, LEARN only)
 //!             (other bits: error)
 //! body     := nvolleys u16 | volley*                   (op 1..5)
 //!           | cmd u8 | cmd_fields                      (op 6)
 //! volley   := 0 u8 | n u32 | n × f32                   (dense)
 //!           | 1 u8 | n u32 | nnz u32 | nnz × (line u32, time f32)
 //! cmd      := 1 LIST | 2 CREATE | 3 SAVE | 4 LOAD | 5 UNLOAD
+//!           | 6 CREATE_COLUMNS | 7 FETCH_CKPT | 8 PUT_CKPT
+//!           | 9 PUT_SHARD | 10 PUT_MANIFEST            (v3, dist tier)
 //! CREATE   := name str16 | n u32 | theta f32 | seed u64
-//! SAVE/LOAD/UNLOAD := name str16
+//! SAVE/LOAD/UNLOAD/FETCH_CKPT := name str16
+//! CREATE_COLUMNS := name str16 | index u32 | n u32 | theta f32
+//!                   | seed u64 | start u32 | end u32
+//! PUT_CKPT := name str16 | blen u32 | bytes[blen]
+//! PUT_SHARD := name str16 | index u32 | crc u32 | blen u32 | bytes[blen]
+//! PUT_MANIFEST := name str16 | blen u32 | bytes[blen]
 //! str16    := len u16 | utf8[len]
 //!
 //! RESPONSE := id u64 | status u8 | body
@@ -40,6 +49,7 @@
 //! ERROR    := utf8 message          PONG/BYE := empty
 //! ADMIN    := 0 u8 | receipt utf8                      (OK)
 //!           | 1 u8 | count u16 | model_row*            (MODELS)
+//!           | 2 u8 | ckpt bytes                        (CKPT)
 //! model_row := name str16 | n u32 | c u32 | t_max u32
 //!              | theta f32 | seed u64 | mflags u8 (bit 0 = default)
 //! BUSY     := retry_after_ms u32                       (v3)
@@ -249,7 +259,9 @@ const FLAG_SPARSE_REPLY: u8 = 1;
 const FLAG_DEADLINE: u8 = 2;
 const FLAG_COUNTERS_ONLY: u8 = 4;
 const FLAG_MODEL: u8 = 8;
+const FLAG_GATES: u8 = 16;
 
+const OP_LEARN: u8 = 2;
 const OP_ADMIN: u8 = 6;
 
 const CMD_LIST: u8 = 1;
@@ -257,6 +269,11 @@ const CMD_CREATE: u8 = 2;
 const CMD_SAVE: u8 = 3;
 const CMD_LOAD: u8 = 4;
 const CMD_UNLOAD: u8 = 5;
+const CMD_CREATE_COLUMNS: u8 = 6;
+const CMD_FETCH_CKPT: u8 = 7;
+const CMD_PUT_CKPT: u8 = 8;
+const CMD_PUT_SHARD: u8 = 9;
+const CMD_PUT_MANIFEST: u8 = 10;
 
 fn op_to_u8(op: &Op) -> u8 {
     match op {
@@ -293,6 +310,20 @@ fn put_str(p: &mut Vec<u8>, s: &str) -> Result<()> {
     Ok(())
 }
 
+/// Append a u32-length-prefixed byte blob (`blen u32 | bytes`). The
+/// frame-level [`MAX_PAYLOAD`] cap bounds what a length here can claim.
+fn put_bytes(p: &mut Vec<u8>, b: &[u8]) -> Result<()> {
+    if b.len() > u32::MAX as usize {
+        return Err(Error::Proto(format!(
+            "blob of {} bytes exceeds the u32 frame field",
+            b.len()
+        )));
+    }
+    p.extend_from_slice(&(b.len() as u32).to_be_bytes());
+    p.extend_from_slice(b);
+    Ok(())
+}
+
 fn encode_model_cmd(p: &mut Vec<u8>, cmd: &ModelCmd) -> Result<()> {
     match cmd {
         ModelCmd::List => p.push(CMD_LIST),
@@ -323,6 +354,61 @@ fn encode_model_cmd(p: &mut Vec<u8>, cmd: &ModelCmd) -> Result<()> {
             p.push(CMD_UNLOAD);
             put_str(p, name)?;
         }
+        ModelCmd::CreateColumns {
+            name,
+            index,
+            n,
+            theta,
+            seed,
+            start,
+            end,
+        } => {
+            let over_u32 = [*index, *n, *start, *end]
+                .iter()
+                .any(|&v| v > u32::MAX as usize);
+            if over_u32 {
+                return Err(Error::Proto(format!(
+                    "shard slice {index} [{start}, {end}) of width {n} exceeds u32"
+                )));
+            }
+            p.push(CMD_CREATE_COLUMNS);
+            put_str(p, name)?;
+            p.extend_from_slice(&(*index as u32).to_be_bytes());
+            p.extend_from_slice(&(*n as u32).to_be_bytes());
+            p.extend_from_slice(&theta.to_bits().to_be_bytes());
+            p.extend_from_slice(&seed.to_be_bytes());
+            p.extend_from_slice(&(*start as u32).to_be_bytes());
+            p.extend_from_slice(&(*end as u32).to_be_bytes());
+        }
+        ModelCmd::FetchCkpt { name } => {
+            p.push(CMD_FETCH_CKPT);
+            put_str(p, name)?;
+        }
+        ModelCmd::PutCkpt { name, bytes } => {
+            p.push(CMD_PUT_CKPT);
+            put_str(p, name)?;
+            put_bytes(p, bytes)?;
+        }
+        ModelCmd::PutShard {
+            name,
+            index,
+            crc,
+            bytes,
+        } => {
+            if *index > u32::MAX as usize {
+                return Err(Error::Proto(format!("shard index {index} exceeds u32")));
+            }
+            p.push(CMD_PUT_SHARD);
+            put_str(p, name)?;
+            p.extend_from_slice(&(*index as u32).to_be_bytes());
+            p.extend_from_slice(&crc.to_be_bytes());
+            put_bytes(p, bytes)?;
+        }
+        ModelCmd::PutManifest { name, bytes } => {
+            p.push(CMD_PUT_MANIFEST);
+            put_str(p, name)?;
+            put_bytes(p, bytes)?;
+        }
     }
     Ok(())
 }
@@ -339,6 +425,30 @@ fn decode_model_cmd(cur: &mut Cur) -> Result<ModelCmd> {
         CMD_SAVE => Ok(ModelCmd::Save { name: cur.str16()? }),
         CMD_LOAD => Ok(ModelCmd::Load { name: cur.str16()? }),
         CMD_UNLOAD => Ok(ModelCmd::Unload { name: cur.str16()? }),
+        CMD_CREATE_COLUMNS => Ok(ModelCmd::CreateColumns {
+            name: cur.str16()?,
+            index: cur.u32()? as usize,
+            n: cur.u32()? as usize,
+            theta: cur.f32()?,
+            seed: cur.u64()?,
+            start: cur.u32()? as usize,
+            end: cur.u32()? as usize,
+        }),
+        CMD_FETCH_CKPT => Ok(ModelCmd::FetchCkpt { name: cur.str16()? }),
+        CMD_PUT_CKPT => Ok(ModelCmd::PutCkpt {
+            name: cur.str16()?,
+            bytes: cur.blob32()?,
+        }),
+        CMD_PUT_SHARD => Ok(ModelCmd::PutShard {
+            name: cur.str16()?,
+            index: cur.u32()? as usize,
+            crc: cur.u32()?,
+            bytes: cur.blob32()?,
+        }),
+        CMD_PUT_MANIFEST => Ok(ModelCmd::PutManifest {
+            name: cur.str16()?,
+            bytes: cur.blob32()?,
+        }),
         other => Err(Error::Proto(format!("unknown admin cmd {other}"))),
     }
 }
@@ -367,12 +477,32 @@ pub fn encode_request(req: &Request) -> Result<Vec<u8>> {
     if req.opts.model.is_some() {
         flags |= FLAG_MODEL;
     }
+    if req.gates.is_some() {
+        if req.op != Op::Learn {
+            return Err(Error::Proto(
+                "gates ride only on LEARN requests".into(),
+            ));
+        }
+        flags |= FLAG_GATES;
+    }
     p.push(flags);
     if let Some(ms) = req.opts.deadline_ms {
         p.extend_from_slice(&ms.to_be_bytes());
     }
     if let Some(model) = &req.opts.model {
         put_str(&mut p, model)?;
+    }
+    if let Some(gates) = &req.gates {
+        if gates.len() > u32::MAX as usize {
+            return Err(Error::Proto(format!(
+                "{} gates exceed the u32 frame field",
+                gates.len()
+            )));
+        }
+        p.extend_from_slice(&(gates.len() as u32).to_be_bytes());
+        for &g in gates {
+            p.extend_from_slice(&g.to_bits().to_be_bytes());
+        }
     }
     if let Op::Admin(cmd) = &req.op {
         if !req.volleys.is_empty() {
@@ -396,8 +526,15 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
     let id = cur.u64()?;
     let op_byte = cur.u8()?;
     let flags = cur.u8()?;
-    if flags & !(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY | FLAG_MODEL) != 0 {
+    let known =
+        FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY | FLAG_MODEL | FLAG_GATES;
+    if flags & !known != 0 {
         return Err(Error::Proto(format!("unknown request flags {flags:#x}")));
+    }
+    if flags & FLAG_GATES != 0 && op_byte != OP_LEARN {
+        return Err(Error::Proto(format!(
+            "gates flag on op {op_byte} (gates ride only on LEARN requests)"
+        )));
     }
     let deadline_ms = if flags & FLAG_DEADLINE != 0 {
         Some(cur.u32()?)
@@ -406,6 +543,13 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
     };
     let model = if flags & FLAG_MODEL != 0 {
         Some(cur.str16()?)
+    } else {
+        None
+    };
+    let gates = if flags & FLAG_GATES != 0 {
+        let g = cur.u32()? as usize;
+        cur.reserve_check(g, 4)?;
+        Some((0..g).map(|_| cur.f32()).collect::<Result<Vec<f32>>>()?)
     } else {
         None
     };
@@ -425,6 +569,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
         id,
         op,
         volleys,
+        gates,
         opts: RequestOpts {
             sparse_reply: flags & FLAG_SPARSE_REPLY != 0,
             deadline_ms,
@@ -510,6 +655,7 @@ const STATUS_BUSY: u8 = 6;
 
 const ADMIN_OK: u8 = 0;
 const ADMIN_MODELS: u8 = 1;
+const ADMIN_CKPT: u8 = 2;
 const MFLAG_DEFAULT: u8 = 1;
 
 /// Encode a [`Response`] as a RESPONSE frame payload. Results always
@@ -574,6 +720,11 @@ pub fn encode_response(resp: &Response) -> Result<Vec<u8>> {
                 p.extend_from_slice(&m.seed.to_be_bytes());
                 p.push(if m.default { MFLAG_DEFAULT } else { 0 });
             }
+        }
+        Outcome::Admin(AdminReply::Ckpt(bytes)) => {
+            p.push(STATUS_ADMIN);
+            p.push(ADMIN_CKPT);
+            p.extend_from_slice(bytes);
         }
         Outcome::Pong => p.push(STATUS_PONG),
         Outcome::Bye => p.push(STATUS_BYE),
@@ -645,6 +796,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
                 cur.finish()?;
                 Outcome::Admin(AdminReply::Models(models))
             }
+            ADMIN_CKPT => Outcome::Admin(AdminReply::Ckpt(cur.rest())),
             other => {
                 return Err(Error::Proto(format!(
                     "unknown admin reply kind {other}"
@@ -752,6 +904,19 @@ impl<'a> Cur<'a> {
             .map_err(|e| Error::Proto(format!("payload is not utf-8: {e}")))
     }
 
+    /// Every remaining byte, raw (checkpoint blobs are not utf-8).
+    fn rest(&mut self) -> Vec<u8> {
+        let s = self.b[self.off..].to_vec();
+        self.off = self.b.len();
+        s
+    }
+
+    /// A u32-length-prefixed byte blob (`blen u32 | bytes`).
+    fn blob32(&mut self) -> Result<Vec<u8>> {
+        let len = self.u32()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+
     /// Every byte of the payload must have been consumed.
     fn finish(&self) -> Result<()> {
         if self.off != self.b.len() {
@@ -805,6 +970,7 @@ mod tests {
                 id: 0xDEADBEEF00C0FFEE,
                 op,
                 volleys: volleys.clone(),
+                gates: None,
                 opts: RequestOpts {
                     sparse_reply: true,
                     deadline_ms: Some(1234),
@@ -826,6 +992,69 @@ mod tests {
     }
 
     #[test]
+    fn gates_ride_learn_requests_only() {
+        // a gated learn roundtrips losslessly, f32 bits and all
+        let req = Request::learn(vec![SpikeVolley::dense(vec![1.0, 16.0])])
+            .with_id(4)
+            .with_model("quad")
+            .with_gates(vec![1.0, 0.0, 0.0, 1.0, f32::NAN]);
+        let enc = encode_request(&req).unwrap();
+        assert_eq!(enc[9], 8 | 16, "flags carry FLAG_MODEL | FLAG_GATES");
+        let dec = decode_request(&enc).unwrap();
+        assert_eq!(dec.opts, req.opts);
+        assert_eq!(dec.volleys, req.volleys);
+        let (a, b) = (dec.gates.unwrap(), req.gates.unwrap());
+        assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        // empty gate vector is legal (a zero-column chunk never
+        // happens, but the codec does not special-case it)
+        let req = Request::learn(vec![]).with_gates(vec![]);
+        assert_eq!(decode_request(&encode_request(&req).unwrap()).unwrap(), req);
+
+        // encode side: gates on any non-LEARN op are refused
+        let bad = Request::infer(vec![SpikeVolley::dense(vec![1.0])]).with_gates(vec![1.0]);
+        assert!(encode_request(&bad).is_err());
+        let bad = Request::op(Op::Stats).with_gates(vec![1.0]);
+        assert!(encode_request(&bad).is_err());
+
+        // decode side: flipping the op byte under a gated frame is a
+        // typed error, not a misparse
+        let enc = encode_request(&Request::learn(vec![]).with_gates(vec![1.0])).unwrap();
+        let mut bad = enc.clone();
+        bad[8] = 1; // LEARN -> INFER
+        assert!(matches!(decode_request(&bad), Err(Error::Proto(_))));
+        // truncating the gate vector is a typed error
+        for cut in 0..enc.len() {
+            assert!(decode_request(&enc[..cut]).is_err(), "cut={cut}");
+        }
+        // hostile gate count cannot trigger a huge allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&1u64.to_be_bytes());
+        huge.push(2); // op learn
+        huge.push(16); // FLAG_GATES
+        huge.extend_from_slice(&u32::MAX.to_be_bytes());
+        assert!(decode_request(&huge).is_err());
+    }
+
+    #[test]
+    fn ckpt_reply_roundtrips_raw_bytes() {
+        // checkpoint bytes are opaque (not utf-8) and may be empty
+        for bytes in [vec![0xC3, 0x28, 0x00, 0xFF], Vec::new()] {
+            let resp = Response {
+                id: 11,
+                outcome: Outcome::Admin(AdminReply::Ckpt(bytes)),
+            };
+            let enc = encode_response(&resp).unwrap();
+            assert_eq!(enc[9], 2, "ADMIN_CKPT kind byte");
+            assert_eq!(decode_response(&enc).unwrap(), resp);
+        }
+    }
+
+    #[test]
     fn admin_request_roundtrip_every_cmd() {
         let cmds = [
             ModelCmd::List,
@@ -838,6 +1067,30 @@ mod tests {
             ModelCmd::Save { name: "mnist".into() },
             ModelCmd::Load { name: "mnist".into() },
             ModelCmd::Unload { name: "mnist".into() },
+            ModelCmd::CreateColumns {
+                name: "mnist".into(),
+                index: 1,
+                n: 64,
+                theta: 12.5,
+                seed: 0xC0FFEE,
+                start: 8,
+                end: 16,
+            },
+            ModelCmd::FetchCkpt { name: "mnist".into() },
+            ModelCmd::PutCkpt {
+                name: "mnist".into(),
+                bytes: vec![0xCA, 0x00, 0xFF],
+            },
+            ModelCmd::PutShard {
+                name: "mnist".into(),
+                index: 3,
+                crc: 0x1F19_5ABD,
+                bytes: vec![0x01, 0x02],
+            },
+            ModelCmd::PutManifest {
+                name: "mnist".into(),
+                bytes: Vec::new(),
+            },
         ];
         for cmd in cmds {
             let req = Request::admin(cmd).with_id(9);

@@ -86,6 +86,50 @@ pub enum ModelCmd {
     Load { name: String },
     /// Stop serving and drop a (non-default) model.
     Unload { name: String },
+    /// Provision shard `index` of model `name` — the column slice
+    /// `start..end` — as slot `<name>-s<index>` on this host (the
+    /// distributed tier's shard-host handshake, DESIGN.md §2.7).
+    /// Idempotent: re-provisioning a matching slice echoes the
+    /// existing slot; the host resumes the slice's weights from its
+    /// replicated `<name>.ckpt` CWKS generation when one exists.
+    CreateColumns {
+        name: String,
+        /// shard index in the coordinator's `ShardPlan`
+        index: usize,
+        /// column input width
+        n: usize,
+        /// firing threshold θ
+        theta: f32,
+        /// weight-init seed
+        seed: u64,
+        /// first owned column (inclusive)
+        start: usize,
+        /// one past the last owned column
+        end: usize,
+    },
+    /// Fetch the model's live weights as CWKP checkpoint bytes
+    /// (answered with [`AdminReply::Ckpt`]).
+    FetchCkpt { name: String },
+    /// Replace the model's live weights from CWKP checkpoint bytes
+    /// (geometry-checked; the inverse of `FetchCkpt`).
+    PutCkpt { name: String, bytes: Vec<u8> },
+    /// Replication push: store one content-addressed CWKP shard slice
+    /// next to `<name>.ckpt` on this host. The follower re-verifies
+    /// `crc` over `bytes` and parses the slice before writing; no
+    /// manifest moves, so the slice is invisible until `PutManifest`.
+    PutShard {
+        name: String,
+        /// shard index within the generation's manifest
+        index: usize,
+        /// expected CRC32 of `bytes` (also the slice's content address)
+        crc: u32,
+        bytes: Vec<u8>,
+    },
+    /// Replication commit: install a CWKS manifest as `<name>.ckpt`.
+    /// The follower re-verifies every slice the manifest names before
+    /// the atomic rename — a generation missing or corrupting any
+    /// slice is rejected as a unit and the prior one keeps serving.
+    PutManifest { name: String, bytes: Vec<u8> },
 }
 
 impl ModelCmd {
@@ -96,7 +140,12 @@ impl ModelCmd {
             ModelCmd::Create { name, .. }
             | ModelCmd::Save { name }
             | ModelCmd::Load { name }
-            | ModelCmd::Unload { name } => Some(name),
+            | ModelCmd::Unload { name }
+            | ModelCmd::CreateColumns { name, .. }
+            | ModelCmd::FetchCkpt { name }
+            | ModelCmd::PutCkpt { name, .. }
+            | ModelCmd::PutShard { name, .. }
+            | ModelCmd::PutManifest { name, .. } => Some(name),
         }
     }
 }
@@ -125,6 +174,8 @@ pub enum AdminReply {
     Ok(String),
     /// The model listing (`List`, and `Create`'s echo of the new slot).
     Models(Vec<ModelInfo>),
+    /// CWKP checkpoint bytes (the reply to [`ModelCmd::FetchCkpt`]).
+    Ckpt(Vec<u8>),
 }
 
 /// Per-request options the old verb-per-method API could not express.
@@ -156,6 +207,17 @@ pub struct Request {
     /// Zero or more volleys; a multi-volley `Infer`/`Learn` is one
     /// request (and, under the frame codec, one frame).
     pub volleys: Vec<SpikeVolley>,
+    /// `Learn` only: pre-computed STDP gates, row-major
+    /// `[volleys × the target model's columns]`. This is how the
+    /// distributed tier's coordinator ships phase 2 of the two-phase
+    /// gated learn to a remote shard — the shard applies exactly these
+    /// gates instead of deriving winners locally, which is what keeps
+    /// a TCP-sharded model bit-identical to the in-process one. Rides
+    /// the v3 frame codec (`FLAG_GATES`); not expressible in the text
+    /// protocol or on v2. Gates live here rather than in
+    /// [`RequestOpts`] because the options struct is `Eq` and gate
+    /// values are `f32`.
+    pub gates: Option<Vec<f32>>,
     pub opts: RequestOpts,
 }
 
@@ -165,6 +227,7 @@ impl Request {
             id: 0,
             op: Op::Infer,
             volleys,
+            gates: None,
             opts: RequestOpts::default(),
         }
     }
@@ -174,6 +237,7 @@ impl Request {
             id: 0,
             op: Op::Learn,
             volleys,
+            gates: None,
             opts: RequestOpts::default(),
         }
     }
@@ -184,6 +248,7 @@ impl Request {
             id: 0,
             op,
             volleys: Vec::new(),
+            gates: None,
             opts: RequestOpts::default(),
         }
     }
@@ -211,6 +276,12 @@ impl Request {
     /// Route this request to the named model instead of the default.
     pub fn with_model(mut self, name: impl Into<String>) -> Request {
         self.opts.model = Some(name.into());
+        self
+    }
+
+    /// Attach pre-computed STDP gates (`Learn` over frame v3 only).
+    pub fn with_gates(mut self, gates: Vec<f32>) -> Request {
+        self.gates = Some(gates);
         self
     }
 }
@@ -345,9 +416,42 @@ mod tests {
             ModelCmd::Save { name: "a".into() },
             ModelCmd::Load { name: "a".into() },
             ModelCmd::Unload { name: "a".into() },
+            ModelCmd::CreateColumns {
+                name: "a".into(),
+                index: 1,
+                n: 16,
+                theta: 6.0,
+                seed: 1,
+                start: 4,
+                end: 8,
+            },
+            ModelCmd::FetchCkpt { name: "a".into() },
+            ModelCmd::PutCkpt {
+                name: "a".into(),
+                bytes: vec![1, 2, 3],
+            },
+            ModelCmd::PutShard {
+                name: "a".into(),
+                index: 0,
+                crc: 0xdead_beef,
+                bytes: vec![4, 5],
+            },
+            ModelCmd::PutManifest {
+                name: "a".into(),
+                bytes: vec![6],
+            },
         ] {
             assert_eq!(cmd.name(), Some("a"));
         }
+    }
+
+    #[test]
+    fn gates_builder_rides_learn() {
+        let r = Request::learn(vec![SpikeVolley::dense(vec![1.0])]).with_gates(vec![1.0, 0.0]);
+        assert_eq!(r.gates.as_deref(), Some(&[1.0, 0.0][..]));
+        // gates are not part of the options struct (opts stays Eq)
+        assert_eq!(r.opts, RequestOpts::default());
+        assert_eq!(Request::infer(vec![]).gates, None);
     }
 
     #[test]

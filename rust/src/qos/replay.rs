@@ -48,18 +48,29 @@
 //! answers *typed* errors (never hangs, never silently drops), the
 //! corrupt checkpoint is rejected as a unit, and the survivor model's
 //! replies stay bit-identical to its pre-fault weights.
+//!
+//! With [`ChaosOptions::dist`] a fourth fault runs after the local
+//! teardown: a remote 2-shard model (three in-process
+//! [`ShardHost`]s — two live, one standby) loses a shard *host*
+//! mid-traffic. The kill window must stay typed-errors-only, and
+//! [`crate::shard::ShardedModel::failover`] must resume the dead
+//! slice on the standby bit-identical to the replicated committed
+//! generation.
 
+use crate::coordinator::BatcherConfig;
+use crate::dist::RetryPolicy;
 use crate::error::{Error, Result};
 use crate::proto::{frame, Outcome, Request, Response};
 use crate::qos::QosConfig;
 use crate::registry::checkpoint::crc32;
 use crate::registry::{ModelRegistry, ModelSpec, RegistryConfig};
 use crate::rng::Xoshiro256;
-use crate::server::{FramedClient, Server};
+use crate::server::{ClientConfig, FramedClient, Server};
+use crate::shard::ShardedModel;
 use crate::volley::SpikeVolley;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -411,6 +422,12 @@ pub struct ChaosOptions {
     pub qos: QosConfig,
     /// Stalled connections to park mid-run.
     pub stall_clients: usize,
+    /// Also run the distributed fault: a remote 2-shard model loses a
+    /// shard **host** (not just an engine) mid-traffic, the window
+    /// must stay typed-errors-only, and failover onto the replicated
+    /// standby must resume the committed generation bit-identically
+    /// (`repro replay --chaos --dist`).
+    pub dist: bool,
 }
 
 /// What a chaos run observed; [`ChaosReport::contracts_hold`] is the
@@ -430,12 +447,33 @@ pub struct ChaosReport {
     pub weights_bit_identical: bool,
     /// The survivor model still answered Results after every fault.
     pub survivor_serving: bool,
+    /// The distributed fault ran (a remote shard *host* was killed).
+    /// `false` when [`ChaosOptions::dist`] is off — the dist fields
+    /// below then stay at their vacuous defaults and do not gate
+    /// [`ChaosReport::contracts_hold`].
+    pub shard_host_killed: bool,
+    /// Typed per-volley errors the remote model gave in the window
+    /// between the host dying and failover.
+    pub dist_typed_errors: u64,
+    /// Window probes that neither resolved typed nor within the
+    /// bounded client timeouts — any nonzero count is a hang and a
+    /// contract violation.
+    pub dist_hangs: u64,
+    /// Failover re-provisioned the dead shard's slice on the standby
+    /// (resumed from the replicated generation).
+    pub failover_recovered: bool,
+    /// The post-failover probe is bit-identical to the committed
+    /// generation's probe — the standby serves exactly the replicated
+    /// weights, and post-commit learns rolled back like a crash.
+    pub failover_weights_match: bool,
 }
 
 impl ChaosReport {
     /// Every contract the harness asserts, as one gate: no silent
     /// drops, faults surface as typed errors, old weights keep
-    /// serving bit-identically.
+    /// serving bit-identically — and, when the distributed fault ran,
+    /// the killed-host window stayed typed and the standby resumed
+    /// the committed generation exactly.
     pub fn contracts_hold(&self) -> bool {
         self.replay.transport_errors == 0
             && self.replay.answered() == self.replay.sent
@@ -443,6 +481,10 @@ impl ChaosReport {
             && self.corrupt_load_rejected
             && self.weights_bit_identical
             && self.survivor_serving
+            && (!self.shard_host_killed
+                || (self.dist_hangs == 0
+                    && self.failover_recovered
+                    && self.failover_weights_match))
     }
 }
 
@@ -457,6 +499,198 @@ pub fn corrupt_file(path: &Path) -> Result<u64> {
     bytes[at] ^= 0xFF;
     std::fs::write(path, &bytes)?;
     Ok(at as u64)
+}
+
+// --------------------------------------------------- shard hosts
+
+/// One in-process `repro serve --standby` stand-in: a standby
+/// registry (no models until a coordinator provisions a column slice
+/// over the wire) behind a real TCP listener on an ephemeral port.
+/// The distributed chaos fault boots three — two live shard hosts
+/// plus the failover standby — and `rust/tests/dist.rs` reuses it so
+/// wire-level tests never need a second process.
+pub struct ShardHost {
+    /// `127.0.0.1:<port>` the host is listening on.
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<Result<()>>,
+}
+
+impl ShardHost {
+    /// Kill the host the way a crashed process looks from the wire:
+    /// flip its stop flag, so every connection worker closes its
+    /// socket at the next request boundary and the accept loop exits.
+    /// A client pipeline in flight dies with a mid-pipeline EOF —
+    /// exactly the typed transport failure `dist::TcpShard` converts
+    /// into its `failed` latch.
+    pub fn kill(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Kill and reap the serving thread.
+    pub fn shutdown(self) {
+        self.kill();
+        let _ = self.join.join();
+    }
+}
+
+/// Boot a shard host on an ephemeral port: a standby registry over
+/// `artifacts_dir`, with `ckpt_dir` holding replicated checkpoint
+/// generations, served until [`ShardHost::kill`]. The in-process twin
+/// of `repro serve --standby --ckpt-dir <dir>`.
+pub fn boot_shard_host(artifacts_dir: &Path, ckpt_dir: &Path, qos: QosConfig) -> Result<ShardHost> {
+    std::fs::create_dir_all(ckpt_dir)?;
+    let cfg = RegistryConfig {
+        artifacts_dir: artifacts_dir.to_path_buf(),
+        ckpt_dir: Some(ckpt_dir.to_path_buf()),
+        qos,
+        ..RegistryConfig::default()
+    };
+    let server = Server::with_registry(Arc::new(ModelRegistry::standby(cfg)));
+    let stop = server.stop_handle();
+    let (port_tx, port_rx) = mpsc::channel();
+    let join =
+        std::thread::spawn(move || server.serve("127.0.0.1:0", |p| port_tx.send(p).unwrap()));
+    let port = port_rx
+        .recv()
+        .map_err(|_| Error::Server("shard host never bound".into()))?;
+    Ok(ShardHost {
+        addr: format!("127.0.0.1:{port}"),
+        stop,
+        join,
+    })
+}
+
+/// What the distributed fault observed (folded into [`ChaosReport`]).
+struct DistChaos {
+    typed_errors: u64,
+    hangs: u64,
+    recovered: bool,
+    weights_match: bool,
+}
+
+/// The distributed fault (`--dist`): boot three shard hosts (two live
+/// plus a standby), open a remote 2-shard model over them, commit a
+/// checkpoint generation (committing replicates every slice plus the
+/// manifest to the standby), learn *past* the commit, then kill shard
+/// 1's host. The window between the kill and failover must resolve
+/// every probe — typed errors, bounded by the client timeouts, never
+/// a hang — and failover must resume the dead slice on the standby
+/// bit-identical to the committed generation, rolling the post-commit
+/// learns back exactly like a crash would.
+fn dist_chaos(opts: &ChaosOptions) -> Result<DistChaos> {
+    let qos = QosConfig::default();
+    let host_a = boot_shard_host(&opts.artifacts_dir, &opts.scratch_dir.join("dist-a"), qos)?;
+    let host_b = boot_shard_host(&opts.artifacts_dir, &opts.scratch_dir.join("dist-b"), qos)?;
+    let standby = boot_shard_host(&opts.artifacts_dir, &opts.scratch_dir.join("dist-s"), qos)?;
+
+    // bounded client timeouts enforce no-hang by construction; the
+    // harness still *measures* each probe against a far larger budget
+    let client = ClientConfig {
+        read_timeout: Some(Duration::from_secs(2)),
+        write_timeout: Some(Duration::from_secs(2)),
+        ..ClientConfig::default()
+    };
+    let retry = RetryPolicy {
+        attempts: 3,
+        base: Duration::from_millis(10),
+        max: Duration::from_millis(80),
+        jitter: 0.2,
+        seed: 9,
+    };
+    let coord_dir = opts.scratch_dir.join("dist-coord");
+    std::fs::create_dir_all(&coord_dir)?;
+    let ckpt = coord_dir.join("dist.ckpt");
+    let hosts = vec![host_a.addr.clone(), host_b.addr.clone()];
+    let model = ShardedModel::open_remote(
+        &opts.artifacts_dir,
+        "dist",
+        opts.spec.n,
+        6.0,
+        5,
+        &hosts,
+        vec![standby.addr.clone()],
+        client,
+        retry,
+        BatcherConfig::default(),
+    )?;
+    let hang_budget = Duration::from_secs(5);
+    let t_max = model.t_max as f32;
+    let volley_at = |phase: usize| -> Vec<SpikeVolley> {
+        vec![SpikeVolley::dense(
+            (0..opts.spec.n)
+                .map(|i| if (i + phase) % 3 == 0 { 1.0 } else { t_max })
+                .collect(),
+        )]
+    };
+    let probe_bits = |rs: Vec<Result<crate::volley::VolleyResult>>| -> Result<Vec<Vec<u32>>> {
+        rs.into_iter()
+            .map(|r| r.map(|v| v.times.iter().map(|t| t.to_bits()).collect()))
+            .collect()
+    };
+
+    // train, commit (replicates to the standby), snapshot the
+    // committed generation's probe reply bit-exactly
+    for phase in 0..3 {
+        for r in model.learn(volley_at(phase), None) {
+            r?;
+        }
+    }
+    model.save_checkpoints(&ckpt)?;
+    let committed = probe_bits(model.infer(volley_at(0), None))?;
+    // learns past the commit point — lost by design under failover
+    for phase in 3..5 {
+        for r in model.learn(volley_at(phase), None) {
+            r?;
+        }
+    }
+
+    // the fault: shard 1's *host* dies mid-traffic
+    host_b.kill();
+    let mut typed_errors = 0u64;
+    let mut hangs = 0u64;
+    let mut loops = 0;
+    while model.failed_shards().is_empty() && loops < 100 {
+        loops += 1;
+        let t0 = Instant::now();
+        typed_errors += model
+            .infer(volley_at(0), None)
+            .iter()
+            .filter(|r| r.is_err())
+            .count() as u64;
+        if t0.elapsed() > hang_budget {
+            hangs += 1;
+        }
+    }
+    // one more probe with the failure latched: still typed, not hung
+    let t0 = Instant::now();
+    typed_errors += model
+        .infer(volley_at(0), None)
+        .iter()
+        .filter(|r| r.is_err())
+        .count() as u64;
+    if t0.elapsed() > hang_budget {
+        hangs += 1;
+    }
+
+    // recovery: the standby takes over the dead slice from the
+    // replicated generation; every shard rolls back to the commit
+    let recovered = matches!(model.failover(&ckpt), Ok(k) if k >= 1);
+    let weights_match = recovered
+        && probe_bits(model.infer(volley_at(0), None))
+            .map(|post| post == committed)
+            .unwrap_or(false);
+
+    drop(model); // client EOFs wake any host worker blocked in a read
+    host_a.shutdown();
+    host_b.shutdown();
+    standby.shutdown();
+    Ok(DistChaos {
+        typed_errors,
+        hangs,
+        recovered,
+        weights_match,
+    })
 }
 
 /// The canned chaos scenario (`repro replay --chaos`, and the e2e gate
@@ -578,6 +812,15 @@ pub fn chaos_run(opts: &ChaosOptions) -> Result<ChaosReport> {
     stop.store(true, Ordering::Release);
     let _ = probe.quit();
     let _ = srv.join();
+
+    // fault 4 (opt-in): the distributed scenario runs after the local
+    // teardown so its three hosts own the port budget and the scratch
+    // subtree alone
+    let dist = if opts.dist {
+        Some(dist_chaos(opts)?)
+    } else {
+        None
+    };
     let _ = std::fs::remove_dir_all(&opts.scratch_dir);
 
     Ok(ChaosReport {
@@ -587,6 +830,11 @@ pub fn chaos_run(opts: &ChaosOptions) -> Result<ChaosReport> {
         corrupt_load_rejected,
         weights_bit_identical,
         survivor_serving,
+        shard_host_killed: dist.is_some(),
+        dist_typed_errors: dist.as_ref().map_or(0, |d| d.typed_errors),
+        dist_hangs: dist.as_ref().map_or(0, |d| d.hangs),
+        failover_recovered: dist.as_ref().is_some_and(|d| d.recovered),
+        failover_weights_match: dist.as_ref().is_some_and(|d| d.weights_match),
     })
 }
 

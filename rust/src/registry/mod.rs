@@ -46,13 +46,16 @@
 pub mod checkpoint;
 
 use crate::coordinator::{BatcherConfig, DynamicBatcher, Metrics, TnnHandle};
+use crate::dist::RetryPolicy;
 use crate::error::{Error, Result};
 use crate::proto::{AdminReply, ModelCmd, ModelInfo, Outcome, StatsSnapshot};
 use crate::qos::{AdmitPermit, Lane, QosConfig, QosGate, ShedCause};
 use crate::runtime::Tensor;
+use crate::server::ClientConfig;
+use crate::shard::manifest::{shard_path, ShardManifest};
 use crate::shard::ShardedModel;
-use crate::volley::SpikeVolley;
-use checkpoint::Checkpoint;
+use crate::volley::{SpikeVolley, VolleyResult};
+use checkpoint::{crc32, write_atomic, Checkpoint};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, RwLock};
@@ -306,6 +309,61 @@ impl ModelSlot {
         })
     }
 
+    /// Run a gated learn through this slot — the distributed two-phase
+    /// protocol's phase 2, arriving over the wire as a LEARN request
+    /// with `FLAG_GATES` ([`crate::proto::Request::with_gates`]). The
+    /// gates were computed *globally* by the remote coordinator; this
+    /// host applies exactly them to its column slice, bypassing the
+    /// learn batcher (the coordinator already holds its model-level
+    /// exclusive lock, so batching across callers here would only
+    /// reorder what must not reorder). Only a single-engine slot (a
+    /// `CreateColumns` column slice, or any whole model) accepts
+    /// gates — a sharded slot's gate *derivation* is the coordinator's
+    /// job, so routing gates at one is a typed refusal, not a silent
+    /// re-derivation.
+    pub fn run_gated(
+        &self,
+        volleys: Vec<SpikeVolley>,
+        gates: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Outcome {
+        let want = volleys.len() * self.c();
+        if gates.len() != want {
+            return Outcome::Error(format!(
+                "gates length {} != {} volleys x {} columns",
+                gates.len(),
+                volleys.len(),
+                self.c()
+            ));
+        }
+        let nvol = volleys.len().max(1) as u64;
+        self.metrics().incr("requests", nvol);
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            self.metrics().incr("requests_expired", nvol);
+            return Outcome::Error(Error::DeadlineExpired.to_string());
+        }
+        match &self.engine {
+            SlotEngine::Single { handle, .. } => {
+                let run = || -> Result<Vec<VolleyResult>> {
+                    handle.learn_gated_deferred(volleys, gates)?.wait()?
+                };
+                match run() {
+                    Ok(rs) => {
+                        self.metrics().incr("volleys_learned", rs.len() as u64);
+                        Outcome::Results(rs)
+                    }
+                    Err(Error::Busy { retry_after_ms }) => Outcome::Busy { retry_after_ms },
+                    Err(e) => Outcome::Error(e.to_string()),
+                }
+            }
+            SlotEngine::Sharded(_) => Outcome::Error(
+                "gated learn addresses a column-shard slot, not a sharded model \
+                 (the scatter/gather layer derives gates itself)"
+                    .into(),
+            ),
+        }
+    }
+
     /// Run a volley batch through this slot (the server's
     /// `Infer`/`Learn` path) — the batcher pair for a single slot, the
     /// scatter/gather layer for a sharded one. Mirrors the pre-registry
@@ -463,6 +521,24 @@ impl ModelRegistry {
         Ok(reg)
     }
 
+    /// [`ModelRegistry::open`] with the default model's column shards
+    /// living on remote shard hosts, one per entry in `hosts`
+    /// (`repro serve --models name=n,theta,shards=K@a:p+b:p`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn open_remote(
+        cfg: RegistryConfig,
+        name: &str,
+        spec: ModelSpec,
+        hosts: &[String],
+        standbys: Vec<String>,
+        client: ClientConfig,
+        retry: RetryPolicy,
+    ) -> Result<ModelRegistry> {
+        let reg = ModelRegistry::empty(cfg, name);
+        reg.create_remote(name, spec, hosts, standbys, client, retry)?;
+        Ok(reg)
+    }
+
     /// A registry wrapped around an already-open handle (the
     /// single-model compat path `Server::new` uses). Load-on-open is
     /// skipped — the caller owns the handle's state.
@@ -473,6 +549,17 @@ impl ModelRegistry {
         reg
     }
 
+    /// A registry that boots with **no** models at all — the shard-host
+    /// / standby shape (`repro serve --standby`). Every slot it ever
+    /// serves arrives over the wire: provisioned by a coordinator
+    /// ([`ModelCmd::CreateColumns`]) or staged by checkpoint
+    /// replication ([`ModelCmd::PutShard`] / [`ModelCmd::PutManifest`]).
+    /// Unnamed requests still route to the (absent) default name and
+    /// get the usual typed `unknown model` error.
+    pub fn standby(cfg: RegistryConfig) -> ModelRegistry {
+        ModelRegistry::empty(cfg, "default")
+    }
+
     fn empty(cfg: RegistryConfig, default_name: &str) -> ModelRegistry {
         ModelRegistry {
             cfg,
@@ -481,6 +568,13 @@ impl ModelRegistry {
             metrics: Arc::new(Metrics::new()),
             last_autosave: Mutex::new(Instant::now()),
         }
+    }
+
+    /// The retry hint (ms) stamped on BUSY refusals minted outside any
+    /// slot's admission gate — the server's connection-cap refusal
+    /// reuses the same QoS knob so clients see one consistent hint.
+    pub fn retry_hint_ms(&self) -> u32 {
+        self.cfg.qos.retry_after_ms
     }
 
     /// The name unnamed requests route to.
@@ -556,20 +650,7 @@ impl ModelRegistry {
         shards: usize,
         resume: bool,
     ) -> Result<ModelInfo> {
-        // allowlist, not blocklist: names become filesystem components
-        // (`<name>.ckpt`), text-protocol tokens (`@name `) and stats
-        // keys (`model.<name>.<counter>=v`), so anything beyond
-        // [A-Za-z0-9_-] would corrupt one of those grammars ('=' breaks
-        // key=value, '.' aliases into another model's stats namespace)
-        let ok = !name.is_empty()
-            && name
-                .chars()
-                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-');
-        if !ok {
-            return Err(Error::Proto(format!(
-                "bad model name `{name}` (use [A-Za-z0-9_-]+)"
-            )));
-        }
+        check_name(name)?;
         if self.slots.read().unwrap().contains_key(name) {
             return Err(Error::Proto(format!("model `{name}` already exists")));
         }
@@ -592,6 +673,218 @@ impl ModelRegistry {
                 Ok(slot.info(name == self.default_name))
             }
         }
+    }
+
+    /// Create a model whose K column shards live on remote `repro
+    /// serve` hosts ([`crate::shard::ShardedModel::open_remote`],
+    /// DESIGN.md §2.7) — `repro serve --models name=n,theta,shards=K@hostA+hostB`.
+    /// Routing, the wire and the admin surface see an ordinary sharded
+    /// slot; only the transport differs. Like the boot path, an
+    /// existing `<ckpt_dir>/<name>.ckpt` CWKS generation resumes into
+    /// the remote shards (pushed over the wire), and an incompatible
+    /// one fails the boot.
+    pub fn create_remote(
+        &self,
+        name: &str,
+        spec: ModelSpec,
+        hosts: &[String],
+        standbys: Vec<String>,
+        client: ClientConfig,
+        retry: RetryPolicy,
+    ) -> Result<ModelInfo> {
+        check_name(name)?;
+        if self.slots.read().unwrap().contains_key(name) {
+            return Err(Error::Proto(format!("model `{name}` already exists")));
+        }
+        let sharded = ShardedModel::open_remote(
+            &self.cfg.artifacts_dir,
+            name,
+            spec.n,
+            spec.theta,
+            spec.seed,
+            hosts,
+            standbys,
+            client,
+            retry,
+            self.cfg.batcher,
+        )?;
+        let slot = Arc::new(ModelSlot {
+            name: name.to_string(),
+            spec,
+            engine: SlotEngine::Sharded(sharded),
+            qos: QosGate::new(self.cfg.qos),
+        });
+        if let Some(path) = self.ckpt_path(name) {
+            if path.exists() {
+                slot.load_ckpt(&path)?;
+                self.metrics.incr("checkpoints_loaded", 1);
+            }
+        }
+        match self.slots.write().unwrap().entry(name.to_string()) {
+            std::collections::btree_map::Entry::Occupied(_) => {
+                Err(Error::Proto(format!("model `{name}` already exists")))
+            }
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(slot.clone());
+                Ok(slot.info(name == self.default_name))
+            }
+        }
+    }
+
+    /// Provision (or re-acknowledge) the column slice `[start, end)`
+    /// of remote model `name` as local slot `<name>-s<index>` — the
+    /// shard-host side of [`ModelCmd::CreateColumns`]. Idempotent on
+    /// matching geometry, because a coordinator re-sends it on every
+    /// reconnect and failover; a geometry clash is a typed refusal.
+    /// When this host holds a replicated `CWKS` generation for `name`
+    /// (pushed by [`ModelCmd::PutShard`]/[`ModelCmd::PutManifest`]),
+    /// the slice resumes from it — which is exactly how a standby
+    /// comes up with the committed weights.
+    #[allow(clippy::too_many_arguments)]
+    pub fn create_columns(
+        &self,
+        name: &str,
+        index: usize,
+        n: usize,
+        theta: f32,
+        seed: u64,
+        start: usize,
+        end: usize,
+    ) -> Result<ModelInfo> {
+        check_name(name)?;
+        if start >= end {
+            return Err(Error::Proto(format!(
+                "empty column slice [{start}, {end}) for `{name}`"
+            )));
+        }
+        let slot_name = format!("{name}-s{index}");
+        let matches = |s: &ModelSlot| s.n() == n && s.c() == end - start;
+        if let Some(existing) = self.slots.read().unwrap().get(&slot_name) {
+            return if matches(existing) {
+                Ok(existing.info(false))
+            } else {
+                Err(Error::Proto(format!(
+                    "column slot `{slot_name}` already exists with different geometry \
+                     ([{}, {}], asked [{}, {n}])",
+                    existing.c(),
+                    existing.n(),
+                    end - start
+                )))
+            };
+        }
+        let handle =
+            TnnHandle::open_columns(&self.cfg.artifacts_dir, n, theta, seed, start..end)?;
+        if let Some(path) = self.ckpt_path(name) {
+            if path.exists() {
+                handle.set_weights(replicated_slice(&path, index, n, start, end)?)?;
+                self.metrics.incr("checkpoints_loaded", 1);
+            }
+        }
+        let slot = Arc::new(ModelSlot::from_handle(
+            &slot_name,
+            handle,
+            self.cfg.batcher,
+            self.cfg.qos,
+        ));
+        match self.slots.write().unwrap().entry(slot_name.clone()) {
+            std::collections::btree_map::Entry::Occupied(e) => {
+                // lost a provisioning race; still idempotent on match
+                if matches(e.get()) {
+                    Ok(e.get().info(false))
+                } else {
+                    Err(Error::Proto(format!(
+                        "column slot `{slot_name}` already exists with different geometry"
+                    )))
+                }
+            }
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(slot.clone());
+                Ok(slot.info(false))
+            }
+        }
+    }
+
+    /// Stage one replicated shard slice on this host
+    /// ([`ModelCmd::PutShard`], the follower side of
+    /// [`crate::dist::replicate`]): CRC-checked against the pushed
+    /// record and parse-checked as `CWKP` **before** the
+    /// content-addressed file is written. Staging never touches a
+    /// serving slot — only [`ModelRegistry::put_manifest`] commits a
+    /// generation.
+    pub fn put_shard(&self, name: &str, index: usize, crc: u32, bytes: &[u8]) -> Result<()> {
+        check_name(name)?;
+        let path = self.ckpt_path_required(name)?;
+        if crc32(bytes) != crc {
+            return Err(Error::Checkpoint(format!(
+                "replicated shard {index} for `{name}` fails its CRC (corrupt in transit?)"
+            )));
+        }
+        Checkpoint::from_bytes(bytes)
+            .map_err(|e| Error::Checkpoint(format!("replicated shard {index}: {e}")))?;
+        write_atomic(&shard_path(&path, index, crc), bytes)?;
+        self.metrics.incr("shards_replicated", 1);
+        Ok(())
+    }
+
+    /// Commit a replicated `CWKS` generation on this host
+    /// ([`ModelCmd::PutManifest`]): every slice the manifest names
+    /// must already be staged, byte-intact (re-CRC'd from disk),
+    /// parseable and geometry-consistent — **then** the manifest
+    /// itself is written (the atomic commit point) and superseded
+    /// generations are swept. Any defect rejects the whole generation
+    /// as a unit and the previously committed one keeps serving; a
+    /// half-pushed generation can never become loadable.
+    pub fn put_manifest(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        check_name(name)?;
+        let path = self.ckpt_path_required(name)?;
+        let m = ShardManifest::from_bytes(bytes)
+            .map_err(|e| Error::Checkpoint(format!("replicated manifest for `{name}`: {e}")))?;
+        for (i, entry) in m.shards.iter().enumerate() {
+            let spath = shard_path(&path, i, entry.file_crc);
+            let staged = std::fs::read(&spath).map_err(|e| {
+                Error::Checkpoint(format!(
+                    "generation incomplete: shard {i} ({}) unreadable: {e}",
+                    spath.display()
+                ))
+            })?;
+            if crc32(&staged) != entry.file_crc {
+                return Err(Error::Checkpoint(format!(
+                    "{} does not match the replicated manifest (corrupt on disk?)",
+                    spath.display()
+                )));
+            }
+            let ckpt = Checkpoint::from_bytes(&staged)
+                .map_err(|e| Error::Checkpoint(format!("{}: {e}", spath.display())))?;
+            let cols = (entry.end - entry.start) as usize;
+            if (ckpt.n as usize, ckpt.c as usize) != (m.n as usize, cols) {
+                return Err(Error::Checkpoint(format!(
+                    "{} is [{}, {}], manifest entry {i} wants [{cols}, {}]",
+                    spath.display(),
+                    ckpt.c,
+                    ckpt.n,
+                    m.n
+                )));
+            }
+        }
+        write_atomic(&path, bytes)?;
+        crate::shard::manifest::sweep_stale_shards(&path, &m);
+        self.metrics.incr("generations_replicated", 1);
+        Ok(())
+    }
+
+    /// A model's full weights as raw `CWKP` bytes
+    /// ([`ModelCmd::FetchCkpt`]) — how the coordinator audits what a
+    /// (resumed) shard host actually serves.
+    pub fn fetch_ckpt(&self, name: &str) -> Result<Vec<u8>> {
+        self.slot(Some(name))?.checkpoint()?.to_bytes()
+    }
+
+    /// Hot-swap a model's weights from pushed `CWKP` bytes
+    /// ([`ModelCmd::PutCkpt`]) — the remote flavor of `Load`, with the
+    /// same geometry gates and keep-old-weights-on-failure contract.
+    pub fn put_ckpt(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let ckpt = Checkpoint::from_bytes(bytes)?;
+        self.slot(Some(name))?.restore(&ckpt)
     }
 
     /// Stop serving a (non-default) model. The slot leaves the routing
@@ -764,6 +1057,35 @@ impl ModelRegistry {
             ModelCmd::Unload { name } => self
                 .unload(&name)
                 .map(|_| AdminReply::Ok(format!("unloaded {name}"))),
+            ModelCmd::CreateColumns {
+                name,
+                index,
+                n,
+                theta,
+                seed,
+                start,
+                end,
+            } => self
+                .create_columns(&name, index, n, theta, seed, start, end)
+                .map(|info| AdminReply::Models(vec![info])),
+            ModelCmd::FetchCkpt { name } => self.fetch_ckpt(&name).map(AdminReply::Ckpt),
+            ModelCmd::PutCkpt { name, bytes } => self
+                .put_ckpt(&name, &bytes)
+                .map(|_| AdminReply::Ok(format!("restored {name} from pushed checkpoint"))),
+            ModelCmd::PutShard {
+                name,
+                index,
+                crc,
+                bytes,
+            } => self.put_shard(&name, index, crc, &bytes).map(|_| {
+                AdminReply::Ok(format!(
+                    "staged shard {index} of {name} ({} bytes)",
+                    bytes.len()
+                ))
+            }),
+            ModelCmd::PutManifest { name, bytes } => self
+                .put_manifest(&name, &bytes)
+                .map(|_| AdminReply::Ok(format!("committed replicated generation of {name}"))),
         };
         match reply {
             Ok(r) => Outcome::Admin(r),
@@ -835,13 +1157,82 @@ impl ModelRegistry {
     }
 }
 
+/// Model-name gate — allowlist, not blocklist: names become filesystem
+/// components (`<name>.ckpt`), text-protocol tokens (`@name `) and
+/// stats keys (`model.<name>.<counter>=v`), so anything beyond
+/// [A-Za-z0-9_-] would corrupt one of those grammars ('=' breaks
+/// key=value, '.' aliases into another model's stats namespace).
+fn check_name(name: &str) -> Result<()> {
+    let ok = !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-');
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::Proto(format!(
+            "bad model name `{name}` (use [A-Za-z0-9_-]+)"
+        )))
+    }
+}
+
+/// Read + verify one slice of a replicated `CWKS` generation on this
+/// host (the resume path of [`ModelRegistry::create_columns`]): the
+/// manifest entry must cover exactly the asked slice, the staged file
+/// must re-hash to the manifest's CRC and parse with the slice's
+/// geometry — a standby never resumes from a generation it cannot
+/// prove intact.
+fn replicated_slice(
+    path: &Path,
+    index: usize,
+    n: usize,
+    start: usize,
+    end: usize,
+) -> Result<Tensor> {
+    let m = ShardManifest::read(path)?;
+    let entry = m.shards.get(index).ok_or_else(|| {
+        Error::Checkpoint(format!(
+            "replicated manifest {} has no shard {index}",
+            path.display()
+        ))
+    })?;
+    if (entry.start as usize, entry.end as usize, m.n as usize) != (start, end, n) {
+        return Err(Error::Checkpoint(format!(
+            "replicated shard {index} covers [{}, {}) of width {}, slot wants [{start}, {end}) \
+             of width {n}",
+            entry.start, entry.end, m.n
+        )));
+    }
+    let spath = shard_path(path, index, entry.file_crc);
+    let bytes = std::fs::read(&spath)
+        .map_err(|e| Error::Checkpoint(format!("read {}: {e}", spath.display())))?;
+    if crc32(&bytes) != entry.file_crc {
+        return Err(Error::Checkpoint(format!(
+            "{} does not match its replicated manifest",
+            spath.display()
+        )));
+    }
+    let ckpt = Checkpoint::from_bytes(&bytes)
+        .map_err(|e| Error::Checkpoint(format!("{}: {e}", spath.display())))?;
+    if (ckpt.n as usize, ckpt.c as usize) != (n, end - start) {
+        return Err(Error::Checkpoint(format!(
+            "{} is [{}, {}], shard {index} wants [{}, {n}]",
+            spath.display(),
+            ckpt.c,
+            ckpt.n,
+            end - start
+        )));
+    }
+    Tensor::new(vec![end - start, n], ckpt.weights)
+}
+
 /// Emit each shard engine's own counters/hists (plus its column count)
 /// under `<prefix>.<i>.*` — shared by the aggregate snapshot
 /// (`model.<name>.shard.<i>.*`) and the per-model one (`shard.<i>.*`)
 /// so the two views cannot drift.
 fn insert_shard_rows(out: &mut StatsSnapshot, sharded: &ShardedModel, prefix: &str, full: bool) {
     for i in 0..sharded.plan.k {
-        let shard_snap = sharded.shard_handle(i).metrics.snapshot(full);
+        let shard_snap = sharded.shard_metrics(i).snapshot(full);
         for (k, v) in &shard_snap.counters {
             out.counters.insert(format!("{prefix}.{i}.{k}"), *v);
         }

@@ -45,7 +45,7 @@ use crate::registry::{ModelRegistry, RegistryConfig};
 use crate::volley::{self, SpikeVolley, VolleyResult};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -78,10 +78,15 @@ impl ServerCore {
     }
 
     /// The multi-model constructor: dispatch into an existing registry.
+    /// A standby shard host's registry ([`ModelRegistry::standby`])
+    /// boots with no default model — nothing exists until a
+    /// coordinator provisions it over the wire — so the ACK then
+    /// advertises a zero geometry instead of refusing to serve.
     pub fn with_registry(registry: Arc<ModelRegistry>) -> ServerCore {
-        let slot = registry.slot(None).expect("registry has a default model");
-        let default_geometry = (slot.n(), slot.c(), slot.t_max());
-        drop(slot);
+        let default_geometry = match registry.slot(None) {
+            Ok(slot) => (slot.n(), slot.c(), slot.t_max()),
+            Err(_) => (0, 0, 0),
+        };
         ServerCore {
             registry,
             default_geometry,
@@ -136,7 +141,16 @@ impl ServerCore {
                     // is spent; the permit spans the batched run so the
                     // lane's in-flight count tracks real load
                     Ok(slot) => match slot.admit(learn, req.volleys.len()) {
-                        Ok(_permit) => slot.run_batched(learn, req.volleys, deadline),
+                        // a gated LEARN (the distributed two-phase
+                        // protocol's phase 2) bypasses the batcher and
+                        // applies the caller-supplied global gates
+                        Ok(_permit) => match req.gates {
+                            Some(gates) if learn => slot.run_gated(req.volleys, gates, deadline),
+                            Some(_) => {
+                                Outcome::Error("gates ride only on LEARN requests".into())
+                            }
+                            None => slot.run_batched(learn, req.volleys, deadline),
+                        },
                         Err(Error::Busy { retry_after_ms }) => Outcome::Busy { retry_after_ms },
                         Err(e) => Outcome::Error(e.to_string()),
                     },
@@ -196,6 +210,12 @@ impl ServerCore {
 pub struct Server {
     core: Arc<ServerCore>,
     stop: Arc<AtomicBool>,
+    /// Global concurrent-connection cap (`--max-conns`); `None` =
+    /// unlimited (the pre-cap behavior).
+    max_conns: Option<usize>,
+    /// Live connection count, shared with every connection's
+    /// [`ConnGuard`].
+    live: Arc<AtomicUsize>,
 }
 
 impl Server {
@@ -203,6 +223,8 @@ impl Server {
         Server {
             core: Arc::new(ServerCore::new(service, cfg)),
             stop: Arc::new(AtomicBool::new(false)),
+            max_conns: None,
+            live: Arc::new(AtomicUsize::new(0)),
         }
     }
 
@@ -211,7 +233,19 @@ impl Server {
         Server {
             core: Arc::new(ServerCore::with_registry(registry)),
             stop: Arc::new(AtomicBool::new(false)),
+            max_conns: None,
+            live: Arc::new(AtomicUsize::new(0)),
         }
+    }
+
+    /// Cap concurrent connections (`repro serve --max-conns N`):
+    /// connection N+1 is answered with the codec-appropriate BUSY
+    /// shape — the same first-class refusal the QoS gate sheds with —
+    /// and closed, instead of spawning an unbounded handler thread.
+    /// `0` means unlimited.
+    pub fn with_max_conns(mut self, n: usize) -> Server {
+        self.max_conns = (n > 0).then_some(n);
+        self
     }
 
     /// Handle for shutting the accept loop down from another thread.
@@ -254,9 +288,25 @@ impl Server {
             }
             match listener.accept() {
                 Ok((stream, _)) => {
+                    // connection cap: over-cap connections get a typed
+                    // BUSY refusal on whichever codec they speak —
+                    // never a silent close, never an unbounded spawn
+                    if self
+                        .max_conns
+                        .is_some_and(|cap| self.live.load(Ordering::Acquire) >= cap)
+                    {
+                        registry.metrics.incr("connections_refused", 1);
+                        let retry_ms = registry.retry_hint_ms();
+                        workers.push(std::thread::spawn(move || {
+                            let _ = refuse_conn(stream, retry_ms);
+                        }));
+                        continue;
+                    }
+                    let guard = ConnGuard::enter(self.live.clone());
                     let core = self.core.clone();
                     let stop = self.stop.clone();
                     workers.push(std::thread::spawn(move || {
+                        let _guard = guard;
                         let _ = handle_conn(stream, core, stop);
                     }));
                 }
@@ -282,6 +332,54 @@ impl Server {
         match fatal {
             Some(e) => Err(e),
             None => Ok(()),
+        }
+    }
+}
+
+/// RAII live-connection count: incremented at accept, decremented when
+/// the connection thread exits however it exits (clean BYE, EOF, codec
+/// error, panic unwind) — the connection cap can never leak slots.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl ConnGuard {
+    fn enter(live: Arc<AtomicUsize>) -> ConnGuard {
+        live.fetch_add(1, Ordering::AcqRel);
+        ConnGuard(live)
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Answer an over-cap connection with the codec-appropriate BUSY
+/// shape, then close. Short socket timeouts bound the sniff — a
+/// slow-loris connect cannot pin refusal threads while the cap is hit.
+fn refuse_conn(stream: TcpStream, retry_ms: u32) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut head = [0u8; 4];
+    match read_head(&mut reader, &mut head)? {
+        0 => Ok(()),
+        4 if head == frame::MAGIC => {
+            // consume the HELLO so the client's first read is this
+            // refusal, not a reset mid-handshake; the reply rides the
+            // degraded (error-form) BUSY because no version was
+            // negotiated — every client version can decode it, and
+            // FramedClient::connect surfaces it as the typed
+            // handshake rejection
+            let _ = frame::read_frame_after_magic(&mut reader)?;
+            send_response(&mut out, &Response::busy(0, retry_ms).degrade_busy())
+        }
+        _ => {
+            // text: the same first-class BUSY line the QoS shed uses
+            out.write_all(format!("BUSY {retry_ms}\n").as_bytes())?;
+            out.flush()?;
+            Ok(())
         }
     }
 }
@@ -391,11 +489,13 @@ fn serve_framed(
                 // never be answered with a v3-only status byte)
                 Ok(req)
                     if version < 3
-                        && (req.opts.model.is_some() || matches!(req.op, Op::Admin(_))) =>
+                        && (req.opts.model.is_some()
+                            || req.gates.is_some()
+                            || matches!(req.op, Op::Admin(_))) =>
                 {
                     Response::error(
                         req.id,
-                        "model routing and admin ops need protocol v3 \
+                        "model routing, admin ops and learn gates need protocol v3 \
                          (this connection negotiated v2)",
                     )
                 }
@@ -888,10 +988,13 @@ impl FramedClient {
                 // v3 constructs must not reach a v2-negotiated peer —
                 // it would reject the flags/op; fail typed client-side
                 if self.version < 3
-                    && (req.opts.model.is_some() || matches!(req.op, Op::Admin(_)))
+                    && (req.opts.model.is_some()
+                        || req.gates.is_some()
+                        || matches!(req.op, Op::Admin(_)))
                 {
                     return Err(Error::Proto(format!(
-                        "negotiated protocol v{} cannot carry model routing or admin ops",
+                        "negotiated protocol v{} cannot carry model routing, admin ops \
+                         or learn gates",
                         self.version
                     )));
                 }
@@ -975,7 +1078,11 @@ impl FramedClient {
 
     // ------------------------------------------ registry admin (v3)
 
-    fn call_admin(&mut self, cmd: ModelCmd) -> Result<AdminReply> {
+    /// One admin round-trip to a typed [`AdminReply`] (an error
+    /// outcome becomes the typed server error). Public because the
+    /// distributed shard tier drives provisioning and replication
+    /// through raw [`ModelCmd`]s ([`crate::dist`]).
+    pub fn call_admin(&mut self, cmd: ModelCmd) -> Result<AdminReply> {
         let resp = self.call(Request::admin(cmd))?;
         resp.admin().cloned()
     }
@@ -1046,6 +1153,22 @@ impl FramedClient {
         let req =
             Request::learn(vec![SpikeVolley::dense(volley.to_vec())]).with_model(model);
         single_result(self.call(req)?)
+    }
+
+    /// Gated learning step routed to a named model — the distributed
+    /// two-phase protocol's phase 2 ([`Request::with_gates`]): the
+    /// caller supplies the global STDP gates, one f32 per
+    /// (volley, column) of the addressed model, and the host applies
+    /// exactly them to its slice.
+    pub fn learn_gated(
+        &mut self,
+        model: &str,
+        volleys: Vec<SpikeVolley>,
+        gates: Vec<f32>,
+    ) -> Result<Vec<VolleyResult>> {
+        let req = Request::learn(volleys).with_model(model).with_gates(gates);
+        let resp = self.call(req)?;
+        Ok(resp.results()?.to_vec())
     }
 
     /// Typed stats for one model only (plain, unprefixed keys).

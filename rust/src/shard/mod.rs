@@ -1,5 +1,5 @@
 //! Sharded-model execution: scatter/gather column sharding of one TNN
-//! model across K parallel engines.
+//! model across K parallel engines — in one process or across hosts.
 //!
 //! The paper's column is an array of independent RNL neurons — each
 //! output column owns a private weight row and sees the full input
@@ -8,19 +8,29 @@
 //! independent neuron lanes behind one shared input bus, and this module
 //! is that shape in the serving stack (DESIGN.md §2.4): a model's `c`
 //! output columns partition into K contiguous shards, each served by
-//! its own engine thread, with one thin scatter/gather layer re-running
+//! its own engine, with one thin scatter/gather layer re-running
 //! the global winner selection over the concatenated per-shard times:
 //!
 //! ```text
-//!              ┌ shard 0: cols 0..6   TnnHandle + DynamicBatcher ┐
-//!  volley ──►  ├ shard 1: cols 6..11  TnnHandle + DynamicBatcher ┤ ──► gather:
-//!  (scatter    └ shard 2: cols 11..16 TnnHandle + DynamicBatcher ┘     concat times,
-//!   to all)                                                            global argmin
+//!              ┌ shard 0: cols 0..6   ShardTransport (inproc or tcp) ┐
+//!  volley ──►  ├ shard 1: cols 6..11  ShardTransport (inproc or tcp) ┤ ──► gather:
+//!  (scatter    └ shard 2: cols 11..16 ShardTransport (inproc or tcp) ┘     concat times,
+//!   to all)                                                               global argmin
 //! ```
+//!
+//! Where a shard *runs* is behind [`crate::dist::ShardTransport`]
+//! (DESIGN.md §2.7): [`ShardedModel::open`] builds in-process shards
+//! (a column-range engine plus its private batcher, the PR 5 shape),
+//! [`ShardedModel::open_remote`] drives `repro serve` shard hosts over
+//! the framed v3 codec. Everything in this file — the scatter, the
+//! gather, the two-phase learn, the checkpoint format — is
+//! transport-agnostic, which is what makes the TCP path bit-identical
+//! to the in-process one.
 //!
 //! **Bit-identity contract.** A [`ShardedModel`] produces results
 //! byte-for-byte equal to the unsharded model it partitions
-//! (`rust/tests/shard.rs` gates this over TCP on both codecs):
+//! (`rust/tests/shard.rs` and `rust/tests/dist.rs` gate this over TCP
+//! on both codecs and both transports):
 //!
 //! * *Weights*: every shard initializes from the full `c × n` RNG walk
 //!   and keeps its slice ([`crate::coordinator::TnnHandle::open_columns`]),
@@ -36,39 +46,47 @@
 //!   gated update ([`crate::runtime::plan::KernelPlan::stdp_gated`]) with
 //!   each shard's slice of those gates. Each column's weights are
 //!   touched only by its own shard, and the accumulation arithmetic is
-//!   the unsharded kernel's loop restricted to the shard's rows.
+//!   the unsharded kernel's loop restricted to the shard's rows. Over
+//!   TCP the phases travel as ordinary Infer envelopes and gated Learn
+//!   envelopes (`FLAG_GATES`) — the gates are computed here, once,
+//!   globally, and the remote shard applies exactly them.
 //!
-//! Concurrency: a model-level read/write lock stands in for the
-//! atomicity one engine thread gave the unsharded model. Infers,
-//! weight snapshots and checkpoint saves hold it **shared** — they
-//! interleave freely (concurrent clients still coalesce into full
-//! backend batches in each shard's [`DynamicBatcher`]) but always
+//! Concurrency: a model-level read/write lock (the lock *around* the
+//! transport vector) stands in for the atomicity one engine thread
+//! gave the unsharded model. Infers, weight snapshots and checkpoint
+//! saves hold it **shared** — they interleave freely but always
 //! observe one consistent weight generation across all K shards.
-//! Learns and weight swaps hold it **exclusive**: the two phases of
-//! one learn must hit every shard in the same order, no infer may mix
-//! pre- and post-update shards into one reply, and no autosave may
-//! persist half a generation. A phase-2 failure on some shard (only
-//! possible when an engine is shut down mid-request) errors the whole
-//! chunk; shards that already applied it may then disagree until the
-//! next checkpoint load, exactly like a torn unsharded process death.
+//! Learns, weight swaps and failover hold it **exclusive**: the two
+//! phases of one learn must hit every shard in the same order, no
+//! infer may mix pre- and post-update shards into one reply, no
+//! autosave may persist half a generation, and no request may race a
+//! standby swap. A phase-2 failure on some shard (an engine shut down
+//! or a host dead mid-request) errors the whole chunk; shards that
+//! already applied it may then disagree until the next checkpoint load
+//! or failover, exactly like a torn unsharded process death.
 //!
 //! Checkpoints: a sharded model persists as K `CWKP` per-shard weight
 //! files tied together by one `CWKS` shard-manifest ([`manifest`]);
 //! partial, missing or mismatched shard files are rejected as a unit
-//! and the old weights keep serving.
+//! and the old weights keep serving. A remote model with standby hosts
+//! additionally **replicates** every committed generation to them
+//! ([`crate::dist::replicate`]) — which is what [`ShardedModel::failover`]
+//! resumes a dead shard's standby from.
 
 pub mod manifest;
 
-use crate::coordinator::{BatcherConfig, DynamicBatcher, EngineCall, Metrics, TnnHandle};
+use crate::coordinator::{BatcherConfig, DynamicBatcher, Metrics, TnnHandle};
+use crate::dist::{replicate, InProcessShard, RetryPolicy, ShardCall, ShardTransport, TcpShard};
 use crate::error::{Error, Result};
 use crate::registry::checkpoint::{crc32, write_atomic, Checkpoint};
 use crate::runtime::{BackendKind, Manifest, Tensor};
+use crate::server::ClientConfig;
 use crate::volley::{SpikeVolley, VolleyResult};
 use manifest::{shard_path, ShardEntry, ShardManifest};
 use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 /// Deterministic partition of `c` output columns into `k` contiguous
@@ -108,21 +126,36 @@ impl ShardPlan {
     }
 }
 
-/// One shard's serving machinery: the column-range engine plus its
-/// private infer batcher (the same pair a registry slot owns, minus the
-/// learn batcher — sharded learning is the two-phase protocol below,
-/// not a per-shard queue).
-struct ShardEngine {
-    handle: TnnHandle,
-    infer: DynamicBatcher,
+/// The remote-tier half of a [`ShardedModel`]: how to provision
+/// replacement transports and where the standby hosts are. `None` for
+/// an in-process model, which has no hosts to fail over to.
+struct RemoteState {
+    /// the model name shard hosts know the slices under
+    name: String,
+    client: ClientConfig,
+    retry: RetryPolicy,
+    /// Standby host pool, consumed LIFO by [`ShardedModel::failover`].
+    standbys: Mutex<Vec<String>>,
 }
 
-/// K column-shard engines behind one model-shaped face: same
+/// K column-shard transports behind one model-shaped face: same
 /// `infer`/`learn`/`weights`/`set_weights` surface as a single
-/// [`TnnHandle`] slot, same results bit for bit.
+/// [`TnnHandle`] slot, same results bit for bit — whether the shards
+/// are in-process engines or remote hosts.
 pub struct ShardedModel {
     pub plan: ShardPlan,
-    shards: Vec<ShardEngine>,
+    /// The K shard transports behind the model-level consistency lock.
+    /// **Shared** holders (infers, weight snapshots, checkpoint saves)
+    /// may interleave freely — they only read a stable weight
+    /// generation — while **exclusive** holders (learns, weight swaps,
+    /// failover) mutate it. Without it a concurrent infer could mix
+    /// pre- and post-update shards into a reply no consistent weight
+    /// matrix could produce, a learn's two phases could hit shards in
+    /// different orders, an autosave could persist a torn,
+    /// mixed-generation checkpoint whose fresh CRCs defeat the
+    /// loader's own mixed-generation gate, and an infer could scatter
+    /// onto a shard failover is half done replacing.
+    shards: RwLock<Vec<Arc<dyn ShardTransport>>>,
     /// column input width
     pub n: usize,
     /// total output columns (= `plan.c`)
@@ -132,25 +165,14 @@ pub struct ShardedModel {
     pub t_max: usize,
     pub theta: f32,
     pub seed: u64,
-    /// executing backend of the shard engines
+    /// executing backend of the shard engines (`"tcp"` for remote)
     pub backend: &'static str,
     pub artifacts_dir: PathBuf,
     /// Model-level counters/hists (requests, volleys, latency) — each
-    /// request is counted **once** here; the per-shard engine metrics
-    /// (which see every request K times) surface separately as
+    /// request is counted **once** here; the per-shard transport
+    /// metrics (which see every request K times) surface separately as
     /// `model.<name>.shard.<i>.*` stats rows.
     pub metrics: Arc<Metrics>,
-    /// Cross-shard consistency lock, standing in for the atomicity one
-    /// engine thread gave the unsharded model: **shared** holders
-    /// (infers, weight snapshots, checkpoint saves) may interleave
-    /// freely — they only read a stable weight generation — while
-    /// **exclusive** holders (learns, weight swaps) mutate it. Without
-    /// it a concurrent infer could mix pre- and post-update shards into
-    /// a reply no consistent weight matrix could produce, a learn's
-    /// two phases could hit shards in different orders, and an autosave
-    /// could persist a torn, mixed-generation checkpoint whose fresh
-    /// CRCs defeat the loader's own mixed-generation gate.
-    state_lock: RwLock<()>,
     /// Set by [`ShardedModel::drain`]: the model is unloaded; learns
     /// (which bypass the per-shard batchers) answer with the same
     /// typed error a closed batcher gives.
@@ -158,6 +180,8 @@ pub struct ShardedModel {
     /// Volleys per learn execution — mirrors the batcher's `max_batch`
     /// so a serial client's learn chunking matches the unsharded path.
     learn_chunk: usize,
+    /// Remote provisioning + standby pool; `None` in-process.
+    remote: Option<RemoteState>,
 }
 
 /// Owned per-shard copies of one scatter payload: K−1 clones plus the
@@ -173,9 +197,10 @@ fn scatter_payloads<T: Clone>(payload: Vec<T>, k: usize) -> Vec<Vec<T>> {
 }
 
 impl ShardedModel {
-    /// Open K column-shard engines over the manifest geometry for `n`.
-    /// Every shard shares `(n, theta, seed)` — the init RNG walk is the
-    /// full matrix in each engine, sliced to the shard's rows.
+    /// Open K in-process column-shard engines over the manifest
+    /// geometry for `n`. Every shard shares `(n, theta, seed)` — the
+    /// init RNG walk is the full matrix in each engine, sliced to the
+    /// shard's rows.
     pub fn open(
         dir: impl AsRef<Path>,
         n: usize,
@@ -193,16 +218,15 @@ impl ShardedModel {
             .find(|e| e.kind == "forward" && e.n == n)
             .ok_or_else(|| Error::Runtime(format!("no forward artifact for n={n}")))?;
         let plan = ShardPlan::new(entry.c, k)?;
-        let mut shards = Vec::with_capacity(k);
+        let mut shards: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(k);
+        let mut geo = None;
         for range in plan.ranges() {
-            let handle = TnnHandle::open_columns(&dir, n, theta, seed, range)?;
+            let handle = TnnHandle::open_columns(&dir, n, theta, seed, range.clone())?;
+            geo.get_or_insert((handle.b, handle.t_max, handle.backend));
             let infer = DynamicBatcher::start(handle.clone(), batcher);
-            shards.push(ShardEngine { handle, infer });
+            shards.push(Arc::new(InProcessShard::new(handle, infer, range)));
         }
-        let (b, t_max, backend) = {
-            let first = &shards[0].handle;
-            (first.b, first.t_max, first.backend)
-        };
+        let (b, t_max, backend) = geo.expect("a plan has at least one shard");
         Ok(ShardedModel {
             n,
             c: plan.c,
@@ -214,25 +238,106 @@ impl ShardedModel {
             artifacts_dir: dir,
             plan,
             metrics: Arc::new(Metrics::new()),
-            state_lock: RwLock::new(()),
+            shards: RwLock::new(shards),
             stopped: AtomicBool::new(false),
             learn_chunk: batcher.max_batch,
-            shards,
+            remote: None,
         })
     }
 
-    /// Shard `i`'s engine handle (per-shard metrics, weights for
-    /// checkpointing, tests).
-    pub fn shard_handle(&self, i: usize) -> &TnnHandle {
-        &self.shards[i].handle
+    /// Open the model's K column shards on remote `repro serve` hosts
+    /// (one host per shard, geometry from the local artifacts
+    /// manifest): connect with backoff, provision slot `<name>-s<i>`
+    /// on host `i` ([`crate::proto::ModelCmd::CreateColumns`] — the
+    /// host resumes the slice from its replicated generation if it
+    /// holds one), and serve through [`TcpShard`] transports.
+    /// `standbys` is the failover pool; `batcher` only contributes the
+    /// learn chunk size, for parity with the in-process path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn open_remote(
+        dir: impl AsRef<Path>,
+        name: &str,
+        n: usize,
+        theta: f32,
+        seed: u64,
+        hosts: &[String],
+        standbys: Vec<String>,
+        client: ClientConfig,
+        retry: RetryPolicy,
+        batcher: BatcherConfig,
+    ) -> Result<ShardedModel> {
+        let dir = dir.as_ref().to_path_buf();
+        let kind = BackendKind::from_env()?;
+        let m = Manifest::load_or_default(&dir, kind.requires_artifacts())?;
+        let entry = m
+            .entries
+            .iter()
+            .find(|e| e.kind == "forward" && e.n == n)
+            .ok_or_else(|| Error::Runtime(format!("no forward artifact for n={n}")))?;
+        let plan = ShardPlan::new(entry.c, hosts.len())?;
+        let mut shards: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(plan.k);
+        for (i, host) in hosts.iter().enumerate() {
+            let t = TcpShard::open(
+                host,
+                name,
+                i,
+                plan.range(i),
+                n,
+                m.t_max,
+                theta,
+                seed,
+                &client,
+                &retry,
+            )?;
+            shards.push(Arc::new(t));
+        }
+        Ok(ShardedModel {
+            n,
+            c: plan.c,
+            b: entry.b,
+            t_max: m.t_max,
+            theta,
+            seed,
+            backend: "tcp",
+            artifacts_dir: dir,
+            plan,
+            metrics: Arc::new(Metrics::new()),
+            shards: RwLock::new(shards),
+            stopped: AtomicBool::new(false),
+            learn_chunk: batcher.max_batch,
+            remote: Some(RemoteState {
+                name: name.to_string(),
+                client,
+                retry,
+                standbys: Mutex::new(standbys),
+            }),
+        })
     }
 
-    /// Scatter a volley batch to every shard's infer batcher, gather
-    /// the per-shard times, merge with a global winner re-selection.
-    /// One `Result` per volley in request order, like the batcher.
-    /// Holds the state lock **shared** for the whole scatter/gather, so
-    /// every reply is computed against one consistent weight
-    /// generation (concurrent infers still interleave and coalesce).
+    /// Shard `i`'s transport-level counters (stats rows, tests).
+    pub fn shard_metrics(&self, i: usize) -> Arc<Metrics> {
+        self.shards.read().unwrap()[i].metrics()
+    }
+
+    /// Indices of shards whose transport is known dead — candidates
+    /// for [`ShardedModel::failover`]. Always empty in-process.
+    pub fn failed_shards(&self) -> Vec<usize> {
+        self.shards
+            .read()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.failed())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Scatter a volley batch to every shard, gather the per-shard
+    /// times, merge with a global winner re-selection. One `Result`
+    /// per volley in request order, like the batcher. Holds the state
+    /// lock **shared** for the whole scatter/gather, so every reply is
+    /// computed against one consistent weight generation (concurrent
+    /// infers still interleave and coalesce).
     pub fn infer(
         &self,
         volleys: Vec<SpikeVolley>,
@@ -242,29 +347,28 @@ impl ShardedModel {
             return Vec::new();
         }
         let t0 = Instant::now();
-        let _shared = self.state_lock.read().unwrap();
+        let shards = self.shards.read().unwrap();
         if self.stopped.load(Ordering::Acquire) {
             return self.all_stopped(volleys.len());
         }
         let sparse = volleys.iter().filter(|v| v.is_sparse()).count() as u64;
         self.count_request(sparse, volleys.len() as u64 - sparse);
-        let k = self.shards.len();
+        let k = shards.len();
         // scatter: enqueue every shard before blocking on any
-        let pending: Vec<_> = self
-            .shards
+        let calls: Vec<ShardCall> = shards
             .iter()
             .zip(scatter_payloads(volleys, k))
-            .map(|(s, v)| s.infer.submit_many_deferred(v, deadline))
+            .map(|(s, v)| s.begin_infer(v, deadline))
             .collect();
         let parts: Vec<Vec<Result<VolleyResult>>> =
-            pending.into_iter().map(|p| p.wait()).collect();
+            calls.into_iter().map(|c| c.wait()).collect();
         let merged = self.gather(parts);
         let ok = merged.iter().filter(|r| r.is_ok()).count() as u64;
         self.metrics.incr("volleys_inferred", ok);
-        // expiries are detected at each shard batcher's drain (which
-        // counts them on the *shard* handle's metrics, K-fold); fold
-        // them into the model-level counter once, matched structurally
-        // on the typed variant, so `requests_expired` stays consistent
+        // expiries are detected at each shard's transport (which
+        // counts them on the *shard* metrics, K-fold); fold them into
+        // the model-level counter once, matched structurally on the
+        // typed variant, so `requests_expired` stays consistent
         // between single and sharded slots
         let expired = merged
             .iter()
@@ -352,14 +456,14 @@ impl ShardedModel {
                 }
                 return out;
             }
-            let _serial = self.state_lock.write().unwrap();
+            let shards = self.shards.write().unwrap();
             // checked under the lock: a learn parked on the lock while
             // drain ran must fail typed, not mutate an unloaded model
             if self.stopped.load(Ordering::Acquire) {
                 out.extend(self.all_stopped(chunk_len + rest.len()));
                 return out;
             }
-            match self.run_learn_chunk(chunk) {
+            match self.run_learn_chunk(&shards, chunk) {
                 Ok(results) => out.extend(results.into_iter().map(Ok)),
                 Err(e) => {
                     let msg = e.to_string();
@@ -378,19 +482,22 @@ impl ShardedModel {
     /// cannot change between phases — the caller holds the state lock
     /// exclusively), so the merged reply re-selects its winner from
     /// phase-2 times.
-    fn run_learn_chunk(&self, chunk: Vec<SpikeVolley>) -> Result<Vec<VolleyResult>> {
-        let k = self.shards.len();
+    fn run_learn_chunk(
+        &self,
+        shards: &[Arc<dyn ShardTransport>],
+        chunk: Vec<SpikeVolley>,
+    ) -> Result<Vec<VolleyResult>> {
+        let k = shards.len();
         let rows = chunk.len();
         // phase 1: locate every row's global winner (the chunk is
         // still needed for phase 2, so every shard gets a clone here)
-        let calls: Vec<EngineCall<Result<Vec<VolleyResult>>>> = self
-            .shards
+        let calls: Vec<ShardCall> = shards
             .iter()
-            .map(|s| s.handle.infer_deferred(chunk.clone()))
+            .map(|s| s.begin_forward(chunk.clone()))
             .collect::<Result<Vec<_>>>()?;
         let mut parts = Vec::with_capacity(k);
         for call in calls {
-            parts.push(call.wait()??);
+            parts.push(call.wait_all()?);
         }
         let winners: Vec<Option<usize>> = (0..rows)
             .map(|r| {
@@ -404,8 +511,7 @@ impl ShardedModel {
         // phase 2: scatter the gated update, each shard gated by its
         // slice of the global rule — winner column 1, globally silent
         // row all-1 (the search term), 0 otherwise
-        let calls: Vec<EngineCall<Result<Vec<VolleyResult>>>> = self
-            .shards
+        let calls: Vec<ShardCall> = shards
             .iter()
             .enumerate()
             .zip(scatter_payloads(chunk, k))
@@ -420,12 +526,12 @@ impl ShardedModel {
                         Some(_) => {}
                     }
                 }
-                s.handle.learn_gated_deferred(payload, gates)
+                s.begin_learn_gated(payload, gates)
             })
             .collect::<Result<Vec<_>>>()?;
         let mut parts = Vec::with_capacity(k);
         for call in calls {
-            parts.push(call.wait()??);
+            parts.push(call.wait_all()?);
         }
         Ok((0..rows)
             .map(|r| {
@@ -479,15 +585,15 @@ impl ShardedModel {
     /// plan order — read under the shared lock, so the snapshot is one
     /// consistent generation even while learns are in flight.
     pub fn weights(&self) -> Result<Tensor> {
-        let _shared = self.state_lock.read().unwrap();
-        self.weights_locked()
+        let shards = self.shards.read().unwrap();
+        self.weights_locked(&shards)
     }
 
     /// The concatenation itself (callers already holding a lock side).
-    fn weights_locked(&self) -> Result<Tensor> {
+    fn weights_locked(&self, shards: &[Arc<dyn ShardTransport>]) -> Result<Tensor> {
         let mut data = Vec::with_capacity(self.c * self.n);
-        for s in &self.shards {
-            data.extend_from_slice(&s.handle.weights()?.data);
+        for s in shards {
+            data.extend_from_slice(&s.weights()?.data);
         }
         Tensor::new(vec![self.c, self.n], data)
     }
@@ -501,14 +607,14 @@ impl ShardedModel {
                 w.shape, self.c, self.n
             )));
         }
-        let _serial = self.state_lock.write().unwrap();
-        for (i, s) in self.shards.iter().enumerate() {
+        let shards = self.shards.write().unwrap();
+        for (i, s) in shards.iter().enumerate() {
             let r = self.plan.range(i);
             let slice = Tensor::new(
                 vec![r.len(), self.n],
                 w.data[r.start * self.n..r.end * self.n].to_vec(),
             )?;
-            s.handle.set_weights(slice)?;
+            s.set_weights(slice)?;
         }
         Ok(())
     }
@@ -525,48 +631,71 @@ impl ShardedModel {
     /// shared lock: an autosave racing a learn must persist one weight
     /// generation, never a mix whose fresh CRCs would defeat the
     /// loader's mixed-generation gate.
+    ///
+    /// A remote model then pushes the committed generation to each
+    /// standby host ([`crate::dist::replicate`]), best-effort: a
+    /// follower that cannot be reached costs a `replication_errors`
+    /// count, not the save — the local commit already succeeded.
     pub fn save_checkpoints(&self, path: &Path) -> Result<()> {
-        let _shared = self.state_lock.read().unwrap();
-        let mut entries = Vec::with_capacity(self.plan.k);
-        for (i, s) in self.shards.iter().enumerate() {
-            let range = self.plan.range(i);
-            let bytes = Checkpoint {
+        {
+            let shards = self.shards.read().unwrap();
+            let mut entries = Vec::with_capacity(self.plan.k);
+            for (i, s) in shards.iter().enumerate() {
+                let range = self.plan.range(i);
+                let bytes = Checkpoint {
+                    n: self.n as u32,
+                    c: range.len() as u32,
+                    t_max: self.t_max as u32,
+                    theta: self.theta,
+                    seed: self.seed,
+                    weights: s.weights()?.data,
+                }
+                .to_bytes()?;
+                let crc = crc32(&bytes);
+                write_atomic(&shard_path(path, i, crc), &bytes)?;
+                entries.push(ShardEntry {
+                    start: range.start as u32,
+                    end: range.end as u32,
+                    file_crc: crc,
+                });
+            }
+            let m = ShardManifest {
                 n: self.n as u32,
-                c: range.len() as u32,
+                c: self.c as u32,
                 t_max: self.t_max as u32,
                 theta: self.theta,
                 seed: self.seed,
-                weights: s.handle.weights()?.data,
-            }
-            .to_bytes()?;
-            let crc = crc32(&bytes);
-            write_atomic(&shard_path(path, i, crc), &bytes)?;
-            entries.push(ShardEntry {
-                start: range.start as u32,
-                end: range.end as u32,
-                file_crc: crc,
-            });
+                shards: entries,
+            };
+            m.save(path)?;
+            manifest::sweep_stale_shards(path, &m);
         }
-        let m = ShardManifest {
-            n: self.n as u32,
-            c: self.c as u32,
-            t_max: self.t_max as u32,
-            theta: self.theta,
-            seed: self.seed,
-            shards: entries,
-        };
-        m.save(path)?;
-        manifest::sweep_stale_shards(path, &m);
+        // replication runs outside the lock — the generation is
+        // committed locally; followers catch up without blocking
+        // serving traffic
+        if let Some(remote) = &self.remote {
+            let followers = remote.standbys.lock().unwrap().clone();
+            for host in followers {
+                match replicate(&host, &remote.client, &remote.retry, &remote.name, path) {
+                    Ok(()) => self.metrics.incr("replications", 1),
+                    Err(e) => {
+                        self.metrics.incr("replication_errors", 1);
+                        eprintln!("replication to {host} failed: {e}");
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
-    /// Restore from a `CWKS` manifest at `path`: every shard file is
-    /// read and verified (manifest CRC, per-file CRC against the
-    /// manifest's record, geometry against this model's plan) **before**
-    /// any engine is touched — missing, truncated, corrupt or
-    /// foreign-save shard files reject the load as a unit and the old
-    /// weights keep serving.
-    pub fn load_checkpoints(&self, path: &Path) -> Result<()> {
+    /// Read and fully verify a `CWKS` generation at `path` without
+    /// touching any engine: manifest CRC, shard count and ranges
+    /// against this model's plan, every shard file's bytes against the
+    /// manifest's CRC record, every slice's geometry. The verification
+    /// half of [`ShardedModel::load_checkpoints`], shared with
+    /// [`ShardedModel::failover`] — both must reject a partial,
+    /// corrupt or foreign generation as a unit.
+    fn verified_slices(&self, path: &Path) -> Result<Vec<Tensor>> {
         let m = ShardManifest::read(path)?;
         if (m.n as usize, m.c as usize) != (self.n, self.c) {
             return Err(Error::Checkpoint(format!(
@@ -616,39 +745,127 @@ impl ShardedModel {
             }
             slices.push(Tensor::new(vec![range.len(), self.n], ckpt.weights)?);
         }
+        Ok(slices)
+    }
+
+    /// Restore from a `CWKS` manifest at `path`: every shard file is
+    /// read and verified (manifest CRC, per-file CRC against the
+    /// manifest's record, geometry against this model's plan) **before**
+    /// any engine is touched — missing, truncated, corrupt or
+    /// foreign-save shard files reject the load as a unit and the old
+    /// weights keep serving.
+    pub fn load_checkpoints(&self, path: &Path) -> Result<()> {
+        let slices = self.verified_slices(path)?;
         // everything verified; swap exclusively — no infer, learn or
         // save may observe the matrix half-replaced
-        let _serial = self.state_lock.write().unwrap();
-        for (s, w) in self.shards.iter().zip(slices) {
-            s.handle.set_weights(w)?;
+        let shards = self.shards.write().unwrap();
+        for (s, w) in shards.iter().zip(slices) {
+            s.set_weights(w)?;
         }
         Ok(())
     }
 
+    /// Replace every failed shard's transport with a standby host
+    /// resumed from the committed generation at `ckpt_path` (the
+    /// replicated `CWKS` manifest), then roll **all** shards back to
+    /// that generation — learns applied after the last committed save
+    /// are lost, exactly crash-restart semantics, and exactly why the
+    /// chaos contract is "old weights never regress *past a commit*".
+    ///
+    /// The swap is gated hard on the replica: the standby is
+    /// provisioned (it resumes from its own replicated slice), its
+    /// resumed weights are fetched and must match the committed slice
+    /// **bit for bit** — a standby that never got the generation, or
+    /// got a corrupted one, is a typed error, not a silent divergence.
+    ///
+    /// Runs under the exclusive lock; requests in the window keep
+    /// getting the failed transport's typed errors, never hangs.
+    /// Returns how many shards were failed over (0 = nothing failed).
+    pub fn failover(&self, ckpt_path: &Path) -> Result<usize> {
+        let remote = self.remote.as_ref().ok_or_else(|| {
+            Error::Coordinator(
+                "failover needs a remote sharded model (in-process shards have no standby hosts)"
+                    .into(),
+            )
+        })?;
+        let slices = self.verified_slices(ckpt_path)?;
+        let mut shards = self.shards.write().unwrap();
+        let failed: Vec<usize> = shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.failed())
+            .map(|(i, _)| i)
+            .collect();
+        if failed.is_empty() {
+            return Ok(0);
+        }
+        for &i in &failed {
+            let host = remote.standbys.lock().unwrap().pop().ok_or_else(|| {
+                Error::Coordinator(format!("no standby host left to take over shard {i}"))
+            })?;
+            let t = TcpShard::open(
+                &host,
+                &remote.name,
+                i,
+                self.plan.range(i),
+                self.n,
+                self.t_max,
+                self.theta,
+                self.seed,
+                &remote.client,
+                &remote.retry,
+            )?;
+            let resumed = t.weights()?;
+            let committed = &slices[i];
+            let bit_match = resumed.data.len() == committed.data.len()
+                && resumed
+                    .data
+                    .iter()
+                    .zip(&committed.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+            if !bit_match {
+                return Err(Error::Checkpoint(format!(
+                    "standby {host} resumed shard {i} with weights that do not match \
+                     the committed generation"
+                )));
+            }
+            shards[i].shutdown();
+            shards[i] = Arc::new(t);
+            self.metrics.incr("failovers", 1);
+        }
+        // roll the surviving shards back to the committed generation
+        // too — the model must serve one generation, not a mix of
+        // committed (standby) and post-commit (survivor) weights
+        for (s, w) in shards.iter().zip(slices) {
+            s.set_weights(w)?;
+        }
+        Ok(failed.len())
+    }
+
     /// Drain for unload: flag the model stopped (learns bypass the
     /// batchers, so they check it under the state lock and fail typed),
-    /// shut the shard infer batchers down (queued work flushes, later
+    /// shut the shard transports down (queued work flushes, later
     /// submitters get typed errors), then wait out whatever holds the
     /// state lock — after this returns, nothing mutates the model
     /// again.
     pub fn drain(&self) {
         self.stopped.store(true, Ordering::Release);
-        for s in &self.shards {
-            s.infer.shutdown();
+        for s in self.shards.read().unwrap().iter() {
+            s.shutdown();
         }
-        drop(self.state_lock.write().unwrap());
+        drop(self.shards.write().unwrap());
     }
 
-    /// Chaos-harness fault: shut down one shard's infer batcher while
-    /// the rest of the model keeps running. Queued work on that shard
+    /// Chaos-harness fault: shut down one shard's transport while the
+    /// rest of the model keeps running. Queued work on that shard
     /// flushes, later infers that scatter onto it gather a typed
-    /// "batcher is shut down" error — so a killed shard degrades the
-    /// model to typed errors, never to hangs or silent drops (the
-    /// contract `qos::replay::chaos_run` asserts). The model-level
-    /// state lock and the other shards are untouched; there is no
-    /// resurrect — unload the slot to recover.
+    /// error — so a killed shard degrades the model to typed errors,
+    /// never to hangs or silent drops (the contract
+    /// `qos::replay::chaos_run` asserts). The model-level state lock
+    /// and the other shards are untouched; recovery is
+    /// [`ShardedModel::failover`] (remote) or unloading the slot.
     pub fn kill_shard(&self, i: usize) {
-        self.shards[i].infer.shutdown();
+        self.shards.read().unwrap()[i].shutdown();
     }
 }
 

@@ -1,0 +1,628 @@
+//! Distributed shard tier end-to-end: remote shards over the
+//! [`catwalk::dist::ShardTransport`] seam vs the in-process and
+//! unsharded baselines (the bit-identity acceptance gate), checkpoint
+//! replication to follower hosts, standby failover after a killed
+//! shard host, the reconnect retry schedule, the global connection cap
+//! on both codecs, and the v3-only learn-gates surface.
+
+use catwalk::coordinator::{BatcherConfig, TnnHandle};
+use catwalk::dist::{connect_backoff, replicate, retry_with, RetryPolicy};
+use catwalk::error::Error;
+use catwalk::proto::frame;
+use catwalk::proto::{AdminReply, ModelCmd, Outcome, Request};
+use catwalk::qos::replay::{boot_shard_host, ShardHost};
+use catwalk::qos::QosConfig;
+use catwalk::registry::checkpoint::Checkpoint;
+use catwalk::registry::{ModelRegistry, RegistryConfig};
+use catwalk::rng::Xoshiro256;
+use catwalk::runtime::BackendKind;
+use catwalk::server::{ClientConfig, FramedClient, Server};
+use catwalk::shard::manifest::ShardManifest;
+use catwalk::shard::ShardedModel;
+use catwalk::volley::VolleyResult;
+use catwalk::SpikeVolley;
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native_env() -> bool {
+    matches!(BackendKind::from_env(), Ok(BackendKind::Native))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("catwalk-dist-e2e-{tag}-{}", std::process::id()))
+}
+
+/// Short socket timeouts so a regression toward hanging fails the
+/// suite quickly instead of wedging it.
+fn client_cfg() -> ClientConfig {
+    ClientConfig {
+        read_timeout: Some(Duration::from_secs(5)),
+        write_timeout: Some(Duration::from_secs(5)),
+        ..ClientConfig::default()
+    }
+}
+
+/// A tight schedule: tests should not sleep out a production backoff.
+fn retry_cfg() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 3,
+        base: Duration::from_millis(5),
+        max: Duration::from_millis(20),
+        jitter: 0.2,
+        seed: 7,
+    }
+}
+
+fn boot_host(dir: &PathBuf, tag: &str) -> ShardHost {
+    boot_shard_host(
+        std::path::Path::new("/no-such-dir"),
+        &dir.join(tag),
+        QosConfig::default(),
+    )
+    .unwrap()
+}
+
+fn random_volleys(rng: &mut Xoshiro256, rows: usize, n: usize, density: f64) -> Vec<SpikeVolley> {
+    (0..rows)
+        .map(|_| {
+            SpikeVolley::dense(
+                (0..n)
+                    .map(|_| {
+                        if rng.gen_bool(density) {
+                            (rng.gen_f64() * 8.0) as f32
+                        } else {
+                            16.0
+                        }
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn result_bits(r: &VolleyResult) -> (Option<usize>, Vec<u32>) {
+    (r.winner, r.times.iter().map(|t| t.to_bits()).collect())
+}
+
+fn unwrap_bits(rs: Vec<catwalk::Result<VolleyResult>>) -> Vec<(Option<usize>, Vec<u32>)> {
+    rs.into_iter().map(|r| result_bits(&r.unwrap())).collect()
+}
+
+// ------------------------------------------------------ retry schedule
+
+/// The reconnect schedule is pinned by an injected clock: no wall-time
+/// sleeps, the exact jittered delays, bounded attempts — and
+/// [`connect_backoff`] against a dead address surfaces the last typed
+/// connect error after exactly `attempts` tries.
+#[test]
+fn retry_schedule_is_deterministic_under_injected_clock() {
+    let p = retry_cfg();
+    assert_eq!(p.delays(), p.delays(), "schedule is a pure function of the policy");
+    assert_eq!(p.delays().len(), (p.attempts - 1) as usize);
+
+    let mut slept: Vec<Duration> = Vec::new();
+    let mut attempts_seen = Vec::new();
+    let r: catwalk::Result<()> = retry_with(
+        &p,
+        |d| slept.push(d),
+        |attempt| {
+            attempts_seen.push(attempt);
+            Err(Error::Coordinator("host still down".into()))
+        },
+    );
+    assert!(r.is_err());
+    assert_eq!(attempts_seen, vec![0, 1, 2]);
+    assert_eq!(slept, p.delays(), "every sleep is exactly the scheduled delay");
+
+    // success mid-schedule stops both the calls and the sleeps
+    let mut slept = Vec::new();
+    let ok = retry_with(&p, |d| slept.push(d), |a| {
+        if a == 1 {
+            Ok("up")
+        } else {
+            Err(Error::Coordinator("not yet".into()))
+        }
+    });
+    assert_eq!(ok.unwrap(), "up");
+    assert_eq!(slept, p.delays()[..1].to_vec());
+
+    // a dead address: typed error, never a hang (the real sleeps here
+    // total ~15ms under the tight test policy)
+    let err = connect_backoff("127.0.0.1:1", &client_cfg(), &p).unwrap_err();
+    let msg = err.to_string();
+    assert!(!msg.is_empty());
+}
+
+// ------------------------------- bit-identity acceptance gate (remote)
+
+/// The tentpole contract: a model whose shards live on remote
+/// `repro serve --standby` hosts answers infer and multi-step learn
+/// **bit-identically** to the in-process sharded model and the
+/// unsharded engine, and its framed response bytes are byte-identical
+/// too. Save/restart/resume round-trips through the `CWKS` generation.
+#[test]
+fn remote_shards_match_in_process_and_unsharded_bitwise() {
+    if !native_env() {
+        return;
+    }
+    let scratch = temp_dir("bitident");
+    let _ = std::fs::remove_dir_all(&scratch);
+    let host_a = boot_host(&scratch, "host-a");
+    let host_b = boot_host(&scratch, "host-b");
+    let hosts = vec![host_a.addr.clone(), host_b.addr.clone()];
+
+    let (n, theta, seed) = (16usize, 6.0f32, 11u64);
+    let remote = ShardedModel::open_remote(
+        "/no-such-dir",
+        "dist",
+        n,
+        theta,
+        seed,
+        &hosts,
+        Vec::new(),
+        client_cfg(),
+        retry_cfg(),
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let local =
+        ShardedModel::open("/no-such-dir", n, theta, seed, 2, BatcherConfig::default()).unwrap();
+    let solo = TnnHandle::open("/no-such-dir", n, theta, seed).unwrap();
+
+    let mut rng = Xoshiro256::new(77);
+
+    // infer: all three produce the same bits, volley for volley
+    let vols = random_volleys(&mut rng, 10, n, 0.3);
+    let got_remote = unwrap_bits(remote.infer(vols.clone(), None));
+    let got_local = unwrap_bits(local.infer(vols.clone(), None));
+    let got_solo: Vec<_> = solo
+        .infer(vols.clone())
+        .unwrap()
+        .iter()
+        .map(result_bits)
+        .collect();
+    assert_eq!(got_remote, got_local, "remote infer == in-process infer");
+    assert_eq!(got_remote, got_solo, "remote infer == unsharded infer");
+
+    // ...and the *wire bytes* agree, not just the decoded structs
+    let to_frame = |bits: &[(Option<usize>, Vec<u32>)]| {
+        let rs: Vec<VolleyResult> = bits
+            .iter()
+            .map(|(w, t)| VolleyResult {
+                winner: *w,
+                times: t.iter().map(|b| f32::from_bits(*b)).collect(),
+            })
+            .collect();
+        frame::encode_response(&catwalk::proto::Response {
+            id: 42,
+            outcome: Outcome::Results(rs),
+        })
+        .unwrap()
+    };
+    assert_eq!(
+        to_frame(&got_remote),
+        to_frame(&got_solo),
+        "framed response payloads are byte-identical"
+    );
+
+    // multi-step learn: three rounds of the two-phase gated protocol,
+    // every returned result and the full weight matrix bit-identical
+    for round in 0..3 {
+        let lv = random_volleys(&mut rng, 6 + round, n, 0.25);
+        let lr = unwrap_bits(remote.learn(lv.clone(), None));
+        let ll = unwrap_bits(local.learn(lv.clone(), None));
+        let ls: Vec<_> = solo.learn(lv).unwrap().iter().map(result_bits).collect();
+        assert_eq!(lr, ll, "learn round {round}: remote == in-process");
+        assert_eq!(lr, ls, "learn round {round}: remote == unsharded");
+    }
+    let wbits = |t: &catwalk::runtime::Tensor| -> Vec<u32> {
+        t.data.iter().map(|w| w.to_bits()).collect()
+    };
+    let learned = wbits(&remote.weights().unwrap());
+    assert_eq!(learned, wbits(&local.weights().unwrap()));
+    assert_eq!(learned, wbits(&solo.weights().unwrap()));
+
+    // save/restart/resume: the remote model's CWKS generation restores
+    // a fresh in-process model to the same bits, and infers after the
+    // resume still agree
+    let coord = scratch.join("coord");
+    std::fs::create_dir_all(&coord).unwrap();
+    let ckpt = coord.join("dist.ckpt");
+    remote.save_checkpoints(&ckpt).unwrap();
+    let resumed =
+        ShardedModel::open("/no-such-dir", n, theta, seed, 2, BatcherConfig::default()).unwrap();
+    resumed.load_checkpoints(&ckpt).unwrap();
+    assert_eq!(learned, wbits(&resumed.weights().unwrap()), "resume is bit-exact");
+    let post = random_volleys(&mut rng, 4, n, 0.4);
+    assert_eq!(
+        unwrap_bits(remote.infer(post.clone(), None)),
+        unwrap_bits(resumed.infer(post, None)),
+        "post-resume infers agree"
+    );
+
+    drop(remote);
+    host_a.shutdown();
+    host_b.shutdown();
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+// ------------------------------------------------ replication (follower)
+
+/// A committed `CWKS` generation pushed with [`replicate`] is servable
+/// on the follower: provisioning the slices there resumes them from
+/// the replicated files, bit-identical to the coordinator's weights.
+#[test]
+fn replicate_pushes_generation_follower_resumes_it() {
+    if !native_env() {
+        return;
+    }
+    let scratch = temp_dir("replicate");
+    let _ = std::fs::remove_dir_all(&scratch);
+    let follower = boot_host(&scratch, "follower");
+
+    let (n, theta, seed) = (16usize, 6.0f32, 3u64);
+    let model =
+        ShardedModel::open("/no-such-dir", n, theta, seed, 2, BatcherConfig::default()).unwrap();
+    let mut rng = Xoshiro256::new(5);
+    for _ in 0..3 {
+        for r in model.learn(random_volleys(&mut rng, 8, n, 0.3), None) {
+            r.unwrap();
+        }
+    }
+    let coord = scratch.join("coord");
+    std::fs::create_dir_all(&coord).unwrap();
+    let ckpt = coord.join("rep.ckpt");
+    model.save_checkpoints(&ckpt).unwrap();
+
+    replicate(&follower.addr, &client_cfg(), &retry_cfg(), "rep", &ckpt).unwrap();
+
+    // provision each slice on the follower: it must resume from the
+    // replicated generation, and FetchCkpt must return the same bits
+    // the coordinator saved
+    let manifest = ShardManifest::read(&ckpt).unwrap();
+    let full = model.weights().unwrap();
+    let mut client = FramedClient::connect_with(&follower.addr, &client_cfg()).unwrap();
+    for (i, entry) in manifest.shards.iter().enumerate() {
+        let reply = client
+            .call_admin(ModelCmd::CreateColumns {
+                name: "rep".into(),
+                index: i,
+                n,
+                theta,
+                seed,
+                start: entry.start as usize,
+                end: entry.end as usize,
+            })
+            .unwrap();
+        assert!(matches!(reply, AdminReply::Models(ref ms) if ms.len() == 1));
+        let bytes = match client
+            .call_admin(ModelCmd::FetchCkpt { name: format!("rep-s{i}") })
+            .unwrap()
+        {
+            AdminReply::Ckpt(b) => b,
+            other => panic!("expected checkpoint bytes, got {other:?}"),
+        };
+        let slice = Checkpoint::from_bytes(&bytes).unwrap();
+        let want: Vec<u32> = full.data
+            [entry.start as usize * n..entry.end as usize * n]
+            .iter()
+            .map(|w| w.to_bits())
+            .collect();
+        let got: Vec<u32> = slice.weights.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(got, want, "follower shard {i} resumed the committed bits");
+    }
+    let _ = client.quit();
+    follower.shutdown();
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+// ---------------------------------------------------- standby failover
+
+/// Kill a shard host mid-traffic: requests in the window answer typed
+/// errors (never hang), [`ShardedModel::failover`] re-opens the dead
+/// shard's column slice on the standby from the replicated generation,
+/// and the whole model rolls back to the committed bits.
+#[test]
+fn killed_shard_host_fails_over_to_standby() {
+    if !native_env() {
+        return;
+    }
+    let scratch = temp_dir("failover");
+    let _ = std::fs::remove_dir_all(&scratch);
+    let host_a = boot_host(&scratch, "host-a");
+    let host_b = boot_host(&scratch, "host-b");
+    let standby = boot_host(&scratch, "standby");
+
+    let (n, theta, seed) = (16usize, 6.0f32, 21u64);
+    let model = ShardedModel::open_remote(
+        "/no-such-dir",
+        "fo",
+        n,
+        theta,
+        seed,
+        &[host_a.addr.clone(), host_b.addr.clone()],
+        vec![standby.addr.clone()],
+        client_cfg(),
+        retry_cfg(),
+        BatcherConfig::default(),
+    )
+    .unwrap();
+
+    let mut rng = Xoshiro256::new(13);
+    for _ in 0..3 {
+        for r in model.learn(random_volleys(&mut rng, 8, n, 0.3), None) {
+            r.unwrap();
+        }
+    }
+    // the save commits locally and replicates to the standby
+    let coord = scratch.join("coord");
+    std::fs::create_dir_all(&coord).unwrap();
+    let ckpt = coord.join("fo.ckpt");
+    model.save_checkpoints(&ckpt).unwrap();
+    let committed: Vec<u32> = model
+        .weights()
+        .unwrap()
+        .data
+        .iter()
+        .map(|w| w.to_bits())
+        .collect();
+
+    // learns past the commit will be rolled back by the failover —
+    // crash-restart semantics
+    for r in model.learn(random_volleys(&mut rng, 4, n, 0.3), None) {
+        r.unwrap();
+    }
+
+    host_b.kill();
+    // drive failure detection: every probe in the window must answer
+    // (typed error or success), never hang
+    let mut probes = 0;
+    while model.failed_shards().is_empty() && probes < 200 {
+        let t0 = std::time::Instant::now();
+        for _ in model.infer(random_volleys(&mut rng, 1, n, 0.5), None) {
+            // Ok before the worker notices, Err after — both are fine;
+            // what is not fine is blocking
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "probe hung during the kill window"
+        );
+        probes += 1;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(model.failed_shards(), vec![1], "shard 1's host is down");
+    // a request against the failed shard is a typed error immediately
+    let latched = model.infer(random_volleys(&mut rng, 1, n, 0.5), None);
+    assert!(latched.iter().any(|r| r.is_err()), "failed shard answers typed");
+
+    assert_eq!(model.failover(&ckpt).unwrap(), 1, "one shard failed over");
+    assert!(model.failed_shards().is_empty(), "standby took the slice");
+    let after: Vec<u32> = model
+        .weights()
+        .unwrap()
+        .data
+        .iter()
+        .map(|w| w.to_bits())
+        .collect();
+    assert_eq!(after, committed, "failover rolls back to the committed bits");
+    for r in model.infer(random_volleys(&mut rng, 4, n, 0.4), None) {
+        r.unwrap();
+    }
+    // with the standby pool drained, a second failure is a typed error
+    model.kill_shard(0);
+    assert!(model.failover(&ckpt).is_err(), "no standby left: typed refusal");
+
+    drop(model);
+    host_a.shutdown();
+    host_b.shutdown();
+    standby.shutdown();
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+// ----------------------------------------------------- connection cap
+
+/// `--max-conns N`: over-cap connections get a first-class BUSY on the
+/// framed codec and a `BUSY <ms>` line on the text codec — never a
+/// silent close — and each refusal counts in `connections_refused`.
+#[test]
+fn max_conns_refuses_busy_on_both_codecs_and_counts() {
+    let scratch = temp_dir("maxconns");
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch).unwrap();
+    let registry = Arc::new(ModelRegistry::standby(RegistryConfig {
+        artifacts_dir: PathBuf::from("/no-such-dir"),
+        ..RegistryConfig::default()
+    }));
+    let server = Server::with_registry(registry).with_max_conns(1);
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let join = std::thread::spawn(move || server.serve("127.0.0.1:0", |p| tx.send(p).unwrap()));
+    let addr = format!("127.0.0.1:{}", rx.recv().unwrap());
+
+    // the first connection occupies the only slot
+    let mut held = FramedClient::connect_with(&addr, &client_cfg()).unwrap();
+
+    // framed over-cap connect: the handshake is answered with the
+    // degraded BUSY error-form (no version negotiated yet), which the
+    // client surfaces as a typed connect error
+    let refused = FramedClient::connect_with(&addr, &client_cfg()).unwrap_err();
+    assert!(
+        refused.to_string().contains("busy"),
+        "framed refusal is the BUSY shape, got: {refused}"
+    );
+
+    // text over-cap connect: the same first-class BUSY line the QoS
+    // shed uses
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(b"PING\n").unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    assert!(line.starts_with("BUSY "), "text refusal line, got: {line:?}");
+    let hint: u32 = line.trim().strip_prefix("BUSY ").unwrap().parse().unwrap();
+    assert!(hint > 0, "retry hint is a positive ms count");
+
+    // both refusals are counted on the held connection's STATS view
+    let mut refused_count = 0;
+    for _ in 0..50 {
+        refused_count = *held
+            .stats()
+            .unwrap()
+            .counters
+            .get("connections_refused")
+            .unwrap_or(&0);
+        if refused_count >= 2 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(refused_count, 2, "each over-cap connection counts once");
+
+    // freeing the slot readmits new connections
+    let _ = held.quit();
+    drop(held);
+    let mut ok = None;
+    for _ in 0..100 {
+        match FramedClient::connect_with(&addr, &client_cfg()) {
+            Ok(c) => {
+                ok = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    let mut c = ok.expect("slot frees after the held connection quits");
+    let _ = c.quit();
+
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    join.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+// -------------------------------------------------- gates wire surface
+
+/// Learn gates are a v3-only construct and only LEARN may carry them:
+/// a v2-negotiated connection sending the gates flag gets a typed
+/// refusal (the negotiated version is a contract), and a gated learn
+/// addressed at a *sharded* slot is refused too — gate derivation is
+/// the coordinator's job, only a single-engine column slice applies
+/// caller-supplied gates.
+#[test]
+fn gates_are_v3_only_and_single_engine_only() {
+    if !native_env() {
+        return;
+    }
+    let scratch = temp_dir("gates");
+    let _ = std::fs::remove_dir_all(&scratch);
+    let host = boot_host(&scratch, "host");
+
+    let (n, theta, seed) = (16usize, 6.0f32, 9u64);
+    let mut client = FramedClient::connect_with(&host.addr, &client_cfg()).unwrap();
+    // provision a column slice 0..4 as slot g-s0
+    let reply = client
+        .call_admin(ModelCmd::CreateColumns {
+            name: "g".into(),
+            index: 0,
+            n,
+            theta,
+            seed,
+            start: 0,
+            end: 4,
+        })
+        .unwrap();
+    assert!(matches!(reply, AdminReply::Models(ref ms) if ms.len() == 1 && ms[0].c == 4));
+
+    // a gated learn against the column slot applies exactly the gates
+    let volley = SpikeVolley::dense(vec![1.0; n]);
+    let rs = client
+        .learn_gated("g-s0", vec![volley.clone()], vec![1.0, 0.0, 0.0, 0.0])
+        .unwrap();
+    assert_eq!(rs.len(), 1);
+
+    // a wrong-length gate vector is a typed error, not a crash
+    let resp = client
+        .call(
+            Request::learn(vec![volley.clone()])
+                .with_model("g-s0")
+                .with_gates(vec![1.0]),
+        )
+        .unwrap();
+    assert!(
+        matches!(resp.outcome, Outcome::Error(ref m) if m.contains("gates length")),
+        "got {:?}",
+        resp.outcome
+    );
+    let _ = client.quit();
+    host.shutdown();
+
+    // a sharded slot refuses gates outright: its gate derivation is
+    // the coordinator's job
+    let registry = Arc::new(
+        ModelRegistry::open_sharded(
+            RegistryConfig {
+                artifacts_dir: PathBuf::from("/no-such-dir"),
+                ..RegistryConfig::default()
+            },
+            "default",
+            catwalk::registry::ModelSpec {
+                n,
+                theta,
+                seed,
+            },
+            2,
+        )
+        .unwrap(),
+    );
+    let server = Server::with_registry(registry).with_max_conns(0);
+    let stop = server.stop_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let join = std::thread::spawn(move || server.serve("127.0.0.1:0", |p| tx.send(p).unwrap()));
+    let addr = format!("127.0.0.1:{}", rx.recv().unwrap());
+    let mut client = FramedClient::connect_with(&addr, &client_cfg()).unwrap();
+    let c = client.c;
+    let err = client
+        .learn_gated("default", vec![volley.clone()], vec![0.0; c])
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("sharded"),
+        "sharded slot refuses caller-supplied gates, got: {err}"
+    );
+
+    // v2 handshake, then a gated LEARN frame: the server rejects the
+    // v3 construct on the v2-negotiated connection with a typed error
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    frame::write_frame(&mut writer, frame::FrameType::Hello, &frame::encode_hello(2, 2)).unwrap();
+    writer.flush().unwrap();
+    let (ty, payload) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert!(matches!(ty, frame::FrameType::Ack));
+    assert_eq!(frame::decode_ack(&payload).unwrap().version, 2);
+    let gated = Request::learn(vec![volley]).with_gates(vec![0.0; c]);
+    let gated = Request { id: 1, ..gated };
+    frame::write_frame(
+        &mut writer,
+        frame::FrameType::Request,
+        &frame::encode_request(&gated).unwrap(),
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let (ty, payload) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert!(matches!(ty, frame::FrameType::Response));
+    let resp = frame::decode_response(&payload).unwrap();
+    assert!(
+        matches!(resp.outcome, Outcome::Error(ref m) if m.contains("v3")),
+        "v2 connection carrying gates is refused, got {:?}",
+        resp.outcome
+    );
+
+    let _ = client.quit();
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    join.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&scratch);
+}

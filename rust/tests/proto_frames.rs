@@ -60,6 +60,7 @@ fn golden_request() -> Request {
             SpikeVolley::dense(vec![1.0, 16.0, 2.5, 16.0]),
             SpikeVolley::sparse(4, vec![(1, 3.0)], TM).unwrap(),
         ],
+        gates: None,
         opts: RequestOpts {
             sparse_reply: true,
             deadline_ms: Some(250),
@@ -291,10 +292,22 @@ fn prop_request_roundtrip_lossless() {
         &FnGen(|rng: &mut Xoshiro256| {
             let ops = [Op::Infer, Op::Learn, Op::Stats, Op::Ping, Op::Quit];
             let nv = rng.gen_range(5);
+            let op = ops[rng.gen_range(ops.len())].clone();
+            // gates ride LEARN only (the codec refuses them elsewhere)
+            let gates = if matches!(op, Op::Learn) && rng.gen_bool(0.5) {
+                Some(
+                    (0..rng.gen_range(24))
+                        .map(|_| if rng.gen_bool(0.5) { 1.0 } else { 0.0 })
+                        .collect(),
+                )
+            } else {
+                None
+            };
             Request {
                 id: rng.next_u64(),
-                op: ops[rng.gen_range(ops.len())].clone(),
+                op,
                 volleys: (0..nv).map(|_| gen_volley(rng)).collect(),
+                gates,
                 opts: RequestOpts {
                     sparse_reply: rng.gen_bool(0.5),
                     deadline_ms: if rng.gen_bool(0.5) {
@@ -389,6 +402,7 @@ fn prop_truncated_request_is_typed_error() {
                 id: rng.next_u64(),
                 op: Op::Infer,
                 volleys: (0..1 + rng.gen_range(3)).map(|_| gen_volley(rng)).collect(),
+                gates: None,
                 opts: RequestOpts::default(),
             };
             let enc = frame::encode_request(&req).unwrap();
@@ -409,7 +423,10 @@ fn prop_admin_roundtrip_lossless() {
         128,
         &FnGen(|rng: &mut Xoshiro256| {
             let name = format!("m{}", rng.gen_range(10_000));
-            let cmd = match rng.gen_range(5) {
+            let blob = |rng: &mut Xoshiro256| -> Vec<u8> {
+                (0..rng.gen_range(64)).map(|_| rng.next_u32() as u8).collect()
+            };
+            let cmd = match rng.gen_range(10) {
                 0 => ModelCmd::List,
                 1 => ModelCmd::Create {
                     name,
@@ -419,7 +436,34 @@ fn prop_admin_roundtrip_lossless() {
                 },
                 2 => ModelCmd::Save { name },
                 3 => ModelCmd::Load { name },
-                _ => ModelCmd::Unload { name },
+                4 => ModelCmd::Unload { name },
+                5 => {
+                    let start = rng.gen_range(64);
+                    ModelCmd::CreateColumns {
+                        name,
+                        index: rng.gen_range(16),
+                        n: 1 + rng.gen_range(256),
+                        theta: (rng.gen_f64() * 20.0) as f32,
+                        seed: rng.next_u64(),
+                        start,
+                        end: start + 1 + rng.gen_range(64),
+                    }
+                }
+                6 => ModelCmd::FetchCkpt { name },
+                7 => ModelCmd::PutCkpt {
+                    name,
+                    bytes: blob(rng),
+                },
+                8 => ModelCmd::PutShard {
+                    name,
+                    index: rng.gen_range(16),
+                    crc: rng.next_u32(),
+                    bytes: blob(rng),
+                },
+                _ => ModelCmd::PutManifest {
+                    name,
+                    bytes: blob(rng),
+                },
             };
             Request::admin(cmd).with_id(rng.next_u64())
         }),

@@ -353,6 +353,7 @@ fn chaos_replay_contracts_hold() {
         },
         qos: QosConfig::on(),
         stall_clients: 2,
+        dist: false,
     };
     let report = replay::chaos_run(&opts).unwrap();
     assert_eq!(report.replay.transport_errors, 0);
@@ -362,5 +363,50 @@ fn chaos_replay_contracts_hold() {
     assert!(report.corrupt_load_rejected, "corrupt checkpoint refused");
     assert!(report.weights_bit_identical, "old weights keep serving");
     assert!(report.survivor_serving);
+    assert!(!report.shard_host_killed, "dist fault was not requested");
+    assert!(report.contracts_hold());
+}
+
+/// The distributed chaos gate (`--chaos --dist`): on top of the local
+/// faults, a remote 2-shard model loses a shard *host* mid-traffic.
+/// The kill window must resolve every probe as a typed error inside
+/// the bounded client timeouts (never a hang), and failover onto the
+/// replicated standby must resume the committed checkpoint generation
+/// bit-identically — the post-commit learns roll back like a crash.
+#[test]
+fn chaos_dist_killed_shard_host_contracts_hold() {
+    let scratch = std::env::temp_dir().join(format!("catwalk-chaos-d-{}", std::process::id()));
+    let opts = ChaosOptions {
+        artifacts_dir: "artifacts".into(),
+        scratch_dir: scratch,
+        spec: SynthSpec {
+            requests: 24,
+            rate_per_s: 1200.0,
+            n: N,
+            t_max: 16,
+            deadline_ms: Some(2_000),
+            models: vec![String::new()],
+            seed: 33,
+        },
+        replay: ReplayOptions {
+            multiple: 2.0,
+            conns: 2,
+        },
+        qos: QosConfig::on(),
+        stall_clients: 1,
+        dist: true,
+    };
+    let report = replay::chaos_run(&opts).unwrap();
+    assert!(report.shard_host_killed, "the dist fault ran");
+    assert_eq!(report.dist_hangs, 0, "killed host degrades, never hangs");
+    assert!(
+        report.dist_typed_errors > 0,
+        "the kill window surfaced typed errors"
+    );
+    assert!(report.failover_recovered, "standby took the dead slice over");
+    assert!(
+        report.failover_weights_match,
+        "failover resumed the committed generation bit-identically"
+    );
     assert!(report.contracts_hold());
 }

@@ -13,7 +13,8 @@ use catwalk::rng::Xoshiro256;
 use catwalk::runtime::plan::{ForwardArgs, KernelPath, KernelPlan};
 use catwalk::runtime::{BackendKind, Tensor};
 use catwalk::server::{FramedClient, Server};
-use catwalk::shard::manifest::{ShardEntry, ShardManifest};
+use catwalk::registry::checkpoint::{crc32, Checkpoint};
+use catwalk::shard::manifest::{shard_path, ShardEntry, ShardManifest};
 use catwalk::shard::{merge_result, ShardedModel};
 use catwalk::SpikeVolley;
 use std::io::{BufRead, BufReader, Write};
@@ -448,5 +449,187 @@ fn sharded_and_unsharded_wire_replies_byte_identical() {
     assert_eq!(pre_solo, post_solo, "solo resume diverges");
     assert_eq!(pre_quad, post_quad, "sharded resume diverges");
     stop(&server, srv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------- checkpoint replication (follower)
+
+/// One committed generation as `dist::replicate` pushes it: the `CWKS`
+/// manifest bytes plus each slice's `(crc, CWKP bytes)`.
+fn read_generation(path: &PathBuf) -> (Vec<u8>, Vec<(u32, Vec<u8>)>) {
+    let mbytes = std::fs::read(path).unwrap();
+    let m = ShardManifest::from_bytes(&mbytes).unwrap();
+    let slices = m
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            (
+                e.file_crc,
+                std::fs::read(shard_path(path, i, e.file_crc)).unwrap(),
+            )
+        })
+        .collect();
+    (mbytes, slices)
+}
+
+/// The follower's resumed weights for every `rep-s<i>` column slot,
+/// as bit patterns.
+fn follower_weight_bits(follower: &ModelRegistry, shards: usize) -> Vec<u32> {
+    (0..shards)
+        .flat_map(|i| {
+            let bytes = follower.fetch_ckpt(&format!("rep-s{i}")).unwrap();
+            Checkpoint::from_bytes(&bytes)
+                .unwrap()
+                .weights
+                .iter()
+                .map(|w| w.to_bits())
+                .collect::<Vec<u32>>()
+        })
+        .collect()
+}
+
+/// Replication corruption, the follower side: a generation with a
+/// bit-flipped or truncated slice is rejected **as a unit** — in
+/// transit by `put_shard`'s CRC, on disk by `put_manifest`'s re-hash —
+/// and the previously committed generation keeps serving and keeps
+/// resuming standbys bit-identically. Once the generation is re-pushed
+/// intact, the commit goes through and new standbys resume it.
+#[test]
+fn follower_rejects_corrupt_generation_and_keeps_prior_one() {
+    if !native_env() {
+        return;
+    }
+    let dir = temp_dir("replication");
+    let _ = std::fs::remove_dir_all(&dir);
+    let coord_dir = dir.join("coord");
+    let follower_dir = dir.join("follower");
+    std::fs::create_dir_all(&coord_dir).unwrap();
+
+    // coordinator side: a 2-shard model, trained, committed — gen 1
+    let (n, theta, seed) = (16usize, 6.0f32, 11u64);
+    let model =
+        ShardedModel::open("/no-such-dir", n, theta, seed, 2, BatcherConfig::default()).unwrap();
+    let mut rng = Xoshiro256::new(9);
+    let mut train = |model: &ShardedModel, steps: usize| {
+        for _ in 0..steps {
+            let volleys = random_volleys(&mut rng, 8, n, 0.3)
+                .into_iter()
+                .map(SpikeVolley::dense)
+                .collect();
+            for r in model.learn(volleys, None) {
+                r.unwrap();
+            }
+        }
+    };
+    train(&model, 3);
+    let gen_path = coord_dir.join("rep.ckpt");
+    model.save_checkpoints(&gen_path).unwrap();
+    let (m1, s1) = read_generation(&gen_path);
+    let gen1_bits: Vec<u32> = model.weights().unwrap().data.iter().map(|w| w.to_bits()).collect();
+
+    // follower: stage + commit gen 1, provision the column slots
+    let follower = ModelRegistry::standby(RegistryConfig {
+        artifacts_dir: "/no-such-dir".into(),
+        ckpt_dir: Some(follower_dir.clone()),
+        ..RegistryConfig::default()
+    });
+    std::fs::create_dir_all(&follower_dir).unwrap();
+    for (i, (crc, bytes)) in s1.iter().enumerate() {
+        follower.put_shard("rep", i, *crc, bytes).unwrap();
+    }
+    follower.put_manifest("rep", &m1).unwrap();
+    let manifest = ShardManifest::from_bytes(&m1).unwrap();
+    for (i, e) in manifest.shards.iter().enumerate() {
+        follower
+            .create_columns("rep", i, n, theta, seed, e.start as usize, e.end as usize)
+            .unwrap();
+    }
+    assert_eq!(
+        follower_weight_bits(&follower, 2),
+        gen1_bits,
+        "standby resumed gen 1 bit-identically"
+    );
+
+    // coordinator moves on: gen 2
+    train(&model, 2);
+    model.save_checkpoints(&gen_path).unwrap();
+    let (m2, s2) = read_generation(&gen_path);
+    assert_ne!(m1, m2, "gen 2 is a different generation");
+
+    // corruption in transit: a bit-flipped slice fails put_shard's CRC
+    let mut flipped = s2[0].1.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0xFF;
+    assert!(
+        matches!(
+            follower.put_shard("rep", 0, s2[0].0, &flipped),
+            Err(catwalk::Error::Checkpoint(_))
+        ),
+        "transit corruption is a typed checkpoint error"
+    );
+    // ... so the generation is incomplete and the commit is refused
+    follower.put_shard("rep", 1, s2[1].0, &s2[1].1).unwrap();
+    assert!(matches!(
+        follower.put_manifest("rep", &m2),
+        Err(catwalk::Error::Checkpoint(_))
+    ));
+
+    // corruption on disk: stage slice 0 intact, then flip a byte in
+    // the staged file — put_manifest re-hashes and rejects the unit
+    follower.put_shard("rep", 0, s2[0].0, &s2[0].1).unwrap();
+    let staged = shard_path(&follower.ckpt_path("rep").unwrap(), 0, s2[0].0);
+    std::fs::write(&staged, &flipped).unwrap();
+    assert!(matches!(
+        follower.put_manifest("rep", &m2),
+        Err(catwalk::Error::Checkpoint(_))
+    ));
+    // truncation is rejected the same way
+    std::fs::write(&staged, &s2[0].1[..s2[0].1.len() / 2]).unwrap();
+    assert!(matches!(
+        follower.put_manifest("rep", &m2),
+        Err(catwalk::Error::Checkpoint(_))
+    ));
+
+    // the committed manifest is still gen 1: serving slots are
+    // untouched and a *fresh* standby still resumes gen 1
+    assert_eq!(std::fs::read(follower.ckpt_path("rep").unwrap()).unwrap(), m1);
+    assert_eq!(follower_weight_bits(&follower, 2), gen1_bits);
+    let fresh = ModelRegistry::standby(RegistryConfig {
+        artifacts_dir: "/no-such-dir".into(),
+        ckpt_dir: Some(follower_dir.clone()),
+        ..RegistryConfig::default()
+    });
+    for (i, e) in manifest.shards.iter().enumerate() {
+        fresh
+            .create_columns("rep", i, n, theta, seed, e.start as usize, e.end as usize)
+            .unwrap();
+    }
+    assert_eq!(
+        follower_weight_bits(&fresh, 2),
+        gen1_bits,
+        "a restarted standby keeps resuming the prior generation"
+    );
+
+    // re-push gen 2 intact: the commit goes through, the CRC names
+    // match the manifest, and a new standby resumes gen 2
+    let gen2_bits: Vec<u32> = model.weights().unwrap().data.iter().map(|w| w.to_bits()).collect();
+    for (i, (crc, bytes)) in s2.iter().enumerate() {
+        follower.put_shard("rep", i, *crc, bytes).unwrap();
+        assert_eq!(crc32(bytes), *crc);
+    }
+    follower.put_manifest("rep", &m2).unwrap();
+    let fresh2 = ModelRegistry::standby(RegistryConfig {
+        artifacts_dir: "/no-such-dir".into(),
+        ckpt_dir: Some(follower_dir),
+        ..RegistryConfig::default()
+    });
+    let m2_parsed = ShardManifest::from_bytes(&m2).unwrap();
+    for (i, e) in m2_parsed.shards.iter().enumerate() {
+        fresh2
+            .create_columns("rep", i, n, theta, seed, e.start as usize, e.end as usize)
+            .unwrap();
+    }
+    assert_eq!(follower_weight_bits(&fresh2, 2), gen2_bits);
     let _ = std::fs::remove_dir_all(&dir);
 }
