@@ -21,6 +21,7 @@ byte-for-byte a valid v3 frame without them):
     HELLO    := min_version u16 | max_version u16
     ACK      := version u16 | n u32 | c u32 | t_max u32
     REQUEST  := id u64 | op u8 | flags u8 | [deadline_ms u32]
+                | [trace u64]                        (v3, flags bit 5)
                 | [mlen u16 | model utf8]            (v3, flags bit 3)
                 | [ngates u32 | ngates*f32]          (v3, flags bit 4,
                                                       LEARN only)
@@ -32,6 +33,7 @@ byte-for-byte a valid v3 frame without them):
     cmd      := 1 LIST | 2 CREATE | 3 SAVE | 4 LOAD | 5 UNLOAD
               | 6 CREATE_COLUMNS | 7 FETCH_CKPT | 8 PUT_CKPT
               | 9 PUT_SHARD | 10 PUT_MANIFEST       (v3, dist tier)
+              | 11 FETCH_TRACE                      (v3, obs; no fields)
     CREATE   := str16 name | n u32 | theta f32 | seed u64
     SAVE/LOAD/UNLOAD := str16 name
     CREATE_COLUMNS := str16 name | index u32 | n u32 | theta f32
@@ -66,12 +68,14 @@ T_HELLO, T_ACK, T_REQUEST, T_RESPONSE = 1, 2, 3, 4
 OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT, OP_ADMIN = 1, 2, 3, 4, 5, 6
 FLAG_SPARSE_REPLY, FLAG_DEADLINE, FLAG_COUNTERS_ONLY, FLAG_MODEL = 1, 2, 4, 8
 FLAG_GATES = 16
+FLAG_TRACE = 32
 ST_RESULTS, ST_STATS, ST_PONG, ST_BYE, ST_ERROR, ST_ADMIN, ST_BUSY = (
     0, 1, 2, 3, 4, 5, 6,
 )
 CMD_LIST, CMD_CREATE, CMD_SAVE, CMD_LOAD, CMD_UNLOAD = 1, 2, 3, 4, 5
 CMD_CREATE_COLUMNS, CMD_FETCH_CKPT, CMD_PUT_CKPT = 6, 7, 8
 CMD_PUT_SHARD, CMD_PUT_MANIFEST = 9, 10
+CMD_FETCH_TRACE = 11
 ADMIN_OK, ADMIN_MODELS, ADMIN_CKPT = 0, 1, 2
 MFLAG_DEFAULT = 1
 
@@ -132,22 +136,29 @@ def str16(s):
 
 
 def request(rid, op, volleys=(), sparse_reply=False, deadline_ms=None,
-            counters_only=False, model=None, gates=None, admin=None):
+            counters_only=False, model=None, gates=None, admin=None,
+            trace=None):
     """``admin`` is the pre-encoded cmd body; required iff op is ADMIN.
     ``gates`` (a list of f32, LEARN only) is the dist tier's phase-2
-    STDP gate vector — the coordinator's global-winner broadcast."""
+    STDP gate vector — the coordinator's global-winner broadcast.
+    ``trace`` (u64) is the obs tier's sampled trace id, propagated
+    coordinator -> shard host so both processes record spans under one
+    id."""
     flags = (
         (FLAG_SPARSE_REPLY if sparse_reply else 0)
         | (FLAG_DEADLINE if deadline_ms is not None else 0)
         | (FLAG_COUNTERS_ONLY if counters_only else 0)
         | (FLAG_MODEL if model is not None else 0)
         | (FLAG_GATES if gates is not None else 0)
+        | (FLAG_TRACE if trace is not None else 0)
     )
     if gates is not None:
         assert op == OP_LEARN, "gates ride only on LEARN requests"
     p = struct.pack(">QBB", rid, op, flags)
     if deadline_ms is not None:
         p += struct.pack(">I", deadline_ms)
+    if trace is not None:
+        p += struct.pack(">Q", trace)
     if model is not None:
         p += str16(model)
     if gates is not None:
@@ -204,6 +215,12 @@ def cmd_put_shard(name, index, crc, data):
 
 def cmd_put_manifest(name, data):
     return struct.pack(">B", CMD_PUT_MANIFEST) + str16(name) + blob32(data)
+
+
+def cmd_fetch_trace():
+    """Nullary v3 admin verb: drain-free snapshot of the trace ring,
+    returned as a CWKT capture blob."""
+    return struct.pack(">B", CMD_FETCH_TRACE)
 
 
 class Cur:
@@ -263,6 +280,8 @@ def parse_model_cmd(cur):
         return ("put_shard", name, index, crc, cur.blob32())
     if cmd == CMD_PUT_MANIFEST:
         return ("put_manifest", cur.str16(), cur.blob32())
+    if cmd == CMD_FETCH_TRACE:
+        return ("fetch_trace",)
     raise ValueError("unknown admin cmd %d" % cmd)
 
 
@@ -272,11 +291,12 @@ def parse_request(payload):
     if op not in (OP_INFER, OP_LEARN, OP_STATS, OP_PING, OP_QUIT, OP_ADMIN):
         raise ValueError("unknown op %d" % op)
     if flags & ~(FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY
-                 | FLAG_MODEL | FLAG_GATES):
+                 | FLAG_MODEL | FLAG_GATES | FLAG_TRACE):
         raise ValueError("unknown flags %#x" % flags)
     if flags & FLAG_GATES and op != OP_LEARN:
         raise ValueError("gates flag on op %d" % op)
     deadline = cur.take(">I") if flags & FLAG_DEADLINE else None
+    trace = cur.take(">Q") if flags & FLAG_TRACE else None
     model = cur.str16() if flags & FLAG_MODEL else None
     gates = None
     if flags & FLAG_GATES:
@@ -319,6 +339,7 @@ def parse_request(payload):
         "model": model,
         "gates": gates,
         "admin": admin,
+        "trace": trace,
     }
 
 
@@ -1013,3 +1034,260 @@ def test_shard_checkpoint_files_share_cwkp_layout():
     other = checkpoint_bytes(16, 3, 16, 6.0, 12, [0.0] * 48)
     crc0 = struct.unpack_from(">III", manifest, 34)[2]
     assert crc0 != zlib.crc32(other) & 0xFFFFFFFF
+
+
+# ------------------------------------------------ trace frames (obs, v3)
+
+# Request: id=7, INFER routed to "edge" with a propagated trace id
+# (flags bits 3+5) — the coordinator -> shard-host span-stitching hop.
+# Shared with rust/tests/proto_frames.rs
+# (golden_trace_request_bytes_match_python_twin).
+GOLDEN_TRACE_REQUEST_HEX = (
+    "43574b32030000002f000000000000000701280102030405060708000465"
+    "646765000100000000043f800000418000004020000041800000"
+)
+
+# Request: id=12, ADMIN FETCH_TRACE — the nullary trace-ring snapshot
+# verb. Shared with rust/tests/proto_frames.rs
+# (golden_fetch_trace_bytes_match_python_twin).
+GOLDEN_FETCH_TRACE_HEX = "43574b32030000000b000000000000000c06000b"
+
+
+def golden_trace_request_bytes():
+    return frame(
+        T_REQUEST,
+        request(
+            7,
+            OP_INFER,
+            volleys=[dense_volley([1.0, 16.0, 2.5, 16.0])],
+            model="edge",
+            trace=0x0102030405060708,
+        ),
+    )
+
+
+def golden_fetch_trace_bytes():
+    return frame(T_REQUEST, request(12, OP_ADMIN, admin=cmd_fetch_trace()))
+
+
+def test_golden_trace_vectors_match_contract():
+    assert golden_trace_request_bytes().hex() == GOLDEN_TRACE_REQUEST_HEX
+    assert golden_fetch_trace_bytes().hex() == GOLDEN_FETCH_TRACE_HEX
+
+
+def test_trace_request_roundtrip():
+    (ftype, payload), rest = parse_frame(golden_trace_request_bytes())
+    assert (ftype, rest) == (T_REQUEST, b"")
+    req = parse_request(payload)
+    assert req["id"] == 7 and req["op"] == OP_INFER
+    assert req["trace"] == 0x0102030405060708
+    assert req["model"] == "edge"
+    assert req["volleys"] == [("dense", [1.0, 16.0, 2.5, 16.0])]
+    # without the flag the field is absent — unsampled requests are the
+    # v2 layout exactly, which is how the bit-identity invariant holds
+    bare = request(7, OP_INFER, volleys=[dense_volley([1.0])])
+    assert parse_request(bare)["trace"] is None
+    # trace composes with deadline (which sits before it on the wire)
+    both = request(1, OP_INFER, volleys=[dense_volley([2.0])],
+                   deadline_ms=50, trace=9)
+    req = parse_request(both)
+    assert (req["deadline_ms"], req["trace"]) == (50, 9)
+    # every truncation raises instead of misparsing
+    p = golden_trace_request_bytes()[9:]
+    for cut in range(len(p)):
+        with pytest.raises(ValueError):
+            parse_request(p[:cut])
+
+
+def test_fetch_trace_roundtrip():
+    (_, payload), _ = parse_frame(golden_fetch_trace_bytes())
+    req = parse_request(payload)
+    assert req["op"] == OP_ADMIN and req["admin"] == ("fetch_trace",)
+    # the verb is nullary: trailing bytes raise
+    with pytest.raises(ValueError):
+        parse_request(request(12, OP_ADMIN, admin=cmd_fetch_trace() + b"\x00"))
+
+
+# ------------------------------------------- trace capture twin (CWKT)
+
+TRACE_MAGIC = b"CWKT"
+TRACE_SCHEMA = 1
+TRACE_RECORD_LEN = 30
+
+# Stage ids and span flags, mirroring rust/src/obs/mod.rs.
+(STAGE_DECODE, STAGE_ADMISSION, STAGE_QUEUE_WAIT, STAGE_KERNEL_EXEC,
+ STAGE_SCATTER, STAGE_GATHER, STAGE_RPC, STAGE_REPLICATE,
+ STAGE_CHECKPOINT, STAGE_REQUEST) = range(10)
+SPAN_ERROR, SPAN_SLOW, SPAN_BUSY, SPAN_EXPIRED = 1, 2, 4, 8
+
+# Shared with rust/src/obs/mod.rs (golden_cwkt_bytes_match_python_twin):
+# two spans of trace 7 — KernelExec (tag=2, start 100 us, dur 250 us)
+# and the closing Request span flagged SLOW (start 90 us, dur 400 us).
+GOLDEN_TRACE_CAPTURE_HEX = (
+    "43574b54000100000002"
+    "0000000000000007030000000002000000000000006400000000000000fa"
+    "0000000000000007090200000000000000000000005a0000000000000190"
+    "8278446e"
+)
+
+
+def trace_record(trace_id, stage, flags, tag, start_us, dur_us):
+    """One 30-byte span record: id u64 | stage u8 | flags u8 | tag u32
+    | start_us u64 | dur_us u64."""
+    return struct.pack(">QBBIQQ", trace_id, stage, flags, tag,
+                       start_us, dur_us)
+
+
+def trace_capture_bytes(records):
+    """``obs/mod.rs`` CWKT layout: magic | schema u16 | count u32
+    | count records | crc32."""
+    import zlib
+
+    p = TRACE_MAGIC + struct.pack(">HI", TRACE_SCHEMA, len(records))
+    p += b"".join(records)
+    return p + struct.pack(">I", zlib.crc32(p) & 0xFFFFFFFF)
+
+
+def parse_trace_capture(b):
+    """Decode a CWKT blob exactly the way rust's decode_traces does:
+    exact length from the count field, then the trailing crc."""
+    import zlib
+
+    if len(b) < 14 or b[:4] != TRACE_MAGIC:
+        raise ValueError("bad CWKT header")
+    schema, count = struct.unpack_from(">HI", b, 4)
+    if schema != TRACE_SCHEMA:
+        raise ValueError("unknown CWKT schema %d" % schema)
+    if len(b) != 14 + TRACE_RECORD_LEN * count:
+        raise ValueError("CWKT length mismatch")
+    if struct.unpack(">I", b[-4:])[0] != zlib.crc32(b[:-4]) & 0xFFFFFFFF:
+        raise ValueError("CWKT crc mismatch")
+    recs = []
+    for i in range(count):
+        rec = struct.unpack_from(">QBBIQQ", b, 10 + TRACE_RECORD_LEN * i)
+        if rec[1] > STAGE_REQUEST:
+            raise ValueError("unknown stage %d" % rec[1])
+        recs.append(rec)
+    return recs
+
+
+def test_trace_capture_golden_bytes():
+    b = trace_capture_bytes([
+        trace_record(7, STAGE_KERNEL_EXEC, 0, 2, 100, 250),
+        trace_record(7, STAGE_REQUEST, SPAN_SLOW, 0, 90, 400),
+    ])
+    assert b.hex() == GOLDEN_TRACE_CAPTURE_HEX
+    # fixed header (10) + 2 records + crc
+    assert len(b) == 10 + 2 * TRACE_RECORD_LEN + 4
+    import zlib
+
+    stored = struct.unpack(">I", b[-4:])[0]
+    assert stored == zlib.crc32(b[:-4]) & 0xFFFFFFFF
+    recs = parse_trace_capture(b)
+    assert recs == [
+        (7, STAGE_KERNEL_EXEC, 0, 2, 100, 250),
+        (7, STAGE_REQUEST, SPAN_SLOW, 0, 90, 400),
+    ]
+
+
+def test_trace_capture_rejects_truncation_and_bit_flips():
+    b = trace_capture_bytes([
+        trace_record(7, STAGE_KERNEL_EXEC, 0, 2, 100, 250),
+        trace_record(7, STAGE_REQUEST, SPAN_SLOW, 0, 90, 400),
+    ])
+    # every truncation raises (the count field fixes the exact length)
+    for cut in range(len(b)):
+        with pytest.raises(ValueError):
+            parse_trace_capture(b[:cut])
+    # ...and so do trailing bytes
+    with pytest.raises(ValueError):
+        parse_trace_capture(b + b"\x00")
+    # a single bit flip anywhere is rejected: magic/schema gates, the
+    # count -> exact-length check, or the trailing crc
+    for byte in range(len(b)):
+        for bit in range(8):
+            flipped = bytearray(b)
+            flipped[byte] ^= 1 << bit
+            with pytest.raises(ValueError):
+                parse_trace_capture(bytes(flipped))
+    # an empty capture is representable and round-trips
+    assert parse_trace_capture(trace_capture_bytes([])) == []
+
+
+# ------------------------------------- STATS forward-compat (schema row)
+
+KNOWN_HIST_FIELDS = ("count", "max_us", "mean_us", "p50_us", "p95_us",
+                     "p99_us")
+
+
+def parse_stats_kv(body):
+    """A skip-unknown STATS reader mirroring rust's StatsSnapshot
+    parser: unknown top-level prefixes are ignored wholesale, and
+    unknown ``hist.*`` fields are skipped *before* any entry is
+    created, so a novel field name can never conjure an empty
+    histogram."""
+    counters, hists = {}, {}
+    for line in body.splitlines():
+        if not line:
+            continue
+        if "=" not in line:
+            raise ValueError("bad stats row %r" % line)
+        key, value = line.split("=", 1)
+        if key == "schema":
+            int(value)
+        elif key.startswith("counter."):
+            counters[key[len("counter."):]] = int(value)
+        elif key.startswith("hist."):
+            name, _, field = key[len("hist."):].rpartition(".")
+            if not name or field not in KNOWN_HIST_FIELDS:
+                continue
+            hists.setdefault(name, {})[field] = (
+                float(value) if field == "mean_us" else int(value)
+            )
+        # any other prefix: a future schema row — skipped
+    return counters, hists
+
+
+def test_stats_parser_ignores_unknown_rows():
+    """Property test twin of rust's prop_unknown_rows_never_change_the_
+    parse: splicing arbitrary unknown rows (future top-level prefixes
+    and novel hist fields) into a STATS body never changes what a
+    schema-1 reader extracts from the known rows."""
+    import random
+
+    rng = random.Random(0xC4A757A7)
+    prefixes = ["future", "gauge", "trace", "meta", "qos2"]
+    hist_fields = ["p999_us", "stddev_us", "buckets", "v2count"]
+    for _ in range(50):
+        known = [
+            "schema=2",
+            "counter.requests=%d" % rng.randrange(1000),
+            "counter.model.edge.requests=%d" % rng.randrange(1000),
+            "counter.model.dist.shard.0.rpc_errors=%d" % rng.randrange(9),
+            "hist.lat.count=%d" % rng.randrange(1000),
+            "hist.lat.p50_us=%d" % rng.randrange(1000),
+            "hist.model.dist.shard.1.rpc.p99_us=%d" % rng.randrange(1000),
+        ]
+        noise = []
+        for _ in range(rng.randrange(1, 6)):
+            if rng.random() < 0.5:
+                noise.append("%s.row%d=%d" % (rng.choice(prefixes),
+                                              rng.randrange(9),
+                                              rng.randrange(1000)))
+            else:
+                noise.append("hist.lat.%s=%d" % (rng.choice(hist_fields),
+                                                 rng.randrange(1000)))
+            if rng.random() < 0.3:
+                noise.append("hist.novel%d.%s=%d" % (
+                    rng.randrange(9), rng.choice(hist_fields),
+                    rng.randrange(1000)))
+        noisy = sorted(known + noise)
+        clean = parse_stats_kv("\n".join(sorted(known)) + "\n")
+        dirty = parse_stats_kv("\n".join(noisy) + "\n")
+        assert clean == dirty
+        # a novel hist name carrying only unknown fields must not
+        # appear as an empty entry
+        _, dirty_hists = dirty
+        assert all(not h or any(f in KNOWN_HIST_FIELDS for f in h)
+                   for h in dirty_hists.values())
+        assert not any(n.startswith("novel") for n in dirty_hists)

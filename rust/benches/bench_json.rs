@@ -1,8 +1,9 @@
 //! Machine-readable benchmark: sweeps every [`KernelPlan`] path over
 //! the density range, replays QoS traffic at rate multiples, compares
-//! the distributed shard transport against the in-process one, and
-//! writes the perf-trajectory point `BENCH_8.json` at the repo root
-//! (EXPERIMENTS.md §Perf 8 and §Serving).
+//! the distributed shard transport against the in-process one,
+//! measures the per-request tracing overhead in each sampling regime,
+//! and writes the perf-trajectory point `BENCH_9.json` at the repo
+//! root (EXPERIMENTS.md §Perf 8, §Serving and §Tracing).
 //!
 //! Run: `make bench-json` (or `cargo bench --bench bench_json`).
 //! Override the output path with `BENCH_JSON_OUT=/path/file.json`;
@@ -279,12 +280,48 @@ fn main() {
     host_b.shutdown();
     let _ = std::fs::remove_dir_all(&scratch);
 
+    // tracing overhead: ns/request through the obs hot path in each
+    // sampling regime (trace_overhead prints the same numbers in prose)
+    let trace_regime = |rate: Option<f64>, label: &str| -> f64 {
+        match rate {
+            Some(r) => catwalk::obs::configure(r, 0),
+            None => catwalk::obs::disable(),
+        }
+        catwalk::obs::reset();
+        let ops = 200_000u64;
+        let r = bench(&format!("trace {label}"), 3, 20, || {
+            let mut acc = 0u64;
+            for _ in 0..ops {
+                let t0 = std::time::Instant::now();
+                let ctx = catwalk::obs::begin_request();
+                catwalk::obs::record(
+                    ctx,
+                    catwalk::obs::Stage::KernelExec,
+                    0,
+                    t0,
+                    std::time::Duration::from_micros(1),
+                );
+                acc = acc.wrapping_add(ctx.id);
+                catwalk::obs::finish_request(ctx, t0, 0);
+            }
+            acc
+        });
+        let ns = 1e9 / r.throughput(ops);
+        println!("  trace {label}: {ns:.1} ns/request");
+        ns
+    };
+    let trace_disabled_ns = trace_regime(None, "disabled");
+    let trace_unsampled_ns = trace_regime(Some(1e-6), "unsampled");
+    let trace_sampled_ns = trace_regime(Some(1.0), "sampled");
+    catwalk::obs::disable();
+    catwalk::obs::reset();
+
     let doc = Json::Obj(vec![
         (
             "bench".into(),
-            Json::Str("kernel_path_sweep+qos_serve+dist_shard_serve".into()),
+            Json::Str("kernel_path_sweep+qos_serve+dist_shard_serve+trace_overhead".into()),
         ),
-        ("pr".into(), Json::Num(8.0)),
+        ("pr".into(), Json::Num(9.0)),
         (
             "geometry".into(),
             Json::Obj(vec![
@@ -306,11 +343,19 @@ fn main() {
         ("qos_serve".into(), Json::Arr(qos_rows)),
         ("dist_serve".into(), Json::Arr(dist_rows)),
         (
+            "trace_overhead".into(),
+            Json::Obj(vec![
+                ("disabled_ns".into(), Json::Num(trace_disabled_ns)),
+                ("unsampled_ns".into(), Json::Num(trace_unsampled_ns)),
+                ("sampled_ns".into(), Json::Num(trace_sampled_ns)),
+            ]),
+        ),
+        (
             "harness".into(),
             Json::Str("rust bench_util (make bench-json)".into()),
         ),
     ]);
-    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_8.json".into());
+    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_9.json".into());
     std::fs::write(&out, doc.render() + "\n").unwrap();
     println!("  wrote {out}");
 }

@@ -1,0 +1,61 @@
+//! Tracing overhead micro-bench: what the obs subsystem costs per
+//! request in each regime — fully disabled, enabled-but-unsampled (the
+//! production shape: head sampling at a small `--trace-rate`, so the
+//! hot path pays only the sampling atomics), and fully sampled (rate
+//! 1.0, every span written into the ring). EXPERIMENTS.md tracks the
+//! middle number: it is the bit-identity invariant's perf twin — the
+//! cost tracing adds to requests that are *not* being traced.
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::obs;
+use std::time::{Duration, Instant};
+
+/// Requests simulated per sample; the loop body is a handful of
+/// nanoseconds, so amortize the sample clock over many.
+const OPS: u64 = 200_000;
+
+/// One simulated request through the instrumented path: the context
+/// acquisition, the two per-stage record sites a batched request hits,
+/// and the closing request span. Unsampled contexts make every record
+/// a branch-and-return.
+fn simulated_request(acc: &mut u64) {
+    let t0 = Instant::now();
+    let ctx = obs::begin_request();
+    obs::record(ctx, obs::Stage::QueueWait, 0, t0, Duration::from_micros(1));
+    obs::record(ctx, obs::Stage::KernelExec, 1, t0, Duration::from_micros(2));
+    *acc = acc.wrapping_add(ctx.id);
+    obs::finish_request(ctx, t0, 0);
+}
+
+fn regime(name: &str) {
+    obs::reset();
+    let r = bench(name, 3, 20, || {
+        let mut acc = 0u64;
+        for _ in 0..OPS {
+            simulated_request(&mut acc);
+        }
+        acc
+    });
+    println!("{}", r.report());
+    println!("  -> {:.1} ns/request", 1e9 / r.throughput(OPS));
+}
+
+fn main() {
+    bench_header("trace overhead");
+
+    obs::disable();
+    regime("tracing disabled");
+
+    // enabled but (virtually) never sampled: the cost every untraced
+    // request pays while `--trace-rate` is live on the process
+    obs::configure(1e-6, 0);
+    regime("enabled, unsampled (rate 1e-6)");
+
+    // every request sampled: begin + 2 stage spans + request span, all
+    // hitting the ring
+    obs::configure(1.0, 0);
+    regime("sampled (rate 1.0, 3 ring writes)");
+
+    obs::disable();
+    obs::reset();
+}

@@ -43,6 +43,10 @@ struct Pending {
     enqueued: Instant,
     /// drop (typed error) instead of executing if still queued past this
     deadline: Option<Instant>,
+    /// the submitting request's trace ctx, captured at enqueue — the
+    /// batch worker thread records `queue_wait`/`kernel_exec` spans
+    /// against it (inert for unsampled requests)
+    ctx: crate::obs::TraceCtx,
     reply: SyncSender<Result<VolleyResult>>,
 }
 
@@ -180,12 +184,14 @@ impl DynamicBatcher {
                 }
                 return PendingResults { waiters };
             }
+            let ctx = crate::obs::current();
             for volley in volleys {
                 let (tx, rx) = sync_channel(1);
                 q.pending.push_back(Pending {
                     volley,
                     enqueued: Instant::now(),
                     deadline,
+                    ctx,
                     reply: tx,
                 });
                 waiters.push(rx);
@@ -293,6 +299,16 @@ fn batch_loop(
         if !expired.is_empty() {
             service.metrics.incr("requests_expired", expired.len() as u64);
             for p in expired {
+                // an expired drop is exactly the outlier slow-capture
+                // exists for: the wait span carries the EXPIRED flag
+                crate::obs::record_flagged(
+                    p.ctx,
+                    crate::obs::Stage::QueueWait,
+                    crate::obs::SPAN_EXPIRED,
+                    0,
+                    p.enqueued,
+                    p.enqueued.elapsed(),
+                );
                 let _ = p.reply.send(Err(Error::DeadlineExpired));
             }
         }
@@ -306,8 +322,15 @@ fn batch_loop(
         let mut volleys = Vec::with_capacity(batch.len());
         let mut waiters = Vec::with_capacity(batch.len());
         for p in batch {
+            crate::obs::record(
+                p.ctx,
+                crate::obs::Stage::QueueWait,
+                0,
+                p.enqueued,
+                p.enqueued.elapsed(),
+            );
             volleys.push(p.volley);
-            waiters.push((p.enqueued, p.reply));
+            waiters.push((p.ctx, p.enqueued, p.reply));
         }
         let t0 = Instant::now();
         let result = if cfg.learn {
@@ -315,17 +338,30 @@ fn batch_loop(
         } else {
             service.infer(volleys)
         };
-        service.metrics.record("batch_exec", t0.elapsed());
+        let exec = t0.elapsed();
+        service.metrics.record("batch_exec", exec);
+        // one kernel_exec span per batched request, tagged with the
+        // resolved KernelPlan path so a trace names the code path
+        // (scalar/SIMD/compacted) that served it
+        for (ctx, _, _) in &waiters {
+            crate::obs::record(
+                *ctx,
+                crate::obs::Stage::KernelExec,
+                service.plan_tag,
+                t0,
+                exec,
+            );
+        }
         match result {
             Ok(results) => {
-                for ((enqueued, reply), r) in waiters.into_iter().zip(results) {
+                for ((_, enqueued, reply), r) in waiters.into_iter().zip(results) {
                     service.metrics.record("request_latency", enqueued.elapsed());
                     let _ = reply.send(Ok(r));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
-                for (_, reply) in waiters {
+                for (_, _, reply) in waiters {
                     let _ = reply.send(Err(Error::Coordinator(format!("batch failed: {msg}"))));
                 }
             }

@@ -25,9 +25,13 @@ impl Histogram {
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros() as u64;
         let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
-        self.counts[idx] += 1;
-        self.total += 1;
-        self.sum_us += us;
+        // saturating: a long-lived process recording pathological
+        // durations must pin at u64::MAX, never wrap the accumulators
+        // into a nonsense mean (the bucket counts overflow last and are
+        // treated the same for uniformity)
+        self.counts[idx] = self.counts[idx].saturating_add(1);
+        self.total = self.total.saturating_add(1);
+        self.sum_us = self.sum_us.saturating_add(us);
         self.max_us = self.max_us.max(us);
     }
 
@@ -93,6 +97,17 @@ impl Metrics {
             .unwrap()
             .entry(name.to_string())
             .or_insert(0) += by;
+    }
+
+    /// Gauge semantics on the counter map: overwrite instead of add.
+    /// For values that describe a current state rather than a running
+    /// total (`replication_lag_generations`) — they ride the same
+    /// `key=value` stats rows as counters.
+    pub fn set(&self, name: &str, value: u64) {
+        self.counters
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), value);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -220,5 +235,29 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile_us(0.5), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn gauge_set_overwrites() {
+        let m = Metrics::new();
+        m.set("lag", 5);
+        m.set("lag", 2);
+        assert_eq!(m.counter("lag"), 2);
+        // and still renders/snapshots like any counter row
+        assert_eq!(m.snapshot(false).counter("lag"), 2);
+    }
+
+    #[test]
+    fn histogram_saturates_instead_of_wrapping() {
+        let mut h = Histogram::default();
+        // two near-max durations would wrap sum_us under wrapping adds
+        let huge = Duration::from_micros(u64::MAX / 2 + 1);
+        h.record(huge);
+        h.record(huge);
+        assert_eq!(h.sum_us, u64::MAX);
+        assert_eq!(h.total, 2);
+        // mean stays a sane (enormous) value, not a wrapped small one
+        assert!(h.mean_us() > (u64::MAX / 4) as f64);
+        assert_eq!(h.max_us, u64::MAX / 2 + 1);
     }
 }

@@ -310,6 +310,9 @@ pub struct TnnHandle {
     /// registry wrapped around the handle opens sibling models from
     /// the same artifact set.
     pub artifacts_dir: PathBuf,
+    /// [`KernelPlan::tag`] of the environment-resolved plan the engine
+    /// executes under — what `kernel_exec` trace spans are tagged with.
+    pub plan_tag: u32,
 }
 
 impl TnnHandle {
@@ -488,6 +491,7 @@ impl TnnHandle {
             theta,
             seed,
             artifacts_dir,
+            plan_tag: KernelPlan::from_env()?.tag(),
         })
     }
 

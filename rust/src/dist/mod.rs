@@ -246,6 +246,8 @@ struct TcpInner {
     addr: String,
     /// the remote slot name (`<model>-s<index>`)
     slot: String,
+    /// shard index within the plan — the `rpc` trace span's tag
+    index: usize,
     cols: Range<usize>,
     n: usize,
     t_max: usize,
@@ -299,6 +301,7 @@ impl TcpShard {
             inner: Arc::new(TcpInner {
                 addr: addr.to_string(),
                 slot: format!("{base}-s{index}"),
+                index,
                 cols,
                 n,
                 t_max,
@@ -334,7 +337,24 @@ impl TcpInner {
             Error::Coordinator(format!("shard host {} has no live connection", self.addr))
         })?;
         self.metrics.incr("remote_calls", 1);
-        match client.call(req) {
+        // every RPC feeds the per-shard `rpc` latency histogram
+        // (`model.<name>.shard.<i>.rpc` stats rows); sampled requests
+        // additionally get an `rpc` span tagged with the shard index
+        let ctx = crate::obs::current();
+        let t0 = Instant::now();
+        let result = client.call(req);
+        let elapsed = t0.elapsed();
+        self.metrics.record("rpc", elapsed);
+        let flags = if result.is_err() { crate::obs::SPAN_ERROR } else { 0 };
+        crate::obs::record_flagged(
+            ctx,
+            crate::obs::Stage::Rpc,
+            flags,
+            self.index as u32,
+            t0,
+            elapsed,
+        );
+        match result {
             Ok(resp) => Ok(resp),
             Err(e) => {
                 self.metrics.incr("transport_errors", 1);
@@ -389,6 +409,13 @@ impl TcpInner {
     ) -> Vec<Result<VolleyResult>> {
         let nvol = volleys.len();
         let mut req = Request::infer(volleys).with_model(self.slot.clone());
+        // only sampled requests cross the wire with FLAG_TRACE — the
+        // remote host adopts the id, so its spans stitch to ours; reply
+        // bytes never carry trace state either way (bit-identity)
+        let ctx = crate::obs::current();
+        if ctx.sampled {
+            req = req.with_trace(ctx.id);
+        }
         if let Some(d) = deadline {
             let now = Instant::now();
             if now >= d {
@@ -410,9 +437,13 @@ impl TcpInner {
         gates: Vec<f32>,
     ) -> Vec<Result<VolleyResult>> {
         let nvol = volleys.len();
-        let req = Request::learn(volleys)
+        let mut req = Request::learn(volleys)
             .with_model(self.slot.clone())
             .with_gates(gates);
+        let ctx = crate::obs::current();
+        if ctx.sampled {
+            req = req.with_trace(ctx.id);
+        }
         let resp = self.call(req);
         self.per_volley(nvol, resp)
     }
@@ -430,8 +461,15 @@ impl ShardTransport for TcpShard {
     fn begin_infer(&self, volleys: Vec<SpikeVolley>, deadline: Option<Instant>) -> ShardCall {
         let nvol = volleys.len();
         let inner = self.inner.clone();
+        // thread-locals don't cross spawns: capture the request ctx on
+        // the scattering thread, re-install it on the worker so the
+        // `rpc` span and the propagated FLAG_TRACE id still attach
+        let ctx = crate::obs::current();
         ShardCall::Remote {
-            join: std::thread::spawn(move || inner.infer_sync(volleys, deadline)),
+            join: std::thread::spawn(move || {
+                let _g = crate::obs::set_current(ctx);
+                inner.infer_sync(volleys, deadline)
+            }),
             volleys: nvol,
         }
     }
@@ -439,8 +477,12 @@ impl ShardTransport for TcpShard {
     fn begin_forward(&self, volleys: Vec<SpikeVolley>) -> Result<ShardCall> {
         let nvol = volleys.len();
         let inner = self.inner.clone();
+        let ctx = crate::obs::current();
         Ok(ShardCall::Remote {
-            join: std::thread::spawn(move || inner.infer_sync(volleys, None)),
+            join: std::thread::spawn(move || {
+                let _g = crate::obs::set_current(ctx);
+                inner.infer_sync(volleys, None)
+            }),
             volleys: nvol,
         })
     }
@@ -448,8 +490,12 @@ impl ShardTransport for TcpShard {
     fn begin_learn_gated(&self, volleys: Vec<SpikeVolley>, gates: Vec<f32>) -> Result<ShardCall> {
         let nvol = volleys.len();
         let inner = self.inner.clone();
+        let ctx = crate::obs::current();
         Ok(ShardCall::Remote {
-            join: std::thread::spawn(move || inner.learn_gated_sync(volleys, gates)),
+            join: std::thread::spawn(move || {
+                let _g = crate::obs::set_current(ctx);
+                inner.learn_gated_sync(volleys, gates)
+            }),
             volleys: nvol,
         })
     }

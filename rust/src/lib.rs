@@ -30,8 +30,9 @@
 //!    over the distributed shard transport with checkpoint replication
 //!    and standby failover ([`dist`]), a QoS layer with per-model
 //!    admission control, priority lanes, load shedding and a
-//!    traffic-replay chaos harness ([`qos`]), a TCP serving front-end
-//!    speaking both codecs
+//!    traffic-replay chaos harness ([`qos`]), request-path tracing with
+//!    per-stage spans and CWKT trace capture ([`obs`]), a TCP serving
+//!    front-end speaking both codecs
 //!    ([`server`]), experiment drivers for every figure and table in
 //!    the paper ([`experiments`]), and report renderers ([`report`]).
 //!
@@ -56,6 +57,7 @@ pub mod error;
 pub mod experiments;
 pub mod netlist;
 pub mod neuron;
+pub mod obs;
 pub mod pc;
 pub mod power;
 pub mod proto;

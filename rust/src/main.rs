@@ -14,6 +14,7 @@
 //!             [--standby] [--standbys h:p+h:p] [--max-conns N]
 //!             [--qos] [--qos-depth N] [--qos-learn-depth N]
 //!             [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS]
+//!             [--trace-rate R] [--trace-slow-ms MS]
 //!                           # TCP daemon (v3 framed + text compat);
 //!                           # multi-model registry + weight checkpoints;
 //!                           # shards=K scatter/gathers a model's output
@@ -27,9 +28,19 @@
 //!                           # caps live connections (typed BUSY past
 //!                           # it); --qos* arms admission control:
 //!                           # bounded lanes shed with typed BUSY
-//!                           # instead of queueing without bound
+//!                           # instead of queueing without bound;
+//!                           # --trace-rate head-samples request-path
+//!                           # spans into the CWKT ring (1.0 = all),
+//!                           # --trace-slow-ms also captures any
+//!                           # request slower than MS unconditionally
 //! repro client [--addr A] [--framed] [--window W] [--model NAME]
 //!                           # load generator against a daemon
+//! repro trace [--addr A | --in FILE] [--out FILE] [--stage NAME] [--limit N]
+//!                           # fetch a serving process's captured CWKT
+//!                           # trace ring (admin CMD_FETCH_TRACE) or
+//!                           # read a dumped file; print the per-stage
+//!                           # p50/p95/p99 latency breakdown and the
+//!                           # slowest requests' critical paths
 //! repro replay --record F | [--log F] [--addr A] [--multiple X] | --chaos [--dist]
 //!                           # record a CWKR traffic log, replay one
 //!                           # against a daemon at a rate multiple, or
@@ -71,7 +82,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|replay|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K[@h:p+h:p]];...] [--standby] [--standbys h:p+h:p] [--max-conns N] [--ckpt-dir DIR] [--autosave-secs S] [--qos] [--qos-depth N] [--qos-learn-depth N] [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS] [--record FILE | --log FILE | --chaos [--dist]] [--multiple X] [--rate R] [--deadline-ms MS]";
+const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|trace|replay|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K[@h:p+h:p]];...] [--standby] [--standbys h:p+h:p] [--max-conns N] [--ckpt-dir DIR] [--autosave-secs S] [--qos] [--qos-depth N] [--qos-learn-depth N] [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS] [--trace-rate R] [--trace-slow-ms MS] [--in FILE] [--out FILE] [--stage NAME] [--limit N] [--record FILE | --log FILE | --chaos [--dist]] [--multiple X] [--rate R] [--deadline-ms MS]";
 
 fn emit(t: &Table, csv: bool) {
     if csv {
@@ -122,6 +133,7 @@ fn run(args: &Args) -> Result<()> {
         "cluster" => cmd_cluster(args)?,
         "serve" => cmd_serve(args)?,
         "client" => cmd_client(args)?,
+        "trace" => cmd_trace(args)?,
         "replay" => cmd_replay(args)?,
         "export-verilog" => cmd_export_verilog(args)?,
         "all" => cmd_all(args, csv)?,
@@ -381,6 +393,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     let max_conns = args.get_usize("max-conns", 0)?;
 
+    // `--trace-rate R` head-samples request-path spans into the
+    // process CWKT ring; `--trace-slow-ms MS` additionally captures
+    // every request slower than MS (and all error/BUSY/expired ones)
+    // regardless of sampling. Armed before either serve path so shard
+    // hosts trace too (their spans stitch to the coordinator's ids).
+    let trace_rate = args.get_f64("trace-rate", 0.0)?;
+    let trace_slow_ms = args.get_u64("trace-slow-ms", 0)?;
+    if trace_rate > 0.0 || trace_slow_ms > 0 {
+        catwalk::obs::configure(trace_rate, trace_slow_ms);
+        println!(
+            "tracing: rate {trace_rate}{} -> CWKT ring (fetch with `repro trace`); \
+             reply bytes are unaffected",
+            if trace_slow_ms > 0 {
+                format!(", slow capture >= {trace_slow_ms} ms")
+            } else {
+                String::new()
+            }
+        );
+    }
+
     let qos = qos_from(args)?;
     let cfg = RegistryConfig {
         artifacts_dir: artifacts.into(),
@@ -604,6 +636,90 @@ fn cmd_client(args: &Args) -> Result<()> {
             all[total - 1]
         );
     }
+    Ok(())
+}
+
+/// `repro trace` — fetch, dump, filter and aggregate captured traces.
+///
+/// The span source is a live server's ring (`--addr`, one
+/// `CMD_FETCH_TRACE` admin round-trip — v3 only) or a previously
+/// dumped file (`--in`). `--out` writes the raw CWKT bytes for later
+/// offline analysis; `--stage` narrows the listing to one stage;
+/// `--limit` caps the critical-path listing (0 = all). The aggregate
+/// tables always cover the whole (post-filter) span set.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use catwalk::obs;
+    use catwalk::server::FramedClient;
+
+    let bytes = match args.flag("in") {
+        Some(path) => std::fs::read(path)
+            .map_err(|e| Error::Usage(format!("read {path}: {e}")))?,
+        None => {
+            let addr = args.get_string("addr", "127.0.0.1:7070");
+            let mut client = FramedClient::connect(&addr)?;
+            let bytes = client.fetch_trace()?;
+            let _ = client.quit();
+            bytes
+        }
+    };
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, &bytes)
+            .map_err(|e| Error::Usage(format!("write {path}: {e}")))?;
+        println!("wrote {} CWKT bytes to {path}", bytes.len());
+    }
+    let mut spans = obs::decode_traces(&bytes)?;
+    if let Some(raw) = args.flag("stage") {
+        let stage = obs::Stage::parse(raw).ok_or_else(|| {
+            Error::Usage(format!(
+                "unknown --stage `{raw}` (decode|admission|queue_wait|kernel_exec|\
+                 scatter|gather|rpc|replicate|checkpoint|request)"
+            ))
+        })?;
+        spans.retain(|s| s.stage == stage);
+    }
+    let requests = spans
+        .iter()
+        .filter(|s| s.stage == obs::Stage::Request)
+        .count();
+    println!("{} spans ({requests} request summaries)", spans.len());
+    if spans.is_empty() {
+        return Ok(());
+    }
+
+    let mut breakdown = Table::new(
+        "per-stage latency breakdown",
+        &["stage", "count", "p50 us", "p95 us", "p99 us", "max us", "total us"],
+    );
+    for s in obs::aggregate(&spans) {
+        breakdown.row(vec![
+            s.stage.name().into(),
+            s.count.to_string(),
+            s.p50_us.to_string(),
+            s.p95_us.to_string(),
+            s.p99_us.to_string(),
+            s.max_us.to_string(),
+            s.total_us.to_string(),
+        ]);
+    }
+    print!("{}", breakdown.render());
+
+    let limit = args.get_usize("limit", 10)?;
+    let paths = obs::critical_paths(&spans);
+    let shown = if limit == 0 { paths.len() } else { limit.min(paths.len()) };
+    let mut crit = Table::new(
+        format!("critical paths (slowest {shown} of {})", paths.len()),
+        &["trace id", "total us", "dominant stage", "dominant us", "flags"],
+    );
+    for p in &paths[..shown] {
+        crit.row(vec![
+            format!("{:#018x}", p.trace_id),
+            p.total_us.to_string(),
+            p.dominant.name().into(),
+            p.dominant_us.to_string(),
+            obs::flag_names(p.flags),
+        ]);
+    }
+    print!("{}", crit.render());
     Ok(())
 }
 

@@ -1,0 +1,802 @@
+//! Request-path tracing (DESIGN.md §2.8): per-stage spans, sampled
+//! into a bounded lock-free ring, exported as the versioned `CWKT`
+//! binary trace format.
+//!
+//! The serving stack's aggregate counters and whole-request histograms
+//! (`coordinator/metrics.rs`, STATS schema=2) say *that* a p99 outlier
+//! happened; they cannot say whether it spent its time in QoS
+//! admission, the batcher queue, kernel exec or a remote shard RPC.
+//! This module is the stage-level attribution layer:
+//!
+//! ```text
+//!  decode ─ admission ─ queue wait ─ kernel exec ─ scatter/gather ─ rpc
+//!    │          │            │            │              │           │
+//!    ▼          ▼            ▼            ▼              ▼           ▼
+//!  ┌──────────────── per-process span ring (seqlock slots) ────────────┐
+//!  │ head.fetch_add → slot % cap → seq=0, fields, seq=ticket+1         │
+//!  └──────────┬─────────────────────────────────────────┬──────────────┘
+//!             ▼                                         ▼
+//!   CMD_FETCH_TRACE (v3 admin,                `repro trace` CLI
+//!   CWKT bytes in an ADMIN_CKPT               (dump / filter /
+//!   reply; typed-refused on v2)               p50/p95/p99 per stage)
+//! ```
+//!
+//! **Sampling.** `configure` arms the tracer with a head-sampling rate
+//! (`--trace-rate R` selects every ⌈1/R⌉-th request for full per-stage
+//! detail) and a slow threshold (`--trace-slow-ms`). Every request gets
+//! a [`TraceCtx`] with a process-unique id; *unsampled* requests record
+//! nothing on the way through — their whole cost is the few atomics
+//! [`begin_request`]/[`finish_request`] touch (`trace_overhead` bench)
+//! — except that a request which finishes slow, errored, BUSY or
+//! expired unconditionally records its `Request` summary span, so the
+//! outliers the sampler missed are still visible (detail spans for
+//! them are gone; only sampled requests carry full breakdowns).
+//!
+//! **Bit-identity invariant.** Tracing writes only to this side ring;
+//! replies never carry trace state, so reply bytes with tracing on are
+//! byte-identical to tracing off on all three codecs — gated end to
+//! end in `rust/tests/obs.rs`.
+//!
+//! **Cross-process stitching.** The coordinator propagates a sampled
+//! request's id to remote shard hosts in the v3 `FLAG_TRACE` field;
+//! the host adopts the id, so one request's spans carry one `TraceId`
+//! across processes and a fetched trace can be merged by id.
+//!
+//! **Ring.** Fixed-capacity seqlock slots, all-atomic (no lock, no
+//! allocation on the hot path): a writer claims a ticket with one
+//! `fetch_add`, zeroes the slot's sequence word, writes the record
+//! fields, then publishes by storing `ticket + 1`. A reader that
+//! observes a zero or changed sequence word skips the slot — a torn
+//! read costs one dropped span, never a lock or a wrong record.
+//!
+//! **CWKT.** Same golden-hex discipline as CWKP/CWKS/CWKR:
+//!
+//! ```text
+//! "CWKT" | schema u16 | count u32
+//!        | count × { trace_id u64 | stage u8 | flags u8 | tag u32
+//!                  | start_us u64 | dur_us u64 }            (30 B each)
+//!        | crc32 u32                  (IEEE 802.3, over all prior bytes)
+//! ```
+//!
+//! all big-endian; bad magic/schema, any truncation and any bit flip
+//! are typed decode errors (property-tested here, golden bytes shared
+//! with `python/tests/test_proto_frames.py`).
+
+use crate::error::{Error, Result};
+use crate::registry::checkpoint::crc32;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Pipeline stage a span attributes time to. The discriminants are the
+/// CWKT wire bytes — append-only, never renumber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Wire bytes → typed [`crate::proto::Request`] (either codec).
+    Decode = 0,
+    /// QoS admission gate (lane CAS + token bucket).
+    Admission = 1,
+    /// Batcher queue wait: submit → drained into a batch.
+    QueueWait = 2,
+    /// Kernel execution of the drained batch (tag = resolved
+    /// [`crate::runtime::plan::KernelPlan`] path).
+    KernelExec = 3,
+    /// Sharded scatter: enqueue every shard's slice (tag = shard count).
+    Scatter = 4,
+    /// Sharded gather: wait for every shard + global WTA re-merge.
+    Gather = 5,
+    /// One `TcpShard` framed round-trip (tag = shard index).
+    Rpc = 6,
+    /// Checkpoint push to one standby follower.
+    Replicate = 7,
+    /// Local checkpoint save (shard files + manifest commit).
+    Checkpoint = 8,
+    /// Whole-request summary span (dispatch → reply ready).
+    Request = 9,
+}
+
+impl Stage {
+    pub fn from_u8(b: u8) -> Option<Stage> {
+        Some(match b {
+            0 => Stage::Decode,
+            1 => Stage::Admission,
+            2 => Stage::QueueWait,
+            3 => Stage::KernelExec,
+            4 => Stage::Scatter,
+            5 => Stage::Gather,
+            6 => Stage::Rpc,
+            7 => Stage::Replicate,
+            8 => Stage::Checkpoint,
+            9 => Stage::Request,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Decode => "decode",
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::KernelExec => "kernel_exec",
+            Stage::Scatter => "scatter",
+            Stage::Gather => "gather",
+            Stage::Rpc => "rpc",
+            Stage::Replicate => "replicate",
+            Stage::Checkpoint => "checkpoint",
+            Stage::Request => "request",
+        }
+    }
+
+    /// Parse a CLI stage filter (the inverse of [`Stage::name`]).
+    pub fn parse(s: &str) -> Option<Stage> {
+        (0..=9u8).filter_map(Stage::from_u8).find(|st| st.name() == s)
+    }
+}
+
+/// Span flags (bitmask; shared with the CWKT wire byte).
+pub const SPAN_ERROR: u8 = 1;
+pub const SPAN_SLOW: u8 = 2;
+pub const SPAN_BUSY: u8 = 4;
+pub const SPAN_EXPIRED: u8 = 8;
+
+/// One captured span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Process-unique per-request id (propagated to shard hosts via
+    /// `FLAG_TRACE`, so it stitches across processes).
+    pub trace_id: u64,
+    pub stage: Stage,
+    /// `SPAN_*` bits.
+    pub flags: u8,
+    /// Stage-specific detail: kernel-plan tag for `KernelExec`, shard
+    /// count for `Scatter`/`Gather`, shard index for `Rpc`, 0 otherwise.
+    pub tag: u32,
+    /// Microseconds since the process trace epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Per-request trace context: the id plus whether this request was
+/// head-sampled for full per-stage detail. `Copy` so it rides through
+/// closures and thread spawns freely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// 0 = tracing disabled when the request arrived.
+    pub id: u64,
+    pub sampled: bool,
+}
+
+impl TraceCtx {
+    pub fn none() -> TraceCtx {
+        TraceCtx {
+            id: 0,
+            sampled: false,
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.id != 0
+    }
+}
+
+// ------------------------------------------------------------- the ring
+
+/// One seqlock ring slot. `seq == 0` means empty/being-written;
+/// `seq == ticket + 1` publishes the ticket's record.
+struct Slot {
+    seq: AtomicU64,
+    trace_id: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    /// `stage | flags << 8 | tag << 16`
+    meta: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace_id: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+        }
+    }
+}
+
+fn pack_meta(stage: Stage, flags: u8, tag: u32) -> u64 {
+    stage as u64 | (flags as u64) << 8 | (tag as u64) << 16
+}
+
+fn unpack_meta(meta: u64) -> Option<(Stage, u8, u32)> {
+    let stage = Stage::from_u8((meta & 0xFF) as u8)?;
+    Some((stage, (meta >> 8) as u8, (meta >> 16) as u32))
+}
+
+/// Ring capacity when [`configure`] never names one: 64Ki spans
+/// (~2.5 MiB of atomics), enough for several seconds of sampled
+/// traffic at serving rates.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// The per-process tracer: runtime-switchable config atomics over a
+/// fixed-capacity span ring. One per process behind a `OnceLock` — the
+/// ring is allocated on first touch and never resized.
+pub struct Tracer {
+    enabled: AtomicBool,
+    /// Head-sample every `period`-th request; 0 = sample nothing.
+    period: AtomicU64,
+    /// Slow-capture threshold; 0 = slow capture off.
+    slow_us: AtomicU64,
+    head: AtomicU64,
+    next_id: AtomicU64,
+    tick: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Tracer {
+    fn new(capacity: usize) -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            period: AtomicU64::new(0),
+            slow_us: AtomicU64::new(0),
+            head: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            tick: AtomicU64::new(0),
+            slots: (0..capacity.max(1)).map(|_| Slot::empty()).collect(),
+        }
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        // seqlock write: unpublish, fill, republish with the ticket
+        slot.seq.store(0, Ordering::Release);
+        slot.trace_id.store(rec.trace_id, Ordering::Relaxed);
+        slot.start_us.store(rec.start_us, Ordering::Relaxed);
+        slot.dur_us.store(rec.dur_us, Ordering::Relaxed);
+        slot.meta
+            .store(pack_meta(rec.stage, rec.flags, rec.tag), Ordering::Relaxed);
+        slot.seq.store(ticket + 1, Ordering::Release);
+    }
+}
+
+static TRACER: OnceLock<Tracer> = OnceLock::new();
+
+fn tracer() -> &'static Tracer {
+    TRACER.get_or_init(|| Tracer::new(DEFAULT_TRACE_CAPACITY))
+}
+
+/// The process trace epoch every `start_us` is relative to.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn us_since_epoch(t: Instant) -> u64 {
+    t.checked_duration_since(epoch())
+        .unwrap_or_default()
+        .as_micros() as u64
+}
+
+/// Arm the tracer: head-sample at `rate` (requests per request, so 1.0
+/// samples everything, 0.01 every 100th; ≤ 0 samples nothing but slow/
+/// error capture still runs) and unconditionally capture requests
+/// slower than `slow_ms` (0 = off). Callable again to retune a live
+/// process; the ring keeps its first capacity.
+pub fn configure(rate: f64, slow_ms: u64) {
+    epoch();
+    let t = tracer();
+    let period = if rate > 0.0 {
+        ((1.0 / rate).round() as u64).max(1)
+    } else {
+        0
+    };
+    t.period.store(period, Ordering::Relaxed);
+    t.slow_us.store(slow_ms.saturating_mul(1000), Ordering::Relaxed);
+    t.enabled.store(true, Ordering::Relaxed);
+}
+
+/// Stop capturing (the ring contents stay readable).
+pub fn disable() {
+    tracer().enabled.store(false, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    tracer().enabled.load(Ordering::Relaxed)
+}
+
+/// Drop every captured span and restart the sampling phase (tests,
+/// `repro trace --reset` via CMD_FETCH_TRACE consumers).
+pub fn reset() {
+    let t = tracer();
+    for slot in t.slots.iter() {
+        slot.seq.store(0, Ordering::Release);
+    }
+    t.head.store(0, Ordering::Relaxed);
+    t.tick.store(0, Ordering::Relaxed);
+}
+
+/// Allocate a request's trace context: a fresh id plus the head-sample
+/// decision. Disabled tracing returns the inert ctx — the entire
+/// unsampled hot-path cost is the loads/adds in here and in
+/// [`finish_request`] (measured by the `trace_overhead` bench).
+pub fn begin_request() -> TraceCtx {
+    let t = tracer();
+    if !t.enabled.load(Ordering::Relaxed) {
+        return TraceCtx::none();
+    }
+    let id = t.next_id.fetch_add(1, Ordering::Relaxed);
+    let period = t.period.load(Ordering::Relaxed);
+    let sampled = period > 0 && t.tick.fetch_add(1, Ordering::Relaxed) % period == 0;
+    TraceCtx { id, sampled }
+}
+
+/// Adopt a trace id propagated from another process (`FLAG_TRACE`).
+/// The sender only propagates sampled requests, so an adopted ctx is
+/// sampled — its spans stitch to the coordinator's by id.
+pub fn adopt(id: u64) -> TraceCtx {
+    if id == 0 || !enabled() {
+        return TraceCtx::none();
+    }
+    TraceCtx { id, sampled: true }
+}
+
+/// Record one detail span. No-op unless the ctx was sampled.
+pub fn record(ctx: TraceCtx, stage: Stage, tag: u32, start: Instant, dur: Duration) {
+    record_flagged(ctx, stage, 0, tag, start, dur);
+}
+
+/// [`record`] with span flags (`SPAN_BUSY` on a shed admission, ...).
+pub fn record_flagged(
+    ctx: TraceCtx,
+    stage: Stage,
+    flags: u8,
+    tag: u32,
+    start: Instant,
+    dur: Duration,
+) {
+    if !ctx.sampled {
+        return;
+    }
+    let t = tracer();
+    if !t.enabled.load(Ordering::Relaxed) {
+        return;
+    }
+    t.push(SpanRecord {
+        trace_id: ctx.id,
+        stage,
+        flags,
+        tag,
+        start_us: us_since_epoch(start),
+        dur_us: dur.as_micros() as u64,
+    });
+}
+
+/// Close a request: records its `Request` summary span when the
+/// request was sampled, **or unconditionally** when it finished slow
+/// (≥ the configured threshold) or carries error/BUSY/expired flags —
+/// the outliers head sampling would miss.
+pub fn finish_request(ctx: TraceCtx, start: Instant, flags: u8) {
+    if ctx.id == 0 {
+        return;
+    }
+    let t = tracer();
+    if !t.enabled.load(Ordering::Relaxed) {
+        return;
+    }
+    let dur = start.elapsed();
+    let slow_us = t.slow_us.load(Ordering::Relaxed);
+    let mut flags = flags;
+    if slow_us > 0 && dur.as_micros() as u64 >= slow_us {
+        flags |= SPAN_SLOW;
+    }
+    if !ctx.sampled && flags == 0 {
+        return;
+    }
+    t.push(SpanRecord {
+        trace_id: ctx.id,
+        stage: Stage::Request,
+        flags,
+        tag: 0,
+        start_us: us_since_epoch(start),
+        dur_us: dur.as_micros() as u64,
+    });
+}
+
+// ------------------------------------------- thread-local context flow
+
+thread_local! {
+    static CURRENT: Cell<TraceCtx> = const { Cell::new(TraceCtx { id: 0, sampled: false }) };
+}
+
+/// The calling thread's current request ctx ([`TraceCtx::none`] outside
+/// a request). How deeper layers (batcher submit, shard scatter, QoS
+/// admit) find the request they are working for without threading a
+/// parameter through every signature.
+pub fn current() -> TraceCtx {
+    CURRENT.with(|c| c.get())
+}
+
+/// Scope guard restoring the previous ctx on drop.
+pub struct CtxGuard {
+    prev: TraceCtx,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT.with(|c| c.set(prev));
+    }
+}
+
+/// Install `ctx` as the thread's current request for the guard's
+/// lifetime (server dispatch does this around `handle`; shard worker
+/// threads re-install the captured ctx).
+pub fn set_current(ctx: TraceCtx) -> CtxGuard {
+    CtxGuard {
+        prev: CURRENT.with(|c| c.replace(ctx)),
+    }
+}
+
+// ------------------------------------------------------ snapshot + CWKT
+
+/// Every currently-published span, oldest first (by capture order as
+/// far as the seqlock preserves it, then start time). Slots mid-write
+/// are skipped, never blocked on.
+pub fn snapshot() -> Vec<SpanRecord> {
+    let t = tracer();
+    let mut out = Vec::new();
+    for slot in t.slots.iter() {
+        let s1 = slot.seq.load(Ordering::Acquire);
+        if s1 == 0 {
+            continue;
+        }
+        let trace_id = slot.trace_id.load(Ordering::Relaxed);
+        let start_us = slot.start_us.load(Ordering::Relaxed);
+        let dur_us = slot.dur_us.load(Ordering::Relaxed);
+        let meta = slot.meta.load(Ordering::Relaxed);
+        if slot.seq.load(Ordering::Acquire) != s1 {
+            continue; // torn: a writer lapped us mid-read
+        }
+        if let Some((stage, flags, tag)) = unpack_meta(meta) {
+            out.push(SpanRecord {
+                trace_id,
+                stage,
+                flags,
+                tag,
+                start_us,
+                dur_us,
+            });
+        }
+    }
+    out.sort_by_key(|r| (r.start_us, r.trace_id, r.stage as u8));
+    out
+}
+
+/// The ring as CWKT bytes (what `CMD_FETCH_TRACE` replies with).
+pub fn export() -> Vec<u8> {
+    encode_traces(&snapshot())
+}
+
+pub const TRACE_MAGIC: &[u8; 4] = b"CWKT";
+pub const TRACE_SCHEMA: u16 = 1;
+const TRACE_RECORD_LEN: usize = 30;
+
+pub fn encode_traces(recs: &[SpanRecord]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(14 + recs.len() * TRACE_RECORD_LEN);
+    p.extend_from_slice(TRACE_MAGIC);
+    p.extend_from_slice(&TRACE_SCHEMA.to_be_bytes());
+    p.extend_from_slice(&(recs.len() as u32).to_be_bytes());
+    for r in recs {
+        p.extend_from_slice(&r.trace_id.to_be_bytes());
+        p.push(r.stage as u8);
+        p.push(r.flags);
+        p.extend_from_slice(&r.tag.to_be_bytes());
+        p.extend_from_slice(&r.start_us.to_be_bytes());
+        p.extend_from_slice(&r.dur_us.to_be_bytes());
+    }
+    let crc = crc32(&p);
+    p.extend_from_slice(&crc.to_be_bytes());
+    p
+}
+
+pub fn decode_traces(bytes: &[u8]) -> Result<Vec<SpanRecord>> {
+    let err = |why: String| Error::Proto(format!("CWKT trace: {why}"));
+    if bytes.len() < 14 {
+        return Err(err(format!("{} bytes is shorter than a header", bytes.len())));
+    }
+    if &bytes[0..4] != TRACE_MAGIC {
+        return Err(err(format!("bad magic {:02x?}", &bytes[0..4])));
+    }
+    let schema = u16::from_be_bytes([bytes[4], bytes[5]]);
+    if schema != TRACE_SCHEMA {
+        return Err(err(format!("unknown schema {schema}")));
+    }
+    let count = u32::from_be_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]) as usize;
+    let want = 10 + count
+        .checked_mul(TRACE_RECORD_LEN)
+        .ok_or_else(|| err("record count overflows".into()))?
+        + 4;
+    if bytes.len() != want {
+        return Err(err(format!(
+            "{} bytes for {count} records (want {want})",
+            bytes.len()
+        )));
+    }
+    let body = &bytes[..bytes.len() - 4];
+    let stored = u32::from_be_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    if crc32(body) != stored {
+        return Err(err("crc mismatch (torn or corrupted trace)".into()));
+    }
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let r = &bytes[10 + i * TRACE_RECORD_LEN..10 + (i + 1) * TRACE_RECORD_LEN];
+        let stage = Stage::from_u8(r[8])
+            .ok_or_else(|| err(format!("unknown stage byte {}", r[8])))?;
+        out.push(SpanRecord {
+            trace_id: u64::from_be_bytes(r[0..8].try_into().unwrap()),
+            stage,
+            flags: r[9],
+            tag: u32::from_be_bytes(r[10..14].try_into().unwrap()),
+            start_us: u64::from_be_bytes(r[14..22].try_into().unwrap()),
+            dur_us: u64::from_be_bytes(r[22..30].try_into().unwrap()),
+        });
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------- aggregation
+
+/// Per-stage latency breakdown over a span set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageSummary {
+    pub stage: Stage,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub total_us: u64,
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// p50/p95/p99/max/total per stage, in stage order.
+pub fn aggregate(recs: &[SpanRecord]) -> Vec<StageSummary> {
+    let mut by_stage: std::collections::BTreeMap<u8, Vec<u64>> = std::collections::BTreeMap::new();
+    for r in recs {
+        by_stage.entry(r.stage as u8).or_default().push(r.dur_us);
+    }
+    by_stage
+        .into_iter()
+        .map(|(stage, mut durs)| {
+            durs.sort_unstable();
+            StageSummary {
+                stage: Stage::from_u8(stage).expect("keyed by a valid stage"),
+                count: durs.len() as u64,
+                p50_us: percentile(&durs, 50.0),
+                p95_us: percentile(&durs, 95.0),
+                p99_us: percentile(&durs, 99.0),
+                max_us: *durs.last().unwrap_or(&0),
+                total_us: durs.iter().fold(0u64, |a, &d| a.saturating_add(d)),
+            }
+        })
+        .collect()
+}
+
+/// One request's critical-path summary: where its time went.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CriticalPath {
+    pub trace_id: u64,
+    /// The `Request` span's duration (0 when only detail spans made it
+    /// into the ring before it wrapped).
+    pub total_us: u64,
+    pub flags: u8,
+    /// The detail stage that consumed the most time.
+    pub dominant: Stage,
+    pub dominant_us: u64,
+}
+
+/// Group spans by trace id and name each request's dominant stage,
+/// slowest request first.
+pub fn critical_paths(recs: &[SpanRecord]) -> Vec<CriticalPath> {
+    let mut by_id: std::collections::BTreeMap<u64, (u64, u8, Stage, u64)> =
+        std::collections::BTreeMap::new();
+    for r in recs {
+        let e = by_id
+            .entry(r.trace_id)
+            .or_insert((0, 0, Stage::Request, 0));
+        if r.stage == Stage::Request {
+            e.0 = e.0.max(r.dur_us);
+            e.1 |= r.flags;
+        } else if r.dur_us >= e.3 {
+            e.2 = r.stage;
+            e.3 = r.dur_us;
+        }
+    }
+    let mut out: Vec<CriticalPath> = by_id
+        .into_iter()
+        .map(|(trace_id, (total_us, flags, dominant, dominant_us))| CriticalPath {
+            trace_id,
+            total_us,
+            flags,
+            dominant,
+            dominant_us,
+        })
+        .collect();
+    out.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.trace_id.cmp(&b.trace_id)));
+    out
+}
+
+/// Render span flags for the CLI (`-` when clean).
+pub fn flag_names(flags: u8) -> String {
+    let mut parts = Vec::new();
+    if flags & SPAN_ERROR != 0 {
+        parts.push("error");
+    }
+    if flags & SPAN_SLOW != 0 {
+        parts.push("slow");
+    }
+    if flags & SPAN_BUSY != 0 {
+        parts.push("busy");
+    }
+    if flags & SPAN_EXPIRED != 0 {
+        parts.push("expired");
+    }
+    if parts.is_empty() {
+        "-".into()
+    } else {
+        parts.join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace_id: u64, stage: Stage, flags: u8, tag: u32, start: u64, dur: u64) -> SpanRecord {
+        SpanRecord {
+            trace_id,
+            stage,
+            flags,
+            tag,
+            start_us: start,
+            dur_us: dur,
+        }
+    }
+
+    // Shared with python/tests/test_proto_frames.py
+    // (test_trace_capture_golden_bytes): two records —
+    // (id=7, kernel_exec, flags=0, tag=2, 100us @ +250us) and
+    // (id=7, request, SLOW, tag=0, 90us @ +400us).
+    const GOLDEN_CWKT_HEX: &str = concat!(
+        "43574b54000100000002",
+        "0000000000000007030000000002000000000000006400000000000000fa",
+        "0000000000000007090200000000000000000000005a0000000000000190",
+        "8278446e",
+    );
+
+    #[test]
+    fn golden_cwkt_bytes_match_python_twin() {
+        let recs = [
+            rec(7, Stage::KernelExec, 0, 2, 100, 250),
+            rec(7, Stage::Request, SPAN_SLOW, 0, 90, 400),
+        ];
+        let bytes = encode_traces(&recs);
+        assert_eq!(hex(&bytes), GOLDEN_CWKT_HEX);
+        assert_eq!(decode_traces(&bytes).unwrap(), recs);
+    }
+
+    #[test]
+    fn cwkt_rejects_truncation_and_bit_flips() {
+        let recs = [
+            rec(1, Stage::Decode, 0, 0, 5, 10),
+            rec(2, Stage::Rpc, SPAN_ERROR, 1, 6, 20),
+            rec(3, Stage::Request, SPAN_BUSY | SPAN_EXPIRED, 0, 7, 30),
+        ];
+        let bytes = encode_traces(&recs);
+        assert_eq!(decode_traces(&bytes).unwrap(), recs);
+        // every truncation is a typed error, never a misparse
+        for cut in 0..bytes.len() {
+            assert!(decode_traces(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // every single-bit flip is caught (crc, magic, schema or count)
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut b = bytes.clone();
+                b[byte] ^= 1 << bit;
+                assert!(
+                    decode_traces(&b).is_err(),
+                    "bit flip at {byte}:{bit} decoded"
+                );
+            }
+        }
+        // trailing bytes are a typed error too
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_traces(&long).is_err());
+        // unknown stage byte rejects before the crc can excuse it
+        let mut unknown = encode_traces(&[rec(1, Stage::Decode, 0, 0, 0, 0)]);
+        unknown[18] = 99; // stage byte of record 0
+        let fixed = crc32(&unknown[..unknown.len() - 4]);
+        let n = unknown.len();
+        unknown[n - 4..].copy_from_slice(&fixed.to_be_bytes());
+        let e = decode_traces(&unknown).unwrap_err().to_string();
+        assert!(e.contains("unknown stage"), "{e}");
+        // empty set round-trips
+        assert_eq!(decode_traces(&encode_traces(&[])).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn cwkt_roundtrip_property() {
+        // seeded pseudo-random record sets round-trip bit-exactly
+        let mut rng = crate::rng::Xoshiro256::new(42);
+        for _ in 0..50 {
+            let n = rng.gen_range(20);
+            let recs: Vec<SpanRecord> = (0..n)
+                .map(|_| {
+                    rec(
+                        rng.next_u64(),
+                        Stage::from_u8(rng.gen_range(10) as u8).unwrap(),
+                        rng.gen_range(16) as u8,
+                        rng.gen_range(1 << 16) as u32,
+                        rng.next_u64() >> 20,
+                        rng.next_u64() >> 20,
+                    )
+                })
+                .collect();
+            assert_eq!(decode_traces(&encode_traces(&recs)).unwrap(), recs);
+        }
+    }
+
+    #[test]
+    fn aggregate_and_critical_paths() {
+        let recs = [
+            rec(1, Stage::QueueWait, 0, 0, 0, 100),
+            rec(1, Stage::KernelExec, 0, 3, 100, 900),
+            rec(1, Stage::Request, 0, 0, 0, 1000),
+            rec(2, Stage::QueueWait, 0, 0, 5, 600),
+            rec(2, Stage::KernelExec, 0, 3, 605, 200),
+            rec(2, Stage::Request, SPAN_SLOW, 0, 5, 2000),
+        ];
+        let agg = aggregate(&recs);
+        let kq = agg.iter().find(|s| s.stage == Stage::QueueWait).unwrap();
+        assert_eq!((kq.count, kq.max_us, kq.total_us), (2, 600, 700));
+        let req = agg.iter().find(|s| s.stage == Stage::Request).unwrap();
+        assert_eq!(req.p99_us, 2000);
+        let paths = critical_paths(&recs);
+        assert_eq!(paths[0].trace_id, 2, "slowest request first");
+        assert_eq!(paths[0].dominant, Stage::QueueWait);
+        assert_eq!(paths[0].flags, SPAN_SLOW);
+        assert_eq!(paths[1].dominant, Stage::KernelExec);
+        assert_eq!(paths[1].total_us, 1000);
+    }
+
+    #[test]
+    fn stage_names_roundtrip() {
+        for b in 0..=9u8 {
+            let s = Stage::from_u8(b).unwrap();
+            assert_eq!(Stage::parse(s.name()), Some(s));
+        }
+        assert_eq!(Stage::from_u8(10), None);
+        assert_eq!(Stage::parse("nope"), None);
+    }
+
+    #[test]
+    fn flag_rendering() {
+        assert_eq!(flag_names(0), "-");
+        assert_eq!(flag_names(SPAN_ERROR | SPAN_EXPIRED), "error+expired");
+        assert_eq!(flag_names(SPAN_SLOW | SPAN_BUSY), "slow+busy");
+    }
+
+    fn hex(b: &[u8]) -> String {
+        b.iter().map(|x| format!("{x:02x}")).collect()
+    }
+}

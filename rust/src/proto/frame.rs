@@ -16,6 +16,7 @@
 //!
 //! REQUEST  := id u64 | op u8 | flags u8
 //!             | deadline_ms u32           (iff flags bit 1)
+//!             | trace u64                 (iff flags bit 5; v3)
 //!             | mlen u16 | model utf8     (iff flags bit 3; v3)
 //!             | gcount u32 | gcount × f32 (iff flags bit 4; v3, LEARN)
 //!             | body
@@ -24,6 +25,7 @@
 //! flags    := bit 0 sparse_reply | bit 1 has_deadline
 //!             | bit 2 counters_only | bit 3 has_model (v3)
 //!             | bit 4 has_gates (v3, LEARN only)
+//!             | bit 5 has_trace (v3, propagated trace id)
 //!             (other bits: error)
 //! body     := nvolleys u16 | volley*                   (op 1..5)
 //!           | cmd u8 | cmd_fields                      (op 6)
@@ -32,6 +34,7 @@
 //! cmd      := 1 LIST | 2 CREATE | 3 SAVE | 4 LOAD | 5 UNLOAD
 //!           | 6 CREATE_COLUMNS | 7 FETCH_CKPT | 8 PUT_CKPT
 //!           | 9 PUT_SHARD | 10 PUT_MANIFEST            (v3, dist tier)
+//!           | 11 FETCH_TRACE                           (v3, obs; no fields)
 //! CREATE   := name str16 | n u32 | theta f32 | seed u64
 //! SAVE/LOAD/UNLOAD/FETCH_CKPT := name str16
 //! CREATE_COLUMNS := name str16 | index u32 | n u32 | theta f32
@@ -66,8 +69,10 @@
 //!
 //! **v2 ↔ v3.** Version 3 adds exactly the constructs marked `(v3)`
 //! above: the tagged optional model-id field (flag bit 3), the ADMIN
-//! op, the ADMIN response status, and the BUSY response status (QoS
-//! load shedding, PR 7). A v2 frame is byte-for-byte a valid v3 frame
+//! op, the ADMIN response status, the BUSY response status (QoS
+//! load shedding, PR 7), and the propagated trace-id field (flag
+//! bit 5, PR 9 — coordinator→shard-host span stitching, never set by
+//! end-user clients and never echoed in replies). A v2 frame is byte-for-byte a valid v3 frame
 //! with those absent, so a v2 client negotiates version 2 and keeps
 //! working unchanged; a v3 client that negotiated version 2 must not
 //! emit model ids or admin ops ([`crate::server::FramedClient`] refuses
@@ -260,6 +265,7 @@ const FLAG_DEADLINE: u8 = 2;
 const FLAG_COUNTERS_ONLY: u8 = 4;
 const FLAG_MODEL: u8 = 8;
 const FLAG_GATES: u8 = 16;
+const FLAG_TRACE: u8 = 32;
 
 const OP_LEARN: u8 = 2;
 const OP_ADMIN: u8 = 6;
@@ -274,6 +280,7 @@ const CMD_FETCH_CKPT: u8 = 7;
 const CMD_PUT_CKPT: u8 = 8;
 const CMD_PUT_SHARD: u8 = 9;
 const CMD_PUT_MANIFEST: u8 = 10;
+const CMD_FETCH_TRACE: u8 = 11;
 
 fn op_to_u8(op: &Op) -> u8 {
     match op {
@@ -409,6 +416,7 @@ fn encode_model_cmd(p: &mut Vec<u8>, cmd: &ModelCmd) -> Result<()> {
             put_str(p, name)?;
             put_bytes(p, bytes)?;
         }
+        ModelCmd::FetchTrace => p.push(CMD_FETCH_TRACE),
     }
     Ok(())
 }
@@ -449,6 +457,7 @@ fn decode_model_cmd(cur: &mut Cur) -> Result<ModelCmd> {
             name: cur.str16()?,
             bytes: cur.blob32()?,
         }),
+        CMD_FETCH_TRACE => Ok(ModelCmd::FetchTrace),
         other => Err(Error::Proto(format!("unknown admin cmd {other}"))),
     }
 }
@@ -485,9 +494,15 @@ pub fn encode_request(req: &Request) -> Result<Vec<u8>> {
         }
         flags |= FLAG_GATES;
     }
+    if req.opts.trace.is_some() {
+        flags |= FLAG_TRACE;
+    }
     p.push(flags);
     if let Some(ms) = req.opts.deadline_ms {
         p.extend_from_slice(&ms.to_be_bytes());
+    }
+    if let Some(trace) = req.opts.trace {
+        p.extend_from_slice(&trace.to_be_bytes());
     }
     if let Some(model) = &req.opts.model {
         put_str(&mut p, model)?;
@@ -526,8 +541,12 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
     let id = cur.u64()?;
     let op_byte = cur.u8()?;
     let flags = cur.u8()?;
-    let known =
-        FLAG_SPARSE_REPLY | FLAG_DEADLINE | FLAG_COUNTERS_ONLY | FLAG_MODEL | FLAG_GATES;
+    let known = FLAG_SPARSE_REPLY
+        | FLAG_DEADLINE
+        | FLAG_COUNTERS_ONLY
+        | FLAG_MODEL
+        | FLAG_GATES
+        | FLAG_TRACE;
     if flags & !known != 0 {
         return Err(Error::Proto(format!("unknown request flags {flags:#x}")));
     }
@@ -538,6 +557,11 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
     }
     let deadline_ms = if flags & FLAG_DEADLINE != 0 {
         Some(cur.u32()?)
+    } else {
+        None
+    };
+    let trace = if flags & FLAG_TRACE != 0 {
+        Some(cur.u64()?)
     } else {
         None
     };
@@ -575,6 +599,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
             deadline_ms,
             counters_only: flags & FLAG_COUNTERS_ONLY != 0,
             model,
+            trace,
         },
     })
 }
@@ -976,6 +1001,7 @@ mod tests {
                     deadline_ms: Some(1234),
                     counters_only: true,
                     model: Some("column-α".into()),
+                    trace: Some(0x0123_4567_89AB_CDEF),
                 },
             };
             let enc = encode_request(&req).unwrap();

@@ -130,13 +130,18 @@ pub enum ModelCmd {
     /// the atomic rename — a generation missing or corrupting any
     /// slice is rejected as a unit and the prior one keeps serving.
     PutManifest { name: String, bytes: Vec<u8> },
+    /// Drain the process's captured trace-span ring as CWKT bytes
+    /// (answered with [`AdminReply::Ckpt`]; see `crate::obs` and
+    /// DESIGN.md §2.8). Nullary like `List` — traces are per-process,
+    /// not per-model.
+    FetchTrace,
 }
 
 impl ModelCmd {
     /// The model name a command addresses (`List` addresses none).
     pub fn name(&self) -> Option<&str> {
         match self {
-            ModelCmd::List => None,
+            ModelCmd::List | ModelCmd::FetchTrace => None,
             ModelCmd::Create { name, .. }
             | ModelCmd::Save { name }
             | ModelCmd::Load { name }
@@ -195,6 +200,12 @@ pub struct RequestOpts {
     /// v3 frame codec and as the `@model` prefix token in the text
     /// protocol; an unknown name is a typed error, never a fallback.
     pub model: Option<String>,
+    /// Trace id propagated from another process (`FLAG_TRACE`, v3
+    /// only): the coordinator stamps a sampled request's id onto its
+    /// shard RPCs so the remote host's spans stitch to the same
+    /// request (`crate::obs::adopt`, DESIGN.md §2.8). Never set by
+    /// end-user clients; replies never echo it.
+    pub trace: Option<u64>,
 }
 
 /// One typed request: the whole serving surface in a single struct.
@@ -282,6 +293,13 @@ impl Request {
     /// Attach pre-computed STDP gates (`Learn` over frame v3 only).
     pub fn with_gates(mut self, gates: Vec<f32>) -> Request {
         self.gates = Some(gates);
+        self
+    }
+
+    /// Stamp a propagated trace id (frame v3 only; see
+    /// [`RequestOpts::trace`]).
+    pub fn with_trace(mut self, id: u64) -> Request {
+        self.opts.trace = Some(id);
         self
     }
 }
@@ -395,6 +413,10 @@ mod tests {
         let m = Request::infer(vec![SpikeVolley::dense(vec![1.0])]).with_model("mnist");
         assert_eq!(m.opts.model.as_deref(), Some("mnist"));
 
+        let t = Request::infer(vec![SpikeVolley::dense(vec![1.0])]).with_trace(77);
+        assert_eq!(t.opts.trace, Some(77));
+        assert_eq!(Request::infer(vec![]).opts.trace, None);
+
         let a = Request::admin(ModelCmd::Save {
             name: "mnist".into(),
         });
@@ -406,6 +428,7 @@ mod tests {
     #[test]
     fn model_cmd_names() {
         assert_eq!(ModelCmd::List.name(), None);
+        assert_eq!(ModelCmd::FetchTrace.name(), None);
         for cmd in [
             ModelCmd::Create {
                 name: "a".into(),

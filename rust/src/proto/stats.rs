@@ -119,6 +119,16 @@ impl StatsSnapshot {
                 let (name, field) = rest
                     .rsplit_once('.')
                     .ok_or_else(|| Error::Proto(format!("bad hist key `{key}`")))?;
+                // additive growth: an unknown hist field is skipped
+                // *before* the entry lookup, so a future field on a
+                // hist this reader has never seen cannot conjure a
+                // spurious empty histogram
+                if !matches!(
+                    field,
+                    "count" | "max_us" | "mean_us" | "p50_us" | "p95_us" | "p99_us"
+                ) {
+                    continue;
+                }
                 let h = snap.hists.entry(name.to_string()).or_default();
                 match field {
                     "count" => h.count = parse_num(key, value)?,
@@ -127,7 +137,7 @@ impl StatsSnapshot {
                     "p50_us" => h.p50_us = parse_num(key, value)?,
                     "p95_us" => h.p95_us = parse_num(key, value)?,
                     "p99_us" => h.p99_us = parse_num(key, value)?,
-                    _ => {} // additive growth: unknown hist field
+                    _ => unreachable!("field gated above"),
                 }
             }
             // unknown top-level prefixes are skipped (schema=1 contract)
@@ -201,6 +211,51 @@ mod tests {
         let s = StatsSnapshot::new();
         assert_eq!(s.render_kv(), "schema=2\n");
         assert_eq!(StatsSnapshot::parse_kv(&s.render_kv()).unwrap(), s);
+    }
+
+    #[test]
+    fn prop_unknown_rows_never_change_the_parse() {
+        // forward-compat property: a newer server may interleave rows
+        // this reader has never heard of — any mix of unknown top-level
+        // prefixes and unknown hist fields must parse to exactly the
+        // snapshot the known rows alone describe (mirrored in the
+        // python twin, python/tests/test_proto_frames.py)
+        let mut rng = crate::rng::Xoshiro256::new(0xC4A7_57A7);
+        let prefixes = ["future", "gauge", "trace", "meta", "qos2"];
+        let hist_fields = ["p999_us", "stddev_us", "buckets", "v2count"];
+        for _ in 0..50 {
+            let mut s = sample();
+            s.counters
+                .insert(format!("extra_{}", rng.gen_range(1000)), rng.next_u64());
+            let clean = s.render_kv();
+            let mut lines: Vec<String> = clean.lines().map(String::from).collect();
+            for _ in 0..1 + rng.gen_range(8) {
+                let line = match rng.gen_range(3) {
+                    0 => {
+                        let p = prefixes[rng.gen_range(prefixes.len())];
+                        format!("{p}.k{}={}", rng.gen_range(100), rng.next_u64())
+                    }
+                    1 => {
+                        let f = hist_fields[rng.gen_range(hist_fields.len())];
+                        format!("hist.request_latency.{f}={}", rng.next_u64())
+                    }
+                    // unknown field on a hist name the reader has never
+                    // seen — must not conjure an empty histogram entry
+                    _ => {
+                        let f = hist_fields[rng.gen_range(hist_fields.len())];
+                        format!("hist.novel_{}.{f}={}", rng.gen_range(10), rng.next_u64())
+                    }
+                };
+                let at = rng.gen_range(lines.len() + 1);
+                lines.insert(at, line);
+            }
+            let noisy = lines.join("\n");
+            assert_eq!(
+                StatsSnapshot::parse_kv(&noisy).unwrap(),
+                StatsSnapshot::parse_kv(&clean).unwrap(),
+                "unknown rows leaked into the parse of:\n{noisy}"
+            );
+        }
     }
 
     #[test]

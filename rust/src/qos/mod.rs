@@ -216,7 +216,34 @@ impl QosGate {
     /// hint to send. Order matters: the lane slot is reserved first
     /// and released again on a throttle, so tokens are only ever spent
     /// by requests that actually enter.
+    ///
+    /// Sampled requests ([`crate::obs::current`]) get an `admission`
+    /// span (tag = lane, `SPAN_BUSY` on a shed); unsampled ones skip
+    /// straight to the decision with zero extra clock reads.
     pub fn admit(&self, lane: Lane, volleys: usize) -> std::result::Result<AdmitPermit<'_>, Shed> {
+        let ctx = crate::obs::current();
+        if !ctx.sampled {
+            return self.admit_inner(lane, volleys);
+        }
+        let t0 = Instant::now();
+        let res = self.admit_inner(lane, volleys);
+        let flags = if res.is_err() { crate::obs::SPAN_BUSY } else { 0 };
+        crate::obs::record_flagged(
+            ctx,
+            crate::obs::Stage::Admission,
+            flags,
+            lane as u32,
+            t0,
+            t0.elapsed(),
+        );
+        res
+    }
+
+    fn admit_inner(
+        &self,
+        lane: Lane,
+        volleys: usize,
+    ) -> std::result::Result<AdmitPermit<'_>, Shed> {
         if !self.cfg.enabled {
             return Ok(AdmitPermit {
                 gate: self,

@@ -1069,6 +1069,9 @@ impl ModelRegistry {
                 .create_columns(&name, index, n, theta, seed, start, end)
                 .map(|info| AdminReply::Models(vec![info])),
             ModelCmd::FetchCkpt { name } => self.fetch_ckpt(&name).map(AdminReply::Ckpt),
+            // process-wide, not per-model: the trace ring is shared by
+            // every slot this registry serves
+            ModelCmd::FetchTrace => Ok(AdminReply::Ckpt(crate::obs::export())),
             ModelCmd::PutCkpt { name, bytes } => self
                 .put_ckpt(&name, &bytes)
                 .map(|_| AdminReply::Ok(format!("restored {name} from pushed checkpoint"))),

@@ -329,6 +329,26 @@ impl KernelPlan {
         self.simd
     }
 
+    /// The plan compressed into a trace tag: resolved path in the low
+    /// byte (`0` scalar / `1` simd / `2` compacted / `3` auto), SIMD
+    /// level in the next (`0` none / `1` sse2 / `2` avx2). This is what
+    /// a `kernel_exec` span carries ([`crate::obs`]) so a captured
+    /// trace names the code path that served the request.
+    pub fn tag(&self) -> u32 {
+        let path = match self.path {
+            KernelPath::Scalar => 0u32,
+            KernelPath::Simd => 1,
+            KernelPath::Compacted => 2,
+            KernelPath::Auto => 3,
+        };
+        let simd = match self.simd {
+            SimdLevel::None => 0u32,
+            SimdLevel::Sse2 => 1,
+            SimdLevel::Avx2 => 2,
+        };
+        path | (simd << 8)
+    }
+
     /// The auto path's per-row decision — shared with the serving
     /// metrics so `STATS` counters match kernel execution exactly.
     pub fn row_path(&self, active: usize, n: usize, theta: f32) -> RowPath {

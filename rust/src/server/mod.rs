@@ -115,6 +115,53 @@ impl ServerCore {
     /// slot lookup is a read-lock + `Arc` clone, so the infer/learn hot
     /// path never contends with admin ops beyond that.
     pub fn handle(&self, req: Request, received: Instant) -> Response {
+        self.handle_traced(req, received, None)
+    }
+
+    /// [`handle`](ServerCore::handle) with the codec's decode timing
+    /// attached (the request's `Decode` span when it is sampled).
+    ///
+    /// This is also where a request's trace context is born: a
+    /// propagated id (`FLAG_TRACE`, set by a coordinator on its shard
+    /// RPCs) is adopted so the spans recorded here stitch to the
+    /// originating request; otherwise [`crate::obs::begin_request`]
+    /// allocates a fresh id and takes the head-sampling decision. The
+    /// ctx rides a thread-local for the duration of dispatch — the QoS
+    /// gate, batcher and shard layers pick it up from there — and the
+    /// request's summary span (with error/BUSY/expired flags) is
+    /// recorded on the way out. None of this touches the `Response`,
+    /// which is what keeps reply bytes bit-identical under tracing.
+    pub fn handle_traced(
+        &self,
+        req: Request,
+        received: Instant,
+        decode: Option<Duration>,
+    ) -> Response {
+        let ctx = match req.opts.trace {
+            Some(id) => crate::obs::adopt(id),
+            None => crate::obs::begin_request(),
+        };
+        let _ctx_guard = crate::obs::set_current(ctx);
+        if let Some(dur) = decode {
+            crate::obs::record(ctx, crate::obs::Stage::Decode, 0, received, dur);
+        }
+        let resp = self.dispatch(req, received);
+        let mut flags = 0u8;
+        match &resp.outcome {
+            Outcome::Error(e) => {
+                flags |= crate::obs::SPAN_ERROR;
+                if e.contains("deadline") {
+                    flags |= crate::obs::SPAN_EXPIRED;
+                }
+            }
+            Outcome::Busy { .. } => flags |= crate::obs::SPAN_BUSY,
+            _ => {}
+        }
+        crate::obs::finish_request(ctx, received, flags);
+        resp
+    }
+
+    fn dispatch(&self, req: Request, received: Instant) -> Response {
         let deadline = req.opts.deadline_ms.map(|ms| received + Duration::from_millis(ms as u64));
         // >=, so a 0 ms budget is deterministically expired
         if deadline.is_some_and(|d| Instant::now() >= d) {
@@ -491,15 +538,21 @@ fn serve_framed(
                     if version < 3
                         && (req.opts.model.is_some()
                             || req.gates.is_some()
+                            || req.opts.trace.is_some()
                             || matches!(req.op, Op::Admin(_))) =>
                 {
                     Response::error(
                         req.id,
-                        "model routing, admin ops and learn gates need protocol v3 \
-                         (this connection negotiated v2)",
+                        "model routing, admin ops, learn gates and trace ids need \
+                         protocol v3 (this connection negotiated v2)",
                     )
                 }
-                Ok(req) => core.handle(req, received),
+                Ok(req) => {
+                    // decode cost is only measured when the tracer is
+                    // live — the disabled hot path takes zero clock reads
+                    let decode = crate::obs::enabled().then(|| received.elapsed());
+                    core.handle_traced(req, received, decode)
+                }
             }
         };
         // the negotiated version caps the *reply* surface too: a QoS
@@ -558,7 +611,8 @@ fn serve_text(
         let reply = match text_request(&core, line) {
             Ok((req, t_max)) => {
                 let sparse_reply = req.opts.sparse_reply;
-                let resp = core.handle(req, received);
+                let decode = crate::obs::enabled().then(|| received.elapsed());
+                let resp = core.handle_traced(req, received, decode);
                 let rendered = text::render_response(&resp, sparse_reply, t_max);
                 if matches!(resp.outcome, Outcome::Bye) {
                     out.write_all(rendered.as_bytes())?;
@@ -990,11 +1044,12 @@ impl FramedClient {
                 if self.version < 3
                     && (req.opts.model.is_some()
                         || req.gates.is_some()
+                        || req.opts.trace.is_some()
                         || matches!(req.op, Op::Admin(_)))
                 {
                     return Err(Error::Proto(format!(
-                        "negotiated protocol v{} cannot carry model routing, admin ops \
-                         or learn gates",
+                        "negotiated protocol v{} cannot carry model routing, admin ops, \
+                         learn gates or trace ids",
                         self.version
                     )));
                 }
@@ -1169,6 +1224,16 @@ impl FramedClient {
         let req = Request::learn(volleys).with_model(model).with_gates(gates);
         let resp = self.call(req)?;
         Ok(resp.results()?.to_vec())
+    }
+
+    /// Snapshot the server process's captured trace ring as CWKT bytes
+    /// ([`crate::obs::decode_traces`] parses them). Non-destructive:
+    /// the ring keeps its spans until capacity recycles them.
+    pub fn fetch_trace(&mut self) -> Result<Vec<u8>> {
+        match self.call_admin(ModelCmd::FetchTrace)? {
+            AdminReply::Ckpt(bytes) => Ok(bytes),
+            other => Err(Error::Proto(format!("expected trace bytes, got {other:?}"))),
+        }
     }
 
     /// Typed stats for one model only (plain, unprefixed keys).

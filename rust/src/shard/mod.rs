@@ -83,9 +83,10 @@ use crate::runtime::{BackendKind, Manifest, Tensor};
 use crate::server::ClientConfig;
 use crate::volley::{SpikeVolley, VolleyResult};
 use manifest::{shard_path, ShardEntry, ShardManifest};
+use std::collections::HashMap;
 use std::ops::Range;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
@@ -136,6 +137,9 @@ struct RemoteState {
     retry: RetryPolicy,
     /// Standby host pool, consumed LIFO by [`ShardedModel::failover`].
     standbys: Mutex<Vec<String>>,
+    /// Last checkpoint generation each standby acknowledged — what the
+    /// `replication_lag_generations` gauge is computed from.
+    replicated: Mutex<HashMap<String, u64>>,
 }
 
 /// K column-shard transports behind one model-shaped face: same
@@ -182,6 +186,10 @@ pub struct ShardedModel {
     learn_chunk: usize,
     /// Remote provisioning + standby pool; `None` in-process.
     remote: Option<RemoteState>,
+    /// Checkpoint generation counter: bumped once per committed
+    /// [`ShardedModel::save_checkpoints`]; replication lag is measured
+    /// in these units.
+    generation: AtomicU64,
 }
 
 /// Owned per-shard copies of one scatter payload: K−1 clones plus the
@@ -242,6 +250,7 @@ impl ShardedModel {
             stopped: AtomicBool::new(false),
             learn_chunk: batcher.max_batch,
             remote: None,
+            generation: AtomicU64::new(0),
         })
     }
 
@@ -310,7 +319,9 @@ impl ShardedModel {
                 client,
                 retry,
                 standbys: Mutex::new(standbys),
+                replicated: Mutex::new(HashMap::new()),
             }),
+            generation: AtomicU64::new(0),
         })
     }
 
@@ -354,15 +365,24 @@ impl ShardedModel {
         let sparse = volleys.iter().filter(|v| v.is_sparse()).count() as u64;
         self.count_request(sparse, volleys.len() as u64 - sparse);
         let k = shards.len();
+        let ctx = crate::obs::current();
         // scatter: enqueue every shard before blocking on any
+        let t_scatter = ctx.sampled.then(Instant::now);
         let calls: Vec<ShardCall> = shards
             .iter()
             .zip(scatter_payloads(volleys, k))
             .map(|(s, v)| s.begin_infer(v, deadline))
             .collect();
+        if let Some(ts) = t_scatter {
+            crate::obs::record(ctx, crate::obs::Stage::Scatter, k as u32, ts, ts.elapsed());
+        }
+        let t_gather = ctx.sampled.then(Instant::now);
         let parts: Vec<Vec<Result<VolleyResult>>> =
             calls.into_iter().map(|c| c.wait()).collect();
         let merged = self.gather(parts);
+        if let Some(tg) = t_gather {
+            crate::obs::record(ctx, crate::obs::Stage::Gather, k as u32, tg, tg.elapsed());
+        }
         let ok = merged.iter().filter(|r| r.is_ok()).count() as u64;
         self.metrics.incr("volleys_inferred", ok);
         // expiries are detected at each shard's transport (which
@@ -637,6 +657,8 @@ impl ShardedModel {
     /// follower that cannot be reached costs a `replication_errors`
     /// count, not the save — the local commit already succeeded.
     pub fn save_checkpoints(&self, path: &Path) -> Result<()> {
+        let ctx = crate::obs::current();
+        let t_ckpt = ctx.sampled.then(Instant::now);
         {
             let shards = self.shards.read().unwrap();
             let mut entries = Vec::with_capacity(self.plan.k);
@@ -670,20 +692,60 @@ impl ShardedModel {
             m.save(path)?;
             manifest::sweep_stale_shards(path, &m);
         }
+        let generation = self.generation.fetch_add(1, Ordering::AcqRel) + 1;
+        if let Some(t) = t_ckpt {
+            crate::obs::record(
+                ctx,
+                crate::obs::Stage::Checkpoint,
+                self.plan.k as u32,
+                t,
+                t.elapsed(),
+            );
+        }
         // replication runs outside the lock — the generation is
         // committed locally; followers catch up without blocking
         // serving traffic
         if let Some(remote) = &self.remote {
             let followers = remote.standbys.lock().unwrap().clone();
-            for host in followers {
-                match replicate(&host, &remote.client, &remote.retry, &remote.name, path) {
-                    Ok(()) => self.metrics.incr("replications", 1),
+            for (i, host) in followers.iter().enumerate() {
+                let t_rep = ctx.sampled.then(Instant::now);
+                let res = replicate(host, &remote.client, &remote.retry, &remote.name, path);
+                if let Some(t) = t_rep {
+                    let flags = if res.is_err() { crate::obs::SPAN_ERROR } else { 0 };
+                    crate::obs::record_flagged(
+                        ctx,
+                        crate::obs::Stage::Replicate,
+                        flags,
+                        i as u32,
+                        t,
+                        t.elapsed(),
+                    );
+                }
+                match res {
+                    Ok(()) => {
+                        self.metrics.incr("replications", 1);
+                        remote
+                            .replicated
+                            .lock()
+                            .unwrap()
+                            .insert(host.clone(), generation);
+                    }
                     Err(e) => {
                         self.metrics.incr("replication_errors", 1);
                         eprintln!("replication to {host} failed: {e}");
                     }
                 }
             }
+            // gauge, not counter: how many committed generations the
+            // most-behind standby is missing right now (0 with no
+            // standbys left — nothing is waiting on replication)
+            let replicated = remote.replicated.lock().unwrap();
+            let lag = followers
+                .iter()
+                .map(|h| generation.saturating_sub(*replicated.get(h).unwrap_or(&0)))
+                .max()
+                .unwrap_or(0);
+            self.metrics.set("replication_lag_generations", lag);
         }
         Ok(())
     }

@@ -1,0 +1,491 @@
+//! Observability end-to-end gates: the tracing bit-identity invariant
+//! (tracing at rate 1.0 vs disabled leaves every reply **byte**
+//! identical on all three codecs, for single, sharded, and
+//! remote-shard models), cross-host trace stitching over `FLAG_TRACE`,
+//! the `CMD_FETCH_TRACE` admin surface plus its v2 typed refusal, the
+//! distributed-tier stats rows, and the `CWKT` codec property gates.
+//!
+//! Every test here touches the process-global tracer, so they all
+//! serialize on one mutex — the test harness runs `#[test]` fns in
+//! parallel, and two tests flipping [`catwalk::obs::configure`] /
+//! [`catwalk::obs::reset`] under each other would race the ring.
+
+use catwalk::dist::RetryPolicy;
+use catwalk::obs;
+use catwalk::proto::frame::{self, FrameType};
+use catwalk::proto::{ModelCmd, Outcome, Request};
+use catwalk::qos::replay::{boot_shard_host, ShardHost};
+use catwalk::qos::QosConfig;
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use catwalk::rng::Xoshiro256;
+use catwalk::runtime::BackendKind;
+use catwalk::server::{ClientConfig, FramedClient, Server};
+use catwalk::SpikeVolley;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+const N: usize = 16;
+
+/// The process-global tracer is shared by every test in this binary.
+static TRACER: Mutex<()> = Mutex::new(());
+
+fn tracer_lock() -> MutexGuard<'static, ()> {
+    // a panicked holder already failed its own assertions; the tracer
+    // state is re-initialized by each test, so poisoning is harmless
+    TRACER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn native_env() -> bool {
+    matches!(BackendKind::from_env(), Ok(BackendKind::Native))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("catwalk-obs-e2e-{tag}-{}", std::process::id()))
+}
+
+fn client_cfg() -> ClientConfig {
+    ClientConfig {
+        read_timeout: Some(Duration::from_secs(5)),
+        write_timeout: Some(Duration::from_secs(5)),
+        ..ClientConfig::default()
+    }
+}
+
+fn retry_cfg() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 3,
+        base: Duration::from_millis(5),
+        max: Duration::from_millis(20),
+        jitter: 0.2,
+        seed: 7,
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// One complete serving environment: two remote shard hosts plus a
+/// standby, behind a registry holding a single-engine model
+/// (`default`), an in-process sharded model (`quad`), and a
+/// remote-shard model (`dist`) — every engine shape a request can
+/// route to.
+struct Env {
+    server: Arc<Server>,
+    registry: Arc<ModelRegistry>,
+    addr: String,
+    hosts: Vec<ShardHost>,
+    srv: std::thread::JoinHandle<()>,
+}
+
+fn boot_env(scratch: &PathBuf, tag: &str) -> Env {
+    let boot_host = |sub: &str| -> ShardHost {
+        boot_shard_host(
+            std::path::Path::new("/no-such-dir"),
+            &scratch.join(format!("{tag}-{sub}")),
+            QosConfig::default(),
+        )
+        .unwrap()
+    };
+    let host_a = boot_host("host-a");
+    let host_b = boot_host("host-b");
+    let standby = boot_host("standby");
+    let shard_addrs = vec![host_a.addr.clone(), host_b.addr.clone()];
+    let standby_addrs = vec![standby.addr.clone()];
+
+    let spec = ModelSpec {
+        n: N,
+        theta: 6.0,
+        seed: 11,
+    };
+    let registry = Arc::new(
+        ModelRegistry::open(RegistryConfig::default(), "default", spec).unwrap(),
+    );
+    registry.create_sharded("quad", spec, 2).unwrap();
+    registry
+        .create_remote("dist", spec, &shard_addrs, standby_addrs, client_cfg(), retry_cfg())
+        .unwrap();
+
+    let server = Arc::new(Server::with_registry(registry.clone()));
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    Env {
+        server,
+        registry,
+        addr,
+        hosts: vec![host_a, host_b, standby],
+        srv,
+    }
+}
+
+fn shutdown(env: Env) {
+    env.server
+        .stop_handle()
+        .store(true, std::sync::atomic::Ordering::Release);
+    env.srv.join().unwrap();
+    for h in env.hosts {
+        h.shutdown();
+    }
+    drop(env.registry);
+}
+
+fn random_volley(rng: &mut Xoshiro256) -> SpikeVolley {
+    SpikeVolley::dense(
+        (0..N)
+            .map(|_| {
+                if rng.gen_bool(0.3) {
+                    (rng.gen_f64() * 8.0) as f32
+                } else {
+                    16.0
+                }
+            })
+            .collect(),
+    )
+}
+
+/// A text-codec volley with integral spike times, so the line renders
+/// identically on every run: `t_max` (16) = silent.
+fn text_volley(rng: &mut Xoshiro256) -> String {
+    (0..N)
+        .map(|_| {
+            if rng.gen_bool(0.3) {
+                rng.gen_range(8).to_string()
+            } else {
+                "16".to_string()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn frame_roundtrip(w: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &Request) -> Vec<u8> {
+    frame::write_frame(w, FrameType::Request, &frame::encode_request(req).unwrap()).unwrap();
+    w.flush().unwrap();
+    let (ty, payload) = frame::read_frame(r).unwrap().unwrap();
+    assert_eq!(ty, FrameType::Response);
+    payload
+}
+
+/// Open a raw framed connection negotiated to exactly `version`,
+/// returning the reader/writer pair and the raw ACK payload.
+fn raw_framed(addr: &str, version: u16) -> (TcpStream, BufReader<TcpStream>, Vec<u8>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    frame::write_frame(&mut w, FrameType::Hello, &frame::encode_hello(version, version)).unwrap();
+    w.flush().unwrap();
+    let (ty, ack) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(ty, FrameType::Ack);
+    assert_eq!(frame::decode_ack(&ack).unwrap().version, version);
+    (w, reader, ack)
+}
+
+/// Run the identical deterministic request sequence over all three
+/// codecs (framed v3, text, framed v2) against every model shape and
+/// return every raw reply byte string, in order. Two environments fed
+/// this sequence must answer byte-for-byte identically — the tracing
+/// bit-identity gate diffs the collected bytes wholesale.
+fn run_sequence(addr: &str) -> Vec<Vec<u8>> {
+    let mut out: Vec<Vec<u8>> = Vec::new();
+    let mut rng = Xoshiro256::new(0x0B5_E2E);
+
+    // --- framed v3: infer on all three shapes, learn on the local two
+    let (mut w, mut reader, ack) = raw_framed(addr, frame::VERSION);
+    out.push(ack);
+    for (i, model) in [None, Some("quad"), Some("dist")].iter().enumerate() {
+        let vols: Vec<SpikeVolley> = (0..3).map(|_| random_volley(&mut rng)).collect();
+        let mut req = Request::infer(vols).with_id(10 + i as u64);
+        if let Some(m) = model {
+            req = req.with_model(*m);
+        }
+        out.push(frame_roundtrip(&mut w, &mut reader, &req));
+    }
+    for (i, model) in [None, Some("quad")].iter().enumerate() {
+        let vols: Vec<SpikeVolley> = (0..2).map(|_| random_volley(&mut rng)).collect();
+        let mut req = Request::learn(vols).with_id(20 + i as u64);
+        if let Some(m) = model {
+            req = req.with_model(*m);
+        }
+        out.push(frame_roundtrip(&mut w, &mut reader, &req));
+    }
+    out.push(frame_roundtrip(
+        &mut w,
+        &mut reader,
+        &Request::admin(ModelCmd::List).with_id(30),
+    ));
+    drop((w, reader));
+
+    // --- text codec: the same shapes over the line protocol
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let mut lines = vec!["PING".to_string()];
+    for model in ["", "@quad ", "@dist "] {
+        lines.push(format!("{model}INFER {}", text_volley(&mut rng)));
+    }
+    lines.push(format!("LEARN {}", text_volley(&mut rng)));
+    lines.push(format!("@quad LEARN {}", text_volley(&mut rng)));
+    for line in lines {
+        w.write_all(format!("{line}\n").as_bytes()).unwrap();
+        w.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "text reply for `{line}`");
+        out.push(reply.into_bytes());
+    }
+    drop((w, reader));
+
+    // --- framed v2: the back-compat surface (default model only)
+    let (mut w, mut reader, ack) = raw_framed(addr, 2);
+    out.push(ack);
+    let vols: Vec<SpikeVolley> = (0..2).map(|_| random_volley(&mut rng)).collect();
+    out.push(frame_roundtrip(&mut w, &mut reader, &Request::infer(vols).with_id(40)));
+    let vols: Vec<SpikeVolley> = (0..2).map(|_| random_volley(&mut rng)).collect();
+    out.push(frame_roundtrip(&mut w, &mut reader, &Request::learn(vols).with_id(41)));
+
+    out
+}
+
+// ----------------------------------------------- bit-identity (tentpole)
+
+/// The tentpole invariant: tracing is observationally invisible on the
+/// wire. Two identically-seeded environments — one sampling every
+/// request at `--trace-rate 1.0`, one with tracing disabled — answer
+/// the same request sequence with **byte-identical** replies on the
+/// framed v3, text, and framed v2 codecs, across a single-engine, an
+/// in-process sharded, and a remote-shard model.
+#[test]
+fn tracing_on_vs_off_replies_bit_identical_on_all_codecs() {
+    if !native_env() {
+        return;
+    }
+    let _g = tracer_lock();
+    let scratch = temp_dir("bitident");
+    let _ = std::fs::remove_dir_all(&scratch);
+
+    obs::reset();
+    obs::configure(1.0, 0);
+    let env = boot_env(&scratch, "traced");
+    let traced = run_sequence(&env.addr);
+    assert!(
+        !obs::snapshot().is_empty(),
+        "a rate-1.0 run must capture spans"
+    );
+    shutdown(env);
+
+    obs::disable();
+    obs::reset();
+    let env = boot_env(&scratch, "plain");
+    let plain = run_sequence(&env.addr);
+    assert!(
+        obs::snapshot().is_empty(),
+        "a disabled run must capture nothing"
+    );
+    shutdown(env);
+
+    assert_eq!(traced.len(), plain.len(), "sequence shape drifted");
+    for (i, (a, b)) in traced.iter().zip(&plain).enumerate() {
+        assert_eq!(
+            hex(a),
+            hex(b),
+            "reply {i} differs between the traced and untraced runs"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+// ----------------------------------- stitching + CWKT fetch + stats rows
+
+/// A sampled request against the remote-shard model leaves a stitched
+/// trace: the coordinator's spans and the shard host's spans (adopted
+/// from `FLAG_TRACE` on the forwarded request) share one `TraceId`,
+/// and the whole ring exports as a decodable `CWKT` blob over
+/// `CMD_FETCH_TRACE`. The distributed tier's stats rows — per-shard
+/// `rpc` histograms and per-model replication counters/lag — ride the
+/// same run, and a v2 connection is refused both the trace id and the
+/// fetch verb with typed errors.
+#[test]
+fn sampled_trace_stitches_across_hosts_and_exports_cwkt() {
+    if !native_env() {
+        return;
+    }
+    let _g = tracer_lock();
+    let scratch = temp_dir("stitch");
+    let _ = std::fs::remove_dir_all(&scratch);
+
+    obs::reset();
+    obs::configure(1.0, 0);
+    let env = boot_env(&scratch, "stitch");
+    let mut client = FramedClient::connect(&env.addr).unwrap();
+
+    let mut rng = Xoshiro256::new(0x57175);
+    for i in 0..4u64 {
+        let vols: Vec<SpikeVolley> = (0..2).map(|_| random_volley(&mut rng)).collect();
+        let resp = client
+            .call(Request::infer(vols).with_model("dist").with_id(100 + i))
+            .unwrap();
+        assert!(matches!(resp.outcome, Outcome::Results(_)), "{:?}", resp.outcome);
+    }
+
+    // a committed save replicates to the standby: replicate/checkpoint
+    // spans plus the per-model replication stats rows. The save runs
+    // under an installed trace context, as a server-driven save would.
+    let coord = scratch.join("coord");
+    std::fs::create_dir_all(&coord).unwrap();
+    let slot = env.registry.slot(Some("dist")).unwrap();
+    {
+        let _ckpt_ctx = obs::set_current(obs::begin_request());
+        slot.sharded().unwrap().save_checkpoints(&coord.join("dist.ckpt")).unwrap();
+    }
+
+    // CMD_FETCH_TRACE returns the ring as a CWKT blob
+    let bytes = client.fetch_trace().unwrap();
+    assert_eq!(&bytes[..4], obs::TRACE_MAGIC);
+    let spans = obs::decode_traces(&bytes).unwrap();
+    assert!(!spans.is_empty());
+
+    // every stage of the remote request path shows up
+    for stage in [
+        obs::Stage::Decode,
+        obs::Stage::QueueWait,
+        obs::Stage::KernelExec,
+        obs::Stage::Scatter,
+        obs::Stage::Gather,
+        obs::Stage::Rpc,
+        obs::Stage::Replicate,
+        obs::Stage::Checkpoint,
+        obs::Stage::Request,
+    ] {
+        assert!(
+            spans.iter().any(|s| s.stage == stage),
+            "no {} span captured",
+            stage.name()
+        );
+    }
+
+    // stitching: some trace id carries an RPC span *and* at least two
+    // request spans — the coordinator's own plus the shard host's
+    // (adopted over FLAG_TRACE; the hosts share this process's ring)
+    let stitched = spans
+        .iter()
+        .filter(|s| s.stage == obs::Stage::Rpc)
+        .any(|rpc| {
+            spans
+                .iter()
+                .filter(|s| s.trace_id == rpc.trace_id && s.stage == obs::Stage::Request)
+                .count()
+                >= 2
+        });
+    assert!(
+        stitched,
+        "no trace id is shared by a coordinator RPC span and a shard-host request span"
+    );
+
+    // the CLI's aggregation views work off the same decoded spans
+    let agg = obs::aggregate(&spans);
+    assert!(agg.iter().any(|s| s.stage == obs::Stage::Rpc && s.count > 0));
+    let paths = obs::critical_paths(&spans);
+    assert!(!paths.is_empty());
+    assert!(
+        paths.windows(2).all(|w| w[0].total_us >= w[1].total_us),
+        "critical paths must be slowest-first"
+    );
+
+    // distributed-tier stats rows: per-shard rpc histograms, per-model
+    // replication counters, and the lag gauge (standby fully caught up)
+    let stats = client.stats().unwrap();
+    for shard in 0..2 {
+        let h = stats
+            .hist(&format!("model.dist.shard.{shard}.rpc"))
+            .unwrap_or_else(|| panic!("missing model.dist.shard.{shard}.rpc row"));
+        assert!(h.count > 0);
+    }
+    assert!(stats.counter("model.dist.replications") >= 1);
+    assert_eq!(stats.counter("model.dist.replication_errors"), 0);
+    assert_eq!(stats.counter("model.dist.replication_lag_generations"), 0);
+
+    // v2 typed refusals: a trace id on the request, and the fetch verb
+    let (mut w, mut reader, _ack) = raw_framed(&env.addr, 2);
+    let traced_req = Request::infer(vec![random_volley(&mut rng)])
+        .with_trace(9)
+        .with_id(200);
+    let payload = frame_roundtrip(&mut w, &mut reader, &traced_req);
+    let resp = frame::decode_response(&payload).unwrap();
+    assert!(
+        matches!(resp.outcome, Outcome::Error(ref e) if e.contains("trace ids") && e.contains("v3")),
+        "v2 trace id refusal, got {:?}",
+        resp.outcome
+    );
+    let payload = frame_roundtrip(
+        &mut w,
+        &mut reader,
+        &Request::admin(ModelCmd::FetchTrace).with_id(201),
+    );
+    let resp = frame::decode_response(&payload).unwrap();
+    assert!(
+        matches!(resp.outcome, Outcome::Error(ref e) if e.contains("v3")),
+        "v2 FetchTrace refusal, got {:?}",
+        resp.outcome
+    );
+
+    let _ = client.quit();
+    shutdown(env);
+    obs::disable();
+    obs::reset();
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+// ------------------------------------------------- CWKT codec properties
+
+/// `CWKT` encode → decode is the identity on random span sets, every
+/// strict truncation is rejected, and any single-bit corruption is
+/// rejected (CRC32 detects all 1-bit errors; flips in the header hit
+/// the magic/schema/length gates first).
+#[test]
+fn prop_cwkt_roundtrip_rejects_truncation_and_bitflips() {
+    let mut rng = Xoshiro256::new(0xCC_4B17);
+    for case in 0..40 {
+        let count = rng.gen_range(64);
+        let recs: Vec<obs::SpanRecord> = (0..count)
+            .map(|_| obs::SpanRecord {
+                trace_id: rng.next_u64(),
+                stage: obs::Stage::from_u8(rng.gen_range(10) as u8).unwrap(),
+                flags: (rng.next_u64() & 0x0F) as u8,
+                tag: rng.next_u64() as u32,
+                start_us: rng.next_u64() >> 20,
+                dur_us: rng.next_u64() >> 40,
+            })
+            .collect();
+        let bytes = obs::encode_traces(&recs);
+        assert_eq!(obs::decode_traces(&bytes).unwrap(), recs, "case {case}");
+
+        let cut = rng.gen_range(bytes.len());
+        assert!(
+            obs::decode_traces(&bytes[..cut]).is_err(),
+            "case {case}: truncation to {cut} bytes accepted"
+        );
+
+        let mut flipped = bytes.clone();
+        let at = rng.gen_range(flipped.len());
+        flipped[at] ^= 1 << rng.gen_range(8);
+        assert!(
+            obs::decode_traces(&flipped).is_err(),
+            "case {case}: bit flip at byte {at} accepted"
+        );
+    }
+}

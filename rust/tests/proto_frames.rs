@@ -52,6 +52,13 @@ const GOLDEN_ACK_V3_HEX: &str = "43574b32020000000e0003000000400000001000000010"
 // The QoS shed reply (status 6, v3-only; PR 7): id 7, retry 250 ms.
 const GOLDEN_BUSY_RESPONSE_HEX: &str = "43574b32040000000d000000000000000706000000fa";
 
+// The obs tier (v3-only; PR 9): a model-routed infer carrying a
+// propagated trace id (flags = FLAG_MODEL | FLAG_TRACE, trace field
+// between deadline and model), and the nullary FETCH_TRACE admin verb.
+const GOLDEN_TRACE_REQUEST_HEX: &str = "43574b32030000002f0000000000000007012801020304050607\
+08000465646765000100000000043f800000418000004020000041800000";
+const GOLDEN_FETCH_TRACE_HEX: &str = "43574b32030000000b000000000000000c06000b";
+
 fn golden_request() -> Request {
     Request {
         id: 7,
@@ -66,8 +73,16 @@ fn golden_request() -> Request {
             deadline_ms: Some(250),
             counters_only: false,
             model: None,
+            trace: None,
         },
     }
+}
+
+fn golden_trace_request() -> Request {
+    Request::infer(vec![SpikeVolley::dense(vec![1.0, 16.0, 2.5, 16.0])])
+        .with_id(7)
+        .with_model("edge")
+        .with_trace(0x0102_0304_0506_0708)
 }
 
 fn golden_model_request() -> Request {
@@ -216,6 +231,25 @@ fn golden_v3_bytes_match_python_twin() {
     let bytes = framed(FrameType::Request, &frame::encode_request(&list).unwrap());
     assert_eq!(hex(&bytes), GOLDEN_ADMIN_LIST_HEX);
 
+    // PR 9: the propagated trace id rides between deadline and model
+    let bytes = framed(
+        FrameType::Request,
+        &frame::encode_request(&golden_trace_request()).unwrap(),
+    );
+    assert_eq!(hex(&bytes), GOLDEN_TRACE_REQUEST_HEX);
+    let (_, payload) = frame::read_frame(&mut &bytes[..]).unwrap().unwrap();
+    assert_eq!(
+        frame::decode_request(&payload).unwrap(),
+        golden_trace_request()
+    );
+
+    // PR 9: the nullary FETCH_TRACE admin verb
+    let fetch = Request::admin(ModelCmd::FetchTrace).with_id(12);
+    let bytes = framed(FrameType::Request, &frame::encode_request(&fetch).unwrap());
+    assert_eq!(hex(&bytes), GOLDEN_FETCH_TRACE_HEX);
+    let (_, payload) = frame::read_frame(&mut &bytes[..]).unwrap().unwrap();
+    assert_eq!(frame::decode_request(&payload).unwrap(), fetch);
+
     let bytes = framed(
         FrameType::Response,
         &frame::encode_response(&golden_models_response()).unwrap(),
@@ -318,6 +352,11 @@ fn prop_request_roundtrip_lossless() {
                     counters_only: rng.gen_bool(0.5),
                     model: if rng.gen_bool(0.5) {
                         Some(format!("m{}", rng.gen_range(1000)))
+                    } else {
+                        None
+                    },
+                    trace: if rng.gen_bool(0.5) {
+                        Some(rng.next_u64())
                     } else {
                         None
                     },
@@ -426,8 +465,9 @@ fn prop_admin_roundtrip_lossless() {
             let blob = |rng: &mut Xoshiro256| -> Vec<u8> {
                 (0..rng.gen_range(64)).map(|_| rng.next_u32() as u8).collect()
             };
-            let cmd = match rng.gen_range(10) {
+            let cmd = match rng.gen_range(11) {
                 0 => ModelCmd::List,
+                10 => ModelCmd::FetchTrace,
                 1 => ModelCmd::Create {
                     name,
                     n: 1 + rng.gen_range(256),
