@@ -34,6 +34,8 @@ byte-for-byte a valid v3 frame without them):
               | 6 CREATE_COLUMNS | 7 FETCH_CKPT | 8 PUT_CKPT
               | 9 PUT_SHARD | 10 PUT_MANIFEST       (v3, dist tier)
               | 11 FETCH_TRACE                      (v3, obs; no fields)
+              | 12 FETCH_METRICS | 13 FETCH_HEALTH (v3, telemetry;
+                                                    no fields)
     CREATE   := str16 name | n u32 | theta f32 | seed u64
     SAVE/LOAD/UNLOAD := str16 name
     CREATE_COLUMNS := str16 name | index u32 | n u32 | theta f32
@@ -76,6 +78,7 @@ CMD_LIST, CMD_CREATE, CMD_SAVE, CMD_LOAD, CMD_UNLOAD = 1, 2, 3, 4, 5
 CMD_CREATE_COLUMNS, CMD_FETCH_CKPT, CMD_PUT_CKPT = 6, 7, 8
 CMD_PUT_SHARD, CMD_PUT_MANIFEST = 9, 10
 CMD_FETCH_TRACE = 11
+CMD_FETCH_METRICS, CMD_FETCH_HEALTH = 12, 13
 ADMIN_OK, ADMIN_MODELS, ADMIN_CKPT = 0, 1, 2
 MFLAG_DEFAULT = 1
 
@@ -223,6 +226,18 @@ def cmd_fetch_trace():
     return struct.pack(">B", CMD_FETCH_TRACE)
 
 
+def cmd_fetch_metrics():
+    """Nullary v3 admin verb: the process's full Prometheus exposition,
+    returned as utf8 text in an ADMIN CKPT reply."""
+    return struct.pack(">B", CMD_FETCH_METRICS)
+
+
+def cmd_fetch_health():
+    """Nullary v3 admin verb: the health report (``state=``/``reason=``
+    lines), returned as utf8 text in an ADMIN CKPT reply."""
+    return struct.pack(">B", CMD_FETCH_HEALTH)
+
+
 class Cur:
     def __init__(self, b):
         self.b, self.off = b, 0
@@ -282,6 +297,10 @@ def parse_model_cmd(cur):
         return ("put_manifest", cur.str16(), cur.blob32())
     if cmd == CMD_FETCH_TRACE:
         return ("fetch_trace",)
+    if cmd == CMD_FETCH_METRICS:
+        return ("fetch_metrics",)
+    if cmd == CMD_FETCH_HEALTH:
+        return ("fetch_health",)
     raise ValueError("unknown admin cmd %d" % cmd)
 
 
@@ -1106,6 +1125,256 @@ def test_fetch_trace_roundtrip():
     # the verb is nullary: trailing bytes raise
     with pytest.raises(ValueError):
         parse_request(request(12, OP_ADMIN, admin=cmd_fetch_trace() + b"\x00"))
+
+
+# ------------------------------------ telemetry frames (metrics/health)
+
+# Request: id=13, ADMIN FETCH_METRICS — the nullary Prometheus-scrape
+# verb. Shared with rust/tests/proto_frames.rs
+# (golden_v3_bytes_match_python_twin).
+GOLDEN_FETCH_METRICS_HEX = "43574b32030000000b000000000000000d06000c"
+
+# Request: id=14, ADMIN FETCH_HEALTH — the nullary health-report verb.
+# Shared with rust/tests/proto_frames.rs
+# (golden_v3_bytes_match_python_twin).
+GOLDEN_FETCH_HEALTH_HEX = "43574b32030000000b000000000000000e06000d"
+
+
+def golden_fetch_metrics_bytes():
+    return frame(T_REQUEST, request(13, OP_ADMIN, admin=cmd_fetch_metrics()))
+
+
+def golden_fetch_health_bytes():
+    return frame(T_REQUEST, request(14, OP_ADMIN, admin=cmd_fetch_health()))
+
+
+def test_golden_telemetry_vectors_match_contract():
+    assert golden_fetch_metrics_bytes().hex() == GOLDEN_FETCH_METRICS_HEX
+    assert golden_fetch_health_bytes().hex() == GOLDEN_FETCH_HEALTH_HEX
+
+
+def test_fetch_metrics_health_roundtrip():
+    (_, payload), _ = parse_frame(golden_fetch_metrics_bytes())
+    req = parse_request(payload)
+    assert req["op"] == OP_ADMIN and req["admin"] == ("fetch_metrics",)
+    (_, payload), _ = parse_frame(golden_fetch_health_bytes())
+    req = parse_request(payload)
+    assert req["op"] == OP_ADMIN and req["admin"] == ("fetch_health",)
+    # both verbs are nullary: trailing bytes raise
+    for builder in (cmd_fetch_metrics, cmd_fetch_health):
+        with pytest.raises(ValueError):
+            parse_request(request(13, OP_ADMIN, admin=builder() + b"\x00"))
+
+
+# ------------------------- Prometheus exposition grammar twin (PR 10)
+
+EXPO_KINDS = ("counter", "gauge", "summary", "histogram", "untyped")
+_EXPO_NAME_CHARS = set(
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_:"
+)
+
+
+def _valid_metric_name(s):
+    return (bool(s) and s[0] not in "0123456789"
+            and all(c in _EXPO_NAME_CHARS for c in s))
+
+
+def _parse_sample_line(line):
+    """One sample: ``name[{k="v",...}] value`` with ``\\\\``, ``\\"``
+    and ``\\n`` label escapes — mirroring
+    rust/src/obs/telemetry.rs::parse_sample_line."""
+    head, sep, value = line.rpartition(" ")
+    if not sep or not head:
+        raise ValueError("sample without a value: %r" % line)
+    value = float(value)
+    if "{" in head:
+        name, _, rest = head.partition("{")
+        if not rest.endswith("}"):
+            raise ValueError("unterminated label set: %r" % line)
+        labels, cur = [], rest[:-1]
+        while cur:
+            if '="' not in cur:
+                raise ValueError('label without =": %r' % line)
+            key, _, rest = cur.partition('="')
+            if not _valid_metric_name(key):
+                raise ValueError("bad label name: %r" % line)
+            val, i, closed = [], 0, False
+            while i < len(rest):
+                c = rest[i]
+                if c == "\\":
+                    if i + 1 >= len(rest) or rest[i + 1] not in '\\"n':
+                        raise ValueError("bad escape in label value: %r" % line)
+                    val.append({"\\": "\\", '"': '"', "n": "\n"}[rest[i + 1]])
+                    i += 2
+                elif c == '"':
+                    closed = True
+                    i += 1
+                    break
+                else:
+                    val.append(c)
+                    i += 1
+            if not closed:
+                raise ValueError("unterminated label value: %r" % line)
+            labels.append((key, "".join(val)))
+            cur = rest[i:]
+            if cur.startswith(","):
+                cur = cur[1:]
+            elif cur:
+                raise ValueError("junk between labels: %r" % line)
+    else:
+        name, labels = head, []
+    if not _valid_metric_name(name):
+        raise ValueError("bad metric name: %r" % line)
+    return name, labels, value
+
+
+def parse_exposition(text):
+    """Twin of rust's ``telemetry::parse_exposition``: every comment
+    must be a well-formed HELP/TYPE, every sample's family must be
+    TYPE-declared before it appears (``_sum``/``_count`` ride their
+    typed summary family), and anything else raises."""
+    typed, out = set(), []
+    for line in text.split("\n"):
+        if not line:
+            continue
+        if line.startswith("# "):
+            parts = line[2:].split(" ", 2)
+            if (len(parts) < 3 or not _valid_metric_name(parts[1])
+                    or not parts[2]):
+                raise ValueError("bad comment: %r" % line)
+            kw, name, tail = parts
+            if kw == "TYPE":
+                if tail not in EXPO_KINDS:
+                    raise ValueError("unknown TYPE %r: %r" % (tail, line))
+                typed.add(name)
+            elif kw != "HELP":
+                raise ValueError("unknown comment keyword %r" % kw)
+            continue
+        if line.startswith("#"):
+            raise ValueError("bad comment: %r" % line)
+        name, labels, value = _parse_sample_line(line)
+        fam = name
+        for suffix in ("_sum", "_count"):
+            stem = name[: -len(suffix)]
+            if name.endswith(suffix) and stem in typed:
+                fam = stem
+                break
+        if fam not in typed:
+            raise ValueError("sample %r has no TYPE declaration" % name)
+        out.append((name, labels, value))
+    return out
+
+
+# Pinned byte-for-byte against rust/src/obs/telemetry.rs
+# (golden_exposition_matches_python_twin): the exposition for a
+# snapshot holding {requests=12, model.edge.requests=3, model.edge.n=16,
+# replication_lag_generations=1} plus a request_latency histogram
+# {count=2, mean=50.0, p50=32, p95=64, p99=64, max=80} — families
+# sorted by name, counters suffixed _total, gauges from the
+# GAUGE_ROWS table, hists as _us summaries.
+GOLDEN_EXPOSITION = (
+    "# HELP catwalk_model_n stats row n\n"
+    "# TYPE catwalk_model_n gauge\n"
+    'catwalk_model_n{model="edge"} 16\n'
+    "# HELP catwalk_model_requests_total stats row requests\n"
+    "# TYPE catwalk_model_requests_total counter\n"
+    'catwalk_model_requests_total{model="edge"} 3\n'
+    "# HELP catwalk_replication_lag_generations stats row "
+    "replication_lag_generations\n"
+    "# TYPE catwalk_replication_lag_generations gauge\n"
+    "catwalk_replication_lag_generations 1\n"
+    "# HELP catwalk_request_latency_us latency summary request_latency\n"
+    "# TYPE catwalk_request_latency_us summary\n"
+    'catwalk_request_latency_us{quantile="0.5"} 32\n'
+    'catwalk_request_latency_us{quantile="0.95"} 64\n'
+    'catwalk_request_latency_us{quantile="0.99"} 64\n'
+    'catwalk_request_latency_us{quantile="1"} 80\n'
+    "catwalk_request_latency_us_sum 100\n"
+    "catwalk_request_latency_us_count 2\n"
+    "# HELP catwalk_requests_total stats row requests\n"
+    "# TYPE catwalk_requests_total counter\n"
+    "catwalk_requests_total 12\n"
+)
+
+
+def test_exposition_golden_parses_under_pinned_grammar():
+    samples = parse_exposition(GOLDEN_EXPOSITION)
+    assert len(samples) == 10
+    assert samples[0] == ("catwalk_model_n", [("model", "edge")], 16.0)
+    by_name = {}
+    for name, labels, value in samples:
+        by_name.setdefault(name, []).append((labels, value))
+    assert by_name["catwalk_requests_total"] == [([], 12.0)]
+    assert by_name["catwalk_model_requests_total"] == [
+        ([("model", "edge")], 3.0)
+    ]
+    # the summary carries its quantile series plus _sum/_count riders
+    quantiles = [(dict(l)["quantile"], v)
+                 for l, v in by_name["catwalk_request_latency_us"]]
+    assert quantiles == [("0.5", 32.0), ("0.95", 64.0),
+                         ("0.99", 64.0), ("1", 80.0)]
+    assert by_name["catwalk_request_latency_us_sum"] == [([], 100.0)]
+    assert by_name["catwalk_request_latency_us_count"] == [([], 2.0)]
+
+
+def test_exposition_grammar_rejects_malformed_lines():
+    ok_type = "# TYPE m counter\n"
+    bad = [
+        # a sample whose family was never TYPE-declared
+        "m 1\n",
+        # _count without a typed family does not ride anything
+        ok_type + "other_count 1\n",
+        # comments must be well-formed HELP/TYPE
+        "# TYPE m bogus\nm 1\n",
+        "# NOTE m counter\nm 1\n",
+        "# TYPE m\nm 1\n",
+        "#m 1\n",
+        # metric/label name and label syntax errors
+        ok_type + "1m 2\n",
+        ok_type + 'm{0k="v"} 1\n',
+        ok_type + 'm{k="v" 1\n',
+        ok_type + 'm{k="v"x="y"} 1\n',
+        ok_type + 'm{k="\\q"} 1\n',
+        ok_type + 'm{k="v} 1\n',
+        # a value must exist and be a number
+        ok_type + "m\n",
+        ok_type + "m one\n",
+    ]
+    for text in bad:
+        with pytest.raises(ValueError):
+            parse_exposition(text)
+    # the well-formed prefix alone is fine
+    assert parse_exposition(ok_type + "m 1\n") == [("m", [], 1.0)]
+
+
+def test_stats_identity_rows_are_additive():
+    """PR 10 adds ``uptime_secs``, ``start_epoch_secs`` and
+    ``proto_version`` rows to the aggregate STATS body without bumping
+    schema=2: they are ordinary counter rows, so a forward-compat
+    reader picks them up — and their presence never changes what it
+    extracts from the pre-existing rows."""
+    base = [
+        "counter.model.edge.requests=3",
+        "counter.requests=12",
+        "hist.request_latency.count=2",
+        "hist.request_latency.p50_us=32",
+        "schema=2",
+    ]
+    identity = [
+        "counter.proto_version=3",
+        "counter.start_epoch_secs=1754600000",
+        "counter.uptime_secs=42",
+    ]
+    plain = parse_stats_kv("\n".join(sorted(base)) + "\n")
+    grown = parse_stats_kv("\n".join(sorted(base + identity)) + "\n")
+    counters, hists = grown
+    assert counters["uptime_secs"] == 42
+    assert counters["start_epoch_secs"] == 1754600000
+    assert counters["proto_version"] == 3
+    # dropping the identity rows recovers the original parse exactly
+    for key in ("uptime_secs", "start_epoch_secs", "proto_version"):
+        del counters[key]
+    assert (counters, hists) == plain
 
 
 # ------------------------------------------- trace capture twin (CWKT)

@@ -2,8 +2,9 @@
 //! the density range, replays QoS traffic at rate multiples, compares
 //! the distributed shard transport against the in-process one,
 //! measures the per-request tracing overhead in each sampling regime,
-//! and writes the perf-trajectory point `BENCH_9.json` at the repo
-//! root (EXPERIMENTS.md §Perf 8, §Serving and §Tracing).
+//! prices the telemetry plane's hot and cold paths, and writes the
+//! perf-trajectory point `BENCH_10.json` at the repo root
+//! (EXPERIMENTS.md §Perf 8, §Serving, §Tracing and §Monitoring).
 //!
 //! Run: `make bench-json` (or `cargo bench --bench bench_json`).
 //! Override the output path with `BENCH_JSON_OUT=/path/file.json`;
@@ -316,12 +317,91 @@ fn main() {
     catwalk::obs::disable();
     catwalk::obs::reset();
 
+    // telemetry plane: the hot-path counter rework and the sampler's
+    // per-interval cold path (telemetry_overhead prints the same
+    // numbers in prose)
+    let metrics = catwalk::coordinator::Metrics::new();
+    let tel_ops = 200_000u64;
+    let hot_incr_ns = {
+        let r = bench("telemetry hot incr", 3, 20, || {
+            for _ in 0..tel_ops {
+                metrics.incr("requests", 1);
+            }
+            metrics.counter("requests")
+        });
+        1e9 / r.throughput(tel_ops)
+    };
+    let fallback_incr_ns = {
+        let r = bench("telemetry fallback incr", 3, 20, || {
+            for _ in 0..tel_ops {
+                metrics.incr("bench_fallback_row", 1);
+            }
+            metrics.counter("bench_fallback_row")
+        });
+        1e9 / r.throughput(tel_ops)
+    };
+    let gauge_set_ns = {
+        let r = bench("telemetry gauge set", 3, 20, || {
+            for i in 0..tel_ops {
+                metrics.set("replication_lag_generations", i);
+            }
+            metrics.counter("replication_lag_generations")
+        });
+        1e9 / r.throughput(tel_ops)
+    };
+    println!(
+        "  telemetry counters: hot {hot_incr_ns:.1} ns  fallback {fallback_incr_ns:.1} ns  \
+         gauge {gauge_set_ns:.1} ns"
+    );
+    let tel_registry = Arc::new(
+        ModelRegistry::open(
+            RegistryConfig::default(),
+            "default",
+            ModelSpec {
+                n: N,
+                theta: THETA,
+                seed: 7,
+            },
+        )
+        .unwrap(),
+    );
+    let ticks = 500u64;
+    let sampler_tick_ns = {
+        let r = bench("telemetry sampler tick", 3, 20, || {
+            let mut acc = 0u64;
+            for _ in 0..ticks {
+                acc += tel_registry.stats(true, None).unwrap().counters.len() as u64;
+                acc += catwalk::obs::telemetry::assess(&tel_registry).reasons.len() as u64;
+            }
+            acc
+        });
+        1e9 / r.throughput(ticks)
+    };
+    let tel_snap = tel_registry.stats(true, None).unwrap();
+    let render_ns = {
+        let r = bench("telemetry render", 3, 20, || {
+            let mut acc = 0u64;
+            for _ in 0..ticks {
+                acc += catwalk::obs::telemetry::render_prometheus(&tel_snap, None, None, None)
+                    .len() as u64;
+            }
+            acc
+        });
+        1e9 / r.throughput(ticks)
+    };
+    println!(
+        "  telemetry cold path: tick {sampler_tick_ns:.0} ns  render {render_ns:.0} ns"
+    );
+
     let doc = Json::Obj(vec![
         (
             "bench".into(),
-            Json::Str("kernel_path_sweep+qos_serve+dist_shard_serve+trace_overhead".into()),
+            Json::Str(
+                "kernel_path_sweep+qos_serve+dist_shard_serve+trace_overhead+telemetry_overhead"
+                    .into(),
+            ),
         ),
-        ("pr".into(), Json::Num(9.0)),
+        ("pr".into(), Json::Num(10.0)),
         (
             "geometry".into(),
             Json::Obj(vec![
@@ -351,11 +431,21 @@ fn main() {
             ]),
         ),
         (
+            "telemetry_overhead".into(),
+            Json::Obj(vec![
+                ("hot_incr_ns".into(), Json::Num(hot_incr_ns)),
+                ("fallback_incr_ns".into(), Json::Num(fallback_incr_ns)),
+                ("gauge_set_ns".into(), Json::Num(gauge_set_ns)),
+                ("sampler_tick_ns".into(), Json::Num(sampler_tick_ns)),
+                ("render_ns".into(), Json::Num(render_ns)),
+            ]),
+        ),
+        (
             "harness".into(),
             Json::Str("rust bench_util (make bench-json)".into()),
         ),
     ]);
-    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_9.json".into());
+    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_10.json".into());
     std::fs::write(&out, doc.render() + "\n").unwrap();
     println!("  wrote {out}");
 }

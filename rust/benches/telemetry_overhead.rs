@@ -1,0 +1,96 @@
+//! Telemetry overhead micro-bench: what the metrics plane costs at
+//! each layer — the per-request hot path (a pre-registered lock-free
+//! counter bump vs the mutexed fallback map it replaced vs a typed
+//! gauge store), and the per-interval cold path (one sampler tick =
+//! full stats snapshot + health assessment, and one Prometheus
+//! rendering of that snapshot). EXPERIMENTS.md tracks the first
+//! number: it prices the PR-10 rework of `coordinator::metrics` and
+//! justifies leaving the counters always-on — the serving hot path
+//! pays one atomic add whether or not a sampler or scraper exists.
+
+use catwalk::bench_util::{bench, bench_header};
+use catwalk::coordinator::Metrics;
+use catwalk::obs::telemetry;
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use std::sync::Arc;
+
+/// Counter bumps per sample; one bump is a few nanoseconds, so
+/// amortize the sample clock over many.
+const OPS: u64 = 200_000;
+
+/// Sampler ticks / renders per sample; these walk every stats row.
+const TICKS: u64 = 500;
+
+fn main() {
+    bench_header("telemetry overhead");
+
+    let m = Metrics::new();
+
+    // the serving hot path: a name in HOT_COUNTERS resolves to a
+    // lock-free atomic slot (binary search on a static table + one
+    // relaxed fetch_add)
+    let r = bench("hot counter incr (lock-free slot)", 3, 20, || {
+        for _ in 0..OPS {
+            m.incr("requests", 1);
+        }
+        m.counter("requests")
+    });
+    println!("{}", r.report());
+    println!("  -> {:.1} ns/incr", 1e9 / r.throughput(OPS));
+
+    // the pre-rework shape, still taken by unregistered names: a
+    // mutexed BTreeMap entry
+    let r = bench("fallback counter incr (mutexed map)", 3, 20, || {
+        for _ in 0..OPS {
+            m.incr("bench_fallback_row", 1);
+        }
+        m.counter("bench_fallback_row")
+    });
+    println!("{}", r.report());
+    println!("  -> {:.1} ns/incr", 1e9 / r.throughput(OPS));
+
+    // gauges write a typed last-value slot (the PR-10 race fix), not a
+    // counter add
+    let r = bench("gauge set (typed slot)", 3, 20, || {
+        for i in 0..OPS {
+            m.set("replication_lag_generations", i);
+        }
+        m.counter("replication_lag_generations")
+    });
+    println!("{}", r.report());
+    println!("  -> {:.1} ns/set", 1e9 / r.throughput(OPS));
+
+    // the sampler's per-interval cost against a realistic registry:
+    // one full aggregate snapshot plus one health assessment
+    let spec = ModelSpec {
+        n: 64,
+        theta: 6.0,
+        seed: 1,
+    };
+    let registry =
+        Arc::new(ModelRegistry::open(RegistryConfig::default(), "default", spec).unwrap());
+    registry.create_sharded("quad", spec, 2).unwrap();
+    let r = bench("sampler tick (full stats + assess)", 3, 20, || {
+        let mut acc = 0u64;
+        for _ in 0..TICKS {
+            let snap = registry.stats(true, None).unwrap();
+            let health = telemetry::assess(&registry);
+            acc += snap.counters.len() as u64 + health.reasons.len() as u64;
+        }
+        acc
+    });
+    println!("{}", r.report());
+    println!("  -> {:.1} ns/tick", 1e9 / r.throughput(TICKS));
+
+    // one /metrics scrape body off a fixed snapshot
+    let snap = registry.stats(true, None).unwrap();
+    let r = bench("render_prometheus (full snapshot)", 3, 20, || {
+        let mut acc = 0u64;
+        for _ in 0..TICKS {
+            acc += telemetry::render_prometheus(&snap, None, None, None).len() as u64;
+        }
+        acc
+    });
+    println!("{}", r.report());
+    println!("  -> {:.1} ns/render", 1e9 / r.throughput(TICKS));
+}

@@ -4,13 +4,86 @@
 //! `repro serve` status line and the serving bench read \[`Summary`\]
 //! snapshots. Histograms use fixed log-spaced buckets (1 µs .. ~67 s),
 //! which is plenty for p50/p95/p99 readouts.
+//!
+//! **Lock-free hot path (DESIGN.md §2.9).** Every counter the serving
+//! path bumps per request is pre-registered in [`HOT_COUNTERS`] and
+//! backed by a plain `AtomicU64` — an `incr` on one is a binary search
+//! over a static table plus one `fetch_add`, no lock and no allocation
+//! (priced against the old `Mutex<HashMap>` by the
+//! `telemetry_overhead` bench). Names outside the table (tests,
+//! one-off callers) fall back to a mutexed map, so the API accepts any
+//! name exactly as before. Gauges ([`Metrics::set`]) live in their own
+//! typed slot rather than the counter map — under the atomic design a
+//! gauge overwrite racing an atomic `incr` on the same map could lose
+//! increments; splitting the namespaces makes the race unrepresentable
+//! (a name is a counter *or* a gauge, never both). Snapshots and
+//! renderings merge all three sources into the same sorted rows the
+//! mutexed design produced, so STATS bytes are unchanged.
 
 use crate::proto::{HistStats, StatsSnapshot};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 const BUCKETS: usize = 27; // 1us * 2^i
+
+/// Every counter name bumped on the serving hot path, **sorted** (the
+/// slot lookup is a binary search — `hot_counters_table_is_sorted`
+/// gates the invariant). Each gets a pre-registered lock-free atomic
+/// slot; a name not in this table still works through the fallback
+/// map, it just pays the old mutex.
+pub const HOT_COUNTERS: &[&str] = &[
+    "admin_errors",
+    "admin_ops",
+    "autosave_errors",
+    "autosave_runs",
+    "batched_requests",
+    "batches",
+    "checkpoints_loaded",
+    "checkpoints_saved",
+    "connections_refused",
+    "failovers",
+    "generations_replicated",
+    "lines_active",
+    "lines_total",
+    "remote_calls",
+    "replication_errors",
+    "replications",
+    "requests",
+    "requests_dense",
+    "requests_expired",
+    "requests_shed",
+    "requests_sparse",
+    "requests_throttled",
+    "rows_dense_path",
+    "rows_silent_skipped",
+    "rows_sparse_path",
+    "shards_replicated",
+    "transport_errors",
+    "unknown_model",
+    "volleys_inferred",
+    "volleys_learned",
+];
+
+/// One pre-registered counter slot. `touched` preserves the mutexed
+/// map's observable contract that a counter row exists only once
+/// `incr` has been called on it — including `incr(name, 0)`, which
+/// must materialize a `name=0` row exactly as the old
+/// `entry().or_insert(0)` did.
+struct HotSlot {
+    value: AtomicU64,
+    touched: AtomicBool,
+}
+
+impl HotSlot {
+    fn new() -> HotSlot {
+        HotSlot {
+            value: AtomicU64::new(0),
+            touched: AtomicBool::new(false),
+        }
+    }
+}
 
 /// One latency histogram.
 #[derive(Clone, Debug, Default)]
@@ -78,19 +151,43 @@ impl Histogram {
 /// ([`HistStats`]), kept under its historical name for CLI callers.
 pub type Summary = HistStats;
 
-/// Registry of named counters and histograms.
-#[derive(Default)]
+/// Registry of named counters, gauges and histograms.
 pub struct Metrics {
+    /// Lock-free slots for [`HOT_COUNTERS`], index-aligned.
+    hot: Box<[HotSlot]>,
+    /// Fallback for counter names outside the hot table.
     counters: Mutex<HashMap<String, u64>>,
+    /// Gauge slot: current-state values ([`Metrics::set`]) — their own
+    /// namespace so an overwrite can never race a counter `fetch_add`.
+    gauges: Mutex<HashMap<String, u64>>,
     histograms: Mutex<HashMap<String, Histogram>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics::default()
+        Metrics {
+            hot: HOT_COUNTERS.iter().map(|_| HotSlot::new()).collect(),
+            counters: Mutex::new(HashMap::new()),
+            gauges: Mutex::new(HashMap::new()),
+            histograms: Mutex::new(HashMap::new()),
+        }
     }
 
     pub fn incr(&self, name: &str, by: u64) {
+        if let Ok(i) = HOT_COUNTERS.binary_search(&name) {
+            let slot = &self.hot[i];
+            slot.value.fetch_add(by, Ordering::Relaxed);
+            if !slot.touched.load(Ordering::Relaxed) {
+                slot.touched.store(true, Ordering::Release);
+            }
+            return;
+        }
         *self
             .counters
             .lock()
@@ -99,24 +196,28 @@ impl Metrics {
             .or_insert(0) += by;
     }
 
-    /// Gauge semantics on the counter map: overwrite instead of add.
-    /// For values that describe a current state rather than a running
-    /// total (`replication_lag_generations`) — they ride the same
-    /// `key=value` stats rows as counters.
+    /// Gauge semantics: overwrite instead of add. For values that
+    /// describe a current state rather than a running total
+    /// (`replication_lag_generations`) — they ride the same `key=value`
+    /// stats rows as counters, but live in their own slot so a gauge
+    /// store can never race (or alias) an atomic counter add.
     pub fn set(&self, name: &str, value: u64) {
-        self.counters
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), value);
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
-            .get(name)
-            .copied()
-            .unwrap_or(0)
+        if let Ok(i) = HOT_COUNTERS.binary_search(&name) {
+            let slot = &self.hot[i];
+            if slot.touched.load(Ordering::Acquire) {
+                return slot.value.load(Ordering::Relaxed);
+            }
+        }
+        if let Some(v) = self.counters.lock().unwrap().get(name) {
+            return *v;
+        }
+        // gauges read back through the same accessor (historical
+        // contract: `set` rows are indistinguishable from counters)
+        self.gauges.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     pub fn record(&self, name: &str, d: Duration) {
@@ -132,14 +233,33 @@ impl Metrics {
         self.histograms.lock().unwrap().get(name).map(Histogram::stats)
     }
 
+    /// All counter-shaped rows (hot slots that were ever touched, the
+    /// fallback map, and the gauges), merged and key-sorted — the one
+    /// producer both [`Metrics::snapshot`] and [`Metrics::render`]
+    /// draw from, so the wire and the human block cannot drift.
+    fn counter_rows(&self) -> BTreeMap<String, u64> {
+        let mut out = BTreeMap::new();
+        for (i, name) in HOT_COUNTERS.iter().enumerate() {
+            let slot = &self.hot[i];
+            if slot.touched.load(Ordering::Acquire) {
+                out.insert((*name).to_string(), slot.value.load(Ordering::Relaxed));
+            }
+        }
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.insert(k.clone(), *v);
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.insert(k.clone(), *v);
+        }
+        out
+    }
+
     /// Typed snapshot for the wire (`STATS` → [`StatsSnapshot`]).
     /// `full = false` skips the latency histograms — the cheap half of
     /// a snapshot (the `counters_only` request opt).
     pub fn snapshot(&self, full: bool) -> StatsSnapshot {
         let mut s = StatsSnapshot::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
-            s.counters.insert(k.clone(), *v);
-        }
+        s.counters = self.counter_rows();
         if full {
             for (k, h) in self.histograms.lock().unwrap().iter() {
                 s.hists.insert(k.clone(), h.stats());
@@ -151,13 +271,9 @@ impl Metrics {
     /// Render all metrics as a human-readable block.
     pub fn render(&self) -> String {
         let mut out = String::new();
-        let counters = self.counters.lock().unwrap();
-        let mut names: Vec<_> = counters.keys().collect();
-        names.sort();
-        for name in names {
-            out.push_str(&format!("{name}: {}\n", counters[name]));
+        for (name, v) in self.counter_rows() {
+            out.push_str(&format!("{name}: {v}\n"));
         }
-        drop(counters);
         let hists = self.histograms.lock().unwrap();
         let mut names: Vec<_> = hists.keys().cloned().collect();
         names.sort();
@@ -188,6 +304,41 @@ mod tests {
         m.incr("req", 2);
         assert_eq!(m.counter("req"), 3);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn hot_counters_table_is_sorted_and_deduped() {
+        // the binary search requires it; a mis-sorted entry would
+        // silently demote its counter to the fallback mutex
+        for w in HOT_COUNTERS.windows(2) {
+            assert!(w[0] < w[1], "{:?} out of order", w);
+        }
+    }
+
+    #[test]
+    fn hot_and_fallback_names_share_the_api() {
+        let m = Metrics::new();
+        m.incr("requests", 3); // hot slot
+        m.incr("custom_counter", 2); // fallback map
+        assert_eq!(m.counter("requests"), 3);
+        assert_eq!(m.counter("custom_counter"), 2);
+        let s = m.snapshot(false);
+        assert_eq!(s.counter("requests"), 3);
+        assert_eq!(s.counter("custom_counter"), 2);
+    }
+
+    #[test]
+    fn incr_zero_materializes_the_row() {
+        // the mutexed design created the entry on `incr(name, 0)`
+        // (entry().or_insert(0)); the atomic slots must too
+        let m = Metrics::new();
+        m.incr("requests", 0);
+        m.incr("custom", 0);
+        let s = m.snapshot(false);
+        assert_eq!(s.counters.get("requests"), Some(&0));
+        assert_eq!(s.counters.get("custom"), Some(&0));
+        // and an untouched hot counter stays absent, as before
+        assert!(!s.counters.contains_key("batches"));
     }
 
     #[test]
@@ -245,6 +396,43 @@ mod tests {
         assert_eq!(m.counter("lag"), 2);
         // and still renders/snapshots like any counter row
         assert_eq!(m.snapshot(false).counter("lag"), 2);
+    }
+
+    #[test]
+    fn gauge_stores_cannot_lose_counter_increments() {
+        // regression for the satellite race: under the old shared map a
+        // `set` overwrite interleaving with `incr` read-modify-writes
+        // could drop increments once counters went atomic. Gauges now
+        // live in their own slot — hammer both concurrently and assert
+        // every increment survived and the gauge holds a written value.
+        let m = std::sync::Arc::new(Metrics::new());
+        let threads = 4;
+        let per_thread = 10_000u64;
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..per_thread {
+                    m.incr("requests", 1);
+                }
+            }));
+        }
+        {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    m.set("replication_lag_generations", i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("requests"), threads * per_thread);
+        let lag = m.counter("replication_lag_generations");
+        assert!(lag < per_thread, "gauge holds a stored value, got {lag}");
+        let snap = m.snapshot(false);
+        assert_eq!(snap.counter("requests"), threads * per_thread);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!             [--qos] [--qos-depth N] [--qos-learn-depth N]
 //!             [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS]
 //!             [--trace-rate R] [--trace-slow-ms MS]
+//!             [--metrics-addr H:P] [--metrics-interval-ms MS]
 //!                           # TCP daemon (v3 framed + text compat);
 //!                           # multi-model registry + weight checkpoints;
 //!                           # shards=K scatter/gathers a model's output
@@ -32,9 +33,20 @@
 //!                           # --trace-rate head-samples request-path
 //!                           # spans into the CWKT ring (1.0 = all),
 //!                           # --trace-slow-ms also captures any
-//!                           # request slower than MS unconditionally
+//!                           # request slower than MS unconditionally;
+//!                           # --metrics-addr arms the telemetry plane:
+//!                           # an HTTP/1.0 listener serving Prometheus
+//!                           # text at /metrics plus /healthz//readyz,
+//!                           # sampled every --metrics-interval-ms
 //! repro client [--addr A] [--framed] [--window W] [--model NAME]
 //!                           # load generator against a daemon
+//! repro top [--addr A] [--interval-ms MS] [--count N] [--raw]
+//!                           # live terminal dashboard against a daemon:
+//!                           # polls STATS + CMD_FETCH_HEALTH each tick
+//!                           # and renders per-model / per-shard rates
+//!                           # (volleys/s, shed/s, rpc p99) from the
+//!                           # deltas; --count N stops after N frames,
+//!                           # --raw skips the ANSI clear (pipe-friendly)
 //! repro trace [--addr A | --in FILE] [--out FILE] [--stage NAME] [--limit N]
 //!                           # fetch a serving process's captured CWKT
 //!                           # trace ring (admin CMD_FETCH_TRACE) or
@@ -82,7 +94,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|trace|replay|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K[@h:p+h:p]];...] [--standby] [--standbys h:p+h:p] [--max-conns N] [--ckpt-dir DIR] [--autosave-secs S] [--qos] [--qos-depth N] [--qos-learn-depth N] [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS] [--trace-rate R] [--trace-slow-ms MS] [--in FILE] [--out FILE] [--stage NAME] [--limit N] [--record FILE | --log FILE | --chaos [--dist]] [--multiple X] [--rate R] [--deadline-ms MS]";
+const USAGE: &str = "usage: repro <fig5|fig6a|fig6b|fig7|fig8|fig9|table1|headline|ablation-flavors|sparsity|ablate-k|dse|cluster|serve|client|top|trace|replay|export-verilog|all> [--csv] [--windows N] [--sparsity P] [--seed S] [--addr HOST:PORT] [--framed] [--window W] [--model NAME] [--models name=n,theta[,seed][,shards=K[@h:p+h:p]];...] [--standby] [--standbys h:p+h:p] [--max-conns N] [--ckpt-dir DIR] [--autosave-secs S] [--qos] [--qos-depth N] [--qos-learn-depth N] [--qos-rate R] [--qos-burst B] [--qos-retry-ms MS] [--trace-rate R] [--trace-slow-ms MS] [--metrics-addr HOST:PORT] [--metrics-interval-ms MS] [--interval-ms MS] [--count N] [--raw] [--in FILE] [--out FILE] [--stage NAME] [--limit N] [--record FILE | --log FILE | --chaos [--dist]] [--multiple X] [--rate R] [--deadline-ms MS]";
 
 fn emit(t: &Table, csv: bool) {
     if csv {
@@ -133,6 +145,7 @@ fn run(args: &Args) -> Result<()> {
         "cluster" => cmd_cluster(args)?,
         "serve" => cmd_serve(args)?,
         "client" => cmd_client(args)?,
+        "top" => cmd_top(args)?,
         "trace" => cmd_trace(args)?,
         "replay" => cmd_replay(args)?,
         "export-verilog" => cmd_export_verilog(args)?,
@@ -413,6 +426,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
+    // `--metrics-addr H:P` arms the telemetry plane (DESIGN.md §2.9):
+    // sampler + HTTP exporter. Giving just `--metrics-interval-ms`
+    // arms the sampler alone (scrape via CMD_FETCH_METRICS). Neither
+    // flag = plane fully off, the pre-PR-10 shape.
+    let metrics_addr = args.flag("metrics-addr").map(str::to_string);
+    let metrics_interval_ms = args.get_u64(
+        "metrics-interval-ms",
+        catwalk::obs::telemetry::DEFAULT_INTERVAL_MS,
+    )?;
+    let metrics_on = metrics_addr.is_some() || args.flag("metrics-interval-ms").is_some();
+
     let qos = qos_from(args)?;
     let cfg = RegistryConfig {
         artifacts_dir: artifacts.into(),
@@ -428,6 +452,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // checkpoint replication stages generations into --ckpt-dir.
     if args.switch("standby") {
         let registry = Arc::new(ModelRegistry::standby(cfg));
+        let _telemetry = if metrics_on {
+            Some(start_telemetry(&registry, &metrics_addr, metrics_interval_ms)?)
+        } else {
+            None
+        };
         if let Some(dir) = &ckpt_dir {
             println!("replicated generations land in {}", dir.display());
         }
@@ -532,6 +561,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if max_conns > 0 {
         println!("connection cap: {max_conns} live (past it, typed BUSY on both codecs)");
     }
+    let _telemetry = if metrics_on {
+        Some(start_telemetry(&registry, &metrics_addr, metrics_interval_ms)?)
+    } else {
+        None
+    };
     println!(
         "serving {} model(s) on {addr} — v3 framed protocol (HELLO/ACK, pipelined, \
          @model routing, admin) + text compat (INFER/LEARN/SPARSE/SLEARN/STATS/PING/QUIT)",
@@ -539,6 +573,76 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let server = Server::with_registry(registry).with_max_conns(max_conns);
     server.serve(&addr, |port| println!("bound on port {port}"))
+}
+
+/// Arm the telemetry plane over a serving registry (both the
+/// coordinator and `--standby` shard-host shapes): the sampler thread
+/// always, the HTTP exporter when `--metrics-addr` was given. Reply
+/// bytes are unaffected either way (`rust/tests/telemetry.rs`).
+fn start_telemetry(
+    registry: &Arc<ModelRegistry>,
+    metrics_addr: &Option<String>,
+    interval_ms: u64,
+) -> Result<catwalk::obs::telemetry::Telemetry> {
+    use catwalk::obs::telemetry::{self, TelemetryOptions};
+    let opts = TelemetryOptions {
+        metrics_addr: metrics_addr.clone(),
+        interval: std::time::Duration::from_millis(interval_ms.max(1)),
+        capacity: telemetry::DEFAULT_SERIES_CAPACITY,
+    };
+    let t = telemetry::start(registry.clone(), &opts)?;
+    match t.http_addr() {
+        Some(bound) => println!(
+            "telemetry: /metrics /healthz /readyz on http://{bound} \
+             (sampling every {interval_ms} ms); reply bytes are unaffected"
+        ),
+        None => println!(
+            "telemetry: sampler every {interval_ms} ms (scrape via admin \
+             CMD_FETCH_METRICS / CMD_FETCH_HEALTH or `repro top`; \
+             no --metrics-addr, so no HTTP listener)"
+        ),
+    }
+    Ok(t)
+}
+
+fn cmd_top(args: &Args) -> Result<()> {
+    use catwalk::obs::telemetry::{render_dashboard, HealthReport, Sample};
+    use catwalk::server::FramedClient;
+    use std::io::Write as _;
+
+    let addr = args.get_string("addr", "127.0.0.1:7070");
+    let interval_ms = args.get_u64("interval-ms", 1000)?.max(50);
+    let count = args.get_usize("count", 0)?;
+    let raw = args.switch("raw");
+    let mut client = FramedClient::connect(&addr)?;
+    let started = Instant::now();
+    let mut prev: Option<Sample> = None;
+    let mut frames = 0usize;
+    loop {
+        let snap = client.stats()?;
+        // a v2 server typed-refuses the admin verb; the dashboard
+        // still renders, with the health line marked unknown
+        let health = client
+            .fetch_health()
+            .ok()
+            .and_then(|text| HealthReport::parse(&text).ok());
+        let cur = Sample {
+            at_ms: started.elapsed().as_millis() as u64,
+            snap,
+        };
+        if !raw {
+            // ANSI clear + home, like top(1)
+            print!("\x1b[2J\x1b[H");
+        }
+        print!("{}", render_dashboard(prev.as_ref(), &cur, health.as_ref()));
+        std::io::stdout().flush().ok();
+        prev = Some(cur);
+        frames += 1;
+        if count > 0 && frames >= count {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms));
+    }
 }
 
 fn cmd_client(args: &Args) -> Result<()> {

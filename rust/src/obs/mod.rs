@@ -62,6 +62,8 @@
 //! are typed decode errors (property-tested here, golden bytes shared
 //! with `python/tests/test_proto_frames.py`).
 
+pub mod telemetry;
+
 use crate::error::{Error, Result};
 use crate::registry::checkpoint::crc32;
 use std::cell::Cell;

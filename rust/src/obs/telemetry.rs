@@ -1,0 +1,1562 @@
+//! Telemetry plane (DESIGN.md §2.9): a sampler thread folding
+//! [`StatsSnapshot`] deltas into a bounded time-series ring, a typed
+//! health model, and three export surfaces over both.
+//!
+//! ```text
+//!              ┌ registry.stats(full) ──── every --metrics-interval-ms ┐
+//!              ▼                                                       │
+//!   ┌─ TimeSeries ring (bounded, oldest sample drops) ─┐   ┌ assess() ┐
+//!   │ Sample { at_ms, StatsSnapshot }                  │   │ health   │
+//!   └──────┬───────────────────────────┬───────────────┘   └────┬─────┘
+//!          ▼                           ▼                        ▼
+//!   windowed rates             per-shard RPC p99        Ready / Degraded
+//!   (volleys/s, shed/s,        trend + replication      / Unhealthy with
+//!    expired/s, ...)           lag                      typed reasons
+//!          │                           │                        │
+//!          ├──────────── /metrics (Prometheus text) ────────────┤
+//!          ├──────────── CMD_FETCH_METRICS / CMD_FETCH_HEALTH ──┤
+//!          └──────────── `repro top` dashboard ─────────────────┘
+//! ```
+//!
+//! **Bit-identity invariant (carried from §2.8).** Telemetry only ever
+//! *reads* the serving stack (stats snapshots, QoS gauges, failure
+//! latches) and writes to its own side structures; the HTTP exporter
+//! is a separate listener on its own port. Serving replies with the
+//! whole plane armed are byte-identical to the plane absent, on all
+//! three codecs — gated end to end in `rust/tests/telemetry.rs`.
+//!
+//! **Exposition grammar (pinned).** `/metrics` emits the Prometheus
+//! text format, restricted to the subset [`parse_exposition`] accepts
+//! (the same grammar is pinned in the python twin,
+//! `python/tests/test_proto_frames.py`):
+//!
+//! ```text
+//! line    := '# HELP ' name ' ' text
+//!          | '# TYPE ' name ' ' ('counter'|'gauge'|'summary')
+//!          | sample
+//! sample  := name labels? ' ' float
+//! labels  := '{' name '="' escaped '"' (',' name '="' escaped '"')* '}'
+//! name    := [a-zA-Z_:][a-zA-Z0-9_:]*
+//! ```
+//!
+//! every sample's family (its name, minus a `_sum`/`_count` suffix for
+//! summaries) must be TYPE-declared before it appears. Stats rows map
+//! to families by scope: plain `requests` →
+//! `catwalk_requests_total`, `model.<m>.requests` →
+//! `catwalk_model_requests_total{model="m"}`, and
+//! `model.<m>.shard.<i>.rpc` →
+//! `catwalk_shard_rpc_us{model="m",shard="i"}`; rows naming a current
+//! state (geometry, gauges, uptime) export as gauges, running totals
+//! as counters, histograms as summaries with `quantile` labels
+//! (`quantile="1"` is the max).
+//!
+//! **Health model.** [`assess`] folds, per slot: shard-transport
+//! failure latches ([`crate::shard::ShardedModel::failed_shards`]),
+//! standby-pool depth, the `replication_lag_generations` gauge, and
+//! QoS lane saturation; plus registry-level checkpoint age. Reason
+//! codes are pinned strings (`shard_transport_failed`,
+//! `standby_pool_empty`, `replication_lag`, `lane_saturated`,
+//! `checkpoint_stale`); the state machine is monotone — `Ready` with
+//! no reasons, `Degraded` with any, `Unhealthy` only when every shard
+//! of a model is latched dead. `/readyz` and `CMD_FETCH_HEALTH`
+//! re-assess on demand (a dead shard flips them within one sampling
+//! interval of the latch tripping); the sampler also stores each
+//! tick's verdict beside its sample for trend consumers.
+
+use crate::error::{Error, Result};
+use crate::proto::StatsSnapshot;
+use crate::qos::Lane;
+use crate::registry::ModelRegistry;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Default sampler cadence when `--metrics-interval-ms` is not given.
+pub const DEFAULT_INTERVAL_MS: u64 = 1000;
+/// Default time-series ring capacity (samples): ten minutes at the
+/// default cadence, a few hundred KiB of snapshots.
+pub const DEFAULT_SERIES_CAPACITY: usize = 600;
+/// Window the exported rates are derived over (clamped to the series
+/// span when shorter).
+pub const DEFAULT_RATE_WINDOW_MS: u64 = 10_000;
+/// A registry with autosave configured is `checkpoint_stale` once this
+/// many intervals pass without a successful save.
+pub const CHECKPOINT_STALE_INTERVALS: u32 = 3;
+
+/// How the telemetry plane is armed (`repro serve --metrics-addr
+/// --metrics-interval-ms`, or a test driving [`start`] directly).
+#[derive(Clone, Debug)]
+pub struct TelemetryOptions {
+    /// Bind address for the HTTP exporter (`None` = sampler only).
+    pub metrics_addr: Option<String>,
+    pub interval: Duration,
+    /// Time-series ring capacity in samples.
+    pub capacity: usize,
+}
+
+impl Default for TelemetryOptions {
+    fn default() -> TelemetryOptions {
+        TelemetryOptions {
+            metrics_addr: None,
+            interval: Duration::from_millis(DEFAULT_INTERVAL_MS),
+            capacity: DEFAULT_SERIES_CAPACITY,
+        }
+    }
+}
+
+// ------------------------------------------------------ the time series
+
+/// One sampler tick: the cumulative stats snapshot at a point in time.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Milliseconds since the sampler started.
+    pub at_ms: u64,
+    pub snap: StatsSnapshot,
+}
+
+/// Bounded in-memory ring of [`Sample`]s — the oldest drops when full,
+/// so memory is fixed no matter how long the process serves.
+#[derive(Debug)]
+pub struct TimeSeries {
+    capacity: usize,
+    samples: VecDeque<Sample>,
+}
+
+impl TimeSeries {
+    pub fn new(capacity: usize) -> TimeSeries {
+        TimeSeries {
+            capacity: capacity.max(2),
+            samples: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, s: Sample) {
+        if self.samples.len() == self.capacity {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn latest(&self) -> Option<&Sample> {
+        self.samples.back()
+    }
+
+    /// The (first, last) samples spanning up to `window_ms` back from
+    /// the newest — `None` until two samples land in the window.
+    pub fn window(&self, window_ms: u64) -> Option<(Sample, Sample)> {
+        let last = self.samples.back()?;
+        let lo = last.at_ms.saturating_sub(window_ms);
+        let first = self.samples.iter().find(|s| s.at_ms >= lo)?;
+        if first.at_ms == last.at_ms {
+            return None;
+        }
+        Some((first.clone(), last.clone()))
+    }
+}
+
+/// Windowed rates derived from two cumulative samples.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Rates {
+    pub window_secs: f64,
+    pub requests_per_s: f64,
+    /// Infer + learn volleys per second.
+    pub volleys_per_s: f64,
+    pub learn_volleys_per_s: f64,
+    /// Shed + throttled volleys per second.
+    pub shed_per_s: f64,
+    pub expired_per_s: f64,
+}
+
+/// Rates over `[first, last]`; `None` when the samples do not span
+/// time (counter resets clamp to zero rather than going negative).
+pub fn rates_between(first: &Sample, last: &Sample) -> Option<Rates> {
+    let dt_ms = last.at_ms.checked_sub(first.at_ms)?;
+    if dt_ms == 0 {
+        return None;
+    }
+    let dt = dt_ms as f64 / 1000.0;
+    let d = |key: &str| {
+        last.snap.counter(key).saturating_sub(first.snap.counter(key)) as f64 / dt
+    };
+    Some(Rates {
+        window_secs: dt,
+        requests_per_s: d("requests"),
+        volleys_per_s: d("volleys_inferred") + d("volleys_learned"),
+        learn_volleys_per_s: d("volleys_learned"),
+        shed_per_s: d("requests_shed") + d("requests_throttled"),
+        expired_per_s: d("requests_expired"),
+    })
+}
+
+/// One shard's RPC p99 movement over the rate window.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardRpcTrend {
+    pub model: String,
+    pub shard: usize,
+    pub p99_us: u64,
+    /// Change vs the window's first sample (negative = improving).
+    pub delta_us: i64,
+}
+
+fn parse_shard_rpc_key(key: &str) -> Option<(String, usize)> {
+    // model.<m>.shard.<i>.rpc
+    let rest = key.strip_prefix("model.")?;
+    let (model, rest) = rest.split_once(".shard.")?;
+    let (idx, tail) = rest.split_once('.')?;
+    if tail != "rpc" {
+        return None;
+    }
+    Some((model.to_string(), idx.parse().ok()?))
+}
+
+/// Every `model.<m>.shard.<i>.rpc` histogram's p99 in `last`, with its
+/// delta against `first`.
+pub fn shard_rpc_trends(first: &Sample, last: &Sample) -> Vec<ShardRpcTrend> {
+    let mut out = Vec::new();
+    for (key, h) in &last.snap.hists {
+        if let Some((model, shard)) = parse_shard_rpc_key(key) {
+            let prev = first.snap.hists.get(key).map(|p| p.p99_us).unwrap_or(0);
+            out.push(ShardRpcTrend {
+                model,
+                shard,
+                p99_us: h.p99_us,
+                delta_us: h.p99_us as i64 - prev as i64,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------- the health
+
+/// The three-state health verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    Ready,
+    Degraded,
+    Unhealthy,
+}
+
+impl HealthState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Ready => "ready",
+            HealthState::Degraded => "degraded",
+            HealthState::Unhealthy => "unhealthy",
+        }
+    }
+
+    /// The `catwalk_health` gauge value.
+    pub fn code(&self) -> u64 {
+        match self {
+            HealthState::Ready => 0,
+            HealthState::Degraded => 1,
+            HealthState::Unhealthy => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HealthState> {
+        match s {
+            "ready" => Some(HealthState::Ready),
+            "degraded" => Some(HealthState::Degraded),
+            "unhealthy" => Some(HealthState::Unhealthy),
+            _ => None,
+        }
+    }
+}
+
+/// One typed degradation: a pinned machine-matchable `code` plus a
+/// human detail.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HealthReason {
+    pub code: &'static str,
+    pub detail: String,
+}
+
+/// The folded verdict (`/readyz` body, `CMD_FETCH_HEALTH` reply).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HealthReport {
+    pub state: HealthState,
+    pub reasons: Vec<HealthReason>,
+}
+
+impl HealthReport {
+    pub fn ready() -> HealthReport {
+        HealthReport {
+            state: HealthState::Ready,
+            reasons: Vec::new(),
+        }
+    }
+
+    /// Render as the wire/body text: a `state=` line then one
+    /// `reason=<code> <detail>` line per reason.
+    pub fn render(&self) -> String {
+        let mut out = format!("state={}\n", self.state.name());
+        for r in &self.reasons {
+            out.push_str(&format!("reason={} {}\n", r.code, r.detail));
+        }
+        out
+    }
+
+    /// Parse [`HealthReport::render`] output (the `repro top` client
+    /// side). Reason codes arrive as owned strings from the wire, so
+    /// they are re-matched onto the pinned statics; an unknown code
+    /// from a newer server still parses (as `other`).
+    pub fn parse(text: &str) -> Result<HealthReport> {
+        let mut state = None;
+        let mut reasons = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Proto(format!("health line without `=`: `{line}`")))?;
+            match key {
+                "state" => {
+                    state = Some(HealthState::parse(value).ok_or_else(|| {
+                        Error::Proto(format!("unknown health state `{value}`"))
+                    })?);
+                }
+                "reason" => {
+                    let (code, detail) = value.split_once(' ').unwrap_or((value, ""));
+                    reasons.push(HealthReason {
+                        code: REASON_CODES
+                            .iter()
+                            .find(|c| **c == code)
+                            .copied()
+                            .unwrap_or("other"),
+                        detail: detail.to_string(),
+                    });
+                }
+                _ => {} // additive growth: unknown keys skip
+            }
+        }
+        Ok(HealthReport {
+            state: state.ok_or_else(|| Error::Proto("health block without a state".into()))?,
+            reasons,
+        })
+    }
+}
+
+/// The pinned reason codes (append-only).
+pub const REASON_CODES: &[&str] = &[
+    "shard_transport_failed",
+    "standby_pool_empty",
+    "replication_lag",
+    "lane_saturated",
+    "checkpoint_stale",
+    "other",
+];
+
+/// Fold the registry's live state into a [`HealthReport`] — cheap
+/// enough to run per scrape (latches, gauges and lock-free lane
+/// depths; no engine work).
+pub fn assess(registry: &ModelRegistry) -> HealthReport {
+    let mut reasons = Vec::new();
+    let mut unhealthy = false;
+    for slot in registry.all_slots() {
+        if let Some(sharded) = slot.sharded() {
+            let failed = sharded.failed_shards();
+            if !failed.is_empty() {
+                if failed.len() == sharded.plan.k {
+                    unhealthy = true;
+                }
+                reasons.push(HealthReason {
+                    code: "shard_transport_failed",
+                    detail: format!(
+                        "model={} shards={:?} of {} latched dead",
+                        slot.name, failed, sharded.plan.k
+                    ),
+                });
+            }
+            if sharded.standby_depth() == Some(0) {
+                reasons.push(HealthReason {
+                    code: "standby_pool_empty",
+                    detail: format!("model={} has no failover spare left", slot.name),
+                });
+            }
+            let lag = sharded.metrics.counter("replication_lag_generations");
+            if lag > 0 {
+                reasons.push(HealthReason {
+                    code: "replication_lag",
+                    detail: format!(
+                        "model={} standbys behind by {lag} committed generation(s)",
+                        slot.name
+                    ),
+                });
+            }
+        }
+        let gate = slot.qos();
+        let cfg = gate.config();
+        if cfg.enabled {
+            for (lane, name, depth) in [
+                (Lane::Infer, "infer", cfg.infer_depth),
+                (Lane::Learn, "learn", cfg.learn_depth),
+            ] {
+                let inflight = gate.inflight(lane);
+                if depth > 0 && inflight >= depth {
+                    reasons.push(HealthReason {
+                        code: "lane_saturated",
+                        detail: format!(
+                            "model={} lane={name} at depth {inflight}/{depth}",
+                            slot.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    if let (Some(interval), Some(age)) =
+        (registry.autosave_interval(), registry.last_save_age())
+    {
+        if age > interval * CHECKPOINT_STALE_INTERVALS {
+            reasons.push(HealthReason {
+                code: "checkpoint_stale",
+                detail: format!(
+                    "last successful save {}s ago (autosave every {}s)",
+                    age.as_secs(),
+                    interval.as_secs()
+                ),
+            });
+        }
+    }
+    let state = if unhealthy {
+        HealthState::Unhealthy
+    } else if reasons.is_empty() {
+        HealthState::Ready
+    } else {
+        HealthState::Degraded
+    };
+    HealthReport { state, reasons }
+}
+
+// ------------------------------------------------------- sampler state
+
+/// The shared telemetry state a registry exposes to its admin verbs
+/// and exporters: the series ring plus the sampler's last verdict.
+pub struct TelemetryState {
+    started: Instant,
+    interval_ms: u64,
+    series: Mutex<TimeSeries>,
+    last_health: Mutex<HealthReport>,
+    samples: AtomicU64,
+}
+
+impl TelemetryState {
+    pub fn new(interval: Duration, capacity: usize) -> TelemetryState {
+        TelemetryState {
+            started: Instant::now(),
+            interval_ms: interval.as_millis().max(1) as u64,
+            series: Mutex::new(TimeSeries::new(capacity)),
+            last_health: Mutex::new(HealthReport::ready()),
+            samples: AtomicU64::new(0),
+        }
+    }
+
+    pub fn interval_ms(&self) -> u64 {
+        self.interval_ms
+    }
+
+    pub fn samples_taken(&self) -> u64 {
+        self.samples.load(Ordering::Acquire)
+    }
+
+    /// Append one sampler tick.
+    pub fn record_sample(&self, snap: StatsSnapshot, health: HealthReport) {
+        let at_ms = self.started.elapsed().as_millis() as u64;
+        self.series.lock().unwrap().push(Sample { at_ms, snap });
+        *self.last_health.lock().unwrap() = health;
+        self.samples.fetch_add(1, Ordering::Release);
+    }
+
+    /// Rates over up to [`DEFAULT_RATE_WINDOW_MS`] of the series.
+    pub fn rates(&self) -> Option<Rates> {
+        let (first, last) = self.series.lock().unwrap().window(DEFAULT_RATE_WINDOW_MS)?;
+        rates_between(&first, &last)
+    }
+
+    /// Per-shard RPC p99 trend over the same window as [`rates`].
+    ///
+    /// [`rates`]: TelemetryState::rates
+    pub fn rpc_trends(&self) -> Vec<ShardRpcTrend> {
+        match self.series.lock().unwrap().window(DEFAULT_RATE_WINDOW_MS) {
+            Some((first, last)) => shard_rpc_trends(&first, &last),
+            None => Vec::new(),
+        }
+    }
+
+    /// The sampler's most recent verdict.
+    pub fn last_health(&self) -> HealthReport {
+        self.last_health.lock().unwrap().clone()
+    }
+
+    pub fn latest_sample(&self) -> Option<Sample> {
+        self.series.lock().unwrap().latest().cloned()
+    }
+}
+
+/// One sampler tick: snapshot + assess + record.
+fn tick(registry: &ModelRegistry, state: &TelemetryState) {
+    let snap = registry.stats(true, None).unwrap_or_default();
+    let health = assess(registry);
+    state.record_sample(snap, health);
+}
+
+// ------------------------------------------------- prometheus renderer
+
+/// Gauge-shaped stats rows (current state, not running totals),
+/// matched on the row's base name — **sorted** for the binary search.
+const GAUGE_ROWS: &[&str] = &[
+    "c",
+    "default",
+    "n",
+    "proto_version",
+    "replication_lag_generations",
+    "seed",
+    "shards",
+    "start_epoch_secs",
+    "stats_schema",
+    "t_max",
+    "uptime_secs",
+];
+
+/// Sampler identity rows for the exposition.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerMeta {
+    pub samples: u64,
+    pub interval_ms: u64,
+}
+
+struct Family {
+    kind: &'static str,
+    help: String,
+    lines: Vec<String>,
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect()
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Split a stats key into its scope prefix, labels and base name:
+/// `model.<m>.shard.<i>.<base>` / `model.<m>.<base>` / `<base>`.
+fn scope_key(key: &str) -> (&'static str, Vec<(String, String)>, String) {
+    if let Some(rest) = key.strip_prefix("model.") {
+        if let Some((m, tail)) = rest.split_once('.') {
+            if let Some(srest) = tail.strip_prefix("shard.") {
+                if let Some((i, stail)) = srest.split_once('.') {
+                    return (
+                        "shard_",
+                        vec![("model".into(), m.into()), ("shard".into(), i.into())],
+                        stail.to_string(),
+                    );
+                }
+            }
+            return ("model_", vec![("model".into(), m.into())], tail.to_string());
+        }
+    }
+    ("", Vec::new(), key.to_string())
+}
+
+fn family<'a>(
+    map: &'a mut BTreeMap<String, Family>,
+    name: String,
+    kind: &'static str,
+    help: String,
+) -> &'a mut Family {
+    map.entry(name).or_insert_with(|| Family {
+        kind,
+        help,
+        lines: Vec::new(),
+    })
+}
+
+/// Render a stats snapshot (plus optional rates / health / sampler
+/// rows) as Prometheus text exposition, families sorted by name. The
+/// output always parses under [`parse_exposition`] — property-gated in
+/// this module's tests and byte-pinned against the python twin.
+pub fn render_prometheus(
+    snap: &StatsSnapshot,
+    rates: Option<&Rates>,
+    health: Option<&HealthReport>,
+    sampler: Option<&SamplerMeta>,
+) -> String {
+    let mut fams: BTreeMap<String, Family> = BTreeMap::new();
+    for (key, v) in &snap.counters {
+        let (scope, labels, base) = scope_key(key);
+        let gauge = GAUGE_ROWS.binary_search(&base.as_str()).is_ok();
+        let name = if gauge {
+            format!("catwalk_{scope}{}", sanitize(&base))
+        } else {
+            format!("catwalk_{scope}{}_total", sanitize(&base))
+        };
+        let kind = if gauge { "gauge" } else { "counter" };
+        let f = family(&mut fams, name.clone(), kind, format!("stats row {base}"));
+        f.lines.push(format!("{name}{} {v}", fmt_labels(&labels)));
+    }
+    for (key, h) in &snap.hists {
+        let (scope, labels, base) = scope_key(key);
+        let name = format!("catwalk_{scope}{}_us", sanitize(&base));
+        let f = family(
+            &mut fams,
+            name.clone(),
+            "summary",
+            format!("latency summary {base}"),
+        );
+        for (q, v) in [
+            ("0.5", h.p50_us),
+            ("0.95", h.p95_us),
+            ("0.99", h.p99_us),
+            ("1", h.max_us),
+        ] {
+            let mut ql = labels.clone();
+            ql.push(("quantile".into(), q.into()));
+            f.lines.push(format!("{name}{} {v}", fmt_labels(&ql)));
+        }
+        let sum = h.mean_us * h.count as f64;
+        f.lines
+            .push(format!("{name}_sum{} {sum}", fmt_labels(&labels)));
+        f.lines
+            .push(format!("{name}_count{} {}", fmt_labels(&labels), h.count));
+    }
+    if let Some(r) = rates {
+        for (name, v, help) in [
+            ("catwalk_rate_expired_per_s", r.expired_per_s, "expired volleys per second over the rate window"),
+            ("catwalk_rate_learn_volleys_per_s", r.learn_volleys_per_s, "learned volleys per second over the rate window"),
+            ("catwalk_rate_requests_per_s", r.requests_per_s, "requests per second over the rate window"),
+            ("catwalk_rate_shed_per_s", r.shed_per_s, "shed + throttled volleys per second over the rate window"),
+            ("catwalk_rate_volleys_per_s", r.volleys_per_s, "volleys per second over the rate window"),
+            ("catwalk_rate_window_secs", r.window_secs, "span of the rate window"),
+        ] {
+            let f = family(&mut fams, name.to_string(), "gauge", help.to_string());
+            f.lines.push(format!("{name} {v}"));
+        }
+    }
+    if let Some(hr) = health {
+        let f = family(
+            &mut fams,
+            "catwalk_health".to_string(),
+            "gauge",
+            "0 ready, 1 degraded, 2 unhealthy".to_string(),
+        );
+        f.lines.push(format!("catwalk_health {}", hr.state.code()));
+        if !hr.reasons.is_empty() {
+            let mut by_code: BTreeMap<&str, u64> = BTreeMap::new();
+            for r in &hr.reasons {
+                *by_code.entry(r.code).or_insert(0) += 1;
+            }
+            let f = family(
+                &mut fams,
+                "catwalk_health_reason".to_string(),
+                "gauge",
+                "active degradation reasons by code".to_string(),
+            );
+            for (code, n) in by_code {
+                f.lines
+                    .push(format!("catwalk_health_reason{{code=\"{code}\"}} {n}"));
+            }
+        }
+    }
+    if let Some(m) = sampler {
+        let f = family(
+            &mut fams,
+            "catwalk_sample_interval_ms".to_string(),
+            "gauge",
+            "sampler cadence".to_string(),
+        );
+        f.lines
+            .push(format!("catwalk_sample_interval_ms {}", m.interval_ms));
+        let f = family(
+            &mut fams,
+            "catwalk_samples_total".to_string(),
+            "counter",
+            "sampler ticks taken".to_string(),
+        );
+        f.lines.push(format!("catwalk_samples_total {}", m.samples));
+    }
+    let mut out = String::new();
+    for (name, f) in fams {
+        out.push_str(&format!("# HELP {name} {}\n", f.help));
+        out.push_str(&format!("# TYPE {name} {}\n", f.kind));
+        for l in f.lines {
+            out.push_str(&l);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// The full `/metrics` / `CMD_FETCH_METRICS` body for a registry:
+/// stats snapshot + windowed rates + health + sampler identity.
+pub fn render_metrics_for(registry: &ModelRegistry) -> String {
+    let snap = registry.stats(true, None).unwrap_or_default();
+    let health = assess(registry);
+    let tele = registry.telemetry();
+    let rates = tele.and_then(|t| t.rates());
+    let meta = tele.map(|t| SamplerMeta {
+        samples: t.samples_taken(),
+        interval_ms: t.interval_ms(),
+    });
+    render_prometheus(&snap, rates.as_ref(), Some(&health), meta.as_ref())
+}
+
+/// The `/readyz` / `CMD_FETCH_HEALTH` body: a fresh assessment.
+pub fn render_health_for(registry: &ModelRegistry) -> String {
+    assess(registry).render()
+}
+
+// ------------------------------------------------ exposition re-parser
+
+/// One parsed exposition sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExpoSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn parse_sample_line(line: &str) -> Result<ExpoSample> {
+    let err = |why: &str| Error::Proto(format!("exposition: {why}: `{line}`"));
+    let (head, value) = line
+        .rsplit_once(' ')
+        .ok_or_else(|| err("sample without a value"))?;
+    let value: f64 = value.parse().map_err(|_| err("unparseable value"))?;
+    let (name, labels) = match head.split_once('{') {
+        None => (head.to_string(), Vec::new()),
+        Some((name, rest)) => {
+            let body = rest
+                .strip_suffix('}')
+                .ok_or_else(|| err("unterminated label set"))?;
+            let mut labels = Vec::new();
+            let mut cur = body;
+            while !cur.is_empty() {
+                let (k, rest) = cur
+                    .split_once("=\"")
+                    .ok_or_else(|| err("label without =\""))?;
+                if !valid_metric_name(k) {
+                    return Err(err("bad label name"));
+                }
+                // value runs to the next unescaped quote
+                let mut val = String::new();
+                let mut chars = rest.chars();
+                let mut closed = false;
+                while let Some(c) = chars.next() {
+                    match c {
+                        '\\' => match chars.next() {
+                            Some('\\') => val.push('\\'),
+                            Some('"') => val.push('"'),
+                            Some('n') => val.push('\n'),
+                            _ => return Err(err("bad escape in label value")),
+                        },
+                        '"' => {
+                            closed = true;
+                            break;
+                        }
+                        c => val.push(c),
+                    }
+                }
+                if !closed {
+                    return Err(err("unterminated label value"));
+                }
+                labels.push((k.to_string(), val));
+                cur = chars.as_str();
+                if let Some(rest) = cur.strip_prefix(',') {
+                    cur = rest;
+                } else if !cur.is_empty() {
+                    return Err(err("junk between labels"));
+                }
+            }
+            (name.to_string(), labels)
+        }
+    };
+    if !valid_metric_name(&name) {
+        return Err(err("bad metric name"));
+    }
+    Ok(ExpoSample {
+        name,
+        labels,
+        value,
+    })
+}
+
+/// Parse Prometheus text exposition under the pinned grammar (module
+/// docs). Typed errors on: malformed comments, bad metric/label names,
+/// unparseable values, and any sample whose family was never
+/// TYPE-declared. The same grammar is pinned in the python twin.
+pub fn parse_exposition(text: &str) -> Result<Vec<ExpoSample>> {
+    let mut typed: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let kw = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            let tail = parts.next().unwrap_or("");
+            if !valid_metric_name(name) || tail.is_empty() {
+                return Err(Error::Proto(format!("exposition: bad comment: `{line}`")));
+            }
+            match kw {
+                "HELP" => {}
+                "TYPE" => {
+                    if !matches!(tail, "counter" | "gauge" | "summary" | "histogram" | "untyped")
+                    {
+                        return Err(Error::Proto(format!(
+                            "exposition: unknown TYPE `{tail}`: `{line}`"
+                        )));
+                    }
+                    typed.insert(name.to_string());
+                }
+                _ => {
+                    return Err(Error::Proto(format!(
+                        "exposition: unknown comment keyword `{kw}`: `{line}`"
+                    )));
+                }
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return Err(Error::Proto(format!("exposition: bad comment: `{line}`")));
+        }
+        let s = parse_sample_line(line)?;
+        // a summary's _sum/_count ride their family's TYPE
+        let fam = s
+            .name
+            .strip_suffix("_sum")
+            .or_else(|| s.name.strip_suffix("_count"))
+            .filter(|f| typed.contains(*f))
+            .unwrap_or(&s.name);
+        if !typed.contains(fam) {
+            return Err(Error::Proto(format!(
+                "exposition: sample `{}` has no TYPE declaration",
+                s.name
+            )));
+        }
+        out.push(s);
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------- `repro top` view
+
+fn fmt_rate(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+/// Render one dashboard frame for `repro top`: totals and per-model /
+/// per-shard deltas between two polls (`prev = None` on the first
+/// frame renders totals without rates). Pure over its inputs so the
+/// CLI and the tests share it.
+pub fn render_dashboard(
+    prev: Option<&Sample>,
+    cur: &Sample,
+    health: Option<&HealthReport>,
+) -> String {
+    let mut out = String::new();
+    let uptime = cur.snap.counter("uptime_secs");
+    let state = match health {
+        Some(h) => {
+            let mut s = format!("state={}", h.state.name());
+            for r in &h.reasons {
+                s.push_str(&format!("  [{} {}]", r.code, r.detail));
+            }
+            s
+        }
+        None => "state=unknown".to_string(),
+    };
+    out.push_str(&format!("catwalk top · uptime {uptime}s · {state}\n"));
+    let rates = prev.and_then(|p| rates_between(p, cur));
+    match rates {
+        Some(r) => out.push_str(&format!(
+            "totals: requests {} ({}/s) · volleys {} ({}/s) · shed {} ({}/s) · expired {} ({}/s)\n",
+            cur.snap.counter("requests"),
+            fmt_rate(r.requests_per_s),
+            cur.snap.counter("volleys_inferred") + cur.snap.counter("volleys_learned"),
+            fmt_rate(r.volleys_per_s),
+            cur.snap.counter("requests_shed") + cur.snap.counter("requests_throttled"),
+            fmt_rate(r.shed_per_s),
+            cur.snap.counter("requests_expired"),
+            fmt_rate(r.expired_per_s),
+        )),
+        None => out.push_str(&format!(
+            "totals: requests {} · volleys {} · shed {} · expired {}\n",
+            cur.snap.counter("requests"),
+            cur.snap.counter("volleys_inferred") + cur.snap.counter("volleys_learned"),
+            cur.snap.counter("requests_shed") + cur.snap.counter("requests_throttled"),
+            cur.snap.counter("requests_expired"),
+        )),
+    }
+    // model rows, discovered from the geometry rows every slot carries
+    let mut models: Vec<String> = cur
+        .snap
+        .counters
+        .keys()
+        .filter_map(|k| {
+            k.strip_prefix("model.")
+                .and_then(|r| r.strip_suffix(".default"))
+                .map(String::from)
+        })
+        .collect();
+    models.sort();
+    if !models.is_empty() {
+        out.push_str(&format!(
+            "{:<14} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}\n",
+            "MODEL", "REQ/S", "VOL/S", "LEARN/S", "SHED/S", "EXP/S", "P99(us)"
+        ));
+    }
+    let dt = prev.and_then(|p| {
+        let ms = cur.at_ms.checked_sub(p.at_ms)?;
+        (ms > 0).then_some(ms as f64 / 1000.0)
+    });
+    for m in models {
+        let key = |k: &str| format!("model.{m}.{k}");
+        let rate = |k: &str| match (prev, dt) {
+            (Some(p), Some(dt)) => fmt_rate(
+                cur.snap
+                    .counter(&key(k))
+                    .saturating_sub(p.snap.counter(&key(k))) as f64
+                    / dt,
+            ),
+            _ => "-".to_string(),
+        };
+        let two = |a: &str, b: &str| match (prev, dt) {
+            (Some(p), Some(dt)) => {
+                let d = |k: &str| {
+                    cur.snap
+                        .counter(&key(k))
+                        .saturating_sub(p.snap.counter(&key(k)))
+                };
+                fmt_rate((d(a) + d(b)) as f64 / dt)
+            }
+            _ => "-".to_string(),
+        };
+        let p99 = cur
+            .snap
+            .hists
+            .get(&key("request_latency"))
+            .map(|h| h.p99_us.to_string())
+            .unwrap_or_else(|| "-".to_string());
+        out.push_str(&format!(
+            "{:<14} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}\n",
+            m,
+            rate("requests"),
+            two("volleys_inferred", "volleys_learned"),
+            rate("volleys_learned"),
+            two("requests_shed", "requests_throttled"),
+            rate("requests_expired"),
+            p99,
+        ));
+        // shard rows: rpc p99 + per-shard request share
+        let mut shards: Vec<usize> = cur
+            .snap
+            .counters
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix(&format!("model.{m}.shard."))
+                    .and_then(|r| r.strip_suffix(".c"))
+                    .and_then(|i| i.parse().ok())
+            })
+            .collect();
+        shards.sort_unstable();
+        for i in shards {
+            let rpc = cur
+                .snap
+                .hists
+                .get(&format!("model.{m}.shard.{i}.rpc"))
+                .map(|h| format!("rpc p99 {}us", h.p99_us))
+                .unwrap_or_else(|| "in-process".to_string());
+            out.push_str(&format!(
+                "  shard {i} · {rpc} · requests {}\n",
+                cur.snap.counter(&format!("model.{m}.shard.{i}.requests"))
+            ));
+        }
+    }
+    out
+}
+
+// ----------------------------------------------- sampler + http plane
+
+/// A running telemetry plane: sampler thread plus (optionally) the
+/// HTTP exporter. Dropping without [`Telemetry::shutdown`] signals the
+/// threads to stop but does not join them.
+pub struct Telemetry {
+    state: Arc<TelemetryState>,
+    stop: Arc<AtomicBool>,
+    sampler: Option<JoinHandle<()>>,
+    http: Option<JoinHandle<()>>,
+    http_addr: Option<SocketAddr>,
+}
+
+impl Telemetry {
+    pub fn state(&self) -> &Arc<TelemetryState> {
+        &self.state
+    }
+
+    /// Where the exporter actually bound (port 0 resolves here).
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http_addr
+    }
+
+    /// Stop and join both threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.sampler.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.http.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Telemetry {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+    }
+}
+
+/// Arm the telemetry plane over `registry`: attach shared state (so
+/// `CMD_FETCH_METRICS` sees rates), start the sampler, and bind the
+/// HTTP exporter when an address is configured. The sampler takes its
+/// first sample immediately, then every `interval`.
+pub fn start(registry: Arc<ModelRegistry>, opts: &TelemetryOptions) -> Result<Telemetry> {
+    let state = Arc::new(TelemetryState::new(opts.interval, opts.capacity));
+    registry.attach_telemetry(state.clone());
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let (registry, state, stop) = (registry.clone(), state.clone(), stop.clone());
+        let interval = opts.interval;
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                tick(&registry, &state);
+                // nap in slices so shutdown stays prompt at any cadence
+                let mut left = interval;
+                while left > Duration::ZERO && !stop.load(Ordering::Acquire) {
+                    let nap = left.min(Duration::from_millis(25));
+                    std::thread::sleep(nap);
+                    left -= nap;
+                }
+            }
+        })
+    };
+    let (http_addr, http) = match &opts.metrics_addr {
+        Some(addr) => {
+            let (bound, handle) = spawn_http(addr, registry, state.clone(), stop.clone())?;
+            (Some(bound), Some(handle))
+        }
+        None => (None, None),
+    };
+    Ok(Telemetry {
+        state,
+        stop,
+        sampler: Some(sampler),
+        http,
+        http_addr,
+    })
+}
+
+fn spawn_http(
+    addr: &str,
+    registry: Arc<ModelRegistry>,
+    state: Arc<TelemetryState>,
+    stop: Arc<AtomicBool>,
+) -> Result<(SocketAddr, JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let bound = listener.local_addr()?;
+    let handle = std::thread::spawn(move || loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // serve inline: exporter traffic is one scraper, and a
+                // broken conn must not kill the loop
+                let _ = serve_http_conn(stream, &registry, &state);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    });
+    Ok((bound, handle))
+}
+
+fn serve_http_conn(
+    mut stream: TcpStream,
+    registry: &ModelRegistry,
+    state: &TelemetryState,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // read the request head (we never need a body); 4 KiB cap — a
+    // scraper's GET fits, anything else is cut off harmlessly
+    let mut buf = [0u8; 4096];
+    let mut n = 0;
+    while n < buf.len() {
+        let got = match stream.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(g) => g,
+            Err(_) => break,
+        };
+        n += got;
+        if buf[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("").split('?').next().unwrap_or("");
+    let (status, ctype, body) = route(method, path, registry, state);
+    let header = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn route(
+    method: &str,
+    path: &str,
+    registry: &ModelRegistry,
+    _state: &TelemetryState,
+) -> (&'static str, &'static str, String) {
+    if method != "GET" {
+        return (
+            "405 Method Not Allowed",
+            "text/plain",
+            "only GET is served here\n".to_string(),
+        );
+    }
+    match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            render_metrics_for(registry),
+        ),
+        // liveness: the process answering *is* the signal
+        "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+        "/readyz" => {
+            let report = assess(registry);
+            let status = match report.state {
+                HealthState::Ready => "200 OK",
+                HealthState::Degraded | HealthState::Unhealthy => "503 Service Unavailable",
+            };
+            (status, "text/plain", report.render())
+        }
+        _ => (
+            "404 Not Found",
+            "text/plain",
+            format!("no route {path} (try /metrics, /healthz, /readyz)\n"),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::HistStats;
+
+    fn snap(counters: &[(&str, u64)], hists: &[(&str, HistStats)]) -> StatsSnapshot {
+        let mut s = StatsSnapshot::new();
+        for (k, v) in counters {
+            s.counters.insert((*k).to_string(), *v);
+        }
+        for (k, h) in hists {
+            s.hists.insert((*k).to_string(), *h);
+        }
+        s
+    }
+
+    fn sample(at_ms: u64, counters: &[(&str, u64)]) -> Sample {
+        Sample {
+            at_ms,
+            snap: snap(counters, &[]),
+        }
+    }
+
+    // Shared with python/tests/test_proto_frames.py
+    // (test_prometheus_exposition_golden): the exact exposition for a
+    // small fixed snapshot — rendering is deterministic (families and
+    // rows sorted), so the two twins can pin identical bytes.
+    const GOLDEN_EXPOSITION: &str = concat!(
+        "# HELP catwalk_model_n stats row n\n",
+        "# TYPE catwalk_model_n gauge\n",
+        "catwalk_model_n{model=\"edge\"} 16\n",
+        "# HELP catwalk_model_requests_total stats row requests\n",
+        "# TYPE catwalk_model_requests_total counter\n",
+        "catwalk_model_requests_total{model=\"edge\"} 3\n",
+        "# HELP catwalk_replication_lag_generations stats row replication_lag_generations\n",
+        "# TYPE catwalk_replication_lag_generations gauge\n",
+        "catwalk_replication_lag_generations 1\n",
+        "# HELP catwalk_request_latency_us latency summary request_latency\n",
+        "# TYPE catwalk_request_latency_us summary\n",
+        "catwalk_request_latency_us{quantile=\"0.5\"} 32\n",
+        "catwalk_request_latency_us{quantile=\"0.95\"} 64\n",
+        "catwalk_request_latency_us{quantile=\"0.99\"} 64\n",
+        "catwalk_request_latency_us{quantile=\"1\"} 80\n",
+        "catwalk_request_latency_us_sum 100\n",
+        "catwalk_request_latency_us_count 2\n",
+        "# HELP catwalk_requests_total stats row requests\n",
+        "# TYPE catwalk_requests_total counter\n",
+        "catwalk_requests_total 12\n",
+    );
+
+    #[test]
+    fn golden_exposition_matches_python_twin() {
+        let s = snap(
+            &[
+                ("requests", 12),
+                ("model.edge.requests", 3),
+                ("model.edge.n", 16),
+                ("replication_lag_generations", 1),
+            ],
+            &[(
+                "request_latency",
+                HistStats {
+                    count: 2,
+                    mean_us: 50.0,
+                    p50_us: 32,
+                    p95_us: 64,
+                    p99_us: 64,
+                    max_us: 80,
+                },
+            )],
+        );
+        let text = render_prometheus(&s, None, None, None);
+        assert_eq!(text, GOLDEN_EXPOSITION);
+        let parsed = parse_exposition(&text).unwrap();
+        assert_eq!(parsed.len(), 10);
+        assert_eq!(parsed[0].name, "catwalk_model_n");
+        assert_eq!(
+            parsed[0].labels,
+            vec![("model".to_string(), "edge".to_string())]
+        );
+        assert_eq!(parsed[0].value, 16.0);
+    }
+
+    #[test]
+    fn full_render_parses_under_the_pinned_grammar() {
+        let s = snap(
+            &[
+                ("requests", 100),
+                ("uptime_secs", 42),
+                ("model.dist.shard.0.requests", 50),
+                ("model.dist.shard.0.c", 8),
+                ("model.dist.shards", 2),
+            ],
+            &[(
+                "model.dist.shard.0.rpc",
+                HistStats {
+                    count: 50,
+                    mean_us: 120.5,
+                    p50_us: 64,
+                    p95_us: 256,
+                    p99_us: 512,
+                    max_us: 700,
+                },
+            )],
+        );
+        let rates = Rates {
+            window_secs: 10.0,
+            requests_per_s: 10.0,
+            volleys_per_s: 40.5,
+            learn_volleys_per_s: 0.0,
+            shed_per_s: 0.0,
+            expired_per_s: 0.25,
+        };
+        let health = HealthReport {
+            state: HealthState::Degraded,
+            reasons: vec![HealthReason {
+                code: "standby_pool_empty",
+                detail: "model=dist has no failover spare left".into(),
+            }],
+        };
+        let meta = SamplerMeta {
+            samples: 7,
+            interval_ms: 250,
+        };
+        let text = render_prometheus(&s, Some(&rates), Some(&health), Some(&meta));
+        let parsed = parse_exposition(&text).unwrap();
+        // shard rows carry both labels
+        let shard = parsed
+            .iter()
+            .find(|p| p.name == "catwalk_shard_requests_total")
+            .unwrap();
+        assert_eq!(
+            shard.labels,
+            vec![
+                ("model".to_string(), "dist".to_string()),
+                ("shard".to_string(), "0".to_string())
+            ]
+        );
+        assert!(parsed.iter().any(|p| p.name == "catwalk_health" && p.value == 1.0));
+        assert!(parsed
+            .iter()
+            .any(|p| p.name == "catwalk_health_reason"
+                && p.labels == vec![("code".to_string(), "standby_pool_empty".to_string())]));
+        assert!(parsed
+            .iter()
+            .any(|p| p.name == "catwalk_rate_volleys_per_s" && p.value == 40.5));
+        assert!(parsed.iter().any(|p| p.name == "catwalk_samples_total"));
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_lines() {
+        // sample without a TYPE declaration
+        assert!(parse_exposition("catwalk_requests_total 5\n").is_err());
+        // bad comment keyword
+        assert!(parse_exposition("# NOTE catwalk_x something\n").is_err());
+        // bad metric name
+        assert!(parse_exposition("# TYPE 9bad counter\n9bad 1\n").is_err());
+        // unterminated labels
+        assert!(parse_exposition(
+            "# TYPE catwalk_x counter\ncatwalk_x{model=\"a 1\n"
+        )
+        .is_err());
+        // unparseable value
+        assert!(parse_exposition("# TYPE catwalk_x counter\ncatwalk_x five\n").is_err());
+        // unknown TYPE kind
+        assert!(parse_exposition("# TYPE catwalk_x ratio\ncatwalk_x 1\n").is_err());
+        // escaped quotes inside label values survive
+        let ok = parse_exposition(
+            "# TYPE catwalk_x counter\ncatwalk_x{model=\"a\\\"b\"} 2\n",
+        )
+        .unwrap();
+        assert_eq!(ok[0].labels[0].1, "a\"b");
+    }
+
+    #[test]
+    fn rates_derive_from_cumulative_deltas() {
+        let a = sample(
+            1000,
+            &[
+                ("requests", 100),
+                ("volleys_inferred", 400),
+                ("volleys_learned", 40),
+                ("requests_shed", 4),
+                ("requests_throttled", 2),
+                ("requests_expired", 1),
+            ],
+        );
+        let b = sample(
+            3000,
+            &[
+                ("requests", 160),
+                ("volleys_inferred", 640),
+                ("volleys_learned", 60),
+                ("requests_shed", 8),
+                ("requests_throttled", 4),
+                ("requests_expired", 3),
+            ],
+        );
+        let r = rates_between(&a, &b).unwrap();
+        assert_eq!(r.window_secs, 2.0);
+        assert_eq!(r.requests_per_s, 30.0);
+        assert_eq!(r.volleys_per_s, 130.0);
+        assert_eq!(r.learn_volleys_per_s, 10.0);
+        assert_eq!(r.shed_per_s, 3.0);
+        assert_eq!(r.expired_per_s, 1.0);
+        // same timestamp → no rate, and counter resets clamp at zero
+        assert!(rates_between(&a, &a).is_none());
+        let reset = sample(5000, &[("requests", 10)]);
+        assert_eq!(rates_between(&b, &reset).unwrap().requests_per_s, 0.0);
+    }
+
+    #[test]
+    fn series_ring_is_bounded_and_windows() {
+        let mut ts = TimeSeries::new(4);
+        for i in 0..10u64 {
+            ts.push(sample(i * 100, &[("requests", i * 5)]));
+        }
+        assert_eq!(ts.len(), 4);
+        assert_eq!(ts.latest().unwrap().at_ms, 900);
+        // window of 250ms back from 900 → first kept sample ≥ 650
+        let (first, last) = ts.window(250).unwrap();
+        assert_eq!(first.at_ms, 700);
+        assert_eq!(last.at_ms, 900);
+        // a window too narrow to span two samples yields none
+        assert!(ts.window(0).is_none());
+    }
+
+    #[test]
+    fn shard_rpc_trend_tracks_p99_movement() {
+        let h = |p99: u64| HistStats {
+            count: 10,
+            mean_us: 50.0,
+            p50_us: 10,
+            p95_us: p99,
+            p99_us: p99,
+            max_us: p99,
+        };
+        let a = Sample {
+            at_ms: 0,
+            snap: snap(&[], &[("model.dist.shard.0.rpc", h(100))]),
+        };
+        let b = Sample {
+            at_ms: 1000,
+            snap: snap(
+                &[],
+                &[
+                    ("model.dist.shard.0.rpc", h(300)),
+                    ("model.dist.shard.1.rpc", h(50)),
+                    ("model.dist.shard.1.request_latency", h(999)), // not rpc
+                ],
+            ),
+        };
+        let mut trends = shard_rpc_trends(&a, &b);
+        trends.sort_by_key(|t| t.shard);
+        assert_eq!(trends.len(), 2);
+        assert_eq!(trends[0].p99_us, 300);
+        assert_eq!(trends[0].delta_us, 200);
+        assert_eq!(trends[1].shard, 1);
+        assert_eq!(trends[1].delta_us, 50);
+    }
+
+    #[test]
+    fn health_report_renders_and_parses() {
+        let r = HealthReport {
+            state: HealthState::Degraded,
+            reasons: vec![
+                HealthReason {
+                    code: "shard_transport_failed",
+                    detail: "model=dist shards=[0] of 2 latched dead".into(),
+                },
+                HealthReason {
+                    code: "replication_lag",
+                    detail: "model=dist standbys behind by 2 committed generation(s)".into(),
+                },
+            ],
+        };
+        let text = r.render();
+        assert!(text.starts_with("state=degraded\n"));
+        assert_eq!(HealthReport::parse(&text).unwrap(), r);
+        assert_eq!(
+            HealthReport::parse("state=ready\n").unwrap(),
+            HealthReport::ready()
+        );
+        // unknown reason codes from a newer server still parse
+        let fwd = HealthReport::parse("state=degraded\nreason=novel_code details here\n").unwrap();
+        assert_eq!(fwd.reasons[0].code, "other");
+        assert!(HealthReport::parse("reason=x y\n").is_err(), "no state");
+        assert!(HealthReport::parse("state=wobbly\n").is_err());
+    }
+
+    #[test]
+    fn gauge_rows_table_is_sorted() {
+        for w in GAUGE_ROWS.windows(2) {
+            assert!(w[0] < w[1], "{w:?} out of order");
+        }
+        for w in REASON_CODES.windows(2) {
+            assert!(!w[1].is_empty());
+            let _ = w;
+        }
+    }
+
+    #[test]
+    fn dashboard_renders_totals_models_and_shards() {
+        let mk = |requests: u64, volleys: u64| {
+            let mut s = snap(
+                &[
+                    ("uptime_secs", 42),
+                    ("requests", requests),
+                    ("volleys_inferred", volleys),
+                    ("model.quad.default", 0),
+                    ("model.quad.requests", requests / 2),
+                    ("model.quad.volleys_inferred", volleys / 2),
+                    ("model.quad.shard.0.c", 8),
+                    ("model.quad.shard.0.requests", requests / 2),
+                    ("model.quad.shard.1.c", 8),
+                    ("model.quad.shard.1.requests", requests / 2),
+                ],
+                &[],
+            );
+            s.hists.insert(
+                "model.quad.shard.1.rpc".into(),
+                HistStats {
+                    count: 4,
+                    mean_us: 100.0,
+                    p50_us: 64,
+                    p95_us: 128,
+                    p99_us: 256,
+                    max_us: 300,
+                },
+            );
+            s
+        };
+        let a = Sample {
+            at_ms: 0,
+            snap: mk(100, 400),
+        };
+        let b = Sample {
+            at_ms: 2000,
+            snap: mk(200, 800),
+        };
+        let health = HealthReport::ready();
+        let frame = render_dashboard(Some(&a), &b, Some(&health));
+        assert!(frame.contains("uptime 42s"), "{frame}");
+        assert!(frame.contains("state=ready"), "{frame}");
+        assert!(frame.contains("quad"), "{frame}");
+        assert!(frame.contains("50.0"), "per-model req/s delta: {frame}");
+        assert!(frame.contains("shard 0 · in-process"), "{frame}");
+        assert!(frame.contains("shard 1 · rpc p99 256us"), "{frame}");
+        // first frame (no prev poll) renders totals without rates
+        let first = render_dashboard(None, &b, None);
+        assert!(first.contains("state=unknown"), "{first}");
+        assert!(first.contains("requests 200 ·"), "{first}");
+    }
+}

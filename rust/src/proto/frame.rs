@@ -35,6 +35,7 @@
 //!           | 6 CREATE_COLUMNS | 7 FETCH_CKPT | 8 PUT_CKPT
 //!           | 9 PUT_SHARD | 10 PUT_MANIFEST            (v3, dist tier)
 //!           | 11 FETCH_TRACE                           (v3, obs; no fields)
+//!           | 12 FETCH_METRICS | 13 FETCH_HEALTH   (v3, telemetry; no fields)
 //! CREATE   := name str16 | n u32 | theta f32 | seed u64
 //! SAVE/LOAD/UNLOAD/FETCH_CKPT := name str16
 //! CREATE_COLUMNS := name str16 | index u32 | n u32 | theta f32
@@ -281,6 +282,8 @@ const CMD_PUT_CKPT: u8 = 8;
 const CMD_PUT_SHARD: u8 = 9;
 const CMD_PUT_MANIFEST: u8 = 10;
 const CMD_FETCH_TRACE: u8 = 11;
+const CMD_FETCH_METRICS: u8 = 12;
+const CMD_FETCH_HEALTH: u8 = 13;
 
 fn op_to_u8(op: &Op) -> u8 {
     match op {
@@ -417,6 +420,8 @@ fn encode_model_cmd(p: &mut Vec<u8>, cmd: &ModelCmd) -> Result<()> {
             put_bytes(p, bytes)?;
         }
         ModelCmd::FetchTrace => p.push(CMD_FETCH_TRACE),
+        ModelCmd::FetchMetrics => p.push(CMD_FETCH_METRICS),
+        ModelCmd::FetchHealth => p.push(CMD_FETCH_HEALTH),
     }
     Ok(())
 }
@@ -458,6 +463,8 @@ fn decode_model_cmd(cur: &mut Cur) -> Result<ModelCmd> {
             bytes: cur.blob32()?,
         }),
         CMD_FETCH_TRACE => Ok(ModelCmd::FetchTrace),
+        CMD_FETCH_METRICS => Ok(ModelCmd::FetchMetrics),
+        CMD_FETCH_HEALTH => Ok(ModelCmd::FetchHealth),
         other => Err(Error::Proto(format!("unknown admin cmd {other}"))),
     }
 }

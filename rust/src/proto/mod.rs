@@ -135,13 +135,25 @@ pub enum ModelCmd {
     /// DESIGN.md §2.8). Nullary like `List` — traces are per-process,
     /// not per-model.
     FetchTrace,
+    /// Render the process's current metrics — stats snapshot, windowed
+    /// rates and health — as Prometheus text exposition bytes
+    /// (answered with [`AdminReply::Ckpt`]; see `crate::obs::telemetry`
+    /// and DESIGN.md §2.9). Nullary — telemetry is per-process.
+    FetchMetrics,
+    /// Render the process's current health verdict
+    /// (`state=`/`reason=` lines, the `/readyz` body) as bytes
+    /// (answered with [`AdminReply::Ckpt`]). Nullary.
+    FetchHealth,
 }
 
 impl ModelCmd {
     /// The model name a command addresses (`List` addresses none).
     pub fn name(&self) -> Option<&str> {
         match self {
-            ModelCmd::List | ModelCmd::FetchTrace => None,
+            ModelCmd::List
+            | ModelCmd::FetchTrace
+            | ModelCmd::FetchMetrics
+            | ModelCmd::FetchHealth => None,
             ModelCmd::Create { name, .. }
             | ModelCmd::Save { name }
             | ModelCmd::Load { name }
@@ -429,6 +441,8 @@ mod tests {
     fn model_cmd_names() {
         assert_eq!(ModelCmd::List.name(), None);
         assert_eq!(ModelCmd::FetchTrace.name(), None);
+        assert_eq!(ModelCmd::FetchMetrics.name(), None);
+        assert_eq!(ModelCmd::FetchHealth.name(), None);
         for cmd in [
             ModelCmd::Create {
                 name: "a".into(),

@@ -58,8 +58,8 @@ use crate::volley::{SpikeVolley, VolleyResult};
 use checkpoint::{crc32, write_atomic, Checkpoint};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::{Duration, Instant, SystemTime};
 
 /// How a model instance is sized and seeded (the create-time knobs;
 /// `c`, `b` and `t_max` come from the manifest entry for `n`).
@@ -497,6 +497,18 @@ pub struct ModelRegistry {
     /// merged into the top level of the combined stats snapshot.
     pub metrics: Arc<Metrics>,
     last_autosave: Mutex<Instant>,
+    /// When this registry was constructed — the `uptime_secs` zero.
+    started: Instant,
+    /// Wall-clock construction time (the `start_epoch_secs` stats row).
+    start_epoch_secs: u64,
+    /// When a checkpoint save last *succeeded* (any model). `None`
+    /// until the first success; the health model's `checkpoint_stale`
+    /// input (`crate::obs::telemetry::assess`).
+    last_save: Mutex<Option<Instant>>,
+    /// The telemetry plane, once armed (`telemetry::start`): gives the
+    /// `CMD_FETCH_METRICS` admin verb access to the sampler's windowed
+    /// rates. Never detached — set at most once per registry.
+    telemetry: OnceLock<Arc<crate::obs::telemetry::TelemetryState>>,
 }
 
 impl ModelRegistry {
@@ -567,7 +579,55 @@ impl ModelRegistry {
             default_name: default_name.to_string(),
             metrics: Arc::new(Metrics::new()),
             last_autosave: Mutex::new(Instant::now()),
+            started: Instant::now(),
+            start_epoch_secs: SystemTime::now()
+                .duration_since(SystemTime::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            last_save: Mutex::new(None),
+            telemetry: OnceLock::new(),
         }
+    }
+
+    /// Seconds since this registry was constructed (the `uptime_secs`
+    /// stats row).
+    pub fn uptime_secs(&self) -> u64 {
+        self.started.elapsed().as_secs()
+    }
+
+    /// Unix epoch seconds at construction (the `start_epoch_secs`
+    /// stats row).
+    pub fn start_epoch_secs(&self) -> u64 {
+        self.start_epoch_secs
+    }
+
+    /// Age of the last *successful* checkpoint save — measured from
+    /// registry start until one succeeds, so a server that never
+    /// manages to save still trips the staleness check. `None` when no
+    /// checkpoint directory is configured (nothing to be stale).
+    pub fn last_save_age(&self) -> Option<Duration> {
+        self.cfg.ckpt_dir.as_ref()?;
+        Some(match *self.last_save.lock().unwrap() {
+            Some(at) => at.elapsed(),
+            None => self.started.elapsed(),
+        })
+    }
+
+    /// The configured autosave cadence, if any.
+    pub fn autosave_interval(&self) -> Option<Duration> {
+        self.cfg.autosave_after
+    }
+
+    /// Arm the telemetry plane's shared state on this registry (done
+    /// by `crate::obs::telemetry::start`; at most once — a second call
+    /// keeps the first state).
+    pub fn attach_telemetry(&self, state: Arc<crate::obs::telemetry::TelemetryState>) {
+        let _ = self.telemetry.set(state);
+    }
+
+    /// The armed telemetry state, if any.
+    pub fn telemetry(&self) -> Option<&Arc<crate::obs::telemetry::TelemetryState>> {
+        self.telemetry.get()
     }
 
     /// The retry hint (ms) stamped on BUSY refusals minted outside any
@@ -597,8 +657,10 @@ impl ModelRegistry {
         })
     }
 
-    /// Every slot, sorted by name (the map is a `BTreeMap`).
-    fn all_slots(&self) -> Vec<Arc<ModelSlot>> {
+    /// Every slot, sorted by name (the map is a `BTreeMap`). Public
+    /// for the telemetry health model, which folds per-slot failure
+    /// latches and lane depths (`crate::obs::telemetry::assess`).
+    pub fn all_slots(&self) -> Vec<Arc<ModelSlot>> {
         self.slots.read().unwrap().values().cloned().collect()
     }
 
@@ -943,6 +1005,7 @@ impl ModelRegistry {
         let slot = self.slot(Some(name))?;
         slot.save_ckpt(path)?;
         self.metrics.incr("checkpoints_saved", 1);
+        *self.last_save.lock().unwrap() = Some(Instant::now());
         Ok(())
     }
 
@@ -977,6 +1040,7 @@ impl ModelRegistry {
             match result {
                 Ok(()) => {
                     self.metrics.incr("checkpoints_saved", 1);
+                    *self.last_save.lock().unwrap() = Some(Instant::now());
                     saved += 1;
                 }
                 Err(e) => {
@@ -1072,6 +1136,14 @@ impl ModelRegistry {
             // process-wide, not per-model: the trace ring is shared by
             // every slot this registry serves
             ModelCmd::FetchTrace => Ok(AdminReply::Ckpt(crate::obs::export())),
+            // likewise process-wide: the Prometheus exposition / health
+            // verdict over everything this registry serves (PR 10)
+            ModelCmd::FetchMetrics => Ok(AdminReply::Ckpt(
+                crate::obs::telemetry::render_metrics_for(self).into_bytes(),
+            )),
+            ModelCmd::FetchHealth => Ok(AdminReply::Ckpt(
+                crate::obs::telemetry::render_health_for(self).into_bytes(),
+            )),
             ModelCmd::PutCkpt { name, bytes } => self
                 .put_ckpt(&name, &bytes)
                 .map(|_| AdminReply::Ok(format!("restored {name} from pushed checkpoint"))),
@@ -1126,6 +1198,17 @@ impl ModelRegistry {
             return Ok(snap);
         }
         let mut out = self.metrics.snapshot(false);
+        // process-identity rows (PR 10; additive to schema=2 —
+        // forward-compat parsers skip unknown rows, asserted in both
+        // twins): uptime, wall-clock start, and the protocol version
+        // this process speaks
+        out.counters.insert("uptime_secs".into(), self.uptime_secs());
+        out.counters
+            .insert("start_epoch_secs".into(), self.start_epoch_secs);
+        out.counters.insert(
+            "proto_version".into(),
+            crate::proto::frame::VERSION as u64,
+        );
         for slot in self.all_slots() {
             let name = &slot.name;
             let snap = slot.metrics().snapshot(full);

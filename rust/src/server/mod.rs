@@ -1236,6 +1236,32 @@ impl FramedClient {
         }
     }
 
+    /// The server process's metrics as Prometheus text exposition —
+    /// the same body its `/metrics` endpoint serves
+    /// (`crate::obs::telemetry`, DESIGN.md §2.9).
+    pub fn fetch_metrics(&mut self) -> Result<String> {
+        match self.call_admin(ModelCmd::FetchMetrics)? {
+            AdminReply::Ckpt(bytes) => String::from_utf8(bytes)
+                .map_err(|_| Error::Proto("metrics exposition is not utf8".into())),
+            other => Err(Error::Proto(format!(
+                "expected metrics bytes, got {other:?}"
+            ))),
+        }
+    }
+
+    /// The server process's current health verdict
+    /// (`state=`/`reason=` lines; parse with
+    /// `crate::obs::telemetry::HealthReport::parse`).
+    pub fn fetch_health(&mut self) -> Result<String> {
+        match self.call_admin(ModelCmd::FetchHealth)? {
+            AdminReply::Ckpt(bytes) => String::from_utf8(bytes)
+                .map_err(|_| Error::Proto("health report is not utf8".into())),
+            other => Err(Error::Proto(format!(
+                "expected health bytes, got {other:?}"
+            ))),
+        }
+    }
+
     /// Typed stats for one model only (plain, unprefixed keys).
     pub fn stats_model(&mut self, model: &str) -> Result<StatsSnapshot> {
         let resp = self.call(Request::op(Op::Stats).with_model(model))?;

@@ -330,6 +330,28 @@ impl ShardedModel {
         self.shards.read().unwrap()[i].metrics()
     }
 
+    /// True when the shards live on remote hosts over the TCP
+    /// transport (the shape with standbys and replication).
+    pub fn is_remote(&self) -> bool {
+        self.remote.is_some()
+    }
+
+    /// How many standby spares remain in the failover pool — `None`
+    /// for an in-process model (failover does not apply). A remote
+    /// model at `Some(0)` cannot survive another host loss; the
+    /// telemetry health model reports it `standby_pool_empty`.
+    pub fn standby_depth(&self) -> Option<usize> {
+        self.remote
+            .as_ref()
+            .map(|r| r.standbys.lock().unwrap().len())
+    }
+
+    /// The committed weight generation (bumps on each replicated
+    /// checkpoint push).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
     /// Indices of shards whose transport is known dead — candidates
     /// for [`ShardedModel::failover`]. Always empty in-process.
     pub fn failed_shards(&self) -> Vec<usize> {

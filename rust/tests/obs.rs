@@ -489,3 +489,95 @@ fn prop_cwkt_roundtrip_rejects_truncation_and_bitflips() {
         );
     }
 }
+
+// --------------------------------------- ring wrap-around (PR 10 gate)
+
+/// The span ring under wrap-around: concurrent writers push enough
+/// records that the ticket counter laps the 65 536-slot ring twice,
+/// while snapshot readers run the whole time. Every record a snapshot
+/// returns must be internally consistent — each field is a pure
+/// function of its `trace_id`, so a torn slot (fields mixed from two
+/// different writes surviving the seqlock check) trips an assertion —
+/// and no `trace_id` may appear twice in one snapshot (each id is
+/// pushed exactly once; a duplicate would mean one write landed in two
+/// slots). After the writers drain, the ring must be exactly full.
+#[test]
+fn span_ring_wraparound_yields_no_torn_or_duplicate_records() {
+    let _guard = tracer_lock();
+    obs::configure(1.0, 0);
+    obs::reset();
+
+    const WRITERS: u64 = 4;
+    // two full laps of the ring across all writers
+    const PER_WRITER: u64 = (obs::DEFAULT_TRACE_CAPACITY as u64 / WRITERS) * 2;
+    let expected_tag = |w: u64, i: u64| -> u32 { ((i as u32) ^ ((w as u32) << 24)) | 1 };
+    let expected_dur = |w: u64, i: u64| -> u64 { (w << 40) | i };
+
+    let check = |records: &[obs::SpanRecord]| {
+        let mut seen = std::collections::HashSet::with_capacity(records.len());
+        for r in records {
+            let w = (r.trace_id >> 48) - 1;
+            let i = r.trace_id & 0xffff_ffff_ffff;
+            assert!(w < WRITERS, "impossible writer id in {r:?}");
+            assert!(i < PER_WRITER, "impossible sequence number in {r:?}");
+            assert_eq!(r.tag, expected_tag(w, i), "torn record {r:?}");
+            assert_eq!(r.dur_us, expected_dur(w, i), "torn record {r:?}");
+            assert_eq!(r.stage, obs::Stage::Rpc, "torn record {r:?}");
+            assert!(seen.insert(r.trace_id), "duplicated record {r:?}");
+        }
+    };
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let epoch = std::time::Instant::now();
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            std::thread::spawn(move || {
+                for i in 0..PER_WRITER {
+                    let ctx = obs::TraceCtx {
+                        id: ((w + 1) << 48) | i,
+                        sampled: true,
+                    };
+                    obs::record(
+                        ctx,
+                        obs::Stage::Rpc,
+                        expected_tag(w, i),
+                        epoch,
+                        Duration::from_micros(expected_dur(w, i)),
+                    );
+                }
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let stop = stop.clone();
+            std::thread::spawn(move || loop {
+                // at least one mid-flight check even if the writers
+                // finish before this thread gets scheduled
+                check(&obs::snapshot());
+                if stop.load(std::sync::atomic::Ordering::Acquire) {
+                    break;
+                }
+            })
+        })
+        .collect();
+    for h in writers {
+        h.join().expect("writer panicked");
+    }
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    for h in readers {
+        h.join().expect("reader panicked");
+    }
+
+    // quiescent: every slot published, nothing torn, nothing doubled
+    let last = obs::snapshot();
+    assert_eq!(
+        last.len(),
+        obs::DEFAULT_TRACE_CAPACITY,
+        "ring must be exactly full after lapping it twice"
+    );
+    check(&last);
+
+    obs::disable();
+    obs::reset();
+}

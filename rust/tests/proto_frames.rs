@@ -59,6 +59,12 @@ const GOLDEN_TRACE_REQUEST_HEX: &str = "43574b32030000002f0000000000000007012801
 08000465646765000100000000043f800000418000004020000041800000";
 const GOLDEN_FETCH_TRACE_HEX: &str = "43574b32030000000b000000000000000c06000b";
 
+// The telemetry plane (v3-only; PR 10): the nullary FETCH_METRICS /
+// FETCH_HEALTH admin verbs — same envelope as FETCH_TRACE, cmd bytes
+// 12 and 13.
+const GOLDEN_FETCH_METRICS_HEX: &str = "43574b32030000000b000000000000000d06000c";
+const GOLDEN_FETCH_HEALTH_HEX: &str = "43574b32030000000b000000000000000e06000d";
+
 fn golden_request() -> Request {
     Request {
         id: 7,
@@ -247,6 +253,19 @@ fn golden_v3_bytes_match_python_twin() {
     let fetch = Request::admin(ModelCmd::FetchTrace).with_id(12);
     let bytes = framed(FrameType::Request, &frame::encode_request(&fetch).unwrap());
     assert_eq!(hex(&bytes), GOLDEN_FETCH_TRACE_HEX);
+    let (_, payload) = frame::read_frame(&mut &bytes[..]).unwrap().unwrap();
+    assert_eq!(frame::decode_request(&payload).unwrap(), fetch);
+
+    // PR 10: the nullary telemetry admin verbs
+    let fetch = Request::admin(ModelCmd::FetchMetrics).with_id(13);
+    let bytes = framed(FrameType::Request, &frame::encode_request(&fetch).unwrap());
+    assert_eq!(hex(&bytes), GOLDEN_FETCH_METRICS_HEX);
+    let (_, payload) = frame::read_frame(&mut &bytes[..]).unwrap().unwrap();
+    assert_eq!(frame::decode_request(&payload).unwrap(), fetch);
+
+    let fetch = Request::admin(ModelCmd::FetchHealth).with_id(14);
+    let bytes = framed(FrameType::Request, &frame::encode_request(&fetch).unwrap());
+    assert_eq!(hex(&bytes), GOLDEN_FETCH_HEALTH_HEX);
     let (_, payload) = frame::read_frame(&mut &bytes[..]).unwrap().unwrap();
     assert_eq!(frame::decode_request(&payload).unwrap(), fetch);
 
@@ -465,9 +484,11 @@ fn prop_admin_roundtrip_lossless() {
             let blob = |rng: &mut Xoshiro256| -> Vec<u8> {
                 (0..rng.gen_range(64)).map(|_| rng.next_u32() as u8).collect()
             };
-            let cmd = match rng.gen_range(11) {
+            let cmd = match rng.gen_range(13) {
                 0 => ModelCmd::List,
                 10 => ModelCmd::FetchTrace,
+                11 => ModelCmd::FetchMetrics,
+                12 => ModelCmd::FetchHealth,
                 1 => ModelCmd::Create {
                     name,
                     n: 1 + rng.gen_range(256),

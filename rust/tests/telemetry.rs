@@ -1,0 +1,499 @@
+//! Telemetry-plane end-to-end gates (DESIGN.md §2.9): the bit-identity
+//! invariant (sampler + HTTP exporter + tracing all on vs all off
+//! leaves every serving reply **byte** identical on all three codecs,
+//! for single, sharded, and remote-shard models), the `/metrics`
+//! endpoint parsing under the pinned Prometheus exposition grammar
+//! with nonzero windowed rates after replayed load, the health model
+//! flipping `/readyz` to Degraded with a typed reason when a remote
+//! shard host dies, the `CMD_FETCH_METRICS` / `CMD_FETCH_HEALTH`
+//! admin surface plus its v2 typed refusal, and the additive STATS
+//! identity rows (`uptime_secs`, `start_epoch_secs`, `proto_version`).
+//!
+//! Every test here touches the process-global tracer (the bit-identity
+//! run arms it), so they serialize on one mutex like `obs.rs` does.
+
+use catwalk::dist::RetryPolicy;
+use catwalk::obs;
+use catwalk::obs::telemetry::{self, HealthState, TelemetryOptions};
+use catwalk::proto::frame::{self, FrameType};
+use catwalk::proto::{ModelCmd, Outcome, Request};
+use catwalk::qos::replay::{boot_shard_host, ShardHost};
+use catwalk::qos::QosConfig;
+use catwalk::registry::{ModelRegistry, ModelSpec, RegistryConfig};
+use catwalk::rng::Xoshiro256;
+use catwalk::runtime::BackendKind;
+use catwalk::server::{ClientConfig, FramedClient, Server};
+use catwalk::SpikeVolley;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+const N: usize = 16;
+
+/// The process-global tracer is shared by every test in this binary.
+static TRACER: Mutex<()> = Mutex::new(());
+
+fn tracer_lock() -> MutexGuard<'static, ()> {
+    TRACER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn native_env() -> bool {
+    matches!(BackendKind::from_env(), Ok(BackendKind::Native))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("catwalk-telemetry-e2e-{tag}-{}", std::process::id()))
+}
+
+fn client_cfg() -> ClientConfig {
+    ClientConfig {
+        read_timeout: Some(Duration::from_secs(5)),
+        write_timeout: Some(Duration::from_secs(5)),
+        ..ClientConfig::default()
+    }
+}
+
+fn retry_cfg() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 3,
+        base: Duration::from_millis(5),
+        max: Duration::from_millis(20),
+        jitter: 0.2,
+        seed: 7,
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// One complete serving environment (the `obs.rs` shape): two remote
+/// shard hosts plus a standby, behind a registry holding a
+/// single-engine model (`default`), an in-process sharded model
+/// (`quad`), and a remote-shard model (`dist`).
+struct Env {
+    server: Arc<Server>,
+    registry: Arc<ModelRegistry>,
+    addr: String,
+    hosts: Vec<ShardHost>,
+    srv: std::thread::JoinHandle<()>,
+}
+
+fn boot_env(scratch: &PathBuf, tag: &str) -> Env {
+    let boot_host = |sub: &str| -> ShardHost {
+        boot_shard_host(
+            std::path::Path::new("/no-such-dir"),
+            &scratch.join(format!("{tag}-{sub}")),
+            QosConfig::default(),
+        )
+        .unwrap()
+    };
+    let host_a = boot_host("host-a");
+    let host_b = boot_host("host-b");
+    let standby = boot_host("standby");
+    let shard_addrs = vec![host_a.addr.clone(), host_b.addr.clone()];
+    let standby_addrs = vec![standby.addr.clone()];
+
+    let spec = ModelSpec {
+        n: N,
+        theta: 6.0,
+        seed: 11,
+    };
+    let registry = Arc::new(
+        ModelRegistry::open(RegistryConfig::default(), "default", spec).unwrap(),
+    );
+    registry.create_sharded("quad", spec, 2).unwrap();
+    registry
+        .create_remote("dist", spec, &shard_addrs, standby_addrs, client_cfg(), retry_cfg())
+        .unwrap();
+
+    let server = Arc::new(Server::with_registry(registry.clone()));
+    let (port_tx, port_rx) = std::sync::mpsc::sync_channel(1);
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |port| {
+                    let _ = port_tx.send(port);
+                })
+                .unwrap();
+        })
+    };
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    Env {
+        server,
+        registry,
+        addr,
+        hosts: vec![host_a, host_b, standby],
+        srv,
+    }
+}
+
+fn shutdown(env: Env) {
+    env.server
+        .stop_handle()
+        .store(true, std::sync::atomic::Ordering::Release);
+    env.srv.join().unwrap();
+    for h in env.hosts {
+        h.shutdown();
+    }
+    drop(env.registry);
+}
+
+fn random_volley(rng: &mut Xoshiro256) -> SpikeVolley {
+    SpikeVolley::dense(
+        (0..N)
+            .map(|_| {
+                if rng.gen_bool(0.3) {
+                    (rng.gen_f64() * 8.0) as f32
+                } else {
+                    16.0
+                }
+            })
+            .collect(),
+    )
+}
+
+/// A text-codec volley with integral spike times, so the line renders
+/// identically on every run: `t_max` (16) = silent.
+fn text_volley(rng: &mut Xoshiro256) -> String {
+    (0..N)
+        .map(|_| {
+            if rng.gen_bool(0.3) {
+                rng.gen_range(8).to_string()
+            } else {
+                "16".to_string()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn frame_roundtrip(w: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &Request) -> Vec<u8> {
+    frame::write_frame(w, FrameType::Request, &frame::encode_request(req).unwrap()).unwrap();
+    w.flush().unwrap();
+    let (ty, payload) = frame::read_frame(r).unwrap().unwrap();
+    assert_eq!(ty, FrameType::Response);
+    payload
+}
+
+/// Open a raw framed connection negotiated to exactly `version`.
+fn raw_framed(addr: &str, version: u16) -> (TcpStream, BufReader<TcpStream>, Vec<u8>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    frame::write_frame(&mut w, FrameType::Hello, &frame::encode_hello(version, version)).unwrap();
+    w.flush().unwrap();
+    let (ty, ack) = frame::read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(ty, FrameType::Ack);
+    assert_eq!(frame::decode_ack(&ack).unwrap().version, version);
+    (w, reader, ack)
+}
+
+/// The identical deterministic request sequence from `obs.rs`: framed
+/// v3 (all three model shapes), text, framed v2, collecting every raw
+/// reply byte string. Deliberately avoids `Op::Stats` — stats now
+/// carry `uptime_secs`, which two runs can never agree on; the
+/// invariant under test is about *serving* replies.
+fn run_sequence(addr: &str) -> Vec<Vec<u8>> {
+    let mut out: Vec<Vec<u8>> = Vec::new();
+    let mut rng = Xoshiro256::new(0x7E1E_E2E);
+
+    let (mut w, mut reader, ack) = raw_framed(addr, frame::VERSION);
+    out.push(ack);
+    for (i, model) in [None, Some("quad"), Some("dist")].iter().enumerate() {
+        let vols: Vec<SpikeVolley> = (0..3).map(|_| random_volley(&mut rng)).collect();
+        let mut req = Request::infer(vols).with_id(10 + i as u64);
+        if let Some(m) = model {
+            req = req.with_model(*m);
+        }
+        out.push(frame_roundtrip(&mut w, &mut reader, &req));
+    }
+    for (i, model) in [None, Some("quad")].iter().enumerate() {
+        let vols: Vec<SpikeVolley> = (0..2).map(|_| random_volley(&mut rng)).collect();
+        let mut req = Request::learn(vols).with_id(20 + i as u64);
+        if let Some(m) = model {
+            req = req.with_model(*m);
+        }
+        out.push(frame_roundtrip(&mut w, &mut reader, &req));
+    }
+    out.push(frame_roundtrip(
+        &mut w,
+        &mut reader,
+        &Request::admin(ModelCmd::List).with_id(30),
+    ));
+    drop((w, reader));
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let mut lines = vec!["PING".to_string()];
+    for model in ["", "@quad ", "@dist "] {
+        lines.push(format!("{model}INFER {}", text_volley(&mut rng)));
+    }
+    lines.push(format!("LEARN {}", text_volley(&mut rng)));
+    lines.push(format!("@quad LEARN {}", text_volley(&mut rng)));
+    for line in lines {
+        w.write_all(format!("{line}\n").as_bytes()).unwrap();
+        w.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "text reply for `{line}`");
+        out.push(reply.into_bytes());
+    }
+    drop((w, reader));
+
+    let (mut w, mut reader, ack) = raw_framed(addr, 2);
+    out.push(ack);
+    let vols: Vec<SpikeVolley> = (0..2).map(|_| random_volley(&mut rng)).collect();
+    out.push(frame_roundtrip(&mut w, &mut reader, &Request::infer(vols).with_id(40)));
+    let vols: Vec<SpikeVolley> = (0..2).map(|_| random_volley(&mut rng)).collect();
+    out.push(frame_roundtrip(&mut w, &mut reader, &Request::learn(vols).with_id(41)));
+
+    out
+}
+
+/// One HTTP/1.0 GET against the exporter: (status line, body).
+fn http_get(addr: &std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(stream, "GET {path} HTTP/1.0\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .unwrap_or_else(|| panic!("no header/body split in `{text}`"));
+    (
+        head.lines().next().unwrap().to_string(),
+        body.to_string(),
+    )
+}
+
+// ----------------------------------------------- bit-identity (tentpole)
+
+/// The tentpole invariant, carried over from PR 9 and widened: the
+/// whole telemetry plane — sampler thread, HTTP exporter, *and*
+/// rate-1.0 tracing — fully on vs fully off answers the same request
+/// sequence with byte-identical replies on framed v3, text, and framed
+/// v2, across a single-engine, an in-process sharded, and a
+/// remote-shard model.
+#[test]
+fn telemetry_on_vs_off_replies_bit_identical_on_all_codecs() {
+    if !native_env() {
+        return;
+    }
+    let _g = tracer_lock();
+    let scratch = temp_dir("bitident");
+    let _ = std::fs::remove_dir_all(&scratch);
+
+    // everything on: tracing at rate 1.0 + sampler at a hot 10ms
+    // cadence + live HTTP exporter, all while the sequence runs
+    obs::reset();
+    obs::configure(1.0, 0);
+    let env = boot_env(&scratch, "on");
+    let tele = telemetry::start(
+        env.registry.clone(),
+        &TelemetryOptions {
+            metrics_addr: Some("127.0.0.1:0".into()),
+            interval: Duration::from_millis(10),
+            capacity: 128,
+        },
+    )
+    .unwrap();
+    let on = run_sequence(&env.addr);
+    // prove the plane was really live during the run
+    assert!(tele.state().samples_taken() > 0, "sampler never ticked");
+    let (status, body) = http_get(&tele.http_addr().unwrap(), "/metrics");
+    assert!(status.contains("200"), "{status}");
+    telemetry::parse_exposition(&body).unwrap();
+    tele.shutdown();
+    shutdown(env);
+
+    // everything off: no tracer, no sampler, no listener, no state
+    obs::disable();
+    obs::reset();
+    let env = boot_env(&scratch, "off");
+    assert!(env.registry.telemetry().is_none());
+    let off = run_sequence(&env.addr);
+    shutdown(env);
+
+    assert_eq!(on.len(), off.len(), "sequence shape drifted");
+    for (i, (a, b)) in on.iter().zip(&off).enumerate() {
+        assert_eq!(
+            hex(a),
+            hex(b),
+            "reply {i} differs between the telemetry-on and telemetry-off runs"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+// ------------------------------- scrape surfaces + health flip (e2e)
+
+/// The full scrape story against one live environment: `/metrics`
+/// parses under the pinned exposition grammar and reports nonzero
+/// windowed rates after replayed load; `/healthz` and `/readyz`
+/// answer; the admin verbs return the same grammars over the wire;
+/// STATS carries the additive identity rows; and killing a remote
+/// shard host flips `/readyz` to 503 Degraded with the typed
+/// `shard_transport_failed` reason — visible to the sampler within one
+/// sampling interval.
+#[test]
+fn metrics_scrape_rates_and_shard_kill_health_flip() {
+    if !native_env() {
+        return;
+    }
+    let _g = tracer_lock();
+    obs::disable();
+    obs::reset();
+    let scratch = temp_dir("scrape");
+    let _ = std::fs::remove_dir_all(&scratch);
+
+    let env = boot_env(&scratch, "scrape");
+    let interval = Duration::from_millis(50);
+    let tele = telemetry::start(
+        env.registry.clone(),
+        &TelemetryOptions {
+            metrics_addr: Some("127.0.0.1:0".into()),
+            interval,
+            capacity: 256,
+        },
+    )
+    .unwrap();
+    let http = tele.http_addr().unwrap();
+
+    // replayed load: bursts over every model shape, spread across
+    // several sampling intervals so the series holds real deltas
+    let mut client = FramedClient::connect(&env.addr).unwrap();
+    let mut rng = Xoshiro256::new(0x70_AD);
+    for _burst in 0..3 {
+        for model in [None, Some("quad"), Some("dist")] {
+            let vols: Vec<SpikeVolley> = (0..2).map(|_| random_volley(&mut rng)).collect();
+            let mut req = Request::infer(vols);
+            if let Some(m) = model {
+                req = req.with_model(m);
+            }
+            let resp = client.call(req).unwrap();
+            assert!(matches!(resp.outcome, Outcome::Results(_)), "{:?}", resp.outcome);
+        }
+        let resp = client
+            .call(Request::learn(vec![random_volley(&mut rng)]))
+            .unwrap();
+        assert!(matches!(resp.outcome, Outcome::Results(_)));
+        std::thread::sleep(interval);
+    }
+    // let the sampler see the post-load counters
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while tele.state().samples_taken() < 4 {
+        assert!(Instant::now() < deadline, "sampler stalled");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // --- /metrics: pinned grammar, counters, summaries, nonzero rates
+    let (status, body) = http_get(&http, "/metrics");
+    assert!(status.contains("200 OK"), "{status}");
+    let samples = telemetry::parse_exposition(&body).unwrap();
+    let find = |name: &str| {
+        samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing {name} in:\n{body}"))
+    };
+    assert!(find("catwalk_requests_total").value > 0.0);
+    assert!(find("catwalk_rate_requests_per_s").value > 0.0, "windowed rate must be nonzero");
+    assert!(find("catwalk_rate_volleys_per_s").value > 0.0);
+    assert_eq!(find("catwalk_health").value, 0.0, "fresh env must be ready");
+    assert!(find("catwalk_samples_total").value >= 4.0);
+    assert_eq!(find("catwalk_sample_interval_ms").value, 50.0);
+    // per-model and per-shard scopes carry labels
+    assert!(samples.iter().any(|s| s.name == "catwalk_model_requests_total"
+        && s.labels.contains(&("model".to_string(), "dist".to_string()))));
+    assert!(
+        samples.iter().any(|s| s.name == "catwalk_shard_rpc_us"
+            && s.labels.contains(&("model".to_string(), "dist".to_string()))
+            && s.labels.iter().any(|(k, _)| k == "shard")),
+        "remote shard rpc summaries must be exported"
+    );
+
+    // --- health endpoints
+    let (status, body) = http_get(&http, "/healthz");
+    assert!(status.contains("200 OK"), "{status}");
+    assert_eq!(body, "ok\n");
+    let (status, body) = http_get(&http, "/readyz");
+    assert!(status.contains("200 OK"), "{status}");
+    let report = telemetry::HealthReport::parse(&body).unwrap();
+    assert_eq!(report.state, HealthState::Ready);
+    assert!(report.reasons.is_empty(), "{report:?}");
+    let (status, _) = http_get(&http, "/nope");
+    assert!(status.contains("404"), "{status}");
+
+    // --- the same grammars over the admin verbs
+    let expo = client.fetch_metrics().unwrap();
+    let admin_samples = telemetry::parse_exposition(&expo).unwrap();
+    assert!(admin_samples.iter().any(|s| s.name == "catwalk_requests_total"));
+    let report = telemetry::HealthReport::parse(&client.fetch_health().unwrap()).unwrap();
+    assert_eq!(report.state, HealthState::Ready);
+
+    // --- additive STATS identity rows (satellite): present here, and
+    // skipped losslessly by forward-compat parsers (stats.rs property
+    // + the python twin splice test)
+    let stats = client.stats().unwrap();
+    assert!(stats.counters.contains_key("uptime_secs"));
+    assert!(stats.counter("start_epoch_secs") > 1_600_000_000, "epoch row");
+    assert_eq!(stats.counter("proto_version"), frame::VERSION as u64);
+
+    // --- kill a remote shard host; the transport latch trips on the
+    // next traffic, and /readyz flips to Degraded with a typed reason
+    env.hosts[0].kill();
+    let slot = env.registry.slot(Some("dist")).unwrap();
+    let sharded = slot.sharded().unwrap();
+    let mut probes = 0;
+    while sharded.failed_shards().is_empty() && probes < 200 {
+        probes += 1;
+        // Ok before the worker notices, Err after — both fine
+        for _ in sharded.infer(vec![random_volley(&mut rng)], None) {}
+    }
+    assert!(!sharded.failed_shards().is_empty(), "latch never tripped");
+
+    let (status, body) = http_get(&http, "/readyz");
+    assert!(status.contains("503"), "dead shard must unready: {status}");
+    let report = telemetry::HealthReport::parse(&body).unwrap();
+    assert_eq!(report.state, HealthState::Degraded);
+    assert!(
+        report.reasons.iter().any(|r| r.code == "shard_transport_failed"),
+        "typed reason missing: {report:?}"
+    );
+    // the sampler's stored verdict follows within one interval
+    std::thread::sleep(interval + Duration::from_millis(50));
+    assert_eq!(tele.state().last_health().state, HealthState::Degraded);
+    // and the admin verb reports the same degradation
+    let report = telemetry::HealthReport::parse(&client.fetch_health().unwrap()).unwrap();
+    assert_eq!(report.state, HealthState::Degraded);
+
+    // --- v2 connections are typed-refused both telemetry verbs
+    let (mut w, mut reader, _ack) = raw_framed(&env.addr, 2);
+    for (id, cmd) in [(300, ModelCmd::FetchMetrics), (301, ModelCmd::FetchHealth)] {
+        let payload = frame_roundtrip(
+            &mut w,
+            &mut reader,
+            &Request::admin(cmd).with_id(id),
+        );
+        let resp = frame::decode_response(&payload).unwrap();
+        assert!(
+            matches!(resp.outcome, Outcome::Error(ref e) if e.contains("v3")),
+            "v2 refusal for id {id}, got {:?}",
+            resp.outcome
+        );
+    }
+
+    let _ = client.quit();
+    tele.shutdown();
+    shutdown(env);
+    let _ = std::fs::remove_dir_all(&scratch);
+}
